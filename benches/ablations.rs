@@ -1,0 +1,20 @@
+//! Bench target: design-choice ablations called out in DESIGN.md —
+//! §V-B block length and native scan thread count.
+mod common;
+
+fn main() {
+    let (config, quick) = common::bench_config();
+    std::fs::create_dir_all(&config.out_dir).unwrap();
+    for s in hmm_scan::experiments::ablation_block_len(&config, quick).unwrap() {
+        println!("{}", s.name);
+        for &(b, secs) in &s.points {
+            println!("  block={b:<8} {secs:.6}s");
+        }
+    }
+    for s in hmm_scan::experiments::ablation_threads(&config, quick).unwrap() {
+        println!("{}", s.name);
+        for &(th, secs) in &s.points {
+            println!("  threads={th:<6} {secs:.6}s");
+        }
+    }
+}

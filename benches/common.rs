@@ -1,0 +1,11 @@
+//! Shared setup for the figure benches. `HMM_SCAN_BENCH_FULL=1` runs the
+//! paper's full T grid (10²…10⁵); the default is a reduced grid so
+//! `cargo bench` completes in minutes.
+use hmm_scan::config::RunConfig;
+
+#[allow(dead_code)]
+pub fn bench_config() -> (RunConfig, bool) {
+    let full = std::env::var("HMM_SCAN_BENCH_FULL").as_deref() == Ok("1");
+    let config = RunConfig::default();
+    (config, !full)
+}

@@ -1,0 +1,10 @@
+//! Bench target: §VI numerical-equivalence report (the paper's ≤1e-16
+//! MAE claim, at f64 here).
+mod common;
+
+fn main() {
+    let (config, quick) = common::bench_config();
+    std::fs::create_dir_all(&config.out_dir).unwrap();
+    let report = hmm_scan::experiments::equivalence_report(&config, quick).unwrap();
+    println!("{report}");
+}

@@ -1,0 +1,9 @@
+//! Bench target: regenerate paper Fig. 2 (GE example trajectory).
+mod common;
+
+fn main() {
+    let (config, _) = common::bench_config();
+    std::fs::create_dir_all(&config.out_dir).unwrap();
+    let plot = hmm_scan::experiments::fig2(&config).unwrap();
+    println!("{plot}");
+}

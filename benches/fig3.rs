@@ -1,0 +1,16 @@
+//! Bench target: regenerate paper Fig. 3 (CPU runtimes of all seven
+//! methods vs sequence length, measured on this machine).
+mod common;
+
+fn main() {
+    let (config, quick) = common::bench_config();
+    std::fs::create_dir_all(&config.out_dir).unwrap();
+    let series = hmm_scan::experiments::fig3(&config, quick).unwrap();
+    for s in &series {
+        println!("{}", s.name);
+        for &(t, secs) in &s.points {
+            println!("  T={t:<9} {secs:.6}s");
+        }
+    }
+    println!("(csv + ascii plot in {})", config.out_dir.display());
+}

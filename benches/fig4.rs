@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Fig. 4 (GPU runtimes — work-span
+//! simulated; see DESIGN.md §4 substitution note).
+mod common;
+
+fn main() {
+    let (config, _) = common::bench_config();
+    std::fs::create_dir_all(&config.out_dir).unwrap();
+    let series = hmm_scan::experiments::fig4(&config).unwrap();
+    for s in &series {
+        println!("{}", s.name);
+        for &(t, secs) in &s.points {
+            println!("  T={t:<9} {secs:.6}s (simulated)");
+        }
+    }
+}

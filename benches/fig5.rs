@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Fig. 5 (parallel methods on the
+//! simulated GPU, linear scale — shows the core-saturation knee).
+mod common;
+
+fn main() {
+    let (config, _) = common::bench_config();
+    std::fs::create_dir_all(&config.out_dir).unwrap();
+    let series = hmm_scan::experiments::fig5(&config).unwrap();
+    for s in &series {
+        println!("{}", s.name);
+        for &(t, secs) in &s.points {
+            println!("  T={t:<9} {secs:.6}s (simulated)");
+        }
+    }
+}

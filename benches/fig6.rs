@@ -1,0 +1,15 @@
+//! Bench target: regenerate paper Fig. 6 (seq/par speed-up ratios on the
+//! simulated GPU).
+mod common;
+
+fn main() {
+    let (config, _) = common::bench_config();
+    std::fs::create_dir_all(&config.out_dir).unwrap();
+    let series = hmm_scan::experiments::fig6(&config).unwrap();
+    for s in &series {
+        println!("{}", s.name);
+        for &(t, ratio) in &s.points {
+            println!("  T={t:<9} {ratio:.0}x");
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Bench target: the L3 hot-path primitives (element init, ⊗/∨ combines,
+//! scan sweeps). These numbers calibrate the GPU simulator's cost model
+//! and are the before/after record for EXPERIMENTS.md §Perf.
+use hmm_scan::benchx::{bench, format_table, BenchConfig};
+use hmm_scan::elements::{
+    mp_element_chain, sp_element_chain, MpOp, SpOp,
+};
+use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
+use hmm_scan::rng::Xoshiro256StarStar;
+use hmm_scan::scan::{blelloch_scan, AssocOp, ScanOptions};
+
+fn main() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+    let tr = sample(&hmm, 16384, &mut rng);
+    let cfg = BenchConfig::default();
+    let mut rows = Vec::new();
+
+    rows.push(bench("sp_element_chain/T=16384", cfg, || {
+        sp_element_chain(&hmm, &tr.observations)
+    }));
+    rows.push(bench("mp_element_chain/T=16384", cfg, || {
+        mp_element_chain(&hmm, &tr.observations)
+    }));
+
+    let sp_elems = sp_element_chain(&hmm, &tr.observations);
+    let mp_elems = mp_element_chain(&hmm, &tr.observations);
+    let spop = SpOp { d: 4 };
+    let mpop = MpOp { d: 4 };
+    rows.push(bench("sp_combine/D=4", cfg, || {
+        spop.combine(&sp_elems[1], &sp_elems[2])
+    }));
+    rows.push(bench("mp_combine/D=4", cfg, || {
+        mpop.combine(&mp_elems[1], &mp_elems[2])
+    }));
+
+    for threads in [1usize, hmm_scan::exec::default_parallelism()] {
+        let opts = ScanOptions { threads, ..ScanOptions::default() };
+        rows.push(bench(
+            &format!("blelloch_sp/T=16384/threads={threads}"),
+            BenchConfig::heavy(),
+            || {
+                let mut v = sp_elems.clone();
+                blelloch_scan(&spop, &mut v, opts);
+                v.len()
+            },
+        ));
+    }
+    println!("{}", format_table(&rows));
+}

@@ -1,0 +1,10 @@
+//! Bench target: the Table I analogue — this system's measured CPU and
+//! simulated GPU speedups per method family.
+mod common;
+
+fn main() {
+    let (config, quick) = common::bench_config();
+    std::fs::create_dir_all(&config.out_dir).unwrap();
+    let table = hmm_scan::experiments::table1(&config, quick).unwrap();
+    println!("{table}");
+}

@@ -1,0 +1,47 @@
+//! §Perf decomposition probe: stage-by-stage timing of sp_par (element
+//! construction, clones, forward/backward scans) used to find the next
+//! bottleneck during the optimization pass (EXPERIMENTS.md §Perf).
+//!
+//!     cargo run --release --example perf_probe2
+use hmm_scan::elements::*;
+use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
+use hmm_scan::rng::Xoshiro256StarStar;
+use hmm_scan::scan::*;
+use std::time::Instant;
+
+fn main() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+    let tr = sample(&hmm, 100_000, &mut rng);
+    let ys = &tr.observations;
+    let opts = ScanOptions::default();
+    let d = 4;
+    let op = SpOp { d };
+
+    let t0 = Instant::now();
+    let elems = sp_element_chain(&hmm, ys);
+    println!("element chain: {:?}", t0.elapsed());
+
+    let t0 = Instant::now();
+    let mut fwd = elems.clone();
+    println!("clone: {:?}", t0.elapsed());
+
+    let t0 = Instant::now();
+    run_scan(&op, &mut fwd, opts);
+    println!("fwd scan (chunked, {} threads): {:?}", opts.threads, t0.elapsed());
+
+    let t0 = Instant::now();
+    let mut bwd = elems[1..].to_vec();
+    bwd.push(sp_terminal(d));
+    println!("bwd build: {:?}", t0.elapsed());
+
+    let t0 = Instant::now();
+    run_scan_rev(&op, &mut bwd, opts);
+    println!("bwd scan: {:?}", t0.elapsed());
+
+    let t0 = Instant::now();
+    let mut fwd2 = elems.clone();
+    run_scan(&op, &mut fwd2, ScanOptions { threads: 1, ..opts });
+    println!("fwd scan 1 thread: {:?}", t0.elapsed());
+    std::hint::black_box((&fwd, &bwd));
+}

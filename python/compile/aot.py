@@ -1,0 +1,191 @@
+"""AOT compiler: lower every L2 entry to HLO text + a JSON manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime loads the
+results via ``xla::HloModuleProto::from_text_file`` and never touches
+Python again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+pinned xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Artifacts are emitted for a grid of static shapes:
+
+* core entries (sp/mp/bs × par/seq + viterbi) at each (T, D, M),
+* block-wise entries (paper §V-B) at each (block_len, D, M) — these are
+  what the coordinator's temporal sharder uses to serve T beyond the
+  largest compiled core artifact.
+
+``manifest.json`` describes every artifact (entry, shapes, dtypes, i/o
+signature) and is the single source of truth for the Rust artifact
+registry (rust/src/runtime/manifest.rs).
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def core_signature(t, d, m, entry):
+    """Input/output signature of a core (whole-sequence) entry."""
+    inputs = [
+        {"name": "pi", "shape": [d, d], "dtype": F32},
+        {"name": "obs", "shape": [d, m], "dtype": F32},
+        {"name": "prior", "shape": [d], "dtype": F32},
+        {"name": "ys", "shape": [t], "dtype": I32},
+        {"name": "valid", "shape": [t], "dtype": F32},
+    ]
+    if entry in ("sp_par", "sp_seq", "bs_par", "bs_seq"):
+        outputs = [
+            {"name": "gamma", "shape": [t, d], "dtype": F32},
+            {"name": "loglik", "shape": [], "dtype": F32},
+        ]
+    else:  # mp_par, mp_seq, viterbi
+        outputs = [
+            {"name": "path", "shape": [t], "dtype": I32},
+            {"name": "logp", "shape": [], "dtype": F32},
+        ]
+    return inputs, outputs
+
+
+def block_signature(l, d, m, entry):
+    """Input/output signature of a block-wise (§V-B) entry."""
+    inputs = [
+        {"name": "pi", "shape": [d, d], "dtype": F32},
+        {"name": "obs", "shape": [d, m], "dtype": F32},
+        {"name": "prior", "shape": [d], "dtype": F32},
+        {"name": "ys", "shape": [l], "dtype": I32},
+        {"name": "valid", "shape": [l], "dtype": F32},
+    ]
+    if "finalize" in entry:
+        inputs += [
+            {"name": "fin", "shape": [d, d], "dtype": F32},
+            {"name": "bin", "shape": [d, d], "dtype": F32},
+        ]
+        if entry.startswith("sp_"):
+            outputs = [{"name": "gamma", "shape": [l, d], "dtype": F32}]
+        else:
+            outputs = [{"name": "path", "shape": [l], "dtype": I32}]
+    else:  # fold
+        if entry.startswith("sp_"):
+            outputs = [
+                {"name": "mat", "shape": [d, d], "dtype": F32},
+                {"name": "log", "shape": [], "dtype": F32},
+            ]
+        else:
+            outputs = [{"name": "mat", "shape": [d, d], "dtype": F32}]
+    return inputs, outputs
+
+
+def spec_of(io):
+    dt = {F32: jnp.float32, I32: jnp.int32}[io["dtype"]]
+    return jax.ShapeDtypeStruct(tuple(io["shape"]), dt)
+
+
+def lower_entry(fn, inputs):
+    # keep_unused: some entries ignore an input (e.g. `prior` in the
+    # *_mid block entries); the rust runtime feeds every manifest input,
+    # so the parameter must survive lowering.
+    return jax.jit(fn, keep_unused=True).lower(*[spec_of(i) for i in inputs])
+
+
+def emit(out_dir, name, entry, fn, inputs, outputs, meta):
+    t0 = time.time()
+    text = to_hlo_text(lower_entry(fn, inputs))
+    path = out_dir / f"{name}.hlo.txt"
+    path.write_text(text)
+    rec = {
+        "name": name,
+        "entry": entry,
+        "path": path.name,
+        "inputs": inputs,
+        "outputs": outputs,
+        **meta,
+    }
+    print(f"  {name}: {len(text)/1e3:.0f} kB in {time.time()-t0:.1f}s")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--t-grid", default="128,1024,8192",
+        help="comma-separated sequence lengths for core artifacts",
+    )
+    ap.add_argument(
+        "--dims", default="4x2,8x4",
+        help="comma-separated DxM pairs (states x observation symbols)",
+    )
+    ap.add_argument(
+        "--block-len", type=int, default=1024,
+        help="block length for the §V-B sharding artifacts",
+    )
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="small grid for CI: T=64, D=4, M=2, block 32",
+    )
+    args = ap.parse_args()
+
+    if args.quick:
+        t_grid, dims, block_len = [64], [(4, 2)], 32
+    else:
+        t_grid = [int(t) for t in args.t_grid.split(",")]
+        dims = [tuple(int(v) for v in p.split("x")) for p in args.dims.split(",")]
+        block_len = args.block_len
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    records = []
+
+    for d, m in dims:
+        for t in t_grid:
+            for entry, fn in model.CORE_ENTRIES.items():
+                name = f"{entry}_T{t}_D{d}_M{m}"
+                inputs, outputs = core_signature(t, d, m, entry)
+                records.append(
+                    emit(out_dir, name, entry, fn, inputs, outputs,
+                         {"t": t, "d": d, "m": m, "kind": "core"})
+                )
+        for entry, fn in {**model.BLOCK_FOLD_ENTRIES,
+                          **model.BLOCK_FINALIZE_ENTRIES}.items():
+            name = f"{entry}_L{block_len}_D{d}_M{m}"
+            inputs, outputs = block_signature(block_len, d, m, entry)
+            records.append(
+                emit(out_dir, name, entry, fn, inputs, outputs,
+                     {"t": block_len, "d": d, "m": m, "kind": "block"})
+            )
+
+    manifest = {
+        "version": 1,
+        "generator": "compile.aot",
+        "interchange": "hlo-text",
+        "artifacts": records,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {len(records)} artifacts + manifest.json to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""L1 — Pallas kernels for the paper's associative scan combines.
+
+The hot spot of the parallel sum-product / max-product algorithms is the
+binary associative combine applied to batches of (D, D) potential matrices
+at every level of the parallel scan (paper Eq. 16 and Eq. 42), plus the
+embarrassingly-parallel element initialization (Definition 3 / Eq. 36).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+
+* ``sp_combine`` is a batched D×D matmul with per-matrix rescaling — on a
+  real TPU the contraction maps onto the MXU and the batch dimension is
+  tiled HBM→VMEM via the BlockSpec below (PAIR_TILE pairs per grid step;
+  VMEM footprint = 3 tiles * D*D * 4B + 3 * PAIR_TILE * 4B).
+* ``mp_combine`` is a tropical (max-plus) matmul — no MXU contraction
+  exists for (max, +), so it targets the VPU with whole (tile, D, D)
+  blocks resident in VMEM.
+* ``element_init`` is bandwidth-bound: a broadcasted outer product of the
+  transition matrix with per-step emission columns, tiled along T.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers the kernel to plain
+HLO so the artifact runs anywhere. Real-TPU performance is *estimated*
+from the BlockSpec footprints in EXPERIMENTS.md §Perf.
+
+Set HMM_SCAN_NO_PALLAS=1 to bypass Pallas and use the jnp oracles from
+``ref.py`` (used by tests to localize failures).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Number of (D, D) matrix pairs combined per grid step. 64 pairs of f32
+# 8×8 matrices = 3 * 64*64*4 B = 48 KiB of VMEM for in/out tiles — well
+# under the ~16 MiB/core budget; chosen so the grid loop dominates over
+# per-step overhead while keeping the last partial tile small.
+PAIR_TILE = 64
+
+# Element-init tile along the time axis.
+INIT_TILE = 256
+
+USE_PALLAS = os.environ.get("HMM_SCAN_NO_PALLAS", "0") != "1"
+
+
+def _grid_1d(n, tile):
+    """(tile, grid) covering n items; pallas pads the last partial block."""
+    t = min(n, tile)
+    return t, (n + t - 1) // t
+
+
+# ---------------------------------------------------------------------------
+# Sum-product combine ⊗ (Eq. 16) on rescaled elements
+# ---------------------------------------------------------------------------
+
+
+def _sp_combine_kernel(am_ref, al_ref, bm_ref, bl_ref, cm_ref, cl_ref):
+    am = am_ref[...]
+    bm = bm_ref[...]
+    c = jnp.einsum(
+        "bij,bjk->bik", am, bm, preferred_element_type=jnp.float32
+    )
+    m = jnp.maximum(jnp.max(c, axis=(1, 2), keepdims=True), ref.TINY)
+    cm_ref[...] = c / m
+    cl_ref[...] = al_ref[...] + bl_ref[...] + jnp.log(m[:, 0, 0])
+
+
+def sp_combine(a, b):
+    """Combine two batches of sum-product elements: a ⊗ b.
+
+    a, b: tuples (mats (B,D,D) f32, logs (B,) f32). Returns the same
+    structure. B may be 0 (the parallel scan's odd/even split produces
+    empty slices at the deepest levels) — returned unchanged.
+    """
+    am, al = a
+    bm, bl = b
+    batch = am.shape[0]
+    if batch == 0 or not USE_PALLAS:
+        return ref.sp_combine_ref(am, al, bm, bl)
+    d = am.shape[1]
+    tile, grid = _grid_1d(batch, PAIR_TILE)
+    mat_spec = pl.BlockSpec((tile, d, d), lambda i: (i, 0, 0))
+    log_spec = pl.BlockSpec((tile,), lambda i: (i,))
+    cm, cl = pl.pallas_call(
+        _sp_combine_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((batch, d, d), am.dtype),
+            jax.ShapeDtypeStruct((batch,), al.dtype),
+        ),
+        grid=(grid,),
+        in_specs=[mat_spec, log_spec, mat_spec, log_spec],
+        out_specs=(mat_spec, log_spec),
+        interpret=True,
+    )(am, al, bm, bl)
+    return cm, cl
+
+
+# ---------------------------------------------------------------------------
+# Max-product combine ∨ (Eq. 42) in log domain (max-plus matmul)
+# ---------------------------------------------------------------------------
+
+
+def _mp_combine_kernel(a_ref, b_ref, c_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    # (B, D, D, 1) + (B, 1, D, D) → max over the contracted axis j.
+    c_ref[...] = jnp.max(a[:, :, :, None] + b[:, None, :, :], axis=2)
+
+
+def mp_combine(a, b):
+    """Tropical combine of two batches of log-domain elements: a ∨ b."""
+    batch = a.shape[0]
+    if batch == 0 or not USE_PALLAS:
+        return ref.mp_combine_ref(a, b)
+    d = a.shape[1]
+    tile, grid = _grid_1d(batch, PAIR_TILE)
+    spec = pl.BlockSpec((tile, d, d), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        _mp_combine_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, d, d), a.dtype),
+        grid=(grid,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Element initialization (Definition 3 / Eq. 36)
+# ---------------------------------------------------------------------------
+
+
+def _sp_element_init_kernel(pi_ref, em_ref, valid_ref, eye_ref, mat_ref, log_ref):
+    pi = pi_ref[...]          # (1, D, D) — same transition matrix every step
+    em = em_ref[...]          # (tile, D)
+    valid = valid_ref[...]    # (tile,)
+    eye = eye_ref[...]        # (1, D, D)
+    psi = pi * em[:, None, :]
+    v = valid[:, None, None]
+    psi = v * psi + (1.0 - v) * eye
+    m = jnp.maximum(jnp.max(psi, axis=(1, 2), keepdims=True), ref.TINY)
+    mat_ref[...] = psi / m
+    log_ref[...] = jnp.log(m[:, 0, 0])
+
+
+def sp_element_init(pi, em, valid):
+    """Build interior sum-product elements ψ_{t-1,t} = Π ∘ e_t, rescaled.
+
+    pi (D,D), em (T,D), valid (T,) → (mats (T,D,D), logs (T,)).
+    """
+    t_len, d = em.shape
+    if not USE_PALLAS:
+        return ref.sp_element_init_ref(pi, em, valid)
+    tile, grid = _grid_1d(t_len, INIT_TILE)
+    eye = jnp.eye(d, dtype=pi.dtype)[None]
+    mats, logs = pl.pallas_call(
+        _sp_element_init_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t_len, d, d), pi.dtype),
+            jax.ShapeDtypeStruct((t_len,), pi.dtype),
+        ),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, d, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1, d, d), lambda i: (0, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tile, d, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(pi[None], em, valid, eye)
+    return mats, logs
+
+
+def _mp_element_init_kernel(lpi_ref, lem_ref, valid_ref, leye_ref, out_ref):
+    lpi = lpi_ref[...]
+    lem = lem_ref[...]
+    valid = valid_ref[...]
+    leye = leye_ref[...]
+    psi = lpi + lem[:, None, :]
+    out_ref[...] = jnp.where(valid[:, None, None] > 0.5, psi, leye)
+
+
+def mp_element_init(log_pi, log_em, valid):
+    """Build interior max-product (log-domain) elements, masked → identity."""
+    t_len, d = log_em.shape
+    if not USE_PALLAS:
+        return ref.mp_element_init_ref(log_pi, log_em, valid)
+    tile, grid = _grid_1d(t_len, INIT_TILE)
+    logeye = jnp.where(jnp.eye(d, dtype=bool), 0.0, ref.NEG_INF).astype(
+        log_pi.dtype
+    )[None]
+    return pl.pallas_call(
+        _mp_element_init_kernel,
+        out_shape=jax.ShapeDtypeStruct((t_len, d, d), log_pi.dtype),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, d, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1, d, d), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, d, d), lambda i: (i, 0, 0)),
+        interpret=True,
+    )(log_pi[None], log_em, valid, logeye)

@@ -1,0 +1,90 @@
+"""Pure-jnp reference oracles for the Pallas kernels in assoc_ops.py.
+
+Every kernel in the L1 layer has an exact jnp counterpart here. The pytest
+suite asserts allclose between the two over shape/dtype sweeps (hypothesis),
+and the L2 model can be switched to the reference path with
+HMM_SCAN_NO_PALLAS=1 for debugging.
+
+Element conventions (see DESIGN.md §2):
+
+* Sum-product element: pair ``(mats, logs)`` with ``mats`` of shape
+  (B, D, D), nonnegative, max-normalized to 1, and ``logs`` of shape (B,)
+  carrying the log scale, so the represented potential matrix is
+  ``exp(logs[b]) * mats[b]``.
+* Max-product element: (B, D, D) log-domain matrix (max-plus semiring).
+"""
+
+import jax.numpy as jnp
+
+# Floor used when renormalizing sum-product elements: guards against an
+# all-zero product (fully inconsistent evidence) producing -inf scales.
+TINY = 1e-30
+
+# Log-domain "minus infinity" that stays well clear of f32 overflow when a
+# few of them are added together.
+NEG_INF = -1e30
+
+
+def sp_combine_ref(am, al, bm, bl):
+    """Sum-product combine (paper Eq. 16) on rescaled elements.
+
+    (M1, s1) ⊗ (M2, s2) = (M1 M2 / c, s1 + s2 + log c),  c = max(M1 M2).
+    """
+    c = jnp.einsum("bij,bjk->bik", am, bm)
+    m = jnp.maximum(jnp.max(c, axis=(1, 2), keepdims=True), TINY)
+    return c / m, al + bl + jnp.log(m[:, 0, 0])
+
+
+def mp_combine_ref(a, b):
+    """Max-product combine (paper Eq. 42) in log domain (max-plus matmul).
+
+    c[b, i, k] = max_j a[b, i, j] + b[b, j, k]
+    """
+    return jnp.max(a[:, :, :, None] + b[:, None, :, :], axis=2)
+
+
+def sp_element_init_ref(pi, em, valid):
+    """Sum-product elements a_{t-1:t} from transition matrix and emissions.
+
+    pi:    (D, D) transition matrix  Π[i, j] = p(x_t = j | x_{t-1} = i)
+    em:    (T, D) per-step emission column e_t[j] = p(y_t | x_t = j)
+    valid: (T,) float mask; masked (0.0) steps produce the identity element
+           so artifacts of a fixed T can serve shorter sequences (padding).
+
+    Returns (mats (T,D,D), logs (T,)) max-normalized. NOTE: the t = 0
+    element must afterwards be replaced with the prior-broadcast element
+    (see ``first_element_ref``); this function builds the uniform interior
+    elements ψ_{t-1,t} = Π ∘ e_t only.
+    """
+    d = pi.shape[0]
+    psi = pi[None, :, :] * em[:, None, :]
+    eye = jnp.eye(d, dtype=pi.dtype)[None]
+    psi = valid[:, None, None] * psi + (1.0 - valid[:, None, None]) * eye
+    m = jnp.maximum(jnp.max(psi, axis=(1, 2), keepdims=True), TINY)
+    return psi / m, jnp.log(m[:, 0, 0])
+
+
+def mp_element_init_ref(log_pi, log_em, valid):
+    """Max-product (log-domain) elements; masked steps → max-plus identity."""
+    d = log_pi.shape[0]
+    psi = log_pi[None, :, :] + log_em[:, None, :]
+    logeye = jnp.where(jnp.eye(d, dtype=bool), 0.0, NEG_INF).astype(psi.dtype)[None]
+    return jnp.where(valid[:, None, None] > 0.5, psi, logeye)
+
+
+def first_element_ref(prior, e0):
+    """The a_{0:1} element: rows broadcast ψ_1(x_1) = prior(x_1) p(y_1|x_1).
+
+    Returns ((D,D) matrix max-normalized, log scale scalar).
+    """
+    row = prior * e0
+    m = jnp.maximum(jnp.max(row), TINY)
+    d = prior.shape[0]
+    return jnp.broadcast_to(row / m, (d, d)), jnp.log(m)
+
+
+def mp_first_element_ref(log_prior, log_e0):
+    """Log-domain a_{0:1}: rows broadcast log prior + log emission."""
+    row = log_prior + log_e0
+    d = row.shape[0]
+    return jnp.broadcast_to(row, (d, d))

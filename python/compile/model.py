@@ -1,0 +1,510 @@
+"""L2 — JAX compute graphs for HMM inference (build-time only).
+
+Implements every algorithm the paper benchmarks (§VI), plus the block-wise
+entries (§V-B) used by the Rust coordinator's temporal sharder:
+
+  parallel (associative-scan, O(log T) span):
+    sp_par   — parallel sum-product smoother      (Algorithm 3)
+    mp_par   — parallel max-product MAP           (Algorithm 5)
+    bs_par   — parallel Bayesian smoother         (Särkkä & G-F 2021 [30])
+  sequential baselines (lax.scan, O(T) span):
+    sp_seq   — classical sum-product / two-filter (Algorithm 1 + Eq. 22)
+    mp_seq   — sequential max-product             (Lemma 3 + Theorem 4)
+    viterbi  — classical Viterbi                  (Algorithm 4)
+    bs_seq   — forward filter + RTS smoother
+  block-wise (paper §V-B), used by the L3 temporal sharder:
+    sp_block_fold_{first,mid}, sp_block_finalize_{first,mid}
+    mp_block_fold_{first,mid}, mp_block_finalize_{first,mid}
+
+Common signature: ``(pi (D,D), obs (D,M), prior (D,), ys (T,) i32,
+valid (T,) f32)``. ``valid`` masks padding: masked steps contribute
+identity elements, so one compiled artifact of length T serves any
+sequence of length ≤ T (the router pads). Outputs at masked positions are
+unspecified.
+
+The parallel entries call the L1 Pallas kernels (kernels/assoc_ops.py)
+inside ``jax.lax.associative_scan``; everything lowers into a single HLO
+module per entry via aot.py.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import assoc_ops as ko
+from .kernels import ref
+
+NEG_INF = ref.NEG_INF
+TINY = ref.TINY
+
+
+def _emissions(obs, ys):
+    """Per-step emission columns e_t[j] = p(y_t | x_t = j); (T, D)."""
+    return jnp.take(obs, ys, axis=1).T
+
+
+def _safe_log(x):
+    return jnp.where(x > 0, jnp.log(jnp.maximum(x, TINY)), NEG_INF)
+
+
+def _masked_trans(pi, valid):
+    """(T,D,D) per-step transition: Π on valid steps, I on padding."""
+    d = pi.shape[0]
+    eye = jnp.eye(d, dtype=pi.dtype)
+    v = valid[:, None, None]
+    return v * pi[None] + (1.0 - v) * eye[None]
+
+
+def _masked_emis(em, valid):
+    """(T,D) per-step emissions: e_t on valid steps, all-ones on padding."""
+    return valid[:, None] * em + (1.0 - valid[:, None])
+
+
+# jax.lax.associative_scan(reverse=True) combines elements in *descending*
+# index order (it reverses inputs and outputs but not the operator — the
+# paper's §III-B notes the operation itself must be reversed too). Our
+# suffix products a_{k:T+1} = a_k ⊗ a_{k+1} ⊗ … are ascending, so the
+# reversed scans use the flipped operator.
+def _sp_combine_flip(a, b):
+    return ko.sp_combine(b, a)
+
+
+def _mp_combine_flip(a, b):
+    return ko.mp_combine(b, a)
+
+
+# ===========================================================================
+# Parallel sum-product smoother (Algorithm 3)
+# ===========================================================================
+
+
+def sp_par(pi, obs, prior, ys, valid):
+    """Parallel two-filter smoother: marginals (T,D) + log-likelihood.
+
+    Elements per Definition 3; ⊗ per Eq. 16 (Pallas kernel); forward scan
+    for ψ^f, reversed scan for ψ^b, marginals via Eq. (22).
+    """
+    em = _emissions(obs, ys)
+    mats, logs = ko.sp_element_init(pi, em, valid)
+    f0m, f0l = ref.first_element_ref(prior, em[0])
+    mats = mats.at[0].set(f0m)
+    logs = logs.at[0].set(f0l)
+
+    fwd_m, fwd_l = lax.associative_scan(ko.sp_combine, (mats, logs))
+
+    d = pi.shape[0]
+    ones = jnp.ones((1, d, d), dtype=mats.dtype)
+    bwd_elems_m = jnp.concatenate([mats[1:], ones], axis=0)
+    bwd_elems_l = jnp.concatenate([logs[1:], jnp.zeros((1,), logs.dtype)])
+    bwd_m, _ = lax.associative_scan(
+        _sp_combine_flip, (bwd_elems_m, bwd_elems_l), reverse=True
+    )
+
+    # Eq. (22): p(x_k) ∝ ψ^f(x_k) ψ^b(x_k); rescale logs cancel under the
+    # per-step normalization.
+    raw = fwd_m[:, 0, :] * bwd_m[:, :, 0]
+    gamma = raw / jnp.maximum(jnp.sum(raw, axis=1, keepdims=True), TINY)
+    loglik = fwd_l[-1] + jnp.log(jnp.maximum(jnp.sum(fwd_m[-1, 0, :]), TINY))
+    return gamma, loglik
+
+
+# ===========================================================================
+# Parallel max-product MAP (Algorithm 5)
+# ===========================================================================
+
+
+def mp_par(pi, obs, prior, ys, valid):
+    """Parallel Viterbi via max-product scans: path (T,) i32 + log prob.
+
+    Log-domain elements; ∨ per Eq. (42) (tropical Pallas kernel); the MAP
+    state at each k from Eq. (40). Assumes a unique MAP (paper §IV-A).
+    """
+    em = _emissions(obs, ys)
+    lpi = _safe_log(pi)
+    lem = _safe_log(em)
+    elems = ko.mp_element_init(lpi, lem, valid)
+    first = ref.mp_first_element_ref(_safe_log(prior), lem[0])
+    elems = elems.at[0].set(first)
+
+    fwd = lax.associative_scan(ko.mp_combine, elems)
+
+    d = pi.shape[0]
+    term = jnp.zeros((1, d, d), dtype=elems.dtype)  # ψ_{T,T+1} = 1 → log 0
+    bwd_elems = jnp.concatenate([elems[1:], term], axis=0)
+    bwd = lax.associative_scan(_mp_combine_flip, bwd_elems, reverse=True)
+
+    delta = fwd[:, 0, :] + bwd[:, :, 0]  # Eq. (40) per step k
+    path = jnp.argmax(delta, axis=1).astype(jnp.int32)
+    logp = jnp.max(fwd[-1, 0, :])
+    return path, logp
+
+
+# ===========================================================================
+# Parallel Bayesian smoother (BS-Par, Ref. [30] discrete analogue)
+# ===========================================================================
+
+
+def _bs_filter_combine(a, b):
+    """Combine of filtering elements (f, ĝ, γ): discrete analogue of the
+    parallel Bayesian filter element of [30].
+
+    f(x_{k-1}, x_k) = p(x_k | y-segment, x_{k-1}) — row-stochastic (D,D)
+    ĝ(x_{k-1})      = rescaled p(y-segment | x_{k-1}), max-normalized
+    γ               = log scale of ĝ
+    """
+    f1, g1, c1 = a
+    f2, g2, c2 = b
+    s = jnp.einsum("bij,bj->bi", f1, g2)  # Σ_j f1[i,j] ĝ2[j]
+    sc = jnp.maximum(s, TINY)
+    f12 = jnp.einsum("bij,bj,bjk->bik", f1, g2, f2) / sc[:, :, None]
+    g12 = g1 * s
+    m = jnp.maximum(jnp.max(g12, axis=1, keepdims=True), TINY)
+    return f12, g12 / m, c1 + c2 + jnp.log(m[:, 0])
+
+
+def bs_par(pi, obs, prior, ys, valid):
+    """Parallel Bayesian (filter + RTS) smoother: marginals + loglik.
+
+    Forward: associative scan of filtering elements. Backward: associative
+    scan (reversed, flipped matmul) of the RTS conditionals
+    S_t[m, i] = p(x_t = i | x_{t+1} = m, y_{1:t}). This is the RTS-type
+    smoother of [30], kept distinct from sp_par's two-filter form — the
+    paper benchmarks both.
+    """
+    d = pi.shape[0]
+    em = _emissions(obs, ys)
+    pt = _masked_trans(pi, valid)  # (T,D,D)
+    et = _masked_emis(em, valid)  # (T,D)
+
+    # Filtering elements. Interior: f_t ∝ Π ∘ e_t row-normalized,
+    # ĝ_t[i] = Σ_j Π[i,j] e_t[j]. First: rows = posterior of x_0.
+    w = pt * et[:, None, :]
+    g = jnp.maximum(jnp.sum(w, axis=2), TINY)  # (T,D)
+    f = w / g[:, :, None]
+    w0 = prior * et[0]
+    g0 = jnp.maximum(jnp.sum(w0), TINY)
+    f = f.at[0].set(jnp.broadcast_to(w0 / g0, (d, d)))
+    g = g.at[0].set(jnp.full((d,), g0))
+    gm = jnp.maximum(jnp.max(g, axis=1, keepdims=True), TINY)
+    gh = g / gm
+    gc = jnp.log(gm[:, 0])
+
+    ff, ghs, gcs = lax.associative_scan(_bs_filter_combine, (f, gh, gc))
+    filtered = ff[:, 0, :]  # rows identical after absorbing the first elem
+
+    # Log-likelihood from the full-interval element:
+    # p(y_{1:T}) = g_full(x_0), constant in x_0.
+    loglik = gcs[-1] + jnp.log(jnp.maximum(ghs[-1, 0], TINY))
+
+    # RTS backward conditionals S_t[m, i] ∝ filtered_t[i] Π_t[i, m].
+    s_un = filtered[:-1, None, :] * jnp.transpose(pt[1:], (0, 2, 1))
+    s_norm = jnp.maximum(jnp.sum(s_un, axis=2, keepdims=True), TINY)
+    s_mats = s_un / s_norm  # (T-1, D, D)
+    eye = jnp.eye(d, dtype=pi.dtype)[None]
+    elems = jnp.concatenate([s_mats, eye], axis=0)  # terminal identity
+
+    def back_combine(u, v):
+        # R_t = R_{t+1} @ S_t: under reverse=True the first operand u is
+        # the later-index accumulator, so plain order is the descending
+        # product we need.
+        r = jnp.einsum("bij,bjk->bik", u, v)
+        return r / jnp.maximum(jnp.sum(r, axis=2, keepdims=True), TINY)
+
+    rmats = lax.associative_scan(back_combine, elems, reverse=True)
+    gamma = jnp.einsum("m,bmi->bi", filtered[-1], rmats)
+    gamma = gamma / jnp.maximum(jnp.sum(gamma, axis=1, keepdims=True), TINY)
+    return gamma, loglik
+
+
+# ===========================================================================
+# Sequential baselines
+# ===========================================================================
+
+
+def sp_seq(pi, obs, prior, ys, valid):
+    """Classical sum-product (Algorithm 1) with per-step rescaling."""
+    em = _emissions(obs, ys)
+    pt = _masked_trans(pi, valid)
+    et = _masked_emis(em, valid)
+
+    a0 = prior * et[0]
+    c0 = jnp.maximum(jnp.sum(a0), TINY)
+
+    def fwd_step(carry, inp):
+        alpha, ll = carry
+        p, e = inp
+        a = (alpha @ p) * e
+        c = jnp.maximum(jnp.sum(a), TINY)
+        return (a / c, ll + jnp.log(c)), a / c
+
+    (_, loglik), alphas = lax.scan(
+        fwd_step, (a0 / c0, jnp.log(c0)), (pt[1:], et[1:])
+    )
+    alphas = jnp.concatenate([(a0 / c0)[None], alphas], axis=0)
+
+    def bwd_step(beta, inp):
+        p, e = inp
+        b = p @ (e * beta)
+        c = jnp.maximum(jnp.sum(b), TINY)
+        return b / c, b / c
+
+    d = pi.shape[0]
+    bT = jnp.ones((d,), dtype=pi.dtype)
+    _, betas = lax.scan(bwd_step, bT, (pt[1:], et[1:]), reverse=True)
+    betas = jnp.concatenate([betas, bT[None]], axis=0)
+
+    raw = alphas * betas
+    gamma = raw / jnp.maximum(jnp.sum(raw, axis=1, keepdims=True), TINY)
+    return gamma, loglik
+
+
+def viterbi(pi, obs, prior, ys, valid):
+    """Classical Viterbi (Algorithm 4): forward argmax + backtrace."""
+    em = _emissions(obs, ys)
+    lpi = _safe_log(pi)
+    lem = _safe_log(em)
+    d = pi.shape[0]
+    idx = jnp.arange(d, dtype=jnp.int32)
+
+    v0 = _safe_log(prior) + lem[0]
+
+    def fwd_step(v, inp):
+        le, vld = inp
+        scores = v[:, None] + lpi  # (from, to)
+        vn = jnp.max(scores, axis=0) + le
+        un = jnp.argmax(scores, axis=0).astype(jnp.int32)
+        v_out = jnp.where(vld > 0.5, vn, v)
+        u_out = jnp.where(vld > 0.5, un, idx)  # identity backtrace on pad
+        return v_out, u_out
+
+    v_last, us = lax.scan(fwd_step, v0, (lem[1:], valid[1:]))
+    x_last = jnp.argmax(v_last).astype(jnp.int32)
+
+    def back_step(x, u):
+        return u[x], u[x]
+
+    _, path_rev = lax.scan(back_step, x_last, us, reverse=True)
+    path = jnp.concatenate([path_rev, x_last[None]])
+    return path, jnp.max(v_last)
+
+
+def mp_seq(pi, obs, prior, ys, valid):
+    """Sequential max-product (Lemma 3 recursions + Theorem 4 combine)."""
+    em = _emissions(obs, ys)
+    lpi = _safe_log(pi)
+    lem = _safe_log(em)
+
+    f0 = _safe_log(prior) + lem[0]
+
+    def fwd_step(fv, inp):
+        le, vld = inp
+        fn = jnp.max(fv[:, None] + lpi, axis=0) + le
+        f_out = jnp.where(vld > 0.5, fn, fv)
+        return f_out, f_out
+
+    _, fs = lax.scan(fwd_step, f0, (lem[1:], valid[1:]))
+    fs = jnp.concatenate([f0[None], fs], axis=0)
+
+    d = pi.shape[0]
+    bT = jnp.zeros((d,), dtype=pi.dtype)
+
+    def bwd_step(bv, inp):
+        le, vld = inp
+        bn = jnp.max(lpi + (le + bv)[None, :], axis=1)
+        b_out = jnp.where(vld > 0.5, bn, bv)
+        return b_out, b_out
+
+    _, bs = lax.scan(bwd_step, bT, (lem[1:], valid[1:]), reverse=True)
+    bs = jnp.concatenate([bs, bT[None]], axis=0)
+
+    path = jnp.argmax(fs + bs, axis=1).astype(jnp.int32)  # Eq. (40)
+    return path, jnp.max(fs[-1])
+
+
+def bs_seq(pi, obs, prior, ys, valid):
+    """Sequential Bayesian smoother: forward filter + RTS backward pass."""
+    em = _emissions(obs, ys)
+    pt = _masked_trans(pi, valid)
+    et = _masked_emis(em, valid)
+
+    a0 = prior * et[0]
+    c0 = jnp.maximum(jnp.sum(a0), TINY)
+
+    def f_step(carry, inp):
+        alpha, ll = carry
+        p, e = inp
+        a = (alpha @ p) * e
+        c = jnp.maximum(jnp.sum(a), TINY)
+        return (a / c, ll + jnp.log(c)), a / c
+
+    (_, loglik), fs = lax.scan(f_step, (a0 / c0, jnp.log(c0)), (pt[1:], et[1:]))
+    fs = jnp.concatenate([(a0 / c0)[None], fs], axis=0)
+
+    def s_step(gnext, inp):
+        filt, p = inp
+        pred = jnp.maximum(filt @ p, TINY)  # p(x_{t+1} | y_{1:t})
+        g = filt * (p @ (gnext / pred))
+        g = g / jnp.maximum(jnp.sum(g), TINY)
+        return g, g
+
+    _, gammas = lax.scan(s_step, fs[-1], (fs[:-1], pt[1:]), reverse=True)
+    gamma = jnp.concatenate([gammas, fs[-1][None]], axis=0)
+    return gamma, loglik
+
+
+# ===========================================================================
+# Block-wise entries (paper §V-B) — used by the L3 temporal sharder
+# ===========================================================================
+
+
+def _sp_elements(pi, obs, prior, ys, valid, first):
+    em = _emissions(obs, ys)
+    mats, logs = ko.sp_element_init(pi, em, valid)
+    if first:
+        f0m, f0l = ref.first_element_ref(prior, em[0])
+        mats = mats.at[0].set(f0m)
+        logs = logs.at[0].set(f0l)
+    return mats, logs
+
+
+def _sp_block_fold(pi, obs, prior, ys, valid, first):
+    mats, logs = _sp_elements(pi, obs, prior, ys, valid, first)
+
+    def step(carry, elem):
+        cm, cl = carry
+        m, l = elem
+        c = cm @ m
+        mx = jnp.maximum(jnp.max(c), TINY)
+        return (c / mx, cl + l + jnp.log(mx)), None
+
+    d = pi.shape[0]
+    init = (jnp.eye(d, dtype=pi.dtype), jnp.zeros((), pi.dtype))
+    (fm, fl), _ = lax.scan(step, init, (mats, logs))
+    return fm, fl
+
+
+def sp_block_fold_first(pi, obs, prior, ys, valid):
+    """Fold a leading block into its summary element a_{0:l}."""
+    return _sp_block_fold(pi, obs, prior, ys, valid, True)
+
+
+def sp_block_fold_mid(pi, obs, prior, ys, valid):
+    """Fold an interior block into its summary element a_{s:e}."""
+    return _sp_block_fold(pi, obs, prior, ys, valid, False)
+
+
+def _sp_block_finalize(pi, obs, prior, ys, valid, fin, bin_, first):
+    mats, logs = _sp_elements(pi, obs, prior, ys, valid, first)
+    pref_m, _ = lax.associative_scan(ko.sp_combine, (mats, logs))
+
+    d = pi.shape[0]
+    eye = jnp.eye(d, dtype=pi.dtype)[None]
+    suf_elems_m = jnp.concatenate([mats[1:], eye], axis=0)
+    suf_elems_l = jnp.concatenate([logs[1:], jnp.zeros((1,), logs.dtype)])
+    suf_m, _ = lax.associative_scan(
+        _sp_combine_flip, (suf_elems_m, suf_elems_l), reverse=True
+    )
+
+    # global fwd[t] = fin ⊗ pref[t];  global bwd[t] = suf[t] ⊗ bin
+    gf = jnp.einsum("i,bij->bj", fin[0, :], pref_m)  # row 0 of fin ⊗ pref
+    gb = jnp.einsum("bij,j->bi", suf_m, bin_[:, 0])  # col 0 of suf ⊗ bin
+    raw = gf * gb
+    gamma = raw / jnp.maximum(jnp.sum(raw, axis=1, keepdims=True), TINY)
+    return (gamma,)
+
+
+def sp_block_finalize_first(pi, obs, prior, ys, valid, fin, bin_):
+    """Marginals for a leading block given incoming fwd/bwd summaries."""
+    return _sp_block_finalize(pi, obs, prior, ys, valid, fin, bin_, True)
+
+
+def sp_block_finalize_mid(pi, obs, prior, ys, valid, fin, bin_):
+    """Marginals for an interior block given incoming fwd/bwd summaries."""
+    return _sp_block_finalize(pi, obs, prior, ys, valid, fin, bin_, False)
+
+
+def _mp_elements(pi, obs, prior, ys, valid, first):
+    em = _emissions(obs, ys)
+    lpi = _safe_log(pi)
+    lem = _safe_log(em)
+    elems = ko.mp_element_init(lpi, lem, valid)
+    if first:
+        elems = elems.at[0].set(ref.mp_first_element_ref(_safe_log(prior), lem[0]))
+    return elems
+
+
+def _mp_block_fold(pi, obs, prior, ys, valid, first):
+    elems = _mp_elements(pi, obs, prior, ys, valid, first)
+
+    def step(carry, e):
+        c = jnp.max(carry[:, :, None] + e[None, :, :], axis=1)
+        return c, None
+
+    d = pi.shape[0]
+    init = jnp.where(jnp.eye(d, dtype=bool), 0.0, NEG_INF).astype(pi.dtype)
+    out, _ = lax.scan(step, init, elems)
+    return (out,)
+
+
+def mp_block_fold_first(pi, obs, prior, ys, valid):
+    """Fold a leading block into its max-product summary (log domain)."""
+    return _mp_block_fold(pi, obs, prior, ys, valid, True)
+
+
+def mp_block_fold_mid(pi, obs, prior, ys, valid):
+    """Fold an interior block into its max-product summary (log domain)."""
+    return _mp_block_fold(pi, obs, prior, ys, valid, False)
+
+
+def _mp_block_finalize(pi, obs, prior, ys, valid, fin, bin_, first):
+    elems = _mp_elements(pi, obs, prior, ys, valid, first)
+    pref = lax.associative_scan(ko.mp_combine, elems)
+
+    d = pi.shape[0]
+    logeye = jnp.where(jnp.eye(d, dtype=bool), 0.0, NEG_INF).astype(pi.dtype)
+    suf_elems = jnp.concatenate([elems[1:], logeye[None]], axis=0)
+    suf = lax.associative_scan(_mp_combine_flip, suf_elems, reverse=True)
+
+    # global fwd[t] = row 0 of (fin ∨ pref[t]); bwd[t] = col 0 of (suf[t] ∨ bin)
+    gf = jnp.max(fin[0, :, None] + pref, axis=1)  # (l, D)
+    gb = jnp.max(suf + bin_[:, 0][None, None, :], axis=2)  # (l, D)
+    path = jnp.argmax(gf + gb, axis=1).astype(jnp.int32)
+    return (path,)
+
+
+def mp_block_finalize_first(pi, obs, prior, ys, valid, fin, bin_):
+    """MAP states for a leading block given incoming summaries."""
+    return _mp_block_finalize(pi, obs, prior, ys, valid, fin, bin_, True)
+
+
+def mp_block_finalize_mid(pi, obs, prior, ys, valid, fin, bin_):
+    """MAP states for an interior block given incoming summaries."""
+    return _mp_block_finalize(pi, obs, prior, ys, valid, fin, bin_, False)
+
+
+# ---------------------------------------------------------------------------
+# Entry registry used by aot.py and the tests
+# ---------------------------------------------------------------------------
+
+CORE_ENTRIES = {
+    "sp_par": sp_par,
+    "mp_par": mp_par,
+    "bs_par": bs_par,
+    "sp_seq": sp_seq,
+    "mp_seq": mp_seq,
+    "viterbi": viterbi,
+    "bs_seq": bs_seq,
+}
+
+BLOCK_FOLD_ENTRIES = {
+    "sp_block_fold_first": sp_block_fold_first,
+    "sp_block_fold_mid": sp_block_fold_mid,
+    "mp_block_fold_first": mp_block_fold_first,
+    "mp_block_fold_mid": mp_block_fold_mid,
+}
+
+BLOCK_FINALIZE_ENTRIES = {
+    "sp_block_finalize_first": sp_block_finalize_first,
+    "sp_block_finalize_mid": sp_block_finalize_mid,
+    "mp_block_finalize_first": mp_block_finalize_first,
+    "mp_block_finalize_mid": mp_block_finalize_mid,
+}

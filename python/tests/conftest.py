@@ -1,0 +1,120 @@
+"""Shared fixtures/helpers for the python test suite."""
+
+import numpy as np
+import pytest
+
+
+def random_hmm(rng, d, m):
+    """Random well-conditioned HMM: row-stochastic Π, emission O, prior."""
+    pi = rng.uniform(0.05, 1.0, size=(d, d))
+    pi /= pi.sum(axis=1, keepdims=True)
+    obs = rng.uniform(0.05, 1.0, size=(d, m))
+    obs /= obs.sum(axis=1, keepdims=True)
+    prior = rng.uniform(0.05, 1.0, size=d)
+    prior /= prior.sum()
+    return pi.astype(np.float32), obs.astype(np.float32), prior.astype(np.float32)
+
+
+def gilbert_elliott(p0=0.03, p1=0.1, p2=0.05, q0=0.01, q1=0.1):
+    """The paper's Gilbert–Elliott channel model (Eq. 43). D=4, M=2."""
+    pi = np.array(
+        [
+            [(1 - p0) * (1 - p2), p0 * (1 - p2), (1 - p0) * p2, p0 * p2],
+            [p1 * (1 - p2), (1 - p1) * (1 - p2), p1 * p2, (1 - p1) * p2],
+            [(1 - p0) * p2, p0 * p2, (1 - p0) * (1 - p2), p0 * (1 - p2)],
+            [p1 * p2, (1 - p1) * p2, p1 * (1 - p2), (1 - p1) * (1 - p2)],
+        ],
+        dtype=np.float32,
+    )
+    obs = np.array(
+        [[1 - q0, q0], [1 - q1, q1], [q0, 1 - q0], [q1, 1 - q1]],
+        dtype=np.float32,
+    )
+    prior = np.full(4, 0.25, dtype=np.float32)
+    return pi, obs, prior
+
+
+def sample_hmm(rng, pi, obs, prior, t_len):
+    """Ancestral sampling of (states, observations) from an HMM."""
+    d, m = obs.shape
+    xs = np.empty(t_len, dtype=np.int64)
+    ys = np.empty(t_len, dtype=np.int32)
+    xs[0] = rng.choice(d, p=prior / prior.sum())
+    ys[0] = rng.choice(m, p=obs[xs[0]] / obs[xs[0]].sum())
+    for t in range(1, t_len):
+        xs[t] = rng.choice(d, p=pi[xs[t - 1]] / pi[xs[t - 1]].sum())
+        ys[t] = rng.choice(m, p=obs[xs[t]] / obs[xs[t]].sum())
+    return xs, ys
+
+
+def brute_force_marginals(pi, obs, prior, ys):
+    """Enumerate all D^T state sequences; exact smoothing marginals + logZ."""
+    t_len = len(ys)
+    d = pi.shape[0]
+    pi64, obs64, prior64 = pi.astype(np.float64), obs.astype(np.float64), prior.astype(np.float64)
+    marg = np.zeros((t_len, d))
+    z = 0.0
+    for seq in np.ndindex(*([d] * t_len)):
+        p = prior64[seq[0]] * obs64[seq[0], ys[0]]
+        for t in range(1, t_len):
+            p *= pi64[seq[t - 1], seq[t]] * obs64[seq[t], ys[t]]
+        z += p
+        for t in range(t_len):
+            marg[t, seq[t]] += p
+    return marg / z, np.log(z)
+
+
+def brute_force_map(pi, obs, prior, ys):
+    """Enumerate all D^T state sequences; exact MAP path + log-probability."""
+    t_len = len(ys)
+    d = pi.shape[0]
+    pi64, obs64, prior64 = pi.astype(np.float64), obs.astype(np.float64), prior.astype(np.float64)
+    best, best_seq = -np.inf, None
+    for seq in np.ndindex(*([d] * t_len)):
+        p = np.log(prior64[seq[0]] * obs64[seq[0], ys[0]])
+        for t in range(1, t_len):
+            p += np.log(pi64[seq[t - 1], seq[t]] * obs64[seq[t], ys[t]])
+        if p > best:
+            best, best_seq = p, np.array(seq, dtype=np.int32)
+    return best_seq, best
+
+
+def maxprod_delta_f64(pi, obs, prior, ys):
+    """Float64 oracle of δ_k(x) = ψ̃^f_k(x) + ψ̃^b_k(x) (paper Eq. 40).
+
+    Used to make MAP-path comparisons tie-aware: where the MAP estimate is
+    non-unique (δ has tied maxima — the paper assumes this away in §IV-A),
+    the per-step argmax of Eq. (40) and the Viterbi backtrace may validly
+    disagree.
+    """
+    lpi = np.log(pi.astype(np.float64))
+    lem = np.log(obs.astype(np.float64))[:, ys].T
+    t_len, d = len(ys), pi.shape[0]
+    f = np.empty((t_len, d))
+    b = np.empty((t_len, d))
+    f[0] = np.log(prior.astype(np.float64)) + lem[0]
+    for t in range(1, t_len):
+        f[t] = (f[t - 1][:, None] + lpi).max(axis=0) + lem[t]
+    b[t_len - 1] = 0.0
+    for t in range(t_len - 2, -1, -1):
+        b[t] = (lpi + (lem[t + 1] + b[t + 1])[None, :]).max(axis=1)
+    return f + b
+
+
+def assert_map_equivalent(pi, obs, prior, ys, path, ref_path, tol=1e-6):
+    """Paths must agree except where δ_k has (near-)tied maxima, and every
+    chosen state must attain the per-step maximum of δ_k."""
+    path = np.asarray(path)
+    ref_path = np.asarray(ref_path)
+    delta = maxprod_delta_f64(pi, obs, prior, ys)
+    dmax = delta.max(axis=1)
+    np.testing.assert_allclose(delta[np.arange(len(ys)), path], dmax, atol=tol)
+    diff = np.nonzero(path != ref_path)[0]
+    for k in diff:
+        top2 = np.sort(delta[k])[::-1]
+        assert top2[0] - top2[1] < tol, f"non-tied mismatch at {k}"
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)

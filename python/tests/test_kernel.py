@@ -1,0 +1,180 @@
+"""L1 kernel tests: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and values; the kernels must agree with the
+reference to float32 tolerance, and the combine operators must satisfy the
+paper's algebraic requirements (associativity — Lemmas 1 and 2 — and the
+identity element used for padding).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import assoc_ops as ko
+from compile.kernels import ref
+
+
+def sp_elem(rng, b, d):
+    m = rng.uniform(0.05, 1.0, size=(b, d, d)).astype(np.float32)
+    m /= m.max(axis=(1, 2), keepdims=True)
+    s = rng.uniform(-3.0, 3.0, size=b).astype(np.float32)
+    return jnp.asarray(m), jnp.asarray(s)
+
+
+def mp_elem(rng, b, d):
+    return jnp.asarray(rng.uniform(-5.0, 0.0, size=(b, d, d)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Pallas vs reference
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 3, 64, 65, 130]),
+    d=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sp_combine_matches_ref(b, d, seed):
+    rng = np.random.default_rng(seed)
+    a = sp_elem(rng, b, d)
+    c = sp_elem(rng, b, d)
+    km, kl = ko.sp_combine(a, c)
+    rm, rl = ref.sp_combine_ref(a[0], a[1], c[0], c[1])
+    np.testing.assert_allclose(km, rm, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(kl, rl, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 64, 100, 129]),
+    d=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mp_combine_matches_ref(b, d, seed):
+    rng = np.random.default_rng(seed)
+    a = mp_elem(rng, b, d)
+    c = mp_elem(rng, b, d)
+    np.testing.assert_allclose(
+        ko.mp_combine(a, c), ref.mp_combine_ref(a, c), rtol=1e-6, atol=1e-6
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.sampled_from([1, 7, 256, 300]),
+    d=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sp_element_init_matches_ref(t, d, seed):
+    rng = np.random.default_rng(seed)
+    pi = rng.uniform(0.01, 1.0, size=(d, d)).astype(np.float32)
+    pi /= pi.sum(axis=1, keepdims=True)
+    em = rng.uniform(0.01, 1.0, size=(t, d)).astype(np.float32)
+    valid = (rng.uniform(size=t) > 0.3).astype(np.float32)
+    km, kl = ko.sp_element_init(jnp.asarray(pi), jnp.asarray(em), jnp.asarray(valid))
+    rm, rl = ref.sp_element_init_ref(jnp.asarray(pi), jnp.asarray(em), jnp.asarray(valid))
+    np.testing.assert_allclose(km, rm, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(kl, rl, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.sampled_from([1, 5, 256, 257]),
+    d=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mp_element_init_matches_ref(t, d, seed):
+    rng = np.random.default_rng(seed)
+    lpi = rng.uniform(-4.0, 0.0, size=(d, d)).astype(np.float32)
+    lem = rng.uniform(-4.0, 0.0, size=(t, d)).astype(np.float32)
+    valid = (rng.uniform(size=t) > 0.3).astype(np.float32)
+    k = ko.mp_element_init(jnp.asarray(lpi), jnp.asarray(lem), jnp.asarray(valid))
+    r = ref.mp_element_init_ref(jnp.asarray(lpi), jnp.asarray(lem), jnp.asarray(valid))
+    np.testing.assert_allclose(k, r, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Algebraic laws (Lemma 1 / Lemma 2)
+# ---------------------------------------------------------------------------
+
+
+def rep_sp(m, s):
+    """Represented (unscaled) potential matrices of an SP element batch."""
+    return np.asarray(m) * np.exp(np.asarray(s))[:, None, None]
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_sp_combine_associative(d, seed):
+    rng = np.random.default_rng(seed)
+    a, b, c = (sp_elem(rng, 4, d) for _ in range(3))
+    left = ko.sp_combine(ko.sp_combine(a, b), c)
+    right = ko.sp_combine(a, ko.sp_combine(b, c))
+    np.testing.assert_allclose(
+        rep_sp(*left), rep_sp(*right), rtol=1e-4, atol=1e-6
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.sampled_from([2, 3, 4, 8]), seed=st.integers(0, 2**31 - 1))
+def test_mp_combine_associative(d, seed):
+    rng = np.random.default_rng(seed)
+    a, b, c = (mp_elem(rng, 4, d) for _ in range(3))
+    left = ko.mp_combine(ko.mp_combine(a, b), c)
+    right = ko.mp_combine(a, ko.mp_combine(b, c))
+    np.testing.assert_allclose(left, right, rtol=1e-5, atol=1e-5)
+
+
+def test_sp_identity_element():
+    """The padding element (I, 0) must be a two-sided identity for ⊗."""
+    rng = np.random.default_rng(7)
+    d = 4
+    a = sp_elem(rng, 3, d)
+    eye = jnp.broadcast_to(jnp.eye(d, dtype=jnp.float32), (3, d, d))
+    zero = jnp.zeros(3, dtype=jnp.float32)
+    for m, s in (ko.sp_combine(a, (eye, zero)), ko.sp_combine((eye, zero), a)):
+        np.testing.assert_allclose(rep_sp(m, s), rep_sp(*a), rtol=1e-6)
+
+
+def test_mp_identity_element():
+    """The log-domain identity (0 diag, -inf off) is neutral for ∨."""
+    rng = np.random.default_rng(8)
+    d = 4
+    a = mp_elem(rng, 3, d)
+    ident = jnp.broadcast_to(
+        jnp.where(jnp.eye(d, dtype=bool), 0.0, ref.NEG_INF).astype(jnp.float32),
+        (3, d, d),
+    )
+    np.testing.assert_allclose(ko.mp_combine(a, ident), a, rtol=1e-6)
+    np.testing.assert_allclose(ko.mp_combine(ident, a), a, rtol=1e-6)
+
+
+def test_sp_combine_empty_batch():
+    a = (jnp.zeros((0, 4, 4)), jnp.zeros((0,)))
+    m, s = ko.sp_combine(a, a)
+    assert m.shape == (0, 4, 4) and s.shape == (0,)
+
+
+def test_mp_combine_empty_batch():
+    a = jnp.zeros((0, 4, 4))
+    assert ko.mp_combine(a, a).shape == (0, 4, 4)
+
+
+def test_sp_combine_underflow_resistance():
+    """Chained combines at tiny magnitudes must not underflow: the log
+    accumulator absorbs the scale (DESIGN.md §2.2)."""
+    rng = np.random.default_rng(9)
+    d = 4
+    m = rng.uniform(0.05, 1.0, size=(1, d, d)).astype(np.float32)
+    m /= m.max()
+    elem = (jnp.asarray(m), jnp.asarray(np.float32([-80.0])))  # e^-80 scale
+    acc = elem
+    for _ in range(50):  # raw product scale e^-4000 — far below f32 range
+        acc = ko.sp_combine(acc, elem)
+    assert np.isfinite(np.asarray(acc[0])).all()
+    assert np.asarray(acc[0]).max() == pytest.approx(1.0, rel=1e-5)
+    assert np.isfinite(float(acc[1][0]))
+    assert float(acc[1][0]) < -4000.0

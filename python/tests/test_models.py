@@ -1,0 +1,277 @@
+"""L2 model tests: parallel vs sequential vs brute-force equivalence.
+
+The paper's premise (§VI): parallel and sequential methods are
+algebraically equivalent, so error performance is identical — here we
+assert it numerically. Small-T cases are additionally checked against an
+exact exponential-enumeration oracle.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from .conftest import (
+    assert_map_equivalent,
+    brute_force_map,
+    brute_force_marginals,
+    gilbert_elliott,
+    random_hmm,
+    sample_hmm,
+)
+
+
+def run(entry, pi, obs, prior, ys, valid=None):
+    t_len = len(ys)
+    if valid is None:
+        valid = np.ones(t_len, dtype=np.float32)
+    return jax.jit(M.CORE_ENTRIES[entry])(
+        jnp.asarray(pi),
+        jnp.asarray(obs),
+        jnp.asarray(prior),
+        jnp.asarray(ys, dtype=jnp.int32),
+        jnp.asarray(valid),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Exact oracle (small T)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    d=st.sampled_from([2, 3]),
+    m=st.sampled_from([2, 3]),
+    t=st.sampled_from([1, 2, 5, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_smoothers_match_brute_force(d, m, t, seed):
+    rng = np.random.default_rng(seed)
+    pi, obs, prior = random_hmm(rng, d, m)
+    ys = rng.integers(0, m, size=t).astype(np.int32)
+    exact, logz = brute_force_marginals(pi, obs, prior, ys)
+    for entry in ("sp_par", "sp_seq", "bs_par", "bs_seq"):
+        gamma, loglik = run(entry, pi, obs, prior, ys)
+        np.testing.assert_allclose(
+            np.asarray(gamma), exact, rtol=2e-4, atol=2e-5, err_msg=entry
+        )
+        assert float(loglik) == pytest.approx(logz, rel=2e-4), entry
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    d=st.sampled_from([2, 3]),
+    t=st.sampled_from([1, 2, 5, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_map_matches_brute_force(d, t, seed):
+    rng = np.random.default_rng(seed)
+    pi, obs, prior = random_hmm(rng, d, 2)
+    ys = rng.integers(0, 2, size=t).astype(np.int32)
+    exact_path, exact_logp = brute_force_map(pi, obs, prior, ys)
+    for entry in ("mp_par", "mp_seq", "viterbi"):
+        path, logp = run(entry, pi, obs, prior, ys)
+        assert float(logp) == pytest.approx(exact_logp, rel=2e-4), entry
+        np.testing.assert_array_equal(np.asarray(path), exact_path, err_msg=entry)
+
+
+# ---------------------------------------------------------------------------
+# Par vs Seq equivalence at realistic lengths (GE model, paper §VI)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("t_len", [64, 100, 256, 1000])
+def test_parallel_equals_sequential_ge(t_len, rng):
+    pi, obs, prior = gilbert_elliott()
+    _, ys = sample_hmm(rng, pi, obs, prior, t_len)
+
+    g_par, ll_par = run("sp_par", pi, obs, prior, ys)
+    g_seq, ll_seq = run("sp_seq", pi, obs, prior, ys)
+    g_bsp, ll_bsp = run("bs_par", pi, obs, prior, ys)
+    g_bss, ll_bss = run("bs_seq", pi, obs, prior, ys)
+    np.testing.assert_allclose(g_par, g_seq, atol=2e-5)
+    np.testing.assert_allclose(g_bsp, g_seq, atol=2e-5)
+    np.testing.assert_allclose(g_bss, g_seq, atol=2e-5)
+    assert float(ll_par) == pytest.approx(float(ll_seq), rel=1e-5)
+    assert float(ll_bsp) == pytest.approx(float(ll_seq), rel=1e-5)
+    assert float(ll_bss) == pytest.approx(float(ll_seq), rel=1e-5)
+
+    # The GE model develops exactly-tied MAP paths at long T (the paper's
+    # §IV-A uniqueness assumption fails), so the comparison is tie-aware.
+    p_mp, lp_mp = run("mp_par", pi, obs, prior, ys)
+    p_ms, lp_ms = run("mp_seq", pi, obs, prior, ys)
+    p_vit, lp_vit = run("viterbi", pi, obs, prior, ys)
+    assert float(lp_mp) == pytest.approx(float(lp_vit), rel=1e-5)
+    assert float(lp_ms) == pytest.approx(float(lp_vit), rel=1e-5)
+    assert_map_equivalent(pi, obs, prior, ys, p_mp, p_vit, tol=1e-4)
+    assert_map_equivalent(pi, obs, prior, ys, p_ms, p_vit, tol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    d=st.sampled_from([2, 4, 8]),
+    m=st.sampled_from([2, 5]),
+    t=st.sampled_from([33, 64, 129]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_parallel_equals_sequential_random(d, m, t, seed):
+    rng = np.random.default_rng(seed)
+    pi, obs, prior = random_hmm(rng, d, m)
+    ys = rng.integers(0, m, size=t).astype(np.int32)
+    g_par, ll_par = run("sp_par", pi, obs, prior, ys)
+    g_seq, ll_seq = run("sp_seq", pi, obs, prior, ys)
+    np.testing.assert_allclose(g_par, g_seq, atol=3e-5)
+    assert float(ll_par) == pytest.approx(float(ll_seq), rel=1e-4)
+    p_mp, lp_mp = run("mp_par", pi, obs, prior, ys)
+    p_vit, lp_vit = run("viterbi", pi, obs, prior, ys)
+    assert float(lp_mp) == pytest.approx(float(lp_vit), rel=1e-4)
+    assert_map_equivalent(pi, obs, prior, ys, p_mp, p_vit, tol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Padding mask: artifact of length T serves any V ≤ T
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("entry", ["sp_par", "sp_seq", "bs_par", "bs_seq"])
+def test_padding_mask_smoothers(entry, rng):
+    pi, obs, prior = gilbert_elliott()
+    v_len, t_len = 77, 128
+    _, ys = sample_hmm(rng, pi, obs, prior, v_len)
+    ys_pad = np.concatenate([ys, np.zeros(t_len - v_len, dtype=np.int32)])
+    valid = np.concatenate(
+        [np.ones(v_len, dtype=np.float32), np.zeros(t_len - v_len, dtype=np.float32)]
+    )
+    g_pad, ll_pad = run(entry, pi, obs, prior, ys_pad, valid)
+    g_ref, ll_ref = run("sp_seq", pi, obs, prior, ys)
+    np.testing.assert_allclose(np.asarray(g_pad)[:v_len], g_ref, atol=3e-5)
+    assert float(ll_pad) == pytest.approx(float(ll_ref), rel=1e-5)
+
+
+@pytest.mark.parametrize("entry", ["mp_par", "mp_seq", "viterbi"])
+def test_padding_mask_map(entry, rng):
+    pi, obs, prior = gilbert_elliott()
+    v_len, t_len = 50, 64
+    _, ys = sample_hmm(rng, pi, obs, prior, v_len)
+    ys_pad = np.concatenate([ys, np.zeros(t_len - v_len, dtype=np.int32)])
+    valid = np.concatenate(
+        [np.ones(v_len, dtype=np.float32), np.zeros(t_len - v_len, dtype=np.float32)]
+    )
+    p_pad, lp_pad = run(entry, pi, obs, prior, ys_pad, valid)
+    p_ref, lp_ref = run("viterbi", pi, obs, prior, ys)
+    assert float(lp_pad) == pytest.approx(float(lp_ref), rel=1e-5)
+    assert_map_equivalent(
+        pi, obs, prior, ys, np.asarray(p_pad)[:v_len], p_ref, tol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Block-wise entries (§V-B): two-level scan ≡ flat scan
+# ---------------------------------------------------------------------------
+
+
+def np32(x):
+    return jnp.asarray(np.asarray(x, dtype=np.float32))
+
+
+def test_sp_blockwise_matches_flat(rng):
+    pi, obs, prior = gilbert_elliott()
+    t_len, block = 256, 64
+    _, ys = sample_hmm(rng, pi, obs, prior, t_len)
+    valid = np.ones(block, dtype=np.float32)
+    nb = t_len // block
+
+    # Phase 1: per-block folds.
+    folds = []
+    for b in range(nb):
+        fn = M.sp_block_fold_first if b == 0 else M.sp_block_fold_mid
+        fm, fl = jax.jit(fn)(
+            np32(pi), np32(obs), np32(prior),
+            jnp.asarray(ys[b * block : (b + 1) * block], jnp.int32),
+            np32(valid),
+        )
+        folds.append((np.asarray(fm, dtype=np.float64), float(fl)))
+
+    # Leader combines (done natively in Rust in the real system).
+    def comb(a, b):
+        c = a[0] @ b[0]
+        mx = c.max()
+        return c / mx, a[1] + b[1] + np.log(mx)
+
+    d = pi.shape[0]
+    ident = (np.eye(d), 0.0)
+    ones = (np.ones((d, d)), 0.0)
+    prefixes, suffixes = [], [None] * nb
+    acc = ident
+    for b in range(nb):
+        prefixes.append(acc)
+        acc = comb(acc, folds[b])
+    acc = ones  # a_{T:T+1} terminal fold
+    for b in reversed(range(nb)):
+        suffixes[b] = acc
+        acc = comb(folds[b], acc)
+
+    # Phase 2: per-block finalize.
+    gammas = []
+    for b in range(nb):
+        fn = M.sp_block_finalize_first if b == 0 else M.sp_block_finalize_mid
+        (g,) = jax.jit(fn)(
+            np32(pi), np32(obs), np32(prior),
+            jnp.asarray(ys[b * block : (b + 1) * block], jnp.int32),
+            np32(valid),
+            np32(prefixes[b][0]), np32(suffixes[b][0]),
+        )
+        gammas.append(np.asarray(g))
+
+    g_flat, _ = run("sp_seq", pi, obs, prior, ys)
+    np.testing.assert_allclose(np.concatenate(gammas), g_flat, atol=5e-5)
+
+
+def test_mp_blockwise_matches_flat(rng):
+    pi, obs, prior = gilbert_elliott()
+    t_len, block = 256, 64
+    _, ys = sample_hmm(rng, pi, obs, prior, t_len)
+    valid = np.ones(block, dtype=np.float32)
+    nb = t_len // block
+
+    folds = []
+    for b in range(nb):
+        fn = M.mp_block_fold_first if b == 0 else M.mp_block_fold_mid
+        (fm,) = jax.jit(fn)(
+            np32(pi), np32(obs), np32(prior),
+            jnp.asarray(ys[b * block : (b + 1) * block], jnp.int32),
+            np32(valid),
+        )
+        folds.append(np.asarray(fm, dtype=np.float64))
+
+    def comb(a, b):
+        return (a[:, :, None] + b[None, :, :]).max(axis=1)
+
+    d = pi.shape[0]
+    ident = np.where(np.eye(d, dtype=bool), 0.0, M.NEG_INF)
+    prefixes, suffixes = [], [None] * nb
+    acc = ident
+    for b in range(nb):
+        prefixes.append(acc)
+        acc = comb(acc, folds[b])
+    acc = np.zeros((d, d))  # terminal: ψ_{T,T+1}=1 → log 0
+    for b in reversed(range(nb)):
+        suffixes[b] = acc
+        acc = comb(folds[b], acc)
+
+    paths = []
+    for b in range(nb):
+        fn = M.mp_block_finalize_first if b == 0 else M.mp_block_finalize_mid
+        (p,) = jax.jit(fn)(
+            np32(pi), np32(obs), np32(prior),
+            jnp.asarray(ys[b * block : (b + 1) * block], jnp.int32),
+            np32(valid),
+            np32(prefixes[b]), np32(suffixes[b]),
+        )
+        paths.append(np.asarray(p))
+
+    p_flat, _ = run("viterbi", pi, obs, prior, ys)
+    assert_map_equivalent(pi, obs, prior, ys, np.concatenate(paths), p_flat, tol=1e-4)

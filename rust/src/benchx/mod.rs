@@ -1,0 +1,194 @@
+//! Benchmark harness (criterion is unavailable offline — DESIGN.md §1).
+//!
+//! Warmup + repeated timed runs with robust statistics (median + MAD),
+//! adaptive repetition targeting a time budget, and table-friendly
+//! reporting. Used by `cargo bench` targets and the figure generators.
+
+use std::time::{Duration, Instant};
+
+/// Bench configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop once total measured time exceeds this budget.
+    pub time_budget: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 100,
+            time_budget: Duration::from_millis(500),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster settings for expensive (multi-second) benchmarks.
+    pub fn heavy() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            time_budget: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Measurement {
+    pub fn median_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+}
+
+/// Measure a closure. The closure's return value is black-boxed so the
+/// optimizer cannot elide the work.
+pub fn bench<F, R>(name: &str, config: BenchConfig, mut f: F) -> Measurement
+where
+    F: FnMut() -> R,
+{
+    for _ in 0..config.warmup_iters {
+        black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let budget_start = Instant::now();
+    while samples.len() < config.min_iters
+        || (samples.len() < config.max_iters
+            && budget_start.elapsed() < config.time_budget)
+    {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    summarize(name, &mut samples)
+}
+
+fn summarize(name: &str, samples: &mut [Duration]) -> Measurement {
+    samples.sort_unstable();
+    let median = samples[samples.len() / 2];
+    let mut deviations: Vec<Duration> = samples
+        .iter()
+        .map(|&s| if s > median { s - median } else { median - s })
+        .collect();
+    deviations.sort_unstable();
+    Measurement {
+        name: name.to_string(),
+        iters: samples.len(),
+        median,
+        mad: deviations[deviations.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+    }
+}
+
+/// Optimization barrier (std::hint::black_box re-export point so callers
+/// don't need the hint feature path spelled everywhere).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Render measurements as an aligned text table.
+pub fn format_table(rows: &[Measurement]) -> String {
+    let mut out = String::new();
+    let name_w = rows.iter().map(|r| r.name.len()).max().unwrap_or(4).max(4);
+    out.push_str(&format!(
+        "{:<name_w$}  {:>10}  {:>10}  {:>10}  {:>6}\n",
+        "name", "median", "mad", "min", "iters"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<name_w$}  {:>10}  {:>10}  {:>10}  {:>6}\n",
+            r.name,
+            fmt_duration(r.median),
+            fmt_duration(r.mad),
+            fmt_duration(r.min),
+            r.iters
+        ));
+    }
+    out
+}
+
+/// Human-scale duration formatting (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_work() {
+        let m = bench(
+            "spin",
+            BenchConfig {
+                warmup_iters: 1,
+                min_iters: 5,
+                max_iters: 10,
+                time_budget: Duration::from_millis(50),
+            },
+            || {
+                let mut acc = 0u64;
+                for i in 0..10_000 {
+                    acc = acc.wrapping_add(i * i);
+                }
+                acc
+            },
+        );
+        assert!(m.iters >= 5);
+        assert!(m.median.as_nanos() > 0);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let m = bench(
+            "tiny",
+            BenchConfig {
+                warmup_iters: 0,
+                min_iters: 1,
+                max_iters: 7,
+                time_budget: Duration::from_secs(10),
+            },
+            || 1 + 1,
+        );
+        assert!(m.iters <= 7);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
+        let rows = vec![summarize("x", &mut [Duration::from_millis(1)])];
+        let table = format_table(&rows);
+        assert!(table.contains("median"));
+        assert!(table.contains('x'));
+    }
+}

@@ -1,0 +1,324 @@
+//! Block-wise (two-level) inference — the paper's §V-B extension.
+//!
+//! A block of `l` consecutive elements is folded into a single summary
+//! element by one "computational element" (sequentially); the small
+//! sequence of B = ⌈T/l⌉ summaries is prefix/suffix-combined; each block
+//! is then finalized with its incoming forward prefix and backward
+//! suffix. This is the schedule to use when cores ≪ T — and it is the
+//! exact protocol the coordinator's temporal sharder executes over PJRT
+//! workers (each fold/finalize becomes one artifact call).
+//!
+//! The native implementation here serves three purposes: the CPU
+//! block-wise baseline for the ablation benches, the reference the
+//! sharded PJRT path is tested against, and documentation-by-code of the
+//! §V-B algebra.
+
+use crate::elements::{
+    mp_element_chain, mp_terminal, sp_element_chain, sp_terminal, MpElement,
+    MpOp, SpElement, SpOp,
+};
+use crate::error::Result;
+use crate::exec::parallel_for_chunks;
+use crate::hmm::Hmm;
+use crate::inference::{MapEstimate, Posterior};
+use crate::linalg::{argmax, normalize_sum};
+use crate::scan::{seq_scan, seq_scan_rev, AssocOp};
+
+/// Partition of `0..t` into blocks of length `block_len` (last may be
+/// short).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockPlan {
+    pub t: usize,
+    pub block_len: usize,
+}
+
+impl BlockPlan {
+    pub fn new(t: usize, block_len: usize) -> Self {
+        Self { t, block_len: block_len.max(1) }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.t.div_ceil(self.block_len)
+    }
+
+    /// Half-open range of block `b`.
+    pub fn range(&self, b: usize) -> (usize, usize) {
+        let start = b * self.block_len;
+        (start, (start + self.block_len).min(self.t))
+    }
+
+    /// Block ranges partition `0..t` exactly (invariant; property-tested).
+    pub fn is_partition(&self) -> bool {
+        let mut expect = 0;
+        for b in 0..self.num_blocks() {
+            let (s, e) = self.range(b);
+            if s != expect || e <= s || e > self.t {
+                return false;
+            }
+            expect = e;
+        }
+        expect == self.t
+    }
+}
+
+/// Generic §V-B two-level summary computation: per-block folds, then the
+/// exclusive prefix and suffix combinations of the summaries at the
+/// leader. Returns (incoming-prefix, incoming-suffix) per block, where
+/// suffix for block b already includes `terminal`.
+pub fn block_summaries<E, Op>(
+    op: &Op,
+    elems: &[E],
+    plan: &BlockPlan,
+    terminal: E,
+    threads: usize,
+) -> (Vec<E>, Vec<E>)
+where
+    E: Clone + Send + Sync,
+    Op: AssocOp<E>,
+{
+    let nb = plan.num_blocks();
+    let mut folds: Vec<E> = vec![op.identity(); nb];
+    {
+        let out = crate::exec::SharedSliceMut::new(&mut folds);
+        parallel_for_chunks(nb, threads, |_, lo, hi| {
+            for b in lo..hi {
+                let (s, e) = plan.range(b);
+                let mut acc = elems[s].clone();
+                for x in &elems[s + 1..e] {
+                    acc = op.combine(&acc, x);
+                }
+                // SAFETY: block b written by exactly one chunk.
+                unsafe { out.write(b, acc) };
+            }
+        });
+    }
+
+    // Leader-side exclusive prefix (a_{0:s_b}) and suffix (a_{e_b:T+1}).
+    let mut prefixes = Vec::with_capacity(nb);
+    let mut acc = op.identity();
+    for f in &folds {
+        prefixes.push(acc.clone());
+        acc = op.combine(&acc, f);
+    }
+    let mut suffixes = vec![op.identity(); nb];
+    let mut acc = terminal;
+    for b in (0..nb).rev() {
+        suffixes[b] = acc.clone();
+        acc = op.combine(&folds[b], &acc);
+    }
+    (prefixes, suffixes)
+}
+
+/// SP-Blockwise — two-level parallel sum-product smoother (§V-B).
+pub fn sp_blockwise(
+    hmm: &Hmm,
+    ys: &[u32],
+    block_len: usize,
+    threads: usize,
+) -> Result<Posterior> {
+    hmm.check_observations(ys)?;
+    let d = hmm.num_states();
+    let t = ys.len();
+    let op = SpOp { d };
+    let plan = BlockPlan::new(t, block_len);
+    let elems = sp_element_chain(hmm, ys);
+
+    // Backward chain elements: ψ_{k,k+1} for k=1..T-1 (shifted) — the
+    // suffix summaries must be built over the *shifted* chain, so fold
+    // those separately.
+    let mut bwd_elems: Vec<SpElement> = elems[1..].to_vec();
+    bwd_elems.push(sp_terminal(d));
+
+    let (fwd_in, _) = block_summaries(&op, &elems, &plan, sp_terminal(d), threads);
+    let (_, bwd_in) = block_summaries(&op, &bwd_elems, &plan, op.identity(), threads);
+    // Note: bwd chain's own terminal ψ_{T,T+1} is already the last
+    // element of `bwd_elems`, so the leader suffix uses the identity as
+    // its terminal.
+
+    let nb = plan.num_blocks();
+    let mut gamma = vec![0.0f64; t * d];
+    let mut loglik_parts = vec![0.0f64; 1];
+    {
+        let out = crate::exec::SharedSliceMut::new(&mut gamma);
+        let ll = crate::exec::SharedSliceMut::new(&mut loglik_parts);
+        parallel_for_chunks(nb, threads, |_, lo, hi| {
+            for b in lo..hi {
+                let (s, e) = plan.range(b);
+                // Within-block forward prefixes and (shifted) suffixes.
+                let pref = seq_scan(&op, &elems[s..e]);
+                let suf = seq_scan_rev(&op, &bwd_elems[s..e]);
+                for k in s..e {
+                    // global fwd = fwd_in[b] ⊗ pref[k-s]
+                    let gf = op.combine(&fwd_in[b], &pref[k - s]);
+                    // global bwd = suf[k-s] ⊗ bwd_in[b]
+                    let gb = op.combine(&suf[k - s], &bwd_in[b]);
+                    // SAFETY: step k belongs to exactly one block.
+                    let g = unsafe { out.range_mut(k * d, (k + 1) * d) };
+                    for st in 0..d {
+                        g[st] = gf.mat[(0, st)] * gb.mat[(st, 0)];
+                    }
+                    normalize_sum(g);
+                    if k == plan.t - 1 {
+                        let total =
+                            gf.mat.row(0).iter().sum::<f64>().max(f64::MIN_POSITIVE);
+                        // SAFETY: only the owner of the last block writes.
+                        unsafe { ll.write(0, gf.log_scale + total.ln()) };
+                    }
+                }
+            }
+        });
+    }
+
+    Ok(Posterior::new(d, gamma, loglik_parts[0]))
+}
+
+/// MP-Blockwise — two-level parallel max-product MAP (§V-B).
+pub fn mp_blockwise(
+    hmm: &Hmm,
+    ys: &[u32],
+    block_len: usize,
+    threads: usize,
+) -> Result<MapEstimate> {
+    hmm.check_observations(ys)?;
+    let d = hmm.num_states();
+    let t = ys.len();
+    let op = MpOp { d };
+    let plan = BlockPlan::new(t, block_len);
+    let elems = mp_element_chain(hmm, ys);
+
+    let mut bwd_elems: Vec<MpElement> = elems[1..].to_vec();
+    bwd_elems.push(mp_terminal(d));
+
+    let (fwd_in, _) = block_summaries(&op, &elems, &plan, mp_terminal(d), threads);
+    let (_, bwd_in) = block_summaries(&op, &bwd_elems, &plan, op.identity(), threads);
+
+    let nb = plan.num_blocks();
+    let mut path = vec![0u32; t];
+    let mut logp_parts = vec![f64::NEG_INFINITY; 1];
+    {
+        let out = crate::exec::SharedSliceMut::new(&mut path);
+        let lp = crate::exec::SharedSliceMut::new(&mut logp_parts);
+        parallel_for_chunks(nb, threads, |_, lo, hi| {
+            for b in lo..hi {
+                let (s, e) = plan.range(b);
+                let pref = seq_scan(&op, &elems[s..e]);
+                let suf = seq_scan_rev(&op, &bwd_elems[s..e]);
+                for k in s..e {
+                    let gf = op.combine(&fwd_in[b], &pref[k - s]);
+                    let gb = op.combine(&suf[k - s], &bwd_in[b]);
+                    let delta: Vec<f64> =
+                        (0..d).map(|st| gf.mat[(0, st)] + gb.mat[(st, 0)]).collect();
+                    // SAFETY: step k belongs to exactly one block.
+                    unsafe { out.write(k, argmax(&delta) as u32) };
+                    if k == plan.t - 1 {
+                        let best = gf
+                            .mat
+                            .row(0)
+                            .iter()
+                            .fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+                        unsafe { lp.write(0, best) };
+                    }
+                }
+            }
+        });
+    }
+
+    Ok(MapEstimate { path, log_prob: logp_parts[0] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::{gilbert_elliott, sample, GeParams};
+    use crate::inference::{sp_seq, viterbi};
+    use crate::proptestx::Runner;
+    use crate::rng::Xoshiro256StarStar;
+
+    #[test]
+    fn block_plan_partitions() {
+        let mut runner = Runner::new("blockplan-partition");
+        runner.run(100, |r| {
+            let t = 1 + r.below(5000) as usize;
+            let l = 1 + r.below(300) as usize;
+            let plan = BlockPlan::new(t, l);
+            assert!(plan.is_partition(), "t={t} l={l}");
+            assert_eq!(plan.num_blocks(), t.div_ceil(l));
+        });
+    }
+
+    #[test]
+    fn sp_blockwise_equals_flat() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(31);
+        let tr = sample(&hmm, 500, &mut rng);
+        let flat = sp_seq(&hmm, &tr.observations).unwrap();
+        for block in [1usize, 7, 64, 100, 500, 1000] {
+            let two = sp_blockwise(&hmm, &tr.observations, block, 4).unwrap();
+            assert!(
+                (two.log_likelihood() - flat.log_likelihood()).abs() < 1e-9,
+                "loglik block={block}"
+            );
+            for k in 0..500 {
+                for s in 0..4 {
+                    assert!(
+                        (two.gamma(k)[s] - flat.gamma(k)[s]).abs() < 1e-9,
+                        "gamma[{k}][{s}] block={block}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mp_blockwise_equals_viterbi_logprob() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(32);
+        let tr = sample(&hmm, 400, &mut rng);
+        let vit = viterbi(&hmm, &tr.observations).unwrap();
+        for block in [3usize, 50, 128, 400] {
+            let two = mp_blockwise(&hmm, &tr.observations, block, 4).unwrap();
+            assert!(
+                (two.log_prob - vit.log_prob).abs() < 1e-9,
+                "logp block={block}"
+            );
+            // Path may differ from backtrace only at exact ties; verify
+            // every state attains the optimum by re-scoring through the
+            // δ oracle in the inference tests — here check length/range.
+            assert_eq!(two.path.len(), 400);
+            assert!(two.path.iter().all(|&s| s < 4));
+        }
+    }
+
+    #[test]
+    fn blockwise_random_models_property() {
+        let mut runner = Runner::new("blockwise-random");
+        runner.run(6, |r| {
+            use crate::proptestx::gen;
+            let d = 2 + r.below(4) as usize;
+            let m = 2 + r.below(3) as usize;
+            let t = 5 + r.below(150) as usize;
+            let block = 1 + r.below(40) as usize;
+            let pi = crate::linalg::Mat::from_vec(d, d, gen::stochastic_matrix(r, d));
+            let mut obs = crate::linalg::Mat::zeros(d, m);
+            for row in 0..d {
+                let mut vals: Vec<f64> =
+                    (0..m).map(|_| r.uniform(0.05, 1.0)).collect();
+                let s: f64 = vals.iter().sum();
+                vals.iter_mut().for_each(|v| *v /= s);
+                for (c, v) in vals.into_iter().enumerate() {
+                    obs[(row, c)] = v;
+                }
+            }
+            let hmm =
+                crate::hmm::Hmm::new(pi, obs, gen::prob_vector(r, d)).unwrap();
+            let ys = gen::obs_seq(r, m, t);
+            let flat = sp_seq(&hmm, &ys).unwrap();
+            let two = sp_blockwise(&hmm, &ys, block, 3).unwrap();
+            for k in 0..t {
+                for s in 0..d {
+                    assert!((two.gamma(k)[s] - flat.gamma(k)[s]).abs() < 1e-8);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,272 @@
+//! Declarative CLI argument parser (clap is unavailable offline —
+//! DESIGN.md §1).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`
+//! options with defaults, and positional arguments; generates usage
+//! text. Just enough structure for `hmm-scan`'s command surface, fully
+//! unit-tested.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// An option specification.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// None → boolean flag; Some(default) → value option.
+    pub default: Option<&'static str>,
+}
+
+/// A subcommand specification.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional: Vec<&'static str>,
+}
+
+/// Parsed invocation.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        let v = self
+            .get(key)
+            .ok_or_else(|| Error::usage(format!("missing --{key}")))?;
+        v.parse()
+            .map_err(|_| Error::usage(format!("--{key}: '{v}' is not an integer")))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        let v = self
+            .get(key)
+            .ok_or_else(|| Error::usage(format!("missing --{key}")))?;
+        v.parse()
+            .map_err(|_| Error::usage(format!("--{key}: '{v}' is not a number")))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+/// The application CLI: subcommands + global help.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub app: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl Cli {
+    pub fn new(app: &'static str, about: &'static str) -> Self {
+        Self { app, about, commands: Vec::new() }
+    }
+
+    pub fn command(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        opts: Vec<OptSpec>,
+        positional: Vec<&'static str>,
+    ) -> Self {
+        self.commands.push(CommandSpec { name, help, opts, positional });
+        self
+    }
+
+    /// Parse argv (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed> {
+        let Some(cmd_name) = args.first() else {
+            return Err(Error::usage(self.usage()));
+        };
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(Error::usage(self.usage()));
+        }
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| {
+                Error::usage(format!("unknown command '{cmd_name}'\n\n{}", self.usage()))
+            })?;
+
+        let mut values = BTreeMap::new();
+        for opt in &spec.opts {
+            if let Some(d) = opt.default {
+                values.insert(opt.name.to_string(), d.to_string());
+            }
+        }
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 1;
+        while i < args.len() {
+            let arg = &args[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                if key == "help" {
+                    return Err(Error::usage(self.command_usage(spec)));
+                }
+                let opt = spec.opts.iter().find(|o| o.name == key).ok_or_else(|| {
+                    Error::usage(format!(
+                        "unknown option '--{key}' for '{}'\n\n{}",
+                        spec.name,
+                        self.command_usage(spec)
+                    ))
+                })?;
+                match (&opt.default, inline_val) {
+                    (None, None) => flags.push(key.to_string()),
+                    (None, Some(_)) => {
+                        return Err(Error::usage(format!("--{key} takes no value")))
+                    }
+                    (Some(_), Some(v)) => {
+                        values.insert(key.to_string(), v);
+                    }
+                    (Some(_), None) => {
+                        i += 1;
+                        let v = args.get(i).ok_or_else(|| {
+                            Error::usage(format!("--{key} requires a value"))
+                        })?;
+                        values.insert(key.to_string(), v.clone());
+                    }
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        if positional.len() > spec.positional.len() {
+            return Err(Error::usage(format!(
+                "too many positional arguments for '{}'",
+                spec.name
+            )));
+        }
+        Ok(Parsed { command: spec.name.to_string(), values, flags, positional })
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nCommands:\n", self.app, self.about);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<10} {}\n", c.name, c.help));
+        }
+        out.push_str(&format!(
+            "\nRun `{} <command> --help` for command options.\n",
+            self.app
+        ));
+        out
+    }
+
+    fn command_usage(&self, spec: &CommandSpec) -> String {
+        let mut out = format!("{} {} — {}\n", self.app, spec.name, spec.help);
+        if !spec.positional.is_empty() {
+            out.push_str(&format!("positional: {}\n", spec.positional.join(" ")));
+        }
+        if !spec.opts.is_empty() {
+            out.push_str("options:\n");
+            for o in &spec.opts {
+                match o.default {
+                    Some(d) => out.push_str(&format!(
+                        "  --{:<14} {} [default: {d}]\n",
+                        o.name, o.help
+                    )),
+                    None => out.push_str(&format!("  --{:<14} {}\n", o.name, o.help)),
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Shorthand constructors.
+pub fn opt(name: &'static str, help: &'static str, default: &'static str) -> OptSpec {
+    OptSpec { name, help, default: Some(default) }
+}
+
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("hmm-scan", "test").command(
+            "bench",
+            "run benches",
+            vec![
+                opt("t", "sequence length", "1024"),
+                opt("out", "output dir", "results"),
+                flag("verbose", "print more"),
+            ],
+            vec!["target"],
+        )
+    }
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_overrides() {
+        let p = cli().parse(&args("bench")).unwrap();
+        assert_eq!(p.command, "bench");
+        assert_eq!(p.get_usize("t").unwrap(), 1024);
+        assert!(!p.flag("verbose"));
+
+        let p = cli().parse(&args("bench --t 99 --verbose fig3")).unwrap();
+        assert_eq!(p.get_usize("t").unwrap(), 99);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional, vec!["fig3"]);
+
+        let p = cli().parse(&args("bench --t=7")).unwrap();
+        assert_eq!(p.get_usize("t").unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_errors() {
+        assert!(cli().parse(&args("")).is_err());
+        assert!(cli().parse(&args("nope")).is_err());
+        assert!(cli().parse(&args("bench --bogus 1")).is_err());
+        assert!(cli().parse(&args("bench --t")).is_err());
+        assert!(cli().parse(&args("bench --verbose=1")).is_err());
+        assert!(cli().parse(&args("bench a b")).is_err());
+        assert!(cli().parse(&args("bench --t abc")).unwrap().get_usize("t").is_err());
+    }
+
+    #[test]
+    fn help_is_usage_error_with_text() {
+        let err = cli().parse(&args("--help")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("Commands"));
+        let err = cli().parse(&args("bench --help")).unwrap_err();
+        assert!(err.to_string().contains("--t"));
+    }
+
+    #[test]
+    fn numbers_and_floats() {
+        let c = Cli::new("x", "y").command(
+            "run",
+            "",
+            vec![opt("rate", "", "0.5")],
+            vec![],
+        );
+        let p = c.parse(&args("run --rate 0.25")).unwrap();
+        assert_eq!(p.get_f64("rate").unwrap(), 0.25);
+    }
+}

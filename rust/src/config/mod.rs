@@ -1,0 +1,168 @@
+//! Typed run configuration, loadable from JSON and overridable from the
+//! CLI. One `RunConfig` drives the launcher (`hmm-scan` subcommands),
+//! the figure benches, and the examples, so experiment parameters live
+//! in exactly one place.
+
+use std::path::PathBuf;
+
+use crate::coordinator::BatcherConfig;
+use crate::error::Result;
+use crate::hmm::GeParams;
+use crate::jsonx::Json;
+use crate::scan::ScanOptions;
+
+/// Global run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Gilbert–Elliott channel parameters (the paper's workload).
+    pub ge: GeParams,
+    /// RNG seed for workload generation.
+    pub seed: u64,
+    /// T sweep for the figure benches (paper: 10²…10⁵ log grid).
+    pub t_grid: Vec<usize>,
+    /// Threads for the native parallel algorithms.
+    pub threads: usize,
+    /// §V-B block length used by native block-wise runs.
+    pub block_len: usize,
+    /// Output directory for figures/CSVs.
+    pub out_dir: PathBuf,
+    /// XLA worker count for the coordinator.
+    pub xla_workers: usize,
+    /// Batching policy.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            ge: GeParams::default(),
+            seed: 0xC0FFEE,
+            // Paper §VI: T from 1e2 to 1e5; half-decade log grid.
+            t_grid: vec![100, 316, 1000, 3162, 10_000, 31_623, 100_000],
+            threads: crate::exec::default_parallelism(),
+            block_len: 1024,
+            out_dir: PathBuf::from("results"),
+            xla_workers: 4,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load overrides from a JSON file (missing keys keep defaults).
+    pub fn from_json_file(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let mut c = Self::default();
+        if let Some(g) = v.get("ge").as_obj() {
+            let f = |k: &str, d: f64| g.get(k).and_then(|x| x.as_f64()).unwrap_or(d);
+            c.ge = GeParams {
+                p0: f("p0", c.ge.p0),
+                p1: f("p1", c.ge.p1),
+                p2: f("p2", c.ge.p2),
+                q0: f("q0", c.ge.q0),
+                q1: f("q1", c.ge.q1),
+            };
+        }
+        if let Some(s) = v.get("seed").as_f64() {
+            c.seed = s as u64;
+        }
+        if let Some(grid) = v.get("t_grid").as_arr() {
+            c.t_grid = grid.iter().filter_map(|x| x.as_usize()).collect();
+        }
+        if let Some(t) = v.get("threads").as_usize() {
+            c.threads = t.max(1);
+        }
+        if let Some(b) = v.get("block_len").as_usize() {
+            c.block_len = b.max(1);
+        }
+        if let Some(o) = v.get("out_dir").as_str() {
+            c.out_dir = PathBuf::from(o);
+        }
+        if let Some(w) = v.get("xla_workers").as_usize() {
+            c.xla_workers = w.max(1);
+        }
+        if let Some(ms) = v.get("batch_window_ms").as_f64() {
+            c.batcher.max_delay = std::time::Duration::from_micros((ms * 1e3) as u64);
+        }
+        if let Some(mb) = v.get("max_batch").as_usize() {
+            c.batcher.max_batch = mb.max(1);
+        }
+        Ok(c)
+    }
+
+    /// Scan options derived from the thread setting.
+    pub fn scan_options(&self) -> ScanOptions {
+        ScanOptions { threads: self.threads, ..ScanOptions::default() }
+    }
+
+    /// Serialize the effective configuration (for results provenance).
+    pub fn to_json(&self) -> Json {
+        crate::jsonx::obj([
+            (
+                "ge",
+                crate::jsonx::obj([
+                    ("p0", self.ge.p0.into()),
+                    ("p1", self.ge.p1.into()),
+                    ("p2", self.ge.p2.into()),
+                    ("q0", self.ge.q0.into()),
+                    ("q1", self.ge.q1.into()),
+                ]),
+            ),
+            ("seed", (self.seed as usize).into()),
+            ("t_grid", self.t_grid.clone().into()),
+            ("threads", self.threads.into()),
+            ("block_len", self.block_len.into()),
+            ("out_dir", self.out_dir.display().to_string().into()),
+            ("xla_workers", self.xla_workers.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_setup() {
+        let c = RunConfig::default();
+        assert_eq!(c.ge, GeParams::default());
+        assert_eq!(c.t_grid.first(), Some(&100));
+        assert_eq!(c.t_grid.last(), Some(&100_000));
+    }
+
+    #[test]
+    fn json_overrides() {
+        let c = RunConfig::from_json(
+            r#"{"ge": {"p0": 0.5}, "seed": 7, "t_grid": [10, 20],
+                "threads": 2, "out_dir": "/tmp/x", "max_batch": 3}"#,
+        )
+        .unwrap();
+        assert_eq!(c.ge.p0, 0.5);
+        assert_eq!(c.ge.p1, GeParams::default().p1); // untouched
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.t_grid, vec![10, 20]);
+        assert_eq!(c.threads, 2);
+        assert_eq!(c.out_dir, PathBuf::from("/tmp/x"));
+        assert_eq!(c.batcher.max_batch, 3);
+    }
+
+    #[test]
+    fn round_trip_through_json() {
+        let c = RunConfig::default();
+        let text = c.to_json().to_string_pretty();
+        let back = RunConfig::from_json(&text).unwrap();
+        assert_eq!(back.ge, c.ge);
+        assert_eq!(back.t_grid, c.t_grid);
+        assert_eq!(back.seed, c.seed);
+    }
+
+    #[test]
+    fn rejects_invalid_json() {
+        assert!(RunConfig::from_json("{nope").is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! Serving metrics: throughput counters, latency histogram, queue gauges.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Log-scaled latency histogram (microseconds, ~2 buckets per decade)
+/// plus counters. All methods are thread-safe; snapshots are consistent
+/// enough for reporting (counters are monotone).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batched_items: AtomicU64,
+    sharded_blocks: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Point-in-time view of the metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub sharded_blocks: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean batch occupancy (items per dispatched batch).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.batches as f64
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_complete(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies_us
+            .lock()
+            .unwrap()
+            .push(latency.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    pub fn on_failure(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self, items: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
+    }
+
+    pub fn on_sharded_blocks(&self, blocks: usize) {
+        self.sharded_blocks.fetch_add(blocks as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut lat = self.latencies_us.lock().unwrap().clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                let idx = ((lat.len() as f64 - 1.0) * p).floor() as usize;
+                lat[idx]
+            }
+        };
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_items: self.batched_items.load(Ordering::Relaxed),
+            sharded_blocks: self.sharded_blocks.load(Ordering::Relaxed),
+            p50_us: pct(0.50),
+            p99_us: pct(0.99),
+            max_us: lat.last().copied().unwrap_or(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.on_request();
+            m.on_complete(Duration::from_micros(i));
+        }
+        m.on_failure();
+        m.on_batch(4);
+        m.on_batch(8);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.p50_us, 50);
+        assert_eq!(s.p99_us, 99);
+        assert_eq!(s.max_us, 100);
+        assert!((s.batch_occupancy() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.p50_us, 0);
+        assert_eq!(s.batch_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|sc| {
+            for _ in 0..8 {
+                let m = std::sync::Arc::clone(&m);
+                sc.spawn(move || {
+                    for _ in 0..1000 {
+                        m.on_request();
+                        m.on_complete(Duration::from_micros(5));
+                    }
+                });
+            }
+        });
+        let s = m.snapshot();
+        assert_eq!(s.requests, 8000);
+        assert_eq!(s.completed, 8000);
+    }
+}

@@ -1,0 +1,32 @@
+//! The coordinator — the L3 serving layer.
+//!
+//! Shapes the paper's algorithms into a deployable inference service:
+//!
+//! * [`request`] — request/response types (`DecodeRequest` → smoothing
+//!   marginals or a MAP path).
+//! * [`router`] — picks an execution plan per request: an exact-size or
+//!   padded PJRT core artifact, the native library, or a block-wise
+//!   **sharded** plan (the paper's §V-B) for sequences longer than any
+//!   compiled artifact.
+//! * [`batcher`] — dynamic batching: coalesces same-artifact requests
+//!   inside a deadline window so PJRT dispatch is amortized.
+//! * [`sharder`] — executes sharded plans: per-block fold artifacts on
+//!   the worker pool, native associative combine at the leader, per-block
+//!   finalize artifacts — the two-level scan, operationalized.
+//! * [`metrics`] — queue depth, batch occupancy, latency percentiles,
+//!   throughput counters.
+//! * [`server`] — the `Coordinator` itself: model registry, worker pool,
+//!   synchronous and batched entry points, and a channel-fed serve loop.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod sharder;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{Algo, DecodeRequest, DecodeResponse, DecodeResult, ExecMode};
+pub use router::{ExecutionPlan, Router, RouterConfig};
+pub use server::{Coordinator, CoordinatorConfig};

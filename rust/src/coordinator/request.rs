@@ -1,0 +1,129 @@
+//! Request/response types for the decode service.
+
+use crate::inference::{MapEstimate, Posterior};
+
+/// Which inference task to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Smoothing marginals p(x_k | y_{1:T}) — sum-product family.
+    Smooth,
+    /// MAP path — max-product / Viterbi family.
+    Map,
+    /// Smoothing via the Bayesian (filter + RTS) formulation.
+    BayesSmooth,
+}
+
+impl Algo {
+    /// The parallel core-artifact entry serving this task.
+    pub fn par_entry(self) -> &'static str {
+        match self {
+            Algo::Smooth => "sp_par",
+            Algo::Map => "mp_par",
+            Algo::BayesSmooth => "bs_par",
+        }
+    }
+
+    /// The sequential core-artifact entry (ablation / router fallback).
+    pub fn seq_entry(self) -> &'static str {
+        match self {
+            Algo::Smooth => "sp_seq",
+            Algo::Map => "viterbi",
+            Algo::BayesSmooth => "bs_seq",
+        }
+    }
+}
+
+/// How the router may execute a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Router decides: PJRT artifact when one fits, sharded beyond the
+    /// largest artifact, native as last resort.
+    #[default]
+    Auto,
+    /// Force the native-Rust algorithm library.
+    Native,
+    /// Force a (possibly padded) PJRT core artifact; error if none fits.
+    Pjrt,
+    /// Force the §V-B sharded plan; error if block artifacts are absent.
+    Sharded,
+}
+
+/// A decode request.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    /// Caller-chosen id, echoed in the response.
+    pub id: u64,
+    /// Model registry key.
+    pub model: String,
+    /// Observation symbols (length T ≥ 1).
+    pub ys: Vec<u32>,
+    pub algo: Algo,
+    pub mode: ExecMode,
+}
+
+impl DecodeRequest {
+    pub fn new(id: u64, model: impl Into<String>, ys: Vec<u32>, algo: Algo) -> Self {
+        Self { id, model: model.into(), ys, algo, mode: ExecMode::Auto }
+    }
+
+    pub fn with_mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
+        self
+    }
+}
+
+/// Decode output payload.
+#[derive(Debug, Clone)]
+pub enum DecodeResult {
+    Posterior(Posterior),
+    Map(MapEstimate),
+}
+
+impl DecodeResult {
+    pub fn as_posterior(&self) -> Option<&Posterior> {
+        match self {
+            DecodeResult::Posterior(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&MapEstimate> {
+        match self {
+            DecodeResult::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// A served response.
+#[derive(Debug, Clone)]
+pub struct DecodeResponse {
+    pub id: u64,
+    pub result: DecodeResult,
+    /// Human-readable description of the plan that served the request
+    /// ("pjrt:sp_par_T1024_D4_M2 pad=24", "sharded:blocks=8", "native").
+    pub plan: String,
+    /// Wall time spent executing the plan.
+    pub elapsed: std::time::Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_names() {
+        assert_eq!(Algo::Smooth.par_entry(), "sp_par");
+        assert_eq!(Algo::Map.par_entry(), "mp_par");
+        assert_eq!(Algo::BayesSmooth.par_entry(), "bs_par");
+        assert_eq!(Algo::Map.seq_entry(), "viterbi");
+    }
+
+    #[test]
+    fn request_builder() {
+        let r = DecodeRequest::new(7, "ge", vec![0, 1], Algo::Map)
+            .with_mode(ExecMode::Native);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.mode, ExecMode::Native);
+    }
+}

@@ -1,0 +1,320 @@
+//! The router: request → execution plan.
+//!
+//! Plan selection (`ExecMode::Auto`):
+//! 1. an exact- or padded-size PJRT **core artifact** if any compiled
+//!    (entry, D, M) variant has capacity ≥ T (tightest capacity wins —
+//!    identity-element padding makes shorter sequences exact, see
+//!    python/compile/model.py);
+//! 2. otherwise, if block artifacts exist for (D, M), a **sharded** plan
+//!    (paper §V-B): ⌈T/L⌉ blocks of the compiled block length L;
+//! 3. otherwise the **native** library.
+//!
+//! Invariants (property-tested below): every plan covers the full
+//! request; sharded block ranges partition [0, T); padding never exceeds
+//! the chosen artifact's capacity.
+
+use crate::blockwise::BlockPlan;
+use crate::error::{Error, Result};
+use crate::runtime::Manifest;
+
+use super::request::{Algo, DecodeRequest, ExecMode};
+
+/// Router tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Prefer sequential-entry artifacts below this T (tiny requests are
+    /// dominated by dispatch, where the lax.scan artifact is leaner).
+    pub seq_below: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self { seq_below: 0 }
+    }
+}
+
+/// A resolved execution plan.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecutionPlan {
+    /// Run one core artifact, padding the sequence to its capacity.
+    PjrtCore { artifact: String, capacity: usize },
+    /// §V-B sharded execution over block artifacts.
+    Sharded {
+        fold_first: String,
+        fold_mid: String,
+        finalize_first: String,
+        finalize_mid: String,
+        block_len: usize,
+        num_blocks: usize,
+    },
+    /// Native-Rust algorithm library.
+    Native,
+}
+
+impl ExecutionPlan {
+    /// Short human-readable tag for responses/metrics.
+    pub fn describe(&self, t: usize) -> String {
+        match self {
+            ExecutionPlan::PjrtCore { artifact, capacity } => {
+                format!("pjrt:{artifact} pad={}", capacity - t)
+            }
+            ExecutionPlan::Sharded { block_len, num_blocks, .. } => {
+                format!("sharded:blocks={num_blocks} len={block_len}")
+            }
+            ExecutionPlan::Native => "native".to_string(),
+        }
+    }
+}
+
+/// Stateless planner over a manifest.
+#[derive(Debug, Clone)]
+pub struct Router {
+    config: RouterConfig,
+}
+
+impl Router {
+    pub fn new(config: RouterConfig) -> Self {
+        Self { config }
+    }
+
+    /// Plan a request for a model with `d` states and `m` symbols.
+    pub fn plan(
+        &self,
+        manifest: Option<&Manifest>,
+        req: &DecodeRequest,
+        d: usize,
+        m: usize,
+    ) -> Result<ExecutionPlan> {
+        let t = req.ys.len();
+        if t == 0 {
+            return Err(Error::invalid_request("empty sequence"));
+        }
+        match req.mode {
+            ExecMode::Native => Ok(ExecutionPlan::Native),
+            ExecMode::Pjrt => {
+                let manifest = manifest
+                    .ok_or_else(|| Error::artifact("no artifacts loaded"))?;
+                self.core_plan(manifest, req.algo, t, d, m).ok_or_else(|| {
+                    Error::artifact(format!(
+                        "no core artifact covers T={t} (entry {}, D={d}, M={m})",
+                        req.algo.par_entry()
+                    ))
+                })
+            }
+            ExecMode::Sharded => {
+                let manifest = manifest
+                    .ok_or_else(|| Error::artifact("no artifacts loaded"))?;
+                self.sharded_plan(manifest, req.algo, t, d, m).ok_or_else(|| {
+                    Error::artifact(format!(
+                        "no block artifacts for algo {:?} at D={d}, M={m}",
+                        req.algo
+                    ))
+                })
+            }
+            ExecMode::Auto => {
+                if let Some(manifest) = manifest {
+                    if let Some(plan) = self.core_plan(manifest, req.algo, t, d, m) {
+                        return Ok(plan);
+                    }
+                    if let Some(plan) = self.sharded_plan(manifest, req.algo, t, d, m)
+                    {
+                        return Ok(plan);
+                    }
+                }
+                Ok(ExecutionPlan::Native)
+            }
+        }
+    }
+
+    fn core_plan(
+        &self,
+        manifest: &Manifest,
+        algo: Algo,
+        t: usize,
+        d: usize,
+        m: usize,
+    ) -> Option<ExecutionPlan> {
+        let entry = if t < self.config.seq_below {
+            algo.seq_entry()
+        } else {
+            algo.par_entry()
+        };
+        let spec = manifest
+            .smallest_covering(entry, t, d, m)
+            .or_else(|| manifest.smallest_covering(algo.par_entry(), t, d, m))?;
+        Some(ExecutionPlan::PjrtCore {
+            artifact: spec.name.clone(),
+            capacity: spec.t,
+        })
+    }
+
+    fn sharded_plan(
+        &self,
+        manifest: &Manifest,
+        algo: Algo,
+        t: usize,
+        d: usize,
+        m: usize,
+    ) -> Option<ExecutionPlan> {
+        // BayesSmooth has no block decomposition compiled; SP covers it
+        // numerically (identical marginals), so route it through SP.
+        let family = match algo {
+            Algo::Map => "mp",
+            Algo::Smooth | Algo::BayesSmooth => "sp",
+        };
+        let fold_first = manifest.block(&format!("{family}_block_fold_first"), d, m)?;
+        let fold_mid = manifest.block(&format!("{family}_block_fold_mid"), d, m)?;
+        let fin_first =
+            manifest.block(&format!("{family}_block_finalize_first"), d, m)?;
+        let fin_mid = manifest.block(&format!("{family}_block_finalize_mid"), d, m)?;
+        let block_len = fold_first.t;
+        debug_assert_eq!(block_len, fold_mid.t);
+        let plan = BlockPlan::new(t, block_len);
+        Some(ExecutionPlan::Sharded {
+            fold_first: fold_first.name.clone(),
+            fold_mid: fold_mid.name.clone(),
+            finalize_first: fin_first.name.clone(),
+            finalize_mid: fin_mid.name.clone(),
+            block_len,
+            num_blocks: plan.num_blocks(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::DecodeRequest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        let json = r#"{
+          "version": 1, "interchange": "hlo-text",
+          "artifacts": [
+            {"name": "sp_par_T128", "entry": "sp_par", "kind": "core",
+             "t": 128, "d": 4, "m": 2, "path": "a", "inputs": [], "outputs": []},
+            {"name": "sp_par_T1024", "entry": "sp_par", "kind": "core",
+             "t": 1024, "d": 4, "m": 2, "path": "a", "inputs": [], "outputs": []},
+            {"name": "mp_par_T128", "entry": "mp_par", "kind": "core",
+             "t": 128, "d": 4, "m": 2, "path": "a", "inputs": [], "outputs": []},
+            {"name": "ff", "entry": "sp_block_fold_first", "kind": "block",
+             "t": 256, "d": 4, "m": 2, "path": "a", "inputs": [], "outputs": []},
+            {"name": "fm", "entry": "sp_block_fold_mid", "kind": "block",
+             "t": 256, "d": 4, "m": 2, "path": "a", "inputs": [], "outputs": []},
+            {"name": "zf", "entry": "sp_block_finalize_first", "kind": "block",
+             "t": 256, "d": 4, "m": 2, "path": "a", "inputs": [], "outputs": []},
+            {"name": "zm", "entry": "sp_block_finalize_mid", "kind": "block",
+             "t": 256, "d": 4, "m": 2, "path": "a", "inputs": [], "outputs": []}
+          ]
+        }"#;
+        Manifest::parse(json, PathBuf::from("/x")).unwrap()
+    }
+
+    fn req(t: usize, algo: Algo) -> DecodeRequest {
+        DecodeRequest::new(1, "ge", vec![0; t], algo)
+    }
+
+    #[test]
+    fn picks_tightest_core_artifact() {
+        let m = manifest();
+        let r = Router::new(RouterConfig::default());
+        let plan = r.plan(Some(&m), &req(100, Algo::Smooth), 4, 2).unwrap();
+        assert_eq!(
+            plan,
+            ExecutionPlan::PjrtCore { artifact: "sp_par_T128".into(), capacity: 128 }
+        );
+        let plan = r.plan(Some(&m), &req(129, Algo::Smooth), 4, 2).unwrap();
+        assert_eq!(
+            plan,
+            ExecutionPlan::PjrtCore { artifact: "sp_par_T1024".into(), capacity: 1024 }
+        );
+    }
+
+    #[test]
+    fn shards_beyond_largest_artifact() {
+        let m = manifest();
+        let r = Router::new(RouterConfig::default());
+        let plan = r.plan(Some(&m), &req(5000, Algo::Smooth), 4, 2).unwrap();
+        match plan {
+            ExecutionPlan::Sharded { block_len, num_blocks, .. } => {
+                assert_eq!(block_len, 256);
+                assert_eq!(num_blocks, 5000usize.div_ceil(256));
+            }
+            other => panic!("expected sharded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn falls_back_to_native() {
+        let m = manifest();
+        let r = Router::new(RouterConfig::default());
+        // MAP has no block artifacts in this manifest and T exceeds the
+        // only mp core artifact.
+        let plan = r.plan(Some(&m), &req(5000, Algo::Map), 4, 2).unwrap();
+        assert_eq!(plan, ExecutionPlan::Native);
+        // No manifest at all.
+        let plan = r.plan(None, &req(10, Algo::Smooth), 4, 2).unwrap();
+        assert_eq!(plan, ExecutionPlan::Native);
+        // Wrong dimensions.
+        let plan = r.plan(Some(&m), &req(10, Algo::Smooth), 8, 2).unwrap();
+        assert_eq!(plan, ExecutionPlan::Native);
+    }
+
+    #[test]
+    fn forced_modes() {
+        let m = manifest();
+        let r = Router::new(RouterConfig::default());
+        let plan = r
+            .plan(Some(&m), &req(10, Algo::Smooth).with_mode(ExecMode::Native), 4, 2)
+            .unwrap();
+        assert_eq!(plan, ExecutionPlan::Native);
+        assert!(r
+            .plan(Some(&m), &req(5000, Algo::Smooth).with_mode(ExecMode::Pjrt), 4, 2)
+            .is_err());
+        assert!(r
+            .plan(Some(&m), &req(50, Algo::Map).with_mode(ExecMode::Sharded), 4, 2)
+            .is_err());
+        assert!(r
+            .plan(None, &req(50, Algo::Smooth).with_mode(ExecMode::Pjrt), 4, 2)
+            .is_err());
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let r = Router::new(RouterConfig::default());
+        assert!(r.plan(None, &req(0, Algo::Smooth), 4, 2).is_err());
+    }
+
+    #[test]
+    fn plan_always_covers_request_property() {
+        let m = manifest();
+        let r = Router::new(RouterConfig::default());
+        let mut runner = crate::proptestx::Runner::new("router-covers");
+        runner.run(200, |rng| {
+            let t = 1 + rng.below(20_000) as usize;
+            let algo = match rng.below(3) {
+                0 => Algo::Smooth,
+                1 => Algo::Map,
+                _ => Algo::BayesSmooth,
+            };
+            let plan = r.plan(Some(&m), &req(t, algo), 4, 2).unwrap();
+            match plan {
+                ExecutionPlan::PjrtCore { capacity, .. } => assert!(capacity >= t),
+                ExecutionPlan::Sharded { block_len, num_blocks, .. } => {
+                    assert!(block_len * num_blocks >= t);
+                    assert!(block_len * (num_blocks - 1) < t, "no empty blocks");
+                    let bp = crate::blockwise::BlockPlan::new(t, block_len);
+                    assert!(bp.is_partition());
+                }
+                ExecutionPlan::Native => {}
+            }
+        });
+    }
+
+    #[test]
+    fn describe_strings() {
+        let p = ExecutionPlan::PjrtCore { artifact: "x".into(), capacity: 128 };
+        assert_eq!(p.describe(100), "pjrt:x pad=28");
+        assert_eq!(ExecutionPlan::Native.describe(5), "native");
+    }
+}

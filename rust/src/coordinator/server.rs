@@ -1,0 +1,676 @@
+//! The coordinator server: XLA worker pool, model registry, decode entry
+//! points, and the channel-fed serve loop.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::hmm::Hmm;
+use crate::inference::{self, Posterior};
+use crate::runtime::{Manifest, Registry, Value};
+use crate::scan::ScanOptions;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{Algo, DecodeRequest, DecodeResponse, DecodeResult};
+use super::router::{ExecutionPlan, Router, RouterConfig};
+use super::sharder::{self, ArtifactExec, ShardedArtifacts};
+
+// ===========================================================================
+// XLA worker pool
+// ===========================================================================
+
+struct Job {
+    artifact: String,
+    inputs: Vec<Value>,
+    reply: mpsc::Sender<Result<Vec<Value>>>,
+}
+
+/// Pool of threads each owning a private PJRT client + executable cache
+/// (`xla::PjRtClient` is `Rc`-based and cannot cross threads, so worker
+/// isolation is per-thread by construction). Jobs are distributed over a
+/// shared queue; per-worker caches converge to the hot artifact set.
+pub struct XlaPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl XlaPool {
+    pub fn new(dir: PathBuf, workers: usize) -> Result<Self> {
+        // Validate the manifest once up front for a fast, typed failure.
+        Manifest::load(&dir)?;
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..workers.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let dir = dir.clone();
+                thread::Builder::new()
+                    .name(format!("xla-worker-{i}"))
+                    .spawn(move || {
+                        let registry = Registry::open(dir);
+                        loop {
+                            let job = {
+                                let guard = rx.lock().expect("xla queue poisoned");
+                                guard.recv()
+                            };
+                            let Ok(job) = job else { break };
+                            let result = match &registry {
+                                Ok(reg) => reg
+                                    .get(&job.artifact)
+                                    .and_then(|exe| exe.run(&job.inputs)),
+                                Err(e) => Err(Error::xla(format!(
+                                    "worker init failed: {e}"
+                                ))),
+                            };
+                            let _ = job.reply.send(result);
+                        }
+                    })
+                    .expect("spawn xla worker")
+            })
+            .collect();
+        Ok(Self { tx: Some(tx), workers })
+    }
+
+    /// Submit a job; returns the reply channel.
+    pub fn submit(
+        &self,
+        artifact: &str,
+        inputs: Vec<Value>,
+    ) -> mpsc::Receiver<Result<Vec<Value>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Job { artifact: artifact.to_string(), inputs, reply })
+            .expect("xla queue closed");
+        rx
+    }
+}
+
+impl Drop for XlaPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl ArtifactExec for XlaPool {
+    fn run(&self, artifact: &str, inputs: Vec<Value>) -> Result<Vec<Value>> {
+        self.submit(artifact, inputs)
+            .recv()
+            .map_err(|_| Error::coordinator("xla worker dropped reply"))?
+    }
+
+    fn run_many(&self, jobs: Vec<(String, Vec<Value>)>) -> Vec<Result<Vec<Value>>> {
+        // Dispatch everything, then collect — folds/finalizes of a
+        // sharded plan run genuinely concurrently across workers.
+        let rxs: Vec<_> = jobs
+            .into_iter()
+            .map(|(a, i)| self.submit(&a, i))
+            .collect();
+        rxs.into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .map_err(|_| Error::coordinator("xla worker dropped reply"))?
+            })
+            .collect()
+    }
+}
+
+// ===========================================================================
+// Coordinator
+// ===========================================================================
+
+/// Coordinator construction parameters.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Artifacts directory; `None` disables PJRT (native-only serving).
+    pub artifacts: Option<PathBuf>,
+    /// XLA worker threads (each owns a PJRT client).
+    pub xla_workers: usize,
+    pub batcher: BatcherConfig,
+    pub router: RouterConfig,
+    /// Threading for the native algorithm library.
+    pub scan: ScanOptions,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            artifacts: {
+                let dir = crate::runtime::artifacts_dir();
+                dir.join("manifest.json").exists().then_some(dir)
+            },
+            xla_workers: 4,
+            batcher: BatcherConfig::default(),
+            router: RouterConfig::default(),
+            scan: ScanOptions::default(),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Native-only configuration (no artifacts required).
+    pub fn native_only() -> Self {
+        Self { artifacts: None, ..Default::default() }
+    }
+}
+
+/// The inference service.
+pub struct Coordinator {
+    manifest: Option<Manifest>,
+    pool: Option<XlaPool>,
+    router: Router,
+    models: RwLock<BTreeMap<String, Arc<Hmm>>>,
+    metrics: Arc<Metrics>,
+    scan: ScanOptions,
+    batcher_config: BatcherConfig,
+}
+
+impl Coordinator {
+    pub fn new(config: CoordinatorConfig) -> Result<Self> {
+        let (manifest, pool) = match &config.artifacts {
+            Some(dir) => {
+                let manifest = Manifest::load(dir)?;
+                let pool = XlaPool::new(dir.clone(), config.xla_workers)?;
+                (Some(manifest), Some(pool))
+            }
+            None => (None, None),
+        };
+        Ok(Self {
+            manifest,
+            pool,
+            router: Router::new(config.router),
+            models: RwLock::new(BTreeMap::new()),
+            metrics: Arc::new(Metrics::new()),
+            scan: config.scan,
+            batcher_config: config.batcher,
+        })
+    }
+
+    pub fn register_model(&self, id: impl Into<String>, hmm: Hmm) {
+        self.models.write().unwrap().insert(id.into(), Arc::new(hmm));
+    }
+
+    pub fn model(&self, id: &str) -> Result<Arc<Hmm>> {
+        self.models
+            .read()
+            .unwrap()
+            .get(id)
+            .cloned()
+            .ok_or_else(|| Error::invalid_request(format!("unknown model '{id}'")))
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn manifest(&self) -> Option<&Manifest> {
+        self.manifest.as_ref()
+    }
+
+    /// Resolve the plan a request would execute (exposed for tests/CLI).
+    pub fn plan_for(&self, req: &DecodeRequest) -> Result<ExecutionPlan> {
+        let hmm = self.model(&req.model)?;
+        hmm.check_observations(&req.ys)?;
+        self.router.plan(
+            self.manifest.as_ref(),
+            req,
+            hmm.num_states(),
+            hmm.num_symbols(),
+        )
+    }
+
+    /// Serve one request synchronously.
+    pub fn decode(&self, req: DecodeRequest) -> Result<DecodeResponse> {
+        self.metrics.on_request();
+        let start = Instant::now();
+        let result = self.execute(&req);
+        match result {
+            Ok((result, plan)) => {
+                let elapsed = start.elapsed();
+                self.metrics.on_complete(elapsed);
+                Ok(DecodeResponse { id: req.id, result, plan, elapsed })
+            }
+            Err(e) => {
+                self.metrics.on_failure();
+                Err(e)
+            }
+        }
+    }
+
+    /// Serve a group of requests through the batcher: requests that
+    /// resolve to the same artifact are dispatched back-to-back so the
+    /// XLA pool executes them concurrently.
+    pub fn decode_many(
+        &self,
+        reqs: Vec<DecodeRequest>,
+    ) -> Vec<Result<DecodeResponse>> {
+        let mut batcher: Batcher<(usize, DecodeRequest)> =
+            Batcher::new(self.batcher_config);
+        let now = Instant::now();
+        let mut batches = Vec::new();
+        for (idx, req) in reqs.into_iter().enumerate() {
+            let key = match self.plan_for(&req) {
+                Ok(plan) => plan_key(&plan),
+                Err(_) => "invalid".to_string(), // decode() reports the error
+            };
+            if let Some(b) = batcher.push(&key, (idx, req), now) {
+                batches.push(b);
+            }
+        }
+        batches.extend(batcher.flush_all());
+
+        let mut out: Vec<Option<Result<DecodeResponse>>> = Vec::new();
+        for batch in &batches {
+            self.metrics.on_batch(batch.items.len());
+            out.resize_with(
+                out.len().max(batch.items.iter().map(|(i, _)| i + 1).max().unwrap_or(0)),
+                || None,
+            );
+        }
+        for batch in batches {
+            for (idx, req) in batch.items {
+                let resp = self.decode(req);
+                if idx >= out.len() {
+                    out.resize_with(idx + 1, || None);
+                }
+                out[idx] = Some(resp);
+            }
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(Error::coordinator("lost request"))))
+            .collect()
+    }
+
+    fn execute(&self, req: &DecodeRequest) -> Result<(DecodeResult, String)> {
+        let hmm = self.model(&req.model)?;
+        hmm.check_observations(&req.ys)?;
+        let plan = self.router.plan(
+            self.manifest.as_ref(),
+            req,
+            hmm.num_states(),
+            hmm.num_symbols(),
+        )?;
+        let tag = plan.describe(req.ys.len());
+        let result = match &plan {
+            ExecutionPlan::Native => self.run_native(&hmm, req)?,
+            ExecutionPlan::PjrtCore { artifact, capacity } => {
+                self.run_pjrt_core(&hmm, req, artifact, *capacity)?
+            }
+            ExecutionPlan::Sharded {
+                fold_first,
+                fold_mid,
+                finalize_first,
+                finalize_mid,
+                block_len,
+                num_blocks,
+            } => {
+                self.metrics.on_sharded_blocks(*num_blocks);
+                let arts = ShardedArtifacts {
+                    fold_first: fold_first.clone(),
+                    fold_mid: fold_mid.clone(),
+                    finalize_first: finalize_first.clone(),
+                    finalize_mid: finalize_mid.clone(),
+                    block_len: *block_len,
+                };
+                let pool = self
+                    .pool
+                    .as_ref()
+                    .ok_or_else(|| Error::coordinator("no xla pool"))?;
+                match req.algo {
+                    Algo::Map => {
+                        let (est, _) = sharder::mp_sharded(pool, &arts, &hmm, &req.ys)?;
+                        DecodeResult::Map(est)
+                    }
+                    Algo::Smooth | Algo::BayesSmooth => {
+                        let (post, _) =
+                            sharder::sp_sharded(pool, &arts, &hmm, &req.ys)?;
+                        DecodeResult::Posterior(post)
+                    }
+                }
+            }
+        };
+        Ok((result, tag))
+    }
+
+    fn run_native(&self, hmm: &Hmm, req: &DecodeRequest) -> Result<DecodeResult> {
+        Ok(match req.algo {
+            Algo::Smooth => {
+                DecodeResult::Posterior(inference::sp_par(hmm, &req.ys, self.scan)?)
+            }
+            Algo::BayesSmooth => {
+                DecodeResult::Posterior(inference::bs_par(hmm, &req.ys, self.scan)?)
+            }
+            Algo::Map => DecodeResult::Map(inference::mp_par(hmm, &req.ys, self.scan)?),
+        })
+    }
+
+    fn run_pjrt_core(
+        &self,
+        hmm: &Hmm,
+        req: &DecodeRequest,
+        artifact: &str,
+        capacity: usize,
+    ) -> Result<DecodeResult> {
+        let pool = self
+            .pool
+            .as_ref()
+            .ok_or_else(|| Error::coordinator("no xla pool"))?;
+        let t = req.ys.len();
+        let d = hmm.num_states();
+        let inputs = sharder::marshal_block(hmm, &req.ys, capacity);
+        let out = pool.run(artifact, inputs)?;
+        Ok(match req.algo {
+            Algo::Smooth | Algo::BayesSmooth => {
+                let g = out[0].as_f32()?;
+                let loglik = out[1].scalar()?;
+                let mut gamma = vec![0.0f64; t * d];
+                for k in 0..t {
+                    for s in 0..d {
+                        gamma[k * d + s] = g[k * d + s] as f64;
+                    }
+                }
+                DecodeResult::Posterior(Posterior::new(d, gamma, loglik))
+            }
+            Algo::Map => {
+                let p = out[0].as_i32()?;
+                let log_prob = out[1].scalar()?;
+                let path = p[..t]
+                    .iter()
+                    .map(|&v| {
+                        if v < 0 || v as usize >= d {
+                            Err(Error::xla(format!("state {v} out of range")))
+                        } else {
+                            Ok(v as u32)
+                        }
+                    })
+                    .collect::<Result<Vec<u32>>>()?;
+                DecodeResult::Map(crate::inference::MapEstimate { path, log_prob })
+            }
+        })
+    }
+
+    /// Spawn the serve loop on its own thread; returns a submit handle.
+    pub fn serve(self: Arc<Self>) -> ServerHandle {
+        let (tx, rx) = mpsc::channel::<ServerMsg>();
+        let coord = Arc::clone(&self);
+        let join = thread::Builder::new()
+            .name("hmm-scan-server".into())
+            .spawn(move || {
+                let mut batcher: Batcher<Envelope> =
+                    Batcher::new(coord.batcher_config);
+                loop {
+                    // Poll with a timeout bounded by the earliest batch
+                    // deadline (backpressure: queue depth is bounded by
+                    // the channel + batcher occupancy).
+                    let timeout = batcher
+                        .next_deadline()
+                        .map(|d| d.saturating_duration_since(Instant::now()))
+                        .unwrap_or(Duration::from_millis(50));
+                    match rx.recv_timeout(timeout) {
+                        Ok(ServerMsg::Request(req, reply)) => {
+                            let key = match coord.plan_for(&req) {
+                                Ok(plan) => plan_key(&plan),
+                                Err(e) => {
+                                    coord.metrics.on_failure();
+                                    let _ = reply.send(Err(e));
+                                    continue;
+                                }
+                            };
+                            if let Some(batch) =
+                                batcher.push(&key, Envelope { req, reply }, Instant::now())
+                            {
+                                coord.metrics.on_batch(batch.items.len());
+                                for env in batch.items {
+                                    let resp = coord.decode(env.req);
+                                    let _ = env.reply.send(resp);
+                                }
+                            }
+                        }
+                        Ok(ServerMsg::Shutdown) => {
+                            for batch in batcher.flush_all() {
+                                coord.metrics.on_batch(batch.items.len());
+                                for env in batch.items {
+                                    let resp = coord.decode(env.req);
+                                    let _ = env.reply.send(resp);
+                                }
+                            }
+                            break;
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            for batch in batcher.flush_due(Instant::now()) {
+                                coord.metrics.on_batch(batch.items.len());
+                                for env in batch.items {
+                                    let resp = coord.decode(env.req);
+                                    let _ = env.reply.send(resp);
+                                }
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            })
+            .expect("spawn server");
+        ServerHandle { tx, join: Some(join) }
+    }
+}
+
+fn plan_key(plan: &ExecutionPlan) -> String {
+    match plan {
+        ExecutionPlan::PjrtCore { artifact, .. } => format!("pjrt:{artifact}"),
+        ExecutionPlan::Sharded { fold_mid, .. } => format!("sharded:{fold_mid}"),
+        ExecutionPlan::Native => "native".to_string(),
+    }
+}
+
+struct Envelope {
+    req: DecodeRequest,
+    reply: mpsc::Sender<Result<DecodeResponse>>,
+}
+
+enum ServerMsg {
+    Request(DecodeRequest, mpsc::Sender<Result<DecodeResponse>>),
+    Shutdown,
+}
+
+/// Handle to a running serve loop.
+pub struct ServerHandle {
+    tx: mpsc::Sender<ServerMsg>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// Submit a request; the response arrives on the returned channel.
+    pub fn submit(&self, req: DecodeRequest) -> mpsc::Receiver<Result<DecodeResponse>> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(ServerMsg::Request(req, reply));
+        rx
+    }
+
+    /// Drain and stop the serve loop.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(ServerMsg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ServerMsg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ExecMode;
+    use crate::hmm::{gilbert_elliott, sample, GeParams};
+    use crate::rng::Xoshiro256StarStar;
+
+    fn native_coord() -> Coordinator {
+        let c = Coordinator::new(CoordinatorConfig::native_only()).unwrap();
+        c.register_model("ge", gilbert_elliott(GeParams::default()));
+        c
+    }
+
+    #[test]
+    fn native_decode_smoke() {
+        let c = native_coord();
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(51);
+        let tr = sample(&hmm, 200, &mut rng);
+        let resp = c
+            .decode(DecodeRequest::new(1, "ge", tr.observations.clone(), Algo::Smooth))
+            .unwrap();
+        assert_eq!(resp.id, 1);
+        assert_eq!(resp.plan, "native");
+        let post = resp.result.as_posterior().unwrap();
+        assert_eq!(post.len(), 200);
+        let native = crate::inference::sp_seq(&hmm, &tr.observations).unwrap();
+        assert!((post.log_likelihood() - native.log_likelihood()).abs() < 1e-9);
+
+        let resp = c
+            .decode(DecodeRequest::new(2, "ge", tr.observations.clone(), Algo::Map))
+            .unwrap();
+        let est = resp.result.as_map().unwrap();
+        assert_eq!(est.path.len(), 200);
+    }
+
+    #[test]
+    fn unknown_model_and_bad_obs() {
+        let c = native_coord();
+        assert!(c.decode(DecodeRequest::new(1, "none", vec![0], Algo::Map)).is_err());
+        assert!(c.decode(DecodeRequest::new(1, "ge", vec![9], Algo::Map)).is_err());
+        assert!(c.decode(DecodeRequest::new(1, "ge", vec![], Algo::Map)).is_err());
+        assert_eq!(c.metrics().snapshot().failed, 3);
+    }
+
+    #[test]
+    fn decode_many_preserves_order() {
+        let c = native_coord();
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(52);
+        let reqs: Vec<DecodeRequest> = (0..10)
+            .map(|i| {
+                let tr = sample(&hmm, 50 + (i as usize % 3) * 10, &mut rng);
+                DecodeRequest::new(i, "ge", tr.observations, Algo::Smooth)
+            })
+            .collect();
+        let out = c.decode_many(reqs);
+        assert_eq!(out.len(), 10);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.as_ref().unwrap().id, i as u64);
+        }
+    }
+
+    // ---- PJRT-backed tests (skip when artifacts are absent) ----
+
+    fn pjrt_coord() -> Option<Coordinator> {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts at {dir:?}");
+            return None;
+        }
+        let c = Coordinator::new(CoordinatorConfig {
+            artifacts: Some(dir),
+            xla_workers: 2,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        c.register_model("ge", gilbert_elliott(GeParams::default()));
+        Some(c)
+    }
+
+    #[test]
+    fn pjrt_core_decode_matches_native() {
+        let Some(c) = pjrt_coord() else { return };
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(53);
+        let tr = sample(&hmm, 100, &mut rng); // pads into T=128 artifact
+        let req = DecodeRequest::new(1, "ge", tr.observations.clone(), Algo::Smooth)
+            .with_mode(ExecMode::Pjrt);
+        let resp = c.decode(req).unwrap();
+        assert!(resp.plan.starts_with("pjrt:sp_par_T128"), "{}", resp.plan);
+        let post = resp.result.as_posterior().unwrap();
+        let native = crate::inference::sp_seq(&hmm, &tr.observations).unwrap();
+        for k in 0..100 {
+            for s in 0..4 {
+                assert!((post.gamma(k)[s] - native.gamma(k)[s]).abs() < 1e-4);
+            }
+        }
+        assert!(
+            (post.log_likelihood() - native.log_likelihood()).abs()
+                < 1e-3 * native.log_likelihood().abs()
+        );
+    }
+
+    #[test]
+    fn sharded_decode_matches_native() {
+        let Some(c) = pjrt_coord() else { return };
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(54);
+        // Longer than the largest (8192) core artifact → sharded.
+        let tr = sample(&hmm, 10_000, &mut rng);
+        let req = DecodeRequest::new(1, "ge", tr.observations.clone(), Algo::Smooth);
+        let plan = c.plan_for(&req).unwrap();
+        assert!(matches!(plan, ExecutionPlan::Sharded { .. }), "{plan:?}");
+        let resp = c.decode(req).unwrap();
+        let post = resp.result.as_posterior().unwrap();
+        let native = crate::inference::sp_seq(&hmm, &tr.observations).unwrap();
+        let mut max_err = 0.0f64;
+        for k in 0..10_000 {
+            for s in 0..4 {
+                max_err = max_err.max((post.gamma(k)[s] - native.gamma(k)[s]).abs());
+            }
+        }
+        assert!(max_err < 1e-3, "sharded smoother max err {max_err}");
+        assert!(c.metrics().snapshot().sharded_blocks > 0);
+
+        // MAP, sharded.
+        let req = DecodeRequest::new(2, "ge", tr.observations.clone(), Algo::Map);
+        let resp = c.decode(req).unwrap();
+        let est = resp.result.as_map().unwrap();
+        let native = crate::inference::viterbi(&hmm, &tr.observations).unwrap();
+        assert!(
+            (est.log_prob - native.log_prob).abs()
+                < 1e-3 * native.log_prob.abs(),
+            "{} vs {}",
+            est.log_prob,
+            native.log_prob
+        );
+    }
+
+    #[test]
+    fn serve_loop_round_trip() {
+        let c = Arc::new(native_coord());
+        let handle = Arc::clone(&c).serve();
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(55);
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                let tr = sample(&hmm, 64, &mut rng);
+                handle.submit(DecodeRequest::new(i, "ge", tr.observations, Algo::Smooth))
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap().unwrap();
+            assert_eq!(resp.id, i as u64);
+        }
+        handle.shutdown();
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.completed, 8);
+        assert!(snap.batches >= 1);
+    }
+}

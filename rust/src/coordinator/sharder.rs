@@ -1,0 +1,431 @@
+//! Temporal sharder — the §V-B block-wise scan executed over PJRT
+//! artifacts.
+//!
+//! Protocol (mirrors `blockwise::` natively and is tested against it):
+//!
+//! 1. **Fold** — every block of L observations is folded to its summary
+//!    element a_{s:e} by one `*_block_fold_{first,mid}` artifact call;
+//!    calls are independent and run concurrently on the XLA worker pool.
+//! 2. **Combine** — the leader prefix/suffix-combines the B ≈ T/L
+//!    summaries natively with ⊗ / ∨ (O(B·D³), tiny).
+//! 3. **Finalize** — every block is completed by one
+//!    `*_block_finalize_{first,mid}` call receiving its incoming forward
+//!    prefix and backward suffix; outputs are concatenated.
+//!
+//! This is how a *fixed* set of compiled artifact sizes serves unbounded
+//! sequence lengths.
+
+use crate::blockwise::BlockPlan;
+use crate::elements::{mp_terminal, sp_terminal, MpElement, MpOp, SpElement, SpOp};
+use crate::error::{Error, Result};
+use crate::hmm::Hmm;
+use crate::inference::{MapEstimate, Posterior};
+use crate::linalg::{argmax, normalize_sum, Mat};
+use crate::runtime::Value;
+use crate::scan::AssocOp;
+
+/// Abstraction over "run this artifact with these inputs" so the sharder
+/// is independent of the worker-pool implementation (the server provides
+/// the pooled executor; tests can substitute).
+pub trait ArtifactExec {
+    /// Run a single artifact call.
+    fn run(&self, artifact: &str, inputs: Vec<Value>) -> Result<Vec<Value>>;
+
+    /// Run many independent calls, preserving order of results.
+    /// Implementations may execute them concurrently.
+    fn run_many(&self, jobs: Vec<(String, Vec<Value>)>) -> Vec<Result<Vec<Value>>> {
+        jobs.into_iter()
+            .map(|(a, i)| self.run(&a, i))
+            .collect()
+    }
+}
+
+/// Sharded-plan parameters resolved by the router.
+#[derive(Debug, Clone)]
+pub struct ShardedArtifacts {
+    pub fold_first: String,
+    pub fold_mid: String,
+    pub finalize_first: String,
+    pub finalize_mid: String,
+    pub block_len: usize,
+}
+
+/// Model + one block of observations → the artifact input list
+/// (pi, obs, prior, ys padded to `capacity`, valid mask).
+pub fn marshal_block(hmm: &Hmm, ys: &[u32], capacity: usize) -> Vec<Value> {
+    let (pi, obs, prior) = hmm.to_f32_parts();
+    let d = hmm.num_states();
+    let m = hmm.num_symbols();
+    let mut ys_pad: Vec<i32> = ys.iter().map(|&y| y as i32).collect();
+    ys_pad.resize(capacity, 0);
+    let mut valid = vec![1.0f32; ys.len()];
+    valid.resize(capacity, 0.0);
+    vec![
+        Value::F32(pi, vec![d, d]),
+        Value::F32(obs, vec![d, m]),
+        Value::F32(prior, vec![d]),
+        Value::I32(ys_pad, vec![capacity]),
+        Value::F32(valid, vec![capacity]),
+    ]
+}
+
+fn mat_from_f32(data: &[f32], d: usize) -> Mat {
+    Mat::from_vec(d, d, data.iter().map(|&v| v as f64).collect())
+}
+
+fn mat_to_f32(m: &Mat) -> Value {
+    Value::F32(
+        m.data().iter().map(|&v| v as f32).collect(),
+        vec![m.rows(), m.cols()],
+    )
+}
+
+/// Run the sharded sum-product smoother. Returns the posterior plus the
+/// number of artifact calls made (for metrics).
+pub fn sp_sharded(
+    exec: &dyn ArtifactExec,
+    arts: &ShardedArtifacts,
+    hmm: &Hmm,
+    ys: &[u32],
+) -> Result<(Posterior, usize)> {
+    let d = hmm.num_states();
+    let t = ys.len();
+    let plan = BlockPlan::new(t, arts.block_len);
+    let nb = plan.num_blocks();
+    let op = SpOp { d };
+
+    // Phase 1: fold every block (concurrently).
+    let jobs: Vec<(String, Vec<Value>)> = (0..nb)
+        .map(|b| {
+            let (s, e) = plan.range(b);
+            let name = if b == 0 { &arts.fold_first } else { &arts.fold_mid };
+            (name.clone(), marshal_block(hmm, &ys[s..e], arts.block_len))
+        })
+        .collect();
+    let folds: Vec<SpElement> = exec
+        .run_many(jobs)
+        .into_iter()
+        .map(|r| {
+            let out = r?;
+            let mat = mat_from_f32(out[0].as_f32()?, d);
+            let log = out[1].scalar()?;
+            Ok(SpElement { mat, log_scale: log })
+        })
+        .collect::<Result<_>>()?;
+
+    // Phase 2: leader combine — exclusive prefixes and suffixes.
+    let mut prefixes = Vec::with_capacity(nb);
+    let mut acc = op.identity();
+    for f in &folds {
+        prefixes.push(acc.clone());
+        acc = op.combine(&acc, f);
+    }
+    let total = acc; // a_{0:T}
+    let loglik = total.log_scale
+        + total.mat.row(0).iter().sum::<f64>().max(f64::MIN_POSITIVE).ln();
+    let mut suffixes = vec![op.identity(); nb];
+    let mut acc = sp_terminal(d);
+    for b in (0..nb).rev() {
+        suffixes[b] = acc.clone();
+        acc = op.combine(&folds[b], &acc);
+    }
+
+    // Phase 3: finalize every block (concurrently).
+    let jobs: Vec<(String, Vec<Value>)> = (0..nb)
+        .map(|b| {
+            let (s, e) = plan.range(b);
+            let name = if b == 0 { &arts.finalize_first } else { &arts.finalize_mid };
+            let mut inputs = marshal_block(hmm, &ys[s..e], arts.block_len);
+            inputs.push(mat_to_f32(&prefixes[b].mat));
+            inputs.push(mat_to_f32(&suffixes[b].mat));
+            (name.clone(), inputs)
+        })
+        .collect();
+    let mut gamma = vec![0.0f64; t * d];
+    for (b, r) in exec.run_many(jobs).into_iter().enumerate() {
+        let out = r?;
+        let g = out[0].as_f32()?;
+        let (s, e) = plan.range(b);
+        for k in s..e {
+            let row = &mut gamma[k * d..(k + 1) * d];
+            for st in 0..d {
+                row[st] = g[(k - s) * d + st] as f64;
+            }
+            normalize_sum(row);
+        }
+    }
+
+    Ok((Posterior::new(d, gamma, loglik), 2 * nb))
+}
+
+/// Run the sharded max-product MAP estimator.
+pub fn mp_sharded(
+    exec: &dyn ArtifactExec,
+    arts: &ShardedArtifacts,
+    hmm: &Hmm,
+    ys: &[u32],
+) -> Result<(MapEstimate, usize)> {
+    let d = hmm.num_states();
+    let t = ys.len();
+    let plan = BlockPlan::new(t, arts.block_len);
+    let nb = plan.num_blocks();
+    let op = MpOp { d };
+
+    let jobs: Vec<(String, Vec<Value>)> = (0..nb)
+        .map(|b| {
+            let (s, e) = plan.range(b);
+            let name = if b == 0 { &arts.fold_first } else { &arts.fold_mid };
+            (name.clone(), marshal_block(hmm, &ys[s..e], arts.block_len))
+        })
+        .collect();
+    let folds: Vec<MpElement> = exec
+        .run_many(jobs)
+        .into_iter()
+        .map(|r| {
+            let out = r?;
+            Ok(MpElement { mat: mat_from_f32(out[0].as_f32()?, d) })
+        })
+        .collect::<Result<_>>()?;
+
+    let mut prefixes = Vec::with_capacity(nb);
+    let mut acc = op.identity();
+    for f in &folds {
+        prefixes.push(acc.clone());
+        acc = op.combine(&acc, f);
+    }
+    let log_prob = acc
+        .mat
+        .row(0)
+        .iter()
+        .fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+    let mut suffixes = vec![op.identity(); nb];
+    let mut acc = mp_terminal(d);
+    for b in (0..nb).rev() {
+        suffixes[b] = acc.clone();
+        acc = op.combine(&folds[b], &acc);
+    }
+
+    let jobs: Vec<(String, Vec<Value>)> = (0..nb)
+        .map(|b| {
+            let (s, e) = plan.range(b);
+            let name = if b == 0 { &arts.finalize_first } else { &arts.finalize_mid };
+            let mut inputs = marshal_block(hmm, &ys[s..e], arts.block_len);
+            inputs.push(mat_to_f32(&prefixes[b].mat));
+            inputs.push(mat_to_f32(&suffixes[b].mat));
+            (name.clone(), inputs)
+        })
+        .collect();
+    let mut path = vec![0u32; t];
+    for (b, r) in exec.run_many(jobs).into_iter().enumerate() {
+        let out = r?;
+        let p = out[0].as_i32()?;
+        let (s, e) = plan.range(b);
+        for k in s..e {
+            let v = p[k - s];
+            if v < 0 || v as usize >= d {
+                return Err(Error::xla(format!("block {b}: state {v} out of range")));
+            }
+            path[k] = v as u32;
+        }
+    }
+
+    Ok((MapEstimate { path, log_prob }, 2 * nb))
+}
+
+/// Native mock executor used by unit tests (and the `--no-xla` path):
+/// runs the fold/finalize semantics with the native element algebra.
+pub struct NativeExec {
+    pub hmm: Hmm,
+}
+
+impl ArtifactExec for NativeExec {
+    fn run(&self, artifact: &str, inputs: Vec<Value>) -> Result<Vec<Value>> {
+        let d = self.hmm.num_states();
+        let ys_pad = inputs[3].as_i32()?;
+        let valid = inputs[4].as_f32()?;
+        let n_valid = valid.iter().filter(|&&v| v > 0.5).count();
+        let ys: Vec<u32> = ys_pad[..n_valid].iter().map(|&y| y as u32).collect();
+        let first = artifact.contains("first");
+        if artifact.contains("sp_block_fold") {
+            let elems = chain_sp(&self.hmm, &ys, first);
+            let op = SpOp { d };
+            let mut acc = op.identity();
+            for e in &elems {
+                acc = op.combine(&acc, e);
+            }
+            Ok(vec![mat_to_f32(&acc.mat), Value::scalar_f32(acc.log_scale as f32)])
+        } else if artifact.contains("mp_block_fold") {
+            let elems = chain_mp(&self.hmm, &ys, first);
+            let op = MpOp { d };
+            let mut acc = op.identity();
+            for e in &elems {
+                acc = op.combine(&acc, e);
+            }
+            Ok(vec![mat_to_f32(&acc.mat)])
+        } else if artifact.contains("sp_block_finalize") {
+            let fin = mat_from_f32(inputs[5].as_f32()?, d);
+            let bin = mat_from_f32(inputs[6].as_f32()?, d);
+            let elems = chain_sp(&self.hmm, &ys, first);
+            let op = SpOp { d };
+            let pref = crate::scan::seq_scan(&op, &elems);
+            let mut shifted: Vec<SpElement> = elems[1..].to_vec();
+            shifted.push(SpOp { d }.identity());
+            let suf = crate::scan::seq_scan_rev(&op, &shifted);
+            let l = inputs[3].len();
+            let mut gamma = vec![0.0f32; l * d];
+            let fin_e = SpElement { mat: fin, log_scale: 0.0 };
+            let bin_e = SpElement { mat: bin, log_scale: 0.0 };
+            for k in 0..ys.len() {
+                let gf = op.combine(&fin_e, &pref[k]);
+                let gb = op.combine(&suf[k], &bin_e);
+                let mut row: Vec<f64> =
+                    (0..d).map(|s| gf.mat[(0, s)] * gb.mat[(s, 0)]).collect();
+                normalize_sum(&mut row);
+                for s in 0..d {
+                    gamma[k * d + s] = row[s] as f32;
+                }
+            }
+            Ok(vec![Value::F32(gamma, vec![l, d])])
+        } else if artifact.contains("mp_block_finalize") {
+            let fin = mat_from_f32(inputs[5].as_f32()?, d);
+            let bin = mat_from_f32(inputs[6].as_f32()?, d);
+            let elems = chain_mp(&self.hmm, &ys, first);
+            let op = MpOp { d };
+            let pref = crate::scan::seq_scan(&op, &elems);
+            let mut shifted: Vec<MpElement> = elems[1..].to_vec();
+            shifted.push(op.identity());
+            let suf = crate::scan::seq_scan_rev(&op, &shifted);
+            let l = inputs[3].len();
+            let mut path = vec![0i32; l];
+            let fin_e = MpElement { mat: fin };
+            let bin_e = MpElement { mat: bin };
+            for k in 0..ys.len() {
+                let gf = op.combine(&fin_e, &pref[k]);
+                let gb = op.combine(&suf[k], &bin_e);
+                let delta: Vec<f64> =
+                    (0..d).map(|s| gf.mat[(0, s)] + gb.mat[(s, 0)]).collect();
+                path[k] = argmax(&delta) as i32;
+            }
+            Ok(vec![Value::I32(path, vec![l])])
+        } else {
+            Err(Error::artifact(format!("NativeExec: unknown '{artifact}'")))
+        }
+    }
+}
+
+fn chain_sp(hmm: &Hmm, ys: &[u32], first: bool) -> Vec<SpElement> {
+    let mut elems = crate::elements::sp_element_chain(hmm, ys);
+    if !first {
+        // interior block: element 0 is the uniform Π ∘ e form
+        let d = hmm.num_states();
+        let e = hmm.emission_col(ys[0]);
+        let pi = hmm.transition();
+        let mut mat = Mat::zeros(d, d);
+        for r in 0..d {
+            for c in 0..d {
+                mat[(r, c)] = pi[(r, c)] * e[c];
+            }
+        }
+        elems[0] = SpElement::from_mat(mat);
+    }
+    elems
+}
+
+fn chain_mp(hmm: &Hmm, ys: &[u32], first: bool) -> Vec<MpElement> {
+    let mut elems = crate::elements::mp_element_chain(hmm, ys);
+    if !first {
+        let d = hmm.num_states();
+        let e = hmm.emission_col(ys[0]);
+        let pi = hmm.transition();
+        let mut mat = Mat::zeros(d, d);
+        for r in 0..d {
+            for c in 0..d {
+                mat[(r, c)] = crate::elements::safe_ln(pi[(r, c)] * e[c]);
+            }
+        }
+        elems[0] = MpElement { mat };
+    }
+    elems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::{gilbert_elliott, sample, GeParams};
+    use crate::rng::Xoshiro256StarStar;
+
+    fn arts(block_len: usize) -> ShardedArtifacts {
+        ShardedArtifacts {
+            fold_first: "sp_block_fold_first".into(),
+            fold_mid: "sp_block_fold_mid".into(),
+            finalize_first: "sp_block_finalize_first".into(),
+            finalize_mid: "sp_block_finalize_mid".into(),
+            block_len,
+        }
+    }
+
+    fn mp_arts(block_len: usize) -> ShardedArtifacts {
+        ShardedArtifacts {
+            fold_first: "mp_block_fold_first".into(),
+            fold_mid: "mp_block_fold_mid".into(),
+            finalize_first: "mp_block_finalize_first".into(),
+            finalize_mid: "mp_block_finalize_mid".into(),
+            block_len,
+        }
+    }
+
+    #[test]
+    fn marshal_pads_and_masks() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let vals = marshal_block(&hmm, &[1, 0, 1], 8);
+        assert_eq!(vals.len(), 5);
+        assert_eq!(vals[3].as_i32().unwrap(), &[1, 0, 1, 0, 0, 0, 0, 0]);
+        assert_eq!(
+            vals[4].as_f32().unwrap(),
+            &[1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn sp_sharded_matches_flat_native_exec() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(41);
+        let tr = sample(&hmm, 300, &mut rng);
+        let exec = NativeExec { hmm: hmm.clone() };
+        for block in [64usize, 100, 300, 512] {
+            let (post, calls) =
+                sp_sharded(&exec, &arts(block), &hmm, &tr.observations).unwrap();
+            assert_eq!(calls, 2 * 300usize.div_ceil(block));
+            let flat = crate::inference::sp_seq(&hmm, &tr.observations).unwrap();
+            // NativeExec round-trips through f32 (as the artifacts do),
+            // so comparison is at single precision.
+            let rel = (post.log_likelihood() - flat.log_likelihood()).abs()
+                / flat.log_likelihood().abs();
+            assert!(rel < 1e-5, "block={block} loglik rel {rel}");
+            for k in 0..300 {
+                for s in 0..4 {
+                    assert!(
+                        (post.gamma(k)[s] - flat.gamma(k)[s]).abs() < 1e-4,
+                        "block={block} k={k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mp_sharded_matches_viterbi_native_exec() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(42);
+        let tr = sample(&hmm, 250, &mut rng);
+        let exec = NativeExec { hmm: hmm.clone() };
+        let vit = crate::inference::viterbi(&hmm, &tr.observations).unwrap();
+        for block in [32usize, 100, 250] {
+            let (est, _) =
+                mp_sharded(&exec, &mp_arts(block), &hmm, &tr.observations).unwrap();
+            let rel = (est.log_prob - vit.log_prob).abs() / vit.log_prob.abs();
+            assert!(rel < 1e-5, "block={block} logp rel {rel}");
+            assert_eq!(est.path.len(), 250);
+        }
+    }
+}

@@ -1,0 +1,713 @@
+//! The paper's associative-scan elements and operators.
+//!
+//! * [`SpElement`] / [`SpOp`] — sum-product element a_{i:j} =
+//!   ψ_{i,j}(x_i, x_j) (Definition 3) with the ⊗ combine of Eq. (16),
+//!   carried as a max-normalized matrix plus log-scale accumulator
+//!   (DESIGN.md §2.2) so T = 10⁵-length products cannot underflow.
+//! * [`MpElement`] / [`MpOp`] — max-product element (Definition 5) in
+//!   log domain: the ∨ combine of Eq. (42) becomes a max-plus matmul.
+//! * [`PathElement`] / [`PathOp`] — the path-based element ã_{i:j} of
+//!   Definition 4 (§IV-B), carrying the argmax interior path per state
+//!   pair; memory O(D²·len), provided for the paper's memory-vs-time
+//!   comparison against the max-product formulation.
+//! * [`BsElement`] / [`BsFilterOp`] — the Bayesian-filtering element of
+//!   Ref. [30] (discrete analogue): conditional matrix + rescaled
+//!   likelihood vector; used by BS-Par.
+//! * [`element_chain`] — builds the per-step elements from an [`Hmm`]
+//!   and an observation sequence (Definition 3 / Eq. 15).
+
+use crate::hmm::Hmm;
+use crate::linalg::Mat;
+use crate::scan::AssocOp;
+use crate::semiring::{MaxPlus, Prob};
+
+/// Linear-domain floor guarding renormalization against all-zero products.
+pub const TINY: f64 = 1e-300;
+
+/// Log-domain stand-in for -∞ that survives repeated addition in f64.
+pub const NEG_INF: f64 = -1e30;
+
+// ===========================================================================
+// Sum-product element (Definition 3, Eq. 16)
+// ===========================================================================
+
+/// a_{i:j} = exp(log_scale) · mat, with mat ≥ 0 max-normalized to 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpElement {
+    pub mat: Mat,
+    pub log_scale: f64,
+}
+
+impl SpElement {
+    /// Wrap a raw potential matrix, rescaling it into normal form.
+    pub fn from_mat(mut mat: Mat) -> Self {
+        let m = mat.max().max(TINY);
+        mat.scale(1.0 / m);
+        Self { mat, log_scale: m.ln() }
+    }
+
+    /// The represented (unscaled) potential matrix — for tests/debugging
+    /// only; underflows for long chains by construction.
+    pub fn unscaled(&self) -> Mat {
+        let mut m = self.mat.clone();
+        m.scale(self.log_scale.exp());
+        m
+    }
+}
+
+/// The ⊗ operator of Eq. (16): rescaled matrix product over (+, ×).
+#[derive(Debug, Clone, Copy)]
+pub struct SpOp {
+    pub d: usize,
+}
+
+impl AssocOp<SpElement> for SpOp {
+    fn identity(&self) -> SpElement {
+        SpElement { mat: Mat::identity::<Prob>(self.d), log_scale: 0.0 }
+    }
+
+    fn combine(&self, a: &SpElement, b: &SpElement) -> SpElement {
+        let mut mat = a.mat.matmul::<Prob>(&b.mat);
+        let m = mat.max().max(TINY);
+        mat.scale(1.0 / m);
+        SpElement { mat, log_scale: a.log_scale + b.log_scale + m.ln() }
+    }
+
+    // Hot-path overrides (§Perf): double-buffered matmul_into — zero
+    // allocation per combine instead of one Mat per combine.
+    fn fold(&self, init: SpElement, elems: &[SpElement]) -> SpElement {
+        let mut acc = init;
+        let mut tmp = Mat::zeros(self.d, self.d);
+        for e in elems {
+            crate::linalg::matmul_into::<Prob>(&acc.mat, &e.mat, &mut tmp);
+            let m = tmp.max().max(TINY);
+            tmp.scale(1.0 / m);
+            std::mem::swap(&mut acc.mat, &mut tmp);
+            acc.log_scale += e.log_scale + m.ln();
+        }
+        acc
+    }
+
+    fn rescan(&self, carry: &SpElement, elems: &mut [SpElement]) {
+        let mut acc = carry.clone();
+        let mut tmp = Mat::zeros(self.d, self.d);
+        for e in elems.iter_mut() {
+            crate::linalg::matmul_into::<Prob>(&acc.mat, &e.mat, &mut tmp);
+            let m = tmp.max().max(TINY);
+            tmp.scale(1.0 / m);
+            std::mem::swap(&mut acc.mat, &mut tmp);
+            acc.log_scale += e.log_scale + m.ln();
+            e.mat.data_mut().copy_from_slice(acc.mat.data());
+            e.log_scale = acc.log_scale;
+        }
+    }
+
+    fn fold_rev(&self, init: SpElement, elems: &[SpElement]) -> SpElement {
+        let mut acc = init;
+        let mut tmp = Mat::zeros(self.d, self.d);
+        for e in elems {
+            crate::linalg::matmul_into::<Prob>(&e.mat, &acc.mat, &mut tmp);
+            let m = tmp.max().max(TINY);
+            tmp.scale(1.0 / m);
+            std::mem::swap(&mut acc.mat, &mut tmp);
+            acc.log_scale += e.log_scale + m.ln();
+        }
+        acc
+    }
+
+    fn rescan_rev(&self, carry: &SpElement, elems: &mut [SpElement]) {
+        let mut acc = carry.clone();
+        let mut tmp = Mat::zeros(self.d, self.d);
+        for e in elems.iter_mut() {
+            crate::linalg::matmul_into::<Prob>(&e.mat, &acc.mat, &mut tmp);
+            let m = tmp.max().max(TINY);
+            tmp.scale(1.0 / m);
+            std::mem::swap(&mut acc.mat, &mut tmp);
+            acc.log_scale += e.log_scale + m.ln();
+            e.mat.data_mut().copy_from_slice(acc.mat.data());
+            e.log_scale = acc.log_scale;
+        }
+    }
+}
+
+// ===========================================================================
+// Max-product element (Definition 5, Eq. 42) — log domain
+// ===========================================================================
+
+/// ā_{i:j} as a log-domain matrix: entry (x_i, x_j) is the log max
+/// probability over interior paths.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MpElement {
+    pub mat: Mat,
+}
+
+/// The ∨ operator of Eq. (42): max-plus matrix product.
+#[derive(Debug, Clone, Copy)]
+pub struct MpOp {
+    pub d: usize,
+}
+
+impl AssocOp<MpElement> for MpOp {
+    fn identity(&self) -> MpElement {
+        let mut mat = Mat::filled(self.d, self.d, NEG_INF);
+        for i in 0..self.d {
+            mat[(i, i)] = 0.0;
+        }
+        MpElement { mat }
+    }
+
+    fn combine(&self, a: &MpElement, b: &MpElement) -> MpElement {
+        MpElement { mat: a.mat.matmul::<MaxPlus>(&b.mat) }
+    }
+
+    // Hot-path overrides (§Perf): see SpOp.
+    fn fold(&self, init: MpElement, elems: &[MpElement]) -> MpElement {
+        let mut acc = init;
+        let mut tmp = Mat::zeros(self.d, self.d);
+        for e in elems {
+            crate::linalg::matmul_into::<MaxPlus>(&acc.mat, &e.mat, &mut tmp);
+            std::mem::swap(&mut acc.mat, &mut tmp);
+        }
+        acc
+    }
+
+    fn rescan(&self, carry: &MpElement, elems: &mut [MpElement]) {
+        let mut acc = carry.clone();
+        let mut tmp = Mat::zeros(self.d, self.d);
+        for e in elems.iter_mut() {
+            crate::linalg::matmul_into::<MaxPlus>(&acc.mat, &e.mat, &mut tmp);
+            std::mem::swap(&mut acc.mat, &mut tmp);
+            e.mat.data_mut().copy_from_slice(acc.mat.data());
+        }
+    }
+
+    fn fold_rev(&self, init: MpElement, elems: &[MpElement]) -> MpElement {
+        let mut acc = init;
+        let mut tmp = Mat::zeros(self.d, self.d);
+        for e in elems {
+            crate::linalg::matmul_into::<MaxPlus>(&e.mat, &acc.mat, &mut tmp);
+            std::mem::swap(&mut acc.mat, &mut tmp);
+        }
+        acc
+    }
+
+    fn rescan_rev(&self, carry: &MpElement, elems: &mut [MpElement]) {
+        let mut acc = carry.clone();
+        let mut tmp = Mat::zeros(self.d, self.d);
+        for e in elems.iter_mut() {
+            crate::linalg::matmul_into::<MaxPlus>(&e.mat, &acc.mat, &mut tmp);
+            std::mem::swap(&mut acc.mat, &mut tmp);
+            e.mat.data_mut().copy_from_slice(acc.mat.data());
+        }
+    }
+}
+
+// ===========================================================================
+// Path-based element (Definition 4, §IV-B)
+// ===========================================================================
+
+/// ã_{i:j}: log max probability A_{i:j}(x_i, x_j) *and* the maximizing
+/// interior path X̂_{i:j}(x_i, x_j) for every state pair.
+///
+/// The `paths` matrix stores, for state pair (r, c), the interior states
+/// x_{i+1..j-1} of the best path — `paths[r * d + c]` has length
+/// `interior_len`. Memory per element is O(D² · len) — the cost the
+/// max-product formulation of §IV-C avoids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PathElement {
+    pub mat: Mat,
+    pub paths: Vec<Vec<u32>>,
+    pub interior_len: usize,
+}
+
+impl PathElement {
+    /// Leaf element (interior path empty) from a log-domain matrix.
+    pub fn leaf(mat: Mat) -> Self {
+        let d = mat.rows();
+        Self { mat, paths: vec![Vec::new(); d * d], interior_len: 0 }
+    }
+}
+
+/// The ∨ operator of Eq. (34): combine probabilities like [`MpOp`] and
+/// concatenate paths through the maximizing midpoint (Eq. 35).
+#[derive(Debug, Clone, Copy)]
+pub struct PathOp {
+    pub d: usize,
+}
+
+impl AssocOp<PathElement> for PathOp {
+    fn identity(&self) -> PathElement {
+        let mut mat = Mat::filled(self.d, self.d, NEG_INF);
+        for i in 0..self.d {
+            mat[(i, i)] = 0.0;
+        }
+        PathElement { mat, paths: vec![Vec::new(); self.d * self.d], interior_len: 0 }
+    }
+
+    fn combine(&self, a: &PathElement, b: &PathElement) -> PathElement {
+        let d = self.d;
+        let mut mat = Mat::filled(d, d, NEG_INF);
+        let mut paths = vec![Vec::new(); d * d];
+        // Identity elements have interior_len 0 and diagonal support; the
+        // concatenated interior must splice the midpoint only when both
+        // sides represent genuine chain segments. We detect the identity
+        // by interior_len == 0 *and* an exact identity matrix — cheap and
+        // unambiguous for how the scans use it (padding / down-sweep).
+        let a_ident = is_log_identity(&a.mat) && a.interior_len == 0;
+        let b_ident = is_log_identity(&b.mat) && b.interior_len == 0;
+        if a_ident {
+            return b.clone();
+        }
+        if b_ident {
+            return a.clone();
+        }
+        for r in 0..d {
+            for c in 0..d {
+                // Eq. (35): x̂_j = argmax_j A_{i:j}(r, j) + A_{j:k}(j, c)
+                let mut best = NEG_INF * 2.0;
+                let mut best_j = 0usize;
+                for j in 0..d {
+                    let v = a.mat[(r, j)] + b.mat[(j, c)];
+                    if v > best {
+                        best = v;
+                        best_j = j;
+                    }
+                }
+                mat[(r, c)] = best;
+                // Eq. (34): X̂ = (X̂_{i:j}(r, ĵ), ĵ, X̂_{j:k}(ĵ, c))
+                let mut p =
+                    Vec::with_capacity(a.interior_len + 1 + b.interior_len);
+                p.extend_from_slice(&a.paths[r * d + best_j]);
+                p.push(best_j as u32);
+                p.extend_from_slice(&b.paths[best_j * d + c]);
+                paths[r * d + c] = p;
+            }
+        }
+        PathElement {
+            mat,
+            paths,
+            interior_len: a.interior_len + 1 + b.interior_len,
+        }
+    }
+}
+
+fn is_log_identity(m: &Mat) -> bool {
+    let d = m.rows();
+    for r in 0..d {
+        for c in 0..d {
+            let want = if r == c { 0.0 } else { NEG_INF };
+            if m[(r, c)] != want {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+// ===========================================================================
+// Bayesian filtering element (Ref. [30], discrete analogue)
+// ===========================================================================
+
+/// Filtering element (f, ĝ, γ):
+/// f(x_{k-1}, x_k) = p(x_k | y-segment, x_{k-1}) — row-stochastic;
+/// ĝ(x_{k-1}) ∝ p(y-segment | x_{k-1}) max-normalized with log scale γ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BsElement {
+    pub f: Mat,
+    pub g: Vec<f64>,
+    pub log_scale: f64,
+}
+
+/// Combine of filtering elements (the discrete parallel-filter rule).
+#[derive(Debug, Clone, Copy)]
+pub struct BsFilterOp {
+    pub d: usize,
+}
+
+impl AssocOp<BsElement> for BsFilterOp {
+    fn identity(&self) -> BsElement {
+        BsElement {
+            f: Mat::identity::<Prob>(self.d),
+            g: vec![1.0; self.d],
+            log_scale: 0.0,
+        }
+    }
+
+    fn combine(&self, a: &BsElement, b: &BsElement) -> BsElement {
+        let d = self.d;
+        let mut f = Mat::zeros(d, d);
+        let mut g = vec![0.0; d];
+        for i in 0..d {
+            // s_i = Σ_j f1[i,j] ĝ2[j]
+            let mut s = 0.0;
+            for j in 0..d {
+                s += a.f[(i, j)] * b.g[j];
+            }
+            let s_safe = s.max(TINY);
+            for k in 0..d {
+                let mut acc = 0.0;
+                for j in 0..d {
+                    acc += a.f[(i, j)] * b.g[j] * b.f[(j, k)];
+                }
+                f[(i, k)] = acc / s_safe;
+            }
+            g[i] = a.g[i] * s;
+        }
+        let m = g.iter().fold(0.0f64, |m, &v| m.max(v)).max(TINY);
+        g.iter_mut().for_each(|v| *v /= m);
+        BsElement { f, g, log_scale: a.log_scale + b.log_scale + m.ln() }
+    }
+}
+
+// ===========================================================================
+// Element chain construction (Definition 3 / Eq. 15)
+// ===========================================================================
+
+/// Build the sum-product element chain (a_{0:1}, …, a_{T-1:T}).
+///
+/// elems[0] is the prior element (rows broadcast ψ₁(x₁) = p(x₁)p(y₁|x₁));
+/// elems[t] = Π ∘ eₜ for t ≥ 1.
+pub fn sp_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<SpElement> {
+    let d = hmm.num_states();
+    let pi = hmm.transition();
+    // Hoist the per-symbol interior element prototypes: every step with
+    // symbol y shares the same normalized matrix Π ∘ e_y (§Perf: saves a
+    // D×D rebuild + emission column allocation per step).
+    let protos: Vec<SpElement> = (0..hmm.num_symbols())
+        .map(|y| {
+            let e = hmm.emission_col(y as u32);
+            let mut mat = Mat::zeros(d, d);
+            for r in 0..d {
+                for c in 0..d {
+                    mat[(r, c)] = pi[(r, c)] * e[c];
+                }
+            }
+            SpElement::from_mat(mat)
+        })
+        .collect();
+    let mut out = Vec::with_capacity(ys.len());
+    for (t, &y) in ys.iter().enumerate() {
+        if t == 0 {
+            let e = hmm.emission_col(y);
+            let mut mat = Mat::zeros(d, d);
+            for r in 0..d {
+                for c in 0..d {
+                    mat[(r, c)] = hmm.prior()[c] * e[c];
+                }
+            }
+            out.push(SpElement::from_mat(mat));
+        } else {
+            out.push(protos[y as usize].clone());
+        }
+    }
+    out
+}
+
+/// The terminal element ψ_{T,T+1} = 1 (all-ones matrix).
+pub fn sp_terminal(d: usize) -> SpElement {
+    SpElement { mat: Mat::all_one::<Prob>(d, d), log_scale: 0.0 }
+}
+
+/// Build the log-domain max-product element chain.
+pub fn mp_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<MpElement> {
+    let d = hmm.num_states();
+    let pi = hmm.transition();
+    // Per-symbol prototypes (see sp_element_chain).
+    let protos: Vec<MpElement> = (0..hmm.num_symbols())
+        .map(|y| {
+            let e = hmm.emission_col(y as u32);
+            let mut mat = Mat::zeros(d, d);
+            for r in 0..d {
+                for c in 0..d {
+                    mat[(r, c)] = safe_ln(pi[(r, c)] * e[c]);
+                }
+            }
+            MpElement { mat }
+        })
+        .collect();
+    let mut out = Vec::with_capacity(ys.len());
+    for (t, &y) in ys.iter().enumerate() {
+        if t == 0 {
+            let e = hmm.emission_col(y);
+            let mut mat = Mat::zeros(d, d);
+            for r in 0..d {
+                for c in 0..d {
+                    mat[(r, c)] = safe_ln(hmm.prior()[c] * e[c]);
+                }
+            }
+            out.push(MpElement { mat });
+        } else {
+            out.push(protos[y as usize].clone());
+        }
+    }
+    out
+}
+
+/// Terminal max-product element: log ψ_{T,T+1} = 0 everywhere.
+pub fn mp_terminal(d: usize) -> MpElement {
+    MpElement { mat: Mat::zeros(d, d) }
+}
+
+/// Build the Bayesian filtering element chain.
+pub fn bs_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<BsElement> {
+    let d = hmm.num_states();
+    let mut out = Vec::with_capacity(ys.len());
+    for (t, &y) in ys.iter().enumerate() {
+        let e = hmm.emission_col(y);
+        let mut f = Mat::zeros(d, d);
+        let mut g = vec![0.0; d];
+        if t == 0 {
+            // First element: rows = posterior of x_0; g = p(y_0) constant.
+            let mut w: Vec<f64> = (0..d).map(|j| hmm.prior()[j] * e[j]).collect();
+            let p_y0: f64 = w.iter().sum();
+            let norm = p_y0.max(TINY);
+            w.iter_mut().for_each(|v| *v /= norm);
+            for r in 0..d {
+                for c in 0..d {
+                    f[(r, c)] = w[c];
+                }
+            }
+            g = vec![p_y0; d];
+        } else {
+            let pi = hmm.transition();
+            for i in 0..d {
+                let mut s = 0.0;
+                for j in 0..d {
+                    let w = pi[(i, j)] * e[j];
+                    f[(i, j)] = w;
+                    s += w;
+                }
+                let s_safe = s.max(TINY);
+                for j in 0..d {
+                    f[(i, j)] /= s_safe;
+                }
+                g[i] = s;
+            }
+        }
+        let m = g.iter().fold(0.0f64, |m, &v| m.max(v)).max(TINY);
+        g.iter_mut().for_each(|v| *v /= m);
+        out.push(BsElement { f, g, log_scale: m.ln() });
+    }
+    out
+}
+
+pub fn safe_ln(x: f64) -> f64 {
+    if x > 0.0 {
+        x.ln()
+    } else {
+        NEG_INF
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::{gilbert_elliott, GeParams};
+    use crate::proptestx::{gen, Runner};
+    use crate::rng::Xoshiro256StarStar;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn rand_sp(r: &mut Xoshiro256StarStar, d: usize) -> SpElement {
+        let mat = Mat::from_vec(
+            d,
+            d,
+            (0..d * d).map(|_| r.uniform(0.01, 1.0)).collect(),
+        );
+        let mut e = SpElement::from_mat(mat);
+        e.log_scale = r.uniform(-5.0, 5.0);
+        e
+    }
+
+    fn rand_mp(r: &mut Xoshiro256StarStar, d: usize) -> MpElement {
+        MpElement {
+            mat: Mat::from_vec(
+                d,
+                d,
+                (0..d * d).map(|_| r.uniform(-8.0, 0.0)).collect(),
+            ),
+        }
+    }
+
+    #[test]
+    fn sp_combine_associative_exact_in_represented_space() {
+        let mut runner = Runner::new("sp-assoc");
+        runner.run(100, |r| {
+            let d = 2 + r.below(5) as usize;
+            let op = SpOp { d };
+            let (a, b, c) = (rand_sp(r, d), rand_sp(r, d), rand_sp(r, d));
+            let l = op.combine(&op.combine(&a, &b), &c);
+            let rr = op.combine(&a, &op.combine(&b, &c));
+            // matrices equal up to normalization, total scale equal
+            for (x, y) in l.mat.data().iter().zip(rr.mat.data()) {
+                assert!(close(*x, *y));
+            }
+            assert!(close(l.log_scale, rr.log_scale));
+        });
+    }
+
+    #[test]
+    fn sp_identity_neutral() {
+        let mut runner = Runner::new("sp-ident");
+        runner.run(50, |r| {
+            let d = 2 + r.below(4) as usize;
+            let op = SpOp { d };
+            let a = rand_sp(r, d);
+            for v in [op.combine(&a, &op.identity()), op.combine(&op.identity(), &a)] {
+                for (x, y) in v.mat.data().iter().zip(a.mat.data()) {
+                    assert!(close(*x, *y));
+                }
+                assert!(close(v.log_scale, a.log_scale));
+            }
+        });
+    }
+
+    #[test]
+    fn sp_no_underflow_over_long_chain() {
+        let d = 4;
+        let op = SpOp { d };
+        let mut e = SpElement::from_mat(Mat::filled(d, d, 1e-8));
+        let unit = e.clone();
+        for _ in 0..10_000 {
+            e = op.combine(&e, &unit);
+        }
+        assert!(e.mat.data().iter().all(|v| v.is_finite()));
+        assert!(e.log_scale.is_finite());
+        assert!(e.log_scale < -100_000.0); // ~10⁴ · ln(1e-8·4…) ≪ 0
+        assert!(close(e.mat.max(), 1.0));
+    }
+
+    #[test]
+    fn mp_combine_associative() {
+        let mut runner = Runner::new("mp-assoc");
+        runner.run(100, |r| {
+            let d = 2 + r.below(5) as usize;
+            let op = MpOp { d };
+            let (a, b, c) = (rand_mp(r, d), rand_mp(r, d), rand_mp(r, d));
+            let l = op.combine(&op.combine(&a, &b), &c);
+            let rr = op.combine(&a, &op.combine(&b, &c));
+            for (x, y) in l.mat.data().iter().zip(rr.mat.data()) {
+                assert!(close(*x, *y));
+            }
+        });
+    }
+
+    #[test]
+    fn mp_identity_neutral() {
+        let d = 3;
+        let op = MpOp { d };
+        let mut r = Xoshiro256StarStar::seed_from_u64(4);
+        let a = rand_mp(&mut r, d);
+        assert_eq!(op.combine(&a, &op.identity()).mat, a.mat);
+        assert_eq!(op.combine(&op.identity(), &a).mat, a.mat);
+    }
+
+    #[test]
+    fn path_op_tracks_the_argmax_path() {
+        // Combine three leaves and check the assembled path achieves the
+        // claimed probability (Theorem 3 consistency).
+        let mut runner = Runner::new("path-consistency");
+        runner.run(50, |r| {
+            let d = 2 + r.below(3) as usize;
+            let op = PathOp { d };
+            let leaves: Vec<PathElement> = (0..4)
+                .map(|_| PathElement::leaf(rand_mp(r, d).mat))
+                .collect();
+            let combined = op.combine(
+                &op.combine(&leaves[0], &leaves[1]),
+                &op.combine(&leaves[2], &leaves[3]),
+            );
+            assert_eq!(combined.interior_len, 3);
+            for s in 0..d {
+                for e in 0..d {
+                    let p = &combined.paths[s * d + e];
+                    assert_eq!(p.len(), 3);
+                    // score of the stored path
+                    let states: Vec<usize> = std::iter::once(s)
+                        .chain(p.iter().map(|&v| v as usize))
+                        .chain(std::iter::once(e))
+                        .collect();
+                    let mut score = 0.0;
+                    for (w, leaf) in states.windows(2).zip(&leaves) {
+                        score += leaf.mat[(w[0], w[1])];
+                    }
+                    assert!(
+                        close(score, combined.mat[(s, e)]),
+                        "path score mismatch at ({s},{e})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn path_op_associative_on_values() {
+        let mut runner = Runner::new("path-assoc");
+        runner.run(30, |r| {
+            let d = 2 + r.below(3) as usize;
+            let op = PathOp { d };
+            let a = PathElement::leaf(rand_mp(r, d).mat);
+            let b = PathElement::leaf(rand_mp(r, d).mat);
+            let c = PathElement::leaf(rand_mp(r, d).mat);
+            let l = op.combine(&op.combine(&a, &b), &c);
+            let rr = op.combine(&a, &op.combine(&b, &c));
+            for (x, y) in l.mat.data().iter().zip(rr.mat.data()) {
+                assert!(close(*x, *y));
+            }
+            assert_eq!(l.interior_len, rr.interior_len);
+        });
+    }
+
+    #[test]
+    fn bs_filter_associative() {
+        let mut runner = Runner::new("bs-assoc");
+        runner.run(100, |r| {
+            let d = 2 + r.below(4) as usize;
+            let op = BsFilterOp { d };
+            let mk = |r: &mut Xoshiro256StarStar| BsElement {
+                f: Mat::from_vec(d, d, gen::stochastic_matrix(r, d)),
+                g: gen::prob_vector(r, d),
+                log_scale: r.uniform(-2.0, 2.0),
+            };
+            let (a, b, c) = (mk(r), mk(r), mk(r));
+            let l = op.combine(&op.combine(&a, &b), &c);
+            let rr = op.combine(&a, &op.combine(&b, &c));
+            for (x, y) in l.f.data().iter().zip(rr.f.data()) {
+                assert!(close(*x, *y), "f mismatch");
+            }
+            // g vectors equal up to the shared normalization; compare the
+            // represented (rescaled) likelihoods instead.
+            for i in 0..d {
+                let lg = l.log_scale + l.g[i].max(TINY).ln();
+                let rg = rr.log_scale + rr.g[i].max(TINY).ln();
+                assert!((lg - rg).abs() < 1e-9, "g mismatch");
+            }
+        });
+    }
+
+    #[test]
+    fn chains_have_expected_shapes() {
+        let h = gilbert_elliott(GeParams::default());
+        let ys = vec![0, 1, 1, 0, 1];
+        let sp = sp_element_chain(&h, &ys);
+        assert_eq!(sp.len(), 5);
+        // prior element has identical rows
+        for c in 0..4 {
+            let v = sp[0].mat[(0, c)];
+            assert!((1..4).all(|r| sp[0].mat[(r, c)] == v));
+        }
+        let mp = mp_element_chain(&h, &ys);
+        assert_eq!(mp.len(), 5);
+        assert!(mp[1].mat.data().iter().all(|&v| v <= 0.0));
+        let bs = bs_element_chain(&h, &ys);
+        assert_eq!(bs.len(), 5);
+        for e in &bs {
+            for r in 0..4 {
+                let s: f64 = e.f.row(r).iter().sum();
+                assert!((s - 1.0).abs() < 1e-9, "f rows stochastic");
+            }
+        }
+    }
+}

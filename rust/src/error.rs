@@ -1,0 +1,87 @@
+//! Unified error type for the crate.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified error for model validation, runtime, coordinator and IO
+/// failures.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Invalid HMM specification (non-stochastic rows, shape mismatch…).
+    #[error("invalid model: {0}")]
+    InvalidModel(String),
+
+    /// Invalid request (empty sequence, observation symbol out of range…).
+    #[error("invalid request: {0}")]
+    InvalidRequest(String),
+
+    /// JSON parse/serialize failure (jsonx substrate).
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Artifact manifest problems: missing file, bad signature, …
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT/XLA runtime failure.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Coordinator lifecycle errors (queue closed, worker panicked…).
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+
+    /// CLI usage error.
+    #[error("usage: {0}")]
+    Usage(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    pub fn invalid_model(msg: impl fmt::Display) -> Self {
+        Error::InvalidModel(msg.to_string())
+    }
+    pub fn invalid_request(msg: impl fmt::Display) -> Self {
+        Error::InvalidRequest(msg.to_string())
+    }
+    pub fn artifact(msg: impl fmt::Display) -> Self {
+        Error::Artifact(msg.to_string())
+    }
+    pub fn xla(msg: impl fmt::Display) -> Self {
+        Error::Xla(msg.to_string())
+    }
+    pub fn coordinator(msg: impl fmt::Display) -> Self {
+        Error::Coordinator(msg.to_string())
+    }
+    pub fn usage(msg: impl fmt::Display) -> Self {
+        Error::Usage(msg.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(
+            Error::invalid_model("rows").to_string(),
+            "invalid model: rows"
+        );
+        assert_eq!(
+            Error::Json { offset: 3, msg: "bad".into() }.to_string(),
+            "json error at byte 3: bad"
+        );
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

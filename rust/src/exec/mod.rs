@@ -1,0 +1,327 @@
+//! Thread-pool execution substrate (tokio/rayon are unavailable offline).
+//!
+//! Provides the two primitives the rest of the crate needs:
+//!
+//! * [`ThreadPool`] — a fixed set of workers fed by an mpsc job queue;
+//!   used by the coordinator's worker pool and the parallel scan.
+//! * [`parallel_for_chunks`] / [`scope_join`] — scoped fork-join helpers
+//!   built on `std::thread::scope`, used by the Blelloch scan levels and
+//!   the bench harness sweeps.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size thread pool. Jobs are `FnOnce()`; completion is tracked by
+/// a [`WaitGroup`] the caller can block on.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("hmm-scan-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool queue poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                // A panicking job must not kill the worker;
+                                // the WaitGroup still gets decremented by
+                                // its Drop guard.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers, size }
+    }
+
+    /// Pool sized to the machine: `available_parallelism`, capped.
+    pub fn with_default_size() -> Self {
+        Self::new(default_parallelism())
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job. Returns an error only if the pool is shut down.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(f))
+            .expect("pool queue closed");
+    }
+
+    /// Submit a batch of jobs and wait for all of them to finish.
+    pub fn run_all<F: FnOnce() + Send + 'static>(&self, jobs: Vec<F>) {
+        let wg = WaitGroup::new(jobs.len());
+        for f in jobs {
+            let guard = wg.guard();
+            self.submit(move || {
+                let _guard = guard; // decremented on drop, even on panic
+                f();
+            });
+        }
+        wg.wait();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // close the channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Machine parallelism with a sane floor.
+pub fn default_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Countdown latch used to join a batch of pool jobs.
+pub struct WaitGroup {
+    inner: Arc<WgInner>,
+}
+
+struct WgInner {
+    count: AtomicUsize,
+    mutex: Mutex<()>,
+    cond: std::sync::Condvar,
+}
+
+/// RAII decrement handle for a [`WaitGroup`].
+pub struct WgGuard {
+    inner: Arc<WgInner>,
+}
+
+impl WaitGroup {
+    pub fn new(count: usize) -> Self {
+        Self {
+            inner: Arc::new(WgInner {
+                count: AtomicUsize::new(count),
+                mutex: Mutex::new(()),
+                cond: std::sync::Condvar::new(),
+            }),
+        }
+    }
+
+    pub fn guard(&self) -> WgGuard {
+        WgGuard { inner: Arc::clone(&self.inner) }
+    }
+
+    pub fn wait(&self) {
+        let mut g = self.inner.mutex.lock().unwrap();
+        while self.inner.count.load(Ordering::Acquire) != 0 {
+            g = self.inner.cond.wait(g).unwrap();
+        }
+    }
+}
+
+impl Drop for WgGuard {
+    fn drop(&mut self) {
+        if self.inner.count.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = self.inner.mutex.lock().unwrap();
+            self.inner.cond.notify_all();
+        }
+    }
+}
+
+/// Split `0..len` into at most `max_chunks` contiguous ranges and run `f`
+/// on each range concurrently (scoped threads — no 'static bound).
+///
+/// `f(chunk_index, start, end)`.
+pub fn parallel_for_chunks<F>(len: usize, max_chunks: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    if len == 0 {
+        return;
+    }
+    let chunks = max_chunks.clamp(1, len);
+    if chunks == 1 {
+        f(0, 0, len);
+        return;
+    }
+    let per = len.div_ceil(chunks);
+    thread::scope(|s| {
+        for (idx, start) in (0..len).step_by(per).enumerate() {
+            let end = (start + per).min(len);
+            let f = &f;
+            s.spawn(move || f(idx, start, end));
+        }
+    });
+}
+
+/// Unsafe shared mutable view of a slice for structured data-parallel
+/// writes (each thread must touch a disjoint index set — the caller's
+/// proof obligation, documented at every use site).
+///
+/// Accessors are methods (not pub fields) so closures capture the whole
+/// wrapper — edition-2021 disjoint-field capture would otherwise grab the
+/// raw pointer directly and lose the Send/Sync impls.
+pub struct SharedSliceMut<E> {
+    ptr: *mut E,
+    len: usize,
+}
+
+unsafe impl<E: Send> Send for SharedSliceMut<E> {}
+unsafe impl<E: Send> Sync for SharedSliceMut<E> {}
+
+impl<E> SharedSliceMut<E> {
+    pub fn new(slice: &mut [E]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// # Safety
+    /// The caller must guarantee no concurrent access to any index in
+    /// `start..end` from another thread.
+    pub unsafe fn range_mut(&self, start: usize, end: usize) -> &mut [E] {
+        debug_assert!(start <= end && end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), end - start)
+    }
+
+    /// # Safety
+    /// As [`range_mut`](Self::range_mut) for the full slice: caller must
+    /// ensure the concurrently-touched index sets are disjoint.
+    pub unsafe fn full_mut(&self) -> &mut [E] {
+        std::slice::from_raw_parts_mut(self.ptr, self.len)
+    }
+
+    /// # Safety
+    /// No concurrent access to index `i`.
+    pub unsafe fn write(&self, i: usize, v: E) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+}
+
+/// Run two closures concurrently and return both results (fork-join).
+pub fn scope_join<A, B, RA, RB>(a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    thread::scope(|s| {
+        let ha = s.spawn(a);
+        let rb = b();
+        (ha.join().expect("scope_join: left side panicked"), rb)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        pool.run_all(jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        let wg = WaitGroup::new(1);
+        let g = wg.guard();
+        pool.submit(move || {
+            let _g = g;
+            panic!("job panic must not kill the worker");
+        });
+        wg.wait();
+        // Pool still functional afterwards.
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.run_all(vec![move || {
+            c.fetch_add(1, Ordering::Relaxed);
+        }]);
+        assert_eq!(counter.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn pool_shutdown_joins_workers() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // must drain the queue before joining
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn parallel_for_chunks_covers_range_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(1000, 7, |_idx, start, end| {
+            for item in hits.iter().take(end).skip(start) {
+                item.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_chunks_empty_and_single() {
+        parallel_for_chunks(0, 4, |_, _, _| panic!("must not run"));
+        let ran = AtomicU64::new(0);
+        parallel_for_chunks(5, 1, |idx, s, e| {
+            assert_eq!((idx, s, e), (0, 0, 5));
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn scope_join_returns_both() {
+        let (a, b) = scope_join(|| 1 + 1, || "x".to_string());
+        assert_eq!(a, 2);
+        assert_eq!(b, "x");
+    }
+}

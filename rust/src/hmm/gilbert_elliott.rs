@@ -1,0 +1,116 @@
+//! The Gilbert–Elliott channel model (paper §VI, Eq. 43).
+//!
+//! Two binary hidden processes — the transmitted bit b_k (switch
+//! probability p₂) and the channel regime s_k (good↔bad with p₀/p₁) —
+//! observed through y_k = b_k ⊕ v_k where v_k is Bernoulli with error
+//! rate q₀ (good regime) or q₁ (bad). The joint x_k = (s_k, b_k) is a
+//! D = 4 Markov chain over states {(0,0), (0,1), (1,0), (1,1)} encoded
+//! 0..3, with M = 2 observation symbols.
+
+use crate::linalg::Mat;
+
+use super::Hmm;
+
+/// GE channel parameters; `Default` is the paper's experimental setting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeParams {
+    /// p(bad → good) regime transition.
+    pub p0: f64,
+    /// p(good → bad) regime transition.
+    pub p1: f64,
+    /// Bit switch probability of b_k.
+    pub p2: f64,
+    /// Error rate in the good regime.
+    pub q0: f64,
+    /// Error rate in the bad regime.
+    pub q1: f64,
+}
+
+impl Default for GeParams {
+    fn default() -> Self {
+        // §VI: p0 = 0.03, p1 = 0.1, p2 = 0.05, q0 = 0.01, q1 = 0.1.
+        Self { p0: 0.03, p1: 0.1, p2: 0.05, q0: 0.01, q1: 0.1 }
+    }
+}
+
+/// Build the 4-state GE joint HMM of Eq. (43) with a uniform prior.
+pub fn gilbert_elliott(p: GeParams) -> Hmm {
+    let GeParams { p0, p1, p2, q0, q1 } = p;
+    #[rustfmt::skip]
+    let pi = Mat::from_vec(4, 4, vec![
+        (1.0 - p0) * (1.0 - p2), p0 * (1.0 - p2),         (1.0 - p0) * p2,         p0 * p2,
+        p1 * (1.0 - p2),         (1.0 - p1) * (1.0 - p2), p1 * p2,                 (1.0 - p1) * p2,
+        (1.0 - p0) * p2,         p0 * p2,                 (1.0 - p0) * (1.0 - p2), p0 * (1.0 - p2),
+        p1 * p2,                 (1.0 - p1) * p2,         p1 * (1.0 - p2),         (1.0 - p1) * (1.0 - p2),
+    ]);
+    #[rustfmt::skip]
+    let obs = Mat::from_vec(4, 2, vec![
+        1.0 - q0, q0,
+        1.0 - q1, q1,
+        q0,       1.0 - q0,
+        q1,       1.0 - q1,
+    ]);
+    Hmm::new(pi, obs, vec![0.25; 4]).expect("GE construction is always valid")
+}
+
+/// Transmitted bit encoded in joint state `x` (states 2, 3 carry b = 1).
+pub fn bit_of_state(x: usize) -> u32 {
+    (x >= 2) as u32
+}
+
+/// Channel regime encoded in joint state `x` (states 1, 3 are the bad
+/// regime s = 1).
+pub fn regime_of_state(x: usize) -> u32 {
+    (x % 2 == 1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper_values() {
+        let h = gilbert_elliott(GeParams::default());
+        assert_eq!(h.num_states(), 4);
+        assert_eq!(h.num_symbols(), 2);
+        let pi = h.transition();
+        // Row 0: (1-p0)(1-p2) = 0.97*0.95
+        assert!((pi[(0, 0)] - 0.97 * 0.95).abs() < 1e-12);
+        assert!((pi[(0, 1)] - 0.03 * 0.95).abs() < 1e-12);
+        assert!((pi[(0, 2)] - 0.97 * 0.05).abs() < 1e-12);
+        assert!((pi[(0, 3)] - 0.03 * 0.05).abs() < 1e-12);
+        let o = h.emission();
+        assert!((o[(0, 0)] - 0.99).abs() < 1e-12);
+        assert!((o[(1, 1)] - 0.1).abs() < 1e-12);
+        assert!((o[(2, 0)] - 0.01).abs() < 1e-12);
+        assert_eq!(h.prior(), &[0.25; 4]);
+    }
+
+    #[test]
+    fn rows_stochastic_for_random_params() {
+        let mut runner = crate::proptestx::Runner::new("ge-stochastic");
+        runner.run(50, |r| {
+            let p = GeParams {
+                p0: r.uniform(0.0, 1.0),
+                p1: r.uniform(0.0, 1.0),
+                p2: r.uniform(0.0, 1.0),
+                q0: r.uniform(0.0, 1.0),
+                q1: r.uniform(0.0, 1.0),
+            };
+            let h = gilbert_elliott(p); // Hmm::new validates internally
+            assert_eq!(h.num_states(), 4);
+        });
+    }
+
+    #[test]
+    fn state_encoding() {
+        assert_eq!(bit_of_state(0), 0);
+        assert_eq!(bit_of_state(1), 0);
+        assert_eq!(bit_of_state(2), 1);
+        assert_eq!(bit_of_state(3), 1);
+        assert_eq!(regime_of_state(0), 0);
+        assert_eq!(regime_of_state(1), 1);
+        assert_eq!(regime_of_state(2), 0);
+        assert_eq!(regime_of_state(3), 1);
+    }
+}

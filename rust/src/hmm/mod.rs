@@ -1,0 +1,10 @@
+//! Hidden Markov model definition, validation, sampling, and the paper's
+//! Gilbert–Elliott channel workload (§VI, Eq. 43).
+
+mod gilbert_elliott;
+mod model;
+mod sample;
+
+pub use gilbert_elliott::{bit_of_state, gilbert_elliott, regime_of_state, GeParams};
+pub use model::Hmm;
+pub use sample::{sample, Trajectory};

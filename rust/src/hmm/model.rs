@@ -1,0 +1,206 @@
+//! The HMM parameter container (Eq. 4a/4b + prior).
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// A discrete HMM with `d` hidden states and `m` observation symbols:
+///
+/// * transition `pi[i, j] = p(x_k = j | x_{k-1} = i)` (row-stochastic),
+/// * emission `obs[i, y] = p(y_k = y | x_k = i)` (row-stochastic),
+/// * prior `p(x_1)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hmm {
+    pi: Mat,
+    obs: Mat,
+    prior: Vec<f64>,
+}
+
+impl Hmm {
+    /// Validates stochasticity (rows sum to 1 within `1e-9`) and shapes.
+    pub fn new(pi: Mat, obs: Mat, prior: Vec<f64>) -> Result<Self> {
+        let d = pi.rows();
+        if pi.cols() != d {
+            return Err(Error::invalid_model("transition matrix must be square"));
+        }
+        if obs.rows() != d {
+            return Err(Error::invalid_model(format!(
+                "emission rows ({}) != number of states ({d})",
+                obs.rows()
+            )));
+        }
+        if prior.len() != d {
+            return Err(Error::invalid_model(format!(
+                "prior length ({}) != number of states ({d})",
+                prior.len()
+            )));
+        }
+        if d == 0 || obs.cols() == 0 {
+            return Err(Error::invalid_model("empty state/observation space"));
+        }
+        check_stochastic("transition", d, |r| pi.row(r))?;
+        check_stochastic("emission", d, |r| obs.row(r))?;
+        check_row("prior", &prior)?;
+        Ok(Self { pi, obs, prior })
+    }
+
+    /// Number of hidden states D.
+    pub fn num_states(&self) -> usize {
+        self.pi.rows()
+    }
+
+    /// Number of observation symbols M.
+    pub fn num_symbols(&self) -> usize {
+        self.obs.cols()
+    }
+
+    pub fn transition(&self) -> &Mat {
+        &self.pi
+    }
+
+    pub fn emission(&self) -> &Mat {
+        &self.obs
+    }
+
+    pub fn prior(&self) -> &[f64] {
+        &self.prior
+    }
+
+    /// Emission column e_k[j] = p(y_k | x_k = j) for observation `y`.
+    pub fn emission_col(&self, y: u32) -> Vec<f64> {
+        self.obs.col(y as usize)
+    }
+
+    /// Validate an observation sequence against the symbol alphabet.
+    pub fn check_observations(&self, ys: &[u32]) -> Result<()> {
+        if ys.is_empty() {
+            return Err(Error::invalid_request("empty observation sequence"));
+        }
+        let m = self.num_symbols() as u32;
+        if let Some(&bad) = ys.iter().find(|&&y| y >= m) {
+            return Err(Error::invalid_request(format!(
+                "observation symbol {bad} out of range (M = {m})"
+            )));
+        }
+        Ok(())
+    }
+
+    /// Flat f32 buffers in the exact layout the PJRT artifacts expect.
+    pub fn to_f32_parts(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let pi = self.pi.data().iter().map(|&v| v as f32).collect();
+        let obs = self.obs.data().iter().map(|&v| v as f32).collect();
+        let prior = self.prior.iter().map(|&v| v as f32).collect();
+        (pi, obs, prior)
+    }
+}
+
+fn check_stochastic<'a>(
+    what: &str,
+    rows: usize,
+    row: impl Fn(usize) -> &'a [f64],
+) -> Result<()> {
+    for r in 0..rows {
+        check_row(&format!("{what} row {r}"), row(r))?;
+    }
+    Ok(())
+}
+
+fn check_row(what: &str, row: &[f64]) -> Result<()> {
+    if row.iter().any(|&v| !(0.0..=1.0 + 1e-12).contains(&v)) {
+        return Err(Error::invalid_model(format!(
+            "{what} has entries outside [0, 1]"
+        )));
+    }
+    let s: f64 = row.iter().sum();
+    if (s - 1.0).abs() > 1e-9 {
+        return Err(Error::invalid_model(format!(
+            "{what} sums to {s}, expected 1"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple() -> Hmm {
+        Hmm::new(
+            Mat::from_vec(2, 2, vec![0.9, 0.1, 0.2, 0.8]),
+            Mat::from_vec(2, 3, vec![0.5, 0.25, 0.25, 0.1, 0.2, 0.7]),
+            vec![0.5, 0.5],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn valid_model_accepted() {
+        let h = simple();
+        assert_eq!(h.num_states(), 2);
+        assert_eq!(h.num_symbols(), 3);
+        assert_eq!(h.emission_col(2), vec![0.25, 0.7]);
+    }
+
+    #[test]
+    fn rejects_non_square_transition() {
+        let e = Hmm::new(
+            Mat::from_vec(2, 3, vec![0.5; 6]),
+            Mat::from_vec(2, 2, vec![0.5; 4]),
+            vec![0.5, 0.5],
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn rejects_non_stochastic_rows() {
+        let e = Hmm::new(
+            Mat::from_vec(2, 2, vec![0.9, 0.2, 0.2, 0.8]),
+            Mat::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]),
+            vec![0.5, 0.5],
+        );
+        assert!(e.is_err());
+        let e = Hmm::new(
+            Mat::from_vec(2, 2, vec![0.9, 0.1, 0.2, 0.8]),
+            Mat::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]),
+            vec![0.9, 0.2],
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn rejects_negative_entries() {
+        let e = Hmm::new(
+            Mat::from_vec(2, 2, vec![1.1, -0.1, 0.2, 0.8]),
+            Mat::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]),
+            vec![0.5, 0.5],
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let e = Hmm::new(
+            Mat::from_vec(2, 2, vec![0.9, 0.1, 0.2, 0.8]),
+            Mat::from_vec(3, 2, vec![0.5; 6]),
+            vec![0.5, 0.5],
+        );
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn observation_validation() {
+        let h = simple();
+        assert!(h.check_observations(&[0, 1, 2]).is_ok());
+        assert!(h.check_observations(&[]).is_err());
+        assert!(h.check_observations(&[0, 3]).is_err());
+    }
+
+    #[test]
+    fn f32_parts_layout() {
+        let h = simple();
+        let (pi, obs, prior) = h.to_f32_parts();
+        assert_eq!(pi.len(), 4);
+        assert_eq!(obs.len(), 6);
+        assert_eq!(prior, vec![0.5f32, 0.5f32]);
+        assert!((pi[1] - 0.1).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,96 @@
+//! Ancestral sampling of (state, observation) trajectories.
+
+use crate::rng::Xoshiro256StarStar;
+
+use super::Hmm;
+
+/// A sampled trajectory: hidden states and the observations they emitted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trajectory {
+    pub states: Vec<u32>,
+    pub observations: Vec<u32>,
+}
+
+/// Draw a length-`t` trajectory from the model.
+pub fn sample(hmm: &Hmm, t: usize, rng: &mut Xoshiro256StarStar) -> Trajectory {
+    let mut states = Vec::with_capacity(t);
+    let mut observations = Vec::with_capacity(t);
+    if t == 0 {
+        return Trajectory { states, observations };
+    }
+    let mut x = rng.categorical(hmm.prior());
+    for k in 0..t {
+        if k > 0 {
+            x = rng.categorical(hmm.transition().row(x));
+        }
+        let y = rng.categorical(hmm.emission().row(x));
+        states.push(x as u32);
+        observations.push(y as u32);
+    }
+    Trajectory { states, observations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::{gilbert_elliott, GeParams};
+    use crate::linalg::Mat;
+
+    #[test]
+    fn lengths_and_ranges() {
+        let h = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+        let tr = sample(&h, 500, &mut rng);
+        assert_eq!(tr.states.len(), 500);
+        assert_eq!(tr.observations.len(), 500);
+        assert!(tr.states.iter().all(|&x| x < 4));
+        assert!(tr.observations.iter().all(|&y| y < 2));
+    }
+
+    #[test]
+    fn empty_trajectory() {
+        let h = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+        let tr = sample(&h, 0, &mut rng);
+        assert!(tr.states.is_empty() && tr.observations.is_empty());
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let h = gilbert_elliott(GeParams::default());
+        let a = sample(&h, 100, &mut Xoshiro256StarStar::seed_from_u64(9));
+        let b = sample(&h, 100, &mut Xoshiro256StarStar::seed_from_u64(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn stationary_frequencies_roughly_match() {
+        // A chain that strongly prefers state 1 must show that in the
+        // empirical state frequencies.
+        let h = crate::hmm::Hmm::new(
+            Mat::from_vec(2, 2, vec![0.1, 0.9, 0.1, 0.9]),
+            Mat::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]),
+            vec![0.5, 0.5],
+        )
+        .unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(2);
+        let tr = sample(&h, 20_000, &mut rng);
+        let ones = tr.states.iter().filter(|&&x| x == 1).count() as f64;
+        let frac = ones / tr.states.len() as f64;
+        assert!((frac - 0.9).abs() < 0.02, "frac {frac}");
+    }
+
+    #[test]
+    fn emissions_follow_state_rows() {
+        // Deterministic emissions: y must equal the state.
+        let h = crate::hmm::Hmm::new(
+            Mat::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]),
+            Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]),
+            vec![0.5, 0.5],
+        )
+        .unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(3);
+        let tr = sample(&h, 1000, &mut rng);
+        assert!(tr.states.iter().zip(&tr.observations).all(|(&x, &y)| x == y));
+    }
+}

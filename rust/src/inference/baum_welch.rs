@@ -1,0 +1,342 @@
+//! Baum–Welch parameter estimation (paper §V-C): EM where the E-step is
+//! the forward–backward algorithm — and can therefore run through either
+//! the sequential or the parallel-scan smoother, which is exactly the
+//! parallelization the paper proposes for this task.
+
+use crate::elements::{sp_element_chain, sp_terminal, SpOp, TINY};
+use crate::error::Result;
+use crate::hmm::Hmm;
+use crate::linalg::{normalize_sum, Mat};
+use crate::scan::{run_scan, run_scan_rev, ScanOptions};
+
+/// Which smoother powers the E-step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EStepBackend {
+    /// Classical O(T)-span forward-backward.
+    Sequential,
+    /// Parallel-scan forward-backward (Algorithm 3) — §V-C.
+    ParallelScan,
+}
+
+/// Options for [`baum_welch`].
+#[derive(Debug, Clone, Copy)]
+pub struct BaumWelchOptions {
+    pub max_iters: usize,
+    /// Stop when the log-likelihood improves by less than this.
+    pub tol: f64,
+    pub backend: EStepBackend,
+    pub scan: ScanOptions,
+    /// Dirichlet-style additive smoothing of the M-step counts, keeping
+    /// estimated rows strictly positive.
+    pub pseudocount: f64,
+}
+
+impl Default for BaumWelchOptions {
+    fn default() -> Self {
+        Self {
+            max_iters: 50,
+            tol: 1e-6,
+            backend: EStepBackend::Sequential,
+            scan: ScanOptions::default(),
+            pseudocount: 1e-6,
+        }
+    }
+}
+
+/// Result of EM training.
+#[derive(Debug, Clone)]
+pub struct BaumWelchResult {
+    pub model: Hmm,
+    /// log p(y | θ_i) per iteration — monotone non-decreasing (checked by
+    /// tests; the property EM guarantees).
+    pub loglik_curve: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// E-step sufficient statistics.
+struct EStats {
+    gamma: Vec<f64>,   // (T, D) smoothed marginals
+    xi_sum: Mat,       // Σ_k ξ_k(i, j) pairwise expectations
+    loglik: f64,
+}
+
+/// Run Baum–Welch on a single observation sequence.
+pub fn baum_welch(
+    init: &Hmm,
+    ys: &[u32],
+    opts: BaumWelchOptions,
+) -> Result<BaumWelchResult> {
+    init.check_observations(ys)?;
+    let mut model = init.clone();
+    let mut curve = Vec::with_capacity(opts.max_iters);
+    let mut converged = false;
+
+    for _ in 0..opts.max_iters {
+        let stats = e_step(&model, ys, opts)?;
+        curve.push(stats.loglik);
+        model = m_step(&model, ys, &stats, opts.pseudocount)?;
+        if curve.len() >= 2 {
+            let delta = curve[curve.len() - 1] - curve[curve.len() - 2];
+            if delta.abs() < opts.tol {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    let iterations = curve.len();
+    Ok(BaumWelchResult { model, loglik_curve: curve, iterations, converged })
+}
+
+fn e_step(hmm: &Hmm, ys: &[u32], opts: BaumWelchOptions) -> Result<EStats> {
+    let d = hmm.num_states();
+    let t = ys.len();
+
+    // Forward/backward potentials — via parallel scans (§V-C) or the
+    // classical recursions; both produce normalized ψ^f row / ψ^b col
+    // representations we can take γ and ξ from.
+    let (fwd_rows, bwd_cols, loglik) = match opts.backend {
+        EStepBackend::ParallelScan => {
+            let op = SpOp { d };
+            let elems = sp_element_chain(hmm, ys);
+            let mut fwd = elems.clone();
+            run_scan(&op, &mut fwd, opts.scan);
+            let mut bwd = elems[1..].to_vec();
+            bwd.push(sp_terminal(d));
+            run_scan_rev(&op, &mut bwd, opts.scan);
+            let loglik = fwd[t - 1].log_scale
+                + fwd[t - 1].mat.row(0).iter().sum::<f64>().max(TINY).ln();
+            let f: Vec<Vec<f64>> = fwd
+                .iter()
+                .map(|e| {
+                    let mut r = e.mat.row(0).to_vec();
+                    normalize_sum(&mut r);
+                    r
+                })
+                .collect();
+            let b: Vec<Vec<f64>> = bwd
+                .iter()
+                .map(|e| {
+                    let mut c = e.mat.col(0);
+                    let m = c.iter().fold(0.0f64, |m, &v| m.max(v)).max(TINY);
+                    c.iter_mut().for_each(|v| *v /= m);
+                    c
+                })
+                .collect();
+            (f, b, loglik)
+        }
+        EStepBackend::Sequential => {
+            let pi = hmm.transition();
+            let mut f = Vec::with_capacity(t);
+            let mut loglik = 0.0;
+            let e0 = hmm.emission_col(ys[0]);
+            let mut alpha: Vec<f64> =
+                (0..d).map(|s| hmm.prior()[s] * e0[s]).collect();
+            loglik += normalize_sum(&mut alpha).max(TINY).ln();
+            f.push(alpha.clone());
+            for k in 1..t {
+                let e = hmm.emission_col(ys[k]);
+                let mut next = vec![0.0; d];
+                for (j, n) in next.iter_mut().enumerate() {
+                    for (i, &a) in alpha.iter().enumerate() {
+                        *n += a * pi[(i, j)];
+                    }
+                    *n *= e[j];
+                }
+                loglik += normalize_sum(&mut next).max(TINY).ln();
+                alpha = next;
+                f.push(alpha.clone());
+            }
+            let mut b = vec![vec![1.0; d]; t];
+            for k in (0..t - 1).rev() {
+                let e = hmm.emission_col(ys[k + 1]);
+                let mut cur = vec![0.0; d];
+                for (i, c) in cur.iter_mut().enumerate() {
+                    for j in 0..d {
+                        *c += pi[(i, j)] * e[j] * b[k + 1][j];
+                    }
+                }
+                let m = cur.iter().fold(0.0f64, |m, &v| m.max(v)).max(TINY);
+                cur.iter_mut().for_each(|v| *v /= m);
+                b[k] = cur;
+            }
+            (f, b, loglik)
+        }
+    };
+
+    // γ_k ∝ ψ^f_k ∘ ψ^b_k ; ξ_k(i,j) ∝ ψ^f_k(i) Π(i,j) e_{k+1}(j) ψ^b_{k+1}(j).
+    let pi = hmm.transition();
+    let mut gamma = vec![0.0f64; t * d];
+    let mut xi_sum = Mat::zeros(d, d);
+    for k in 0..t {
+        let g = &mut gamma[k * d..(k + 1) * d];
+        for s in 0..d {
+            g[s] = fwd_rows[k][s] * bwd_cols[k][s];
+        }
+        normalize_sum(g);
+        if k + 1 < t {
+            let e = hmm.emission_col(ys[k + 1]);
+            let mut total = 0.0;
+            let mut local = Mat::zeros(d, d);
+            for i in 0..d {
+                for j in 0..d {
+                    let v = fwd_rows[k][i] * pi[(i, j)] * e[j] * bwd_cols[k + 1][j];
+                    local[(i, j)] = v;
+                    total += v;
+                }
+            }
+            let total = total.max(TINY);
+            for i in 0..d {
+                for j in 0..d {
+                    xi_sum[(i, j)] += local[(i, j)] / total;
+                }
+            }
+        }
+    }
+
+    Ok(EStats { gamma, xi_sum, loglik })
+}
+
+fn m_step(hmm: &Hmm, ys: &[u32], stats: &EStats, pseudo: f64) -> Result<Hmm> {
+    let d = hmm.num_states();
+    let m = hmm.num_symbols();
+    let t = ys.len();
+
+    // Prior ← γ_1.
+    let mut prior: Vec<f64> = stats.gamma[0..d].iter().map(|&v| v + pseudo).collect();
+    normalize_sum(&mut prior);
+
+    // Transition ← row-normalized Σ ξ.
+    let mut pi = Mat::zeros(d, d);
+    for i in 0..d {
+        let mut row: Vec<f64> =
+            (0..d).map(|j| stats.xi_sum[(i, j)] + pseudo).collect();
+        normalize_sum(&mut row);
+        for (j, v) in row.into_iter().enumerate() {
+            pi[(i, j)] = v;
+        }
+    }
+
+    // Emission ← per-state observed-symbol expectations.
+    let mut obs = Mat::filled(d, m, pseudo);
+    for k in 0..t {
+        let y = ys[k] as usize;
+        for s in 0..d {
+            obs[(s, y)] += stats.gamma[k * d + s];
+        }
+    }
+    for s in 0..d {
+        let row = &mut obs.data_mut()[s * m..(s + 1) * m];
+        normalize_sum(row);
+    }
+
+    Hmm::new(pi, obs, prior)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::{gilbert_elliott, sample, GeParams};
+    use crate::rng::Xoshiro256StarStar;
+
+    fn perturbed_ge() -> Hmm {
+        gilbert_elliott(GeParams { p0: 0.1, p1: 0.2, p2: 0.15, q0: 0.05, q1: 0.2 })
+    }
+
+    #[test]
+    fn loglik_is_monotone_nondecreasing() {
+        let truth = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(21);
+        let tr = sample(&truth, 400, &mut rng);
+        let res = baum_welch(
+            &perturbed_ge(),
+            &tr.observations,
+            BaumWelchOptions { max_iters: 15, ..Default::default() },
+        )
+        .unwrap();
+        for w in res.loglik_curve.windows(2) {
+            assert!(
+                w[1] >= w[0] - 1e-7,
+                "EM must not decrease loglik: {} -> {}",
+                w[0],
+                w[1]
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_and_sequential_estep_agree() {
+        let truth = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(22);
+        let tr = sample(&truth, 300, &mut rng);
+        let a = baum_welch(
+            &perturbed_ge(),
+            &tr.observations,
+            BaumWelchOptions {
+                max_iters: 5,
+                backend: EStepBackend::Sequential,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let b = baum_welch(
+            &perturbed_ge(),
+            &tr.observations,
+            BaumWelchOptions {
+                max_iters: 5,
+                backend: EStepBackend::ParallelScan,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for (x, y) in a.loglik_curve.iter().zip(&b.loglik_curve) {
+            assert!((x - y).abs() < 1e-8, "curves diverge: {x} vs {y}");
+        }
+        for (x, y) in a
+            .model
+            .transition()
+            .data()
+            .iter()
+            .zip(b.model.transition().data())
+        {
+            assert!((x - y).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn training_improves_fit_over_initial() {
+        let truth = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(23);
+        let tr = sample(&truth, 600, &mut rng);
+        let init = perturbed_ge();
+        let before = crate::inference::sp_seq(&init, &tr.observations)
+            .unwrap()
+            .log_likelihood();
+        let res = baum_welch(
+            &init,
+            &tr.observations,
+            BaumWelchOptions { max_iters: 20, ..Default::default() },
+        )
+        .unwrap();
+        let after = crate::inference::sp_seq(&res.model, &tr.observations)
+            .unwrap()
+            .log_likelihood();
+        assert!(after > before, "EM should improve fit: {before} -> {after}");
+    }
+
+    #[test]
+    fn converges_and_reports() {
+        let truth = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(24);
+        let tr = sample(&truth, 200, &mut rng);
+        let res = baum_welch(
+            &perturbed_ge(),
+            &tr.observations,
+            BaumWelchOptions { max_iters: 200, tol: 1e-4, ..Default::default() },
+        )
+        .unwrap();
+        assert!(res.converged);
+        assert!(res.iterations < 200);
+    }
+}

@@ -1,0 +1,218 @@
+//! Bayesian smoothers: sequential forward filter + RTS backward pass,
+//! and the parallel version of Särkkä & García-Fernández [30] (discrete
+//! analogue). The paper benchmarks these as BS-Seq / BS-Par alongside
+//! the potential-based SP methods — the two differ in backward-pass
+//! structure (RTS vs two-filter), not in results.
+
+use crate::elements::{bs_element_chain, BsFilterOp, TINY};
+use crate::error::Result;
+use crate::hmm::Hmm;
+use crate::linalg::{normalize_sum, Mat};
+use crate::scan::{run_scan, run_scan_rev, AssocOp, ScanOptions};
+use crate::semiring::Prob;
+
+use super::types::Posterior;
+
+/// BS-Seq — forward filter + Rauch–Tung–Striebel backward recursion.
+/// O(D²T) work and span.
+pub fn bs_seq(hmm: &Hmm, ys: &[u32]) -> Result<Posterior> {
+    hmm.check_observations(ys)?;
+    let d = hmm.num_states();
+    let t = ys.len();
+    let pi = hmm.transition();
+
+    // Forward filter p(x_k | y_{1:k}).
+    let mut filtered = vec![0.0f64; t * d];
+    let mut loglik = 0.0;
+    {
+        let e = hmm.emission_col(ys[0]);
+        let f = &mut filtered[0..d];
+        for s in 0..d {
+            f[s] = hmm.prior()[s] * e[s];
+        }
+        loglik += normalize_sum(f).max(f64::MIN_POSITIVE).ln();
+    }
+    for k in 1..t {
+        let e = hmm.emission_col(ys[k]);
+        let (prev, cur) = filtered.split_at_mut(k * d);
+        let prev = &prev[(k - 1) * d..];
+        let cur = &mut cur[..d];
+        for (j, c) in cur.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for (i, &p) in prev.iter().enumerate() {
+                acc += p * pi[(i, j)];
+            }
+            *c = acc * e[j];
+        }
+        loglik += normalize_sum(cur).max(f64::MIN_POSITIVE).ln();
+    }
+
+    // RTS backward: γ_k = f_k ∘ Π (γ_{k+1} ⊘ pred_{k+1}).
+    let mut gamma = vec![0.0f64; t * d];
+    gamma[(t - 1) * d..].copy_from_slice(&filtered[(t - 1) * d..]);
+    for k in (0..t - 1).rev() {
+        let f = &filtered[k * d..(k + 1) * d];
+        // pred_{k+1}[j] = Σ_i f_k[i] Π[i,j]
+        let mut pred = vec![0.0f64; d];
+        for (j, p) in pred.iter_mut().enumerate() {
+            for (i, &fi) in f.iter().enumerate() {
+                *p += fi * pi[(i, j)];
+            }
+        }
+        let ratio: Vec<f64> = (0..d)
+            .map(|j| gamma[(k + 1) * d + j] / pred[j].max(TINY))
+            .collect();
+        let g = &mut gamma[k * d..(k + 1) * d];
+        for (i, gi) in g.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for (j, &rj) in ratio.iter().enumerate() {
+                acc += pi[(i, j)] * rj;
+            }
+            *gi = f[i] * acc;
+        }
+        normalize_sum(g);
+    }
+
+    Ok(Posterior::new(d, gamma, loglik))
+}
+
+/// Backward RTS conditional composition: the elements are the matrices
+/// S_k[m, i] = p(x_k = i | x_{k+1} = m, y_{1:k}) and composition is
+/// R_k = R_{k+1} · S_k (descending matrix product). With the ascending
+/// suffix-scan convention (out[k] = a_k ⊗ … ⊗ a_{T-1}) the operator is
+/// therefore the *flipped* row-normalized product.
+struct RtsOp {
+    d: usize,
+}
+
+impl AssocOp<Mat> for RtsOp {
+    fn identity(&self) -> Mat {
+        Mat::identity::<Prob>(self.d)
+    }
+    fn combine(&self, a: &Mat, b: &Mat) -> Mat {
+        // later (higher-index) element `b` composes on the left
+        let mut m = b.matmul::<Prob>(a);
+        for r in 0..self.d {
+            let row = &mut m.data_mut()[r * self.d..(r + 1) * self.d];
+            normalize_sum(row);
+        }
+        m
+    }
+}
+
+/// BS-Par — parallel Bayesian smoother [30]:
+/// 1. parallel scan of filtering elements (f, ĝ, γ) → p(x_k | y_{1:k});
+/// 2. reversed parallel scan of RTS conditionals → p(x_k | y_{1:T}).
+///
+/// O(D³ log T) span, O(D³ T) work.
+pub fn bs_par(hmm: &Hmm, ys: &[u32], opts: ScanOptions) -> Result<Posterior> {
+    hmm.check_observations(ys)?;
+    let d = hmm.num_states();
+    let t = ys.len();
+
+    // Forward: filtering-element scan.
+    let op = BsFilterOp { d };
+    let mut fwd = bs_element_chain(hmm, ys);
+    run_scan(&op, &mut fwd, opts);
+    // After absorbing the first element the conditional rows coincide:
+    // row 0 of f is p(x_k | y_{1:k}).
+    let filtered: Vec<&[f64]> = fwd.iter().map(|e| e.f.row(0)).collect();
+
+    // log p(y_{1:T}) from the full-interval element: g_full(x_0) is
+    // constant in x_0 = p(y_{1:T}).
+    let last = &fwd[t - 1];
+    let loglik = last.log_scale + last.g[0].max(TINY).ln();
+
+    // Backward: RTS conditionals S_k from filtered marginals, composed
+    // by a reversed scan; smoothed_k = filtered_{T-1} · R_k.
+    let pi = hmm.transition();
+    let mut elems: Vec<Mat> = Vec::with_capacity(t);
+    for k in 0..t - 1 {
+        let f = filtered[k];
+        let mut s = Mat::zeros(d, d);
+        for m in 0..d {
+            let mut total = 0.0;
+            for i in 0..d {
+                let w = f[i] * pi[(i, m)];
+                s[(m, i)] = w;
+                total += w;
+            }
+            let total = total.max(TINY);
+            for i in 0..d {
+                s[(m, i)] /= total;
+            }
+        }
+        elems.push(s);
+    }
+    elems.push(Mat::identity::<Prob>(d)); // terminal R_{T-1} = I
+
+    let rts = RtsOp { d };
+    let f_last: Vec<f64> = filtered[t - 1].to_vec();
+    let mut suffix = elems;
+    run_scan_rev(&rts, &mut suffix, opts);
+
+    let mut gamma = vec![0.0f64; t * d];
+    for k in 0..t {
+        let g = &mut gamma[k * d..(k + 1) * d];
+        let r = &suffix[k];
+        for (i, gi) in g.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for (m, &fm) in f_last.iter().enumerate() {
+                acc += fm * r[(m, i)];
+            }
+            *gi = acc;
+        }
+        normalize_sum(g);
+    }
+
+    Ok(Posterior::new(d, gamma, loglik))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::{gilbert_elliott, GeParams};
+
+    #[test]
+    fn last_marginal_equals_filtered() {
+        // RTS smoothing leaves the terminal filtered marginal unchanged.
+        let hmm = gilbert_elliott(GeParams::default());
+        let ys = vec![0, 1, 1, 0, 0, 1];
+        let post = bs_seq(&hmm, &ys).unwrap();
+        let par = bs_par(&hmm, &ys, ScanOptions::serial()).unwrap();
+        let k = ys.len() - 1;
+        for s in 0..4 {
+            assert!((post.gamma(k)[s] - par.gamma(k)[s]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn smoothing_uses_future_information() {
+        // With sticky dynamics and an isolated flipped observation, the
+        // smoothed marginal at the flip must stay closer to the
+        // surrounding regime than the filtered estimate would be.
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut ys = vec![0u32; 21];
+        ys[10] = 1;
+        let post = bs_seq(&hmm, &ys).unwrap();
+        // bit(x) = 0 for states 0,1 — smoothed belief should still favor
+        // bit 0 at the flip given 20 surrounding zeros.
+        let p_bit0 = post.gamma(10)[0] + post.gamma(10)[1];
+        assert!(p_bit0 > 0.5, "p_bit0 = {p_bit0}");
+    }
+
+    #[test]
+    fn marginals_are_distributions() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let ys: Vec<u32> = (0..257).map(|i| ((i / 11) % 2) as u32).collect();
+        for post in [
+            bs_seq(&hmm, &ys).unwrap(),
+            bs_par(&hmm, &ys, ScanOptions::default()).unwrap(),
+        ] {
+            for k in 0..ys.len() {
+                let s: f64 = post.gamma(k).iter().sum();
+                assert!((s - 1.0).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Max-product MAP estimators: sequential (Lemma 3 + Theorem 4),
+//! parallel-scan (Algorithm 5), and the path-based parallel variant
+//! (§IV-B, Definition 4 / Corollary 1).
+
+use crate::elements::{
+    mp_element_chain, mp_terminal, safe_ln, MpOp, PathElement, PathOp,
+};
+use crate::error::Result;
+use crate::hmm::Hmm;
+use crate::linalg::argmax;
+use crate::scan::{run_scan, run_scan_rev, AssocOp, ScanOptions};
+
+use super::types::MapEstimate;
+
+/// MP-Seq — sequential max-product: the ψ̃^f / ψ̃^b recursions of
+/// Lemma 3, combined per Theorem 4 (Eq. 40). O(D²T) work and span.
+pub fn mp_seq(hmm: &Hmm, ys: &[u32]) -> Result<MapEstimate> {
+    hmm.check_observations(ys)?;
+    let d = hmm.num_states();
+    let t = ys.len();
+    let lpi: Vec<f64> = hmm.transition().data().iter().map(|&v| safe_ln(v)).collect();
+
+    // Forward maxima ψ̃^f_k (Lemma 3, first recursion).
+    let mut fs = vec![f64::NEG_INFINITY; t * d];
+    {
+        let e = hmm.emission_col(ys[0]);
+        for s in 0..d {
+            fs[s] = safe_ln(hmm.prior()[s]) + safe_ln(e[s]);
+        }
+    }
+    for k in 1..t {
+        let e = hmm.emission_col(ys[k]);
+        let (prev, cur) = fs.split_at_mut(k * d);
+        let prev = &prev[(k - 1) * d..];
+        let cur = &mut cur[..d];
+        for (j, c) in cur.iter_mut().enumerate() {
+            let mut best = f64::NEG_INFINITY;
+            for (i, &p) in prev.iter().enumerate() {
+                best = best.max(p + lpi[i * d + j]);
+            }
+            *c = best + safe_ln(e[j]);
+        }
+    }
+
+    // Backward maxima ψ̃^b_k (Lemma 3, second recursion).
+    let mut bs = vec![0.0f64; t * d];
+    for k in (0..t.saturating_sub(1)).rev() {
+        let e = hmm.emission_col(ys[k + 1]);
+        let (cur, next) = bs.split_at_mut((k + 1) * d);
+        let cur = &mut cur[k * d..];
+        let next = &next[..d];
+        for (i, c) in cur.iter_mut().enumerate() {
+            let mut best = f64::NEG_INFINITY;
+            for j in 0..d {
+                best = best.max(lpi[i * d + j] + safe_ln(e[j]) + next[j]);
+            }
+            *c = best;
+        }
+    }
+
+    // Theorem 4 (Eq. 40): x*_k = argmax ψ̃^f ψ̃^b.
+    let mut path = vec![0u32; t];
+    for k in 0..t {
+        let delta: Vec<f64> = (0..d).map(|s| fs[k * d + s] + bs[k * d + s]).collect();
+        path[k] = argmax(&delta) as u32;
+    }
+    let log_prob = fs[(t - 1) * d..]
+        .iter()
+        .fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+    Ok(MapEstimate { path, log_prob })
+}
+
+/// MP-Par — parallel max-product (Algorithm 5): forward and reversed
+/// parallel scans over log-domain elements with the tropical ∨ combine,
+/// MAP states via Eq. (40). O(D³ log T) span, O(D³ T) work.
+pub fn mp_par(hmm: &Hmm, ys: &[u32], opts: ScanOptions) -> Result<MapEstimate> {
+    hmm.check_observations(ys)?;
+    let d = hmm.num_states();
+    let t = ys.len();
+    let op = MpOp { d };
+
+    let elems = mp_element_chain(hmm, ys);
+    let mut fwd = elems.clone();
+    run_scan(&op, &mut fwd, opts);
+
+    let mut bwd = elems[1..].to_vec();
+    bwd.push(mp_terminal(d));
+    run_scan_rev(&op, &mut bwd, opts);
+
+    let mut path = vec![0u32; t];
+    for k in 0..t {
+        // ψ̃^f from row 0 (prior-broadcast rows), ψ̃^b from column 0
+        // (terminal-broadcast columns).
+        let frow = fwd[k].mat.row(0);
+        let delta: Vec<f64> = (0..d).map(|s| frow[s] + bwd[k].mat[(s, 0)]).collect();
+        path[k] = argmax(&delta) as u32;
+    }
+    let log_prob = fwd[t - 1]
+        .mat
+        .row(0)
+        .iter()
+        .fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+    Ok(MapEstimate { path, log_prob })
+}
+
+/// Path-based parallel Viterbi (§IV-B): a single parallel *reduction*
+/// over [`PathElement`]s computes ã_{0:T+1} (Corollary 1) whose stored
+/// path is x*_{1:T} directly. Memory O(D²T) — the cost Algorithm 5
+/// avoids; provided for the paper's comparison of the two formulations.
+pub fn mp_path_par(hmm: &Hmm, ys: &[u32], opts: ScanOptions) -> Result<MapEstimate> {
+    hmm.check_observations(ys)?;
+    let d = hmm.num_states();
+    let op = PathOp { d };
+
+    let mut elems: Vec<PathElement> = mp_element_chain(hmm, ys)
+        .into_iter()
+        .map(|e| PathElement::leaf(e.mat))
+        .collect();
+    elems.push(PathElement::leaf(mp_terminal(d).mat));
+
+    // Tree reduction (the scan computes all prefixes; only the total is
+    // needed here, so reduce pairwise — same O(log T) span, less work).
+    let total = tree_reduce(&op, &mut elems, opts);
+
+    // Corollary 1: ã_{0:T+1} holds x*_{1:T} as its interior path for any
+    // (x_0, x_{T+1}) pair — both endpoints are broadcast dimensions.
+    let path: Vec<u32> = total.paths[0].clone();
+    let log_prob = total.mat[(0, 0)];
+    Ok(MapEstimate { path, log_prob })
+}
+
+fn tree_reduce<E, Op>(op: &Op, elems: &mut Vec<E>, opts: ScanOptions) -> E
+where
+    E: Clone + Send + Sync,
+    Op: AssocOp<E>,
+{
+    while elems.len() > 1 {
+        let pairs = elems.len() / 2;
+        let mut next: Vec<E> = Vec::with_capacity(pairs + 1);
+        if pairs >= opts.min_parallel_work && opts.threads > 1 {
+            let mut buf: Vec<Option<E>> = vec![None; pairs];
+            {
+                let out = crate::exec::SharedSliceMut::new(&mut buf);
+                let elems_ref: &[E] = elems;
+                crate::exec::parallel_for_chunks(pairs, opts.threads, |_, lo, hi| {
+                    for p in lo..hi {
+                        let combined =
+                            op.combine(&elems_ref[2 * p], &elems_ref[2 * p + 1]);
+                        // SAFETY: slot p written by exactly one chunk.
+                        unsafe { out.write(p, Some(combined)) };
+                    }
+                });
+            }
+            next.extend(buf.into_iter().map(|o| o.unwrap()));
+        } else {
+            for p in 0..pairs {
+                next.push(op.combine(&elems[2 * p], &elems[2 * p + 1]));
+            }
+        }
+        if elems.len() % 2 == 1 {
+            next.push(elems[elems.len() - 1].clone());
+        }
+        *elems = next;
+    }
+    elems.pop().expect("tree_reduce on empty input")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::{gilbert_elliott, GeParams};
+
+    #[test]
+    fn mp_seq_logprob_equals_forward_max() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let ys = vec![0, 1, 0, 0, 1, 1, 0];
+        let a = mp_seq(&hmm, &ys).unwrap();
+        let b = super::super::viterbi(&hmm, &ys).unwrap();
+        assert!((a.log_prob - b.log_prob).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tree_reduce_orders_correctly() {
+        // Non-commutative check via string concatenation.
+        struct Cat;
+        impl AssocOp<String> for Cat {
+            fn identity(&self) -> String {
+                String::new()
+            }
+            fn combine(&self, a: &String, b: &String) -> String {
+                format!("{a}{b}")
+            }
+        }
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            let mut v: Vec<String> = (0..n).map(|i| i.to_string()).collect();
+            let total = tree_reduce(&Cat, &mut v, ScanOptions::serial());
+            let want: String = (0..n).map(|i| i.to_string()).collect();
+            assert_eq!(total, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn path_par_full_path_length() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let ys = vec![1, 0, 0, 1, 1];
+        let est = mp_path_par(&hmm, &ys, ScanOptions::serial()).unwrap();
+        assert_eq!(est.path.len(), 5);
+        assert!(est.path.iter().all(|&s| s < 4));
+    }
+}

@@ -1,0 +1,165 @@
+//! Sum-product smoothers: the classical two-filter algorithm
+//! (Algorithm 1 + Eq. 22) and its parallel-scan version (Algorithm 3).
+
+use crate::elements::{sp_element_chain, sp_terminal, SpElement, SpOp};
+use crate::error::Result;
+use crate::hmm::Hmm;
+use crate::linalg::normalize_sum;
+use crate::scan::{run_scan, run_scan_rev, ScanOptions};
+
+use super::types::Posterior;
+
+/// SP-Seq — classical sum-product (Algorithm 1): forward α and backward
+/// β recursions with per-step rescaling, marginals via Eq. (22).
+/// O(D²T) work and span.
+pub fn sp_seq(hmm: &Hmm, ys: &[u32]) -> Result<Posterior> {
+    hmm.check_observations(ys)?;
+    let d = hmm.num_states();
+    let t = ys.len();
+    let pi = hmm.transition();
+
+    // Forward pass: α_k ∝ ψ^f_{1,k}, rescaled to sum 1; log Z accumulates.
+    let mut alphas = vec![0.0f64; t * d];
+    let mut loglik = 0.0;
+    {
+        let e = hmm.emission_col(ys[0]);
+        let a = &mut alphas[0..d];
+        for s in 0..d {
+            a[s] = hmm.prior()[s] * e[s];
+        }
+        loglik += normalize_sum(a).max(f64::MIN_POSITIVE).ln();
+    }
+    for k in 1..t {
+        let e = hmm.emission_col(ys[k]);
+        let (prev, cur) = alphas.split_at_mut(k * d);
+        let prev = &prev[(k - 1) * d..];
+        let cur = &mut cur[..d];
+        for (j, c) in cur.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            for (i, &p) in prev.iter().enumerate() {
+                acc += p * pi[(i, j)];
+            }
+            *c = acc * e[j];
+        }
+        loglik += normalize_sum(cur).max(f64::MIN_POSITIVE).ln();
+    }
+
+    // Backward pass: β_k ∝ ψ^b_{k,T}, rescaled (scales cancel in Eq. 22).
+    let mut beta = vec![1.0f64; d];
+    let mut gamma = vec![0.0f64; t * d];
+    for k in (0..t).rev() {
+        let g = &mut gamma[k * d..(k + 1) * d];
+        let a = &alphas[k * d..(k + 1) * d];
+        for s in 0..d {
+            g[s] = a[s] * beta[s];
+        }
+        normalize_sum(g);
+        if k > 0 {
+            let e = hmm.emission_col(ys[k]);
+            let mut next = vec![0.0f64; d];
+            for (i, n) in next.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for j in 0..d {
+                    acc += pi[(i, j)] * e[j] * beta[j];
+                }
+                *n = acc;
+            }
+            normalize_sum(&mut next);
+            beta = next;
+        }
+    }
+
+    Ok(Posterior::new(d, gamma, loglik))
+}
+
+/// SP-Par — parallel sum-product (Algorithm 3): forward parallel scan
+/// for ψ^f, reversed parallel scan for ψ^b, marginals via Eq. (22).
+/// O(D³ log T) span, O(D³ T) work.
+pub fn sp_par(hmm: &Hmm, ys: &[u32], opts: ScanOptions) -> Result<Posterior> {
+    hmm.check_observations(ys)?;
+    let d = hmm.num_states();
+    let t = ys.len();
+    let op = SpOp { d };
+
+    // Algorithm 3 lines 1-4: initialize elements; forward scan.
+    let elems = sp_element_chain(hmm, ys);
+    let mut fwd = elems.clone();
+    run_scan(&op, &mut fwd, opts);
+
+    // Lines 5-8: backward elements are ψ_{k,k+1} for k = 1..T, i.e. the
+    // interior elements shifted by one plus the terminal all-ones
+    // element; reversed scan yields a_{k:T+1} = ψ^b.
+    let mut bwd: Vec<SpElement> = elems[1..].to_vec();
+    bwd.push(sp_terminal(d));
+    run_scan_rev(&op, &mut bwd, opts);
+
+    // Lines 9-11 (Eq. 22): p(x_k) ∝ ψ^f(x_k) ψ^b(x_k). The forward
+    // element has identical rows (prior broadcast) — read row 0; the
+    // backward element has identical columns — read column 0. The log
+    // scales cancel in the per-step normalization.
+    let mut gamma = vec![0.0f64; t * d];
+    for k in 0..t {
+        let g = &mut gamma[k * d..(k + 1) * d];
+        let frow = fwd[k].mat.row(0);
+        for s in 0..d {
+            g[s] = frow[s] * bwd[k].mat[(s, 0)];
+        }
+        normalize_sum(g);
+    }
+
+    let last = &fwd[t - 1];
+    let loglik =
+        last.log_scale + last.mat.row(0).iter().sum::<f64>().max(f64::MIN_POSITIVE).ln();
+    Ok(Posterior::new(d, gamma, loglik))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::{gilbert_elliott, GeParams};
+
+    #[test]
+    fn uniform_emissions_give_prior_marginal_at_start() {
+        // With uninformative emissions the k=1 smoothed marginal equals
+        // the prior pushed through nothing — i.e. the prior itself for a
+        // doubly-stochastic transition matrix.
+        let hmm = crate::hmm::Hmm::new(
+            crate::linalg::Mat::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]),
+            crate::linalg::Mat::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]),
+            vec![0.3, 0.7],
+        )
+        .unwrap();
+        let post = sp_seq(&hmm, &[0, 1, 0]).unwrap();
+        assert!((post.gamma(0)[0] - 0.3).abs() < 1e-12);
+        assert!((post.gamma(0)[1] - 0.7).abs() < 1e-12);
+        let par = sp_par(&hmm, &[0, 1, 0], ScanOptions::serial()).unwrap();
+        assert!((par.gamma(0)[0] - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loglik_decreases_with_unlikely_observations() {
+        let hmm = gilbert_elliott(GeParams::default());
+        // all-zeros is a typical sequence; rapid alternation is less
+        // likely under sticky dynamics.
+        let steady = sp_seq(&hmm, &vec![0; 64]).unwrap();
+        let alt: Vec<u32> = (0..64).map(|i| (i % 2) as u32).collect();
+        let jumpy = sp_seq(&hmm, &alt).unwrap();
+        assert!(steady.log_likelihood() > jumpy.log_likelihood());
+    }
+
+    #[test]
+    fn marginals_are_distributions() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let ys: Vec<u32> = (0..333).map(|i| ((i / 7) % 2) as u32).collect();
+        for post in [
+            sp_seq(&hmm, &ys).unwrap(),
+            sp_par(&hmm, &ys, ScanOptions::default()).unwrap(),
+        ] {
+            for k in 0..ys.len() {
+                let s: f64 = post.gamma(k).iter().sum();
+                assert!((s - 1.0).abs() < 1e-9);
+                assert!(post.gamma(k).iter().all(|&v| (0.0..=1.0).contains(&v)));
+            }
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Common result containers for the inference algorithms.
+
+/// Smoothing posterior: p(x_k | y_{1:T}) for every k, plus log p(y_{1:T}).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Posterior {
+    d: usize,
+    gamma: Vec<f64>, // row-major (T, D)
+    loglik: f64,
+}
+
+impl Posterior {
+    pub fn new(d: usize, gamma: Vec<f64>, loglik: f64) -> Self {
+        assert!(d > 0 && gamma.len() % d == 0, "gamma shape");
+        Self { d, gamma, loglik }
+    }
+
+    /// Sequence length T.
+    pub fn len(&self) -> usize {
+        self.gamma.len() / self.d
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gamma.is_empty()
+    }
+
+    /// Number of states D.
+    pub fn num_states(&self) -> usize {
+        self.d
+    }
+
+    /// Marginal distribution at step `k` (slice of length D, sums to 1).
+    pub fn gamma(&self, k: usize) -> &[f64] {
+        &self.gamma[k * self.d..(k + 1) * self.d]
+    }
+
+    /// Flat (T·D) marginal buffer.
+    pub fn gamma_flat(&self) -> &[f64] {
+        &self.gamma
+    }
+
+    /// log p(y_{1:T}).
+    pub fn log_likelihood(&self) -> f64 {
+        self.loglik
+    }
+
+    /// Pointwise MAP of the marginals (the smoothed state estimate).
+    pub fn marginal_map(&self) -> Vec<u32> {
+        (0..self.len())
+            .map(|k| crate::linalg::argmax(self.gamma(k)) as u32)
+            .collect()
+    }
+}
+
+/// MAP (Viterbi) estimate: the most likely state sequence and its joint
+/// log probability log p(x*_{1:T}, y_{1:T}).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MapEstimate {
+    pub path: Vec<u32>,
+    pub log_prob: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn posterior_accessors() {
+        let p = Posterior::new(2, vec![0.3, 0.7, 0.9, 0.1, 0.5, 0.5], -1.0);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.num_states(), 2);
+        assert_eq!(p.gamma(1), &[0.9, 0.1]);
+        assert_eq!(p.log_likelihood(), -1.0);
+        assert_eq!(p.marginal_map(), vec![1, 0, 0]);
+        assert!(!p.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn posterior_rejects_bad_shape() {
+        Posterior::new(2, vec![0.1; 5], 0.0);
+    }
+}

@@ -1,0 +1,110 @@
+//! The classical Viterbi algorithm (paper Algorithm 4), in log domain.
+
+use crate::elements::safe_ln;
+use crate::error::Result;
+use crate::hmm::Hmm;
+use crate::linalg::argmax;
+
+use super::types::MapEstimate;
+
+/// Classical Viterbi (Algorithm 4): forward max recursion storing the
+/// argmax function u, then backtrace. O(D²T) work and span.
+pub fn viterbi(hmm: &Hmm, ys: &[u32]) -> Result<MapEstimate> {
+    hmm.check_observations(ys)?;
+    let d = hmm.num_states();
+    let t = ys.len();
+    let pi = hmm.transition();
+
+    // log-domain transition matrix, precomputed once.
+    let lpi: Vec<f64> = pi.data().iter().map(|&v| safe_ln(v)).collect();
+
+    // Forward pass (lines 2-6): V_k and u_{k-1}.
+    let mut v: Vec<f64> = {
+        let e = hmm.emission_col(ys[0]);
+        (0..d).map(|s| safe_ln(hmm.prior()[s]) + safe_ln(e[s])).collect()
+    };
+    let mut u = vec![0u32; (t - 1) * d];
+    for k in 1..t {
+        let e = hmm.emission_col(ys[k]);
+        let mut vn = vec![f64::NEG_INFINITY; d];
+        let uk = &mut u[(k - 1) * d..k * d];
+        for (i, &vi) in v.iter().enumerate() {
+            let lrow = &lpi[i * d..(i + 1) * d];
+            for j in 0..d {
+                let cand = vi + lrow[j];
+                if cand > vn[j] {
+                    vn[j] = cand;
+                    uk[j] = i as u32;
+                }
+            }
+        }
+        for (j, x) in vn.iter_mut().enumerate() {
+            *x += safe_ln(e[j]);
+        }
+        v = vn;
+    }
+
+    // Backward pass (lines 8-11): backtrace from the best terminal state.
+    let mut path = vec![0u32; t];
+    let best_last = argmax(&v);
+    path[t - 1] = best_last as u32;
+    for k in (1..t).rev() {
+        path[k - 1] = u[(k - 1) * d + path[k] as usize];
+    }
+
+    Ok(MapEstimate { path, log_prob: v[best_last] })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::{gilbert_elliott, GeParams, Hmm};
+    use crate::linalg::Mat;
+
+    #[test]
+    fn deterministic_chain_recovers_states() {
+        // Near-deterministic emissions: the Viterbi path must equal the
+        // emitting states.
+        let hmm = Hmm::new(
+            Mat::from_vec(2, 2, vec![0.7, 0.3, 0.3, 0.7]),
+            Mat::from_vec(2, 2, vec![0.99, 0.01, 0.01, 0.99]),
+            vec![0.5, 0.5],
+        )
+        .unwrap();
+        let ys = vec![0, 0, 1, 1, 1, 0, 0];
+        let est = viterbi(&hmm, &ys).unwrap();
+        assert_eq!(est.path, ys);
+        assert!(est.log_prob < 0.0);
+    }
+
+    #[test]
+    fn path_score_matches_reported_log_prob() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let ys: Vec<u32> = (0..200).map(|i| ((i / 13) % 2) as u32).collect();
+        let est = viterbi(&hmm, &ys).unwrap();
+        // Re-score the returned path independently.
+        let mut lp = (hmm.prior()[est.path[0] as usize]
+            * hmm.emission()[(est.path[0] as usize, ys[0] as usize)])
+            .ln();
+        for k in 1..ys.len() {
+            lp += (hmm.transition()[(est.path[k - 1] as usize, est.path[k] as usize)]
+                * hmm.emission()[(est.path[k] as usize, ys[k] as usize)])
+                .ln();
+        }
+        assert!((lp - est.log_prob).abs() < 1e-9);
+    }
+
+    #[test]
+    fn impossible_observation_under_zero_emission() {
+        // A state with zero emission probability for a symbol must never
+        // appear at that step.
+        let hmm = Hmm::new(
+            Mat::from_vec(2, 2, vec![0.5, 0.5, 0.5, 0.5]),
+            Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]),
+            vec![0.5, 0.5],
+        )
+        .unwrap();
+        let est = viterbi(&hmm, &[0, 1, 0, 1]).unwrap();
+        assert_eq!(est.path, vec![0, 1, 0, 1]);
+    }
+}

@@ -1,0 +1,43 @@
+//! # hmm-scan
+//!
+//! Temporal parallelization of inference in hidden Markov models —
+//! a Rust + JAX + Pallas reproduction of Hassan, Särkkä &
+//! García-Fernández, *IEEE TSP* 2021 (DOI 10.1109/TSP.2021.3103338).
+//!
+//! The crate is organized in three groups (see DESIGN.md):
+//!
+//! * **Algorithm library** — [`semiring`], [`linalg`], [`scan`],
+//!   [`hmm`], [`elements`], [`inference`], [`blockwise`]: native-Rust
+//!   implementations of every algorithm the paper benchmarks, used for
+//!   verification, CPU baselines and the figure benches.
+//! * **Serving runtime** — [`runtime`] (PJRT artifact loading and
+//!   execution) and [`coordinator`] (router, batcher, temporal sharder):
+//!   the L3 layer that serves inference requests over the AOT-compiled
+//!   XLA artifacts produced by `python/compile/aot.py`.
+//! * **Substrates** — [`rng`], [`jsonx`], [`exec`], [`cli`], [`benchx`],
+//!   [`proptestx`], [`report`], [`config`], [`simulator`]: in-tree
+//!   replacements for crates unavailable in the offline build
+//!   environment plus the work-span GPU simulator used for Figs. 4–6.
+
+pub mod benchx;
+pub mod blockwise;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod elements;
+pub mod error;
+pub mod experiments;
+pub mod exec;
+pub mod hmm;
+pub mod inference;
+pub mod jsonx;
+pub mod linalg;
+pub mod proptestx;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod scan;
+pub mod semiring;
+pub mod simulator;
+
+pub use error::{Error, Result};

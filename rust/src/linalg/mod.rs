@@ -1,0 +1,385 @@
+//! Dense matrices over a [`Semiring`](crate::semiring::Semiring).
+//!
+//! The paper's elements a_{i:j} are D×D potential matrices and both of
+//! its associative operators are semiring matrix products (Eq. 16 over
+//! (+,×); Eq. 42 over (max,×) / (max,+)). This module provides the
+//! storage type and the (small-D, cache-friendly) product kernels the
+//! scan and the inference algorithms build on.
+
+use std::fmt;
+
+use crate::semiring::Semiring;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows {
+            writeln!(f, "  {:?}", &self.data[r * self.cols..(r + 1) * self.cols])?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Multiplicative identity of semiring `S` (S::one on the diagonal,
+    /// S::zero elsewhere).
+    pub fn identity<S: Semiring>(d: usize) -> Self {
+        let mut m = Self::filled(d, d, S::zero());
+        for i in 0..d {
+            m[(i, i)] = S::one();
+        }
+        m
+    }
+
+    /// All-entries S::one matrix (the paper's terminal element ψ_{T,T+1}=1).
+    pub fn all_one<S: Semiring>(rows: usize, cols: usize) -> Self {
+        Self::filled(rows, cols, S::one())
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn max(&self) -> f64 {
+        self.data.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v))
+    }
+
+    /// Scale every entry (linear domain).
+    pub fn scale(&mut self, s: f64) {
+        self.data.iter_mut().for_each(|v| *v *= s);
+    }
+
+    /// Add a constant to every entry (log domain rescale).
+    pub fn shift(&mut self, s: f64) {
+        self.data.iter_mut().for_each(|v| *v += s);
+    }
+
+    /// `C = A ∘ B` (entrywise semiring mul).
+    pub fn hadamard<S: Semiring>(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| S::mul(a, b))
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Semiring matrix product `self ⋆ other`.
+    ///
+    /// ikj loop order: the inner loop runs over contiguous rows of both
+    /// the output and `other`, which is the hot path of every combine —
+    /// see EXPERIMENTS.md §Perf.
+    pub fn matmul<S: Semiring>(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dimension mismatch");
+        let mut out = Mat::filled(self.rows, other.cols, S::zero());
+        matmul_into::<S>(self, other, &mut out);
+        out
+    }
+
+    /// Semiring vector-matrix product `v ⋆ self` (row vector).
+    pub fn vecmat<S: Semiring>(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![S::zero(); self.cols];
+        for (i, &vi) in v.iter().enumerate() {
+            let row = self.row(i);
+            for (o, &m) in out.iter_mut().zip(row) {
+                *o = S::add(*o, S::mul(vi, m));
+            }
+        }
+        out
+    }
+
+    /// Semiring matrix-vector product `self ⋆ v` (column vector).
+    pub fn matvec<S: Semiring>(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols);
+        (0..self.rows)
+            .map(|r| {
+                self.row(r)
+                    .iter()
+                    .zip(v)
+                    .fold(S::zero(), |acc, (&m, &x)| S::add(acc, S::mul(m, x)))
+            })
+            .collect()
+    }
+
+    /// Argmax version of `vecmat` over a tropical semiring (`add` = max):
+    /// per output column, the extremal value `max_i v[i] ⋆ self[i,c]` and
+    /// the first index achieving it (the Viterbi `u` function).
+    pub fn vecmat_argmax<S: Semiring>(&self, v: &[f64]) -> (Vec<f64>, Vec<usize>) {
+        assert_eq!(v.len(), self.rows);
+        let mut best = vec![S::zero(); self.cols];
+        let mut arg = vec![0usize; self.cols];
+        for (i, &vi) in v.iter().enumerate() {
+            let row = self.row(i);
+            for c in 0..self.cols {
+                let cand = S::mul(vi, row[c]);
+                if i == 0 || cand > best[c] {
+                    best[c] = cand;
+                    arg[c] = i;
+                }
+            }
+        }
+        (best, arg)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// `out = a ⋆ b` without allocating (out must be pre-shaped and is
+/// overwritten). The ikj ordering keeps the inner loop contiguous.
+pub fn matmul_into<S: Semiring>(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    out.data.fill(S::zero());
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == S::zero() {
+                continue; // annihilator: skip the whole row of b
+            }
+            let brow = &b.data[k * n..(k + 1) * n];
+            for (o, &bkj) in orow.iter_mut().zip(brow) {
+                *o = S::add(*o, S::mul(aik, bkj));
+            }
+        }
+    }
+}
+
+/// Normalize `v` to sum 1 (linear domain). Returns the pre-normalization
+/// sum; if the sum is zero the vector is left unchanged and 0 returned.
+pub fn normalize_sum(v: &mut [f64]) -> f64 {
+    let s: f64 = v.iter().sum();
+    if s > 0.0 {
+        v.iter_mut().for_each(|x| *x /= s);
+    }
+    s
+}
+
+/// Index of the maximum element (first maximizer on ties).
+pub fn argmax(v: &[f64]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate().skip(1) {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptestx::{gen, Runner};
+    use crate::semiring::{MaxPlus, MaxTimes, Prob};
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-10 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn mats_close(a: &Mat, b: &Mat) -> bool {
+        a.rows() == b.rows()
+            && a.cols() == b.cols()
+            && a.data().iter().zip(b.data()).all(|(&x, &y)| close(x, y))
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut runner = Runner::new("linalg-identity");
+        runner.run(50, |r| {
+            let d = 1 + r.below(6) as usize;
+            let a = Mat::from_vec(d, d, gen::stochastic_matrix(r, d));
+            let i = Mat::identity::<Prob>(d);
+            assert!(mats_close(&a.matmul::<Prob>(&i), &a));
+            assert!(mats_close(&i.matmul::<Prob>(&a), &a));
+        });
+    }
+
+    #[test]
+    fn matmul_associative_prob_and_tropical() {
+        let mut runner = Runner::new("linalg-assoc");
+        runner.run(50, |r| {
+            let d = 2 + r.below(5) as usize;
+            let a = Mat::from_vec(d, d, gen::stochastic_matrix(r, d));
+            let b = Mat::from_vec(d, d, gen::stochastic_matrix(r, d));
+            let c = Mat::from_vec(d, d, gen::stochastic_matrix(r, d));
+            let l = a.matmul::<Prob>(&b).matmul::<Prob>(&c);
+            let rr = a.matmul::<Prob>(&b.matmul::<Prob>(&c));
+            assert!(mats_close(&l, &rr));
+            let l = a.matmul::<MaxTimes>(&b).matmul::<MaxTimes>(&c);
+            let rr = a.matmul::<MaxTimes>(&b.matmul::<MaxTimes>(&c));
+            assert!(mats_close(&l, &rr));
+        });
+    }
+
+    #[test]
+    fn prob_matmul_known_values() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul::<Prob>(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn maxplus_matmul_known_values() {
+        let a = Mat::from_vec(2, 2, vec![0.0, -1.0, -2.0, 0.0]);
+        let b = Mat::from_vec(2, 2, vec![0.0, -3.0, -1.0, 0.0]);
+        let c = a.matmul::<MaxPlus>(&b);
+        // c[0,0] = max(0+0, -1+-1) = 0 ; c[0,1] = max(0-3, -1+0) = -1
+        // c[1,0] = max(-2+0, 0-1) = -1 ; c[1,1] = max(-2-3, 0+0) = 0
+        assert_eq!(c.data(), &[0.0, -1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn rectangular_matmul_shapes() {
+        let a = Mat::filled(2, 3, 1.0);
+        let b = Mat::filled(3, 4, 2.0);
+        let c = a.matmul::<Prob>(&b);
+        assert_eq!((c.rows(), c.cols()), (2, 4));
+        assert!(c.data().iter().all(|&v| close(v, 6.0)));
+    }
+
+    #[test]
+    fn vecmat_matvec_match_matmul() {
+        let mut runner = Runner::new("linalg-vec");
+        runner.run(50, |r| {
+            let d = 1 + r.below(6) as usize;
+            let a = Mat::from_vec(d, d, gen::stochastic_matrix(r, d));
+            let v = gen::prob_vector(r, d);
+            // v as 1×d matrix
+            let vm = Mat::from_vec(1, d, v.clone());
+            let via_mat = vm.matmul::<Prob>(&a);
+            let direct = a.vecmat::<Prob>(&v);
+            assert!(via_mat.data().iter().zip(&direct).all(|(&x, &y)| close(x, y)));
+            let vm2 = Mat::from_vec(d, 1, v.clone());
+            let via_mat2 = a.matmul::<Prob>(&vm2);
+            let direct2 = a.matvec::<Prob>(&v);
+            assert!(via_mat2.data().iter().zip(&direct2).all(|(&x, &y)| close(x, y)));
+        });
+    }
+
+    #[test]
+    fn vecmat_argmax_consistent() {
+        let mut runner = Runner::new("linalg-argmax");
+        runner.run(50, |r| {
+            let d = 2 + r.below(5) as usize;
+            let a = Mat::from_vec(
+                d,
+                d,
+                (0..d * d).map(|_| r.uniform(-5.0, 0.0)).collect(),
+            );
+            let v: Vec<f64> = (0..d).map(|_| r.uniform(-5.0, 0.0)).collect();
+            let (best, arg) = a.vecmat_argmax::<MaxPlus>(&v);
+            let plain = a.transpose().matvec::<MaxPlus>(&v);
+            for c in 0..d {
+                assert!(close(best[c], plain[c]));
+                assert!(close(v[arg[c]] + a[(arg[c], c)], best[c]));
+            }
+        });
+    }
+
+    #[test]
+    fn zero_annihilator_shortcut_is_correct() {
+        // matmul_into skips S::zero() entries; verify against a naive
+        // product on a sparse matrix.
+        let a = Mat::from_vec(2, 2, vec![0.0, 2.0, 0.0, 0.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 3.0, 4.0]);
+        let c = a.matmul::<Prob>(&b);
+        assert_eq!(c.data(), &[6.0, 8.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn normalize_and_argmax_helpers() {
+        let mut v = vec![1.0, 3.0];
+        assert!(close(normalize_sum(&mut v), 4.0));
+        assert!(close(v[0], 0.25) && close(v[1], 0.75));
+        let mut z = vec![0.0, 0.0];
+        assert_eq!(normalize_sum(&mut z), 0.0);
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1); // first maximizer
+    }
+
+    #[test]
+    fn transpose_row_col() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = a.transpose();
+        assert_eq!((t.rows(), t.cols()), (3, 2));
+        assert_eq!(t.row(1), &[2.0, 5.0]);
+        assert_eq!(a.col(2), vec![3.0, 6.0]);
+    }
+}

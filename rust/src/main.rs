@@ -1,0 +1,374 @@
+//! `hmm-scan` — launcher for the temporal-parallel HMM inference system.
+//!
+//! Subcommands:
+//!   decode    run one inference request through the coordinator
+//!   serve     start the coordinator and drive a synthetic request load
+//!   figures   regenerate the paper's figures/tables into results/
+//!   simulate  query the work-span GPU simulator
+//!   train     Baum–Welch parameter estimation (§V-C) on GE data
+//!   info      artifact manifest + environment report
+
+use std::sync::Arc;
+
+use hmm_scan::cli::{flag, opt, Cli};
+use hmm_scan::config::RunConfig;
+use hmm_scan::coordinator::{
+    Algo, Coordinator, CoordinatorConfig, DecodeRequest, ExecMode,
+};
+use hmm_scan::error::{Error, Result};
+use hmm_scan::hmm::{gilbert_elliott, sample};
+use hmm_scan::inference::{baum_welch, BaumWelchOptions, EStepBackend};
+use hmm_scan::rng::Xoshiro256StarStar;
+use hmm_scan::simulator::Device;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => {}
+        Err(Error::Usage(msg)) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cli() -> Cli {
+    Cli::new("hmm-scan", "temporal parallelization of HMM inference (TSP 2021)")
+        .command(
+            "decode",
+            "run one inference request through the coordinator",
+            vec![
+                opt("t", "sequence length to sample", "1000"),
+                opt("algo", "smooth | map | bayes", "smooth"),
+                opt("mode", "auto | native | pjrt | sharded", "auto"),
+                opt("seed", "workload RNG seed", "3405691582"),
+                opt("config", "JSON config file path", ""),
+            ],
+            vec![],
+        )
+        .command(
+            "serve",
+            "start the coordinator and run a synthetic request load",
+            vec![
+                opt("requests", "number of requests", "64"),
+                opt("t", "sequence length per request", "1000"),
+                opt("workers", "XLA worker threads", "4"),
+                opt("config", "JSON config file path", ""),
+                flag("native", "serve natively (no artifacts)"),
+            ],
+            vec![],
+        )
+        .command(
+            "figures",
+            "regenerate the paper's figures and tables",
+            vec![
+                opt("fig", "2|3|4|5|6|table1|equiv|ablations", "all"),
+                opt("out", "output directory", "results"),
+                opt("config", "JSON config file path", ""),
+                flag("all", "generate everything"),
+                flag("quick", "reduced grid for smoke runs"),
+            ],
+            vec![],
+        )
+        .command(
+            "simulate",
+            "query the work-span GPU simulator",
+            vec![
+                opt("t", "sequence length", "100000"),
+                opt("d", "number of states", "4"),
+                opt("cores", "device cores", "10496"),
+                opt("method", "one of the paper's seven methods", "SP-Par"),
+            ],
+            vec![],
+        )
+        .command(
+            "train",
+            "Baum-Welch (§V-C) on sampled GE data",
+            vec![
+                opt("t", "training sequence length", "2000"),
+                opt("iters", "max EM iterations", "30"),
+                opt("backend", "seq | par (E-step engine)", "par"),
+                opt("config", "JSON config file path", ""),
+            ],
+            vec![],
+        )
+        .command("info", "artifact manifest + environment report", vec![], vec![])
+}
+
+fn load_config(parsed: &hmm_scan::cli::Parsed) -> Result<RunConfig> {
+    match parsed.get("config") {
+        Some("") | None => Ok(RunConfig::default()),
+        Some(path) => RunConfig::from_json_file(std::path::Path::new(path)),
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let parsed = cli().parse(args)?;
+    match parsed.command.as_str() {
+        "decode" => cmd_decode(&parsed),
+        "serve" => cmd_serve(&parsed),
+        "figures" => cmd_figures(&parsed),
+        "simulate" => cmd_simulate(&parsed),
+        "train" => cmd_train(&parsed),
+        "info" => cmd_info(),
+        _ => unreachable!("cli parser validates commands"),
+    }
+}
+
+fn cmd_decode(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let config = load_config(p)?;
+    let t = p.get_usize("t")?;
+    let algo = match p.get("algo").unwrap_or("smooth") {
+        "smooth" => Algo::Smooth,
+        "map" => Algo::Map,
+        "bayes" => Algo::BayesSmooth,
+        other => return Err(Error::usage(format!("unknown algo '{other}'"))),
+    };
+    let mode = match p.get("mode").unwrap_or("auto") {
+        "auto" => ExecMode::Auto,
+        "native" => ExecMode::Native,
+        "pjrt" => ExecMode::Pjrt,
+        "sharded" => ExecMode::Sharded,
+        other => return Err(Error::usage(format!("unknown mode '{other}'"))),
+    };
+    let seed: u64 = p.get_usize("seed")? as u64;
+
+    let hmm = gilbert_elliott(config.ge);
+    let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+    let tr = sample(&hmm, t, &mut rng);
+
+    let coord_config = if mode == ExecMode::Native {
+        CoordinatorConfig::native_only()
+    } else {
+        CoordinatorConfig::default()
+    };
+    let coord = Coordinator::new(coord_config)?;
+    coord.register_model("ge", hmm.clone());
+    let resp = coord.decode(
+        DecodeRequest::new(1, "ge", tr.observations.clone(), algo).with_mode(mode),
+    )?;
+    println!("plan:    {}", resp.plan);
+    println!("elapsed: {:?}", resp.elapsed);
+    match resp.result {
+        hmm_scan::coordinator::DecodeResult::Posterior(post) => {
+            println!("loglik:  {:.6}", post.log_likelihood());
+            let map = post.marginal_map();
+            let acc = accuracy(&map, &tr.states);
+            println!("smoothed-marginal state accuracy vs truth: {acc:.4}");
+        }
+        hmm_scan::coordinator::DecodeResult::Map(est) => {
+            println!("logp:    {:.6}", est.log_prob);
+            let acc = accuracy(&est.path, &tr.states);
+            println!("MAP path state accuracy vs truth: {acc:.4}");
+        }
+    }
+    Ok(())
+}
+
+fn accuracy(got: &[u32], truth: &[u32]) -> f64 {
+    let same = got.iter().zip(truth).filter(|(a, b)| a == b).count();
+    same as f64 / truth.len().max(1) as f64
+}
+
+fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let config = load_config(p)?;
+    let n = p.get_usize("requests")?;
+    let t = p.get_usize("t")?;
+    let workers = p.get_usize("workers")?;
+    let coord_config = if p.flag("native") {
+        CoordinatorConfig::native_only()
+    } else {
+        CoordinatorConfig { xla_workers: workers, ..CoordinatorConfig::default() }
+    };
+    let coord = Arc::new(Coordinator::new(coord_config)?);
+    let hmm = gilbert_elliott(config.ge);
+    coord.register_model("ge", hmm.clone());
+
+    let handle = Arc::clone(&coord).serve();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(config.seed);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let tr = sample(&hmm, t, &mut rng);
+            let algo = if i % 2 == 0 { Algo::Smooth } else { Algo::Map };
+            handle.submit(DecodeRequest::new(i as u64, "ge", tr.observations, algo))
+        })
+        .collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().map_err(|_| Error::coordinator("reply dropped"))?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    handle.shutdown();
+
+    let snap = coord.metrics().snapshot();
+    println!("served {ok}/{n} requests in {wall:?}");
+    println!(
+        "throughput: {:.1} req/s   p50 {}µs   p99 {}µs   max {}µs",
+        ok as f64 / wall.as_secs_f64(),
+        snap.p50_us,
+        snap.p99_us,
+        snap.max_us
+    );
+    println!(
+        "batches: {} (mean occupancy {:.2})   sharded blocks: {}",
+        snap.batches,
+        snap.batch_occupancy(),
+        snap.sharded_blocks
+    );
+    Ok(())
+}
+
+fn cmd_figures(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let mut config = load_config(p)?;
+    if let Some(out) = p.get("out") {
+        config.out_dir = out.into();
+    }
+    let quick = p.flag("quick");
+    std::fs::create_dir_all(&config.out_dir)?;
+    let which = if p.flag("all") { "all" } else { p.get("fig").unwrap_or("all") };
+    match which {
+        "2" => println!("{}", hmm_scan::experiments::fig2(&config)?),
+        "3" => {
+            hmm_scan::experiments::fig3(&config, quick)?;
+            println!("wrote {}", config.out_dir.join("fig3.csv").display());
+        }
+        "4" => {
+            hmm_scan::experiments::fig4(&config)?;
+            println!("wrote {}", config.out_dir.join("fig4.csv").display());
+        }
+        "5" => {
+            hmm_scan::experiments::fig5(&config)?;
+            println!("wrote {}", config.out_dir.join("fig5.csv").display());
+        }
+        "6" => {
+            hmm_scan::experiments::fig6(&config)?;
+            println!("wrote {}", config.out_dir.join("fig6.csv").display());
+        }
+        "table1" => println!("{}", hmm_scan::experiments::table1(&config, quick)?),
+        "equiv" => {
+            println!("{}", hmm_scan::experiments::equivalence_report(&config, quick)?)
+        }
+        "ablations" => {
+            hmm_scan::experiments::ablation_block_len(&config, quick)?;
+            hmm_scan::experiments::ablation_threads(&config, quick)?;
+            println!("wrote ablation CSVs to {}", config.out_dir.display());
+        }
+        "all" => {
+            let summary = hmm_scan::experiments::run_all(&config, quick)?;
+            println!("{summary}");
+            println!("all outputs in {}", config.out_dir.display());
+        }
+        other => return Err(Error::usage(format!("unknown figure '{other}'"))),
+    }
+    Ok(())
+}
+
+fn cmd_simulate(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let t = p.get_usize("t")?;
+    let d = p.get_usize("d")?;
+    let cores = p.get_usize("cores")?;
+    let method = p.get("method").unwrap_or("SP-Par").to_string();
+    if !hmm_scan::experiments::METHODS.contains(&method.as_str()) {
+        return Err(Error::usage(format!(
+            "unknown method '{method}' (expected one of {:?})",
+            hmm_scan::experiments::METHODS
+        )));
+    }
+    let mut dev = Device::gpu_3090_default();
+    dev.cores = cores;
+    let secs = hmm_scan::experiments::simulate_method(&method, t, d, &dev);
+    println!("{method} T={t} D={d} cores={cores}: simulated {secs:.6}s");
+    Ok(())
+}
+
+fn cmd_train(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let config = load_config(p)?;
+    let t = p.get_usize("t")?;
+    let iters = p.get_usize("iters")?;
+    let backend = match p.get("backend").unwrap_or("par") {
+        "seq" => EStepBackend::Sequential,
+        "par" => EStepBackend::ParallelScan,
+        other => return Err(Error::usage(format!("unknown backend '{other}'"))),
+    };
+    let truth = gilbert_elliott(config.ge);
+    let mut rng = Xoshiro256StarStar::seed_from_u64(config.seed);
+    let tr = sample(&truth, t, &mut rng);
+    // Perturbed initialization (the estimation task).
+    let init = gilbert_elliott(hmm_scan::hmm::GeParams {
+        p0: 0.1,
+        p1: 0.2,
+        p2: 0.15,
+        q0: 0.05,
+        q1: 0.2,
+    });
+    let res = baum_welch(
+        &init,
+        &tr.observations,
+        BaumWelchOptions { max_iters: iters, backend, ..Default::default() },
+    )?;
+    println!("iterations: {} (converged: {})", res.iterations, res.converged);
+    for (i, ll) in res.loglik_curve.iter().enumerate() {
+        println!("  iter {i:>3}: loglik {ll:.6}");
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("hmm-scan — three-layer rust+JAX+Pallas HMM inference");
+    let dir = hmm_scan::runtime::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let manifest = hmm_scan::runtime::Manifest::load(&dir)?;
+        println!("artifacts: {} at {}", manifest.artifacts().len(), dir.display());
+        for a in manifest.artifacts() {
+            println!(
+                "  {:<36} entry={:<24} T={:<6} D={} M={}",
+                a.name, a.entry, a.t, a.d, a.m
+            );
+        }
+    } else {
+        println!("artifacts: none (run `make artifacts`)");
+    }
+    println!("cpu parallelism: {}", hmm_scan::exec::default_parallelism());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn decode_native_smoke() {
+        run(&argv("decode --t 200 --algo smooth --mode native")).unwrap();
+        run(&argv("decode --t 50 --algo map --mode native")).unwrap();
+        run(&argv("decode --t 50 --algo bayes --mode native")).unwrap();
+    }
+
+    #[test]
+    fn simulate_smoke() {
+        run(&argv("simulate --t 10000 --method MP-Par")).unwrap();
+        assert!(run(&argv("simulate --method Bogus")).is_err());
+    }
+
+    #[test]
+    fn usage_errors() {
+        assert!(run(&argv("")).is_err());
+        assert!(run(&argv("decode --algo nope")).is_err());
+        assert!(run(&argv("decode --mode nope")).is_err());
+    }
+
+    #[test]
+    fn train_smoke() {
+        run(&argv("train --t 200 --iters 3 --backend par")).unwrap();
+    }
+}

@@ -1,0 +1,233 @@
+//! Result reporting: CSV writers, ASCII log-log plots, markdown tables.
+//!
+//! The figure benches write a CSV per paper figure plus an ASCII
+//! rendering into `results/`, and EXPERIMENTS.md references both.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+
+/// A named series of (x, y) points — one plotted line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Write series as tidy CSV: `series,x,y`.
+pub fn write_csv(path: impl AsRef<Path>, series: &[Series]) -> Result<()> {
+    let mut out = String::from("series,x,y\n");
+    for s in series {
+        for &(x, y) in &s.points {
+            let _ = writeln!(out, "{},{},{}", csv_escape(&s.name), x, y);
+        }
+    }
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+/// Parse the same tidy CSV back (used by tests and the report builder).
+pub fn read_csv(text: &str) -> Vec<Series> {
+    let mut series: Vec<Series> = Vec::new();
+    for line in text.lines().skip(1) {
+        // The name field may be quoted and contain commas.
+        let (name, rest) = if let Some(stripped) = line.strip_prefix('"') {
+            let Some(end) = stripped.find('"') else { continue };
+            let name = stripped[..end].replace("\"\"", "\"");
+            let Some(rest) = stripped[end + 1..].strip_prefix(',') else { continue };
+            (name, rest)
+        } else {
+            let Some((name, rest)) = line.split_once(',') else { continue };
+            (name.to_string(), rest)
+        };
+        let Some((x, y)) = rest.split_once(',') else { continue };
+        let (Ok(x), Ok(y)) = (x.parse::<f64>(), y.parse::<f64>()) else { continue };
+        match series.iter_mut().find(|s| s.name == name) {
+            Some(s) => s.points.push((x, y)),
+            None => series.push(Series { name, points: vec![(x, y)] }),
+        }
+    }
+    series
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Options for [`ascii_plot`].
+#[derive(Debug, Clone, Copy)]
+pub struct PlotOptions {
+    pub width: usize,
+    pub height: usize,
+    pub log_x: bool,
+    pub log_y: bool,
+}
+
+impl Default for PlotOptions {
+    fn default() -> Self {
+        Self { width: 72, height: 20, log_x: true, log_y: true }
+    }
+}
+
+/// Render series as an ASCII scatter/line chart (the paper's figures are
+/// log-log runtime plots, so that is the default).
+pub fn ascii_plot(title: &str, series: &[Series], opts: PlotOptions) -> String {
+    let mut pts: Vec<(f64, f64, usize)> = Vec::new();
+    for (si, s) in series.iter().enumerate() {
+        for &(x, y) in &s.points {
+            if (!opts.log_x || x > 0.0) && (!opts.log_y || y > 0.0) {
+                let tx = if opts.log_x { x.log10() } else { x };
+                let ty = if opts.log_y { y.log10() } else { y };
+                pts.push((tx, ty, si));
+            }
+        }
+    }
+    let mut out = format!("## {title}\n");
+    if pts.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y, _) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let marks = ['*', '+', 'o', 'x', '#', '@', '%', '&', '~', '$'];
+    let mut grid = vec![vec![' '; opts.width]; opts.height];
+    for &(x, y, si) in &pts {
+        let cx = ((x - x0) / (x1 - x0) * (opts.width - 1) as f64).round() as usize;
+        let cy = ((y - y0) / (y1 - y0) * (opts.height - 1) as f64).round() as usize;
+        let row = opts.height - 1 - cy;
+        grid[row][cx] = marks[si % marks.len()];
+    }
+    let fmt_axis = |v: f64, log: bool| {
+        if log {
+            format!("1e{v:.1}")
+        } else {
+            format!("{v:.3}")
+        }
+    };
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            fmt_axis(y1, opts.log_y)
+        } else if i == opts.height - 1 {
+            fmt_axis(y0, opts.log_y)
+        } else {
+            String::new()
+        };
+        let _ = writeln!(out, "{label:>8} |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "{:>8} +{}", "", "-".repeat(opts.width));
+    let _ = writeln!(
+        out,
+        "{:>8}  {}{}{}",
+        "",
+        fmt_axis(x0, opts.log_x),
+        " ".repeat(opts.width.saturating_sub(12)),
+        fmt_axis(x1, opts.log_x)
+    );
+    for (si, s) in series.iter().enumerate() {
+        let _ = writeln!(out, "  {} {}", marks[si % marks.len()], s.name);
+    }
+    out
+}
+
+/// Render a markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "| {} |", headers.join(" | "));
+    let _ = writeln!(
+        out,
+        "|{}|",
+        headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        let _ = writeln!(out, "| {} |", row.join(" | "));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_round_trip() {
+        let mut a = Series::new("sp-par");
+        a.push(100.0, 0.01);
+        a.push(1000.0, 0.02);
+        let mut b = Series::new("with,comma");
+        b.push(1.0, 2.0);
+        let dir = std::env::temp_dir().join("hmm_scan_report_test");
+        let path = dir.join("fig.csv");
+        write_csv(&path, &[a.clone(), b.clone()]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = read_csv(&text);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0], a);
+        assert_eq!(back[1].points, b.points);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn plot_contains_series_markers_and_title() {
+        let mut s1 = Series::new("seq");
+        let mut s2 = Series::new("par");
+        for i in 1..6 {
+            let x = 10f64.powi(i);
+            s1.push(x, x * 1e-6);
+            s2.push(x, (x.log10()) * 1e-4);
+        }
+        let plot = ascii_plot("Fig. 3", &[s1, s2], PlotOptions::default());
+        assert!(plot.contains("## Fig. 3"));
+        assert!(plot.contains("* seq"));
+        assert!(plot.contains("+ par"));
+        assert!(plot.contains('|'));
+    }
+
+    #[test]
+    fn plot_handles_empty_and_degenerate() {
+        let p = ascii_plot("x", &[], PlotOptions::default());
+        assert!(p.contains("no data"));
+        let s = Series { name: "one".into(), points: vec![(1.0, 1.0)] };
+        let p = ascii_plot("x", &[s], PlotOptions::default());
+        assert!(p.contains("one"));
+    }
+
+    #[test]
+    fn markdown_table_shape() {
+        let t = markdown_table(
+            &["method", "T", "time"],
+            &[vec!["sp".into(), "100".into(), "1ms".into()]],
+        );
+        assert_eq!(t.lines().count(), 3);
+        assert!(t.contains("| sp | 100 | 1ms |"));
+    }
+}

@@ -1,0 +1,307 @@
+//! PJRT client wrapper: compile HLO text, execute with typed tensors.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::manifest::{ArtifactSpec, DType, IoSpec};
+
+/// A host tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Self {
+        Value::F32(vec![v], vec![])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(_, s) | Value::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(..) => DType::F32,
+            Value::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(d, _) => d.len(),
+            Value::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32(d, _) => Ok(d),
+            _ => Err(Error::xla("expected f32 tensor")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Value::I32(d, _) => Ok(d),
+            _ => Err(Error::xla("expected i32 tensor")),
+        }
+    }
+
+    /// First element as f64 (for scalar outputs).
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            Value::F32(d, _) => d
+                .first()
+                .map(|&v| v as f64)
+                .ok_or_else(|| Error::xla("empty tensor")),
+            Value::I32(d, _) => d
+                .first()
+                .map(|&v| v as f64)
+                .ok_or_else(|| Error::xla("empty tensor")),
+        }
+    }
+
+    fn matches(&self, spec: &IoSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&v| v as i64).collect();
+        let lit = match self {
+            Value::F32(d, _) => xla::Literal::vec1(d),
+            Value::I32(d, _) => xla::Literal::vec1(d),
+        };
+        lit.reshape(&dims).map_err(|e| Error::xla(e))
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &IoSpec) -> Result<Value> {
+        let value = match spec.dtype {
+            DType::F32 => {
+                Value::F32(lit.to_vec::<f32>().map_err(Error::xla)?, spec.shape.clone())
+            }
+            DType::I32 => {
+                Value::I32(lit.to_vec::<i32>().map_err(Error::xla)?, spec.shape.clone())
+            }
+        };
+        if value.len() != spec.element_count() {
+            return Err(Error::xla(format!(
+                "output '{}': got {} elements, expected {}",
+                spec.name,
+                value.len(),
+                spec.element_count()
+            )));
+        }
+        Ok(value)
+    }
+}
+
+/// The PJRT client (CPU plugin). One per process; executables share it.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu().map_err(Error::xla)? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile an artifact's HLO text into an executable.
+    pub fn compile(&self, spec: &ArtifactSpec) -> Result<Executable> {
+        self.compile_path(&spec.path, spec.clone())
+    }
+
+    fn compile_path(&self, path: &Path, spec: ArtifactSpec) -> Result<Executable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::artifact("non-utf8 artifact path"))?;
+        let proto =
+            xla::HloModuleProto::from_text_file(path_str).map_err(Error::xla)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(Error::xla)?;
+        Ok(Executable { exe, spec })
+    }
+}
+
+/// A compiled artifact bound to its manifest signature. `run` validates
+/// inputs against the signature before dispatch — shape bugs surface as
+/// typed errors, not PJRT aborts.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(Error::invalid_request(format!(
+                "{}: got {} inputs, expected {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            )));
+        }
+        for (v, s) in inputs.iter().zip(&self.spec.inputs) {
+            if !v.matches(s) {
+                return Err(Error::invalid_request(format!(
+                    "{}: input '{}' expects {:?} {:?}, got {:?} {:?}",
+                    self.spec.name,
+                    s.name,
+                    s.dtype,
+                    s.shape,
+                    v.dtype(),
+                    v.shape()
+                )));
+            }
+        }
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(Error::xla)?;
+        let out_lit = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::xla("no output buffer"))?
+            .to_literal_sync()
+            .map_err(Error::xla)?;
+
+        // aot.py lowers with return_tuple=True → the output is a tuple.
+        let parts = out_lit.to_tuple().map_err(Error::xla)?;
+        if parts.len() != self.spec.outputs.len() {
+            return Err(Error::xla(format!(
+                "{}: got {} outputs, expected {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            )));
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| Value::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{registry::artifacts_dir, Manifest};
+
+    #[test]
+    fn value_accessors() {
+        let v = Value::F32(vec![1.0, 2.0], vec![2]);
+        assert_eq!(v.shape(), &[2]);
+        assert_eq!(v.dtype(), DType::F32);
+        assert_eq!(v.as_f32().unwrap(), &[1.0, 2.0]);
+        assert!(v.as_i32().is_err());
+        assert_eq!(v.scalar().unwrap(), 1.0);
+        let s = Value::scalar_f32(3.5);
+        assert!(s.shape().is_empty());
+        assert_eq!(s.scalar().unwrap(), 3.5);
+    }
+
+    #[test]
+    fn value_spec_matching() {
+        let spec = IoSpec { name: "x".into(), shape: vec![2, 3], dtype: DType::F32 };
+        assert!(Value::F32(vec![0.0; 6], vec![2, 3]).matches(&spec));
+        assert!(!Value::F32(vec![0.0; 6], vec![3, 2]).matches(&spec));
+        assert!(!Value::I32(vec![0; 6], vec![2, 3]).matches(&spec));
+    }
+
+    /// End-to-end artifact execution — the rust half of the interchange
+    /// contract test (see python/tests/test_aot.py). Skipped when
+    /// artifacts have not been built.
+    #[test]
+    fn executes_real_artifact_against_native_reference() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts at {dir:?}");
+            return;
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        let runtime = XlaRuntime::cpu().unwrap();
+
+        let hmm = crate::hmm::gilbert_elliott(crate::hmm::GeParams::default());
+        let mut rng = crate::rng::Xoshiro256StarStar::seed_from_u64(77);
+        let t = 128usize;
+        let tr = crate::hmm::sample(&hmm, t, &mut rng);
+        let (pi, obs, prior) = hmm.to_f32_parts();
+        let ys: Vec<i32> = tr.observations.iter().map(|&y| y as i32).collect();
+        let valid = vec![1.0f32; t];
+
+        let inputs = vec![
+            Value::F32(pi, vec![4, 4]),
+            Value::F32(obs, vec![4, 2]),
+            Value::F32(prior, vec![4]),
+            Value::I32(ys, vec![t]),
+            Value::F32(valid, vec![t]),
+        ];
+
+        // Smoother artifact vs native sp_seq.
+        let spec = manifest.find("sp_par", t, 4, 2).expect("sp_par artifact");
+        let exe = runtime.compile(spec).unwrap();
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 2);
+        let gamma = out[0].as_f32().unwrap();
+        let loglik = out[1].scalar().unwrap();
+        let native = crate::inference::sp_seq(&hmm, &tr.observations).unwrap();
+        for k in 0..t {
+            for s in 0..4 {
+                let diff = (gamma[k * 4 + s] as f64 - native.gamma(k)[s]).abs();
+                assert!(diff < 1e-4, "gamma[{k}][{s}] diff {diff}");
+            }
+        }
+        assert!(
+            (loglik - native.log_likelihood()).abs()
+                < 1e-3 * native.log_likelihood().abs(),
+            "loglik {loglik} vs {}",
+            native.log_likelihood()
+        );
+
+        // Viterbi artifact vs native.
+        let spec = manifest.find("viterbi", t, 4, 2).expect("viterbi artifact");
+        let exe = runtime.compile(spec).unwrap();
+        let out = exe.run(&inputs).unwrap();
+        let path = out[0].as_i32().unwrap();
+        let native = crate::inference::viterbi(&hmm, &tr.observations).unwrap();
+        let same = path
+            .iter()
+            .zip(&native.path)
+            .filter(|(&a, &b)| a as u32 == b)
+            .count();
+        assert!(same >= t - 2, "paths differ at {} positions", t - same);
+        assert!((out[1].scalar().unwrap() - native.log_prob).abs() < 1e-3);
+
+        // Input validation errors.
+        assert!(exe.run(&inputs[..3]).is_err());
+        let mut bad = inputs.clone();
+        bad[0] = Value::F32(vec![0.0; 16], vec![16]);
+        assert!(exe.run(&bad).is_err());
+    }
+}

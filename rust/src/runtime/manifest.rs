@@ -1,0 +1,292 @@
+//! The artifact manifest — the L2→L3 interchange contract.
+//!
+//! `python/compile/aot.py` emits `manifest.json` describing every
+//! compiled HLO artifact: entry name, static shape grid position
+//! (T, D, M), and the full input/output signature. This module parses
+//! and indexes it; the [`Registry`](super::Registry) compiles artifacts
+//! lazily and the [`Router`](crate::coordinator::Router) plans requests
+//! against it.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::jsonx::Json;
+
+/// Tensor element type used in artifact signatures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::artifact(format!("unknown dtype '{other}'"))),
+        }
+    }
+}
+
+/// One input or output tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Whole-sequence vs block-wise (§V-B) artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Core,
+    Block,
+}
+
+/// One compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// L2 entry point name (`sp_par`, `viterbi`, `sp_block_fold_mid`, …).
+    pub entry: String,
+    pub kind: ArtifactKind,
+    /// Static sequence length (core) or block length (block).
+    pub t: usize,
+    /// Number of hidden states.
+    pub d: usize,
+    /// Number of observation symbols.
+    pub m: usize,
+    /// Absolute path of the HLO text file.
+    pub path: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Parsed, indexed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    dir: PathBuf,
+    artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| Error::artifact(format!("manifest.json: {e}")))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text (directory used to resolve paths).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = Json::parse(text)?;
+        if root.req_usize("version")? != 1 {
+            return Err(Error::artifact("unsupported manifest version"));
+        }
+        if root.req_str("interchange")? != "hlo-text" {
+            return Err(Error::artifact("unsupported interchange format"));
+        }
+        let mut artifacts = Vec::new();
+        for rec in root.req_arr("artifacts")? {
+            let kind = match rec.req_str("kind")? {
+                "core" => ArtifactKind::Core,
+                "block" => ArtifactKind::Block,
+                other => {
+                    return Err(Error::artifact(format!("unknown kind '{other}'")))
+                }
+            };
+            artifacts.push(ArtifactSpec {
+                name: rec.req_str("name")?.to_string(),
+                entry: rec.req_str("entry")?.to_string(),
+                kind,
+                t: rec.req_usize("t")?,
+                d: rec.req_usize("d")?,
+                m: rec.req_usize("m")?,
+                path: dir.join(rec.req_str("path")?),
+                inputs: parse_ios(rec.req_arr("inputs")?)?,
+                outputs: parse_ios(rec.req_arr("outputs")?)?,
+            });
+        }
+        let m = Self { dir, artifacts };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::BTreeSet::new();
+        for a in &self.artifacts {
+            if !seen.insert(&a.name) {
+                return Err(Error::artifact(format!("duplicate artifact '{}'", a.name)));
+            }
+            if a.t == 0 || a.d == 0 || a.m == 0 {
+                return Err(Error::artifact(format!("degenerate shape in '{}'", a.name)));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn artifacts(&self) -> &[ArtifactSpec] {
+        &self.artifacts
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Exact (entry, t, d, m) lookup.
+    pub fn find(&self, entry: &str, t: usize, d: usize, m: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.entry == entry && a.t == t && a.d == d && a.m == m)
+    }
+
+    /// Smallest core artifact of `entry` whose capacity covers `min_t`
+    /// (the router pads the remainder with masked steps).
+    pub fn smallest_covering(
+        &self,
+        entry: &str,
+        min_t: usize,
+        d: usize,
+        m: usize,
+    ) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == ArtifactKind::Core
+                    && a.entry == entry
+                    && a.d == d
+                    && a.m == m
+                    && a.t >= min_t
+            })
+            .min_by_key(|a| a.t)
+    }
+
+    /// Largest core artifact capacity for `entry` at (d, m).
+    pub fn largest_core(&self, entry: &str, d: usize, m: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == ArtifactKind::Core && a.entry == entry && a.d == d && a.m == m)
+            .max_by_key(|a| a.t)
+    }
+
+    /// Block artifact for `entry` at (d, m) — any block length.
+    pub fn block(&self, entry: &str, d: usize, m: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == ArtifactKind::Block && a.entry == entry && a.d == d && a.m == m)
+    }
+}
+
+fn parse_ios(items: &[Json]) -> Result<Vec<IoSpec>> {
+    items
+        .iter()
+        .map(|io| {
+            let shape = io
+                .req_arr("shape")?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| Error::artifact("non-integer dim"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(IoSpec {
+                name: io.req_str("name")?.to_string(),
+                shape,
+                dtype: DType::parse(io.req_str("dtype")?)?,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "interchange": "hlo-text", "generator": "x",
+      "artifacts": [
+        {"name": "sp_par_T128_D4_M2", "entry": "sp_par", "kind": "core",
+         "t": 128, "d": 4, "m": 2, "path": "sp_par_T128_D4_M2.hlo.txt",
+         "inputs": [{"name": "pi", "shape": [4,4], "dtype": "f32"},
+                    {"name": "ys", "shape": [128], "dtype": "i32"}],
+         "outputs": [{"name": "gamma", "shape": [128,4], "dtype": "f32"},
+                     {"name": "loglik", "shape": [], "dtype": "f32"}]},
+        {"name": "sp_par_T1024_D4_M2", "entry": "sp_par", "kind": "core",
+         "t": 1024, "d": 4, "m": 2, "path": "p2.hlo.txt",
+         "inputs": [], "outputs": []},
+        {"name": "sp_block_fold_mid_L64_D4_M2", "entry": "sp_block_fold_mid",
+         "kind": "block", "t": 64, "d": 4, "m": 2, "path": "b.hlo.txt",
+         "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts().len(), 3);
+        let a = m.find("sp_par", 128, 4, 2).unwrap();
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.outputs[1].shape, Vec::<usize>::new());
+        assert_eq!(a.path, PathBuf::from("/tmp/a/sp_par_T128_D4_M2.hlo.txt"));
+        assert_eq!(a.inputs[0].element_count(), 16);
+    }
+
+    #[test]
+    fn smallest_covering_picks_tightest() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert_eq!(m.smallest_covering("sp_par", 100, 4, 2).unwrap().t, 128);
+        assert_eq!(m.smallest_covering("sp_par", 128, 4, 2).unwrap().t, 128);
+        assert_eq!(m.smallest_covering("sp_par", 129, 4, 2).unwrap().t, 1024);
+        assert!(m.smallest_covering("sp_par", 2000, 4, 2).is_none());
+        assert!(m.smallest_covering("sp_par", 10, 8, 2).is_none());
+        assert_eq!(m.largest_core("sp_par", 4, 2).unwrap().t, 1024);
+    }
+
+    #[test]
+    fn block_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert!(m.block("sp_block_fold_mid", 4, 2).is_some());
+        assert!(m.block("mp_block_fold_mid", 4, 2).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse(
+            r#"{"version": 2, "interchange": "hlo-text", "artifacts": []}"#,
+            PathBuf::new()
+        )
+        .is_err());
+        let dup = SAMPLE.replace("sp_par_T1024_D4_M2", "sp_par_T128_D4_M2");
+        assert!(Manifest::parse(&dup, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration against the artifacts actually built by `make
+        // artifacts` (skipped when the directory is absent, e.g. in a
+        // bare checkout).
+        let dir = crate::runtime::registry::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts at {dir:?}");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.find("sp_par", 1024, 4, 2).is_some());
+        for a in m.artifacts() {
+            assert!(a.path.exists(), "missing artifact file {:?}", a.path);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced by
+//! `python/compile/aot.py`) and execute them from the request path.
+//!
+//! Python never runs at serve time — the interchange is
+//! `artifacts/manifest.json` + `artifacts/*.hlo.txt`, loaded through the
+//! `xla` crate's PJRT C API bindings:
+//! `HloModuleProto::from_text_file → XlaComputation → client.compile →
+//! execute`.
+
+mod client;
+mod manifest;
+pub(crate) mod registry;
+
+pub use client::{Executable, Value, XlaRuntime};
+pub use manifest::{ArtifactKind, ArtifactSpec, DType, IoSpec, Manifest};
+pub use registry::{artifacts_dir, Registry};

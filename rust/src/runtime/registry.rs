@@ -1,0 +1,130 @@
+//! Executable registry: lazy compilation + caching of artifacts.
+//!
+//! Compilation of an HLO module takes tens of milliseconds — far too
+//! slow for the request path. The registry compiles each artifact at
+//! most once (keyed by manifest name) and hands out shared handles;
+//! workers run the same executable concurrently.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+use super::client::{Executable, XlaRuntime};
+use super::manifest::Manifest;
+
+/// Default artifacts directory: `$HMM_SCAN_ARTIFACTS` or `artifacts/`
+/// relative to the workspace root.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("HMM_SCAN_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // Walk up from the current dir so tests (running in target/…) and
+    // the binary (running anywhere inside the repo) both resolve.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Thread-safe artifact registry.
+pub struct Registry {
+    runtime: XlaRuntime,
+    manifest: Manifest,
+    cache: Mutex<BTreeMap<String, Arc<Executable>>>,
+}
+
+impl Registry {
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let manifest = Manifest::load(dir.into())?;
+        let runtime = XlaRuntime::cpu()?;
+        Ok(Self { runtime, manifest, cache: Mutex::new(BTreeMap::new()) })
+    }
+
+    /// Open using [`artifacts_dir`] resolution.
+    pub fn open_default() -> Result<Self> {
+        Self::open(artifacts_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn runtime(&self) -> &XlaRuntime {
+        &self.runtime
+    }
+
+    /// Number of compiled (cached) executables.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Get (compiling on first use) the executable for `name`.
+    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(exe));
+        }
+        // Compile outside the lock: compilation is slow and other
+        // artifacts' lookups must not stall behind it. A racing double
+        // compile of the same artifact is benign (last one wins).
+        let spec = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| Error::artifact(format!("unknown artifact '{name}'")))?
+            .clone();
+        let exe = Arc::new(self.runtime.compile(&spec)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (used by `serve` startup).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.get(n)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_artifact_is_an_error() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts at {dir:?}");
+            return;
+        }
+        let reg = Registry::open(dir).unwrap();
+        assert!(reg.get("nope").is_err());
+        assert_eq!(reg.compiled_count(), 0);
+    }
+
+    #[test]
+    fn caches_compiled_executables() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts at {dir:?}");
+            return;
+        }
+        let reg = Registry::open(dir).unwrap();
+        let a = reg.get("sp_seq_T128_D4_M2").unwrap();
+        let b = reg.get("sp_seq_T128_D4_M2").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.compiled_count(), 1);
+        reg.warm(&["viterbi_T128_D4_M2"]).unwrap();
+        assert_eq!(reg.compiled_count(), 2);
+    }
+}

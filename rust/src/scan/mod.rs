@@ -1,0 +1,642 @@
+//! All-prefix-sums (scan) engines for binary associative operators.
+//!
+//! Implements the paper's computational core:
+//!
+//! * [`seq_scan`] / [`seq_scan_rev`] — the O(T) sequential baselines,
+//! * [`blelloch_scan`] — Algorithm 2 (up-sweep + down-sweep + final
+//!   pass), generalized to arbitrary T, with optional multithreaded
+//!   level execution (O(log T) span on P ≥ T processors),
+//! * [`scan_rev`] — reversed all-prefix-sums (Definition 2): reverse the
+//!   inputs, flip the operator, reverse the outputs (§III-B),
+//! * [`chunked_scan`] — the two-level block-wise scan of §V-B used when
+//!   cores ≪ T (and by the coordinator's temporal sharder).
+//!
+//! Operators are supplied through [`AssocOp`]; the element type is
+//! generic so the same engine drives sum-product matrices, max-product
+//! matrices, Bayesian-filter pairs and the path-based elements.
+
+use crate::exec::parallel_for_chunks;
+
+/// A binary associative operator with identity over elements `E`.
+///
+/// Associativity (`combine(combine(a,b),c) == combine(a,combine(b,c))`)
+/// is the contract the scans rely on; it is property-tested for every
+/// implementation in `elements/`.
+pub trait AssocOp<E>: Sync {
+    /// The neutral element (used for padding and the down-sweep root).
+    fn identity(&self) -> E;
+    /// `a ⊗ b` (order matters — the operators here are non-commutative).
+    fn combine(&self, a: &E, b: &E) -> E;
+
+    /// Fold `init ⊗ e_0 ⊗ … ⊗ e_{n-1}`. Operators with reusable scratch
+    /// (the D×D matrix elements) override this to avoid the per-combine
+    /// allocation of the default — the §Perf hot path.
+    fn fold(&self, init: E, elems: &[E]) -> E
+    where
+        E: Clone,
+    {
+        let mut acc = init;
+        for e in elems {
+            acc = self.combine(&acc, e);
+        }
+        acc
+    }
+
+    /// In-place inclusive rescan with an incoming carry:
+    /// `elems[i] ← carry ⊗ e_0 ⊗ … ⊗ e_i`. Same override rationale as
+    /// [`fold`](Self::fold).
+    fn rescan(&self, carry: &E, elems: &mut [E])
+    where
+        E: Clone,
+    {
+        let mut acc = carry.clone();
+        for e in elems.iter_mut() {
+            acc = self.combine(&acc, e);
+            *e = acc.clone();
+        }
+    }
+
+    /// Flipped-orientation fold: `e_{n-1} ⊗ … ⊗ e_0 ⊗ init` — what
+    /// [`Flip`] needs so the reversed scans keep the zero-allocation
+    /// fast path.
+    fn fold_rev(&self, init: E, elems: &[E]) -> E
+    where
+        E: Clone,
+    {
+        let mut acc = init;
+        for e in elems {
+            acc = self.combine(e, &acc);
+        }
+        acc
+    }
+
+    /// Flipped-orientation rescan (see [`fold_rev`](Self::fold_rev)).
+    fn rescan_rev(&self, carry: &E, elems: &mut [E])
+    where
+        E: Clone,
+    {
+        let mut acc = carry.clone();
+        for e in elems.iter_mut() {
+            acc = self.combine(e, &acc);
+            *e = acc.clone();
+        }
+    }
+}
+
+/// Flipped operator: `combine(a, b) = inner.combine(b, a)`. Used by the
+/// reversed scans (§III-B: "we also need to reverse the operation inside
+/// the algorithm").
+pub struct Flip<'a, Op>(pub &'a Op);
+
+impl<E, Op: AssocOp<E>> AssocOp<E> for Flip<'_, Op> {
+    fn identity(&self) -> E {
+        self.0.identity()
+    }
+    fn combine(&self, a: &E, b: &E) -> E {
+        self.0.combine(b, a)
+    }
+    fn fold(&self, init: E, elems: &[E]) -> E
+    where
+        E: Clone,
+    {
+        self.0.fold_rev(init, elems)
+    }
+    fn rescan(&self, carry: &E, elems: &mut [E])
+    where
+        E: Clone,
+    {
+        self.0.rescan_rev(carry, elems)
+    }
+    fn fold_rev(&self, init: E, elems: &[E]) -> E
+    where
+        E: Clone,
+    {
+        self.0.fold(init, elems)
+    }
+    fn rescan_rev(&self, carry: &E, elems: &mut [E])
+    where
+        E: Clone,
+    {
+        self.0.rescan(carry, elems)
+    }
+}
+
+/// Scan engine selection (see EXPERIMENTS.md §Perf for the comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScanEngine {
+    /// Blelloch tree (Algorithm 2): O(log T) span, ~3T combines. The
+    /// right schedule when cores ≳ T.
+    Blelloch,
+    /// Two-level block-wise scan (§V-B): ~2T combines in two
+    /// cache-friendly sequential sweeps per block. The right schedule
+    /// when cores ≪ T — i.e. on this CPU.
+    #[default]
+    Chunked,
+}
+
+/// Sequential inclusive prefix scan: out[k] = a_0 ⊗ … ⊗ a_k.
+pub fn seq_scan<E: Clone, Op: AssocOp<E>>(op: &Op, elems: &[E]) -> Vec<E> {
+    let mut out = Vec::with_capacity(elems.len());
+    let mut acc: Option<E> = None;
+    for e in elems {
+        let next = match &acc {
+            None => e.clone(),
+            Some(prev) => op.combine(prev, e),
+        };
+        out.push(next.clone());
+        acc = Some(next);
+    }
+    out
+}
+
+/// Sequential inclusive suffix scan: out[k] = a_k ⊗ … ⊗ a_{T-1}.
+pub fn seq_scan_rev<E: Clone, Op: AssocOp<E>>(op: &Op, elems: &[E]) -> Vec<E> {
+    let mut out = vec![None; elems.len()];
+    let mut acc: Option<E> = None;
+    for (k, e) in elems.iter().enumerate().rev() {
+        let next = match &acc {
+            None => e.clone(),
+            Some(nxt) => op.combine(e, nxt),
+        };
+        out[k] = Some(next.clone());
+        acc = Some(next);
+    }
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Threading configuration for the parallel scans.
+#[derive(Debug, Clone, Copy)]
+pub struct ScanOptions {
+    /// Maximum worker threads per level (1 = single-threaded Blelloch,
+    /// still the O(log T)-span *schedule*, executed serially).
+    pub threads: usize,
+    /// Minimum number of combines per level before threads are used —
+    /// below this the spawn overhead dominates (tuned in §Perf).
+    pub min_parallel_work: usize,
+    /// Which scan schedule `run_scan`/`run_scan_rev` dispatch to.
+    pub engine: ScanEngine,
+}
+
+impl Default for ScanOptions {
+    fn default() -> Self {
+        Self {
+            threads: crate::exec::default_parallelism(),
+            min_parallel_work: 64,
+            engine: ScanEngine::Chunked,
+        }
+    }
+}
+
+impl ScanOptions {
+    pub fn serial() -> Self {
+        Self {
+            threads: 1,
+            min_parallel_work: usize::MAX,
+            engine: ScanEngine::Chunked,
+        }
+    }
+
+    pub fn with_engine(mut self, engine: ScanEngine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Block length for the chunked engine: ~4 blocks per thread so the
+    /// tail imbalance stays small (tuned in §Perf).
+    pub fn chunk_for(&self, len: usize) -> usize {
+        len.div_ceil(self.threads.max(1) * 4).max(16)
+    }
+}
+
+/// Engine-dispatched inclusive prefix scan (used by the inference layer).
+pub fn run_scan<E, Op>(op: &Op, elems: &mut [E], opts: ScanOptions)
+where
+    E: Clone + Send + Sync,
+    Op: AssocOp<E>,
+{
+    if opts.threads <= 1 && opts.engine == ScanEngine::Chunked {
+        // One worker: a single in-place rescan is the work-minimal
+        // schedule (T combines; chunked would do 2T).
+        let ident = op.identity();
+        op.rescan(&ident, elems);
+        return;
+    }
+    match opts.engine {
+        ScanEngine::Blelloch => blelloch_scan(op, elems, opts),
+        ScanEngine::Chunked => chunked_scan(op, elems, opts.chunk_for(elems.len()), opts),
+    }
+}
+
+/// Engine-dispatched reversed all-prefix-sums (Definition 2).
+pub fn run_scan_rev<E, Op>(op: &Op, elems: &mut [E], opts: ScanOptions)
+where
+    E: Clone + Send + Sync,
+    Op: AssocOp<E>,
+{
+    elems.reverse();
+    let flipped = Flip(op);
+    run_scan(&flipped, elems, opts);
+    elems.reverse();
+}
+
+/// Blelloch work-efficient inclusive scan (paper Algorithm 2).
+///
+/// In-place transformation of `elems` into its all-prefix-sums. Arbitrary
+/// T is handled by operating on the implicit next-power-of-two tree and
+/// skipping out-of-range nodes (identity padding never materializes).
+///
+/// Span O(log T) with ≥ T/2 processors; work O(T).
+pub fn blelloch_scan<E, Op>(op: &Op, elems: &mut [E], opts: ScanOptions)
+where
+    E: Clone + Send + Sync,
+    Op: AssocOp<E>,
+{
+    let t = elems.len();
+    if t <= 1 {
+        return;
+    }
+
+    let root = largest_pow2_leq(t);
+    if root != t {
+        // Arbitrary T (Algorithm 2 note): scan the power-of-two head and
+        // the remainder tail independently (concurrently — this adds one
+        // level to the span), then push the head's total into the tail.
+        let (head, tail) = elems.split_at_mut(root);
+        if opts.threads > 1 && t >= opts.min_parallel_work {
+            crate::exec::scope_join(
+                || blelloch_scan(op, head, opts),
+                || blelloch_scan(op, tail, opts),
+            );
+        } else {
+            blelloch_scan(op, head, opts);
+            blelloch_scan(op, tail, opts);
+        }
+        let acc = head[root - 1].clone();
+        for e in tail.iter_mut() {
+            *e = op.combine(&acc, e);
+        }
+        return;
+    }
+
+    // Power-of-two in-place Blelloch.
+    // Save inputs for the final inclusive pass (Algorithm 2 lines 1-4).
+    let saved: Vec<E> = elems.to_vec();
+    let levels = t.trailing_zeros(); // log2 t exactly
+
+    // Up-sweep (lines 5-12): a[k] ← a[j] ⊗ a[k] over a balanced tree.
+    for d in 0..levels {
+        let stride = 1usize << (d + 1);
+        let half = 1usize << d;
+        let starts: Vec<usize> = (0..t).step_by(stride).collect();
+        run_level(op, elems, &starts, half, stride, opts, UpSweep);
+    }
+
+    // Root ← identity (line 13), then down-sweep (lines 14-23) computes
+    // the exclusive scan.
+    elems[t - 1] = op.identity();
+    for d in (0..levels).rev() {
+        let stride = 1usize << (d + 1);
+        let half = 1usize << d;
+        let starts: Vec<usize> = (0..t).step_by(stride).collect();
+        run_level(op, elems, &starts, half, stride, opts, DownSweep);
+    }
+
+    // Final inclusive pass (lines 24-27): a[i] ← a[i] ⊗ b[i].
+    finalize_inclusive(op, elems, &saved, opts);
+}
+
+/// Reversed all-prefix-sums (Definition 2): out[k] = a_k ⊗ … ⊗ a_{T-1},
+/// computed per §III-B by reversing inputs, flipping the operator,
+/// scanning, and reversing outputs.
+pub fn scan_rev<E, Op>(op: &Op, elems: &mut [E], opts: ScanOptions)
+where
+    E: Clone + Send + Sync,
+    Op: AssocOp<E>,
+{
+    elems.reverse();
+    let flipped = Flip(op);
+    blelloch_scan(&flipped, elems, opts);
+    elems.reverse();
+}
+
+/// Two-level block-wise scan (paper §V-B): fold `block`-sized chunks
+/// sequentially (one "computational element" per chunk), scan the chunk
+/// summaries, then finalize each chunk with its incoming prefix.
+/// This is the CPU-friendly schedule when cores ≪ T and exactly the
+/// protocol the coordinator's temporal sharder runs over PJRT workers.
+pub fn chunked_scan<E, Op>(op: &Op, elems: &mut [E], block: usize, opts: ScanOptions)
+where
+    E: Clone + Send + Sync,
+    Op: AssocOp<E>,
+{
+    let t = elems.len();
+    if t == 0 {
+        return;
+    }
+    let block = block.max(1);
+    let nblocks = t.div_ceil(block);
+    if nblocks == 1 {
+        let scanned = seq_scan(op, elems);
+        elems.clone_from_slice(&scanned);
+        return;
+    }
+
+    // Phase 1 (parallel over blocks): fold each block to its summary.
+    let mut summaries: Vec<E> = vec![op.identity(); nblocks];
+    {
+        let out = crate::exec::SharedSliceMut::new(&mut summaries);
+        let elems_ref: &[E] = elems;
+        parallel_for_chunks(nblocks, opts.threads, |_, lo, hi| {
+            for b in lo..hi {
+                let start = b * block;
+                let end = (start + block).min(t);
+                let acc = op.fold(elems_ref[start].clone(), &elems_ref[start + 1..end]);
+                // SAFETY: each summary slot b is written by exactly one
+                // chunk (chunks partition 0..nblocks).
+                unsafe { out.write(b, acc) };
+            }
+        });
+    }
+
+    // Phase 2: exclusive scan of summaries (small — sequential).
+    let mut carry = op.identity();
+    let mut incoming: Vec<E> = Vec::with_capacity(nblocks);
+    for s in &summaries {
+        incoming.push(carry.clone());
+        carry = op.combine(&carry, s);
+    }
+
+    // Phase 3 (parallel over blocks): rescan each block with its carry.
+    {
+        let base = crate::exec::SharedSliceMut::new(elems);
+        let incoming_ref = &incoming;
+        parallel_for_chunks(nblocks, opts.threads, |_, lo, hi| {
+            for b in lo..hi {
+                let start = b * block;
+                let end = (start + block).min(base.len());
+                // SAFETY: blocks are disjoint ranges of the slice.
+                let slice = unsafe { base.range_mut(start, end) };
+                op.rescan(&incoming_ref[b], slice);
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// internals
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct UpSweep;
+#[derive(Clone, Copy)]
+struct DownSweep;
+
+trait SweepKind: Copy + Send + Sync {
+    fn apply<E: Clone, Op: AssocOp<E>>(self, op: &Op, a: &mut [E], j: usize, k: usize);
+}
+
+impl SweepKind for UpSweep {
+    #[inline]
+    fn apply<E: Clone, Op: AssocOp<E>>(self, op: &Op, a: &mut [E], j: usize, k: usize) {
+        a[k] = op.combine(&a[j], &a[k]);
+    }
+}
+
+impl SweepKind for DownSweep {
+    #[inline]
+    fn apply<E: Clone, Op: AssocOp<E>>(self, op: &Op, a: &mut [E], j: usize, k: usize) {
+        let t = a[j].clone();
+        a[j] = a[k].clone();
+        a[k] = op.combine(&a[k], &t);
+    }
+}
+
+fn run_level<E, Op, K>(
+    op: &Op,
+    elems: &mut [E],
+    starts: &[usize],
+    half: usize,
+    stride: usize,
+    opts: ScanOptions,
+    kind: K,
+) where
+    E: Clone + Send + Sync,
+    Op: AssocOp<E>,
+    K: SweepKind,
+{
+    let t = elems.len();
+    let work = |i: usize, a: &mut [E]| {
+        let j = i + half - 1;
+        let k = i + stride - 1;
+        if j < t && k < t {
+            kind.apply(op, a, j, k);
+        }
+    };
+    if starts.len() < opts.min_parallel_work || opts.threads <= 1 {
+        for &i in starts {
+            work(i, elems);
+        }
+    } else {
+        // Disjoint (j, k) pairs per level: chunk the starts across
+        // threads; each start touches only indices within [i, i+stride).
+        let base = crate::exec::SharedSliceMut::new(elems);
+        parallel_for_chunks(starts.len(), opts.threads, |_, lo, hi| {
+            // SAFETY: every start's (j, k) indices are unique to that
+            // start at a given level, so chunks never alias.
+            let a = unsafe { base.full_mut() };
+            for &i in &starts[lo..hi] {
+                work(i, a);
+            }
+        });
+    }
+}
+
+fn finalize_inclusive<E, Op>(op: &Op, elems: &mut [E], saved: &[E], opts: ScanOptions)
+where
+    E: Clone + Send + Sync,
+    Op: AssocOp<E>,
+{
+    if elems.len() < opts.min_parallel_work || opts.threads <= 1 {
+        for (e, b) in elems.iter_mut().zip(saved) {
+            *e = op.combine(e, b);
+        }
+    } else {
+        let base = crate::exec::SharedSliceMut::new(elems);
+        parallel_for_chunks(base.len(), opts.threads, |_, lo, hi| {
+            // SAFETY: lo..hi ranges partition the slice across chunks.
+            let a = unsafe { base.range_mut(lo, hi) };
+            for (e, s) in a.iter_mut().zip(&saved[lo..hi]) {
+                *e = op.combine(e, s);
+            }
+        });
+    }
+}
+
+fn largest_pow2_leq(n: usize) -> usize {
+    1usize << (usize::BITS - 1 - n.leading_zeros())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptestx::Runner;
+
+    /// Non-commutative test operator: 2×2 integer-ish matrix product.
+    struct MatOp;
+    type M2 = [f64; 4];
+
+    impl AssocOp<M2> for MatOp {
+        fn identity(&self) -> M2 {
+            [1.0, 0.0, 0.0, 1.0]
+        }
+        fn combine(&self, a: &M2, b: &M2) -> M2 {
+            [
+                a[0] * b[0] + a[1] * b[2],
+                a[0] * b[1] + a[1] * b[3],
+                a[2] * b[0] + a[3] * b[2],
+                a[2] * b[1] + a[3] * b[3],
+            ]
+        }
+    }
+
+    /// String concatenation — the canonical non-commutative monoid; makes
+    /// ordering bugs (the reverse-scan flip) immediately visible.
+    struct ConcatOp;
+    impl AssocOp<String> for ConcatOp {
+        fn identity(&self) -> String {
+            String::new()
+        }
+        fn combine(&self, a: &String, b: &String) -> String {
+            format!("{a}{b}")
+        }
+    }
+
+    fn rand_m2(r: &mut crate::rng::Xoshiro256StarStar) -> M2 {
+        // near-stochastic to keep products bounded
+        let a = r.uniform(0.1, 1.0);
+        let b = r.uniform(0.1, 1.0);
+        [a, 1.0 - a, b, 1.0 - b]
+    }
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn blelloch_matches_seq_scan_all_lengths() {
+        let op = MatOp;
+        let mut runner = Runner::new("scan-blelloch");
+        for t in [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 33, 64, 100, 257] {
+            runner.run(3, |r| {
+                let elems: Vec<M2> = (0..t).map(|_| rand_m2(r)).collect();
+                let want = seq_scan(&op, &elems);
+                let mut got = elems.clone();
+                blelloch_scan(&op, &mut got, ScanOptions::serial());
+                for (w, g) in want.iter().zip(&got) {
+                    assert!(w.iter().zip(g).all(|(&x, &y)| close(x, y)), "t={t}");
+                }
+                // threaded variant
+                let mut got2 = elems;
+                blelloch_scan(
+                    &op,
+                    &mut got2,
+                    ScanOptions { threads: 4, min_parallel_work: 2, ..ScanOptions::default() },
+                );
+                for (w, g) in want.iter().zip(&got2) {
+                    assert!(w.iter().zip(g).all(|(&x, &y)| close(x, y)), "t={t} mt");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn blelloch_ordering_noncommutative() {
+        let op = ConcatOp;
+        for t in [1usize, 2, 3, 6, 8, 13, 16, 31] {
+            let elems: Vec<String> = (0..t).map(|i| format!("{i},")).collect();
+            let mut got = elems.clone();
+            blelloch_scan(&op, &mut got, ScanOptions::serial());
+            let want = seq_scan(&op, &elems);
+            assert_eq!(got, want, "t={t}");
+        }
+    }
+
+    #[test]
+    fn scan_rev_matches_seq_rev() {
+        let op = ConcatOp;
+        for t in [1usize, 2, 5, 8, 12, 16, 27] {
+            let elems: Vec<String> = (0..t).map(|i| format!("{i},")).collect();
+            let want = seq_scan_rev(&op, &elems);
+            let mut got = elems.clone();
+            scan_rev(&op, &mut got, ScanOptions::serial());
+            assert_eq!(got, want, "t={t}");
+            let mut got2 = elems;
+            scan_rev(
+                &op,
+                &mut got2,
+                ScanOptions { threads: 3, min_parallel_work: 2, ..ScanOptions::default() },
+            );
+            assert_eq!(got2, want, "t={t} mt");
+        }
+    }
+
+    #[test]
+    fn chunked_scan_matches_seq() {
+        let op = ConcatOp;
+        let mut runner = Runner::new("scan-chunked");
+        runner.run(10, |r| {
+            let t = 1 + r.below(200) as usize;
+            let block = 1 + r.below(40) as usize;
+            let elems: Vec<String> = (0..t).map(|i| format!("{i},")).collect();
+            let want = seq_scan(&op, &elems);
+            let mut got = elems;
+            chunked_scan(
+                &op,
+                &mut got,
+                block,
+                ScanOptions { threads: 4, min_parallel_work: 1, ..ScanOptions::default() },
+            );
+            assert_eq!(got, want, "t={t} block={block}");
+        });
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let op = ConcatOp;
+        let mut empty: Vec<String> = vec![];
+        blelloch_scan(&op, &mut empty, ScanOptions::default());
+        scan_rev(&op, &mut empty, ScanOptions::default());
+        chunked_scan(&op, &mut empty, 8, ScanOptions::default());
+        assert!(empty.is_empty());
+
+        let mut one = vec!["x".to_string()];
+        blelloch_scan(&op, &mut one, ScanOptions::default());
+        assert_eq!(one, vec!["x".to_string()]);
+    }
+
+    #[test]
+    fn flip_flips() {
+        let op = ConcatOp;
+        let f = Flip(&op);
+        assert_eq!(
+            f.combine(&"a".to_string(), &"b".to_string()),
+            "ba".to_string()
+        );
+    }
+
+    #[test]
+    fn large_scan_stress() {
+        let op = MatOp;
+        let mut runner = Runner::new("scan-stress");
+        runner.run(2, |r| {
+            let t = 5000 + r.below(3000) as usize;
+            let elems: Vec<M2> = (0..t).map(|_| rand_m2(r)).collect();
+            let want = seq_scan(&op, &elems);
+            let mut got = elems;
+            blelloch_scan(&op, &mut got, ScanOptions::default());
+            let last_w = want.last().unwrap();
+            let last_g = got.last().unwrap();
+            assert!(last_w.iter().zip(last_g).all(|(&x, &y)| close(x, y)));
+        });
+    }
+}

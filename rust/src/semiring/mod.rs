@@ -1,0 +1,253 @@
+//! Semiring abstractions underlying the paper's associative operators.
+//!
+//! The sum-product combine (Eq. 16) is a matrix product over the
+//! **probability semiring** (+, ×); the max-product combine (Eq. 42) is a
+//! matrix product over the **max-times** semiring — or, in log domain,
+//! **max-plus** (tropical). Expressing both as semiring matmuls lets the
+//! scan, the linear algebra, and the complexity model (simulator) share
+//! one implementation.
+
+/// A commutative-monoid-plus-monoid structure on `f64`.
+///
+/// Laws (checked by property tests in this module and exercised across
+/// `linalg`/`scan`):
+///   * `add` is associative & commutative with identity `zero()`
+///   * `mul` is associative with identity `one()`
+///   * `mul` distributes over `add`
+///   * `zero()` annihilates: `mul(zero(), x) = zero()`
+pub trait Semiring: Copy + Send + Sync + 'static {
+    const NAME: &'static str;
+    fn zero() -> f64;
+    fn one() -> f64;
+    fn add(a: f64, b: f64) -> f64;
+    fn mul(a: f64, b: f64) -> f64;
+}
+
+/// Ordinary probability semiring (ℝ₊, +, ×).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Prob;
+
+impl Semiring for Prob {
+    const NAME: &'static str = "prob";
+    #[inline]
+    fn zero() -> f64 {
+        0.0
+    }
+    #[inline]
+    fn one() -> f64 {
+        1.0
+    }
+    #[inline]
+    fn add(a: f64, b: f64) -> f64 {
+        a + b
+    }
+    #[inline]
+    fn mul(a: f64, b: f64) -> f64 {
+        a * b
+    }
+}
+
+/// Log-domain probability semiring (log-sum-exp, +). Numerically stable
+/// replacement for [`Prob`] at extreme dynamic range.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LogProb;
+
+impl Semiring for LogProb {
+    const NAME: &'static str = "logprob";
+    #[inline]
+    fn zero() -> f64 {
+        f64::NEG_INFINITY
+    }
+    #[inline]
+    fn one() -> f64 {
+        0.0
+    }
+    #[inline]
+    fn add(a: f64, b: f64) -> f64 {
+        log_sum_exp(a, b)
+    }
+    #[inline]
+    fn mul(a: f64, b: f64) -> f64 {
+        a + b
+    }
+}
+
+/// Tropical max-plus semiring (max, +) — the log-domain Viterbi algebra.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MaxPlus;
+
+impl Semiring for MaxPlus {
+    const NAME: &'static str = "maxplus";
+    #[inline]
+    fn zero() -> f64 {
+        f64::NEG_INFINITY
+    }
+    #[inline]
+    fn one() -> f64 {
+        0.0
+    }
+    #[inline]
+    fn add(a: f64, b: f64) -> f64 {
+        a.max(b)
+    }
+    #[inline]
+    fn mul(a: f64, b: f64) -> f64 {
+        a + b
+    }
+}
+
+/// Max-times semiring (max, ×) on ℝ₊ — the linear-domain Viterbi algebra
+/// (paper Eq. 42 as written).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MaxTimes;
+
+impl Semiring for MaxTimes {
+    const NAME: &'static str = "maxtimes";
+    #[inline]
+    fn zero() -> f64 {
+        0.0
+    }
+    #[inline]
+    fn one() -> f64 {
+        1.0
+    }
+    #[inline]
+    fn add(a: f64, b: f64) -> f64 {
+        a.max(b)
+    }
+    #[inline]
+    fn mul(a: f64, b: f64) -> f64 {
+        a * b
+    }
+}
+
+/// Min-plus semiring (min, +) — shortest-path algebra; included for the
+/// generic-operator extension of paper §V-A and exercised by tests.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MinPlus;
+
+impl Semiring for MinPlus {
+    const NAME: &'static str = "minplus";
+    #[inline]
+    fn zero() -> f64 {
+        f64::INFINITY
+    }
+    #[inline]
+    fn one() -> f64 {
+        0.0
+    }
+    #[inline]
+    fn add(a: f64, b: f64) -> f64 {
+        a.min(b)
+    }
+    #[inline]
+    fn mul(a: f64, b: f64) -> f64 {
+        a + b
+    }
+}
+
+/// Numerically-stable log(e^a + e^b).
+#[inline]
+pub fn log_sum_exp(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let (hi, lo) = if a >= b { (a, b) } else { (b, a) };
+    hi + (lo - hi).exp().ln_1p()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptestx::Runner;
+
+    fn sample<S: Semiring>(r: &mut crate::rng::Xoshiro256StarStar) -> f64 {
+        // Domain-appropriate sampling: nonnegative for ×-based semirings,
+        // arbitrary reals for +-based (log-domain) ones.
+        match S::NAME {
+            "prob" | "maxtimes" => r.uniform(0.0, 10.0),
+            _ => r.uniform(-20.0, 20.0),
+        }
+    }
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn laws<S: Semiring>() {
+        let mut runner = Runner::new(&format!("semiring-{}", S::NAME));
+        runner.run(200, |r| {
+            let (a, b, c) = (sample::<S>(r), sample::<S>(r), sample::<S>(r));
+            // associativity
+            assert!(close(S::add(S::add(a, b), c), S::add(a, S::add(b, c))));
+            assert!(close(S::mul(S::mul(a, b), c), S::mul(a, S::mul(b, c))));
+            // commutativity of add
+            assert!(close(S::add(a, b), S::add(b, a)));
+            // identities
+            assert!(close(S::add(a, S::zero()), a));
+            assert!(close(S::mul(a, S::one()), a));
+            assert!(close(S::mul(S::one(), a), a));
+            // annihilation
+            let z = S::mul(S::zero(), a);
+            assert!(z == S::zero() || close(z, S::zero()));
+            // distributivity
+            assert!(close(
+                S::mul(a, S::add(b, c)),
+                S::add(S::mul(a, b), S::mul(a, c))
+            ));
+        });
+    }
+
+    #[test]
+    fn prob_laws() {
+        laws::<Prob>();
+    }
+
+    #[test]
+    fn logprob_laws() {
+        laws::<LogProb>();
+    }
+
+    #[test]
+    fn maxplus_laws() {
+        laws::<MaxPlus>();
+    }
+
+    #[test]
+    fn maxtimes_laws() {
+        laws::<MaxTimes>();
+    }
+
+    #[test]
+    fn minplus_laws() {
+        laws::<MinPlus>();
+    }
+
+    #[test]
+    fn logprob_matches_prob() {
+        // log-domain semiring must mirror the linear one through exp/ln.
+        let mut runner = Runner::new("logprob-mirror");
+        runner.run(200, |r| {
+            let a = r.uniform(0.01, 5.0);
+            let b = r.uniform(0.01, 5.0);
+            assert!(close(LogProb::add(a.ln(), b.ln()), (a + b).ln()));
+            assert!(close(LogProb::mul(a.ln(), b.ln()), (a * b).ln()));
+        });
+    }
+
+    #[test]
+    fn log_sum_exp_extremes() {
+        assert_eq!(log_sum_exp(f64::NEG_INFINITY, 3.0), 3.0);
+        assert_eq!(log_sum_exp(3.0, f64::NEG_INFINITY), 3.0);
+        assert_eq!(
+            log_sum_exp(f64::NEG_INFINITY, f64::NEG_INFINITY),
+            f64::NEG_INFINITY
+        );
+        // no overflow at large magnitudes
+        let v = log_sum_exp(1000.0, 1000.0);
+        assert!((v - (1000.0 + 2f64.ln())).abs() < 1e-12);
+    }
+}
