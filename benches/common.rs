@@ -1,11 +1,26 @@
 //! Shared setup for the figure benches. `HMM_SCAN_BENCH_FULL=1` runs the
 //! paper's full T grid (10²…10⁵); the default is a reduced grid so
-//! `cargo bench` completes in minutes.
+//! `cargo bench` completes in minutes. All method dispatch goes through
+//! the unified `engine::Engine` (see `experiments::run_method`).
 use hmm_scan::config::RunConfig;
+use hmm_scan::engine::Engine;
+use hmm_scan::hmm::{gilbert_elliott, sample};
+use hmm_scan::rng::Xoshiro256StarStar;
 
 #[allow(dead_code)]
 pub fn bench_config() -> (RunConfig, bool) {
     let full = std::env::var("HMM_SCAN_BENCH_FULL").as_deref() == Ok("1");
     let config = RunConfig::default();
     (config, !full)
+}
+
+/// Gilbert–Elliott workload + a ready engine for the hot-path benches.
+#[allow(dead_code)]
+pub fn ge_engine(t: usize) -> (Engine, Vec<u32>) {
+    let config = RunConfig::default();
+    let hmm = gilbert_elliott(config.ge);
+    let mut rng = Xoshiro256StarStar::seed_from_u64(1);
+    let tr = sample(&hmm, t, &mut rng);
+    let engine = Engine::builder(hmm).scan_options(config.scan_options()).build();
+    (engine, tr.observations)
 }

@@ -1,10 +1,15 @@
 //! Bench target: the L3 hot-path primitives (element init, ⊗/∨ combines,
-//! scan sweeps). These numbers calibrate the GPU simulator's cost model
-//! and are the before/after record for EXPERIMENTS.md §Perf.
+//! scan sweeps) plus the `engine` serving hot path — workspace reuse vs
+//! a fresh engine per call (the per-call D×D allocation cost). These
+//! numbers calibrate the GPU simulator's cost model and are the
+//! before/after record for EXPERIMENTS.md §Perf.
+mod common;
+
 use hmm_scan::benchx::{bench, format_table, BenchConfig};
 use hmm_scan::elements::{
     mp_element_chain, sp_element_chain, MpOp, SpOp,
 };
+use hmm_scan::engine::{Algorithm, Engine};
 use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
 use hmm_scan::rng::Xoshiro256StarStar;
 use hmm_scan::scan::{blelloch_scan, AssocOp, ScanOptions};
@@ -46,5 +51,23 @@ fn main() {
             },
         ));
     }
+
+    // Engine hot path: the serving-loop shape. "reused" amortizes the
+    // workspace across calls (zero per-call element allocations once
+    // warm); "fresh" pays the allocating path every call — the delta is
+    // the workspace win.
+    let (mut engine, ys) = common::ge_engine(16384);
+    rows.push(bench("engine_smooth_reused/T=16384", BenchConfig::heavy(), || {
+        engine.run(Algorithm::SpPar, &ys).unwrap()
+    }));
+    let opts = engine.scan_options();
+    rows.push(bench("engine_smooth_fresh/T=16384", BenchConfig::heavy(), || {
+        let mut fresh = Engine::builder(hmm.clone()).scan_options(opts).build();
+        fresh.run(Algorithm::SpPar, &ys).unwrap()
+    }));
+    rows.push(bench("engine_map_reused/T=16384", BenchConfig::heavy(), || {
+        engine.run(Algorithm::MpPar, &ys).unwrap()
+    }));
+
     println!("{}", format_table(&rows));
 }

@@ -3,14 +3,14 @@
 //!
 //! A two-regime HMM over the DNA alphabet {A, C, G, T}: inside CpG
 //! islands C/G are enriched; outside, A/T dominate. We synthesize a
-//! genome with known island boundaries, then segment it with the
-//! parallel smoother and the parallel max-product MAP estimator, and
-//! score boundary recovery.
+//! genome with known island boundaries, then segment it through the
+//! unified `Engine` — the parallel smoother and the parallel max-product
+//! MAP estimator — and score boundary recovery.
 //!
 //!     cargo run --release --example cpg_islands
 
+use hmm_scan::engine::{Algorithm, Engine};
 use hmm_scan::hmm::Hmm;
-use hmm_scan::inference::{mp_par, sp_par};
 use hmm_scan::linalg::Mat;
 use hmm_scan::rng::Xoshiro256StarStar;
 use hmm_scan::scan::ScanOptions;
@@ -43,10 +43,12 @@ fn main() -> hmm_scan::Result<()> {
     let true_islands: usize = tr.states.iter().filter(|&&x| x == ISLAND as u32).count();
     println!("synthetic genome: {t} bases, {true_islands} island bases");
 
-    // Posterior segmentation (smoothing) and MAP segmentation.
-    let opts = ScanOptions::default();
-    let post = sp_par(&hmm, &tr.observations, opts)?;
-    let map = mp_par(&hmm, &tr.observations, opts)?;
+    // Posterior segmentation (smoothing) and MAP segmentation, both
+    // through one engine.
+    let mut engine =
+        Engine::builder(hmm).scan_options(ScanOptions::default()).build();
+    let post = engine.run(Algorithm::SpPar, &tr.observations)?.into_posterior()?;
+    let map = engine.run(Algorithm::MpPar, &tr.observations)?.into_map()?;
 
     // Confusion statistics for the MAP segmentation.
     let (mut tp, mut fp, mut fnn, mut tn) = (0usize, 0usize, 0usize, 0usize);

@@ -16,8 +16,8 @@ use std::time::Instant;
 use hmm_scan::coordinator::{
     Algo, Coordinator, CoordinatorConfig, DecodeRequest, DecodeResult, ExecMode,
 };
+use hmm_scan::engine::{Algorithm, Engine};
 use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
-use hmm_scan::inference;
 use hmm_scan::rng::Xoshiro256StarStar;
 use hmm_scan::scan::ScanOptions;
 
@@ -49,12 +49,15 @@ fn main() -> hmm_scan::Result<()> {
     println!("Gilbert–Elliott channel, T = {t}");
     println!("raw channel bit-error rate: {raw_ber:.4}\n");
 
-    // --- Native library: sequential vs parallel (the paper's Fig. 3) ---
+    // --- Native library via the unified engine: sequential vs parallel
+    // (the paper's Fig. 3) ---
+    let mut engine =
+        Engine::builder(hmm.clone()).scan_options(ScanOptions::default()).build();
     let t0 = Instant::now();
-    let seq = inference::viterbi(&hmm, &tr.observations)?;
+    let seq = engine.run(Algorithm::Viterbi, &tr.observations)?.into_map()?;
     let seq_time = t0.elapsed();
     let t0 = Instant::now();
-    let par = inference::mp_par(&hmm, &tr.observations, ScanOptions::default())?;
+    let par = engine.run(Algorithm::MpPar, &tr.observations)?.into_map()?;
     let par_time = t0.elapsed();
     println!("native Viterbi (seq):      {seq_time:?}  logp {:.3}", seq.log_prob);
     println!("native max-product (par):  {par_time:?}  logp {:.3}", par.log_prob);
@@ -63,14 +66,13 @@ fn main() -> hmm_scan::Result<()> {
     assert!((seq.log_prob - par.log_prob).abs() < 1e-6 * seq.log_prob.abs());
 
     let t0 = Instant::now();
-    let smooth_seq = inference::sp_seq(&hmm, &tr.observations)?;
-    let sp_seq_time = t0.elapsed();
+    let smooth_seq = engine.run(Algorithm::SpSeq, &tr.observations)?.into_posterior()?;
+    let smooth_seq_time = t0.elapsed();
     let t0 = Instant::now();
-    let smooth_par =
-        inference::sp_par(&hmm, &tr.observations, ScanOptions::default())?;
-    let sp_par_time = t0.elapsed();
-    println!("\nnative smoother (seq):     {sp_seq_time:?}  loglik {:.3}", smooth_seq.log_likelihood());
-    println!("native smoother (par):     {sp_par_time:?}  loglik {:.3}", smooth_par.log_likelihood());
+    let smooth_par = engine.run(Algorithm::SpPar, &tr.observations)?.into_posterior()?;
+    let smooth_par_time = t0.elapsed();
+    println!("\nnative smoother (seq):     {smooth_seq_time:?}  loglik {:.3}", smooth_seq.log_likelihood());
+    println!("native smoother (par):     {smooth_par_time:?}  loglik {:.3}", smooth_par.log_likelihood());
     let mmap = smooth_par.marginal_map();
     println!("decoded BER (marginal MAP): {:.4}", ber(&mmap, &tr.states));
 
@@ -106,7 +108,7 @@ fn main() -> hmm_scan::Result<()> {
     )?;
     println!("\npjrt core (T=1000 padded): {:?}  plan {}", resp.elapsed, resp.plan);
     let DecodeResult::Map(est) = &resp.result else { unreachable!() };
-    let native = inference::viterbi(&hmm, &short)?;
+    let native = engine.run(Algorithm::Viterbi, &short)?.into_map()?;
     assert!((est.log_prob - native.log_prob).abs() < 1e-2);
     println!("\nall layers agree ✓");
     Ok(())

@@ -1,33 +1,37 @@
 //! §Perf probe: end-to-end timings of every native method at the
-//! paper's largest T (10⁵). The before/after iteration log built from
-//! this probe is recorded in EXPERIMENTS.md §Perf.
+//! paper's largest T (10⁵), dispatched through the unified `Engine`
+//! (so repeated runs exercise the workspace-reuse hot path). The
+//! before/after iteration log built from this probe is recorded in
+//! EXPERIMENTS.md §Perf.
 //!
 //!     cargo run --release --example perf_probe
+use hmm_scan::engine::{Algorithm, Engine};
 use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
-use hmm_scan::inference::*;
 use hmm_scan::scan::ScanOptions;
 use hmm_scan::rng::Xoshiro256StarStar;
 use std::time::Instant;
+
 fn main() {
     let hmm = gilbert_elliott(GeParams::default());
     let mut rng = Xoshiro256StarStar::seed_from_u64(1);
     let tr = sample(&hmm, 100_000, &mut rng);
     let ys = &tr.observations;
-    let opts = ScanOptions::default();
-    for (name, f) in [
-        ("sp_seq", Box::new(|| { sp_seq(&hmm, ys).unwrap().log_likelihood() }) as Box<dyn Fn() -> f64>),
-        ("sp_par", Box::new(|| { sp_par(&hmm, ys, opts).unwrap().log_likelihood() })),
-        ("bs_par", Box::new(|| { bs_par(&hmm, ys, opts).unwrap().log_likelihood() })),
-        ("mp_seq", Box::new(|| { mp_seq(&hmm, ys).unwrap().log_prob })),
-        ("mp_par", Box::new(|| { mp_par(&hmm, ys, opts).unwrap().log_prob })),
-        ("viterbi", Box::new(|| { viterbi(&hmm, ys).unwrap().log_prob })),
+    let mut engine =
+        Engine::builder(hmm).scan_options(ScanOptions::default()).build();
+    for alg in [
+        Algorithm::SpSeq,
+        Algorithm::SpPar,
+        Algorithm::BsPar,
+        Algorithm::MpSeq,
+        Algorithm::MpPar,
+        Algorithm::Viterbi,
     ] {
         let mut best = f64::INFINITY;
         for _ in 0..3 {
             let t0 = Instant::now();
-            std::hint::black_box(f());
+            std::hint::black_box(engine.run(alg, ys).unwrap());
             best = best.min(t0.elapsed().as_secs_f64());
         }
-        println!("{name}: {:.1}ms", best*1e3);
+        println!("{}: {:.1}ms", alg.name(), best * 1e3);
     }
 }

@@ -1,6 +1,8 @@
-//! §Perf decomposition probe: stage-by-stage timing of sp_par (element
-//! construction, clones, forward/backward scans) used to find the next
-//! bottleneck during the optimization pass (EXPERIMENTS.md §Perf).
+//! §Perf decomposition probe: stage-by-stage timing of the SP-Par
+//! smoother's internals (element construction, clones, forward/backward
+//! scans) used to find the next bottleneck during the optimization pass
+//! (EXPERIMENTS.md §Perf). Deliberately below the `engine` API — this
+//! probe times the raw primitives the engine composes.
 //!
 //!     cargo run --release --example perf_probe2
 use hmm_scan::elements::*;

@@ -1,10 +1,11 @@
-//! Quickstart: define an HMM, run smoothing and MAP inference, compare
-//! the sequential and parallel-scan engines.
+//! Quickstart: define an HMM, build an inference `Engine`, run smoothing
+//! and MAP inference, and compare the sequential and parallel-scan
+//! schedules — one entry point for every algorithm.
 //!
 //!     cargo run --release --example quickstart
 
+use hmm_scan::engine::{Algorithm, Engine};
 use hmm_scan::hmm::Hmm;
-use hmm_scan::inference::{mp_par, sp_par, sp_seq, viterbi};
 use hmm_scan::linalg::Mat;
 use hmm_scan::scan::ScanOptions;
 
@@ -17,13 +18,17 @@ fn main() -> hmm_scan::Result<()> {
         vec![0.7, 0.3],                                // prior
     )?;
 
+    // One engine serves every algorithm; repeated calls reuse its
+    // scratch workspace.
+    let mut engine = Engine::builder(hmm).scan_options(ScanOptions::default()).build();
+
     // A week of observations: Dry, Dry, Damp, Wet, Wet, Damp, Dry.
     let ys = vec![0u32, 0, 1, 2, 2, 1, 0];
 
     // Smoothing marginals p(x_k | y_{1:T}) — classical and parallel-scan
     // engines are algebraically equivalent (the paper's premise).
-    let seq = sp_seq(&hmm, &ys)?;
-    let par = sp_par(&hmm, &ys, ScanOptions::default())?;
+    let seq = engine.run(Algorithm::SpSeq, &ys)?.into_posterior()?;
+    let par = engine.run(Algorithm::SpPar, &ys)?.into_posterior()?;
     println!("log p(y) = {:.6} (seq) / {:.6} (par)", seq.log_likelihood(), par.log_likelihood());
     println!("\nday  p(Sunny)  p(Rainy)");
     for (k, _) in ys.iter().enumerate() {
@@ -32,12 +37,22 @@ fn main() -> hmm_scan::Result<()> {
 
     // MAP (Viterbi) path via the classical algorithm and via the
     // parallel max-product scans (Algorithm 5).
-    let vit = viterbi(&hmm, &ys)?;
-    let mpp = mp_par(&hmm, &ys, ScanOptions::default())?;
+    let vit = engine.run(Algorithm::Viterbi, &ys)?.into_map()?;
+    let mpp = engine.run(Algorithm::MpPar, &ys)?.into_map()?;
     let names = ["Sunny", "Rainy"];
     println!("\nViterbi path:     {:?}", vit.path.iter().map(|&s| names[s as usize]).collect::<Vec<_>>());
     println!("Max-product path: {:?}", mpp.path.iter().map(|&s| names[s as usize]).collect::<Vec<_>>());
     println!("log p* = {:.6} (viterbi) / {:.6} (mp-par)", vit.log_prob, mpp.log_prob);
     assert!((vit.log_prob - mpp.log_prob).abs() < 1e-9);
+
+    // Batched entry point: many sequences in one call, fanned out over
+    // the thread pool with one workspace per worker.
+    let batch = vec![ys.clone(), vec![2, 2, 2, 1, 0], vec![0, 0]];
+    let results = engine.run_batch(Algorithm::SpPar, &batch);
+    println!("\nbatched log-likelihoods:");
+    for (i, r) in results.iter().enumerate() {
+        let post = r.as_ref().unwrap().as_posterior().unwrap();
+        println!("  seq {i} (T={}): {:.6}", post.len(), post.log_likelihood());
+    }
     Ok(())
 }

@@ -2,6 +2,8 @@
 //! heterogeneous sequence lengths and algorithms, exercising the router
 //! (padded core artifacts, sharded plans, native fallback), the dynamic
 //! batcher, and the XLA worker pool; reports latency and throughput.
+//! Native plans dispatch through the per-model `engine::Engine` (reused
+//! workspaces); PJRT plans through its `XlaBackend`.
 //!
 //!     cargo run --release --example serve_demo
 

@@ -1,13 +1,15 @@
 //! Baum–Welch parameter estimation (paper §V-C) with the parallel-scan
 //! E-step: recover Gilbert–Elliott channel parameters from observations
-//! alone, logging the EM objective curve.
+//! alone, logging the EM objective curve. Everything runs through the
+//! unified `Engine` (`Algorithm::BaumWelch` / `Algorithm::SpSeq`).
 //!
 //!     cargo run --release --example train_baum_welch
 
 use std::time::Instant;
 
+use hmm_scan::engine::{Algorithm, Engine};
 use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
-use hmm_scan::inference::{baum_welch, sp_seq, BaumWelchOptions, EStepBackend};
+use hmm_scan::inference::{BaumWelchOptions, EStepBackend};
 use hmm_scan::rng::Xoshiro256StarStar;
 
 fn main() -> hmm_scan::Result<()> {
@@ -19,17 +21,28 @@ fn main() -> hmm_scan::Result<()> {
 
     // Deliberately wrong initialization.
     let init = gilbert_elliott(GeParams { p0: 0.15, p1: 0.25, p2: 0.2, q0: 0.08, q1: 0.25 });
-    let ll_truth = sp_seq(&truth, &tr.observations)?.log_likelihood();
-    let ll_init = sp_seq(&init, &tr.observations)?.log_likelihood();
+    let ll_truth = Engine::builder(truth)
+        .build()
+        .run(Algorithm::SpSeq, &tr.observations)?
+        .into_posterior()?
+        .log_likelihood();
+    let ll_init = Engine::builder(init.clone())
+        .build()
+        .run(Algorithm::SpSeq, &tr.observations)?
+        .into_posterior()?
+        .log_likelihood();
     println!("loglik under truth: {ll_truth:.1}; under init: {ll_init:.1}\n");
 
     for backend in [EStepBackend::Sequential, EStepBackend::ParallelScan] {
+        let mut engine = Engine::builder(init.clone())
+            .baum_welch_options(BaumWelchOptions {
+                max_iters: 25,
+                backend,
+                ..Default::default()
+            })
+            .build();
         let t0 = Instant::now();
-        let res = baum_welch(
-            &init,
-            &tr.observations,
-            BaumWelchOptions { max_iters: 25, backend, ..Default::default() },
-        )?;
+        let res = engine.run(Algorithm::BaumWelch, &tr.observations)?.into_training()?;
         let elapsed = t0.elapsed();
         println!("E-step backend {backend:?}: {} iterations in {elapsed:?}", res.iterations);
         for (i, ll) in res.loglik_curve.iter().enumerate() {

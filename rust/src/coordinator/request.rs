@@ -1,6 +1,13 @@
 //! Request/response types for the decode service.
+//!
+//! The task taxonomy here is a *view* over [`engine::Algorithm`]
+//! — the single source of truth for algorithm names and entry points —
+//! collapsed to what a decode client chooses between: smoothing
+//! marginals, a MAP path, or the Bayesian-smoother formulation.
 
+use crate::engine::Algorithm;
 use crate::inference::{MapEstimate, Posterior};
+use crate::jsonx::Json;
 
 /// Which inference task to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -14,22 +21,71 @@ pub enum Algo {
 }
 
 impl Algo {
+    /// Every task, for exhaustive round-trip tests.
+    pub const ALL: [Algo; 3] = [Algo::Smooth, Algo::Map, Algo::BayesSmooth];
+
+    /// The parallel-scan algorithm serving this task.
+    pub fn parallel(self) -> Algorithm {
+        match self {
+            Algo::Smooth => Algorithm::SpPar,
+            Algo::Map => Algorithm::MpPar,
+            Algo::BayesSmooth => Algorithm::BsPar,
+        }
+    }
+
+    /// The sequential algorithm serving this task.
+    pub fn sequential(self) -> Algorithm {
+        match self {
+            Algo::Smooth => Algorithm::SpSeq,
+            Algo::Map => Algorithm::Viterbi,
+            Algo::BayesSmooth => Algorithm::BsSeq,
+        }
+    }
+
+    /// The task an algorithm belongs to (`None` for training — it is not
+    /// a decode task).
+    pub fn from_algorithm(alg: Algorithm) -> Option<Algo> {
+        match alg {
+            Algorithm::SpSeq | Algorithm::SpPar => Some(Algo::Smooth),
+            Algorithm::BsSeq | Algorithm::BsPar => Some(Algo::BayesSmooth),
+            Algorithm::Viterbi | Algorithm::MpSeq | Algorithm::MpPar
+            | Algorithm::MpPathPar => Some(Algo::Map),
+            Algorithm::BaumWelch => None,
+        }
+    }
+
     /// The parallel core-artifact entry serving this task.
     pub fn par_entry(self) -> &'static str {
-        match self {
-            Algo::Smooth => "sp_par",
-            Algo::Map => "mp_par",
-            Algo::BayesSmooth => "bs_par",
-        }
+        self.parallel().name()
     }
 
     /// The sequential core-artifact entry (ablation / router fallback).
     pub fn seq_entry(self) -> &'static str {
+        self.sequential().name()
+    }
+
+    /// Stable wire name.
+    pub fn as_str(self) -> &'static str {
         match self {
-            Algo::Smooth => "sp_seq",
-            Algo::Map => "viterbi",
-            Algo::BayesSmooth => "bs_seq",
+            Algo::Smooth => "smooth",
+            Algo::Map => "map",
+            Algo::BayesSmooth => "bayes",
         }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str).
+    pub fn parse(s: &str) -> Option<Algo> {
+        Algo::ALL.into_iter().find(|a| a.as_str() == s)
+    }
+
+    /// jsonx serialization (the stable wire name).
+    pub fn to_json(self) -> Json {
+        Json::Str(self.as_str().to_string())
+    }
+
+    /// Inverse of [`to_json`](Self::to_json).
+    pub fn from_json(v: &Json) -> Option<Algo> {
+        v.as_str().and_then(Algo::parse)
     }
 }
 
@@ -113,10 +169,38 @@ mod tests {
 
     #[test]
     fn entry_names() {
-        assert_eq!(Algo::Smooth.par_entry(), "sp_par");
-        assert_eq!(Algo::Map.par_entry(), "mp_par");
-        assert_eq!(Algo::BayesSmooth.par_entry(), "bs_par");
-        assert_eq!(Algo::Map.seq_entry(), "viterbi");
+        assert_eq!(Algo::Smooth.par_entry(), Algorithm::SpPar.name());
+        assert_eq!(Algo::Map.par_entry(), Algorithm::MpPar.name());
+        assert_eq!(Algo::BayesSmooth.par_entry(), Algorithm::BsPar.name());
+        assert_eq!(Algo::Map.seq_entry(), Algorithm::Viterbi.name());
+    }
+
+    #[test]
+    fn algorithm_round_trip_exhaustive() {
+        // Task → algorithm → task closes for both variants of each task.
+        for algo in Algo::ALL {
+            assert_eq!(Algo::from_algorithm(algo.parallel()), Some(algo));
+            assert_eq!(Algo::from_algorithm(algo.sequential()), Some(algo));
+            assert!(algo.parallel().is_parallel());
+            assert!(!algo.sequential().is_parallel());
+        }
+        // Every non-training algorithm maps to exactly one task.
+        for alg in Algorithm::ALL {
+            match Algo::from_algorithm(alg) {
+                Some(_) => assert_ne!(alg, Algorithm::BaumWelch),
+                None => assert_eq!(alg, Algorithm::BaumWelch),
+            }
+        }
+    }
+
+    #[test]
+    fn json_round_trip_exhaustive() {
+        for algo in Algo::ALL {
+            assert_eq!(Algo::from_json(&algo.to_json()), Some(algo));
+            assert_eq!(Algo::parse(algo.as_str()), Some(algo));
+        }
+        assert_eq!(Algo::parse("nope"), None);
+        assert_eq!(Algo::from_json(&Json::Num(1.0)), None);
     }
 
     #[test]

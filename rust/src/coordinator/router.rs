@@ -157,10 +157,14 @@ impl Router {
         m: usize,
     ) -> Option<ExecutionPlan> {
         // BayesSmooth has no block decomposition compiled; SP covers it
-        // numerically (identical marginals), so route it through SP.
+        // numerically (identical marginals), so route it through SP. The
+        // family prefix otherwise comes from the engine taxonomy.
         let family = match algo {
-            Algo::Map => "mp",
-            Algo::Smooth | Algo::BayesSmooth => "sp",
+            Algo::BayesSmooth => "sp",
+            other => other
+                .parallel()
+                .artifact_family()
+                .expect("decode algorithms always have an artifact family"),
         };
         let fold_first = manifest.block(&format!("{family}_block_fold_first"), d, m)?;
         let fold_mid = manifest.block(&format!("{family}_block_fold_mid"), d, m)?;

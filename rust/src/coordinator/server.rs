@@ -7,17 +7,17 @@ use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::engine::{Engine, EngineOutput, XlaBackend};
 use crate::error::{Error, Result};
 use crate::hmm::Hmm;
-use crate::inference::{self, Posterior};
-use crate::runtime::{Manifest, Registry, Value};
+use crate::runtime::{ArtifactExec, Manifest, Registry, Value};
 use crate::scan::ScanOptions;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{Algo, DecodeRequest, DecodeResponse, DecodeResult};
 use super::router::{ExecutionPlan, Router, RouterConfig};
-use super::sharder::{self, ArtifactExec, ShardedArtifacts};
+use super::sharder::{self, ShardedArtifacts};
 
 // ===========================================================================
 // XLA worker pool
@@ -163,29 +163,52 @@ impl CoordinatorConfig {
 }
 
 /// The inference service.
+///
+/// All native execution dispatches through one [`Engine`] per registered
+/// model (serialized by a per-model mutex so the engine's scratch
+/// workspace is reused across requests); the PJRT core-artifact path
+/// dispatches through the engine's [`XlaBackend`].
 pub struct Coordinator {
-    manifest: Option<Manifest>,
-    pool: Option<XlaPool>,
+    manifest: Option<Arc<Manifest>>,
+    pool: Option<Arc<XlaPool>>,
+    xla: Option<XlaBackend>,
     router: Router,
-    models: RwLock<BTreeMap<String, Arc<Hmm>>>,
+    models: RwLock<BTreeMap<String, ModelEntry>>,
     metrics: Arc<Metrics>,
     scan: ScanOptions,
     batcher_config: BatcherConfig,
+}
+
+/// One registered model: the Hmm and its serving engine, paired in a
+/// single map entry so a concurrent re-registration can never match a
+/// new model with a stale engine (or vice versa).
+#[derive(Clone)]
+struct ModelEntry {
+    hmm: Arc<Hmm>,
+    engine: Arc<Mutex<Engine>>,
 }
 
 impl Coordinator {
     pub fn new(config: CoordinatorConfig) -> Result<Self> {
         let (manifest, pool) = match &config.artifacts {
             Some(dir) => {
-                let manifest = Manifest::load(dir)?;
-                let pool = XlaPool::new(dir.clone(), config.xla_workers)?;
+                let manifest = Arc::new(Manifest::load(dir)?);
+                let pool = Arc::new(XlaPool::new(dir.clone(), config.xla_workers)?);
                 (Some(manifest), Some(pool))
             }
             None => (None, None),
         };
+        let xla = match (&manifest, &pool) {
+            (Some(m), Some(p)) => {
+                let exec: Arc<dyn ArtifactExec + Send + Sync> = Arc::clone(p);
+                Some(XlaBackend::new(exec, Arc::clone(m)))
+            }
+            _ => None,
+        };
         Ok(Self {
             manifest,
             pool,
+            xla,
             router: Router::new(config.router),
             models: RwLock::new(BTreeMap::new()),
             metrics: Arc::new(Metrics::new()),
@@ -195,10 +218,15 @@ impl Coordinator {
     }
 
     pub fn register_model(&self, id: impl Into<String>, hmm: Hmm) {
-        self.models.write().unwrap().insert(id.into(), Arc::new(hmm));
+        let hmm = Arc::new(hmm);
+        let engine = Engine::builder(Arc::clone(&hmm))
+            .scan_options(self.scan)
+            .build();
+        let entry = ModelEntry { hmm, engine: Arc::new(Mutex::new(engine)) };
+        self.models.write().unwrap().insert(id.into(), entry);
     }
 
-    pub fn model(&self, id: &str) -> Result<Arc<Hmm>> {
+    fn entry(&self, id: &str) -> Result<ModelEntry> {
         self.models
             .read()
             .unwrap()
@@ -207,12 +235,16 @@ impl Coordinator {
             .ok_or_else(|| Error::invalid_request(format!("unknown model '{id}'")))
     }
 
+    pub fn model(&self, id: &str) -> Result<Arc<Hmm>> {
+        Ok(self.entry(id)?.hmm)
+    }
+
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
     pub fn manifest(&self) -> Option<&Manifest> {
-        self.manifest.as_ref()
+        self.manifest.as_deref()
     }
 
     /// Resolve the plan a request would execute (exposed for tests/CLI).
@@ -220,7 +252,7 @@ impl Coordinator {
         let hmm = self.model(&req.model)?;
         hmm.check_observations(&req.ys)?;
         self.router.plan(
-            self.manifest.as_ref(),
+            self.manifest.as_deref(),
             req,
             hmm.num_states(),
             hmm.num_symbols(),
@@ -290,17 +322,23 @@ impl Coordinator {
     }
 
     fn execute(&self, req: &DecodeRequest) -> Result<(DecodeResult, String)> {
-        let hmm = self.model(&req.model)?;
+        // Fetch the model/engine pair once, atomically, so a concurrent
+        // re-registration cannot switch models between plan and run.
+        let entry = self.entry(&req.model)?;
+        let hmm = entry.hmm;
         hmm.check_observations(&req.ys)?;
         let plan = self.router.plan(
-            self.manifest.as_ref(),
+            self.manifest.as_deref(),
             req,
             hmm.num_states(),
             hmm.num_symbols(),
         )?;
         let tag = plan.describe(req.ys.len());
         let result = match &plan {
-            ExecutionPlan::Native => self.run_native(&hmm, req)?,
+            ExecutionPlan::Native => {
+                let mut engine = entry.engine.lock().expect("engine mutex poisoned");
+                decode_result_from(engine.run(req.algo.parallel(), &req.ys)?)?
+            }
             ExecutionPlan::PjrtCore { artifact, capacity } => {
                 self.run_pjrt_core(&hmm, req, artifact, *capacity)?
             }
@@ -326,12 +364,13 @@ impl Coordinator {
                     .ok_or_else(|| Error::coordinator("no xla pool"))?;
                 match req.algo {
                     Algo::Map => {
-                        let (est, _) = sharder::mp_sharded(pool, &arts, &hmm, &req.ys)?;
+                        let (est, _) =
+                            sharder::mp_sharded(&**pool, &arts, &hmm, &req.ys)?;
                         DecodeResult::Map(est)
                     }
                     Algo::Smooth | Algo::BayesSmooth => {
                         let (post, _) =
-                            sharder::sp_sharded(pool, &arts, &hmm, &req.ys)?;
+                            sharder::sp_sharded(&**pool, &arts, &hmm, &req.ys)?;
                         DecodeResult::Posterior(post)
                     }
                 }
@@ -340,18 +379,8 @@ impl Coordinator {
         Ok((result, tag))
     }
 
-    fn run_native(&self, hmm: &Hmm, req: &DecodeRequest) -> Result<DecodeResult> {
-        Ok(match req.algo {
-            Algo::Smooth => {
-                DecodeResult::Posterior(inference::sp_par(hmm, &req.ys, self.scan)?)
-            }
-            Algo::BayesSmooth => {
-                DecodeResult::Posterior(inference::bs_par(hmm, &req.ys, self.scan)?)
-            }
-            Algo::Map => DecodeResult::Map(inference::mp_par(hmm, &req.ys, self.scan)?),
-        })
-    }
-
+    /// PJRT-core plan: dispatch through the engine's XLA backend, which
+    /// owns the marshal/decode contract with the compiled artifacts.
     fn run_pjrt_core(
         &self,
         hmm: &Hmm,
@@ -359,42 +388,17 @@ impl Coordinator {
         artifact: &str,
         capacity: usize,
     ) -> Result<DecodeResult> {
-        let pool = self
-            .pool
+        let xla = self
+            .xla
             .as_ref()
-            .ok_or_else(|| Error::coordinator("no xla pool"))?;
-        let t = req.ys.len();
-        let d = hmm.num_states();
-        let inputs = sharder::marshal_block(hmm, &req.ys, capacity);
-        let out = pool.run(artifact, inputs)?;
-        Ok(match req.algo {
-            Algo::Smooth | Algo::BayesSmooth => {
-                let g = out[0].as_f32()?;
-                let loglik = out[1].scalar()?;
-                let mut gamma = vec![0.0f64; t * d];
-                for k in 0..t {
-                    for s in 0..d {
-                        gamma[k * d + s] = g[k * d + s] as f64;
-                    }
-                }
-                DecodeResult::Posterior(Posterior::new(d, gamma, loglik))
-            }
-            Algo::Map => {
-                let p = out[0].as_i32()?;
-                let log_prob = out[1].scalar()?;
-                let path = p[..t]
-                    .iter()
-                    .map(|&v| {
-                        if v < 0 || v as usize >= d {
-                            Err(Error::xla(format!("state {v} out of range")))
-                        } else {
-                            Ok(v as u32)
-                        }
-                    })
-                    .collect::<Result<Vec<u32>>>()?;
-                DecodeResult::Map(crate::inference::MapEstimate { path, log_prob })
-            }
-        })
+            .ok_or_else(|| Error::coordinator("no xla backend"))?;
+        decode_result_from(xla.run_artifact(
+            hmm,
+            req.algo.parallel(),
+            &req.ys,
+            artifact,
+            capacity,
+        )?)
     }
 
     /// Spawn the serve loop on its own thread; returns a submit handle.
@@ -459,6 +463,17 @@ impl Coordinator {
             })
             .expect("spawn server");
         ServerHandle { tx, join: Some(join) }
+    }
+}
+
+/// Engine output → decode payload (training results are not servable).
+fn decode_result_from(out: EngineOutput) -> Result<DecodeResult> {
+    match out {
+        EngineOutput::Posterior(p) => Ok(DecodeResult::Posterior(p)),
+        EngineOutput::Map(m) => Ok(DecodeResult::Map(m)),
+        EngineOutput::Training(_) => {
+            Err(Error::coordinator("training output cannot be served"))
+        }
     }
 }
 
@@ -555,6 +570,35 @@ mod tests {
         assert!(c.decode(DecodeRequest::new(1, "ge", vec![9], Algo::Map)).is_err());
         assert!(c.decode(DecodeRequest::new(1, "ge", vec![], Algo::Map)).is_err());
         assert_eq!(c.metrics().snapshot().failed, 3);
+    }
+
+    #[test]
+    fn native_decode_dispatches_through_engine() {
+        // Repeated decodes reuse the per-model engine workspace and must
+        // stay bit-identical — and match a standalone Engine exactly.
+        let c = native_coord();
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(56);
+        let tr = sample(&hmm, 300, &mut rng);
+        let a = c
+            .decode(DecodeRequest::new(1, "ge", tr.observations.clone(), Algo::Smooth))
+            .unwrap();
+        let b = c
+            .decode(DecodeRequest::new(2, "ge", tr.observations.clone(), Algo::Smooth))
+            .unwrap();
+        assert_eq!(
+            a.result.as_posterior().unwrap(),
+            b.result.as_posterior().unwrap()
+        );
+        let mut engine = crate::engine::Engine::builder(hmm)
+            .scan_options(ScanOptions::default())
+            .build();
+        let direct = engine
+            .run(crate::engine::Algorithm::SpPar, &tr.observations)
+            .unwrap()
+            .into_posterior()
+            .unwrap();
+        assert_eq!(a.result.as_posterior().unwrap(), &direct);
     }
 
     #[test]

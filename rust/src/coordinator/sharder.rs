@@ -24,21 +24,10 @@ use crate::linalg::{argmax, normalize_sum, Mat};
 use crate::runtime::Value;
 use crate::scan::AssocOp;
 
-/// Abstraction over "run this artifact with these inputs" so the sharder
-/// is independent of the worker-pool implementation (the server provides
-/// the pooled executor; tests can substitute).
-pub trait ArtifactExec {
-    /// Run a single artifact call.
-    fn run(&self, artifact: &str, inputs: Vec<Value>) -> Result<Vec<Value>>;
-
-    /// Run many independent calls, preserving order of results.
-    /// Implementations may execute them concurrently.
-    fn run_many(&self, jobs: Vec<(String, Vec<Value>)>) -> Vec<Result<Vec<Value>>> {
-        jobs.into_iter()
-            .map(|(a, i)| self.run(&a, i))
-            .collect()
-    }
-}
+// Execution abstraction + input marshalling live in the runtime layer
+// (shared with `engine::XlaBackend`); re-exported here so existing
+// `sharder::{ArtifactExec, marshal_block}` paths keep working.
+pub use crate::runtime::{marshal_block, ArtifactExec};
 
 /// Sharded-plan parameters resolved by the router.
 #[derive(Debug, Clone)]
@@ -48,25 +37,6 @@ pub struct ShardedArtifacts {
     pub finalize_first: String,
     pub finalize_mid: String,
     pub block_len: usize,
-}
-
-/// Model + one block of observations → the artifact input list
-/// (pi, obs, prior, ys padded to `capacity`, valid mask).
-pub fn marshal_block(hmm: &Hmm, ys: &[u32], capacity: usize) -> Vec<Value> {
-    let (pi, obs, prior) = hmm.to_f32_parts();
-    let d = hmm.num_states();
-    let m = hmm.num_symbols();
-    let mut ys_pad: Vec<i32> = ys.iter().map(|&y| y as i32).collect();
-    ys_pad.resize(capacity, 0);
-    let mut valid = vec![1.0f32; ys.len()];
-    valid.resize(capacity, 0.0);
-    vec![
-        Value::F32(pi, vec![d, d]),
-        Value::F32(obs, vec![d, m]),
-        Value::F32(prior, vec![d]),
-        Value::I32(ys_pad, vec![capacity]),
-        Value::F32(valid, vec![capacity]),
-    ]
 }
 
 fn mat_from_f32(data: &[f32], d: usize) -> Mat {

@@ -368,6 +368,16 @@ impl AssocOp<BsElement> for BsFilterOp {
 /// elems[0] is the prior element (rows broadcast ψ₁(x₁) = p(x₁)p(y₁|x₁));
 /// elems[t] = Π ∘ eₜ for t ≥ 1.
 pub fn sp_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<SpElement> {
+    let mut out = Vec::new();
+    sp_element_chain_into(hmm, ys, &mut out);
+    out
+}
+
+/// [`sp_element_chain`] writing into a reusable buffer: when `out`
+/// already holds T same-shape elements (a previous call on the same
+/// model family), every D×D matrix is overwritten in place — zero
+/// allocation on the serving hot path (the `engine` workspace reuse).
+pub fn sp_element_chain_into(hmm: &Hmm, ys: &[u32], out: &mut Vec<SpElement>) {
     let d = hmm.num_states();
     let pi = hmm.transition();
     // Hoist the per-symbol interior element prototypes: every step with
@@ -385,22 +395,34 @@ pub fn sp_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<SpElement> {
             SpElement::from_mat(mat)
         })
         .collect();
-    let mut out = Vec::with_capacity(ys.len());
+    if out.len() != ys.len()
+        || out.first().map_or(true, |e| e.mat.rows() != d || e.mat.cols() != d)
+    {
+        out.clear();
+        out.resize(ys.len(), SpElement { mat: Mat::zeros(d, d), log_scale: 0.0 });
+    }
     for (t, &y) in ys.iter().enumerate() {
+        let dst = &mut out[t];
         if t == 0 {
             let e = hmm.emission_col(y);
-            let mut mat = Mat::zeros(d, d);
-            for r in 0..d {
-                for c in 0..d {
-                    mat[(r, c)] = hmm.prior()[c] * e[c];
+            {
+                let data = dst.mat.data_mut();
+                for r in 0..d {
+                    for c in 0..d {
+                        data[r * d + c] = hmm.prior()[c] * e[c];
+                    }
                 }
             }
-            out.push(SpElement::from_mat(mat));
+            // Normal form, exactly as SpElement::from_mat.
+            let m = dst.mat.max().max(TINY);
+            dst.mat.scale(1.0 / m);
+            dst.log_scale = m.ln();
         } else {
-            out.push(protos[y as usize].clone());
+            let p = &protos[y as usize];
+            dst.mat.data_mut().copy_from_slice(p.mat.data());
+            dst.log_scale = p.log_scale;
         }
     }
-    out
 }
 
 /// The terminal element ψ_{T,T+1} = 1 (all-ones matrix).
@@ -410,6 +432,14 @@ pub fn sp_terminal(d: usize) -> SpElement {
 
 /// Build the log-domain max-product element chain.
 pub fn mp_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<MpElement> {
+    let mut out = Vec::new();
+    mp_element_chain_into(hmm, ys, &mut out);
+    out
+}
+
+/// [`mp_element_chain`] writing into a reusable buffer (see
+/// [`sp_element_chain_into`] for the reuse contract).
+pub fn mp_element_chain_into(hmm: &Hmm, ys: &[u32], out: &mut Vec<MpElement>) {
     let d = hmm.num_states();
     let pi = hmm.transition();
     // Per-symbol prototypes (see sp_element_chain).
@@ -425,22 +455,26 @@ pub fn mp_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<MpElement> {
             MpElement { mat }
         })
         .collect();
-    let mut out = Vec::with_capacity(ys.len());
+    if out.len() != ys.len()
+        || out.first().map_or(true, |e| e.mat.rows() != d || e.mat.cols() != d)
+    {
+        out.clear();
+        out.resize(ys.len(), MpElement { mat: Mat::zeros(d, d) });
+    }
     for (t, &y) in ys.iter().enumerate() {
+        let dst = &mut out[t];
         if t == 0 {
             let e = hmm.emission_col(y);
-            let mut mat = Mat::zeros(d, d);
+            let data = dst.mat.data_mut();
             for r in 0..d {
                 for c in 0..d {
-                    mat[(r, c)] = safe_ln(hmm.prior()[c] * e[c]);
+                    data[r * d + c] = safe_ln(hmm.prior()[c] * e[c]);
                 }
             }
-            out.push(MpElement { mat });
         } else {
-            out.push(protos[y as usize].clone());
+            dst.mat.data_mut().copy_from_slice(protos[y as usize].mat.data());
         }
     }
-    out
 }
 
 /// Terminal max-product element: log ψ_{T,T+1} = 0 everywhere.
@@ -450,12 +484,31 @@ pub fn mp_terminal(d: usize) -> MpElement {
 
 /// Build the Bayesian filtering element chain.
 pub fn bs_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<BsElement> {
+    let mut out = Vec::new();
+    bs_element_chain_into(hmm, ys, &mut out);
+    out
+}
+
+/// [`bs_element_chain`] writing into a reusable buffer (see
+/// [`sp_element_chain_into`] for the reuse contract).
+pub fn bs_element_chain_into(hmm: &Hmm, ys: &[u32], out: &mut Vec<BsElement>) {
     let d = hmm.num_states();
-    let mut out = Vec::with_capacity(ys.len());
+    if out.len() != ys.len()
+        || out.first().map_or(true, |e| {
+            e.f.rows() != d || e.f.cols() != d || e.g.len() != d
+        })
+    {
+        out.clear();
+        out.resize(
+            ys.len(),
+            BsElement { f: Mat::zeros(d, d), g: vec![0.0; d], log_scale: 0.0 },
+        );
+    }
     for (t, &y) in ys.iter().enumerate() {
         let e = hmm.emission_col(y);
-        let mut f = Mat::zeros(d, d);
-        let mut g = vec![0.0; d];
+        let dst = &mut out[t];
+        let f = &mut dst.f;
+        let g = &mut dst.g;
         if t == 0 {
             // First element: rows = posterior of x_0; g = p(y_0) constant.
             let mut w: Vec<f64> = (0..d).map(|j| hmm.prior()[j] * e[j]).collect();
@@ -467,7 +520,7 @@ pub fn bs_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<BsElement> {
                     f[(r, c)] = w[c];
                 }
             }
-            g = vec![p_y0; d];
+            g.iter_mut().for_each(|v| *v = p_y0);
         } else {
             let pi = hmm.transition();
             for i in 0..d {
@@ -486,9 +539,8 @@ pub fn bs_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<BsElement> {
         }
         let m = g.iter().fold(0.0f64, |m, &v| m.max(v)).max(TINY);
         g.iter_mut().for_each(|v| *v /= m);
-        out.push(BsElement { f, g, log_scale: m.ln() });
+        dst.log_scale = m.ln();
     }
-    out
 }
 
 pub fn safe_ln(x: f64) -> f64 {
@@ -685,6 +737,38 @@ mod tests {
                 assert!((lg - rg).abs() < 1e-9, "g mismatch");
             }
         });
+    }
+
+    #[test]
+    fn chain_into_reuse_is_identical() {
+        // The reusable-buffer builders must be indistinguishable from the
+        // allocating ones across grow / shrink / same-shape-overwrite.
+        let h = gilbert_elliott(GeParams::default());
+        let ys1 = vec![0u32, 1, 1, 0, 1, 0, 0];
+        let ys2 = vec![1u32, 0, 1];
+        let ys3 = vec![1u32, 1, 0, 1, 0, 0, 1]; // same length as ys1
+
+        let mut sp_buf = Vec::new();
+        sp_element_chain_into(&h, &ys1, &mut sp_buf);
+        assert_eq!(sp_buf, sp_element_chain(&h, &ys1));
+        sp_element_chain_into(&h, &ys3, &mut sp_buf); // in-place overwrite
+        assert_eq!(sp_buf, sp_element_chain(&h, &ys3));
+        sp_element_chain_into(&h, &ys2, &mut sp_buf); // shrink
+        assert_eq!(sp_buf, sp_element_chain(&h, &ys2));
+        sp_element_chain_into(&h, &ys1, &mut sp_buf); // grow
+        assert_eq!(sp_buf, sp_element_chain(&h, &ys1));
+
+        let mut mp_buf = Vec::new();
+        mp_element_chain_into(&h, &ys1, &mut mp_buf);
+        mp_element_chain_into(&h, &ys3, &mut mp_buf);
+        assert_eq!(mp_buf, mp_element_chain(&h, &ys3));
+
+        let mut bs_buf = Vec::new();
+        bs_element_chain_into(&h, &ys1, &mut bs_buf);
+        bs_element_chain_into(&h, &ys3, &mut bs_buf);
+        assert_eq!(bs_buf, bs_element_chain(&h, &ys3));
+        bs_element_chain_into(&h, &ys2, &mut bs_buf);
+        assert_eq!(bs_buf, bs_element_chain(&h, &ys2));
     }
 
     #[test]

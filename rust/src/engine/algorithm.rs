@@ -1,0 +1,232 @@
+//! The algorithm taxonomy — one enum for every method the paper
+//! benchmarks (§VI), the single source of truth for entry-point names,
+//! task families and seq/par pairings.
+//!
+//! Everything else derives from this enum: the coordinator's task-level
+//! `Algo` (`coordinator::request`), the router's artifact entry strings,
+//! the figure benches' method names, and the engine dispatch itself.
+
+use crate::jsonx::Json;
+
+/// Every inference method in the system, in the paper's order.
+///
+/// | variant | paper name | section |
+/// |---------|------------|---------|
+/// | [`SpSeq`](Algorithm::SpSeq) | SP-Seq | Algorithm 1 + Eq. 22 |
+/// | [`SpPar`](Algorithm::SpPar) | SP-Par | Algorithm 3 |
+/// | [`BsSeq`](Algorithm::BsSeq) | BS-Seq | filter + RTS smoother |
+/// | [`BsPar`](Algorithm::BsPar) | BS-Par | Ref. [30] discrete analogue |
+/// | [`Viterbi`](Algorithm::Viterbi) | Viterbi | Algorithm 4 |
+/// | [`MpSeq`](Algorithm::MpSeq) | MP-Seq | Lemma 3 + Theorem 4 |
+/// | [`MpPar`](Algorithm::MpPar) | MP-Par | Algorithm 5 |
+/// | [`MpPathPar`](Algorithm::MpPathPar) | MP-Path-Par | §IV-B |
+/// | [`BaumWelch`](Algorithm::BaumWelch) | Baum-Welch | §V-C |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Classical sum-product smoother (forward–backward).
+    SpSeq,
+    /// Parallel-scan sum-product smoother.
+    SpPar,
+    /// Sequential Bayesian smoother (filter + RTS).
+    BsSeq,
+    /// Parallel Bayesian smoother.
+    BsPar,
+    /// Classical Viterbi MAP decoder.
+    Viterbi,
+    /// Sequential max-product MAP decoder.
+    MpSeq,
+    /// Parallel-scan max-product MAP decoder.
+    MpPar,
+    /// Path-based parallel MAP decoder (Definition 4).
+    MpPathPar,
+    /// Baum–Welch EM parameter estimation.
+    BaumWelch,
+}
+
+/// What an algorithm produces — the output-shape family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// Smoothing marginals p(x_k | y_{1:T}) → `Posterior`.
+    Smoothing,
+    /// MAP state sequence → `MapEstimate`.
+    MapDecoding,
+    /// Parameter estimation → `BaumWelchResult`.
+    Training,
+}
+
+impl Algorithm {
+    /// All nine methods, in the paper's order.
+    pub const ALL: [Algorithm; 9] = [
+        Algorithm::SpSeq,
+        Algorithm::SpPar,
+        Algorithm::BsSeq,
+        Algorithm::BsPar,
+        Algorithm::Viterbi,
+        Algorithm::MpSeq,
+        Algorithm::MpPar,
+        Algorithm::MpPathPar,
+        Algorithm::BaumWelch,
+    ];
+
+    /// Stable snake_case identifier — also the AOT artifact entry name
+    /// (`python/compile/aot.py` compiles `sp_par`, `mp_par`, … cores).
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::SpSeq => "sp_seq",
+            Algorithm::SpPar => "sp_par",
+            Algorithm::BsSeq => "bs_seq",
+            Algorithm::BsPar => "bs_par",
+            Algorithm::Viterbi => "viterbi",
+            Algorithm::MpSeq => "mp_seq",
+            Algorithm::MpPar => "mp_par",
+            Algorithm::MpPathPar => "mp_path_par",
+            Algorithm::BaumWelch => "baum_welch",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn from_name(s: &str) -> Option<Algorithm> {
+        Algorithm::ALL.into_iter().find(|a| a.name() == s)
+    }
+
+    /// The paper's display name (figure legends, Table I).
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            Algorithm::SpSeq => "SP-Seq",
+            Algorithm::SpPar => "SP-Par",
+            Algorithm::BsSeq => "BS-Seq",
+            Algorithm::BsPar => "BS-Par",
+            Algorithm::Viterbi => "Viterbi",
+            Algorithm::MpSeq => "MP-Seq",
+            Algorithm::MpPar => "MP-Par",
+            Algorithm::MpPathPar => "MP-Path-Par",
+            Algorithm::BaumWelch => "Baum-Welch",
+        }
+    }
+
+    /// Inverse of [`paper_name`](Self::paper_name).
+    pub fn from_paper_name(s: &str) -> Option<Algorithm> {
+        Algorithm::ALL.into_iter().find(|a| a.paper_name() == s)
+    }
+
+    /// Output-shape family.
+    pub fn task(self) -> Task {
+        match self {
+            Algorithm::SpSeq | Algorithm::SpPar | Algorithm::BsSeq
+            | Algorithm::BsPar => Task::Smoothing,
+            Algorithm::Viterbi | Algorithm::MpSeq | Algorithm::MpPar
+            | Algorithm::MpPathPar => Task::MapDecoding,
+            Algorithm::BaumWelch => Task::Training,
+        }
+    }
+
+    /// Whether this is a parallel-scan formulation (O(log T) span).
+    pub fn is_parallel(self) -> bool {
+        matches!(
+            self,
+            Algorithm::SpPar | Algorithm::BsPar | Algorithm::MpPar
+                | Algorithm::MpPathPar
+        )
+    }
+
+    /// The sequential counterpart (identity for seq methods and training).
+    pub fn seq_variant(self) -> Algorithm {
+        match self {
+            Algorithm::SpPar => Algorithm::SpSeq,
+            Algorithm::BsPar => Algorithm::BsSeq,
+            Algorithm::MpPar => Algorithm::MpSeq,
+            Algorithm::MpPathPar => Algorithm::Viterbi,
+            other => other,
+        }
+    }
+
+    /// The parallel counterpart (identity for par methods and training).
+    pub fn par_variant(self) -> Algorithm {
+        match self {
+            Algorithm::SpSeq => Algorithm::SpPar,
+            Algorithm::BsSeq => Algorithm::BsPar,
+            Algorithm::MpSeq | Algorithm::Viterbi => Algorithm::MpPar,
+            other => other,
+        }
+    }
+
+    /// Block-artifact family prefix for the §V-B sharded plans
+    /// (`{family}_block_fold_first`, …); `None` for training.
+    pub fn artifact_family(self) -> Option<&'static str> {
+        match self {
+            Algorithm::SpSeq | Algorithm::SpPar => Some("sp"),
+            Algorithm::BsSeq | Algorithm::BsPar => Some("bs"),
+            Algorithm::Viterbi | Algorithm::MpSeq | Algorithm::MpPar
+            | Algorithm::MpPathPar => Some("mp"),
+            Algorithm::BaumWelch => None,
+        }
+    }
+
+    /// jsonx serialization (the stable snake_case name).
+    pub fn to_json(self) -> Json {
+        Json::Str(self.name().to_string())
+    }
+
+    /// Inverse of [`to_json`](Self::to_json).
+    pub fn from_json(v: &Json) -> Option<Algorithm> {
+        v.as_str().and_then(Algorithm::from_name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_nine_methods() {
+        assert_eq!(Algorithm::ALL.len(), 9);
+        // Names are unique.
+        for (i, a) in Algorithm::ALL.into_iter().enumerate() {
+            for b in &Algorithm::ALL[i + 1..] {
+                assert_ne!(a.name(), b.name());
+                assert_ne!(a.paper_name(), b.paper_name());
+            }
+        }
+    }
+
+    #[test]
+    fn name_round_trips_exhaustively() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::from_name(a.name()), Some(a));
+            assert_eq!(Algorithm::from_paper_name(a.paper_name()), Some(a));
+            assert_eq!(Algorithm::from_json(&a.to_json()), Some(a));
+        }
+        assert_eq!(Algorithm::from_name("nope"), None);
+        assert_eq!(Algorithm::from_json(&Json::Num(3.0)), None);
+    }
+
+    #[test]
+    fn seq_par_pairing() {
+        assert_eq!(Algorithm::SpSeq.par_variant(), Algorithm::SpPar);
+        assert_eq!(Algorithm::SpPar.seq_variant(), Algorithm::SpSeq);
+        assert_eq!(Algorithm::Viterbi.par_variant(), Algorithm::MpPar);
+        assert_eq!(Algorithm::MpPathPar.seq_variant(), Algorithm::Viterbi);
+        assert_eq!(Algorithm::BaumWelch.seq_variant(), Algorithm::BaumWelch);
+        for a in Algorithm::ALL {
+            // Variant maps preserve the task family.
+            assert_eq!(a.task(), a.seq_variant().task());
+            assert_eq!(a.task(), a.par_variant().task());
+            // par_variant is parallel (or training), seq_variant is not.
+            if a.task() != Task::Training {
+                assert!(a.par_variant().is_parallel());
+                assert!(!a.seq_variant().is_parallel());
+            }
+        }
+    }
+
+    #[test]
+    fn entry_names_match_aot_contract() {
+        // The artifact entries python/compile/aot.py emits.
+        assert_eq!(Algorithm::SpPar.name(), "sp_par");
+        assert_eq!(Algorithm::MpPar.name(), "mp_par");
+        assert_eq!(Algorithm::BsPar.name(), "bs_par");
+        assert_eq!(Algorithm::Viterbi.name(), "viterbi");
+        assert_eq!(Algorithm::SpPar.artifact_family(), Some("sp"));
+        assert_eq!(Algorithm::BaumWelch.artifact_family(), None);
+    }
+}

@@ -1,0 +1,217 @@
+//! Pluggable execution backends for the [`Engine`](super::Engine).
+//!
+//! * [`NativeBackend`] — the in-process Rust algorithm library
+//!   (`inference::*`), with workspace reuse on the parallel methods.
+//! * [`XlaBackend`] — AOT-compiled PJRT artifacts executed through an
+//!   [`ArtifactExec`] (the coordinator's `XlaPool` in production, native
+//!   mocks in tests). Covers the compiled parallel cores; everything
+//!   else reports a typed artifact error so callers can fall back.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::hmm::Hmm;
+use crate::inference::{
+    self, BaumWelchOptions, MapEstimate, Posterior, Workspace,
+};
+use crate::runtime::{marshal_block, ArtifactExec, Manifest, Value};
+use crate::scan::ScanOptions;
+
+use super::algorithm::{Algorithm, Task};
+use super::EngineOutput;
+
+/// A strategy for executing one inference request.
+///
+/// Implementations are stateless with respect to the call (scratch comes
+/// in through the workspace), so one backend instance can be shared by
+/// many engines.
+pub trait Backend: Send + Sync {
+    /// Short identifier for plans/metrics ("native", "xla").
+    fn name(&self) -> &'static str;
+
+    /// Execute `alg` on `ys` under model `hmm`.
+    fn run(
+        &self,
+        hmm: &Hmm,
+        alg: Algorithm,
+        ys: &[u32],
+        scan: ScanOptions,
+        baum_welch: BaumWelchOptions,
+        ws: &mut Workspace,
+    ) -> Result<EngineOutput>;
+}
+
+/// The native-Rust algorithm library.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn run(
+        &self,
+        hmm: &Hmm,
+        alg: Algorithm,
+        ys: &[u32],
+        scan: ScanOptions,
+        baum_welch: BaumWelchOptions,
+        ws: &mut Workspace,
+    ) -> Result<EngineOutput> {
+        Ok(match alg {
+            Algorithm::SpSeq => EngineOutput::Posterior(inference::sp_seq(hmm, ys)?),
+            Algorithm::SpPar => {
+                EngineOutput::Posterior(inference::sp_par_ws(hmm, ys, scan, ws)?)
+            }
+            Algorithm::BsSeq => EngineOutput::Posterior(inference::bs_seq(hmm, ys)?),
+            Algorithm::BsPar => {
+                EngineOutput::Posterior(inference::bs_par_ws(hmm, ys, scan, ws)?)
+            }
+            Algorithm::Viterbi => EngineOutput::Map(inference::viterbi(hmm, ys)?),
+            Algorithm::MpSeq => EngineOutput::Map(inference::mp_seq(hmm, ys)?),
+            Algorithm::MpPar => {
+                EngineOutput::Map(inference::mp_par_ws(hmm, ys, scan, ws)?)
+            }
+            Algorithm::MpPathPar => {
+                EngineOutput::Map(inference::mp_path_par(hmm, ys, scan)?)
+            }
+            Algorithm::BaumWelch => EngineOutput::Training(Box::new(
+                inference::baum_welch(hmm, ys, baum_welch)?,
+            )),
+        })
+    }
+}
+
+/// PJRT-artifact execution: looks up the smallest compiled core artifact
+/// covering the request (identity-element padding makes shorter
+/// sequences exact — see `python/compile/model.py`) and decodes its
+/// outputs into the same result types the native backend produces.
+pub struct XlaBackend {
+    exec: Arc<dyn ArtifactExec + Send + Sync>,
+    manifest: Arc<Manifest>,
+}
+
+impl XlaBackend {
+    pub fn new(
+        exec: Arc<dyn ArtifactExec + Send + Sync>,
+        manifest: Arc<Manifest>,
+    ) -> Self {
+        Self { exec, manifest }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute a specific core artifact of capacity `capacity` (resolved
+    /// by the coordinator's router) and decode its outputs.
+    pub fn run_artifact(
+        &self,
+        hmm: &Hmm,
+        alg: Algorithm,
+        ys: &[u32],
+        artifact: &str,
+        capacity: usize,
+    ) -> Result<EngineOutput> {
+        hmm.check_observations(ys)?;
+        let t = ys.len();
+        if t > capacity {
+            return Err(Error::invalid_request(format!(
+                "sequence length {t} exceeds artifact capacity {capacity}"
+            )));
+        }
+        let inputs = marshal_block(hmm, ys, capacity);
+        let out = self.exec.run(artifact, inputs)?;
+        decode_core_outputs(alg.task(), hmm.num_states(), t, &out)
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn run(
+        &self,
+        hmm: &Hmm,
+        alg: Algorithm,
+        ys: &[u32],
+        _scan: ScanOptions,
+        _baum_welch: BaumWelchOptions,
+        _ws: &mut Workspace,
+    ) -> Result<EngineOutput> {
+        hmm.check_observations(ys)?;
+        let entry = alg.name();
+        let (t, d, m) = (ys.len(), hmm.num_states(), hmm.num_symbols());
+        let spec = self
+            .manifest
+            .smallest_covering(entry, t, d, m)
+            .ok_or_else(|| {
+                Error::artifact(format!(
+                    "no core artifact covers T={t} (entry {entry}, D={d}, M={m})"
+                ))
+            })?;
+        let (artifact, capacity) = (spec.name.clone(), spec.t);
+        self.run_artifact(hmm, alg, ys, &artifact, capacity)
+    }
+}
+
+/// Decode a core artifact's output tuple into an [`EngineOutput`].
+///
+/// Contract (`python/compile/aot.py`): smoothers return
+/// `(gamma f32[capacity, D], loglik f32[])`; MAP cores return
+/// `(path i32[capacity], log_prob f32[])`. Padding rows beyond `t` are
+/// discarded.
+pub fn decode_core_outputs(
+    task: Task,
+    d: usize,
+    t: usize,
+    out: &[Value],
+) -> Result<EngineOutput> {
+    if out.len() < 2 {
+        return Err(Error::xla(format!(
+            "core artifact returned {} outputs, expected 2",
+            out.len()
+        )));
+    }
+    match task {
+        Task::Smoothing => {
+            let g = out[0].as_f32()?;
+            let loglik = out[1].scalar()?;
+            if g.len() < t * d {
+                return Err(Error::xla(format!(
+                    "gamma output has {} values, need {}",
+                    g.len(),
+                    t * d
+                )));
+            }
+            let gamma: Vec<f64> = g[..t * d].iter().map(|&v| v as f64).collect();
+            Ok(EngineOutput::Posterior(Posterior::new(d, gamma, loglik)))
+        }
+        Task::MapDecoding => {
+            let p = out[0].as_i32()?;
+            let log_prob = out[1].scalar()?;
+            if p.len() < t {
+                return Err(Error::xla(format!(
+                    "path output has {} values, need {t}",
+                    p.len()
+                )));
+            }
+            let path = p[..t]
+                .iter()
+                .map(|&v| {
+                    if v < 0 || v as usize >= d {
+                        Err(Error::xla(format!("state {v} out of range")))
+                    } else {
+                        Ok(v as u32)
+                    }
+                })
+                .collect::<Result<Vec<u32>>>()?;
+            Ok(EngineOutput::Map(MapEstimate { path, log_prob }))
+        }
+        Task::Training => {
+            Err(Error::artifact("training has no compiled artifact path"))
+        }
+    }
+}

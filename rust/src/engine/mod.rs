@@ -1,0 +1,261 @@
+//! The unified inference engine — one entry point for all nine
+//! algorithms, pluggable backends, reusable workspaces.
+//!
+//! The paper's premise is that sequential and parallel sum-product /
+//! max-product / Bayesian-smoother inference are *the same computation*
+//! under different scan schedules. This module makes that premise the
+//! API: a single [`Algorithm`] enum names every method, one
+//! [`Engine::run`] executes any of them, and a [`Backend`] trait lets
+//! the native library and the PJRT/XLA runtime sit behind the same call
+//! (DESIGN.md §3).
+//!
+//! ```no_run
+//! use hmm_scan::engine::{Algorithm, Engine};
+//! use hmm_scan::hmm::{gilbert_elliott, GeParams};
+//!
+//! let mut engine = Engine::builder(gilbert_elliott(GeParams::default())).build();
+//! let post = engine.run(Algorithm::SpPar, &[0, 1, 1, 0]).unwrap()
+//!     .into_posterior().unwrap();
+//! println!("log p(y) = {}", post.log_likelihood());
+//! ```
+//!
+//! The engine owns a reusable [`Workspace`]: repeated `run` calls on the
+//! serving hot path overwrite the per-call D×D element buffers in place
+//! instead of reallocating them (see `benches/primitives.rs` for the
+//! before/after). [`Engine::run_batch`] fans a multi-sequence request
+//! out over `exec::parallel_for_chunks`, one workspace per worker.
+
+mod algorithm;
+mod backend;
+
+#[cfg(test)]
+mod tests;
+
+pub use algorithm::{Algorithm, Task};
+pub use backend::{decode_core_outputs, Backend, NativeBackend, XlaBackend};
+// Re-exported so custom `Backend` implementations outside this module
+// can name the workspace type the trait signature uses.
+pub use crate::inference::Workspace;
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::hmm::Hmm;
+use crate::inference::{BaumWelchOptions, BaumWelchResult, MapEstimate, Posterior};
+use crate::scan::ScanOptions;
+
+/// The result of one [`Engine::run`] call — shaped by the algorithm's
+/// [`Task`] family.
+#[derive(Debug, Clone)]
+pub enum EngineOutput {
+    /// Smoothing marginals + log-likelihood.
+    Posterior(Posterior),
+    /// MAP state sequence + joint log-probability.
+    Map(MapEstimate),
+    /// Baum–Welch training result (boxed — it carries a full model).
+    Training(Box<BaumWelchResult>),
+}
+
+impl EngineOutput {
+    pub fn as_posterior(&self) -> Option<&Posterior> {
+        match self {
+            EngineOutput::Posterior(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&MapEstimate> {
+        match self {
+            EngineOutput::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_training(&self) -> Option<&BaumWelchResult> {
+        match self {
+            EngineOutput::Training(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn into_posterior(self) -> Result<Posterior> {
+        match self {
+            EngineOutput::Posterior(p) => Ok(p),
+            other => Err(Error::invalid_request(format!(
+                "expected a smoothing posterior, got {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    pub fn into_map(self) -> Result<MapEstimate> {
+        match self {
+            EngineOutput::Map(m) => Ok(m),
+            other => Err(Error::invalid_request(format!(
+                "expected a MAP estimate, got {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    pub fn into_training(self) -> Result<BaumWelchResult> {
+        match self {
+            EngineOutput::Training(t) => Ok(*t),
+            other => Err(Error::invalid_request(format!(
+                "expected a training result, got {}",
+                other.kind()
+            ))),
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            EngineOutput::Posterior(_) => "posterior",
+            EngineOutput::Map(_) => "map",
+            EngineOutput::Training(_) => "training",
+        }
+    }
+}
+
+/// Builder for [`Engine`].
+pub struct EngineBuilder {
+    hmm: Arc<Hmm>,
+    scan: ScanOptions,
+    baum_welch: BaumWelchOptions,
+    backend: Option<Arc<dyn Backend>>,
+}
+
+impl EngineBuilder {
+    /// Threading/schedule options for the parallel-scan methods.
+    pub fn scan_options(mut self, scan: ScanOptions) -> Self {
+        self.scan = scan;
+        self
+    }
+
+    /// Options for [`Algorithm::BaumWelch`] runs. The engine's scan
+    /// options override the `scan` field at run time so all methods
+    /// share one threading policy.
+    pub fn baum_welch_options(mut self, opts: BaumWelchOptions) -> Self {
+        self.baum_welch = opts;
+        self
+    }
+
+    /// Execution backend (defaults to [`NativeBackend`]).
+    pub fn backend(mut self, backend: Arc<dyn Backend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    pub fn build(self) -> Engine {
+        Engine {
+            hmm: self.hmm,
+            scan: self.scan,
+            baum_welch: self.baum_welch,
+            backend: self.backend.unwrap_or_else(|| Arc::new(NativeBackend)),
+            ws: Workspace::default(),
+        }
+    }
+}
+
+/// The unified inference engine: owns a model, a backend, threading
+/// options and a reusable scratch workspace.
+pub struct Engine {
+    hmm: Arc<Hmm>,
+    scan: ScanOptions,
+    baum_welch: BaumWelchOptions,
+    backend: Arc<dyn Backend>,
+    ws: Workspace,
+}
+
+impl Engine {
+    /// Start building an engine for `hmm` (accepts `Hmm` or `Arc<Hmm>`).
+    pub fn builder(hmm: impl Into<Arc<Hmm>>) -> EngineBuilder {
+        EngineBuilder {
+            hmm: hmm.into(),
+            scan: ScanOptions::default(),
+            baum_welch: BaumWelchOptions::default(),
+            backend: None,
+        }
+    }
+
+    pub fn hmm(&self) -> &Hmm {
+        &self.hmm
+    }
+
+    pub fn scan_options(&self) -> ScanOptions {
+        self.scan
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Run one algorithm on one observation sequence.
+    ///
+    /// `&mut self` because the call reuses the engine's scratch
+    /// workspace; results are bit-identical to the free functions (see
+    /// `engine::tests`).
+    pub fn run(&mut self, alg: Algorithm, ys: &[u32]) -> Result<EngineOutput> {
+        let mut bw = self.baum_welch;
+        bw.scan = self.scan;
+        self.backend.run(&self.hmm, alg, ys, self.scan, bw, &mut self.ws)
+    }
+
+    /// Convenience: parallel smoothing marginals ([`Algorithm::SpPar`]).
+    pub fn smooth(&mut self, ys: &[u32]) -> Result<Posterior> {
+        self.run(Algorithm::SpPar, ys)?.into_posterior()
+    }
+
+    /// Convenience: parallel MAP decoding ([`Algorithm::MpPar`]).
+    pub fn decode_map(&mut self, ys: &[u32]) -> Result<MapEstimate> {
+        self.run(Algorithm::MpPar, ys)?.into_map()
+    }
+
+    /// Run one algorithm over many sequences, fanned out over
+    /// `exec::parallel_for_chunks` with one scratch workspace per worker.
+    ///
+    /// The thread budget is split across the batch dimension first: each
+    /// of the min(n, threads) workers runs its sequences with
+    /// ⌊threads / n⌋ scan threads (serial once the batch saturates the
+    /// cores), so the total never oversubscribes the machine. Results
+    /// preserve input order, with per-sequence errors reported per slot.
+    pub fn run_batch(
+        &self,
+        alg: Algorithm,
+        seqs: &[Vec<u32>],
+    ) -> Vec<Result<EngineOutput>> {
+        let n = seqs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = self.scan.threads.max(1);
+        let per_seq_threads = (threads / n).max(1);
+        let per_seq_scan = if per_seq_threads == 1 {
+            ScanOptions { threads: 1, min_parallel_work: usize::MAX, ..self.scan }
+        } else {
+            ScanOptions { threads: per_seq_threads, ..self.scan }
+        };
+        let mut bw = self.baum_welch;
+        bw.scan = per_seq_scan;
+
+        let mut out: Vec<Option<Result<EngineOutput>>> = Vec::new();
+        out.resize_with(n, || None);
+        {
+            let slots = crate::exec::SharedSliceMut::new(&mut out);
+            let backend = &self.backend;
+            let hmm = &self.hmm;
+            crate::exec::parallel_for_chunks(n, threads, |_, lo, hi| {
+                let mut ws = Workspace::default();
+                for i in lo..hi {
+                    let r = backend.run(hmm, alg, &seqs[i], per_seq_scan, bw, &mut ws);
+                    // SAFETY: slot i is written by exactly one chunk
+                    // (chunks partition 0..n).
+                    unsafe { slots.write(i, Some(r)) };
+                }
+            });
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(Error::coordinator("batch slot lost"))))
+            .collect()
+    }
+}

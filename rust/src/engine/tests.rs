@@ -1,0 +1,321 @@
+//! Engine test suite: equivalence of every [`Algorithm`] against its
+//! free function (the acceptance bar for the unified API), workspace
+//! reuse determinism, batch semantics, and the XLA backend decode path
+//! (via a stub executor — no PJRT needed).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::hmm::{gilbert_elliott, sample, GeParams};
+use crate::inference::{
+    self, BaumWelchOptions, EStepBackend, MapEstimate, Posterior,
+};
+use crate::rng::Xoshiro256StarStar;
+use crate::runtime::{ArtifactExec, Manifest, Value};
+use crate::scan::ScanOptions;
+
+use super::{Algorithm, Engine, EngineOutput, NativeBackend, XlaBackend};
+
+fn max_gamma_diff(a: &Posterior, b: &Posterior) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.gamma_flat()
+        .iter()
+        .zip(b.gamma_flat())
+        .fold(0.0f64, |m, (&x, &y)| m.max((x - y).abs()))
+}
+
+fn assert_posteriors_match(name: &str, t: usize, got: &Posterior, want: &Posterior) {
+    let d = max_gamma_diff(got, want);
+    assert!(d <= 1e-12, "{name} T={t}: max |Δγ| = {d:e}");
+    let dl = (got.log_likelihood() - want.log_likelihood()).abs();
+    assert!(dl <= 1e-12, "{name} T={t}: |Δloglik| = {dl:e}");
+}
+
+fn assert_maps_match(name: &str, t: usize, got: &MapEstimate, want: &MapEstimate) {
+    let dl = (got.log_prob - want.log_prob).abs();
+    assert!(dl <= 1e-12, "{name} T={t}: |Δlogp| = {dl:e}");
+    assert_eq!(got.path, want.path, "{name} T={t}: path mismatch");
+}
+
+/// The acceptance test: every Algorithm variant through `Engine` matches
+/// its corresponding free function to ≤ 1e-12 on the Gilbert–Elliott
+/// workload at T ∈ {100, 1000, 4096} — with one engine (and therefore
+/// one reused workspace) across all 27 runs.
+#[test]
+fn all_nine_algorithms_match_free_functions() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let opts = ScanOptions::default();
+    let bw = BaumWelchOptions {
+        max_iters: 4,
+        backend: EStepBackend::ParallelScan,
+        scan: opts,
+        ..Default::default()
+    };
+    let mut engine = Engine::builder(hmm.clone())
+        .scan_options(opts)
+        .baum_welch_options(bw)
+        .build();
+    assert_eq!(engine.backend_name(), "native");
+
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xE91E);
+    for t in [100usize, 1000, 4096] {
+        let tr = sample(&hmm, t, &mut rng);
+        let ys = &tr.observations;
+        for alg in Algorithm::ALL {
+            let out = engine.run(alg, ys).unwrap();
+            let name = alg.name();
+            match alg {
+                Algorithm::SpSeq => assert_posteriors_match(
+                    name, t, out.as_posterior().unwrap(),
+                    &inference::sp_seq(&hmm, ys).unwrap(),
+                ),
+                Algorithm::SpPar => assert_posteriors_match(
+                    name, t, out.as_posterior().unwrap(),
+                    &inference::sp_par(&hmm, ys, opts).unwrap(),
+                ),
+                Algorithm::BsSeq => assert_posteriors_match(
+                    name, t, out.as_posterior().unwrap(),
+                    &inference::bs_seq(&hmm, ys).unwrap(),
+                ),
+                Algorithm::BsPar => assert_posteriors_match(
+                    name, t, out.as_posterior().unwrap(),
+                    &inference::bs_par(&hmm, ys, opts).unwrap(),
+                ),
+                Algorithm::Viterbi => assert_maps_match(
+                    name, t, out.as_map().unwrap(),
+                    &inference::viterbi(&hmm, ys).unwrap(),
+                ),
+                Algorithm::MpSeq => assert_maps_match(
+                    name, t, out.as_map().unwrap(),
+                    &inference::mp_seq(&hmm, ys).unwrap(),
+                ),
+                Algorithm::MpPar => assert_maps_match(
+                    name, t, out.as_map().unwrap(),
+                    &inference::mp_par(&hmm, ys, opts).unwrap(),
+                ),
+                Algorithm::MpPathPar => assert_maps_match(
+                    name, t, out.as_map().unwrap(),
+                    &inference::mp_path_par(&hmm, ys, opts).unwrap(),
+                ),
+                Algorithm::BaumWelch => {
+                    let got = out.as_training().unwrap();
+                    let want = inference::baum_welch(&hmm, ys, bw).unwrap();
+                    assert_eq!(got.iterations, want.iterations, "bw T={t}");
+                    for (a, b) in got.loglik_curve.iter().zip(&want.loglik_curve) {
+                        assert!((a - b).abs() <= 1e-12, "bw curve T={t}");
+                    }
+                    for (a, b) in got
+                        .model
+                        .transition()
+                        .data()
+                        .iter()
+                        .zip(want.model.transition().data())
+                    {
+                        assert!((a - b).abs() <= 1e-12, "bw model T={t}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Workspace reuse must be invisible: two consecutive runs on the same
+/// input produce bit-identical results, including across interleaved
+/// shape changes (grow / shrink the buffers between calls).
+#[test]
+fn workspace_reuse_is_deterministic() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let mut engine = Engine::builder(hmm.clone()).build();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xACE);
+    let long = sample(&hmm, 500, &mut rng).observations;
+    let short = sample(&hmm, 77, &mut rng).observations;
+
+    let first_sp = engine.run(Algorithm::SpPar, &long).unwrap();
+    let again_sp = engine.run(Algorithm::SpPar, &long).unwrap();
+    assert_eq!(
+        first_sp.as_posterior().unwrap(),
+        again_sp.as_posterior().unwrap(),
+        "consecutive SpPar runs must be bit-identical"
+    );
+
+    let first_mp = engine.run(Algorithm::MpPar, &long).unwrap();
+    let first_bs = engine.run(Algorithm::BsPar, &long).unwrap();
+
+    // Interleave a shorter sequence (shrinks every buffer)…
+    engine.run(Algorithm::SpPar, &short).unwrap();
+    engine.run(Algorithm::MpPar, &short).unwrap();
+    engine.run(Algorithm::BsPar, &short).unwrap();
+
+    // …then the original input must still reproduce exactly.
+    let sp = engine.run(Algorithm::SpPar, &long).unwrap();
+    let mp = engine.run(Algorithm::MpPar, &long).unwrap();
+    let bs = engine.run(Algorithm::BsPar, &long).unwrap();
+    assert_eq!(first_sp.as_posterior().unwrap(), sp.as_posterior().unwrap());
+    assert_eq!(first_mp.as_map().unwrap(), mp.as_map().unwrap());
+    assert_eq!(first_bs.as_posterior().unwrap(), bs.as_posterior().unwrap());
+}
+
+#[test]
+fn run_batch_matches_individual_runs() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xBA7C);
+    let seqs: Vec<Vec<u32>> = [40usize, 100, 7, 256, 1]
+        .iter()
+        .map(|&t| sample(&hmm, t, &mut rng).observations)
+        .collect();
+    let engine = Engine::builder(hmm.clone())
+        .scan_options(ScanOptions { threads: 4, ..ScanOptions::default() })
+        .build();
+
+    let batch = engine.run_batch(Algorithm::SpPar, &seqs);
+    assert_eq!(batch.len(), seqs.len());
+    for (ys, out) in seqs.iter().zip(&batch) {
+        let got = out.as_ref().unwrap().as_posterior().unwrap();
+        // Batch runs may use a serial per-sequence schedule; compare
+        // against the library default tolerance, not bitwise.
+        let want = inference::sp_seq(&hmm, ys).unwrap();
+        let d = max_gamma_diff(got, &want);
+        assert!(d < 1e-9, "batch T={}: max |Δγ| = {d:e}", ys.len());
+    }
+
+    // Per-item errors: an invalid sequence fails its slot only.
+    let mut with_bad = seqs.clone();
+    with_bad[2] = vec![0, 9, 1]; // symbol 9 out of range (M = 2)
+    let batch = engine.run_batch(Algorithm::MpPar, &with_bad);
+    assert!(batch[2].is_err());
+    for (i, out) in batch.iter().enumerate() {
+        if i != 2 {
+            assert!(out.is_ok(), "slot {i} should succeed");
+        }
+    }
+
+    assert!(engine.run_batch(Algorithm::SpPar, &[]).is_empty());
+}
+
+#[test]
+fn output_accessors_enforce_task_shape() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let mut engine = Engine::builder(hmm).build();
+    let post = engine.run(Algorithm::SpPar, &[0, 1, 0]).unwrap();
+    assert!(post.as_posterior().is_some());
+    assert!(post.as_map().is_none());
+    assert!(post.clone().into_map().is_err());
+    assert!(post.into_posterior().is_ok());
+
+    let map = engine.run(Algorithm::Viterbi, &[0, 1, 0]).unwrap();
+    assert!(map.as_map().is_some());
+    assert!(map.clone().into_training().is_err());
+
+    let smoothed = engine.smooth(&[0, 1, 1]).unwrap();
+    assert_eq!(smoothed.len(), 3);
+    let decoded = engine.decode_map(&[0, 1, 1]).unwrap();
+    assert_eq!(decoded.path.len(), 3);
+}
+
+// ---------------------------------------------------------------------------
+// XLA backend (stub executor — exercises lookup, marshalling, decode)
+// ---------------------------------------------------------------------------
+
+/// Fabricated artifact outputs keyed by entry family.
+struct StubExec {
+    gamma: Vec<f32>,
+    loglik: f32,
+    path: Vec<i32>,
+    log_prob: f32,
+}
+
+impl ArtifactExec for StubExec {
+    fn run(&self, artifact: &str, inputs: Vec<Value>) -> crate::Result<Vec<Value>> {
+        // The engine must marshal the standard 5-input layout.
+        assert_eq!(inputs.len(), 5);
+        if artifact.starts_with("sp") {
+            Ok(vec![
+                Value::F32(self.gamma.clone(), vec![self.gamma.len() / 4, 4]),
+                Value::scalar_f32(self.loglik),
+            ])
+        } else {
+            Ok(vec![
+                Value::I32(self.path.clone(), vec![self.path.len()]),
+                Value::scalar_f32(self.log_prob),
+            ])
+        }
+    }
+}
+
+fn stub_manifest() -> Arc<Manifest> {
+    let json = r#"{
+      "version": 1, "interchange": "hlo-text",
+      "artifacts": [
+        {"name": "sp_par_T8", "entry": "sp_par", "kind": "core",
+         "t": 8, "d": 4, "m": 2, "path": "a", "inputs": [], "outputs": []},
+        {"name": "mp_par_T8", "entry": "mp_par", "kind": "core",
+         "t": 8, "d": 4, "m": 2, "path": "a", "inputs": [], "outputs": []}
+      ]
+    }"#;
+    Arc::new(Manifest::parse(json, PathBuf::from("/x")).unwrap())
+}
+
+fn xla_engine(stub: StubExec) -> Engine {
+    let backend = XlaBackend::new(Arc::new(stub), stub_manifest());
+    Engine::builder(gilbert_elliott(GeParams::default()))
+        .backend(Arc::new(backend))
+        .build()
+}
+
+#[test]
+fn xla_backend_decodes_core_outputs() {
+    let gamma: Vec<f32> = (0..32).map(|i| i as f32).collect(); // capacity 8 × D 4
+    let mut engine = xla_engine(StubExec {
+        gamma,
+        loglik: -3.5,
+        path: vec![0, 1, 2, 3, 1, 0, 0, 0],
+        log_prob: -7.25,
+    });
+    assert_eq!(engine.backend_name(), "xla");
+
+    // T = 5 pads into the T = 8 artifact; padding rows are discarded.
+    let ys = vec![0u32, 1, 1, 0, 1];
+    let post = engine.run(Algorithm::SpPar, &ys).unwrap().into_posterior().unwrap();
+    assert_eq!(post.len(), 5);
+    assert_eq!(post.gamma(0), &[0.0, 1.0, 2.0, 3.0]);
+    assert_eq!(post.gamma(4), &[16.0, 17.0, 18.0, 19.0]);
+    assert_eq!(post.log_likelihood(), -3.5);
+
+    let est = engine.run(Algorithm::MpPar, &ys).unwrap().into_map().unwrap();
+    assert_eq!(est.path, vec![0, 1, 2, 3, 1]);
+    assert_eq!(est.log_prob, -7.25);
+
+    // No artifact covers T > capacity, sequential entries, or training.
+    assert!(engine.run(Algorithm::SpPar, &vec![0u32; 9]).is_err());
+    assert!(engine.run(Algorithm::SpSeq, &ys).is_err());
+    assert!(engine.run(Algorithm::BaumWelch, &ys).is_err());
+}
+
+#[test]
+fn xla_backend_rejects_out_of_range_states() {
+    let mut engine = xla_engine(StubExec {
+        gamma: vec![0.0; 32],
+        loglik: 0.0,
+        path: vec![0, 1, 9, 0, 0, 0, 0, 0], // state 9 ≥ D = 4
+        log_prob: 0.0,
+    });
+    let err = engine.run(Algorithm::MpPar, &[0, 1, 1]).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+}
+
+#[test]
+fn explicit_native_backend_matches_default() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let mut a = Engine::builder(hmm.clone()).build();
+    let mut b = Engine::builder(hmm)
+        .backend(Arc::new(NativeBackend))
+        .build();
+    let ys = vec![0u32, 1, 0, 1, 1, 0];
+    let pa = a.run(Algorithm::SpPar, &ys).unwrap();
+    let pb = b.run(Algorithm::SpPar, &ys).unwrap();
+    assert_eq!(pa.as_posterior().unwrap(), pb.as_posterior().unwrap());
+    match a.run(Algorithm::BaumWelch, &ys).unwrap() {
+        EngineOutput::Training(res) => assert!(res.iterations > 0),
+        other => panic!("expected training output, got {other:?}"),
+    }
+}

@@ -1,4 +1,7 @@
 //! Unified error type for the crate.
+//!
+//! Hand-rolled `Display`/`Error` impls — the `thiserror` derive crate is
+//! unavailable in the offline build (DESIGN.md §1).
 
 use std::fmt;
 
@@ -7,38 +10,63 @@ pub type Result<T> = std::result::Result<T, Error>;
 
 /// Unified error for model validation, runtime, coordinator and IO
 /// failures.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid HMM specification (non-stochastic rows, shape mismatch…).
-    #[error("invalid model: {0}")]
     InvalidModel(String),
 
     /// Invalid request (empty sequence, observation symbol out of range…).
-    #[error("invalid request: {0}")]
     InvalidRequest(String),
 
     /// JSON parse/serialize failure (jsonx substrate).
-    #[error("json error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// Artifact manifest problems: missing file, bad signature, …
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// PJRT/XLA runtime failure.
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Coordinator lifecycle errors (queue closed, worker panicked…).
-    #[error("coordinator: {0}")]
     Coordinator(String),
 
     /// CLI usage error.
-    #[error("usage: {0}")]
     Usage(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// IO failure (transparent).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidModel(m) => write!(f, "invalid model: {m}"),
+            Error::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json error at byte {offset}: {msg}")
+            }
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla runtime: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Usage(m) => write!(f, "usage: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -83,5 +111,7 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "x");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+        assert_eq!(e.to_string(), "x");
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -8,9 +8,10 @@
 use crate::benchx::{bench, BenchConfig, Measurement};
 use crate::blockwise;
 use crate::config::RunConfig;
+use crate::engine::{Algorithm, Engine};
 use crate::error::Result;
 use crate::hmm::{gilbert_elliott, sample, Hmm};
-use crate::inference;
+use crate::inference::Posterior;
 use crate::report::{ascii_plot, markdown_table, write_csv, PlotOptions, Series};
 use crate::rng::Xoshiro256StarStar;
 use crate::scan::ScanOptions;
@@ -42,25 +43,21 @@ fn is_parallel(method: &str) -> bool {
     method.ends_with("Par")
 }
 
-/// Run one native method at length `t`; returns the measured median.
+/// Run one native method at length `t` through the unified engine;
+/// returns the measured median. Dispatch is by the paper's method name
+/// (`Algorithm::from_paper_name` — the taxonomy's single source of
+/// truth), and repeated iterations reuse the engine's workspace exactly
+/// as the serving hot path does.
 fn run_method(
     method: &str,
-    hmm: &Hmm,
+    engine: &mut Engine,
     ys: &[u32],
-    scan: ScanOptions,
     cfg: BenchConfig,
 ) -> Measurement {
+    let alg = Algorithm::from_paper_name(method)
+        .unwrap_or_else(|| panic!("unknown method {method}"));
     let name = format!("{method}/T={}", ys.len());
-    match method {
-        "BS-Seq" => bench(&name, cfg, || inference::bs_seq(hmm, ys).unwrap()),
-        "BS-Par" => bench(&name, cfg, || inference::bs_par(hmm, ys, scan).unwrap()),
-        "SP-Seq" => bench(&name, cfg, || inference::sp_seq(hmm, ys).unwrap()),
-        "SP-Par" => bench(&name, cfg, || inference::sp_par(hmm, ys, scan).unwrap()),
-        "MP-Seq" => bench(&name, cfg, || inference::mp_seq(hmm, ys).unwrap()),
-        "MP-Par" => bench(&name, cfg, || inference::mp_par(hmm, ys, scan).unwrap()),
-        "Viterbi" => bench(&name, cfg, || inference::viterbi(hmm, ys).unwrap()),
-        other => panic!("unknown method {other}"),
-    }
+    bench(&name, cfg, || engine.run(alg, ys).unwrap())
 }
 
 fn workload(config: &RunConfig, t: usize) -> (Hmm, Vec<u32>) {
@@ -108,9 +105,10 @@ pub fn fig3(config: &RunConfig, quick: bool) -> Result<Vec<Series>> {
     let mut series: Vec<Series> = METHODS.iter().map(|m| Series::new(*m)).collect();
     for &t in &grid {
         let (hmm, ys) = workload(config, t);
+        let mut engine = Engine::builder(hmm).scan_options(scan).build();
         let cfg = if t >= 30_000 { BenchConfig::heavy() } else { BenchConfig::default() };
         for (mi, method) in METHODS.iter().enumerate() {
-            let m = run_method(method, &hmm, &ys, scan, cfg);
+            let m = run_method(method, &mut engine, &ys, cfg);
             series[mi].push(t as f64, m.median_secs());
         }
     }
@@ -237,7 +235,9 @@ pub fn fig6(config: &RunConfig) -> Result<Vec<Series>> {
 pub fn table1(config: &RunConfig, quick: bool) -> Result<String> {
     let t = *effective_grid(config, quick).last().unwrap();
     let (hmm, ys) = workload(config, t);
+    let d = hmm.num_states();
     let scan = config.scan_options();
+    let mut engine = Engine::builder(hmm).scan_options(scan).build();
     let cfg = BenchConfig::heavy();
     let dev = Device::gpu_3090_default();
 
@@ -247,13 +247,13 @@ pub fn table1(config: &RunConfig, quick: bool) -> Result<String> {
          ("SP-Seq", "SP-Par", "Sum-product (fwd-bwd)"),
          ("MP-Seq", "MP-Par", "Max-product (Viterbi)")]
     {
-        let ms = run_method(seq, &hmm, &ys, scan, cfg).median_secs();
-        let mp = run_method(par, &hmm, &ys, scan, cfg).median_secs();
+        let ms = run_method(seq, &mut engine, &ys, cfg).median_secs();
+        let mp = run_method(par, &mut engine, &ys, cfg).median_secs();
         let sim =
             simulate_method(seq, t, 4, &dev) / simulate_method(par, t, 4, &dev);
         rows.push(vec![
             name.to_string(),
-            format!("{}", hmm.num_states()),
+            format!("{d}"),
             format!("{t}"),
             format!("{:.2}x", ms / mp),
             format!("{sim:.0}x"),
@@ -279,22 +279,24 @@ pub fn equivalence_report(config: &RunConfig, quick: bool) -> Result<String> {
     let t = if quick { 1000 } else { 10_000 };
     let (hmm, ys) = workload(config, t);
     let scan = config.scan_options();
+    let mut engine = Engine::builder(hmm).scan_options(scan).build();
 
-    let sp_seq = inference::sp_seq(&hmm, &ys)?;
-    let sp_par = inference::sp_par(&hmm, &ys, scan)?;
-    let bs_seq = inference::bs_seq(&hmm, &ys)?;
-    let bs_par = inference::bs_par(&hmm, &ys, scan)?;
-    let bw = blockwise::sp_blockwise(&hmm, &ys, config.block_len, config.threads)?;
+    let sp_seq = engine.run(Algorithm::SpSeq, &ys)?.into_posterior()?;
+    let sp_par = engine.run(Algorithm::SpPar, &ys)?.into_posterior()?;
+    let bs_seq = engine.run(Algorithm::BsSeq, &ys)?.into_posterior()?;
+    let bs_par = engine.run(Algorithm::BsPar, &ys)?.into_posterior()?;
+    let bw =
+        blockwise::sp_blockwise(engine.hmm(), &ys, config.block_len, config.threads)?;
 
-    let mae = |a: &inference::Posterior, b: &inference::Posterior| {
+    let mae = |a: &Posterior, b: &Posterior| {
         a.gamma_flat()
             .iter()
             .zip(b.gamma_flat())
             .fold(0.0f64, |m, (&x, &y)| m.max((x - y).abs()))
     };
-    let vit = inference::viterbi(&hmm, &ys)?;
-    let mp_seq = inference::mp_seq(&hmm, &ys)?;
-    let mp_par = inference::mp_par(&hmm, &ys, scan)?;
+    let vit = engine.run(Algorithm::Viterbi, &ys)?.into_map()?;
+    let mp_seq = engine.run(Algorithm::MpSeq, &ys)?.into_map()?;
+    let mp_par = engine.run(Algorithm::MpPar, &ys)?.into_map()?;
 
     let rows = vec![
         vec!["SP-Par vs SP-Seq (max abs dgamma)".into(), format!("{:.2e}", mae(&sp_par, &sp_seq))],
@@ -349,10 +351,11 @@ pub fn ablation_threads(config: &RunConfig, quick: bool) -> Result<Vec<Series>> 
             break;
         }
         let scan = ScanOptions { threads, ..ScanOptions::default() };
+        let mut engine = Engine::builder(hmm.clone()).scan_options(scan).build();
         let m = bench(
             &format!("threads={threads}"),
             BenchConfig::heavy(),
-            || inference::sp_par(&hmm, &ys, scan).unwrap(),
+            || engine.run(Algorithm::SpPar, &ys).unwrap(),
         );
         s.push(threads as f64, m.median_secs());
     }

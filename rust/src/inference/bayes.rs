@@ -4,7 +4,7 @@
 //! the potential-based SP methods — the two differ in backward-pass
 //! structure (RTS vs two-filter), not in results.
 
-use crate::elements::{bs_element_chain, BsFilterOp, TINY};
+use crate::elements::{bs_element_chain_into, BsFilterOp, TINY};
 use crate::error::Result;
 use crate::hmm::Hmm;
 use crate::linalg::{normalize_sum, Mat};
@@ -12,6 +12,7 @@ use crate::scan::{run_scan, run_scan_rev, AssocOp, ScanOptions};
 use crate::semiring::Prob;
 
 use super::types::Posterior;
+use super::workspace::Workspace;
 
 /// BS-Seq — forward filter + Rauch–Tung–Striebel backward recursion.
 /// O(D²T) work and span.
@@ -105,15 +106,30 @@ impl AssocOp<Mat> for RtsOp {
 /// 2. reversed parallel scan of RTS conditionals → p(x_k | y_{1:T}).
 ///
 /// O(D³ log T) span, O(D³ T) work.
+///
+/// Thin wrapper over [`bs_par_ws`] with a throwaway workspace; the
+/// serving hot path goes through `engine::Engine`, which reuses one.
 pub fn bs_par(hmm: &Hmm, ys: &[u32], opts: ScanOptions) -> Result<Posterior> {
+    bs_par_ws(hmm, ys, opts, &mut Workspace::default())
+}
+
+/// [`bs_par`] with caller-owned scratch (see `inference::workspace`).
+pub fn bs_par_ws(
+    hmm: &Hmm,
+    ys: &[u32],
+    opts: ScanOptions,
+    ws: &mut Workspace,
+) -> Result<Posterior> {
     hmm.check_observations(ys)?;
     let d = hmm.num_states();
     let t = ys.len();
 
-    // Forward: filtering-element scan.
+    // Forward: filtering-element scan (scanned in place — the chain is
+    // rebuilt into the same buffer on the next call).
     let op = BsFilterOp { d };
-    let mut fwd = bs_element_chain(hmm, ys);
-    run_scan(&op, &mut fwd, opts);
+    let fwd = &mut ws.bs.elems;
+    bs_element_chain_into(hmm, ys, fwd);
+    run_scan(&op, fwd.as_mut_slice(), opts);
     // After absorbing the first element the conditional rows coincide:
     // row 0 of f is p(x_k | y_{1:k}).
     let filtered: Vec<&[f64]> = fwd.iter().map(|e| e.f.row(0)).collect();
@@ -126,10 +142,16 @@ pub fn bs_par(hmm: &Hmm, ys: &[u32], opts: ScanOptions) -> Result<Posterior> {
     // Backward: RTS conditionals S_k from filtered marginals, composed
     // by a reversed scan; smoothed_k = filtered_{T-1} · R_k.
     let pi = hmm.transition();
-    let mut elems: Vec<Mat> = Vec::with_capacity(t);
+    let suffix = &mut ws.bs.rts;
+    if suffix.len() != t
+        || suffix.first().map_or(true, |m| m.rows() != d || m.cols() != d)
+    {
+        suffix.clear();
+        suffix.resize(t, Mat::zeros(d, d));
+    }
     for k in 0..t - 1 {
         let f = filtered[k];
-        let mut s = Mat::zeros(d, d);
+        let s = &mut suffix[k];
         for m in 0..d {
             let mut total = 0.0;
             for i in 0..d {
@@ -142,14 +164,20 @@ pub fn bs_par(hmm: &Hmm, ys: &[u32], opts: ScanOptions) -> Result<Posterior> {
                 s[(m, i)] /= total;
             }
         }
-        elems.push(s);
     }
-    elems.push(Mat::identity::<Prob>(d)); // terminal R_{T-1} = I
+    {
+        // Terminal R_{T-1} = I, written in place.
+        let term = &mut suffix[t - 1];
+        for r in 0..d {
+            for c in 0..d {
+                term[(r, c)] = if r == c { 1.0 } else { 0.0 };
+            }
+        }
+    }
 
     let rts = RtsOp { d };
     let f_last: Vec<f64> = filtered[t - 1].to_vec();
-    let mut suffix = elems;
-    run_scan_rev(&rts, &mut suffix, opts);
+    run_scan_rev(&rts, suffix.as_mut_slice(), opts);
 
     let mut gamma = vec![0.0f64; t * d];
     for k in 0..t {

@@ -3,7 +3,8 @@
 //! (§IV-B, Definition 4 / Corollary 1).
 
 use crate::elements::{
-    mp_element_chain, mp_terminal, safe_ln, MpOp, PathElement, PathOp,
+    mp_element_chain, mp_element_chain_into, mp_terminal, safe_ln, MpOp,
+    PathElement, PathOp,
 };
 use crate::error::Result;
 use crate::hmm::Hmm;
@@ -11,6 +12,7 @@ use crate::linalg::argmax;
 use crate::scan::{run_scan, run_scan_rev, AssocOp, ScanOptions};
 
 use super::types::MapEstimate;
+use super::workspace::{copy_elements, copy_elements_shifted, Workspace};
 
 /// MP-Seq — sequential max-product: the ψ̃^f / ψ̃^b recursions of
 /// Lemma 3, combined per Theorem 4 (Eq. 40). O(D²T) work and span.
@@ -73,19 +75,34 @@ pub fn mp_seq(hmm: &Hmm, ys: &[u32]) -> Result<MapEstimate> {
 /// MP-Par — parallel max-product (Algorithm 5): forward and reversed
 /// parallel scans over log-domain elements with the tropical ∨ combine,
 /// MAP states via Eq. (40). O(D³ log T) span, O(D³ T) work.
+///
+/// Thin wrapper over [`mp_par_ws`] with a throwaway workspace; the
+/// serving hot path goes through `engine::Engine`, which reuses one.
 pub fn mp_par(hmm: &Hmm, ys: &[u32], opts: ScanOptions) -> Result<MapEstimate> {
+    mp_par_ws(hmm, ys, opts, &mut Workspace::default())
+}
+
+/// [`mp_par`] with caller-owned scratch (see `inference::workspace`).
+pub fn mp_par_ws(
+    hmm: &Hmm,
+    ys: &[u32],
+    opts: ScanOptions,
+    ws: &mut Workspace,
+) -> Result<MapEstimate> {
     hmm.check_observations(ys)?;
     let d = hmm.num_states();
     let t = ys.len();
     let op = MpOp { d };
 
-    let elems = mp_element_chain(hmm, ys);
-    let mut fwd = elems.clone();
-    run_scan(&op, &mut fwd, opts);
+    let elems = &mut ws.mp.elems;
+    mp_element_chain_into(hmm, ys, elems);
+    let fwd = &mut ws.mp.fwd;
+    copy_elements(elems.as_slice(), fwd);
+    run_scan(&op, fwd.as_mut_slice(), opts);
 
-    let mut bwd = elems[1..].to_vec();
-    bwd.push(mp_terminal(d));
-    run_scan_rev(&op, &mut bwd, opts);
+    let bwd = &mut ws.mp.bwd;
+    copy_elements_shifted(elems.as_slice(), mp_terminal(d), bwd);
+    run_scan_rev(&op, bwd.as_mut_slice(), opts);
 
     let mut path = vec![0u32; t];
     for k in 0..t {

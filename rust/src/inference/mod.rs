@@ -16,7 +16,10 @@
 //! All functions share the same I/O shape: an [`Hmm`](crate::hmm::Hmm)
 //! and an observation sequence; smoothers return a [`Posterior`], MAP
 //! estimators a [`MapEstimate`]. Parallel variants additionally take
-//! [`ScanOptions`](crate::scan::ScanOptions).
+//! [`ScanOptions`](crate::scan::ScanOptions), and have `*_ws` forms
+//! taking a reusable [`Workspace`] — the free functions are thin
+//! wrappers over a throwaway one. The unified entry point over all nine
+//! methods is [`engine::Engine`](crate::engine::Engine).
 
 mod bayes;
 mod baum_welch;
@@ -24,13 +27,15 @@ mod maxprod;
 mod sumprod;
 mod types;
 mod viterbi;
+mod workspace;
 
-pub use bayes::{bs_par, bs_seq};
+pub use bayes::{bs_par, bs_par_ws, bs_seq};
 pub use baum_welch::{baum_welch, BaumWelchOptions, BaumWelchResult, EStepBackend};
-pub use maxprod::{mp_par, mp_path_par, mp_seq};
-pub use sumprod::{sp_par, sp_seq};
+pub use maxprod::{mp_par, mp_par_ws, mp_path_par, mp_seq};
+pub use sumprod::{sp_par, sp_par_ws, sp_seq};
 pub use types::{MapEstimate, Posterior};
 pub use viterbi::viterbi;
+pub use workspace::{BsBuffers, MpBuffers, SpBuffers, Workspace};
 
 #[cfg(test)]
 mod tests {

@@ -1,13 +1,14 @@
 //! Sum-product smoothers: the classical two-filter algorithm
 //! (Algorithm 1 + Eq. 22) and its parallel-scan version (Algorithm 3).
 
-use crate::elements::{sp_element_chain, sp_terminal, SpElement, SpOp};
+use crate::elements::{sp_element_chain_into, sp_terminal, SpOp};
 use crate::error::Result;
 use crate::hmm::Hmm;
 use crate::linalg::normalize_sum;
 use crate::scan::{run_scan, run_scan_rev, ScanOptions};
 
 use super::types::Posterior;
+use super::workspace::{copy_elements, copy_elements_shifted, Workspace};
 
 /// SP-Seq — classical sum-product (Algorithm 1): forward α and backward
 /// β recursions with per-step rescaling, marginals via Eq. (22).
@@ -75,23 +76,40 @@ pub fn sp_seq(hmm: &Hmm, ys: &[u32]) -> Result<Posterior> {
 /// SP-Par — parallel sum-product (Algorithm 3): forward parallel scan
 /// for ψ^f, reversed parallel scan for ψ^b, marginals via Eq. (22).
 /// O(D³ log T) span, O(D³ T) work.
+///
+/// Thin wrapper over [`sp_par_ws`] with a throwaway workspace; the
+/// serving hot path goes through `engine::Engine`, which reuses one.
 pub fn sp_par(hmm: &Hmm, ys: &[u32], opts: ScanOptions) -> Result<Posterior> {
+    sp_par_ws(hmm, ys, opts, &mut Workspace::default())
+}
+
+/// [`sp_par`] with caller-owned scratch: the element chain and both scan
+/// buffers are overwritten in place across calls (identical results,
+/// zero per-call D×D allocations once warm).
+pub fn sp_par_ws(
+    hmm: &Hmm,
+    ys: &[u32],
+    opts: ScanOptions,
+    ws: &mut Workspace,
+) -> Result<Posterior> {
     hmm.check_observations(ys)?;
     let d = hmm.num_states();
     let t = ys.len();
     let op = SpOp { d };
 
     // Algorithm 3 lines 1-4: initialize elements; forward scan.
-    let elems = sp_element_chain(hmm, ys);
-    let mut fwd = elems.clone();
-    run_scan(&op, &mut fwd, opts);
+    let elems = &mut ws.sp.elems;
+    sp_element_chain_into(hmm, ys, elems);
+    let fwd = &mut ws.sp.fwd;
+    copy_elements(elems.as_slice(), fwd);
+    run_scan(&op, fwd.as_mut_slice(), opts);
 
     // Lines 5-8: backward elements are ψ_{k,k+1} for k = 1..T, i.e. the
     // interior elements shifted by one plus the terminal all-ones
     // element; reversed scan yields a_{k:T+1} = ψ^b.
-    let mut bwd: Vec<SpElement> = elems[1..].to_vec();
-    bwd.push(sp_terminal(d));
-    run_scan_rev(&op, &mut bwd, opts);
+    let bwd = &mut ws.sp.bwd;
+    copy_elements_shifted(elems.as_slice(), sp_terminal(d), bwd);
+    run_scan_rev(&op, bwd.as_mut_slice(), opts);
 
     // Lines 9-11 (Eq. 22): p(x_k) ∝ ψ^f(x_k) ψ^b(x_k). The forward
     // element has identical rows (prior broadcast) — read row 0; the

@@ -1,0 +1,160 @@
+//! Reusable scratch workspaces for the parallel-scan algorithms.
+//!
+//! Every `*_par` smoother/estimator materializes three O(T) vectors of
+//! D×D elements per call (the element chain plus its forward and
+//! backward scan copies). On the serving hot path those allocations
+//! dominate small-request latency, so the `engine` keeps one
+//! [`Workspace`] per [`Engine`](crate::engine::Engine) and the
+//! workspace-aware entry points (`sp_par_ws`, `mp_par_ws`, `bs_par_ws`)
+//! overwrite the buffers in place when shapes match.
+//!
+//! Reuse never changes results: the in-place writers perform the exact
+//! same floating-point operations as the allocating builders (asserted
+//! bit-for-bit by `engine::tests::workspace_reuse_is_deterministic`).
+
+use crate::elements::{BsElement, MpElement, SpElement};
+use crate::linalg::Mat;
+
+/// Scratch buffers for the sum-product family (`sp_par`).
+#[derive(Debug, Default)]
+pub struct SpBuffers {
+    pub elems: Vec<SpElement>,
+    pub fwd: Vec<SpElement>,
+    pub bwd: Vec<SpElement>,
+}
+
+/// Scratch buffers for the max-product family (`mp_par`).
+#[derive(Debug, Default)]
+pub struct MpBuffers {
+    pub elems: Vec<MpElement>,
+    pub fwd: Vec<MpElement>,
+    pub bwd: Vec<MpElement>,
+}
+
+/// Scratch buffers for the Bayesian-smoother family (`bs_par`).
+#[derive(Debug, Default)]
+pub struct BsBuffers {
+    pub elems: Vec<BsElement>,
+    pub rts: Vec<Mat>,
+}
+
+/// Per-engine scratch: one buffer set per algorithm family, grown on
+/// first use and overwritten in place afterwards.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pub sp: SpBuffers,
+    pub mp: MpBuffers,
+    pub bs: BsBuffers,
+}
+
+/// Elements that can be overwritten in place from a same-shape source —
+/// the contract the copy helpers below need to skip reallocation.
+pub(crate) trait ElementBuf: Clone {
+    /// Shape key: two elements with equal keys share buffer layout.
+    fn shape_key(&self) -> (usize, usize);
+    /// Overwrite `self` from `src` (shapes already verified equal).
+    fn overwrite_from(&mut self, src: &Self);
+}
+
+impl ElementBuf for SpElement {
+    fn shape_key(&self) -> (usize, usize) {
+        (self.mat.rows(), self.mat.cols())
+    }
+    fn overwrite_from(&mut self, src: &Self) {
+        self.mat.data_mut().copy_from_slice(src.mat.data());
+        self.log_scale = src.log_scale;
+    }
+}
+
+impl ElementBuf for MpElement {
+    fn shape_key(&self) -> (usize, usize) {
+        (self.mat.rows(), self.mat.cols())
+    }
+    fn overwrite_from(&mut self, src: &Self) {
+        self.mat.data_mut().copy_from_slice(src.mat.data());
+    }
+}
+
+impl ElementBuf for BsElement {
+    fn shape_key(&self) -> (usize, usize) {
+        (self.f.rows(), self.f.cols())
+    }
+    fn overwrite_from(&mut self, src: &Self) {
+        self.f.data_mut().copy_from_slice(src.f.data());
+        self.g.copy_from_slice(&src.g);
+        self.log_scale = src.log_scale;
+    }
+}
+
+fn reusable<E: ElementBuf>(src_len: usize, src_key: (usize, usize), dst: &[E]) -> bool {
+    dst.len() == src_len && dst.first().map_or(src_len == 0, |e| e.shape_key() == src_key)
+}
+
+/// `dst ← src`, overwriting in place when shapes match.
+pub(crate) fn copy_elements<E: ElementBuf>(src: &[E], dst: &mut Vec<E>) {
+    let key = src.first().map_or((0, 0), |e| e.shape_key());
+    if reusable(src.len(), key, dst) {
+        for (d, s) in dst.iter_mut().zip(src) {
+            d.overwrite_from(s);
+        }
+    } else {
+        dst.clear();
+        dst.extend(src.iter().cloned());
+    }
+}
+
+/// `dst ← src[1..] ++ [terminal]` (the backward-scan input: interior
+/// elements shifted by one plus the terminal element), overwriting in
+/// place when shapes match. `src` must be non-empty.
+pub(crate) fn copy_elements_shifted<E: ElementBuf>(
+    src: &[E],
+    terminal: E,
+    dst: &mut Vec<E>,
+) {
+    let n = src.len();
+    debug_assert!(n > 0, "shifted copy of an empty chain");
+    let key = src.first().map_or((0, 0), |e| e.shape_key());
+    if reusable(n, key, dst) {
+        for (d, s) in dst[..n - 1].iter_mut().zip(&src[1..]) {
+            d.overwrite_from(s);
+        }
+        dst[n - 1].overwrite_from(&terminal);
+    } else {
+        dst.clear();
+        dst.extend(src[1..].iter().cloned());
+        dst.push(terminal);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::{sp_element_chain, sp_terminal};
+    use crate::hmm::{gilbert_elliott, GeParams};
+
+    #[test]
+    fn copy_helpers_match_allocating_path() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let ys = vec![0u32, 1, 0, 0, 1];
+        let src = sp_element_chain(&hmm, &ys);
+
+        let mut dst = Vec::new();
+        copy_elements(&src, &mut dst); // allocate path
+        assert_eq!(dst, src);
+        copy_elements(&src, &mut dst); // reuse path
+        assert_eq!(dst, src);
+
+        let mut want: Vec<SpElement> = src[1..].to_vec();
+        want.push(sp_terminal(4));
+        let mut shifted = Vec::new();
+        copy_elements_shifted(&src, sp_terminal(4), &mut shifted);
+        assert_eq!(shifted, want);
+        copy_elements_shifted(&src, sp_terminal(4), &mut shifted); // reuse
+        assert_eq!(shifted, want);
+
+        // Shape change falls back to reallocation.
+        let short = sp_element_chain(&hmm, &[1u32, 1]);
+        copy_elements(&short, &mut dst);
+        assert_eq!(dst, short);
+    }
+}

@@ -10,13 +10,15 @@
 //!   [`hmm`], [`elements`], [`inference`], [`blockwise`]: native-Rust
 //!   implementations of every algorithm the paper benchmarks, used for
 //!   verification, CPU baselines and the figure benches.
-//! * **Serving runtime** — [`runtime`] (PJRT artifact loading and
-//!   execution) and [`coordinator`] (router, batcher, temporal sharder):
-//!   the L3 layer that serves inference requests over the AOT-compiled
-//!   XLA artifacts produced by `python/compile/aot.py`.
+//! * **Serving runtime** — [`engine`] (the unified inference API: one
+//!   entry point for all nine algorithms, pluggable backends, reusable
+//!   workspaces), [`runtime`] (PJRT artifact loading and execution) and
+//!   [`coordinator`] (router, batcher, temporal sharder): the L3 layer
+//!   that serves inference requests over the AOT-compiled XLA artifacts
+//!   produced by `python/compile/aot.py`.
 //! * **Substrates** — [`rng`], [`jsonx`], [`exec`], [`cli`], [`benchx`],
-//!   [`proptestx`], [`report`], [`config`], [`simulator`]: in-tree
-//!   replacements for crates unavailable in the offline build
+//!   [`proptestx`], [`report`], [`config`], [`simulator`], [`xla_stub`]:
+//!   in-tree replacements for crates unavailable in the offline build
 //!   environment plus the work-span GPU simulator used for Figs. 4–6.
 
 pub mod benchx;
@@ -25,6 +27,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod elements;
+pub mod engine;
 pub mod error;
 pub mod experiments;
 pub mod exec;
@@ -39,5 +42,6 @@ pub mod runtime;
 pub mod scan;
 pub mod semiring;
 pub mod simulator;
+pub mod xla_stub;
 
 pub use error::{Error, Result};

@@ -15,9 +15,10 @@ use hmm_scan::config::RunConfig;
 use hmm_scan::coordinator::{
     Algo, Coordinator, CoordinatorConfig, DecodeRequest, ExecMode,
 };
+use hmm_scan::engine::{Algorithm, Engine};
 use hmm_scan::error::{Error, Result};
 use hmm_scan::hmm::{gilbert_elliott, sample};
-use hmm_scan::inference::{baum_welch, BaumWelchOptions, EStepBackend};
+use hmm_scan::inference::{BaumWelchOptions, EStepBackend};
 use hmm_scan::rng::Xoshiro256StarStar;
 use hmm_scan::simulator::Device;
 
@@ -122,12 +123,9 @@ fn run(args: &[String]) -> Result<()> {
 fn cmd_decode(p: &hmm_scan::cli::Parsed) -> Result<()> {
     let config = load_config(p)?;
     let t = p.get_usize("t")?;
-    let algo = match p.get("algo").unwrap_or("smooth") {
-        "smooth" => Algo::Smooth,
-        "map" => Algo::Map,
-        "bayes" => Algo::BayesSmooth,
-        other => return Err(Error::usage(format!("unknown algo '{other}'"))),
-    };
+    let algo_str = p.get("algo").unwrap_or("smooth");
+    let algo = Algo::parse(algo_str)
+        .ok_or_else(|| Error::usage(format!("unknown algo '{algo_str}'")))?;
     let mode = match p.get("mode").unwrap_or("auto") {
         "auto" => ExecMode::Auto,
         "native" => ExecMode::Native,
@@ -308,11 +306,14 @@ fn cmd_train(p: &hmm_scan::cli::Parsed) -> Result<()> {
         q0: 0.05,
         q1: 0.2,
     });
-    let res = baum_welch(
-        &init,
-        &tr.observations,
-        BaumWelchOptions { max_iters: iters, backend, ..Default::default() },
-    )?;
+    let mut engine = Engine::builder(init)
+        .baum_welch_options(BaumWelchOptions {
+            max_iters: iters,
+            backend,
+            ..Default::default()
+        })
+        .build();
+    let res = engine.run(Algorithm::BaumWelch, &tr.observations)?.into_training()?;
     println!("iterations: {} (converged: {})", res.iterations, res.converged);
     for (i, ll) in res.loglik_curve.iter().enumerate() {
         println!("  iter {i:>3}: loglik {ll:.6}");

@@ -1,0 +1,65 @@
+//! Artifact-execution abstraction and input marshalling.
+//!
+//! `ArtifactExec` decouples "run this compiled artifact with these
+//! inputs" from any particular worker-pool implementation: the
+//! coordinator's `XlaPool` implements it over PJRT worker threads, the
+//! engine's `XlaBackend` dispatches through it, and tests substitute
+//! native mocks (`coordinator::sharder::NativeExec`).
+
+use crate::error::Result;
+use crate::hmm::Hmm;
+
+use super::client::Value;
+
+/// Abstraction over "run this artifact with these inputs" so callers
+/// (sharder, engine backend) are independent of the worker-pool
+/// implementation.
+pub trait ArtifactExec {
+    /// Run a single artifact call.
+    fn run(&self, artifact: &str, inputs: Vec<Value>) -> Result<Vec<Value>>;
+
+    /// Run many independent calls, preserving order of results.
+    /// Implementations may execute them concurrently.
+    fn run_many(&self, jobs: Vec<(String, Vec<Value>)>) -> Vec<Result<Vec<Value>>> {
+        jobs.into_iter().map(|(a, i)| self.run(&a, i)).collect()
+    }
+}
+
+/// Model + one block of observations → the artifact input list
+/// (pi, obs, prior, ys padded to `capacity`, valid mask) — the exact
+/// layout `python/compile/aot.py` compiles against.
+pub fn marshal_block(hmm: &Hmm, ys: &[u32], capacity: usize) -> Vec<Value> {
+    let (pi, obs, prior) = hmm.to_f32_parts();
+    let d = hmm.num_states();
+    let m = hmm.num_symbols();
+    let mut ys_pad: Vec<i32> = ys.iter().map(|&y| y as i32).collect();
+    ys_pad.resize(capacity, 0);
+    let mut valid = vec![1.0f32; ys.len()];
+    valid.resize(capacity, 0.0);
+    vec![
+        Value::F32(pi, vec![d, d]),
+        Value::F32(obs, vec![d, m]),
+        Value::F32(prior, vec![d]),
+        Value::I32(ys_pad, vec![capacity]),
+        Value::F32(valid, vec![capacity]),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hmm::{gilbert_elliott, GeParams};
+
+    #[test]
+    fn marshal_pads_to_capacity() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let inputs = marshal_block(&hmm, &[0, 1, 1], 8);
+        assert_eq!(inputs.len(), 5);
+        assert_eq!(inputs[3].shape(), &[8]);
+        assert_eq!(inputs[3].as_i32().unwrap(), &[0, 1, 1, 0, 0, 0, 0, 0]);
+        assert_eq!(
+            inputs[4].as_f32().unwrap(),
+            &[1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        );
+    }
+}

@@ -8,9 +8,11 @@
 //! execute`.
 
 mod client;
+mod executor;
 mod manifest;
 pub(crate) mod registry;
 
 pub use client::{Executable, Value, XlaRuntime};
+pub use executor::{marshal_block, ArtifactExec};
 pub use manifest::{ArtifactKind, ArtifactSpec, DType, IoSpec, Manifest};
 pub use registry::{artifacts_dir, Registry};

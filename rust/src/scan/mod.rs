@@ -601,6 +601,34 @@ mod tests {
     }
 
     #[test]
+    fn chunked_scan_t_one_and_non_divisible_blocks() {
+        let op = ConcatOp;
+        // T = 1 collapses to the single-block sequential path.
+        let mut one = vec!["a".to_string()];
+        chunked_scan(&op, &mut one, 8, ScanOptions::default());
+        assert_eq!(one, vec!["a".to_string()]);
+        // T not divisible by the block size: the tail block is short and
+        // must still receive the correct incoming carry.
+        for (t, block) in
+            [(103usize, 16usize), (17, 4), (5, 2), (9, 8), (16, 16), (31, 16)]
+        {
+            let elems: Vec<String> = (0..t).map(|i| format!("{i},")).collect();
+            let want = seq_scan(&op, &elems);
+            let mut got = elems.clone();
+            chunked_scan(
+                &op,
+                &mut got,
+                block,
+                ScanOptions { threads: 3, min_parallel_work: 1, ..ScanOptions::default() },
+            );
+            assert_eq!(got, want, "t={t} block={block} (threaded)");
+            let mut got = elems;
+            chunked_scan(&op, &mut got, block, ScanOptions::serial());
+            assert_eq!(got, want, "t={t} block={block} (serial)");
+        }
+    }
+
+    #[test]
     fn empty_and_singleton() {
         let op = ConcatOp;
         let mut empty: Vec<String> = vec![];

@@ -1,0 +1,213 @@
+//! API-compatible stand-in for the `xla` PJRT-bindings crate, which is
+//! unavailable in the offline build environment (DESIGN.md §1).
+//!
+//! [`crate::runtime::client`] is written against the real crate's call
+//! surface (`HloModuleProto::from_text_file → XlaComputation →
+//! PjRtClient::compile → execute`). This module preserves that surface
+//! exactly but reports a typed "PJRT unavailable" error at client
+//! construction, so:
+//!
+//! * the crate builds and tests with zero external dependencies;
+//! * every serving path degrades to the native backend (the coordinator
+//!   only enables the PJRT path when artifacts exist *and* the client
+//!   comes up — see `CoordinatorConfig::default`);
+//! * swapping the real bindings back in is a one-line change in
+//!   `runtime/client.rs` (`use crate::xla_stub as xla` → `use xla`).
+
+use std::fmt;
+
+/// Error type mirroring the bindings crate's error (Display-able).
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type XlaResult<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>() -> XlaResult<T> {
+    Err(XlaError(
+        "PJRT runtime unavailable: the `xla` bindings crate is not part of \
+         the offline build (native backend serves all requests)"
+            .to_string(),
+    ))
+}
+
+/// Typed storage behind a [`Literal`].
+#[derive(Debug, Clone)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Element types that can cross the literal boundary.
+pub trait NativeType: Copy {
+    fn read(lit: &Literal) -> XlaResult<Vec<Self>>
+    where
+        Self: Sized;
+    fn store(data: &[Self]) -> LiteralData;
+}
+
+impl NativeType for f32 {
+    fn read(lit: &Literal) -> XlaResult<Vec<f32>> {
+        match &lit.data {
+            LiteralData::F32(v) => Ok(v.clone()),
+            _ => Err(XlaError("literal does not hold f32 data".to_string())),
+        }
+    }
+    fn store(data: &[f32]) -> LiteralData {
+        LiteralData::F32(data.to_vec())
+    }
+}
+
+impl NativeType for i32 {
+    fn read(lit: &Literal) -> XlaResult<Vec<i32>> {
+        match &lit.data {
+            LiteralData::I32(v) => Ok(v.clone()),
+            _ => Err(XlaError("literal does not hold i32 data".to_string())),
+        }
+    }
+    fn store(data: &[i32]) -> LiteralData {
+        LiteralData::I32(data.to_vec())
+    }
+}
+
+/// Host-side tensor literal.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: impl AsRef<[T]>) -> Literal {
+        let data = data.as_ref();
+        Literal { data: T::store(data), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> XlaResult<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        } as i64;
+        if want != have {
+            return Err(XlaError(format!(
+                "cannot reshape {have} elements to {dims:?}"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> XlaResult<Vec<T>> {
+        T::read(self)
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (no
+    /// executable can run), so this is unreachable in practice.
+    pub fn to_tuple(&self) -> XlaResult<Vec<Literal>> {
+        unavailable()
+    }
+}
+
+/// PJRT client handle. Construction always fails in the stub.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> XlaResult<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(
+        &self,
+        _comp: &XlaComputation,
+    ) -> XlaResult<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> XlaResult<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled, device-loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.dims(), &[4]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(lit.dims(), &[2, 2]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn i32_literals() {
+        let lit = Literal::vec1(&[7i32, 8]);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+}
