@@ -1,0 +1,92 @@
+//! Bench target: the streaming session hot path — per-append cost vs the
+//! full-recompute baseline a complete-sequence API forces on streaming
+//! clients, plus fixed-lag query latency.
+//!
+//! The acceptance claim: appending k observations to a T-long session
+//! costs O(k + B) (checkpointed scan), so the `session_append` rows stay
+//! ~flat as T grows while `full_recompute` rows grow linearly —
+//! sublinear per-append cost at T ≥ 4096.
+//!
+//! `HMM_SCAN_BENCH_SMOKE=1` shrinks the grid and time budget to a CI
+//! smoke run (a few seconds total).
+
+use std::time::Duration;
+
+use hmm_scan::benchx::{bench, black_box, format_table, BenchConfig};
+use hmm_scan::engine::{Algorithm, Engine, SessionOptions};
+use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
+use hmm_scan::rng::Xoshiro256StarStar;
+use hmm_scan::scan::ScanOptions;
+
+fn main() {
+    let smoke = std::env::var("HMM_SCAN_BENCH_SMOKE").as_deref() == Ok("1");
+    let grid: &[usize] = if smoke {
+        &[4096]
+    } else {
+        &[4096, 16384, 65536]
+    };
+    let cfg = if smoke {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            time_budget: Duration::from_millis(100),
+        }
+    } else {
+        BenchConfig::default()
+    };
+
+    let hmm = gilbert_elliott(GeParams::default());
+    let opts = ScanOptions::default().with_block(256);
+    let append = 16usize; // observations per arrival
+    let lag = 64usize;
+    let mut rows = Vec::new();
+
+    for &t in grid {
+        let mut rng = Xoshiro256StarStar::seed_from_u64(9);
+        let ys = sample(&hmm, t + append, &mut rng).observations;
+        let engine = Engine::builder(hmm.clone()).scan_options(opts).build();
+
+        // Steady-state append: session pre-filled to T; each iteration
+        // appends k observations and reads the filtering marginal. The
+        // session keeps growing across iterations, which only biases
+        // *against* the streamed row — append cost is length-invariant.
+        let mut session = engine.open_session(SessionOptions::default());
+        session.push(&ys[..t]).unwrap();
+        let chunk = &ys[t..];
+        rows.push(bench(&format!("session_append{append}/T={t}"), cfg, || {
+            session.push(black_box(chunk)).unwrap();
+            session.filtered().unwrap().log_likelihood
+        }));
+
+        rows.push(bench(&format!("session_lag{lag}/T={t}"), cfg, || {
+            session.smoothed_lag(black_box(lag)).unwrap().posterior.len()
+        }));
+
+        // Baseline: what a complete-sequence API costs per arrival —
+        // rerun the full parallel smoother on all T observations.
+        let mut full = Engine::builder(hmm.clone()).scan_options(opts).build();
+        rows.push(bench(&format!("full_recompute/T={t}"), cfg, || {
+            full.run(Algorithm::SpPar, black_box(&ys[..t]))
+                .unwrap()
+                .into_posterior()
+                .unwrap()
+                .log_likelihood()
+        }));
+
+        // The exact-finish path for scale: checkpointed forward
+        // materialization + full backward scan (≈ half the forward
+        // combines of the cold run above).
+        let mut fin = engine.open_session(SessionOptions::default());
+        fin.push(&ys[..t]).unwrap();
+        rows.push(bench(&format!("session_finish/T={t}"), cfg, || {
+            fin.finish().unwrap().log_likelihood()
+        }));
+    }
+
+    println!("{}", format_table(&rows));
+    println!(
+        "(session_append rows should stay ~flat in T; full_recompute grows \
+         linearly — the streaming win.)"
+    );
+}

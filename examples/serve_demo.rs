@@ -5,13 +5,20 @@
 //! Native plans dispatch through the per-model `engine::Engine` (reused
 //! workspaces); PJRT plans through its `XlaBackend`.
 //!
+//! A second phase drives the *streaming* verbs end-to-end: a client
+//! opens sessions, appends observation chunks as they "arrive" (each
+//! append returning the filtering marginal plus a fixed-lag smoothing
+//! window), and closes for the exact posterior — the shutdown summary
+//! reports per-append latency and the suffix-rescan width histogram.
+//!
 //!     cargo run --release --example serve_demo
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use hmm_scan::coordinator::{
-    Algo, Coordinator, CoordinatorConfig, DecodeRequest,
+    Algo, Coordinator, CoordinatorConfig, DecodeRequest, StreamReply,
+    StreamRequest,
 };
 use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
 use hmm_scan::rng::Xoshiro256StarStar;
@@ -64,6 +71,62 @@ fn main() -> hmm_scan::Result<()> {
         }
     }
     let wall = t0.elapsed();
+
+    // ---- streaming phase: open → N appends → close, per session ------
+    let sessions = 4usize;
+    let appends_per_session = 25usize;
+    let lag = 32usize;
+    let t1 = Instant::now();
+    let mut stream_failures = 0usize;
+    for sid in 0..sessions {
+        let opened = handle
+            .submit_stream(StreamRequest::open(1000 + sid as u64, "ge", lag))
+            .recv()
+            .expect("server dropped")?;
+        let StreamReply::Opened { session } = opened.reply else {
+            panic!("expected Opened, got {:?}", opened.reply)
+        };
+        let mut running_loglik = f64::NAN;
+        for a in 0..appends_per_session {
+            // Chunky arrivals: 1..=40 observations per append.
+            let k = 1 + (sid * 7 + a * 13) % 40;
+            let chunk = sample(&hmm, k, &mut rng).observations;
+            let resp = handle
+                .submit_stream(StreamRequest::append(a as u64, session, chunk))
+                .recv()
+                .expect("server dropped");
+            match resp {
+                Ok(r) => {
+                    if let StreamReply::Appended { filtered, window, .. } = r.reply {
+                        running_loglik = filtered.log_likelihood;
+                        let win = window.expect("lag > 0");
+                        assert_eq!(
+                            win.start + win.posterior.len(),
+                            filtered.step,
+                            "window must end at the stream head"
+                        );
+                    }
+                }
+                Err(e) => {
+                    eprintln!("append failed: {e}");
+                    stream_failures += 1;
+                }
+            }
+        }
+        let closed = handle
+            .submit_stream(StreamRequest::close(2000 + sid as u64, session))
+            .recv()
+            .expect("server dropped")?;
+        if let StreamReply::Closed { posterior, .. } = closed.reply {
+            // The exact posterior agrees with the running filter at T.
+            assert!(
+                (posterior.log_likelihood() - running_loglik).abs()
+                    < 1e-6 * (1.0 + running_loglik.abs()),
+                "close/filter log-likelihood mismatch"
+            );
+        }
+    }
+    let stream_wall = t1.elapsed();
     handle.shutdown();
 
     println!("\nserved {} requests in {wall:?} ({failures} failures)", n);
@@ -83,6 +146,23 @@ fn main() -> hmm_scan::Result<()> {
         snap.batch_occupancy(),
         snap.sharded_blocks
     );
+    println!(
+        "\nstreaming: {} sessions ({} closed), {} appends ({:.1} obs/append) in {stream_wall:?}",
+        snap.sessions_opened,
+        snap.sessions_closed,
+        snap.appends,
+        snap.append_occupancy(),
+    );
+    println!(
+        "append latency: p50 {}µs  p99 {}µs  max {}µs",
+        snap.append_p50_us, snap.append_p99_us, snap.append_max_us
+    );
+    println!("suffix-rescan width histogram (fixed-lag {lag}):");
+    for (bucket, count) in &snap.suffix_width_hist {
+        println!("  ≤{bucket:>6}  {count:>5}");
+    }
     assert_eq!(failures, 0);
+    assert_eq!(stream_failures, 0);
+    assert_eq!(snap.sessions_closed, sessions as u64);
     Ok(())
 }

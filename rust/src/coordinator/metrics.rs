@@ -1,12 +1,45 @@
 //! Serving metrics: throughput counters, latency histogram, queue gauges.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Cap on retained latency samples: percentiles are computed over the
+/// most recent window (ring overwrite), so a long-lived server's memory
+/// and snapshot cost stay bounded no matter how many requests it serves.
+const MAX_LATENCY_SAMPLES: usize = 4096;
+
+/// Bounded latency sample store: grows to [`MAX_LATENCY_SAMPLES`], then
+/// overwrites the oldest sample.
+#[derive(Debug, Default)]
+struct SampleWindow {
+    samples: Vec<u64>,
+    next: usize,
+}
+
+impl SampleWindow {
+    fn push(&mut self, v: u64) {
+        if self.samples.len() < MAX_LATENCY_SAMPLES {
+            self.samples.push(v);
+        } else {
+            self.samples[self.next] = v;
+            self.next = (self.next + 1) % MAX_LATENCY_SAMPLES;
+        }
+    }
+}
+
 /// Log-scaled latency histogram (microseconds, ~2 buckets per decade)
 /// plus counters. All methods are thread-safe; snapshots are consistent
-/// enough for reporting (counters are monotone).
+/// enough for reporting (counters are monotone; percentiles cover the
+/// most recent [`MAX_LATENCY_SAMPLES`] samples).
+///
+/// The `sessions_* / append* / suffix_*` family instruments the
+/// streaming path: per-append latency and the width of the forward
+/// suffix rescan each fixed-lag query performed (bounded by lag + block
+/// — the histogram makes a mis-pinned block visible immediately).
+/// Suffix widths are bucketed at insert time (power-of-two upper
+/// bounds), so that store is O(distinct buckets) regardless of volume.
 #[derive(Debug, Default)]
 pub struct Metrics {
     requests: AtomicU64,
@@ -15,7 +48,13 @@ pub struct Metrics {
     batches: AtomicU64,
     batched_items: AtomicU64,
     sharded_blocks: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    latencies_us: Mutex<SampleWindow>,
+    sessions_opened: AtomicU64,
+    sessions_closed: AtomicU64,
+    appends: AtomicU64,
+    appended_obs: AtomicU64,
+    append_latencies_us: Mutex<SampleWindow>,
+    suffix_widths: Mutex<BTreeMap<u64, u64>>,
 }
 
 /// Point-in-time view of the metrics.
@@ -30,6 +69,16 @@ pub struct MetricsSnapshot {
     pub p50_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
+    pub sessions_opened: u64,
+    pub sessions_closed: u64,
+    pub appends: u64,
+    pub appended_obs: u64,
+    pub append_p50_us: u64,
+    pub append_p99_us: u64,
+    pub append_max_us: u64,
+    /// Suffix-rescan width histogram: (power-of-two upper bound, count),
+    /// ascending, empty buckets omitted.
+    pub suffix_width_hist: Vec<(u64, u64)>,
 }
 
 impl MetricsSnapshot {
@@ -39,6 +88,15 @@ impl MetricsSnapshot {
             0.0
         } else {
             self.batched_items as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean observations per append.
+    pub fn append_occupancy(&self) -> f64 {
+        if self.appends == 0 {
+            0.0
+        } else {
+            self.appended_obs as f64 / self.appends as f64
         }
     }
 }
@@ -73,17 +131,49 @@ impl Metrics {
         self.sharded_blocks.fetch_add(blocks as u64, Ordering::Relaxed);
     }
 
+    pub fn on_session_open(&self) {
+        self.sessions_opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_session_close(&self) {
+        self.sessions_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one append of `obs` observations taking `latency`.
+    pub fn on_append(&self, obs: usize, latency: Duration) {
+        self.appends.fetch_add(1, Ordering::Relaxed);
+        self.appended_obs.fetch_add(obs as u64, Ordering::Relaxed);
+        self.append_latencies_us
+            .lock()
+            .unwrap()
+            .push(latency.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Record the forward suffix-rescan width of a fixed-lag query
+    /// (bucketed immediately — power-of-two upper bound).
+    pub fn on_suffix_width(&self, width: usize) {
+        *self
+            .suffix_widths
+            .lock()
+            .unwrap()
+            .entry((width as u64).max(1).next_power_of_two())
+            .or_default() += 1;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut lat = self.latencies_us.lock().unwrap().clone();
+        let mut lat = self.latencies_us.lock().unwrap().samples.clone();
         lat.sort_unstable();
-        let pct = |p: f64| -> u64 {
-            if lat.is_empty() {
+        let mut app = self.append_latencies_us.lock().unwrap().samples.clone();
+        app.sort_unstable();
+        let pct = |sorted: &[u64], p: f64| -> u64 {
+            if sorted.is_empty() {
                 0
             } else {
-                let idx = ((lat.len() as f64 - 1.0) * p).floor() as usize;
-                lat[idx]
+                let idx = ((sorted.len() as f64 - 1.0) * p).floor() as usize;
+                sorted[idx]
             }
         };
+        let hist = self.suffix_widths.lock().unwrap().clone();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -91,9 +181,17 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             batched_items: self.batched_items.load(Ordering::Relaxed),
             sharded_blocks: self.sharded_blocks.load(Ordering::Relaxed),
-            p50_us: pct(0.50),
-            p99_us: pct(0.99),
+            p50_us: pct(&lat, 0.50),
+            p99_us: pct(&lat, 0.99),
             max_us: lat.last().copied().unwrap_or(0),
+            sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
+            sessions_closed: self.sessions_closed.load(Ordering::Relaxed),
+            appends: self.appends.load(Ordering::Relaxed),
+            appended_obs: self.appended_obs.load(Ordering::Relaxed),
+            append_p50_us: pct(&app, 0.50),
+            append_p99_us: pct(&app, 0.99),
+            append_max_us: app.last().copied().unwrap_or(0),
+            suffix_width_hist: hist.into_iter().collect(),
         }
     }
 }
@@ -127,6 +225,53 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.p50_us, 0);
         assert_eq!(s.batch_occupancy(), 0.0);
+        assert_eq!(s.append_p50_us, 0);
+        assert_eq!(s.append_occupancy(), 0.0);
+        assert!(s.suffix_width_hist.is_empty());
+    }
+
+    #[test]
+    fn streaming_counters_and_width_histogram() {
+        let m = Metrics::new();
+        m.on_session_open();
+        m.on_session_open();
+        m.on_session_close();
+        for i in 1..=10u64 {
+            m.on_append(3, Duration::from_micros(i * 10));
+        }
+        for w in [1usize, 2, 3, 60, 64, 65, 100, 1000] {
+            m.on_suffix_width(w);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.sessions_opened, 2);
+        assert_eq!(s.sessions_closed, 1);
+        assert_eq!(s.appends, 10);
+        assert_eq!(s.appended_obs, 30);
+        assert!((s.append_occupancy() - 3.0).abs() < 1e-12);
+        assert_eq!(s.append_p50_us, 50);
+        assert_eq!(s.append_max_us, 100);
+        // Buckets: 1→1, 2→2 (w=2), 4→3, 64→{60,64}, 128→65&100, 1024→1000.
+        assert_eq!(
+            s.suffix_width_hist,
+            vec![(1, 1), (2, 1), (4, 1), (64, 2), (128, 2), (1024, 1)]
+        );
+    }
+
+    #[test]
+    fn latency_window_is_bounded() {
+        let m = Metrics::new();
+        for i in 0..(MAX_LATENCY_SAMPLES + 500) {
+            m.on_append(1, Duration::from_micros(i as u64));
+        }
+        assert_eq!(
+            m.append_latencies_us.lock().unwrap().samples.len(),
+            MAX_LATENCY_SAMPLES,
+            "sample store must stop growing at the cap"
+        );
+        let s = m.snapshot();
+        // Counters still see everything; percentiles cover the window.
+        assert_eq!(s.appends, (MAX_LATENCY_SAMPLES + 500) as u64);
+        assert!(s.append_max_us >= MAX_LATENCY_SAMPLES as u64);
     }
 
     #[test]

@@ -16,7 +16,9 @@
 //! * [`metrics`] — queue depth, batch occupancy, latency percentiles,
 //!   throughput counters.
 //! * [`server`] — the `Coordinator` itself: model registry, worker pool,
-//!   synchronous and batched entry points, and a channel-fed serve loop.
+//!   synchronous and batched entry points, a per-session registry for
+//!   the streaming verbs ([`StreamRequest`]: open → append* → close,
+//!   backed by `engine::Session`), and a channel-fed serve loop.
 
 pub mod batcher;
 pub mod metrics;
@@ -27,6 +29,9 @@ pub mod sharder;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{Algo, DecodeRequest, DecodeResponse, DecodeResult, ExecMode};
+pub use request::{
+    Algo, DecodeRequest, DecodeResponse, DecodeResult, ExecMode, StreamReply,
+    StreamRequest, StreamResponse, StreamVerb,
+};
 pub use router::{ExecutionPlan, Router, RouterConfig};
 pub use server::{Coordinator, CoordinatorConfig};

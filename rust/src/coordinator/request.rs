@@ -5,7 +5,7 @@
 //! collapsed to what a decode client chooses between: smoothing
 //! marginals, a MAP path, or the Bayesian-smoother formulation.
 
-use crate::engine::Algorithm;
+use crate::engine::{Algorithm, Filtered, LagSmoothed, SessionOptions};
 use crate::inference::{MapEstimate, Posterior};
 use crate::jsonx::Json;
 
@@ -149,6 +149,89 @@ impl DecodeResult {
             _ => None,
         }
     }
+}
+
+/// Streaming session verbs — the open → append* → close protocol served
+/// by `Coordinator::stream` and the serve loop.
+#[derive(Debug, Clone)]
+pub enum StreamVerb {
+    /// Create a session bound to a registered model. `lag` > 0 makes
+    /// every append also return a fixed-lag smoothing window of that
+    /// width (0 = filtering only); the coordinator rejects lags above
+    /// `CoordinatorConfig::max_stream_lag` (appends run an O(lag +
+    /// block) query on the serve loop).
+    Open {
+        model: String,
+        options: SessionOptions,
+        lag: usize,
+    },
+    /// Ingest observations into an open session.
+    Append { session: u64, ys: Vec<u32> },
+    /// Produce the exact full-sequence posterior and remove the session.
+    Close { session: u64 },
+}
+
+/// A streaming request (see [`StreamVerb`]).
+#[derive(Debug, Clone)]
+pub struct StreamRequest {
+    /// Caller-chosen id, echoed in the response.
+    pub id: u64,
+    pub verb: StreamVerb,
+}
+
+impl StreamRequest {
+    pub fn open(id: u64, model: impl Into<String>, lag: usize) -> Self {
+        Self {
+            id,
+            verb: StreamVerb::Open {
+                model: model.into(),
+                options: SessionOptions::default(),
+                lag,
+            },
+        }
+    }
+
+    pub fn append(id: u64, session: u64, ys: Vec<u32>) -> Self {
+        Self { id, verb: StreamVerb::Append { session, ys } }
+    }
+
+    pub fn close(id: u64, session: u64) -> Self {
+        Self { id, verb: StreamVerb::Close { session } }
+    }
+}
+
+/// Streaming reply payload, shaped by the verb.
+#[derive(Debug, Clone)]
+pub enum StreamReply {
+    Opened {
+        session: u64,
+    },
+    Appended {
+        session: u64,
+        /// Observations held by the session after this append.
+        len: usize,
+        /// Filtering marginal + running log-likelihood after the append.
+        filtered: Filtered,
+        /// Fixed-lag smoothing window (sessions opened with `lag` > 0).
+        window: Option<LagSmoothed>,
+        /// Router observability: the core artifact that could serve the
+        /// suffix window once the XLA-backed rescan lands (ROADMAP);
+        /// execution today is native.
+        plan_hint: Option<String>,
+    },
+    Closed {
+        session: u64,
+        posterior: Posterior,
+    },
+}
+
+/// A served streaming response.
+#[derive(Debug, Clone)]
+pub struct StreamResponse {
+    pub id: u64,
+    pub reply: StreamReply,
+    /// Wall time spent serving the verb.
+    pub elapsed: std::time::Duration,
 }
 
 /// A served response.

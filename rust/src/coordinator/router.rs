@@ -126,6 +126,25 @@ impl Router {
         }
     }
 
+    /// Streaming observability: the core artifact that *could* serve a
+    /// suffix window of `width` steps — the same smallest-covering
+    /// lookup the decode planner uses, reused for the session appends'
+    /// fixed-lag windows. Surfaced as a plan hint in `StreamReply`;
+    /// execution today is always native (the XLA-backed suffix rescan
+    /// is a ROADMAP open item).
+    pub fn window_hint(
+        &self,
+        manifest: Option<&Manifest>,
+        algo: Algo,
+        width: usize,
+        d: usize,
+        m: usize,
+    ) -> Option<String> {
+        manifest?
+            .smallest_covering(algo.par_entry(), width, d, m)
+            .map(|spec| spec.name.clone())
+    }
+
     fn core_plan(
         &self,
         manifest: &Manifest,
@@ -287,6 +306,25 @@ mod tests {
     fn rejects_empty() {
         let r = Router::new(RouterConfig::default());
         assert!(r.plan(None, &req(0, Algo::Smooth), 4, 2).is_err());
+    }
+
+    #[test]
+    fn window_hint_reuses_core_lookup() {
+        let m = manifest();
+        let r = Router::new(RouterConfig::default());
+        assert_eq!(
+            r.window_hint(Some(&m), Algo::Smooth, 64, 4, 2),
+            Some("sp_par_T128".to_string())
+        );
+        assert_eq!(
+            r.window_hint(Some(&m), Algo::Smooth, 500, 4, 2),
+            Some("sp_par_T1024".to_string())
+        );
+        // Beyond every core artifact, with no manifest, or for wrong
+        // dimensions there is no hint.
+        assert_eq!(r.window_hint(Some(&m), Algo::Smooth, 5000, 4, 2), None);
+        assert_eq!(r.window_hint(None, Algo::Smooth, 64, 4, 2), None);
+        assert_eq!(r.window_hint(Some(&m), Algo::Smooth, 64, 8, 2), None);
     }
 
     #[test]

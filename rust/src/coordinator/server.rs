@@ -3,11 +3,12 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::engine::{Engine, EngineOutput, XlaBackend};
+use crate::engine::{Engine, EngineOutput, Session, XlaBackend};
 use crate::error::{Error, Result};
 use crate::hmm::Hmm;
 use crate::runtime::{ArtifactExec, Manifest, Registry, Value};
@@ -15,7 +16,10 @@ use crate::scan::ScanOptions;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
-use super::request::{Algo, DecodeRequest, DecodeResponse, DecodeResult};
+use super::request::{
+    Algo, DecodeRequest, DecodeResponse, DecodeResult, StreamReply,
+    StreamRequest, StreamResponse, StreamVerb,
+};
 use super::router::{ExecutionPlan, Router, RouterConfig};
 use super::sharder::{self, ShardedArtifacts};
 
@@ -138,6 +142,17 @@ pub struct CoordinatorConfig {
     pub router: RouterConfig,
     /// Threading for the native algorithm library.
     pub scan: ScanOptions,
+    /// Upper bound on the fixed-lag width a streaming client may request
+    /// at open. Every append runs an O(lag + block) window query on the
+    /// serve loop, so an unbounded client-supplied lag would let one
+    /// session degrade all traffic to O(T) per append.
+    pub max_stream_lag: usize,
+    /// Upper bound on concurrently open streaming sessions. Each session
+    /// retains its O(T) element chain, so an unchecked open loop (or
+    /// clients that never close) would exhaust coordinator memory;
+    /// opens beyond the cap are rejected with a typed error. (Idle
+    /// eviction to disk is a ROADMAP follow-on.)
+    pub max_open_sessions: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -151,6 +166,8 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             router: RouterConfig::default(),
             scan: ScanOptions::default(),
+            max_stream_lag: 4096,
+            max_open_sessions: 1024,
         }
     }
 }
@@ -174,6 +191,14 @@ pub struct Coordinator {
     xla: Option<XlaBackend>,
     router: Router,
     models: RwLock<BTreeMap<String, ModelEntry>>,
+    /// Streaming sessions, keyed like the per-model engine map: each
+    /// entry owns its mutex-serialized `engine::Session` (the session's
+    /// workspace is reused across appends exactly as the per-model
+    /// engine's is across decodes).
+    sessions: RwLock<BTreeMap<u64, Arc<SessionEntry>>>,
+    next_session: AtomicU64,
+    max_stream_lag: usize,
+    max_open_sessions: usize,
     metrics: Arc<Metrics>,
     scan: ScanOptions,
     batcher_config: BatcherConfig,
@@ -186,6 +211,15 @@ pub struct Coordinator {
 struct ModelEntry {
     hmm: Arc<Hmm>,
     engine: Arc<Mutex<Engine>>,
+}
+
+/// One open streaming session: the session state plus the model handle
+/// (for the router's window hints) and the fixed-lag width appends
+/// report at.
+struct SessionEntry {
+    session: Mutex<Session>,
+    hmm: Arc<Hmm>,
+    lag: usize,
 }
 
 impl Coordinator {
@@ -211,6 +245,10 @@ impl Coordinator {
             xla,
             router: Router::new(config.router),
             models: RwLock::new(BTreeMap::new()),
+            sessions: RwLock::new(BTreeMap::new()),
+            next_session: AtomicU64::new(0),
+            max_stream_lag: config.max_stream_lag,
+            max_open_sessions: config.max_open_sessions,
             metrics: Arc::new(Metrics::new()),
             scan: config.scan,
             batcher_config: config.batcher,
@@ -319,6 +357,127 @@ impl Coordinator {
         out.into_iter()
             .map(|o| o.unwrap_or_else(|| Err(Error::coordinator("lost request"))))
             .collect()
+    }
+
+    /// Serve one streaming verb synchronously (open / append / close —
+    /// see [`StreamVerb`]). Appends return the filtering marginal, and a
+    /// fixed-lag smoothing window when the session was opened with
+    /// `lag` > 0; close returns the exact full-sequence posterior
+    /// (bit-identical to the one-shot parallel smoother under the
+    /// session's scan options) and removes the session.
+    pub fn stream(&self, req: StreamRequest) -> Result<StreamResponse> {
+        let start = Instant::now();
+        match self.stream_verb(req.verb, start) {
+            Ok(reply) => {
+                Ok(StreamResponse { id: req.id, reply, elapsed: start.elapsed() })
+            }
+            Err(e) => {
+                self.metrics.on_failure();
+                Err(e)
+            }
+        }
+    }
+
+    fn stream_verb(&self, verb: StreamVerb, start: Instant) -> Result<StreamReply> {
+        match verb {
+            StreamVerb::Open { model, options, lag } => {
+                if lag > self.max_stream_lag {
+                    return Err(Error::invalid_request(format!(
+                        "requested lag {lag} exceeds the configured maximum {}",
+                        self.max_stream_lag
+                    )));
+                }
+                // The append cost is O(lag + block), so the block is
+                // capped alongside the lag — otherwise a huge client
+                // block re-opens the degrade-every-append hole the lag
+                // cap closes.
+                let max_block =
+                    self.max_stream_lag.max(crate::engine::DEFAULT_SESSION_BLOCK);
+                if options.block.is_some_and(|b| b > max_block) {
+                    return Err(Error::invalid_request(format!(
+                        "requested block {} exceeds the maximum {max_block}",
+                        options.block.unwrap_or(0)
+                    )));
+                }
+                let entry = self.entry(&model)?;
+                let session = {
+                    let engine =
+                        entry.engine.lock().expect("engine mutex poisoned");
+                    engine.open_session(options)
+                };
+                let id = self.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+                {
+                    let mut sessions = self.sessions.write().unwrap();
+                    if sessions.len() >= self.max_open_sessions {
+                        return Err(Error::invalid_request(format!(
+                            "open session limit {} reached",
+                            self.max_open_sessions
+                        )));
+                    }
+                    sessions.insert(
+                        id,
+                        Arc::new(SessionEntry {
+                            session: Mutex::new(session),
+                            hmm: entry.hmm,
+                            lag,
+                        }),
+                    );
+                }
+                self.metrics.on_session_open();
+                Ok(StreamReply::Opened { session: id })
+            }
+            StreamVerb::Append { session, ys } => {
+                let entry = self.session_entry(session)?;
+                let mut s = entry.session.lock().expect("session mutex poisoned");
+                s.push(&ys)?;
+                let filtered = s.filtered()?;
+                let (window, plan_hint) = if entry.lag > 0 {
+                    let win = s.smoothed_lag(entry.lag)?;
+                    self.metrics.on_suffix_width(win.rescan_width);
+                    let hint = self.router.window_hint(
+                        self.manifest.as_deref(),
+                        Algo::Smooth,
+                        win.rescan_width,
+                        entry.hmm.num_states(),
+                        entry.hmm.num_symbols(),
+                    );
+                    (Some(win), hint)
+                } else {
+                    (None, None)
+                };
+                let len = s.len();
+                drop(s);
+                self.metrics.on_append(ys.len(), start.elapsed());
+                Ok(StreamReply::Appended { session, len, filtered, window, plan_hint })
+            }
+            StreamVerb::Close { session } => {
+                let entry = self.session_entry(session)?;
+                let mut s = entry.session.lock().expect("session mutex poisoned");
+                // finish() before removal: closing a session with no
+                // observations is an error that leaves it open (the
+                // client can append and retry), never a silent drop.
+                let posterior = s.finish()?;
+                drop(s);
+                if self.sessions.write().unwrap().remove(&session).is_some() {
+                    self.metrics.on_session_close();
+                }
+                Ok(StreamReply::Closed { session, posterior })
+            }
+        }
+    }
+
+    fn session_entry(&self, id: u64) -> Result<Arc<SessionEntry>> {
+        self.sessions
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::invalid_request(format!("unknown session {id}")))
+    }
+
+    /// Number of currently open streaming sessions.
+    pub fn open_sessions(&self) -> usize {
+        self.sessions.read().unwrap().len()
     }
 
     fn execute(&self, req: &DecodeRequest) -> Result<(DecodeResult, String)> {
@@ -438,6 +597,12 @@ impl Coordinator {
                                 }
                             }
                         }
+                        Ok(ServerMsg::Stream(req, reply)) => {
+                            // Streaming verbs bypass the batcher: an
+                            // append is latency-sensitive and already
+                            // O(k) — coalescing buys nothing.
+                            let _ = reply.send(coord.stream(req));
+                        }
                         Ok(ServerMsg::Shutdown) => {
                             for batch in batcher.flush_all() {
                                 coord.metrics.on_batch(batch.items.len());
@@ -492,6 +657,7 @@ struct Envelope {
 
 enum ServerMsg {
     Request(DecodeRequest, mpsc::Sender<Result<DecodeResponse>>),
+    Stream(StreamRequest, mpsc::Sender<Result<StreamResponse>>),
     Shutdown,
 }
 
@@ -506,6 +672,17 @@ impl ServerHandle {
     pub fn submit(&self, req: DecodeRequest) -> mpsc::Receiver<Result<DecodeResponse>> {
         let (reply, rx) = mpsc::channel();
         let _ = self.tx.send(ServerMsg::Request(req, reply));
+        rx
+    }
+
+    /// Submit a streaming verb (open / append / close); served ahead of
+    /// any batching deadline.
+    pub fn submit_stream(
+        &self,
+        req: StreamRequest,
+    ) -> mpsc::Receiver<Result<StreamResponse>> {
+        let (reply, rx) = mpsc::channel();
+        let _ = self.tx.send(ServerMsg::Stream(req, reply));
         rx
     }
 
@@ -617,6 +794,168 @@ mod tests {
         for (i, r) in out.iter().enumerate() {
             assert_eq!(r.as_ref().unwrap().id, i as u64);
         }
+    }
+
+    #[test]
+    fn streaming_open_append_close_round_trip() {
+        let c = native_coord();
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(57);
+        let tr = sample(&hmm, 300, &mut rng);
+        let ys = &tr.observations;
+
+        let resp = c.stream(StreamRequest::open(1, "ge", 16)).unwrap();
+        let StreamReply::Opened { session } = resp.reply else {
+            panic!("expected Opened, got {:?}", resp.reply)
+        };
+        assert_eq!(c.open_sessions(), 1);
+
+        let mut pushed = 0usize;
+        for (i, chunk) in ys.chunks(100).enumerate() {
+            let resp = c
+                .stream(StreamRequest::append(10 + i as u64, session, chunk.to_vec()))
+                .unwrap();
+            pushed += chunk.len();
+            let StreamReply::Appended { len, filtered, window, .. } = resp.reply
+            else {
+                panic!("expected Appended")
+            };
+            assert_eq!(len, pushed);
+            assert_eq!(filtered.step, pushed);
+            assert_eq!(filtered.probs.len(), 4);
+            let win = window.expect("lag > 0 returns a window");
+            assert_eq!(win.posterior.len(), 16.min(pushed));
+            // Window loglik is the running full-prefix likelihood.
+            let want = crate::inference::sp_seq(&hmm, &ys[..pushed]).unwrap();
+            assert!(
+                (win.posterior.log_likelihood() - want.log_likelihood()).abs()
+                    < 1e-9 * (1.0 + want.log_likelihood().abs())
+            );
+        }
+
+        let resp = c.stream(StreamRequest::close(99, session)).unwrap();
+        let StreamReply::Closed { posterior, .. } = resp.reply else {
+            panic!("expected Closed")
+        };
+        assert_eq!(c.open_sessions(), 0);
+        assert_eq!(posterior.len(), 300);
+        let want = crate::inference::sp_seq(&hmm, ys).unwrap();
+        assert!(
+            (posterior.log_likelihood() - want.log_likelihood()).abs()
+                < 1e-9 * (1.0 + want.log_likelihood().abs())
+        );
+        for k in 0..300 {
+            for s in 0..4 {
+                assert!((posterior.gamma(k)[s] - want.gamma(k)[s]).abs() < 1e-9);
+            }
+        }
+
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.sessions_opened, 1);
+        assert_eq!(snap.sessions_closed, 1);
+        assert_eq!(snap.appends, 3);
+        assert_eq!(snap.appended_obs, 300);
+        assert!(!snap.suffix_width_hist.is_empty());
+
+        // The closed session is gone; unknown ids and bad verbs fail.
+        assert!(c.stream(StreamRequest::append(1, session, vec![0])).is_err());
+        assert!(c.stream(StreamRequest::close(1, session)).is_err());
+        assert!(c.stream(StreamRequest::open(1, "nope", 0)).is_err());
+        let resp = c.stream(StreamRequest::open(2, "ge", 0)).unwrap();
+        let StreamReply::Opened { session } = resp.reply else { panic!() };
+        // Out-of-range symbol: the append fails, the session survives.
+        assert!(c.stream(StreamRequest::append(3, session, vec![9])).is_err());
+        let resp = c.stream(StreamRequest::append(4, session, vec![0, 1])).unwrap();
+        let StreamReply::Appended { window, .. } = resp.reply else { panic!() };
+        assert!(window.is_none(), "lag = 0 sessions are filtering-only");
+
+        // A lag beyond the configured cap is rejected at open, and so is
+        // an oversized client-chosen checkpoint block (same O(lag + B)
+        // append-cost guarantee).
+        assert!(c.stream(StreamRequest::open(5, "ge", 1_000_000)).is_err());
+        let big_block = StreamRequest {
+            id: 5,
+            verb: StreamVerb::Open {
+                model: "ge".into(),
+                options: crate::engine::SessionOptions {
+                    block: Some(1 << 30),
+                    ..Default::default()
+                },
+                lag: 8,
+            },
+        };
+        assert!(c.stream(big_block).is_err());
+
+        // Closing a session with no observations errors but leaves it
+        // open — the client can append and retry.
+        let resp = c.stream(StreamRequest::open(6, "ge", 0)).unwrap();
+        let StreamReply::Opened { session: empty } = resp.reply else { panic!() };
+        let before = c.open_sessions();
+        assert!(c.stream(StreamRequest::close(7, empty)).is_err());
+        assert_eq!(c.open_sessions(), before, "failed close must not drop");
+        c.stream(StreamRequest::append(8, empty, vec![1, 0])).unwrap();
+        assert!(c.stream(StreamRequest::close(9, empty)).is_ok());
+        assert_eq!(c.open_sessions(), before - 1);
+    }
+
+    #[test]
+    fn open_session_limit_is_enforced() {
+        let c = Coordinator::new(CoordinatorConfig {
+            max_open_sessions: 2,
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        c.register_model("ge", gilbert_elliott(GeParams::default()));
+        let a = c.stream(StreamRequest::open(1, "ge", 0)).unwrap();
+        c.stream(StreamRequest::open(2, "ge", 0)).unwrap();
+        assert!(c.stream(StreamRequest::open(3, "ge", 0)).is_err());
+        // Closing one frees a slot.
+        let StreamReply::Opened { session } = a.reply else { panic!() };
+        c.stream(StreamRequest::append(4, session, vec![0, 1])).unwrap();
+        c.stream(StreamRequest::close(5, session)).unwrap();
+        assert!(c.stream(StreamRequest::open(6, "ge", 0)).is_ok());
+    }
+
+    #[test]
+    fn serve_loop_streams_alongside_decodes() {
+        let c = Arc::new(native_coord());
+        let handle = Arc::clone(&c).serve();
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(58);
+
+        let opened = handle
+            .submit_stream(StreamRequest::open(0, "ge", 8))
+            .recv()
+            .unwrap()
+            .unwrap();
+        let StreamReply::Opened { session } = opened.reply else { panic!() };
+
+        // Interleave decodes and appends through the same loop.
+        let tr = sample(&hmm, 64, &mut rng);
+        let decode_rx =
+            handle.submit(DecodeRequest::new(7, "ge", tr.observations, Algo::Smooth));
+        let append_rx = handle.submit_stream(StreamRequest::append(
+            1,
+            session,
+            sample(&hmm, 50, &mut rng).observations,
+        ));
+        assert!(append_rx.recv().unwrap().is_ok());
+        assert!(decode_rx.recv().unwrap().is_ok());
+
+        let closed = handle
+            .submit_stream(StreamRequest::close(2, session))
+            .recv()
+            .unwrap()
+            .unwrap();
+        match closed.reply {
+            StreamReply::Closed { posterior, .. } => assert_eq!(posterior.len(), 50),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        handle.shutdown();
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.sessions_opened, 1);
+        assert_eq!(snap.sessions_closed, 1);
+        assert_eq!(snap.completed, 1);
     }
 
     // ---- PJRT-backed tests (skip when artifacts are absent) ----

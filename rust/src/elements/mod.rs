@@ -14,7 +14,15 @@
 //!   Ref. [30] (discrete analogue): conditional matrix + rescaled
 //!   likelihood vector; used by BS-Par.
 //! * [`element_chain`] — builds the per-step elements from an [`Hmm`]
-//!   and an observation sequence (Definition 3 / Eq. 15).
+//!   and an observation sequence (Definition 3 / Eq. 15). The per-symbol
+//!   prototypes ([`sp_element_protos`] / [`mp_element_protos`]) and the
+//!   prior elements ([`sp_prior_element`] / [`mp_prior_element`]) are
+//!   exposed separately so streaming sessions can append elements one
+//!   observation at a time, bit-identical to the one-shot builders.
+//! * [`serde`] — exact jsonx round-trip for the element types (the
+//!   block-summary serialization behind session snapshot/eviction).
+
+pub mod serde;
 
 use crate::hmm::Hmm;
 use crate::linalg::Mat;
@@ -373,17 +381,14 @@ pub fn sp_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<SpElement> {
     out
 }
 
-/// [`sp_element_chain`] writing into a reusable buffer: when `out`
-/// already holds T same-shape elements (a previous call on the same
-/// model family), every D×D matrix is overwritten in place — zero
-/// allocation on the serving hot path (the `engine` workspace reuse).
-pub fn sp_element_chain_into(hmm: &Hmm, ys: &[u32], out: &mut Vec<SpElement>) {
+/// The per-symbol interior element prototypes: every step t ≥ 1 with
+/// symbol y shares the same normalized matrix Π ∘ e_y (§Perf: hoisting
+/// them saves a D×D rebuild + emission column allocation per step).
+/// Streaming sessions cache this vector once and clone per append.
+pub fn sp_element_protos(hmm: &Hmm) -> Vec<SpElement> {
     let d = hmm.num_states();
     let pi = hmm.transition();
-    // Hoist the per-symbol interior element prototypes: every step with
-    // symbol y shares the same normalized matrix Π ∘ e_y (§Perf: saves a
-    // D×D rebuild + emission column allocation per step).
-    let protos: Vec<SpElement> = (0..hmm.num_symbols())
+    (0..hmm.num_symbols())
         .map(|y| {
             let e = hmm.emission_col(y as u32);
             let mut mat = Mat::zeros(d, d);
@@ -394,7 +399,30 @@ pub fn sp_element_chain_into(hmm: &Hmm, ys: &[u32], out: &mut Vec<SpElement>) {
             }
             SpElement::from_mat(mat)
         })
-        .collect();
+        .collect()
+}
+
+/// The t = 0 element: rows broadcast ψ₁(x₁) = p(x₁)p(y₁|x₁), in normal
+/// form — bitwise the first element of [`sp_element_chain`].
+pub fn sp_prior_element(hmm: &Hmm, y: u32) -> SpElement {
+    let d = hmm.num_states();
+    let e = hmm.emission_col(y);
+    let mut mat = Mat::zeros(d, d);
+    for r in 0..d {
+        for c in 0..d {
+            mat[(r, c)] = hmm.prior()[c] * e[c];
+        }
+    }
+    SpElement::from_mat(mat)
+}
+
+/// [`sp_element_chain`] writing into a reusable buffer: when `out`
+/// already holds T same-shape elements (a previous call on the same
+/// model family), every D×D matrix is overwritten in place — zero
+/// allocation on the serving hot path (the `engine` workspace reuse).
+pub fn sp_element_chain_into(hmm: &Hmm, ys: &[u32], out: &mut Vec<SpElement>) {
+    let d = hmm.num_states();
+    let protos = sp_element_protos(hmm);
     if out.len() != ys.len()
         || out.first().map_or(true, |e| e.mat.rows() != d || e.mat.cols() != d)
     {
@@ -437,13 +465,11 @@ pub fn mp_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<MpElement> {
     out
 }
 
-/// [`mp_element_chain`] writing into a reusable buffer (see
-/// [`sp_element_chain_into`] for the reuse contract).
-pub fn mp_element_chain_into(hmm: &Hmm, ys: &[u32], out: &mut Vec<MpElement>) {
+/// Per-symbol log-domain interior prototypes (see [`sp_element_protos`]).
+pub fn mp_element_protos(hmm: &Hmm) -> Vec<MpElement> {
     let d = hmm.num_states();
     let pi = hmm.transition();
-    // Per-symbol prototypes (see sp_element_chain).
-    let protos: Vec<MpElement> = (0..hmm.num_symbols())
+    (0..hmm.num_symbols())
         .map(|y| {
             let e = hmm.emission_col(y as u32);
             let mut mat = Mat::zeros(d, d);
@@ -454,7 +480,28 @@ pub fn mp_element_chain_into(hmm: &Hmm, ys: &[u32], out: &mut Vec<MpElement>) {
             }
             MpElement { mat }
         })
-        .collect();
+        .collect()
+}
+
+/// The t = 0 log-domain element — bitwise the first element of
+/// [`mp_element_chain`].
+pub fn mp_prior_element(hmm: &Hmm, y: u32) -> MpElement {
+    let d = hmm.num_states();
+    let e = hmm.emission_col(y);
+    let mut mat = Mat::zeros(d, d);
+    for r in 0..d {
+        for c in 0..d {
+            mat[(r, c)] = safe_ln(hmm.prior()[c] * e[c]);
+        }
+    }
+    MpElement { mat }
+}
+
+/// [`mp_element_chain`] writing into a reusable buffer (see
+/// [`sp_element_chain_into`] for the reuse contract).
+pub fn mp_element_chain_into(hmm: &Hmm, ys: &[u32], out: &mut Vec<MpElement>) {
+    let d = hmm.num_states();
+    let protos = mp_element_protos(hmm);
     if out.len() != ys.len()
         || out.first().map_or(true, |e| e.mat.rows() != d || e.mat.cols() != d)
     {
@@ -769,6 +816,26 @@ mod tests {
         assert_eq!(bs_buf, bs_element_chain(&h, &ys3));
         bs_element_chain_into(&h, &ys2, &mut bs_buf);
         assert_eq!(bs_buf, bs_element_chain(&h, &ys2));
+    }
+
+    #[test]
+    fn streaming_element_builders_match_chain() {
+        // Sessions append prior-element + proto clones; the result must
+        // be bitwise the one-shot chain.
+        let h = gilbert_elliott(GeParams::default());
+        let ys = vec![1u32, 0, 1, 1, 0];
+        let sp = sp_element_chain(&h, &ys);
+        let protos = sp_element_protos(&h);
+        assert_eq!(sp[0], sp_prior_element(&h, ys[0]));
+        for (t, &y) in ys.iter().enumerate().skip(1) {
+            assert_eq!(sp[t], protos[y as usize], "sp t={t}");
+        }
+        let mp = mp_element_chain(&h, &ys);
+        let mprotos = mp_element_protos(&h);
+        assert_eq!(mp[0], mp_prior_element(&h, ys[0]));
+        for (t, &y) in ys.iter().enumerate().skip(1) {
+            assert_eq!(mp[t], mprotos[y as usize], "mp t={t}");
+        }
     }
 
     #[test]

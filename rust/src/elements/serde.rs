@@ -1,0 +1,180 @@
+//! Exact jsonx serialization for the scan element types.
+//!
+//! This is the block-summary interchange behind `engine::Session`
+//! snapshot/resume (and the future eviction-to-disk path): a session can
+//! export its `CheckpointedScan` summaries, drop them, and restore
+//! without refolding. The round-trip is *bit-exact* for finite f64
+//! values — jsonx prints integers exactly and non-integers via Rust's
+//! shortest round-trip `Display` — which the restore contract relies on
+//! (restored scans must keep producing bit-identical results). All our
+//! element payloads are finite by construction ([`TINY`](super::TINY)
+//! floors, [`NEG_INF`](super::NEG_INF) = -1e30 stand-in).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::jsonx::Json;
+use crate::linalg::Mat;
+
+use super::{BsElement, MpElement, SpElement};
+
+/// Matrix → `{"rows": R, "cols": C, "data": [..]}` (row-major).
+pub fn mat_to_json(m: &Mat) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("rows".to_string(), Json::Num(m.rows() as f64));
+    obj.insert("cols".to_string(), Json::Num(m.cols() as f64));
+    obj.insert(
+        "data".to_string(),
+        Json::Arr(m.data().iter().map(|&v| Json::Num(v)).collect()),
+    );
+    Json::Obj(obj)
+}
+
+/// Inverse of [`mat_to_json`].
+pub fn mat_from_json(v: &Json) -> Result<Mat> {
+    let rows = v
+        .get("rows")
+        .as_usize()
+        .ok_or_else(|| Error::invalid_request("matrix json: missing 'rows'"))?;
+    let cols = v
+        .get("cols")
+        .as_usize()
+        .ok_or_else(|| Error::invalid_request("matrix json: missing 'cols'"))?;
+    let data = f64_vec_from_json(v.get("data"), "matrix json: 'data'")?;
+    if rows.checked_mul(cols) != Some(data.len()) {
+        return Err(Error::invalid_request(format!(
+            "matrix json: {} values for {rows}x{cols}",
+            data.len()
+        )));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Sum-product element → `{"mat": .., "log_scale": ..}`.
+pub fn sp_element_to_json(e: &SpElement) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("mat".to_string(), mat_to_json(&e.mat));
+    obj.insert("log_scale".to_string(), Json::Num(e.log_scale));
+    Json::Obj(obj)
+}
+
+/// Inverse of [`sp_element_to_json`].
+pub fn sp_element_from_json(v: &Json) -> Result<SpElement> {
+    let mat = mat_from_json(v.get("mat"))?;
+    let log_scale = v
+        .get("log_scale")
+        .as_f64()
+        .ok_or_else(|| Error::invalid_request("sp element json: 'log_scale'"))?;
+    Ok(SpElement { mat, log_scale })
+}
+
+/// Max-product element → `{"mat": ..}`.
+pub fn mp_element_to_json(e: &MpElement) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("mat".to_string(), mat_to_json(&e.mat));
+    Json::Obj(obj)
+}
+
+/// Inverse of [`mp_element_to_json`].
+pub fn mp_element_from_json(v: &Json) -> Result<MpElement> {
+    Ok(MpElement { mat: mat_from_json(v.get("mat"))? })
+}
+
+/// Bayesian filtering element → `{"f": .., "g": [..], "log_scale": ..}`.
+pub fn bs_element_to_json(e: &BsElement) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("f".to_string(), mat_to_json(&e.f));
+    obj.insert(
+        "g".to_string(),
+        Json::Arr(e.g.iter().map(|&v| Json::Num(v)).collect()),
+    );
+    obj.insert("log_scale".to_string(), Json::Num(e.log_scale));
+    Json::Obj(obj)
+}
+
+/// Inverse of [`bs_element_to_json`].
+pub fn bs_element_from_json(v: &Json) -> Result<BsElement> {
+    let f = mat_from_json(v.get("f"))?;
+    let g = f64_vec_from_json(v.get("g"), "bs element json: 'g'")?;
+    let log_scale = v
+        .get("log_scale")
+        .as_f64()
+        .ok_or_else(|| Error::invalid_request("bs element json: 'log_scale'"))?;
+    Ok(BsElement { f, g, log_scale })
+}
+
+fn f64_vec_from_json(v: &Json, what: &str) -> Result<Vec<f64>> {
+    v.as_arr()
+        .ok_or_else(|| Error::invalid_request(format!("{what} not an array")))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .ok_or_else(|| Error::invalid_request(format!("{what}: non-number")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::{
+        bs_element_chain, mp_element_chain, sp_element_chain, NEG_INF,
+    };
+    use crate::hmm::{gilbert_elliott, GeParams};
+
+    #[test]
+    fn element_round_trips_are_bit_exact() {
+        let h = gilbert_elliott(GeParams::default());
+        let ys = vec![0u32, 1, 1, 0, 1, 0];
+        for e in sp_element_chain(&h, &ys) {
+            let text = sp_element_to_json(&e).to_string_compact();
+            let back = sp_element_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, e);
+        }
+        for e in mp_element_chain(&h, &ys) {
+            let text = mp_element_to_json(&e).to_string_compact();
+            let back = mp_element_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, e);
+        }
+        for e in bs_element_chain(&h, &ys) {
+            let text = bs_element_to_json(&e).to_string_compact();
+            let back = bs_element_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, e);
+        }
+    }
+
+    #[test]
+    fn awkward_f64_values_survive() {
+        // Denormal-adjacent scales, NEG_INF sentinels, exact integers —
+        // the values the element algebra actually produces.
+        let vals = [
+            0.1 + 0.2, // classic non-representable decimal
+            NEG_INF,
+            -123456.789e-7,
+            1.0,
+            f64::MIN_POSITIVE,
+            (0.3f64).ln(),
+        ];
+        let m = Mat::from_vec(2, 3, vals.to_vec());
+        let back =
+            mat_from_json(&Json::parse(&mat_to_json(&m).to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.data(), m.data());
+        assert_eq!((back.rows(), back.cols()), (2, 3));
+    }
+
+    #[test]
+    fn malformed_json_is_rejected() {
+        assert!(mat_from_json(&Json::Null).is_err());
+        assert!(sp_element_from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(mp_element_from_json(&Json::parse("{\"mat\": 3}").unwrap()).is_err());
+        let bad = Json::parse(r#"{"rows": 2, "cols": 2, "data": [1, 2, 3]}"#).unwrap();
+        assert!(mat_from_json(&bad).is_err());
+        // rows × cols overflowing usize is a typed error, not a panic.
+        let huge = Json::parse(
+            r#"{"rows": 4294967296, "cols": 4294967296, "data": []}"#,
+        )
+        .unwrap();
+        assert!(mat_from_json(&huge).is_err());
+    }
+}

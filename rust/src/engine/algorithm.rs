@@ -120,6 +120,16 @@ impl Algorithm {
         }
     }
 
+    /// Whether `engine::Session` can serve this algorithm's task
+    /// incrementally: the parallel-scan formulations whose element
+    /// algebra is checkpointable — `SpPar` behind
+    /// `Session::filtered`/`smoothed_lag`/`finish`, `MpPar` behind
+    /// `map_lag`/`finish_map`. The Bayesian-filter elements compose the
+    /// same way but have no session surface yet (ROADMAP open item).
+    pub fn supports_streaming(self) -> bool {
+        matches!(self, Algorithm::SpPar | Algorithm::MpPar)
+    }
+
     /// Whether this is a parallel-scan formulation (O(log T) span).
     pub fn is_parallel(self) -> bool {
         matches!(
@@ -198,6 +208,20 @@ mod tests {
         }
         assert_eq!(Algorithm::from_name("nope"), None);
         assert_eq!(Algorithm::from_json(&Json::Num(3.0)), None);
+    }
+
+    #[test]
+    fn streaming_flag_is_a_parallel_subset() {
+        for a in Algorithm::ALL {
+            if a.supports_streaming() {
+                assert!(a.is_parallel(), "{} streams but is not parallel", a.name());
+                assert_ne!(a.task(), Task::Training);
+            }
+        }
+        assert!(Algorithm::SpPar.supports_streaming());
+        assert!(Algorithm::MpPar.supports_streaming());
+        assert!(!Algorithm::SpSeq.supports_streaming());
+        assert!(!Algorithm::BaumWelch.supports_streaming());
     }
 
     #[test]

@@ -24,15 +24,25 @@
 //! instead of reallocating them (see `benches/primitives.rs` for the
 //! before/after). [`Engine::run_batch`] fans a multi-sequence request
 //! out over `exec::parallel_for_chunks`, one workspace per worker.
+//!
+//! For online workloads, [`Engine::open_session`] returns a long-lived
+//! [`Session`] whose checkpointed prefix scan makes appends O(k) and
+//! fixed-lag queries O(lag + block) instead of the O(T) rerun the
+//! one-shot API costs per arrival (see `engine::session`).
 
 mod algorithm;
 mod backend;
+mod session;
 
 #[cfg(test)]
 mod tests;
 
 pub use algorithm::{Algorithm, Task};
 pub use backend::{decode_core_outputs, Backend, NativeBackend, XlaBackend};
+pub use session::{
+    Filtered, LagDecoded, LagSmoothed, Session, SessionOptions,
+    DEFAULT_SESSION_BLOCK,
+};
 // Re-exported so custom `Backend` implementations outside this module
 // can name the workspace type the trait signature uses.
 pub use crate::inference::Workspace;

@@ -1,0 +1,548 @@
+//! Streaming inference sessions — the online counterpart of
+//! [`Engine::run`].
+//!
+//! A [`Session`] is a long-lived, resumable inference state: the paper's
+//! prefix-scan formulation makes the running forward product an
+//! associative prefix, so appending k observations costs O(k) summary
+//! folds (via [`scan::CheckpointedScan`]) instead of the O(T) rerun a
+//! complete-sequence API forces on streaming clients.
+//!
+//! ```text
+//!            push(&[y…])            push(&[y…])
+//!  (empty) ────────────▶ streaming ────────────▶ streaming ─ … ─┐
+//!                        │  │  │                                │
+//!             filtered() │  │ smoothed_lag(L) / map_lag(L)      │ finish()
+//!                O(1)    ▼  ▼     O(L + B)                      ▼   O(T)
+//!              p(x_t|y_1:t)  window marginals / MAP      exact posterior
+//! ```
+//!
+//! Cost model (T pushed so far, block length B, lag L):
+//!
+//! * `push` of k observations — k element builds + k fold steps, plus
+//!   one carry combine per completed block: O(k · D³).
+//! * `filtered` — one combine: O(D³).
+//! * `smoothed_lag(L)` / `map_lag(L)` — forward suffix rescan of width
+//!   ≤ L + B from the covering checkpoint, backward parallel scan over
+//!   the window: O((L + B) · D³), independent of T.
+//! * `finish` — materializes the forward scan from the checkpoints
+//!   (phase 3 only: one rescan per block) plus the full backward scan:
+//!   O(T · D³), **bit-identical** to `Engine::run(Algorithm::SpPar, ..)`
+//!   under the same scan options (`finish_map` ↔ `Algorithm::MpPar`) —
+//!   property-tested over random push splits in `engine::tests`.
+//!
+//! Sessions snapshot to JSON ([`Session::snapshot`] /
+//! [`Engine::resume_session`]): observations plus the serialized block
+//! summaries, so a restore re-derives carries in O(T/B) combines and
+//! skips the O(T · D³) refold.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::elements::serde::{sp_element_from_json, sp_element_to_json};
+use crate::elements::{
+    mp_element_protos, mp_prior_element, mp_terminal, sp_element_chain,
+    sp_element_protos, sp_prior_element, sp_terminal, MpElement, MpOp,
+    SpElement, SpOp,
+};
+use crate::error::{Error, Result};
+use crate::hmm::Hmm;
+use crate::inference::{
+    apply_growth_policy, copy_elements_shifted, mp_map_from_scans,
+    sp_posterior_from_scans, streaming, ElementBuf, MapEstimate, Posterior,
+    Workspace,
+};
+use crate::jsonx::Json;
+use crate::linalg::normalize_sum;
+use crate::scan::{run_scan_rev, CheckpointedScan, ScanEngine, ScanOptions};
+
+use super::Engine;
+
+/// Default checkpoint block length when neither the session options nor
+/// the engine's scan options pin one.
+pub const DEFAULT_SESSION_BLOCK: usize = 256;
+
+/// Options for [`Engine::open_session`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionOptions {
+    /// Checkpoint block length B. `None` inherits the engine's pinned
+    /// [`ScanOptions::block`] when set, else [`DEFAULT_SESSION_BLOCK`].
+    pub block: Option<usize>,
+    /// Maintain the max-product scan from the first push. Off by
+    /// default: the first MAP query performs an O(T) catch-up instead,
+    /// and smoothing-only sessions pay nothing.
+    pub track_map: bool,
+}
+
+/// Filtering state after `step` observations: p(x_step | y_{1:step})
+/// and the running log-likelihood log p(y_{1:step}).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Filtered {
+    pub probs: Vec<f64>,
+    pub log_likelihood: f64,
+    /// Number of observations conditioned on (the absolute step is
+    /// `step - 1`).
+    pub step: usize,
+}
+
+/// Fixed-lag smoothing result: marginals for absolute steps
+/// `start .. start + posterior.len()`, conditioned on every observation
+/// pushed so far.
+#[derive(Debug, Clone)]
+pub struct LagSmoothed {
+    pub start: usize,
+    pub posterior: Posterior,
+    /// Width of the forward suffix rescan that served the query (≤ lag
+    /// + block) — the coordinator's suffix-width histogram feeds on it.
+    pub rescan_width: usize,
+}
+
+/// Fixed-lag MAP decode: per-step MAP-consistent states for absolute
+/// steps `start .. start + path.len()` (Eq. 40 restricted to the
+/// window), plus the running joint log-maximum.
+#[derive(Debug, Clone)]
+pub struct LagDecoded {
+    pub start: usize,
+    pub path: Vec<u32>,
+    pub log_prob: f64,
+    pub rescan_width: usize,
+}
+
+/// Lazily-enabled max-product tracking state.
+struct MpTrack {
+    scan: CheckpointedScan<MpElement, MpOp>,
+    protos: Vec<MpElement>,
+}
+
+impl MpTrack {
+    fn new(hmm: &Hmm, block: usize) -> Self {
+        Self {
+            scan: CheckpointedScan::new(MpOp { d: hmm.num_states() }, block),
+            protos: mp_element_protos(hmm),
+        }
+    }
+}
+
+/// A long-lived streaming inference session (see the module docs for
+/// the state diagram and cost model). Created by [`Engine::open_session`].
+pub struct Session {
+    hmm: Arc<Hmm>,
+    scan: ScanOptions,
+    ys: Vec<u32>,
+    sp: CheckpointedScan<SpElement, SpOp>,
+    sp_protos: Vec<SpElement>,
+    mp: Option<MpTrack>,
+    ws: Workspace,
+}
+
+impl Engine {
+    /// Open a streaming session against this engine's model and scan
+    /// options. The session pins the chunked engine and its block
+    /// length, so [`Session::finish`] is bit-identical to
+    /// [`Engine::run`](Engine::run) with [`Algorithm::SpPar`] on an
+    /// engine configured with [`Session::scan_options`] — in particular
+    /// on *this* engine when its own options already pin the same block.
+    ///
+    /// [`Algorithm::SpPar`]: super::Algorithm::SpPar
+    pub fn open_session(&self, opts: SessionOptions) -> Session {
+        let block = opts
+            .block
+            .or(self.scan.block)
+            .unwrap_or(DEFAULT_SESSION_BLOCK)
+            .max(1);
+        Session::new(Arc::clone(&self.hmm), self.scan, block, opts.track_map)
+    }
+
+    /// Restore a session from a [`Session::snapshot`]. Observations are
+    /// replayed into a fresh element chain (O(T·D²)); the serialized
+    /// block summaries skip the O(T·D³) refold. Snapshots are trusted
+    /// state: shape mismatches are rejected, stale summaries are not
+    /// re-verified.
+    pub fn resume_session(&self, snap: &Json) -> Result<Session> {
+        if snap.get("version").as_usize() != Some(1) {
+            return Err(Error::invalid_request(
+                "session snapshot: unsupported or missing version (expected 1)",
+            ));
+        }
+        let block = snap
+            .get("block")
+            .as_usize()
+            .ok_or_else(|| Error::invalid_request("session snapshot: 'block'"))?
+            .max(1);
+        let track_map = snap.get("track_map").as_bool().unwrap_or(false);
+        let ys: Vec<u32> = snap
+            .get("ys")
+            .as_arr()
+            .ok_or_else(|| Error::invalid_request("session snapshot: 'ys'"))?
+            .iter()
+            .map(|v| {
+                v.as_usize()
+                    .and_then(|u| u32::try_from(u).ok())
+                    .ok_or_else(|| {
+                        Error::invalid_request("session snapshot: invalid symbol")
+                    })
+            })
+            .collect::<Result<_>>()?;
+        if !ys.is_empty() {
+            self.hmm.check_observations(&ys)?;
+        }
+        let summaries: Vec<SpElement> = snap
+            .get("sp_summaries")
+            .as_arr()
+            .ok_or_else(|| Error::invalid_request("session snapshot: 'sp_summaries'"))?
+            .iter()
+            .map(sp_element_from_json)
+            .collect::<Result<_>>()?;
+        let tail = match snap.get("sp_tail") {
+            Json::Null => None,
+            v => Some(sp_element_from_json(v)?),
+        };
+        let d = self.hmm.num_states();
+        for e in summaries.iter().chain(tail.as_ref()) {
+            if e.mat.rows() != d || e.mat.cols() != d {
+                return Err(Error::invalid_request(format!(
+                    "session snapshot: {}x{} summary for a {d}-state model",
+                    e.mat.rows(),
+                    e.mat.cols()
+                )));
+            }
+        }
+
+        let elems = sp_element_chain(&self.hmm, &ys);
+        let sp = CheckpointedScan::from_parts(SpOp { d }, block, elems, summaries, tail)?;
+        let mut session = Session {
+            hmm: Arc::clone(&self.hmm),
+            scan: Session::pinned_scan(self.scan, block),
+            ys,
+            sp,
+            sp_protos: sp_element_protos(&self.hmm),
+            mp: None,
+            ws: Workspace::default(),
+        };
+        if track_map {
+            session.ensure_mp();
+        }
+        Ok(session)
+    }
+}
+
+impl Session {
+    fn new(hmm: Arc<Hmm>, scan: ScanOptions, block: usize, track_map: bool) -> Self {
+        let d = hmm.num_states();
+        let sp = CheckpointedScan::new(SpOp { d }, block);
+        let sp_protos = sp_element_protos(&hmm);
+        let mp = track_map.then(|| MpTrack::new(&hmm, block));
+        Self {
+            scan: Self::pinned_scan(scan, block),
+            hmm,
+            ys: Vec::new(),
+            sp,
+            sp_protos,
+            mp,
+            ws: Workspace::default(),
+        }
+    }
+
+    /// The engine's options with the session's block pinned and the
+    /// chunked schedule forced (checkpoints are chunked-scan state).
+    fn pinned_scan(mut scan: ScanOptions, block: usize) -> ScanOptions {
+        scan.engine = ScanEngine::Chunked;
+        scan.block = Some(block);
+        scan
+    }
+
+    /// Number of observations pushed so far.
+    pub fn len(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+
+    /// Checkpoint block length B.
+    pub fn block(&self) -> usize {
+        self.sp.block()
+    }
+
+    /// The scan options [`finish`](Self::finish) runs under — configure
+    /// an [`Engine`] with exactly these to reproduce its output
+    /// bit-for-bit via [`Engine::run`].
+    pub fn scan_options(&self) -> ScanOptions {
+        self.scan
+    }
+
+    /// Everything pushed so far.
+    pub fn observations(&self) -> &[u32] {
+        &self.ys
+    }
+
+    /// Ingest observations: O(k·D³) fold work — per observation, one
+    /// retained chain element plus one transient D×D scratch inside the
+    /// operator's fold step (a scratch-carrying fold API is a ROADMAP
+    /// follow-on). Rejects out-of-range symbols atomically (no partial
+    /// append); an empty slice is a no-op.
+    pub fn push(&mut self, obs: &[u32]) -> Result<()> {
+        if obs.is_empty() {
+            return Ok(());
+        }
+        self.hmm.check_observations(obs)?;
+        for &y in obs {
+            let k = self.ys.len();
+            self.sp
+                .push(element_at(k, y, || sp_prior_element(&self.hmm, y), &self.sp_protos));
+            if let Some(mp) = &mut self.mp {
+                mp.scan
+                    .push(element_at(k, y, || mp_prior_element(&self.hmm, y), &mp.protos));
+            }
+            self.ys.push(y);
+        }
+        Ok(())
+    }
+
+    /// The current filtering marginal p(x_t | y_{1:t}) and running
+    /// log-likelihood — one combine off the checkpoint state.
+    pub fn filtered(&self) -> Result<Filtered> {
+        self.check_nonempty()?;
+        let prefix = self.sp.prefix();
+        let mut probs: Vec<f64> = prefix.mat.row(0).to_vec();
+        let sum = normalize_sum(&mut probs);
+        let log_likelihood = prefix.log_scale + sum.max(f64::MIN_POSITIVE).ln();
+        Ok(Filtered { probs, log_likelihood, step: self.ys.len() })
+    }
+
+    /// Fixed-lag smoothing: exact marginals p(x_k | y_{1:t}) for the
+    /// last `lag` steps (fewer when the session is younger), via a
+    /// forward suffix rescan from the covering checkpoint and a parallel
+    /// backward scan over the window only — O((lag + B)·D³).
+    pub fn smoothed_lag(&mut self, lag: usize) -> Result<LagSmoothed> {
+        self.check_nonempty()?;
+        let d = self.hmm.num_states();
+        let sb = &mut self.ws.stream;
+        let win = lag_window(
+            &self.sp,
+            &self.sp_protos,
+            sp_terminal(d),
+            &self.ys,
+            lag,
+            self.scan,
+            &mut sb.sp_fwd_win,
+            &mut sb.sp_bwd_win,
+            &SpOp { d },
+        );
+        let posterior = streaming::sp_window_posterior(
+            d,
+            win.start,
+            win.fwd_offset,
+            &sb.sp_fwd_win,
+            &sb.sp_bwd_win,
+        );
+        Ok(LagSmoothed {
+            start: win.start,
+            posterior,
+            rescan_width: win.rescan_width,
+        })
+    }
+
+    /// Fixed-lag MAP decode over the last `lag` steps (the streaming
+    /// max-product analogue of [`smoothed_lag`](Self::smoothed_lag)).
+    /// The first call on a session opened without
+    /// [`SessionOptions::track_map`] replays the history into the
+    /// max-product scan (O(T); incremental afterwards).
+    pub fn map_lag(&mut self, lag: usize) -> Result<LagDecoded> {
+        self.check_nonempty()?;
+        self.ensure_mp();
+        let d = self.hmm.num_states();
+        let mp = self.mp.as_ref().expect("ensure_mp");
+        let sb = &mut self.ws.stream;
+        let win = lag_window(
+            &mp.scan,
+            &mp.protos,
+            mp_terminal(d),
+            &self.ys,
+            lag,
+            self.scan,
+            &mut sb.mp_fwd_win,
+            &mut sb.mp_bwd_win,
+            &MpOp { d },
+        );
+        let (path, log_prob) = streaming::mp_window_path(
+            d,
+            win.start,
+            win.fwd_offset,
+            &sb.mp_fwd_win,
+            &sb.mp_bwd_win,
+        );
+        Ok(LagDecoded {
+            start: win.start,
+            path,
+            log_prob,
+            rescan_width: win.rescan_width,
+        })
+    }
+
+    /// The exact full-sequence smoothing posterior — bit-identical to
+    /// `Engine::run(Algorithm::SpPar, ..)` under
+    /// [`scan_options`](Self::scan_options). The forward scan comes from
+    /// the checkpoints (phase 3 only — half the combines of a cold run);
+    /// the backward scan is unavoidable O(T). The session stays usable:
+    /// more pushes may follow.
+    pub fn finish(&mut self) -> Result<Posterior> {
+        self.check_nonempty()?;
+        let d = self.hmm.num_states();
+        materialize_full(
+            &self.sp,
+            sp_terminal(d),
+            self.scan,
+            &mut self.ws.sp.fwd,
+            &mut self.ws.sp.bwd,
+            &SpOp { d },
+        );
+        Ok(sp_posterior_from_scans(d, &self.ws.sp.fwd, &self.ws.sp.bwd))
+    }
+
+    /// The exact full-sequence MAP estimate — bit-identical to
+    /// `Engine::run(Algorithm::MpPar, ..)` under
+    /// [`scan_options`](Self::scan_options).
+    pub fn finish_map(&mut self) -> Result<MapEstimate> {
+        self.check_nonempty()?;
+        self.ensure_mp();
+        let d = self.hmm.num_states();
+        let mp = self.mp.as_ref().expect("ensure_mp");
+        materialize_full(
+            &mp.scan,
+            mp_terminal(d),
+            self.scan,
+            &mut self.ws.mp.fwd,
+            &mut self.ws.mp.bwd,
+            &MpOp { d },
+        );
+        Ok(mp_map_from_scans(d, &self.ws.mp.fwd, &self.ws.mp.bwd))
+    }
+
+    /// Export the session as JSON: observations, options, and the
+    /// sum-product block summaries (exact element serialization — see
+    /// `elements::serde`), so [`Engine::resume_session`] restores
+    /// without refolding. The max-product track, when enabled, is
+    /// rebuilt by replay on resume.
+    pub fn snapshot(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("version".to_string(), Json::Num(1.0));
+        obj.insert("block".to_string(), Json::Num(self.sp.block() as f64));
+        obj.insert("track_map".to_string(), Json::Bool(self.mp.is_some()));
+        obj.insert(
+            "ys".to_string(),
+            Json::Arr(self.ys.iter().map(|&y| Json::Num(y as f64)).collect()),
+        );
+        obj.insert(
+            "sp_summaries".to_string(),
+            Json::Arr(self.sp.summaries().iter().map(sp_element_to_json).collect()),
+        );
+        obj.insert(
+            "sp_tail".to_string(),
+            self.sp.tail_acc().map_or(Json::Null, sp_element_to_json),
+        );
+        Json::Obj(obj)
+    }
+
+    /// Build the max-product scan by replaying the stored observations
+    /// (no-op once present).
+    fn ensure_mp(&mut self) {
+        if self.mp.is_some() {
+            return;
+        }
+        let mut track = MpTrack::new(&self.hmm, self.sp.block());
+        for (k, &y) in self.ys.iter().enumerate() {
+            track
+                .scan
+                .push(element_at(k, y, || mp_prior_element(&self.hmm, y), &track.protos));
+        }
+        self.mp = Some(track);
+    }
+
+    fn check_nonempty(&self) -> Result<()> {
+        if self.ys.is_empty() {
+            return Err(Error::invalid_request(
+                "session has no observations yet",
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The chain element for absolute step `k`: the prior element at k = 0,
+/// a prototype clone afterwards — the single definition every append
+/// path (sp, mp, replay) shares, since the bit-identity contract
+/// depends on them agreeing with the one-shot chain builders.
+fn element_at<E: Clone>(
+    k: usize,
+    y: u32,
+    prior: impl FnOnce() -> E,
+    protos: &[E],
+) -> E {
+    if k == 0 {
+        prior()
+    } else {
+        protos[y as usize].clone()
+    }
+}
+
+/// Window geometry produced by [`lag_window`].
+struct Window {
+    start: usize,
+    fwd_offset: usize,
+    rescan_width: usize,
+}
+
+/// The fixed-lag window pipeline shared by `smoothed_lag` and `map_lag`:
+/// forward suffix rescan from the covering checkpoint into `fwd_win`,
+/// backward suffix scan over the window chain into `bwd_win`. The sp/mp
+/// paths must not diverge — only the element family and finalizer differ.
+#[allow(clippy::too_many_arguments)]
+fn lag_window<E, Op>(
+    scan: &CheckpointedScan<E, Op>,
+    protos: &[E],
+    terminal: E,
+    ys: &[u32],
+    lag: usize,
+    opts: ScanOptions,
+    fwd_win: &mut Vec<E>,
+    bwd_win: &mut Vec<E>,
+    op: &Op,
+) -> Window
+where
+    E: ElementBuf + Send + Sync,
+    Op: crate::scan::AssocOp<E>,
+{
+    let t = ys.len();
+    let start = t.saturating_sub(lag.max(1));
+    let from = (start / scan.block()) * scan.block();
+
+    apply_growth_policy(fwd_win, t - from);
+    let fwd_offset = scan.suffix_into(start, fwd_win);
+    let rescan_width = fwd_win.len();
+
+    apply_growth_policy(bwd_win, t - start);
+    streaming::window_chain_into(protos, &ys[start + 1..], terminal, bwd_win);
+    run_scan_rev(op, bwd_win.as_mut_slice(), opts);
+
+    Window { start, fwd_offset, rescan_width }
+}
+
+/// The exact-finish pipeline shared by `finish` and `finish_map`:
+/// checkpointed forward materialization (phase 3 only) plus the full
+/// backward scan — bit-identical to the corresponding `*_par_ws` run.
+fn materialize_full<E, Op>(
+    scan: &CheckpointedScan<E, Op>,
+    terminal: E,
+    opts: ScanOptions,
+    fwd: &mut Vec<E>,
+    bwd: &mut Vec<E>,
+    op: &Op,
+) where
+    E: ElementBuf + Send + Sync,
+    Op: crate::scan::AssocOp<E>,
+{
+    scan.materialize_into(fwd, opts);
+    copy_elements_shifted(scan.elems(), terminal, bwd);
+    run_scan_rev(op, bwd.as_mut_slice(), opts);
+}

@@ -14,7 +14,10 @@ use crate::rng::Xoshiro256StarStar;
 use crate::runtime::{ArtifactExec, Manifest, Value};
 use crate::scan::ScanOptions;
 
-use super::{Algorithm, Engine, EngineOutput, NativeBackend, XlaBackend};
+use super::{
+    Algorithm, Engine, EngineOutput, NativeBackend, SessionOptions, XlaBackend,
+};
+use crate::proptestx::Runner;
 
 fn max_gamma_diff(a: &Posterior, b: &Posterior) -> f64 {
     assert_eq!(a.len(), b.len());
@@ -210,6 +213,257 @@ fn output_accessors_enforce_task_shape() {
     assert_eq!(smoothed.len(), 3);
     let decoded = engine.decode_map(&[0, 1, 1]).unwrap();
     assert_eq!(decoded.path.len(), 3);
+}
+
+// ---------------------------------------------------------------------------
+// Streaming sessions (the checkpoint-resume acceptance bar)
+// ---------------------------------------------------------------------------
+
+/// The streaming acceptance test: *any* split of a sequence into
+/// random-size `push` calls yields `finish()` / `finish_map()`
+/// bit-identical to the one-shot `Engine::run` under the same scan
+/// options — including T = 1, pushes smaller than the block, and
+/// single-thread scan dispatch.
+#[test]
+fn session_finish_bit_identical_over_random_push_splits() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let mut runner = Runner::new("session-push-splits");
+    runner.run(12, |r| {
+        let t = 1 + r.below(500) as usize;
+        let block = 1 + r.below(48) as usize;
+        let opts = ScanOptions {
+            threads: 1 + r.below(4) as usize,
+            min_parallel_work: 8,
+            ..ScanOptions::default().with_block(block)
+        };
+        let mut engine = Engine::builder(hmm.clone()).scan_options(opts).build();
+        let ys = sample(&hmm, t, r).observations;
+        let want =
+            engine.run(Algorithm::SpPar, &ys).unwrap().into_posterior().unwrap();
+        let want_map =
+            engine.run(Algorithm::MpPar, &ys).unwrap().into_map().unwrap();
+
+        let track_map = r.below(2) == 0;
+        let mut session = engine
+            .open_session(SessionOptions { track_map, ..SessionOptions::default() });
+        assert_eq!(session.block(), block);
+        let mut i = 0;
+        while i < t {
+            let j = (i + 1 + r.below(7) as usize).min(t);
+            session.push(&ys[i..j]).unwrap();
+            i = j;
+        }
+        assert_eq!(session.len(), t);
+        let got = session.finish().unwrap();
+        assert_eq!(got, want, "finish T={t} B={block}");
+        let got_map = session.finish_map().unwrap();
+        assert_eq!(got_map, want_map, "finish_map T={t} B={block}");
+        // finish() leaves the session usable — repeat is idempotent.
+        assert_eq!(session.finish().unwrap(), want);
+    });
+}
+
+#[test]
+fn session_edge_cases_t_one_and_bad_pushes() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let opts = ScanOptions::default().with_block(64);
+    let mut engine = Engine::builder(hmm.clone()).scan_options(opts).build();
+    let mut s = engine.open_session(SessionOptions::default());
+    assert!(s.is_empty());
+    assert!(s.filtered().is_err());
+    assert!(s.finish().is_err());
+    assert!(s.smoothed_lag(4).is_err());
+    assert!(s.map_lag(4).is_err());
+    s.push(&[]).unwrap(); // empty append is a no-op
+    assert!(s.is_empty());
+
+    s.push(&[1]).unwrap();
+    let want =
+        engine.run(Algorithm::SpPar, &[1]).unwrap().into_posterior().unwrap();
+    assert_eq!(s.finish().unwrap(), want);
+    // At T = 1 the filtering and smoothing marginals coincide.
+    let f = s.filtered().unwrap();
+    assert_eq!(f.step, 1);
+    assert!((f.log_likelihood - want.log_likelihood()).abs() < 1e-12);
+    for (p, g) in f.probs.iter().zip(want.gamma(0)) {
+        assert!((p - g).abs() < 1e-12);
+    }
+
+    // Out-of-range symbols are rejected atomically: no partial append.
+    assert!(s.push(&[0, 9]).is_err());
+    assert_eq!(s.len(), 1);
+    assert_eq!(s.observations(), &[1u32][..]);
+}
+
+#[test]
+fn session_filtered_tracks_forward_likelihood() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let engine = Engine::builder(hmm.clone())
+        .scan_options(ScanOptions::default().with_block(16))
+        .build();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xF117);
+    let ys = sample(&hmm, 120, &mut rng).observations;
+    let mut s = engine.open_session(SessionOptions::default());
+    for k in 0..ys.len() {
+        s.push(&ys[k..k + 1]).unwrap();
+        let f = s.filtered().unwrap();
+        let want = inference::sp_seq(&hmm, &ys[..=k]).unwrap().log_likelihood();
+        assert!(
+            (f.log_likelihood - want).abs() <= 1e-9 * (1.0 + want.abs()),
+            "k={k}: {} vs {want}",
+            f.log_likelihood
+        );
+        let sum: f64 = f.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12, "k={k}: filtered not normalized");
+    }
+}
+
+#[test]
+fn session_fixed_lag_matches_full_reruns() {
+    // Asymmetric 3-state model (no exact MAP ties, unlike GE at long T)
+    // so the fixed-lag MAP window can be compared exactly.
+    let hmm = crate::hmm::Hmm::new(
+        crate::linalg::Mat::from_vec(
+            3,
+            3,
+            vec![0.71, 0.17, 0.12, 0.23, 0.59, 0.18, 0.09, 0.33, 0.58],
+        ),
+        crate::linalg::Mat::from_vec(
+            3,
+            3,
+            vec![0.61, 0.26, 0.13, 0.19, 0.47, 0.34, 0.27, 0.12, 0.61],
+        ),
+        vec![0.5, 0.3, 0.2],
+    )
+    .unwrap();
+    let opts = ScanOptions {
+        threads: 3,
+        min_parallel_work: 8,
+        ..ScanOptions::default().with_block(24)
+    };
+    let engine = Engine::builder(hmm.clone()).scan_options(opts).build();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0x1A6);
+    let ys = sample(&hmm, 300, &mut rng).observations;
+
+    let mut s = engine
+        .open_session(SessionOptions { track_map: true, ..SessionOptions::default() });
+    let mut pushed = 0usize;
+    for chunk in [13usize, 1, 40, 96, 150] {
+        let next = (pushed + chunk).min(ys.len());
+        s.push(&ys[pushed..next]).unwrap();
+        pushed = next;
+        let t = pushed;
+        for lag in [1usize, 17, 64] {
+            let win = s.smoothed_lag(lag).unwrap();
+            let full =
+                inference::sp_par(&hmm, &ys[..t], s.scan_options()).unwrap();
+            let n = win.posterior.len();
+            assert_eq!(n, t.min(lag));
+            assert_eq!(win.start, t - n);
+            assert!(win.rescan_width >= n && win.rescan_width <= n + s.block());
+            for j in 0..n {
+                for st in 0..3 {
+                    let got = win.posterior.gamma(j)[st];
+                    let want = full.gamma(win.start + j)[st];
+                    assert!(
+                        (got - want).abs() < 1e-10,
+                        "t={t} lag={lag} j={j}: {got} vs {want}"
+                    );
+                }
+            }
+            assert!(
+                (win.posterior.log_likelihood() - full.log_likelihood()).abs()
+                    <= 1e-9 * (1.0 + full.log_likelihood().abs())
+            );
+
+            let dec = s.map_lag(lag).unwrap();
+            let full_map =
+                inference::mp_par(&hmm, &ys[..t], s.scan_options()).unwrap();
+            assert_eq!(dec.start, t - n);
+            assert_eq!(
+                dec.path,
+                full_map.path[dec.start..t],
+                "t={t} lag={lag} MAP window"
+            );
+            assert!(
+                (dec.log_prob - full_map.log_prob).abs()
+                    <= 1e-9 * (1.0 + full_map.log_prob.abs())
+            );
+        }
+    }
+}
+
+#[test]
+fn session_snapshot_resume_is_bit_identical() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let opts = ScanOptions::default().with_block(32);
+    let mut engine = Engine::builder(hmm.clone()).scan_options(opts).build();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0x5A7);
+    let ys = sample(&hmm, 333, &mut rng).observations;
+
+    let mut live = engine
+        .open_session(SessionOptions { track_map: true, ..SessionOptions::default() });
+    live.push(&ys[..150]).unwrap();
+
+    // Round-trip through the JSON wire format (exact f64 serde).
+    let wire = live.snapshot().to_string_compact();
+    let snap = crate::jsonx::Json::parse(&wire).unwrap();
+    let mut resumed = engine.resume_session(&snap).unwrap();
+    assert_eq!(resumed.len(), 150);
+
+    live.push(&ys[150..]).unwrap();
+    resumed.push(&ys[150..]).unwrap();
+    let a = live.finish().unwrap();
+    let b = resumed.finish().unwrap();
+    assert_eq!(a, b, "resume diverged from the live session");
+    let want =
+        engine.run(Algorithm::SpPar, &ys).unwrap().into_posterior().unwrap();
+    assert_eq!(a, want, "streamed result diverged from one-shot");
+    assert_eq!(live.finish_map().unwrap(), resumed.finish_map().unwrap());
+
+    // An empty-session snapshot round-trips too.
+    let empty = engine.open_session(SessionOptions::default());
+    let resumed = engine.resume_session(&empty.snapshot()).unwrap();
+    assert!(resumed.is_empty());
+
+    // Malformed snapshots are rejected.
+    assert!(engine.resume_session(&crate::jsonx::Json::Null).is_err());
+    let bad = crate::jsonx::Json::parse(r#"{"block": 8, "ys": [0, 1]}"#).unwrap();
+    assert!(engine.resume_session(&bad).is_err());
+    // Wrong-shaped summaries are a typed error, not a downstream panic.
+    let bad_shape = crate::jsonx::Json::parse(
+        r#"{"version": 1, "block": 8, "track_map": false,
+            "ys": [0, 1, 0, 1, 0, 1, 0, 1],
+            "sp_summaries": [{"mat": {"rows": 2, "cols": 2,
+                                      "data": [1, 0, 0, 1]},
+                              "log_scale": 0}],
+            "sp_tail": null}"#,
+    )
+    .unwrap();
+    assert!(engine.resume_session(&bad_shape).is_err());
+    // Unknown snapshot versions are rejected up front.
+    let future = crate::jsonx::Json::parse(r#"{"version": 2, "block": 8}"#).unwrap();
+    assert!(engine.resume_session(&future).is_err());
+}
+
+#[test]
+fn session_scan_options_reproduce_finish_on_fresh_engine() {
+    // An engine with *unpinned* options: the session picks the default
+    // block, and its published scan options are the reproduction recipe.
+    let hmm = gilbert_elliott(GeParams::default());
+    let engine = Engine::builder(hmm.clone()).build();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xD0C);
+    let ys = sample(&hmm, 700, &mut rng).observations;
+    let mut s = engine.open_session(SessionOptions::default());
+    assert_eq!(s.block(), super::DEFAULT_SESSION_BLOCK);
+    for chunk in ys.chunks(97) {
+        s.push(chunk).unwrap();
+    }
+    let got = s.finish().unwrap();
+    let mut twin = Engine::builder(hmm).scan_options(s.scan_options()).build();
+    let want =
+        twin.run(Algorithm::SpPar, &ys).unwrap().into_posterior().unwrap();
+    assert_eq!(got, want);
 }
 
 // ---------------------------------------------------------------------------

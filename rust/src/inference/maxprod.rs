@@ -3,8 +3,8 @@
 //! (§IV-B, Definition 4 / Corollary 1).
 
 use crate::elements::{
-    mp_element_chain, mp_element_chain_into, mp_terminal, safe_ln, MpOp,
-    PathElement, PathOp,
+    mp_element_chain, mp_element_chain_into, mp_terminal, safe_ln, MpElement,
+    MpOp, PathElement, PathOp,
 };
 use crate::error::Result;
 use crate::hmm::Hmm;
@@ -91,7 +91,6 @@ pub fn mp_par_ws(
 ) -> Result<MapEstimate> {
     hmm.check_observations(ys)?;
     let d = hmm.num_states();
-    let t = ys.len();
     let op = MpOp { d };
 
     let elems = &mut ws.mp.elems;
@@ -104,10 +103,22 @@ pub fn mp_par_ws(
     copy_elements_shifted(elems.as_slice(), mp_terminal(d), bwd);
     run_scan_rev(&op, bwd.as_mut_slice(), opts);
 
+    Ok(mp_map_from_scans(d, fwd, bwd))
+}
+
+/// Eq. (40) finalization, shared by [`mp_par_ws`] and the streaming
+/// `engine::Session`: x*_k = argmax ψ̃^f ψ̃^b, with ψ̃^f read from row 0
+/// (prior-broadcast rows) and ψ̃^b from column 0 (terminal-broadcast
+/// columns); the joint log-probability is the forward maximum at T.
+pub(crate) fn mp_map_from_scans(
+    d: usize,
+    fwd: &[MpElement],
+    bwd: &[MpElement],
+) -> MapEstimate {
+    let t = fwd.len();
+    debug_assert_eq!(t, bwd.len());
     let mut path = vec![0u32; t];
     for k in 0..t {
-        // ψ̃^f from row 0 (prior-broadcast rows), ψ̃^b from column 0
-        // (terminal-broadcast columns).
         let frow = fwd[k].mat.row(0);
         let delta: Vec<f64> = (0..d).map(|s| frow[s] + bwd[k].mat[(s, 0)]).collect();
         path[k] = argmax(&delta) as u32;
@@ -117,7 +128,7 @@ pub fn mp_par_ws(
         .row(0)
         .iter()
         .fold(f64::NEG_INFINITY, |m, &v| m.max(v));
-    Ok(MapEstimate { path, log_prob })
+    MapEstimate { path, log_prob }
 }
 
 /// Path-based parallel Viterbi (§IV-B): a single parallel *reduction*

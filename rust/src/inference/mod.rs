@@ -24,6 +24,7 @@
 mod bayes;
 mod baum_welch;
 mod maxprod;
+pub(crate) mod streaming;
 mod sumprod;
 mod types;
 mod viterbi;
@@ -35,7 +36,11 @@ pub use maxprod::{mp_par, mp_par_ws, mp_path_par, mp_seq};
 pub use sumprod::{sp_par, sp_par_ws, sp_seq};
 pub use types::{MapEstimate, Posterior};
 pub use viterbi::viterbi;
-pub use workspace::{BsBuffers, MpBuffers, SpBuffers, Workspace};
+pub use workspace::{BsBuffers, MpBuffers, SpBuffers, StreamBuffers, Workspace};
+
+pub(crate) use maxprod::mp_map_from_scans;
+pub(crate) use sumprod::sp_posterior_from_scans;
+pub(crate) use workspace::{apply_growth_policy, copy_elements_shifted, ElementBuf};
 
 #[cfg(test)]
 mod tests {

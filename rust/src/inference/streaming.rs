@@ -1,0 +1,182 @@
+//! Fixed-lag streaming inference cores — the math behind
+//! `engine::Session::smoothed_lag` / `map_lag`.
+//!
+//! A session's `scan::CheckpointedScan` supplies forward prefixes over
+//! the suffix window covering the last L steps (cost O(L + B), B the
+//! checkpoint block). These helpers build the *backward* suffix-scan
+//! input from the cached per-symbol element prototypes and finalize
+//! marginals / MAP states over the window only — so a fixed-lag query
+//! after an append costs O(L + B) combines instead of the full
+//! smoother's O(T).
+//!
+//! The window marginal is exact fixed-lag smoothing: p(x_k | y_{1:t})
+//! for k in the window, conditioning on *all* observations so far — the
+//! backward values are genuine suffix products ψ^b_{k,t}, identical in
+//! form to the full smoother's (Eq. 22 / Eq. 40 restricted to the
+//! window).
+
+use crate::elements::{MpElement, SpElement};
+use crate::linalg::{argmax, normalize_sum};
+
+use super::types::Posterior;
+use super::workspace::ElementBuf;
+
+/// dst ← [protos[ys[0]], …, protos[ys[n-1]], terminal] — the backward
+/// suffix-scan input for a window starting at absolute step `start`:
+/// the interior elements for steps start+1..t plus the terminal element.
+/// Overwrites in place when shapes match (the session hot path).
+pub(crate) fn window_chain_into<E: ElementBuf>(
+    protos: &[E],
+    ys: &[u32],
+    terminal: E,
+    dst: &mut Vec<E>,
+) {
+    let n = ys.len() + 1;
+    let key = terminal.shape_key();
+    if dst.len() == n && dst.first().map_or(false, |e| e.shape_key() == key) {
+        for (d, &y) in dst[..n - 1].iter_mut().zip(ys) {
+            d.overwrite_from(&protos[y as usize]);
+        }
+        dst[n - 1].overwrite_from(&terminal);
+    } else {
+        dst.clear();
+        dst.reserve(n);
+        dst.extend(ys.iter().map(|&y| protos[y as usize].clone()));
+        dst.push(terminal);
+    }
+}
+
+/// Fixed-lag Eq. (22): marginals for absolute steps `start..start+n`
+/// (n = `bwd_win.len()`), where `fwd_win[i]` is the forward prefix at
+/// absolute index `fwd_offset + i` and `bwd_win[j]` the backward suffix
+/// value at absolute step `start + j`. The returned log-likelihood is
+/// that of the *full* prefix — read off the window's last forward
+/// element, which is the running total.
+pub(crate) fn sp_window_posterior(
+    d: usize,
+    start: usize,
+    fwd_offset: usize,
+    fwd_win: &[SpElement],
+    bwd_win: &[SpElement],
+) -> Posterior {
+    let n = bwd_win.len();
+    debug_assert!(start >= fwd_offset && start - fwd_offset + n == fwd_win.len());
+    let mut gamma = vec![0.0f64; n * d];
+    for (j, b) in bwd_win.iter().enumerate() {
+        let frow = fwd_win[start + j - fwd_offset].mat.row(0);
+        let g = &mut gamma[j * d..(j + 1) * d];
+        for s in 0..d {
+            g[s] = frow[s] * b.mat[(s, 0)];
+        }
+        normalize_sum(g);
+    }
+    let last = fwd_win.last().expect("non-empty window");
+    let loglik =
+        last.log_scale + last.mat.row(0).iter().sum::<f64>().max(f64::MIN_POSITIVE).ln();
+    Posterior::new(d, gamma, loglik)
+}
+
+/// Fixed-lag Eq. (40): MAP states for absolute steps `start..start+n`
+/// under the observations so far, plus the joint forward log-maximum at
+/// the current step (indexing as [`sp_window_posterior`]).
+pub(crate) fn mp_window_path(
+    d: usize,
+    start: usize,
+    fwd_offset: usize,
+    fwd_win: &[MpElement],
+    bwd_win: &[MpElement],
+) -> (Vec<u32>, f64) {
+    let n = bwd_win.len();
+    debug_assert!(start >= fwd_offset && start - fwd_offset + n == fwd_win.len());
+    let mut path = vec![0u32; n];
+    for (j, b) in bwd_win.iter().enumerate() {
+        let frow = fwd_win[start + j - fwd_offset].mat.row(0);
+        let delta: Vec<f64> = (0..d).map(|s| frow[s] + b.mat[(s, 0)]).collect();
+        path[j] = argmax(&delta) as u32;
+    }
+    let last = fwd_win.last().expect("non-empty window");
+    let log_prob = last
+        .mat
+        .row(0)
+        .iter()
+        .fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+    (path, log_prob)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::elements::{
+        sp_element_chain, sp_element_protos, sp_terminal, SpOp,
+    };
+    use crate::hmm::{gilbert_elliott, sample, GeParams};
+    use crate::inference::sp_par;
+    use crate::rng::Xoshiro256StarStar;
+    use crate::scan::{run_scan_rev, CheckpointedScan, ScanOptions};
+
+    #[test]
+    fn window_posterior_matches_full_smoother() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let d = hmm.num_states();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(0x51AE);
+        let ys = sample(&hmm, 150, &mut rng).observations;
+        let opts = ScanOptions::serial();
+        let full = sp_par(&hmm, &ys, opts).unwrap();
+
+        let block = 16usize;
+        let mut ck = CheckpointedScan::new(SpOp { d }, block);
+        ck.extend(sp_element_chain(&hmm, &ys));
+        let protos = sp_element_protos(&hmm);
+
+        for lag in [1usize, 7, 40, 150, 400] {
+            let t = ys.len();
+            let start = t.saturating_sub(lag);
+            let mut fwd_win = Vec::new();
+            let fwd_offset = ck.suffix_into(start, &mut fwd_win);
+            let mut bwd_win = Vec::new();
+            window_chain_into(
+                &protos,
+                &ys[start + 1..],
+                sp_terminal(d),
+                &mut bwd_win,
+            );
+            run_scan_rev(&SpOp { d }, &mut bwd_win, opts);
+            let win =
+                sp_window_posterior(d, start, fwd_offset, &fwd_win, &bwd_win);
+            assert_eq!(win.len(), t - start, "lag={lag}");
+            for j in 0..win.len() {
+                for s in 0..d {
+                    let got = win.gamma(j)[s];
+                    let want = full.gamma(start + j)[s];
+                    assert!(
+                        (got - want).abs() < 1e-10,
+                        "lag={lag} k={} s={s}: {got} vs {want}",
+                        start + j
+                    );
+                }
+            }
+            assert!(
+                (win.log_likelihood() - full.log_likelihood()).abs() < 1e-9,
+                "lag={lag} loglik"
+            );
+        }
+    }
+
+    #[test]
+    fn window_chain_reuse_is_identical() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let d = hmm.num_states();
+        let protos = sp_element_protos(&hmm);
+        let ys = vec![0u32, 1, 1, 0];
+        let mut a = Vec::new();
+        window_chain_into(&protos, &ys, sp_terminal(d), &mut a);
+        assert_eq!(a.len(), 5);
+        let mut b = a.clone();
+        window_chain_into(&protos, &ys, sp_terminal(d), &mut b); // in-place
+        assert_eq!(a, b);
+        let mut expected: Vec<_> =
+            ys.iter().map(|&y| protos[y as usize].clone()).collect();
+        expected.push(sp_terminal(d));
+        assert_eq!(a, expected);
+    }
+}

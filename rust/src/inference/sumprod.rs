@@ -1,7 +1,7 @@
 //! Sum-product smoothers: the classical two-filter algorithm
 //! (Algorithm 1 + Eq. 22) and its parallel-scan version (Algorithm 3).
 
-use crate::elements::{sp_element_chain_into, sp_terminal, SpOp};
+use crate::elements::{sp_element_chain_into, sp_terminal, SpElement, SpOp};
 use crate::error::Result;
 use crate::hmm::Hmm;
 use crate::linalg::normalize_sum;
@@ -94,7 +94,6 @@ pub fn sp_par_ws(
 ) -> Result<Posterior> {
     hmm.check_observations(ys)?;
     let d = hmm.num_states();
-    let t = ys.len();
     let op = SpOp { d };
 
     // Algorithm 3 lines 1-4: initialize elements; forward scan.
@@ -111,10 +110,23 @@ pub fn sp_par_ws(
     copy_elements_shifted(elems.as_slice(), sp_terminal(d), bwd);
     run_scan_rev(&op, bwd.as_mut_slice(), opts);
 
-    // Lines 9-11 (Eq. 22): p(x_k) ∝ ψ^f(x_k) ψ^b(x_k). The forward
-    // element has identical rows (prior broadcast) — read row 0; the
-    // backward element has identical columns — read column 0. The log
-    // scales cancel in the per-step normalization.
+    // Lines 9-11 (Eq. 22).
+    Ok(sp_posterior_from_scans(d, fwd, bwd))
+}
+
+/// Eq. (22) finalization, shared by [`sp_par_ws`] and the streaming
+/// `engine::Session`: p(x_k) ∝ ψ^f(x_k) ψ^b(x_k). The forward element
+/// has identical rows (prior broadcast) — read row 0; the backward
+/// element has identical columns — read column 0. The log scales cancel
+/// in the per-step normalization; the log-likelihood is read off the
+/// last forward element.
+pub(crate) fn sp_posterior_from_scans(
+    d: usize,
+    fwd: &[SpElement],
+    bwd: &[SpElement],
+) -> Posterior {
+    let t = fwd.len();
+    debug_assert_eq!(t, bwd.len());
     let mut gamma = vec![0.0f64; t * d];
     for k in 0..t {
         let g = &mut gamma[k * d..(k + 1) * d];
@@ -128,7 +140,7 @@ pub fn sp_par_ws(
     let last = &fwd[t - 1];
     let loglik =
         last.log_scale + last.mat.row(0).iter().sum::<f64>().max(f64::MIN_POSITIVE).ln();
-    Ok(Posterior::new(d, gamma, loglik))
+    Posterior::new(d, gamma, loglik)
 }
 
 #[cfg(test)]

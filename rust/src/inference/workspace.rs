@@ -38,6 +38,32 @@ pub struct BsBuffers {
     pub rts: Vec<Mat>,
 }
 
+/// Scratch for the streaming session's suffix windows (`smoothed_lag` /
+/// `map_lag`): the forward prefix values over the checkpoint-covering
+/// window and the backward suffix-scan input.
+#[derive(Debug, Default)]
+pub struct StreamBuffers {
+    pub sp_fwd_win: Vec<SpElement>,
+    pub sp_bwd_win: Vec<SpElement>,
+    pub mp_fwd_win: Vec<MpElement>,
+    pub mp_bwd_win: Vec<MpElement>,
+}
+
+/// Workspace growth policy for window buffers: growth is left to the
+/// allocator (amortized doubling), and capacity is released only once it
+/// exceeds [`SHRINK_FACTOR`] × the live need — so a one-off wide
+/// `smoothed_lag` window doesn't pin its memory for the session's
+/// remaining lifetime, while steady-state appends never reallocate.
+pub(crate) const SHRINK_FACTOR: usize = 4;
+
+/// Apply the policy before refilling `buf` to `need` elements.
+pub(crate) fn apply_growth_policy<E>(buf: &mut Vec<E>, need: usize) {
+    if buf.capacity() > SHRINK_FACTOR * need.max(1) {
+        buf.truncate(need);
+        buf.shrink_to(need);
+    }
+}
+
 /// Per-engine scratch: one buffer set per algorithm family, grown on
 /// first use and overwritten in place afterwards.
 #[derive(Debug, Default)]
@@ -45,6 +71,7 @@ pub struct Workspace {
     pub sp: SpBuffers,
     pub mp: MpBuffers,
     pub bs: BsBuffers,
+    pub stream: StreamBuffers,
 }
 
 /// Elements that can be overwritten in place from a same-shape source —

@@ -12,7 +12,8 @@
 //!   verification, CPU baselines and the figure benches.
 //! * **Serving runtime** — [`engine`] (the unified inference API: one
 //!   entry point for all nine algorithms, pluggable backends, reusable
-//!   workspaces), [`runtime`] (PJRT artifact loading and execution) and
+//!   workspaces, and streaming [`engine::Session`]s over checkpointed
+//!   scans), [`runtime`] (PJRT artifact loading and execution) and
 //!   [`coordinator`] (router, batcher, temporal sharder): the L3 layer
 //!   that serves inference requests over the AOT-compiled XLA artifacts
 //!   produced by `python/compile/aot.py`.

@@ -1,0 +1,460 @@
+//! Resumable prefix scans — the streaming substrate of `engine::Session`.
+//!
+//! [`CheckpointedScan`] holds the element chain of a growing sequence
+//! together with the *per-block summaries* the two-level [`chunked_scan`]
+//! (paper §V-B) computes in its phase 1, and the exclusive block carries
+//! of its phase 2. Appending k elements costs k summary-fold steps; the
+//! current filtering prefix is one combine away; and materializing the
+//! full all-prefix-sums needs only phase 3 (one rescan per block — half
+//! the combines of a from-scratch chunked scan).
+//!
+//! **Bit-identity contract.** Every floating-point operation performed
+//! here is the same operation, in the same order, that `run_scan` with a
+//! pinned block length ([`ScanOptions::block`]) would perform on the
+//! full chain:
+//!
+//! * incremental summary folds replay `AssocOp::fold`'s per-element step
+//!   (phase 1),
+//! * carries are the same left-fold of summaries (phase 2),
+//! * [`materialize_into`](CheckpointedScan::materialize_into) replays
+//!   `run_scan`'s dispatch (single-rescan shortcut, single-block
+//!   sequential path, or per-block phase-3 rescans).
+//!
+//! So `Session::finish()` is bit-identical to the one-shot
+//! `Engine::run(Algorithm::SpPar, ..)` under the same scan options —
+//! property-tested over random push splits in `engine::tests`.
+
+use crate::error::{Error, Result};
+use crate::exec::{parallel_for_chunks, SharedSliceMut};
+
+use super::{seq_scan_into, AssocOp, ScanEngine, ScanOptions};
+
+/// A resumable inclusive prefix scan over a growing element chain.
+///
+/// State (for chain length T, block length B):
+///
+/// ```text
+/// elems:     [ e_0 … e_{B-1} | e_B … e_{2B-1} | … | tail (< B elems) ]
+/// summaries: [   s_0 = ⊗blk0 |   s_1 = ⊗blk1 | … ]          (⌊T/B⌋)
+/// carries:   [ id | id⊗s_0 | id⊗s_0⊗s_1 | … ]               (⌊T/B⌋+1)
+/// tail_acc:  fold of the current partial block (None when T % B = 0)
+/// ```
+pub struct CheckpointedScan<E, Op> {
+    op: Op,
+    block: usize,
+    elems: Vec<E>,
+    summaries: Vec<E>,
+    carries: Vec<E>,
+    tail_acc: Option<E>,
+}
+
+impl<E, Op> CheckpointedScan<E, Op>
+where
+    E: Clone + Send + Sync,
+    Op: AssocOp<E>,
+{
+    /// Empty scan with block length `block` (clamped to ≥ 1).
+    pub fn new(op: Op, block: usize) -> Self {
+        let carries = vec![op.identity()];
+        Self {
+            op,
+            block: block.max(1),
+            elems: Vec::new(),
+            summaries: Vec::new(),
+            carries,
+            tail_acc: None,
+        }
+    }
+
+    /// Rebuild a scan from exported state (session resume after
+    /// eviction): the raw chain plus the serialized block summaries and
+    /// tail accumulator. Carries are re-derived — ⌊T/B⌋ combines instead
+    /// of the O(T) refold the summaries replace.
+    pub fn from_parts(
+        op: Op,
+        block: usize,
+        elems: Vec<E>,
+        summaries: Vec<E>,
+        tail_acc: Option<E>,
+    ) -> Result<Self> {
+        let block = block.max(1);
+        if summaries.len() != elems.len() / block {
+            return Err(Error::invalid_request(format!(
+                "checkpoint restore: {} summaries for {} elements at block {}",
+                summaries.len(),
+                elems.len(),
+                block
+            )));
+        }
+        if tail_acc.is_some() != (elems.len() % block != 0) {
+            return Err(Error::invalid_request(
+                "checkpoint restore: tail accumulator presence mismatch",
+            ));
+        }
+        let mut carries = Vec::with_capacity(summaries.len() + 1);
+        carries.push(op.identity());
+        for s in &summaries {
+            let c = op.combine(carries.last().expect("seeded"), s);
+            carries.push(c);
+        }
+        Ok(Self { op, block, elems, summaries, carries, tail_acc })
+    }
+
+    /// Number of elements appended so far.
+    pub fn len(&self) -> usize {
+        self.elems.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.elems.is_empty()
+    }
+
+    /// The pinned block length B.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Number of completed-block checkpoints (⌊T/B⌋).
+    pub fn num_checkpoints(&self) -> usize {
+        self.summaries.len()
+    }
+
+    /// The raw element chain (e_0 … e_{T-1}).
+    pub fn elems(&self) -> &[E] {
+        &self.elems
+    }
+
+    /// Completed-block summaries (the exported eviction state).
+    pub fn summaries(&self) -> &[E] {
+        &self.summaries
+    }
+
+    /// Fold of the current partial block, if any.
+    pub fn tail_acc(&self) -> Option<&E> {
+        self.tail_acc.as_ref()
+    }
+
+    /// Append one element: O(1) combines (one summary-fold step, plus
+    /// one carry combine when a block completes).
+    pub fn push(&mut self, e: E) {
+        self.elems.push(e);
+        let e_ref = self.elems.last().expect("just pushed");
+        // Phase-1 replay: fold's init is the block's first element; each
+        // later element advances the accumulator by one fold step.
+        let acc = match self.tail_acc.take() {
+            None => e_ref.clone(),
+            Some(prev) => self.op.fold(prev, std::slice::from_ref(e_ref)),
+        };
+        if self.elems.len() % self.block == 0 {
+            // Phase-2 replay: carry ← carry ⊗ summary.
+            let carry = self.op.combine(self.carries.last().expect("seeded"), &acc);
+            self.summaries.push(acc);
+            self.carries.push(carry);
+        } else {
+            self.tail_acc = Some(acc);
+        }
+    }
+
+    /// Append a batch of elements.
+    pub fn extend(&mut self, elems: impl IntoIterator<Item = E>) {
+        for e in elems {
+            self.push(e);
+        }
+    }
+
+    /// The inclusive total a_0 ⊗ … ⊗ a_{T-1} — the *filtering* prefix.
+    /// One combine (carry ⊗ tail fold); identity when empty.
+    pub fn prefix(&self) -> E {
+        let carry = self.carries.last().expect("seeded");
+        match &self.tail_acc {
+            Some(tail) => self.op.combine(carry, tail),
+            None => carry.clone(),
+        }
+    }
+
+    /// Inclusive prefix values for the suffix window covering absolute
+    /// indices `start..len`: rescans raw elements from the checkpoint at
+    /// or before `start`, one block at a time with the stored carries.
+    /// Returns the absolute index of `out[0]` (≤ `start`, within one
+    /// block of it), so the rescan width is at most `len - start + B`.
+    ///
+    /// On complete blocks the values are bitwise those of
+    /// [`materialize_into`](Self::materialize_into)'s chunked path; the
+    /// cost is O(len − start + B) combines instead of O(len).
+    pub fn suffix_into(&self, start: usize, out: &mut Vec<E>) -> usize {
+        let start = start.min(self.elems.len());
+        let b0 = start / self.block;
+        let from = b0 * self.block;
+        out.clear();
+        out.extend(self.elems[from..].iter().cloned());
+        let mut b = b0;
+        let mut off = 0;
+        while off < out.len() {
+            let end = (off + self.block).min(out.len());
+            self.op.rescan(&self.carries[b], &mut out[off..end]);
+            b += 1;
+            off = end;
+        }
+        from
+    }
+
+    /// Materialize the full all-prefix-sums into `out`, bit-identical to
+    /// `run_scan(&op, full_chain, opts)` for options that pin this
+    /// scan's block length — but skipping the chunked engine's phases
+    /// 1–2 (already checkpointed), so only one rescan per block runs.
+    pub fn materialize_into(&self, out: &mut Vec<E>, opts: ScanOptions) {
+        out.clear();
+        out.extend(self.elems.iter().cloned());
+        let t = out.len();
+        if t == 0 {
+            return;
+        }
+        debug_assert_eq!(
+            opts.chunk_for(t),
+            self.block,
+            "scan options must pin the checkpoint block length"
+        );
+        // run_scan's one-worker shortcut: a single in-place rescan.
+        if opts.threads <= 1 && opts.engine == ScanEngine::Chunked {
+            let ident = self.op.identity();
+            self.op.rescan(&ident, out);
+            return;
+        }
+        if opts.engine == ScanEngine::Blelloch {
+            // No checkpoint reuse for the tree schedule — correctness
+            // fallback only; sessions pin the chunked engine.
+            super::blelloch_scan(&self.op, out, opts);
+            return;
+        }
+        let nblocks = t.div_ceil(self.block);
+        if nblocks == 1 {
+            seq_scan_into(&self.op, out);
+            return;
+        }
+        // chunked_scan phase 3: rescan each block with its stored carry.
+        let block = self.block;
+        let op = &self.op;
+        let carries = &self.carries;
+        let base = SharedSliceMut::new(out.as_mut_slice());
+        parallel_for_chunks(nblocks, opts.threads, |_, lo, hi| {
+            for b in lo..hi {
+                let start = b * block;
+                let end = (start + block).min(base.len());
+                // SAFETY: blocks are disjoint ranges of the slice.
+                let slice = unsafe { base.range_mut(start, end) };
+                op.rescan(&carries[b], slice);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptestx::Runner;
+    use crate::scan::{chunked_scan, run_scan};
+
+    /// Non-commutative 2×2 matrix product — makes both ordering and
+    /// floating-point association bugs visible via exact equality.
+    struct MatOp;
+    type M2 = [f64; 4];
+
+    impl AssocOp<M2> for MatOp {
+        fn identity(&self) -> M2 {
+            [1.0, 0.0, 0.0, 1.0]
+        }
+        fn combine(&self, a: &M2, b: &M2) -> M2 {
+            [
+                a[0] * b[0] + a[1] * b[2],
+                a[0] * b[1] + a[1] * b[3],
+                a[2] * b[0] + a[3] * b[2],
+                a[2] * b[1] + a[3] * b[3],
+            ]
+        }
+    }
+
+    struct ConcatOp;
+    impl AssocOp<String> for ConcatOp {
+        fn identity(&self) -> String {
+            String::new()
+        }
+        fn combine(&self, a: &String, b: &String) -> String {
+            format!("{a}{b}")
+        }
+    }
+
+    fn rand_m2(r: &mut crate::rng::Xoshiro256StarStar) -> M2 {
+        let a = r.uniform(0.1, 1.0);
+        let b = r.uniform(0.1, 1.0);
+        [a, 1.0 - a, b, 1.0 - b]
+    }
+
+    fn mt_opts(block: usize) -> ScanOptions {
+        ScanOptions {
+            threads: 3,
+            min_parallel_work: 1,
+            ..ScanOptions::default().with_block(block)
+        }
+    }
+
+    #[test]
+    fn incremental_summaries_match_chunked_phases_bitwise() {
+        let mut runner = Runner::new("ckpt-phases");
+        runner.run(8, |r| {
+            let t = 1 + r.below(200) as usize;
+            let block = 1 + r.below(24) as usize;
+            let elems: Vec<M2> = (0..t).map(|_| rand_m2(r)).collect();
+
+            let mut ck = CheckpointedScan::new(MatOp, block);
+            ck.extend(elems.iter().copied());
+
+            // Phase-1 oracle: fold each complete block from scratch.
+            for (b, s) in ck.summaries().iter().enumerate() {
+                let start = b * block;
+                let want =
+                    MatOp.fold(elems[start], &elems[start + 1..start + block]);
+                assert_eq!(*s, want, "summary {b} (t={t} B={block})");
+            }
+
+            // Materialized scan ≡ chunked_scan with the same block —
+            // bitwise.
+            let opts = mt_opts(block);
+            let mut want = elems.clone();
+            chunked_scan(&MatOp, &mut want, block, opts);
+            let mut got = Vec::new();
+            ck.materialize_into(&mut got, opts);
+            assert_eq!(got, want, "t={t} B={block}");
+        });
+    }
+
+    #[test]
+    fn materialize_matches_run_scan_all_dispatch_paths() {
+        let op = ConcatOp;
+        for (t, block) in [(1usize, 8usize), (5, 8), (8, 8), (9, 8), (40, 7)] {
+            let elems: Vec<String> = (0..t).map(|i| format!("{i},")).collect();
+            let mut ck = CheckpointedScan::new(ConcatOp, block);
+            ck.extend(elems.iter().cloned());
+            // threaded chunked, serial shortcut — both must agree with
+            // run_scan under the same options.
+            for opts in [
+                mt_opts(block),
+                ScanOptions {
+                    threads: 1,
+                    min_parallel_work: usize::MAX,
+                    ..ScanOptions::default().with_block(block)
+                },
+            ] {
+                let mut want = elems.clone();
+                run_scan(&op, &mut want, opts);
+                let mut got = Vec::new();
+                ck.materialize_into(&mut got, opts);
+                assert_eq!(got, want, "t={t} B={block} threads={}", opts.threads);
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_tracks_the_running_total() {
+        let op = ConcatOp;
+        let mut ck = CheckpointedScan::new(ConcatOp, 4);
+        assert_eq!(ck.prefix(), op.identity());
+        let mut want = String::new();
+        for i in 0..23 {
+            let e = format!("{i},");
+            want.push_str(&e);
+            ck.push(e);
+            assert_eq!(ck.prefix(), want, "after {} pushes", i + 1);
+        }
+        assert_eq!(ck.num_checkpoints(), 5);
+    }
+
+    #[test]
+    fn suffix_window_matches_materialized_values() {
+        let mut runner = Runner::new("ckpt-suffix");
+        runner.run(8, |r| {
+            let t = 2 + r.below(150) as usize;
+            let block = 2 + r.below(16) as usize;
+            let elems: Vec<M2> = (0..t).map(|_| rand_m2(r)).collect();
+            let mut ck = CheckpointedScan::new(MatOp, block);
+            ck.extend(elems.iter().copied());
+            let opts = mt_opts(block);
+            let mut full = Vec::new();
+            ck.materialize_into(&mut full, opts);
+
+            let start = r.below(t as u64) as usize;
+            let mut win = Vec::new();
+            let from = ck.suffix_into(start, &mut win);
+            assert!(from <= start && start - from < block, "offset");
+            assert_eq!(from % block, 0);
+            assert_eq!(win.len(), t - from);
+            if t > block {
+                // multi-block: phase-3 replay is bitwise.
+                for (i, w) in win.iter().enumerate() {
+                    assert_eq!(*w, full[from + i], "k={}", from + i);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn from_parts_round_trips() {
+        let elems: Vec<String> = (0..29).map(|i| format!("{i},")).collect();
+        let mut ck = CheckpointedScan::new(ConcatOp, 8);
+        ck.extend(elems.iter().cloned());
+        let restored = CheckpointedScan::from_parts(
+            ConcatOp,
+            8,
+            ck.elems().to_vec(),
+            ck.summaries().to_vec(),
+            ck.tail_acc().cloned(),
+        )
+        .unwrap();
+        let opts = mt_opts(8);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        ck.materialize_into(&mut a, opts);
+        restored.materialize_into(&mut b, opts);
+        assert_eq!(a, b);
+        assert_eq!(restored.prefix(), ck.prefix());
+
+        // Restored scans keep streaming correctly.
+        let mut restored = restored;
+        let mut ck = ck;
+        for i in 29..40 {
+            let e = format!("{i},");
+            ck.push(e.clone());
+            restored.push(e);
+        }
+        assert_eq!(restored.prefix(), ck.prefix());
+
+        // Inconsistent parts are rejected.
+        assert!(CheckpointedScan::from_parts(
+            ConcatOp,
+            8,
+            vec!["a".to_string(); 10],
+            vec![],
+            Some("x".to_string()),
+        )
+        .is_err());
+        assert!(CheckpointedScan::from_parts(
+            ConcatOp,
+            8,
+            vec!["a".to_string(); 16],
+            vec!["s".to_string(); 2],
+            Some("x".to_string()),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn empty_scan_edge_cases() {
+        let ck: CheckpointedScan<String, ConcatOp> =
+            CheckpointedScan::new(ConcatOp, 4);
+        assert!(ck.is_empty());
+        assert_eq!(ck.prefix(), String::new());
+        let mut out = vec!["junk".to_string()];
+        ck.materialize_into(&mut out, mt_opts(4));
+        assert!(out.is_empty());
+        let from = ck.suffix_into(0, &mut out);
+        assert_eq!((from, out.len()), (0, 0));
+    }
+}

@@ -2,7 +2,10 @@
 //!
 //! Implements the paper's computational core:
 //!
-//! * [`seq_scan`] / [`seq_scan_rev`] — the O(T) sequential baselines,
+//! * [`seq_scan`] / [`seq_scan_rev`] — the O(T) sequential baselines
+//!   (thin wrappers over the in-place [`seq_scan_into`] /
+//!   [`seq_scan_rev_into`], which the streaming sessions use to avoid
+//!   per-append allocation),
 //! * [`blelloch_scan`] — Algorithm 2 (up-sweep + down-sweep + final
 //!   pass), generalized to arbitrary T, with optional multithreaded
 //!   level execution (O(log T) span on P ≥ T processors),
@@ -14,6 +17,14 @@
 //! Operators are supplied through [`AssocOp`]; the element type is
 //! generic so the same engine drives sum-product matrices, max-product
 //! matrices, Bayesian-filter pairs and the path-based elements.
+//!
+//! [`checkpoint::CheckpointedScan`] persists the per-block summaries of
+//! [`chunked_scan`] so a prefix scan can be *resumed* as observations
+//! stream in — the substrate of `engine::Session`.
+
+pub mod checkpoint;
+
+pub use checkpoint::CheckpointedScan;
 
 use crate::exec::parallel_for_chunks;
 
@@ -134,34 +145,41 @@ pub enum ScanEngine {
     Chunked,
 }
 
-/// Sequential inclusive prefix scan: out[k] = a_0 ⊗ … ⊗ a_k.
-pub fn seq_scan<E: Clone, Op: AssocOp<E>>(op: &Op, elems: &[E]) -> Vec<E> {
-    let mut out = Vec::with_capacity(elems.len());
-    let mut acc: Option<E> = None;
-    for e in elems {
-        let next = match &acc {
-            None => e.clone(),
-            Some(prev) => op.combine(prev, e),
-        };
-        out.push(next.clone());
-        acc = Some(next);
+/// In-place sequential inclusive prefix scan:
+/// elems[k] ← a_0 ⊗ … ⊗ a_k. Zero allocation beyond the operator's own
+/// combines — the form streaming sessions call per append.
+pub fn seq_scan_into<E: Clone, Op: AssocOp<E>>(op: &Op, elems: &mut [E]) {
+    for k in 1..elems.len() {
+        let (prev, cur) = elems.split_at_mut(k);
+        let next = op.combine(&prev[k - 1], &cur[0]);
+        cur[0] = next;
     }
+}
+
+/// In-place sequential inclusive suffix scan:
+/// elems[k] ← a_k ⊗ … ⊗ a_{T-1}.
+pub fn seq_scan_rev_into<E: Clone, Op: AssocOp<E>>(op: &Op, elems: &mut [E]) {
+    for k in (0..elems.len().saturating_sub(1)).rev() {
+        let (cur, next) = elems.split_at_mut(k + 1);
+        let v = op.combine(&cur[k], &next[0]);
+        cur[k] = v;
+    }
+}
+
+/// Sequential inclusive prefix scan: out[k] = a_0 ⊗ … ⊗ a_k.
+/// Thin allocating wrapper over [`seq_scan_into`].
+pub fn seq_scan<E: Clone, Op: AssocOp<E>>(op: &Op, elems: &[E]) -> Vec<E> {
+    let mut out = elems.to_vec();
+    seq_scan_into(op, &mut out);
     out
 }
 
 /// Sequential inclusive suffix scan: out[k] = a_k ⊗ … ⊗ a_{T-1}.
+/// Thin allocating wrapper over [`seq_scan_rev_into`].
 pub fn seq_scan_rev<E: Clone, Op: AssocOp<E>>(op: &Op, elems: &[E]) -> Vec<E> {
-    let mut out = vec![None; elems.len()];
-    let mut acc: Option<E> = None;
-    for (k, e) in elems.iter().enumerate().rev() {
-        let next = match &acc {
-            None => e.clone(),
-            Some(nxt) => op.combine(e, nxt),
-        };
-        out[k] = Some(next.clone());
-        acc = Some(next);
-    }
-    out.into_iter().map(|o| o.unwrap()).collect()
+    let mut out = elems.to_vec();
+    seq_scan_rev_into(op, &mut out);
+    out
 }
 
 /// Threading configuration for the parallel scans.
@@ -175,6 +193,12 @@ pub struct ScanOptions {
     pub min_parallel_work: usize,
     /// Which scan schedule `run_scan`/`run_scan_rev` dispatch to.
     pub engine: ScanEngine,
+    /// Fixed block length for the chunked engine. `None` (the default)
+    /// derives ~4 blocks per thread from the sequence length; a fixed
+    /// value makes the block partition length-independent — what
+    /// `scan::CheckpointedScan` needs so a streamed scan and a one-shot
+    /// scan agree bit-for-bit.
+    pub block: Option<usize>,
 }
 
 impl Default for ScanOptions {
@@ -183,6 +207,7 @@ impl Default for ScanOptions {
             threads: crate::exec::default_parallelism(),
             min_parallel_work: 64,
             engine: ScanEngine::Chunked,
+            block: None,
         }
     }
 }
@@ -193,6 +218,7 @@ impl ScanOptions {
             threads: 1,
             min_parallel_work: usize::MAX,
             engine: ScanEngine::Chunked,
+            block: None,
         }
     }
 
@@ -201,10 +227,22 @@ impl ScanOptions {
         self
     }
 
-    /// Block length for the chunked engine: ~4 blocks per thread so the
-    /// tail imbalance stays small (tuned in §Perf).
+    /// Pin the chunked engine's block length (see [`ScanOptions::block`]).
+    pub fn with_block(mut self, block: usize) -> Self {
+        self.block = Some(block.max(1));
+        self
+    }
+
+    /// Block length for the chunked engine: the pinned [`block`] when
+    /// set, otherwise ~4 blocks per thread so the tail imbalance stays
+    /// small (tuned in §Perf).
+    ///
+    /// [`block`]: ScanOptions::block
     pub fn chunk_for(&self, len: usize) -> usize {
-        len.div_ceil(self.threads.max(1) * 4).max(16)
+        match self.block {
+            Some(b) => b.max(1),
+            None => len.div_ceil(self.threads.max(1) * 4).max(16),
+        }
     }
 }
 
@@ -336,8 +374,7 @@ where
     let block = block.max(1);
     let nblocks = t.div_ceil(block);
     if nblocks == 1 {
-        let scanned = seq_scan(op, elems);
-        elems.clone_from_slice(&scanned);
+        seq_scan_into(op, elems);
         return;
     }
 
@@ -625,6 +662,46 @@ mod tests {
             let mut got = elems;
             chunked_scan(&op, &mut got, block, ScanOptions::serial());
             assert_eq!(got, want, "t={t} block={block} (serial)");
+        }
+    }
+
+    #[test]
+    fn seq_scan_into_matches_wrappers() {
+        let op = ConcatOp;
+        for t in [0usize, 1, 2, 3, 7, 16, 33] {
+            let elems: Vec<String> = (0..t).map(|i| format!("{i},")).collect();
+            let mut fwd = elems.clone();
+            seq_scan_into(&op, &mut fwd);
+            assert_eq!(fwd, seq_scan(&op, &elems), "fwd t={t}");
+            let mut bwd = elems.clone();
+            seq_scan_rev_into(&op, &mut bwd);
+            assert_eq!(bwd, seq_scan_rev(&op, &elems), "bwd t={t}");
+        }
+    }
+
+    #[test]
+    fn fixed_block_pins_the_chunk_partition() {
+        let opts = ScanOptions::default().with_block(32);
+        assert_eq!(opts.chunk_for(10), 32);
+        assert_eq!(opts.chunk_for(100_000), 32);
+        let auto = ScanOptions { threads: 4, ..ScanOptions::default() };
+        assert_eq!(auto.chunk_for(16_000), 1000);
+        // run_scan under a pinned block matches the sequential oracle.
+        let op = ConcatOp;
+        for t in [1usize, 31, 32, 33, 200] {
+            let elems: Vec<String> = (0..t).map(|i| format!("{i},")).collect();
+            let want = seq_scan(&op, &elems);
+            let mut got = elems;
+            run_scan(
+                &op,
+                &mut got,
+                ScanOptions {
+                    threads: 3,
+                    min_parallel_work: 1,
+                    ..ScanOptions::default().with_block(32)
+                },
+            );
+            assert_eq!(got, want, "t={t}");
         }
     }
 
