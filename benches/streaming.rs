@@ -1,11 +1,15 @@
 //! Bench target: the streaming session hot path — per-append cost vs the
 //! full-recompute baseline a complete-sequence API forces on streaming
-//! clients, plus fixed-lag query latency.
+//! clients, fixed-lag query latency, and the session store's
+//! spill/restore costs (the eviction tax).
 //!
 //! The acceptance claim: appending k observations to a T-long session
 //! costs O(k + B) (checkpointed scan), so the `session_append` rows stay
 //! ~flat as T grows while `full_recompute` rows grow linearly —
-//! sublinear per-append cost at T ≥ 4096.
+//! sublinear per-append cost at T ≥ 4096. `store_spill` /
+//! `store_restore` rows track what demoting/promoting a T-long session
+//! to/from the disk log costs (O(T) serde, ~half the combines skipped on
+//! restore thanks to the checkpoint summaries).
 //!
 //! `HMM_SCAN_BENCH_SMOKE=1` shrinks the grid and time budget to a CI
 //! smoke run (a few seconds total).
@@ -17,6 +21,7 @@ use hmm_scan::engine::{Algorithm, Engine, SessionOptions};
 use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
 use hmm_scan::rng::Xoshiro256StarStar;
 use hmm_scan::scan::ScanOptions;
+use hmm_scan::store::{DiskStore, SessionMeta, SessionStore};
 
 fn main() {
     let smoke = std::env::var("HMM_SCAN_BENCH_SMOKE").as_deref() == Ok("1");
@@ -41,6 +46,10 @@ fn main() {
     let append = 16usize; // observations per arrival
     let lag = 64usize;
     let mut rows = Vec::new();
+
+    let store_dir = std::env::temp_dir()
+        .join(format!("hmm-scan-bench-store-{}", std::process::id()));
+    let store = DiskStore::open(&store_dir).expect("open bench store");
 
     for &t in grid {
         let mut rng = Xoshiro256StarStar::seed_from_u64(9);
@@ -82,11 +91,47 @@ fn main() {
         rows.push(bench(&format!("session_finish/T={t}"), cfg, || {
             fin.finish().unwrap().log_likelihood()
         }));
+
+        // Session-store eviction tax: spill = snapshot + compacted log
+        // rewrite; restore = log read + checkpoint resume + replay.
+        let id = t as u64;
+        let meta = SessionMeta {
+            model: "ge".to_string(),
+            options: SessionOptions::default(),
+            lag: 0,
+            fingerprint: None,
+        };
+        store.create(id, &meta).unwrap();
+        let mut cold = engine.open_session(SessionOptions::default());
+        cold.push(&ys[..t]).unwrap();
+        rows.push(bench(&format!("store_spill/T={t}"), cfg, || {
+            store.compact(id, &meta, &cold.snapshot()).unwrap();
+            cold.len()
+        }));
+        store.compact(id, &meta, &cold.snapshot()).unwrap();
+        // A few post-checkpoint appends so the restore row includes the
+        // append-replay cost — the variable part compaction bounds.
+        for chunk in ys[t..].chunks(4) {
+            store.log_append(id, chunk).unwrap();
+        }
+        rows.push(bench(&format!("store_restore/T={t}"), cfg, || {
+            let stored = store.restore(id).unwrap();
+            let mut s = engine
+                .resume_session(stored.snapshot.as_ref().unwrap())
+                .unwrap();
+            for chunk in &stored.appends {
+                s.push(chunk).unwrap();
+            }
+            s.len()
+        }));
+        store.remove(id).unwrap();
     }
 
+    std::fs::remove_dir_all(&store_dir).ok();
     println!("{}", format_table(&rows));
     println!(
         "(session_append rows should stay ~flat in T; full_recompute grows \
-         linearly — the streaming win.)"
+         linearly — the streaming win. store_spill/store_restore are the \
+         per-eviction tax the coordinator pays past its resident watermark.)"
     );
 }

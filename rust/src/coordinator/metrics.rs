@@ -55,6 +55,10 @@ pub struct Metrics {
     appended_obs: AtomicU64,
     append_latencies_us: Mutex<SampleWindow>,
     suffix_widths: Mutex<BTreeMap<u64, u64>>,
+    spills: AtomicU64,
+    restores: AtomicU64,
+    sessions_recovered: AtomicU64,
+    restore_latencies_us: Mutex<SampleWindow>,
 }
 
 /// Point-in-time view of the metrics.
@@ -79,6 +83,15 @@ pub struct MetricsSnapshot {
     /// Suffix-rescan width histogram: (power-of-two upper bound, count),
     /// ascending, empty buckets omitted.
     pub suffix_width_hist: Vec<(u64, u64)>,
+    /// Sessions demoted to the store (resident chain dropped).
+    pub spills: u64,
+    /// Evicted sessions transparently restored on touch.
+    pub restores: u64,
+    /// Sessions re-registered from the store at startup.
+    pub sessions_recovered: u64,
+    pub restore_p50_us: u64,
+    pub restore_p99_us: u64,
+    pub restore_max_us: u64,
 }
 
 impl MetricsSnapshot {
@@ -149,6 +162,27 @@ impl Metrics {
             .push(latency.as_micros().min(u128::from(u64::MAX)) as u64);
     }
 
+    /// Record one session demotion to the store.
+    pub fn on_spill(&self) {
+        self.spills.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one transparent restore taking `latency` (store read +
+    /// resume + append replay — the eviction tax the histogram makes
+    /// visible).
+    pub fn on_restore(&self, latency: Duration) {
+        self.restores.fetch_add(1, Ordering::Relaxed);
+        self.restore_latencies_us
+            .lock()
+            .unwrap()
+            .push(latency.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Record `n` sessions re-registered from the store at startup.
+    pub fn on_recovered(&self, n: usize) {
+        self.sessions_recovered.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     /// Record the forward suffix-rescan width of a fixed-lag query
     /// (bucketed immediately — power-of-two upper bound).
     pub fn on_suffix_width(&self, width: usize) {
@@ -165,6 +199,8 @@ impl Metrics {
         lat.sort_unstable();
         let mut app = self.append_latencies_us.lock().unwrap().samples.clone();
         app.sort_unstable();
+        let mut res = self.restore_latencies_us.lock().unwrap().samples.clone();
+        res.sort_unstable();
         let pct = |sorted: &[u64], p: f64| -> u64 {
             if sorted.is_empty() {
                 0
@@ -192,6 +228,12 @@ impl Metrics {
             append_p99_us: pct(&app, 0.99),
             append_max_us: app.last().copied().unwrap_or(0),
             suffix_width_hist: hist.into_iter().collect(),
+            spills: self.spills.load(Ordering::Relaxed),
+            restores: self.restores.load(Ordering::Relaxed),
+            sessions_recovered: self.sessions_recovered.load(Ordering::Relaxed),
+            restore_p50_us: pct(&res, 0.50),
+            restore_p99_us: pct(&res, 0.99),
+            restore_max_us: res.last().copied().unwrap_or(0),
         }
     }
 }
@@ -228,6 +270,25 @@ mod tests {
         assert_eq!(s.append_p50_us, 0);
         assert_eq!(s.append_occupancy(), 0.0);
         assert!(s.suffix_width_hist.is_empty());
+        assert_eq!((s.spills, s.restores, s.sessions_recovered), (0, 0, 0));
+        assert_eq!(s.restore_p50_us, 0);
+    }
+
+    #[test]
+    fn store_counters_and_restore_latency() {
+        let m = Metrics::new();
+        m.on_spill();
+        m.on_spill();
+        for i in 1..=4u64 {
+            m.on_restore(Duration::from_micros(i * 100));
+        }
+        m.on_recovered(6);
+        let s = m.snapshot();
+        assert_eq!(s.spills, 2);
+        assert_eq!(s.restores, 4);
+        assert_eq!(s.sessions_recovered, 6);
+        assert_eq!(s.restore_p50_us, 200);
+        assert_eq!(s.restore_max_us, 400);
     }
 
     #[test]

@@ -17,8 +17,10 @@
 //!   throughput counters.
 //! * [`server`] — the `Coordinator` itself: model registry, worker pool,
 //!   synchronous and batched entry points, a per-session registry for
-//!   the streaming verbs ([`StreamRequest`]: open → append* → close,
-//!   backed by `engine::Session`), and a channel-fed serve loop.
+//!   the streaming verbs ([`StreamRequest`]: open → append* → stat /
+//!   close, backed by `engine::Session` and the durable
+//!   `store::SessionStore` — watermark-driven eviction, transparent
+//!   restore, crash recovery), and a channel-fed serve loop.
 
 pub mod batcher;
 pub mod metrics;

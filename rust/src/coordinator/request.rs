@@ -165,9 +165,14 @@ pub enum StreamVerb {
         options: SessionOptions,
         lag: usize,
     },
-    /// Ingest observations into an open session.
+    /// Ingest observations into an open session. Evicted sessions are
+    /// transparently restored from the session store first.
     Append { session: u64, ys: Vec<u32> },
-    /// Produce the exact full-sequence posterior and remove the session.
+    /// Report residency for one session plus coordinator-wide gauges —
+    /// cheap (no restore is triggered).
+    Stat { session: u64 },
+    /// Produce the exact full-sequence posterior and remove the session
+    /// (restoring it first when evicted).
     Close { session: u64 },
 }
 
@@ -195,6 +200,10 @@ impl StreamRequest {
         Self { id, verb: StreamVerb::Append { session, ys } }
     }
 
+    pub fn stat(id: u64, session: u64) -> Self {
+        Self { id, verb: StreamVerb::Stat { session } }
+    }
+
     pub fn close(id: u64, session: u64) -> Self {
         Self { id, verb: StreamVerb::Close { session } }
     }
@@ -218,6 +227,20 @@ pub enum StreamReply {
         /// suffix window once the XLA-backed rescan lands (ROADMAP);
         /// execution today is native.
         plan_hint: Option<String>,
+    },
+    /// Residency report for one session ([`StreamVerb::Stat`]).
+    Stats {
+        session: u64,
+        /// Observations held (resident or spilled).
+        len: usize,
+        /// Whether the session's element chain is in RAM right now.
+        resident: bool,
+        /// Model the session is bound to.
+        model: String,
+        /// Coordinator-wide gauge: sessions registered (any residency).
+        open_sessions: usize,
+        /// Coordinator-wide gauge: sessions currently resident.
+        resident_sessions: usize,
     },
     Closed {
         session: u64,

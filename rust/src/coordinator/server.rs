@@ -1,18 +1,23 @@
 //! The coordinator server: XLA worker pool, model registry, decode entry
-//! points, and the channel-fed serve loop.
+//! points, the durable session registry (watermark-driven eviction to a
+//! `store::SessionStore`, transparent restore, crash recovery), and the
+//! channel-fed serve loop.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::engine::{Engine, EngineOutput, Session, XlaBackend};
+use crate::engine::{Engine, EngineOutput, Session, SessionKind, XlaBackend};
 use crate::error::{Error, Result};
 use crate::hmm::Hmm;
 use crate::runtime::{ArtifactExec, Manifest, Registry, Value};
 use crate::scan::ScanOptions;
+use crate::store::{
+    model_fingerprint, DiskStore, MemStore, SessionMeta, SessionStore,
+};
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
@@ -147,12 +152,39 @@ pub struct CoordinatorConfig {
     /// serve loop, so an unbounded client-supplied lag would let one
     /// session degrade all traffic to O(T) per append.
     pub max_stream_lag: usize,
-    /// Upper bound on concurrently open streaming sessions. Each session
-    /// retains its O(T) element chain, so an unchecked open loop (or
-    /// clients that never close) would exhaust coordinator memory;
-    /// opens beyond the cap are rejected with a typed error. (Idle
-    /// eviction to disk is a ROADMAP follow-on.)
+    /// Resident-RAM watermark: the number of streaming sessions allowed
+    /// to keep their O(T·D²) element chains in memory. This is *not* an
+    /// open cap — opens beyond it succeed; the least-recently-appended
+    /// sessions are spilled to the session store and restored
+    /// transparently (bit-identically) on their next touch. Note the
+    /// bound this buys depends on the store: a [`DiskStore`] moves
+    /// spilled state out of process entirely, while the default
+    /// [`MemStore`] only shrinks it to the O(T) observations + summary
+    /// snapshot (~30× smaller at D = 4, but still in RAM) — deploy a
+    /// disk store before relying on the watermark as a hard memory
+    /// bound.
+    pub resident_watermark: usize,
+    /// Hard ceiling on *registered* sessions (any residency) — a
+    /// denial-of-service backstop, not a sizing knob: even spilled
+    /// sessions cost a registry entry and store state, so an unchecked
+    /// open loop would still exhaust memory/disk. Well above
+    /// `resident_watermark` by default; opens beyond it get a typed
+    /// rejection. Size it to your spill target: with the in-memory
+    /// [`MemStore`] every spilled session still holds its observations
+    /// + snapshot in process RAM, so this ceiling *is* the memory bound
+    /// — set it accordingly (a [`DiskStore`] moves that state to disk
+    /// and can afford a much larger ceiling).
     pub max_open_sessions: usize,
+    /// Durable session-store directory. `Some(dir)` backs sessions with
+    /// a [`DiskStore`] (append-ahead logs; [`Coordinator::recover_sessions`]
+    /// replays them after a crash). `None` uses the in-memory
+    /// [`MemStore`]: eviction still frees resident RAM, but nothing
+    /// survives the process.
+    pub session_store: Option<PathBuf>,
+    /// Observations appended to a session between automatic
+    /// checkpoint-compaction cycles of its log — bounds both the log
+    /// length and the append-replay cost of a restore.
+    pub checkpoint_every: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -167,7 +199,10 @@ impl Default for CoordinatorConfig {
             router: RouterConfig::default(),
             scan: ScanOptions::default(),
             max_stream_lag: 4096,
-            max_open_sessions: 1024,
+            resident_watermark: 1024,
+            max_open_sessions: 1 << 16,
+            session_store: None,
+            checkpoint_every: 4096,
         }
     }
 }
@@ -192,13 +227,20 @@ pub struct Coordinator {
     router: Router,
     models: RwLock<BTreeMap<String, ModelEntry>>,
     /// Streaming sessions, keyed like the per-model engine map: each
-    /// entry owns its mutex-serialized `engine::Session` (the session's
-    /// workspace is reused across appends exactly as the per-model
-    /// engine's is across decodes).
+    /// entry owns its mutex-serialized slot (resident `engine::Session`
+    /// or an evicted stub restorable from the store).
     sessions: RwLock<BTreeMap<u64, Arc<SessionEntry>>>,
     next_session: AtomicU64,
     max_stream_lag: usize,
+    resident_watermark: usize,
     max_open_sessions: usize,
+    checkpoint_every: usize,
+    /// Spill/restore/recovery backend (disk or in-memory).
+    store: Arc<dyn SessionStore>,
+    /// Logical LRU clock, bumped on every session touch.
+    clock: AtomicU64,
+    /// Gauge: sessions whose element chains are resident right now.
+    resident: AtomicUsize,
     metrics: Arc<Metrics>,
     scan: ScanOptions,
     batcher_config: BatcherConfig,
@@ -213,13 +255,27 @@ struct ModelEntry {
     engine: Arc<Mutex<Engine>>,
 }
 
-/// One open streaming session: the session state plus the model handle
-/// (for the router's window hints) and the fixed-lag width appends
-/// report at.
+/// One open streaming session: its residency slot plus the model handle
+/// (for the router's window hints) and the durable meta (open options +
+/// fixed-lag width) the store needs to re-create it.
 struct SessionEntry {
-    session: Mutex<Session>,
+    slot: Mutex<SessionSlot>,
     hmm: Arc<Hmm>,
-    lag: usize,
+    meta: SessionMeta,
+    /// LRU stamp: coordinator clock at the last open/append/close touch.
+    touch: AtomicU64,
+    /// Residency hint readable without the slot lock (eviction scans).
+    resident: AtomicBool,
+    /// Observations appended since the last log compaction.
+    since_ckpt: AtomicU64,
+}
+
+/// Residency state of a session.
+enum SessionSlot {
+    /// Element chain in RAM, ready to serve.
+    Resident(Session),
+    /// Spilled to the store; `len` observations are durably logged.
+    Evicted { len: usize },
 }
 
 impl Coordinator {
@@ -239,6 +295,15 @@ impl Coordinator {
             }
             _ => None,
         };
+        let store: Arc<dyn SessionStore> = match &config.session_store {
+            Some(dir) => Arc::new(DiskStore::open(dir.clone())?),
+            None => Arc::new(MemStore::new()),
+        };
+        // Seed the id allocator past everything the store already holds:
+        // a fresh open must never reuse — and `create`-overwrite the
+        // durable log of — a crashed session's id, even when the
+        // operator serves opens before calling `recover_sessions`.
+        let first_free_id = store.max_id()?.unwrap_or(0);
         Ok(Self {
             manifest,
             pool,
@@ -246,9 +311,14 @@ impl Coordinator {
             router: Router::new(config.router),
             models: RwLock::new(BTreeMap::new()),
             sessions: RwLock::new(BTreeMap::new()),
-            next_session: AtomicU64::new(0),
+            next_session: AtomicU64::new(first_free_id),
             max_stream_lag: config.max_stream_lag,
+            resident_watermark: config.resident_watermark,
             max_open_sessions: config.max_open_sessions,
+            checkpoint_every: config.checkpoint_every.max(1),
+            store,
+            clock: AtomicU64::new(0),
+            resident: AtomicUsize::new(0),
             metrics: Arc::new(Metrics::new()),
             scan: config.scan,
             batcher_config: config.batcher,
@@ -359,12 +429,14 @@ impl Coordinator {
             .collect()
     }
 
-    /// Serve one streaming verb synchronously (open / append / close —
-    /// see [`StreamVerb`]). Appends return the filtering marginal, and a
-    /// fixed-lag smoothing window when the session was opened with
-    /// `lag` > 0; close returns the exact full-sequence posterior
+    /// Serve one streaming verb synchronously (open / append / stat /
+    /// close — see [`StreamVerb`]). Appends return the filtering
+    /// marginal, and a fixed-lag smoothing window when the session was
+    /// opened with `lag` > 0 — restoring the session from the store
+    /// first when it was evicted; stat reports residency without
+    /// restoring; close returns the exact full-sequence posterior
     /// (bit-identical to the one-shot parallel smoother under the
-    /// session's scan options) and removes the session.
+    /// session's scan options) and removes the session everywhere.
     pub fn stream(&self, req: StreamRequest) -> Result<StreamResponse> {
         let start = Instant::now();
         match self.stream_verb(req.verb, start) {
@@ -399,6 +471,11 @@ impl Coordinator {
                         options.block.unwrap_or(0)
                     )));
                 }
+                if options.kind == SessionKind::Bayes && lag > 0 {
+                    return Err(Error::invalid_request(
+                        "bayes sessions are filtering-only: open with lag = 0",
+                    ));
+                }
                 let entry = self.entry(&model)?;
                 let session = {
                     let engine =
@@ -406,59 +483,185 @@ impl Coordinator {
                     engine.open_session(options)
                 };
                 let id = self.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+                let meta = SessionMeta {
+                    model,
+                    options,
+                    lag,
+                    fingerprint: Some(model_fingerprint(&entry.hmm)),
+                };
+                let sess_entry = Arc::new(SessionEntry {
+                    slot: Mutex::new(SessionSlot::Resident(session)),
+                    hmm: entry.hmm,
+                    meta,
+                    touch: AtomicU64::new(self.tick()),
+                    resident: AtomicBool::new(true),
+                    since_ckpt: AtomicU64::new(0),
+                });
+                // Count the residency *before* the entry is published:
+                // a concurrent eviction scan may spill it the moment it
+                // appears in the map, and its swap-guarded decrement
+                // must never land on a gauge that has not yet been
+                // incremented (usize wrap → permanent eviction churn).
+                self.resident.fetch_add(1, Ordering::Relaxed);
                 {
+                    // DoS backstop, checked atomically with the insert:
+                    // even spilled sessions cost a registry entry + store
+                    // state, so total opens stay bounded (the watermark
+                    // only bounds *residency*).
                     let mut sessions = self.sessions.write().unwrap();
                     if sessions.len() >= self.max_open_sessions {
+                        drop(sessions);
+                        self.resident.fetch_sub(1, Ordering::Relaxed);
                         return Err(Error::invalid_request(format!(
                             "open session limit {} reached",
                             self.max_open_sessions
                         )));
                     }
-                    sessions.insert(
-                        id,
-                        Arc::new(SessionEntry {
-                            session: Mutex::new(session),
-                            hmm: entry.hmm,
-                            lag,
-                        }),
-                    );
+                    sessions.insert(id, Arc::clone(&sess_entry));
+                }
+                // Durable open record before the id is revealed to the
+                // client (the entry is registered but unreachable until
+                // the reply); a create failure rolls the open back.
+                if let Err(e) = self.store.create(id, &sess_entry.meta) {
+                    self.sessions.write().unwrap().remove(&id);
+                    if sess_entry.resident.swap(false, Ordering::Relaxed) {
+                        self.resident.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    return Err(e);
                 }
                 self.metrics.on_session_open();
+                self.enforce_watermark(Some(id));
                 Ok(StreamReply::Opened { session: id })
             }
             StreamVerb::Append { session, ys } => {
                 let entry = self.session_entry(session)?;
-                let mut s = entry.session.lock().expect("session mutex poisoned");
-                s.push(&ys)?;
-                let filtered = s.filtered()?;
-                let (window, plan_hint) = if entry.lag > 0 {
-                    let win = s.smoothed_lag(entry.lag)?;
-                    self.metrics.on_suffix_width(win.rescan_width);
-                    let hint = self.router.window_hint(
-                        self.manifest.as_deref(),
-                        Algo::Smooth,
-                        win.rescan_width,
-                        entry.hmm.num_states(),
-                        entry.hmm.num_symbols(),
-                    );
-                    (Some(win), hint)
-                } else {
-                    (None, None)
+                // Validate before the durable log so a rejected chunk
+                // never becomes a replayable record. Empty chunks are a
+                // valid poll of the current filtered state — nothing to
+                // validate or log.
+                if !ys.is_empty() {
+                    entry.hmm.check_observations(&ys)?;
+                }
+                let reply = (|| -> Result<StreamReply> {
+                    let mut slot =
+                        entry.slot.lock().expect("session mutex poisoned");
+                    self.make_resident(session, &entry, &mut slot)?;
+                    // Append-ahead: the chunk is durable before the
+                    // resident session applies it (a crash between the
+                    // two replays it from the log on recovery).
+                    // Non-durable stores skip the log — their spill-time
+                    // snapshot covers everything a same-process restore
+                    // needs, and logging every chunk would duplicate hot
+                    // sessions' observations in RAM.
+                    if !ys.is_empty() && self.store.durable() {
+                        self.store.log_append(session, &ys)?;
+                    }
+                    let SessionSlot::Resident(s) = &mut *slot else {
+                        unreachable!("make_resident")
+                    };
+                    s.push(&ys)?;
+                    let filtered = s.filtered()?;
+                    let (window, plan_hint) = if entry.meta.lag > 0 {
+                        let win = s.smoothed_lag(entry.meta.lag)?;
+                        self.metrics.on_suffix_width(win.rescan_width);
+                        let hint = self.router.window_hint(
+                            self.manifest.as_deref(),
+                            Algo::Smooth,
+                            win.rescan_width,
+                            entry.hmm.num_states(),
+                            entry.hmm.num_symbols(),
+                        );
+                        (Some(win), hint)
+                    } else {
+                        (None, None)
+                    };
+                    let len = s.len();
+                    // Periodic checkpoint + compaction bounds the log
+                    // length and the append-replay cost of a future
+                    // restore (moot for non-durable stores, which have
+                    // no log). Best-effort: a failed compaction leaves
+                    // the (longer but valid) log in place and retries on
+                    // a later append.
+                    let since = entry
+                        .since_ckpt
+                        .fetch_add(ys.len() as u64, Ordering::Relaxed)
+                        + ys.len() as u64;
+                    if since >= self.checkpoint_every as u64
+                        && self.store.durable()
+                        && self
+                            .store
+                            .compact(session, &entry.meta, &s.snapshot())
+                            .is_ok()
+                    {
+                        entry.since_ckpt.store(0, Ordering::Relaxed);
+                    }
+                    Ok(StreamReply::Appended {
+                        session,
+                        len,
+                        filtered,
+                        window,
+                        plan_hint,
+                    })
+                })();
+                entry.touch.store(self.tick(), Ordering::Relaxed);
+                if reply.is_ok() {
+                    self.metrics.on_append(ys.len(), start.elapsed());
+                }
+                // Success or failure, the verb may have restored the
+                // session — re-impose the watermark either way (the
+                // failure-path twin of Close's handling).
+                self.enforce_watermark(Some(session));
+                reply
+            }
+            StreamVerb::Stat { session } => {
+                let entry = self.session_entry(session)?;
+                let (resident, len) = {
+                    let slot = entry.slot.lock().expect("session mutex poisoned");
+                    match &*slot {
+                        SessionSlot::Resident(s) => (true, s.len()),
+                        SessionSlot::Evicted { len } => (false, *len),
+                    }
                 };
-                let len = s.len();
-                drop(s);
-                self.metrics.on_append(ys.len(), start.elapsed());
-                Ok(StreamReply::Appended { session, len, filtered, window, plan_hint })
+                Ok(StreamReply::Stats {
+                    session,
+                    len,
+                    resident,
+                    model: entry.meta.model.clone(),
+                    open_sessions: self.open_sessions(),
+                    resident_sessions: self.resident_sessions(),
+                })
             }
             StreamVerb::Close { session } => {
                 let entry = self.session_entry(session)?;
-                let mut s = entry.session.lock().expect("session mutex poisoned");
+                let mut slot = entry.slot.lock().expect("session mutex poisoned");
+                self.make_resident(session, &entry, &mut slot)?;
+                let SessionSlot::Resident(s) = &mut *slot else {
+                    unreachable!("make_resident")
+                };
                 // finish() before removal: closing a session with no
                 // observations is an error that leaves it open (the
-                // client can append and retry), never a silent drop.
-                let posterior = s.finish()?;
-                drop(s);
+                // client can append and retry), never a silent drop. The
+                // failed path still re-imposes the watermark — the
+                // attempt may have just restored the session.
+                let posterior = match s.finish() {
+                    Ok(p) => p,
+                    Err(e) => {
+                        drop(slot);
+                        self.enforce_watermark(None);
+                        return Err(e);
+                    }
+                };
+                // Remove under the slot lock so a concurrent eviction
+                // scan cannot spill the session back into the store
+                // between finish and removal.
                 if self.sessions.write().unwrap().remove(&session).is_some() {
+                    if entry.resident.swap(false, Ordering::Relaxed) {
+                        self.resident.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    // Best-effort: a failed store removal leaves an
+                    // orphan log that a later recovery resurrects as a
+                    // never-closed session — consistent, just unclosed.
+                    let _ = self.store.remove(session);
                     self.metrics.on_session_close();
                 }
                 Ok(StreamReply::Closed { session, posterior })
@@ -475,9 +678,168 @@ impl Coordinator {
             .ok_or_else(|| Error::invalid_request(format!("unknown session {id}")))
     }
 
-    /// Number of currently open streaming sessions.
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Restore an evicted session into its slot (no-op when resident):
+    /// resume from the stored checkpoint snapshot (bit-identical — the
+    /// `elements::serde` round-trip is exact) and replay the appends
+    /// logged after it.
+    fn make_resident(
+        &self,
+        id: u64,
+        entry: &SessionEntry,
+        slot: &mut SessionSlot,
+    ) -> Result<()> {
+        if matches!(slot, SessionSlot::Resident(_)) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let stored = self.store.restore(id)?;
+        // Restore against the session's *original* model handle — never
+        // the registry's current entry, which a re-registration may have
+        // replaced. Resident sessions keep their Arc<Hmm> across
+        // re-registration; evicted ones must behave identically, or
+        // eviction stops being transparent.
+        let engine = Engine::builder(Arc::clone(&entry.hmm))
+            .scan_options(self.scan)
+            .build();
+        let mut session = match &stored.snapshot {
+            Some(snap) => engine.resume_session(snap)?,
+            None => engine.open_session(entry.meta.options),
+        };
+        for chunk in &stored.appends {
+            session.push(chunk)?;
+        }
+        *slot = SessionSlot::Resident(session);
+        // swap-guarded for symmetry with spill/close: increment only on
+        // a genuine false→true transition.
+        if !entry.resident.swap(true, Ordering::Relaxed) {
+            self.resident.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.on_restore(t0.elapsed());
+        Ok(())
+    }
+
+    /// Demote one resident session to the store: snapshot → compacted
+    /// log → drop the in-RAM chain. No-op when already evicted.
+    fn spill_session(&self, id: u64, entry: &SessionEntry) -> Result<()> {
+        let mut slot = entry.slot.lock().expect("session mutex poisoned");
+        let SessionSlot::Resident(session) = &mut *slot else {
+            return Ok(());
+        };
+        let len = session.len();
+        self.store.compact(id, &entry.meta, &session.snapshot())?;
+        entry.since_ckpt.store(0, Ordering::Relaxed);
+        *slot = SessionSlot::Evicted { len };
+        // swap-guarded like Close's removal: a close that lost the store
+        // race already gave this residency back, and a second decrement
+        // would wrap the gauge.
+        if entry.resident.swap(false, Ordering::Relaxed) {
+            self.resident.fetch_sub(1, Ordering::Relaxed);
+        }
+        self.metrics.on_spill();
+        Ok(())
+    }
+
+    /// Watermark-driven eviction: while more sessions are resident than
+    /// the watermark allows, spill the least-recently-appended one
+    /// (never `protect` — the session serving the current verb).
+    fn enforce_watermark(&self, protect: Option<u64>) {
+        while self.resident_sessions() > self.resident_watermark {
+            let victim = {
+                let sessions = self.sessions.read().unwrap();
+                sessions
+                    .iter()
+                    .filter(|(id, _)| Some(**id) != protect)
+                    .filter(|(_, e)| e.resident.load(Ordering::Relaxed))
+                    .min_by_key(|(_, e)| e.touch.load(Ordering::Relaxed))
+                    .map(|(id, e)| (*id, Arc::clone(e)))
+            };
+            let Some((id, entry)) = victim else { break };
+            if self.spill_session(id, &entry).is_err() {
+                // Store failure: stop evicting and keep serving from RAM
+                // rather than dropping state.
+                break;
+            }
+        }
+    }
+
+    /// Re-register every session the store holds — the crash-recovery
+    /// path. Call after registering models; sessions bound to models not
+    /// (yet) registered stay in the store untouched and are picked up by
+    /// a later call. Recovered sessions come back *evicted* (lazily
+    /// restored on first touch), so recovery cost is O(metadata), not
+    /// O(total observations). Returns the number re-registered.
+    pub fn recover_sessions(&self) -> Result<usize> {
+        let stored = self.store.recover()?;
+        let mut n = 0usize;
+        for (id, s) in stored {
+            // Advance the id allocator past *every* stored id — including
+            // sessions skipped below — so a fresh open can never reuse
+            // (and overwrite the durable log of) a stored session.
+            self.next_session.fetch_max(id, Ordering::Relaxed);
+            if self.sessions.read().unwrap().contains_key(&id) {
+                continue;
+            }
+            let Ok(model) = self.entry(&s.meta.model) else { continue };
+            // Recovered sessions must satisfy the same serve-cost guards
+            // opens do (appends run O(lag + block) on the serve loop): a
+            // restart under tighter limits — or a tampered log — must
+            // not smuggle an oversized session past them. Skipped
+            // sessions stay in the store; raising the limits and
+            // re-running recovery picks them up.
+            let max_block =
+                self.max_stream_lag.max(crate::engine::DEFAULT_SESSION_BLOCK);
+            if s.meta.lag > self.max_stream_lag
+                || s.meta.options.block.is_some_and(|b| b > max_block)
+            {
+                continue;
+            }
+            // Refuse to bind stored scan state to a *different* model
+            // re-registered under the same name: resume trusts the
+            // snapshot's summaries, and mixing them with elements
+            // rebuilt from other parameters would silently corrupt
+            // results. The session stays in the store for an operator
+            // who re-registers the original model.
+            if let Some(fp) = s.meta.fingerprint {
+                if fp != model_fingerprint(&model.hmm) {
+                    continue;
+                }
+            }
+            let len = s.len();
+            self.sessions.write().unwrap().insert(
+                id,
+                Arc::new(SessionEntry {
+                    slot: Mutex::new(SessionSlot::Evicted { len }),
+                    hmm: model.hmm,
+                    meta: s.meta,
+                    touch: AtomicU64::new(self.tick()),
+                    resident: AtomicBool::new(false),
+                    since_ckpt: AtomicU64::new(0),
+                }),
+            );
+            n += 1;
+        }
+        self.metrics.on_recovered(n);
+        Ok(n)
+    }
+
+    /// Number of currently open streaming sessions (any residency).
     pub fn open_sessions(&self) -> usize {
         self.sessions.read().unwrap().len()
+    }
+
+    /// Number of sessions whose element chains are resident in RAM
+    /// (bounded by the configured watermark between verbs).
+    pub fn resident_sessions(&self) -> usize {
+        self.resident.load(Ordering::Relaxed)
+    }
+
+    /// The session store behind eviction and recovery (observability).
+    pub fn session_store(&self) -> &dyn SessionStore {
+        &*self.store
     }
 
     fn execute(&self, req: &DecodeRequest) -> Result<(DecodeResult, String)> {
@@ -868,6 +1230,14 @@ mod tests {
         let resp = c.stream(StreamRequest::append(4, session, vec![0, 1])).unwrap();
         let StreamReply::Appended { window, .. } = resp.reply else { panic!() };
         assert!(window.is_none(), "lag = 0 sessions are filtering-only");
+        // An empty chunk is a valid poll: current filtered state, no new
+        // observations, nothing logged.
+        let resp = c.stream(StreamRequest::append(5, session, vec![])).unwrap();
+        let StreamReply::Appended { len, filtered, .. } = resp.reply else {
+            panic!()
+        };
+        assert_eq!(len, 2);
+        assert_eq!(filtered.step, 2);
 
         // A lag beyond the configured cap is rejected at open, and so is
         // an oversized client-chosen checkpoint block (same O(lag + B)
@@ -898,9 +1268,111 @@ mod tests {
         assert_eq!(c.open_sessions(), before - 1);
     }
 
+    /// The eviction acceptance bar: a coordinator with a resident
+    /// watermark of K = 4 sustains 20 (> 4K) concurrently open sessions;
+    /// appends to evicted sessions restore transparently and every
+    /// filtering/closing result is bit-identical to a never-evicted
+    /// control coordinator fed the same splits.
     #[test]
-    fn open_session_limit_is_enforced() {
+    fn watermark_eviction_transparent_restore_bit_identical() {
+        let evicting = Coordinator::new(CoordinatorConfig {
+            resident_watermark: 4,
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        evicting.register_model("ge", gilbert_elliott(GeParams::default()));
+        let control = native_coord(); // default watermark: never evicts
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(0x5711);
+
+        let n = 20usize;
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let a = evicting.stream(StreamRequest::open(i as u64, "ge", 0)).unwrap();
+            let b = control.stream(StreamRequest::open(i as u64, "ge", 0)).unwrap();
+            let StreamReply::Opened { session: sa } = a.reply else { panic!() };
+            let StreamReply::Opened { session: sb } = b.reply else { panic!() };
+            ids.push((sa, sb));
+        }
+        assert_eq!(evicting.open_sessions(), n);
+        assert!(evicting.resident_sessions() <= 4);
+
+        // Round-robin appends: every session is evicted and restored
+        // repeatedly as its turn comes back around.
+        for round in 0..3usize {
+            for (i, &(sa, sb)) in ids.iter().enumerate() {
+                let t = 20 + (i + round) % 13;
+                let chunk = sample(&hmm, t, &mut rng).observations;
+                let ra = evicting
+                    .stream(StreamRequest::append(1, sa, chunk.clone()))
+                    .unwrap();
+                let rb =
+                    control.stream(StreamRequest::append(1, sb, chunk)).unwrap();
+                let StreamReply::Appended { len: la, filtered: fa, .. } = ra.reply
+                else {
+                    panic!()
+                };
+                let StreamReply::Appended { len: lb, filtered: fb, .. } = rb.reply
+                else {
+                    panic!()
+                };
+                assert_eq!(la, lb);
+                assert_eq!(fa, fb, "filtered diverged (session {i} round {round})");
+                assert!(
+                    evicting.resident_sessions() <= 4,
+                    "watermark breached at session {i} round {round}"
+                );
+            }
+        }
+        let snap = evicting.metrics().snapshot();
+        assert!(snap.spills > 0, "eviction never engaged");
+        assert!(snap.restores > 0, "no transparent restore happened");
+
+        // Stat reports residency cheaply (no restore is triggered).
+        let restores_before = snap.restores;
+        let &(sa, _) = ids.first().unwrap();
+        let resp = evicting.stream(StreamRequest::stat(99, sa)).unwrap();
+        let StreamReply::Stats {
+            len, open_sessions, resident_sessions, model, ..
+        } = resp.reply
+        else {
+            panic!("expected Stats")
+        };
+        assert_eq!(model, "ge");
+        assert_eq!(open_sessions, n);
+        assert!(resident_sessions <= 4);
+        assert!(len > 0);
+        assert_eq!(
+            evicting.metrics().snapshot().restores,
+            restores_before,
+            "Stat must not restore"
+        );
+        assert!(evicting.stream(StreamRequest::stat(1, 999_999)).is_err());
+
+        // Closing restores evicted sessions too; posteriors are bitwise
+        // the never-evicted control's.
+        for &(sa, sb) in &ids {
+            let ra = evicting.stream(StreamRequest::close(2, sa)).unwrap();
+            let rb = control.stream(StreamRequest::close(2, sb)).unwrap();
+            let StreamReply::Closed { posterior: pa, .. } = ra.reply else {
+                panic!()
+            };
+            let StreamReply::Closed { posterior: pb, .. } = rb.reply else {
+                panic!()
+            };
+            assert_eq!(pa, pb, "posterior diverged from never-evicted control");
+        }
+        assert_eq!(evicting.open_sessions(), 0);
+        assert_eq!(evicting.resident_sessions(), 0);
+    }
+
+    /// The DoS backstop is independent of the watermark: opens beyond
+    /// `max_open_sessions` get a typed rejection even though eviction
+    /// would have kept them resident-legal.
+    #[test]
+    fn open_session_backstop_is_enforced() {
         let c = Coordinator::new(CoordinatorConfig {
+            resident_watermark: 1,
             max_open_sessions: 2,
             ..CoordinatorConfig::native_only()
         })
@@ -914,6 +1386,203 @@ mod tests {
         c.stream(StreamRequest::append(4, session, vec![0, 1])).unwrap();
         c.stream(StreamRequest::close(5, session)).unwrap();
         assert!(c.stream(StreamRequest::open(6, "ge", 0)).is_ok());
+    }
+
+    /// A close that restores an evicted session and then fails (empty
+    /// session) must not leave residency above the watermark.
+    #[test]
+    fn failed_close_reimposes_the_watermark() {
+        let c = Coordinator::new(CoordinatorConfig {
+            resident_watermark: 1,
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        c.register_model("ge", gilbert_elliott(GeParams::default()));
+        let StreamReply::Opened { session: s1 } =
+            c.stream(StreamRequest::open(1, "ge", 0)).unwrap().reply
+        else {
+            panic!()
+        };
+        let StreamReply::Opened { session: s2 } =
+            c.stream(StreamRequest::open(2, "ge", 0)).unwrap().reply
+        else {
+            panic!()
+        };
+        assert_eq!(c.resident_sessions(), 1, "second open must evict the first");
+
+        // Closing the evicted, still-empty s1 restores it and fails —
+        // the session survives and residency returns under the mark.
+        assert!(c.stream(StreamRequest::close(3, s1)).is_err());
+        assert!(c.resident_sessions() <= 1, "failed close breached watermark");
+
+        // Both sessions remain fully usable afterwards.
+        c.stream(StreamRequest::append(4, s1, vec![0, 1])).unwrap();
+        c.stream(StreamRequest::append(5, s2, vec![1, 0])).unwrap();
+        assert!(c.stream(StreamRequest::close(6, s1)).is_ok());
+        assert!(c.stream(StreamRequest::close(7, s2)).is_ok());
+        assert_eq!(c.open_sessions(), 0);
+    }
+
+    /// Crash recovery end-to-end: a disk-backed coordinator is dropped
+    /// without closing anything; a fresh one on the same directory
+    /// recovers every session from the append-ahead logs (lazily), and
+    /// append → close results are bit-identical to a clean engine run
+    /// over the full concatenated observations.
+    #[test]
+    fn disk_store_crash_recovery_restores_all_sessions() {
+        let dir = crate::store::testutil::tempdir("coord-recover");
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(0xD15C);
+        let mut expected: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+
+        let config = || CoordinatorConfig {
+            resident_watermark: 2,
+            session_store: Some(dir.clone()),
+            checkpoint_every: 40,
+            ..CoordinatorConfig::native_only()
+        };
+        {
+            let c = Coordinator::new(config()).unwrap();
+            c.register_model("ge", hmm.clone());
+            assert_eq!(c.session_store().name(), "disk");
+            for i in 0..6u64 {
+                let resp = c.stream(StreamRequest::open(i, "ge", 0)).unwrap();
+                let StreamReply::Opened { session } = resp.reply else { panic!() };
+                let mut ys = Vec::new();
+                for _ in 0..3 {
+                    let t = 15 + (i as usize % 7);
+                    let chunk = sample(&hmm, t, &mut rng).observations;
+                    c.stream(StreamRequest::append(1, session, chunk.clone()))
+                        .unwrap();
+                    ys.extend_from_slice(&chunk);
+                }
+                expected.insert(session, ys);
+            }
+            assert!(c.resident_sessions() <= 2);
+            assert!(c.metrics().snapshot().spills > 0);
+            // Crash: drop the coordinator without closing anything.
+        }
+
+        // Simulate a torn tail write on one log: recovery must keep
+        // every fully-framed record and drop only the torn tail.
+        let (&torn_id, _) = expected.iter().next().unwrap();
+        let torn_path = dir.join(format!("sess_{torn_id:016x}.log"));
+        let mut bytes = std::fs::read(&torn_path).unwrap();
+        bytes.extend_from_slice(b"00000000000000ff 00"); // truncated header
+        std::fs::write(&torn_path, &bytes).unwrap();
+
+        let c = Coordinator::new(config()).unwrap();
+        c.register_model("ge", hmm.clone());
+        assert_eq!(c.open_sessions(), 0);
+        assert_eq!(c.recover_sessions().unwrap(), 6);
+        assert_eq!(c.open_sessions(), 6);
+        assert_eq!(c.resident_sessions(), 0, "recovery must be lazy");
+        assert_eq!(c.metrics().snapshot().sessions_recovered, 6);
+        // Recovery is idempotent.
+        assert_eq!(c.recover_sessions().unwrap(), 0);
+
+        for (&id, ys) in &expected {
+            // Stat reports the fully-logged length without restoring.
+            let resp = c.stream(StreamRequest::stat(1, id)).unwrap();
+            let StreamReply::Stats { len, resident, .. } = resp.reply else {
+                panic!()
+            };
+            assert_eq!(len, ys.len(), "session {id} lost logged appends");
+            assert!(!resident);
+
+            // Appending restores transparently; close is bit-identical
+            // to a fresh engine run over the concatenated observations.
+            let extra = sample(&hmm, 9, &mut rng).observations;
+            c.stream(StreamRequest::append(2, id, extra.clone())).unwrap();
+            let resp = c.stream(StreamRequest::close(3, id)).unwrap();
+            let StreamReply::Closed { posterior, .. } = resp.reply else {
+                panic!()
+            };
+            let mut full = ys.clone();
+            full.extend_from_slice(&extra);
+            let mut twin = crate::engine::Engine::builder(hmm.clone())
+                .scan_options(
+                    ScanOptions::default()
+                        .with_block(crate::engine::DEFAULT_SESSION_BLOCK),
+                )
+                .build();
+            let want = twin
+                .run(crate::engine::Algorithm::SpPar, &full)
+                .unwrap()
+                .into_posterior()
+                .unwrap();
+            assert_eq!(posterior, want, "session {id} diverged after recovery");
+        }
+        assert_eq!(c.open_sessions(), 0);
+        let snap = c.metrics().snapshot();
+        assert_eq!(snap.restores, 6);
+        assert_eq!(snap.sessions_closed, 6);
+        // Closed sessions are gone from the store too.
+        assert!(c.session_store().recover().unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// New ids never collide with recovered ones.
+    #[test]
+    fn recovered_ids_advance_the_allocator() {
+        let dir = crate::store::testutil::tempdir("coord-ids");
+        let hmm = gilbert_elliott(GeParams::default());
+        let config = || CoordinatorConfig {
+            session_store: Some(dir.clone()),
+            ..CoordinatorConfig::native_only()
+        };
+        let first_ids: Vec<u64> = {
+            let c = Coordinator::new(config()).unwrap();
+            c.register_model("ge", hmm.clone());
+            (0..3)
+                .map(|i| {
+                    let r = c.stream(StreamRequest::open(i, "ge", 0)).unwrap();
+                    let StreamReply::Opened { session } = r.reply else {
+                        panic!()
+                    };
+                    c.stream(StreamRequest::append(9, session, vec![0, 1]))
+                        .unwrap();
+                    session
+                })
+                .collect()
+        };
+        // A *different* model re-registered under the same name must not
+        // adopt the stored sessions (fingerprint mismatch): resume would
+        // mix its rebuilt elements with the old model's summaries.
+        {
+            let c = Coordinator::new(config()).unwrap();
+            c.register_model(
+                "ge",
+                gilbert_elliott(GeParams { q0: 0.011, ..GeParams::default() }),
+            );
+            assert_eq!(
+                c.recover_sessions().unwrap(),
+                0,
+                "recovery bound sessions to a fingerprint-mismatched model"
+            );
+            assert_eq!(c.open_sessions(), 0);
+        }
+
+        let c = Coordinator::new(config()).unwrap();
+        c.register_model("ge", hmm);
+        // Even an open served *before* recover_sessions must not reuse a
+        // stored id (the store seeds the allocator at construction) —
+        // DiskStore::create would otherwise overwrite the crashed
+        // session's durable log.
+        let r = c.stream(StreamRequest::open(6, "ge", 0)).unwrap();
+        let StreamReply::Opened { session: early } = r.reply else { panic!() };
+        assert!(
+            !first_ids.contains(&early),
+            "pre-recovery open {early} collides with a stored session"
+        );
+        assert_eq!(c.recover_sessions().unwrap(), 3);
+        let r = c.stream(StreamRequest::open(7, "ge", 0)).unwrap();
+        let StreamReply::Opened { session } = r.reply else { panic!() };
+        assert!(
+            !first_ids.contains(&session) && session != early,
+            "fresh id {session} collides with a recovered session"
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod serde;
 
 use crate::hmm::Hmm;
 use crate::linalg::Mat;
-use crate::scan::AssocOp;
+use crate::scan::{AssocOp, ElementBuf};
 use crate::semiring::{MaxPlus, Prob};
 
 /// Linear-domain floor guarding renormalization against all-zero products.
@@ -83,6 +83,14 @@ impl AssocOp<SpElement> for SpOp {
 
     // Hot-path overrides (§Perf): double-buffered matmul_into — zero
     // allocation per combine instead of one Mat per combine.
+    fn fold_step(&self, acc: &mut SpElement, e: &SpElement, scratch: &mut SpElement) {
+        crate::linalg::matmul_into::<Prob>(&acc.mat, &e.mat, &mut scratch.mat);
+        let m = scratch.mat.max().max(TINY);
+        scratch.mat.scale(1.0 / m);
+        std::mem::swap(&mut acc.mat, &mut scratch.mat);
+        acc.log_scale += e.log_scale + m.ln();
+    }
+
     fn fold(&self, init: SpElement, elems: &[SpElement]) -> SpElement {
         let mut acc = init;
         let mut tmp = Mat::zeros(self.d, self.d);
@@ -169,6 +177,11 @@ impl AssocOp<MpElement> for MpOp {
     }
 
     // Hot-path overrides (§Perf): see SpOp.
+    fn fold_step(&self, acc: &mut MpElement, e: &MpElement, scratch: &mut MpElement) {
+        crate::linalg::matmul_into::<MaxPlus>(&acc.mat, &e.mat, &mut scratch.mat);
+        std::mem::swap(&mut acc.mat, &mut scratch.mat);
+    }
+
     fn fold(&self, init: MpElement, elems: &[MpElement]) -> MpElement {
         let mut acc = init;
         let mut tmp = Mat::zeros(self.d, self.d);
@@ -365,6 +378,67 @@ impl AssocOp<BsElement> for BsFilterOp {
         g.iter_mut().for_each(|v| *v /= m);
         BsElement { f, g, log_scale: a.log_scale + b.log_scale + m.ln() }
     }
+
+    // Allocation-free streaming step (see SpOp::fold_step): identical
+    // arithmetic to `combine`, writing into `scratch` and swapping.
+    fn fold_step(&self, acc: &mut BsElement, e: &BsElement, scratch: &mut BsElement) {
+        let d = self.d;
+        for i in 0..d {
+            let mut s = 0.0;
+            for j in 0..d {
+                s += acc.f[(i, j)] * e.g[j];
+            }
+            let s_safe = s.max(TINY);
+            for k in 0..d {
+                let mut w = 0.0;
+                for j in 0..d {
+                    w += acc.f[(i, j)] * e.g[j] * e.f[(j, k)];
+                }
+                scratch.f[(i, k)] = w / s_safe;
+            }
+            scratch.g[i] = acc.g[i] * s;
+        }
+        let m = scratch.g.iter().fold(0.0f64, |m, &v| m.max(v)).max(TINY);
+        scratch.g.iter_mut().for_each(|v| *v /= m);
+        scratch.log_scale = acc.log_scale + e.log_scale + m.ln();
+        std::mem::swap(acc, scratch);
+    }
+}
+
+// ===========================================================================
+// In-place overwrite capability (scan::ElementBuf) — the buffer-reuse
+// contract of the workspace copy helpers and the checkpointed suffix
+// windows.
+// ===========================================================================
+
+impl ElementBuf for SpElement {
+    fn shape_key(&self) -> (usize, usize) {
+        (self.mat.rows(), self.mat.cols())
+    }
+    fn overwrite_from(&mut self, src: &Self) {
+        self.mat.data_mut().copy_from_slice(src.mat.data());
+        self.log_scale = src.log_scale;
+    }
+}
+
+impl ElementBuf for MpElement {
+    fn shape_key(&self) -> (usize, usize) {
+        (self.mat.rows(), self.mat.cols())
+    }
+    fn overwrite_from(&mut self, src: &Self) {
+        self.mat.data_mut().copy_from_slice(src.mat.data());
+    }
+}
+
+impl ElementBuf for BsElement {
+    fn shape_key(&self) -> (usize, usize) {
+        (self.f.rows(), self.f.cols())
+    }
+    fn overwrite_from(&mut self, src: &Self) {
+        self.f.data_mut().copy_from_slice(src.f.data());
+        self.g.copy_from_slice(&src.g);
+        self.log_scale = src.log_scale;
+    }
 }
 
 // ===========================================================================
@@ -534,6 +608,60 @@ pub fn bs_element_chain(hmm: &Hmm, ys: &[u32]) -> Vec<BsElement> {
     let mut out = Vec::new();
     bs_element_chain_into(hmm, ys, &mut out);
     out
+}
+
+/// Per-symbol Bayesian-filtering element prototypes for steps t ≥ 1
+/// (see [`sp_element_protos`] for the caching rationale) — bitwise the
+/// interior elements of [`bs_element_chain`]. Streaming Bayes sessions
+/// cache this vector once and clone per append.
+pub fn bs_element_protos(hmm: &Hmm) -> Vec<BsElement> {
+    let d = hmm.num_states();
+    let pi = hmm.transition();
+    (0..hmm.num_symbols())
+        .map(|y| {
+            let e = hmm.emission_col(y as u32);
+            let mut f = Mat::zeros(d, d);
+            let mut g = vec![0.0; d];
+            for i in 0..d {
+                let mut s = 0.0;
+                for j in 0..d {
+                    let w = pi[(i, j)] * e[j];
+                    f[(i, j)] = w;
+                    s += w;
+                }
+                let s_safe = s.max(TINY);
+                for j in 0..d {
+                    f[(i, j)] /= s_safe;
+                }
+                g[i] = s;
+            }
+            let m = g.iter().fold(0.0f64, |m, &v| m.max(v)).max(TINY);
+            g.iter_mut().for_each(|v| *v /= m);
+            BsElement { f, g, log_scale: m.ln() }
+        })
+        .collect()
+}
+
+/// The t = 0 Bayesian filtering element (rows = posterior of x_0,
+/// ĝ = p(y_0) constant) — bitwise the first element of
+/// [`bs_element_chain`].
+pub fn bs_prior_element(hmm: &Hmm, y: u32) -> BsElement {
+    let d = hmm.num_states();
+    let e = hmm.emission_col(y);
+    let mut w: Vec<f64> = (0..d).map(|j| hmm.prior()[j] * e[j]).collect();
+    let p_y0: f64 = w.iter().sum();
+    let norm = p_y0.max(TINY);
+    w.iter_mut().for_each(|v| *v /= norm);
+    let mut f = Mat::zeros(d, d);
+    for r in 0..d {
+        for c in 0..d {
+            f[(r, c)] = w[c];
+        }
+    }
+    let mut g = vec![p_y0; d];
+    let m = g.iter().fold(0.0f64, |m, &v| m.max(v)).max(TINY);
+    g.iter_mut().for_each(|v| *v /= m);
+    BsElement { f, g, log_scale: m.ln() }
 }
 
 /// [`bs_element_chain`] writing into a reusable buffer (see
@@ -836,6 +964,52 @@ mod tests {
         for (t, &y) in ys.iter().enumerate().skip(1) {
             assert_eq!(mp[t], mprotos[y as usize], "mp t={t}");
         }
+        let bs = bs_element_chain(&h, &ys);
+        let bprotos = bs_element_protos(&h);
+        assert_eq!(bs[0], bs_prior_element(&h, ys[0]));
+        for (t, &y) in ys.iter().enumerate().skip(1) {
+            assert_eq!(bs[t], bprotos[y as usize], "bs t={t}");
+        }
+    }
+
+    #[test]
+    fn fold_step_matches_fold_bitwise() {
+        // The scratch-carrying step must be bitwise one step of `fold`
+        // for every element family (the checkpoint push contract).
+        use crate::scan::AssocOp;
+        let mut runner = Runner::new("fold-step");
+        runner.run(30, |r| {
+            let d = 2 + r.below(4) as usize;
+
+            let sp_op = SpOp { d };
+            let (a, b) = (rand_sp(r, d), rand_sp(r, d));
+            let want = sp_op.fold(a.clone(), std::slice::from_ref(&b));
+            let mut acc = a;
+            let mut scratch = sp_op.identity();
+            sp_op.fold_step(&mut acc, &b, &mut scratch);
+            assert_eq!(acc, want, "sp fold_step");
+
+            let mp_op = MpOp { d };
+            let (a, b) = (rand_mp(r, d), rand_mp(r, d));
+            let want = mp_op.fold(a.clone(), std::slice::from_ref(&b));
+            let mut acc = a;
+            let mut scratch = mp_op.identity();
+            mp_op.fold_step(&mut acc, &b, &mut scratch);
+            assert_eq!(acc, want, "mp fold_step");
+
+            let bs_op = BsFilterOp { d };
+            let mk = |r: &mut Xoshiro256StarStar| BsElement {
+                f: Mat::from_vec(d, d, gen::stochastic_matrix(r, d)),
+                g: gen::prob_vector(r, d),
+                log_scale: r.uniform(-2.0, 2.0),
+            };
+            let (a, b) = (mk(r), mk(r));
+            let want = bs_op.fold(a.clone(), std::slice::from_ref(&b));
+            let mut acc = a;
+            let mut scratch = bs_op.identity();
+            bs_op.fold_step(&mut acc, &b, &mut scratch);
+            assert_eq!(acc, want, "bs fold_step");
+        });
     }
 
     #[test]

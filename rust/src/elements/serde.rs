@@ -103,6 +103,33 @@ pub fn bs_element_from_json(v: &Json) -> Result<BsElement> {
     Ok(BsElement { f, g, log_scale })
 }
 
+/// Reject a deserialized sum-product element whose matrix does not
+/// match a D-state model — snapshot restore and the session store both
+/// gate on this before the element reaches a scan.
+pub fn check_sp_shape(e: &SpElement, d: usize) -> Result<()> {
+    if e.mat.rows() != d || e.mat.cols() != d {
+        return Err(Error::invalid_request(format!(
+            "serialized element: {}x{} matrix for a {d}-state model",
+            e.mat.rows(),
+            e.mat.cols()
+        )));
+    }
+    Ok(())
+}
+
+/// [`check_sp_shape`] for the Bayesian-filtering element family.
+pub fn check_bs_shape(e: &BsElement, d: usize) -> Result<()> {
+    if e.f.rows() != d || e.f.cols() != d || e.g.len() != d {
+        return Err(Error::invalid_request(format!(
+            "serialized bs element: {}x{} f / {}-long g for a {d}-state model",
+            e.f.rows(),
+            e.f.cols(),
+            e.g.len()
+        )));
+    }
+    Ok(())
+}
+
 fn f64_vec_from_json(v: &Json, what: &str) -> Result<Vec<f64>> {
     v.as_arr()
         .ok_or_else(|| Error::invalid_request(format!("{what} not an array")))?

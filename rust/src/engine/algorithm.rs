@@ -124,10 +124,11 @@ impl Algorithm {
     /// incrementally: the parallel-scan formulations whose element
     /// algebra is checkpointable — `SpPar` behind
     /// `Session::filtered`/`smoothed_lag`/`finish`, `MpPar` behind
-    /// `map_lag`/`finish_map`. The Bayesian-filter elements compose the
-    /// same way but have no session surface yet (ROADMAP open item).
+    /// `map_lag`/`finish_map`, and `BsPar` behind
+    /// `SessionKind::Bayes` sessions (`filtered`/`finish`; fixed-lag
+    /// queries stay unsupported for that family).
     pub fn supports_streaming(self) -> bool {
-        matches!(self, Algorithm::SpPar | Algorithm::MpPar)
+        matches!(self, Algorithm::SpPar | Algorithm::MpPar | Algorithm::BsPar)
     }
 
     /// Whether this is a parallel-scan formulation (O(log T) span).
@@ -220,7 +221,9 @@ mod tests {
         }
         assert!(Algorithm::SpPar.supports_streaming());
         assert!(Algorithm::MpPar.supports_streaming());
+        assert!(Algorithm::BsPar.supports_streaming());
         assert!(!Algorithm::SpSeq.supports_streaming());
+        assert!(!Algorithm::BsSeq.supports_streaming());
         assert!(!Algorithm::BaumWelch.supports_streaming());
     }
 

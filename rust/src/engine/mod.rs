@@ -40,7 +40,7 @@ mod tests;
 pub use algorithm::{Algorithm, Task};
 pub use backend::{decode_core_outputs, Backend, NativeBackend, XlaBackend};
 pub use session::{
-    Filtered, LagDecoded, LagSmoothed, Session, SessionOptions,
+    Filtered, LagDecoded, LagSmoothed, Session, SessionKind, SessionOptions,
     DEFAULT_SESSION_BLOCK,
 };
 // Re-exported so custom `Backend` implementations outside this module

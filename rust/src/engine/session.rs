@@ -19,7 +19,10 @@
 //! Cost model (T pushed so far, block length B, lag L):
 //!
 //! * `push` of k observations — k element builds + k fold steps, plus
-//!   one carry combine per completed block: O(k · D³).
+//!   one carry combine per completed block: O(k · D³). Steady-state
+//!   appends are allocation-free beyond the retained chain element —
+//!   the fold step runs through the scan's op-owned scratch
+//!   ([`AssocOp::fold_step`](crate::scan::AssocOp::fold_step)).
 //! * `filtered` — one combine: O(D³).
 //! * `smoothed_lag(L)` / `map_lag(L)` — forward suffix rescan of width
 //!   ≤ L + B from the covering checkpoint, backward parallel scan over
@@ -30,26 +33,40 @@
 //!   under the same scan options (`finish_map` ↔ `Algorithm::MpPar`) —
 //!   property-tested over random push splits in `engine::tests`.
 //!
+//! Sessions come in two element families ([`SessionKind`]): the default
+//! sum-product sessions above, and *Bayesian filtering* sessions
+//! (`SessionKind::Bayes`) that stream the BS-Par element algebra of
+//! Särkkä & García-Fernández — `push`/`filtered`/`finish` only, with
+//! `finish` bit-identical to `Engine::run(Algorithm::BsPar, ..)`;
+//! fixed-lag windows are not implemented for that family and return a
+//! typed error.
+//!
 //! Sessions snapshot to JSON ([`Session::snapshot`] /
 //! [`Engine::resume_session`]): observations plus the serialized block
 //! summaries, so a restore re-derives carries in O(T/B) combines and
-//! skips the O(T · D³) refold.
+//! skips the O(T · D³) refold. The snapshot doubles as the eviction
+//! payload of the coordinator's session store (`store::SessionStore`):
+//! a spilled session restores bit-identically from it.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::elements::serde::{sp_element_from_json, sp_element_to_json};
+use crate::elements::serde::{
+    bs_element_from_json, bs_element_to_json, check_bs_shape, check_sp_shape,
+    sp_element_from_json, sp_element_to_json,
+};
 use crate::elements::{
-    mp_element_protos, mp_prior_element, mp_terminal, sp_element_chain,
-    sp_element_protos, sp_prior_element, sp_terminal, MpElement, MpOp,
-    SpElement, SpOp,
+    bs_element_chain, bs_element_protos, bs_prior_element, mp_element_protos,
+    mp_prior_element, mp_terminal, sp_element_chain, sp_element_protos,
+    sp_prior_element, sp_terminal, BsElement, BsFilterOp, MpElement, MpOp,
+    SpElement, SpOp, TINY,
 };
 use crate::error::{Error, Result};
 use crate::hmm::Hmm;
 use crate::inference::{
-    apply_growth_policy, copy_elements_shifted, mp_map_from_scans,
-    sp_posterior_from_scans, streaming, ElementBuf, MapEstimate, Posterior,
-    Workspace,
+    apply_growth_policy, bs_posterior_from_forward, copy_elements_shifted,
+    mp_map_from_scans, sp_posterior_from_scans, streaming, ElementBuf,
+    MapEstimate, Posterior, Workspace,
 };
 use crate::jsonx::Json;
 use crate::linalg::normalize_sum;
@@ -61,16 +78,50 @@ use super::Engine;
 /// the engine's scan options pin one.
 pub const DEFAULT_SESSION_BLOCK: usize = 256;
 
+/// Which element family a session streams (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SessionKind {
+    /// Sum-product scan elements: filtering, fixed-lag smoothing, exact
+    /// finish (plus the lazy max-product track for MAP queries).
+    #[default]
+    SumProduct,
+    /// Bayesian filtering elements (BS-Par): `push`/`filtered`/`finish`
+    /// only; fixed-lag and MAP queries return a typed error.
+    Bayes,
+}
+
+impl SessionKind {
+    /// Stable snapshot/wire name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SessionKind::SumProduct => "sp",
+            SessionKind::Bayes => "bs",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn parse(s: &str) -> Option<SessionKind> {
+        match s {
+            "sp" => Some(SessionKind::SumProduct),
+            "bs" => Some(SessionKind::Bayes),
+            _ => None,
+        }
+    }
+}
+
 /// Options for [`Engine::open_session`].
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct SessionOptions {
     /// Checkpoint block length B. `None` inherits the engine's pinned
     /// [`ScanOptions::block`] when set, else [`DEFAULT_SESSION_BLOCK`].
     pub block: Option<usize>,
     /// Maintain the max-product scan from the first push. Off by
     /// default: the first MAP query performs an O(T) catch-up instead,
-    /// and smoothing-only sessions pay nothing.
+    /// and smoothing-only sessions pay nothing. Ignored for
+    /// [`SessionKind::Bayes`] sessions (no max-product track).
     pub track_map: bool,
+    /// Element family (default: sum-product).
+    pub kind: SessionKind,
 }
 
 /// Filtering state after `step` observations: p(x_step | y_{1:step})
@@ -107,6 +158,22 @@ pub struct LagDecoded {
     pub rescan_width: usize,
 }
 
+/// Sum-product track: the checkpointed forward scan plus the cached
+/// per-symbol element prototypes.
+struct SpTrack {
+    scan: CheckpointedScan<SpElement, SpOp>,
+    protos: Vec<SpElement>,
+}
+
+impl SpTrack {
+    fn new(hmm: &Hmm, block: usize) -> Self {
+        Self {
+            scan: CheckpointedScan::new(SpOp { d: hmm.num_states() }, block),
+            protos: sp_element_protos(hmm),
+        }
+    }
+}
+
 /// Lazily-enabled max-product tracking state.
 struct MpTrack {
     scan: CheckpointedScan<MpElement, MpOp>,
@@ -122,14 +189,32 @@ impl MpTrack {
     }
 }
 
+/// Bayesian filtering track (BS-Par element algebra).
+struct BsTrack {
+    scan: CheckpointedScan<BsElement, BsFilterOp>,
+    protos: Vec<BsElement>,
+}
+
+impl BsTrack {
+    fn new(hmm: &Hmm, block: usize) -> Self {
+        Self {
+            scan: CheckpointedScan::new(BsFilterOp { d: hmm.num_states() }, block),
+            protos: bs_element_protos(hmm),
+        }
+    }
+}
+
 /// A long-lived streaming inference session (see the module docs for
 /// the state diagram and cost model). Created by [`Engine::open_session`].
 pub struct Session {
     hmm: Arc<Hmm>,
     scan: ScanOptions,
     ys: Vec<u32>,
-    sp: CheckpointedScan<SpElement, SpOp>,
-    sp_protos: Vec<SpElement>,
+    kind: SessionKind,
+    /// Some iff `kind == SumProduct`.
+    sp: Option<SpTrack>,
+    /// Some iff `kind == Bayes`.
+    bs: Option<BsTrack>,
     mp: Option<MpTrack>,
     ws: Workspace,
 }
@@ -138,18 +223,20 @@ impl Engine {
     /// Open a streaming session against this engine's model and scan
     /// options. The session pins the chunked engine and its block
     /// length, so [`Session::finish`] is bit-identical to
-    /// [`Engine::run`](Engine::run) with [`Algorithm::SpPar`] on an
-    /// engine configured with [`Session::scan_options`] — in particular
-    /// on *this* engine when its own options already pin the same block.
+    /// [`Engine::run`](Engine::run) with [`Algorithm::SpPar`] (or
+    /// [`Algorithm::BsPar`] for Bayes sessions) on an engine configured
+    /// with [`Session::scan_options`] — in particular on *this* engine
+    /// when its own options already pin the same block.
     ///
     /// [`Algorithm::SpPar`]: super::Algorithm::SpPar
+    /// [`Algorithm::BsPar`]: super::Algorithm::BsPar
     pub fn open_session(&self, opts: SessionOptions) -> Session {
         let block = opts
             .block
             .or(self.scan.block)
             .unwrap_or(DEFAULT_SESSION_BLOCK)
             .max(1);
-        Session::new(Arc::clone(&self.hmm), self.scan, block, opts.track_map)
+        Session::new(Arc::clone(&self.hmm), self.scan, block, opts)
     }
 
     /// Restore a session from a [`Session::snapshot`]. Observations are
@@ -163,6 +250,15 @@ impl Engine {
                 "session snapshot: unsupported or missing version (expected 1)",
             ));
         }
+        let kind = match snap.get("kind") {
+            Json::Null => SessionKind::SumProduct, // pre-kind snapshots
+            v => v
+                .as_str()
+                .and_then(SessionKind::parse)
+                .ok_or_else(|| {
+                    Error::invalid_request("session snapshot: unknown 'kind'")
+                })?,
+        };
         let block = snap
             .get("block")
             .as_usize()
@@ -185,58 +281,100 @@ impl Engine {
         if !ys.is_empty() {
             self.hmm.check_observations(&ys)?;
         }
-        let summaries: Vec<SpElement> = snap
-            .get("sp_summaries")
-            .as_arr()
-            .ok_or_else(|| Error::invalid_request("session snapshot: 'sp_summaries'"))?
-            .iter()
-            .map(sp_element_from_json)
-            .collect::<Result<_>>()?;
-        let tail = match snap.get("sp_tail") {
-            Json::Null => None,
-            v => Some(sp_element_from_json(v)?),
-        };
         let d = self.hmm.num_states();
-        for e in summaries.iter().chain(tail.as_ref()) {
-            if e.mat.rows() != d || e.mat.cols() != d {
-                return Err(Error::invalid_request(format!(
-                    "session snapshot: {}x{} summary for a {d}-state model",
-                    e.mat.rows(),
-                    e.mat.cols()
-                )));
-            }
-        }
 
-        let elems = sp_element_chain(&self.hmm, &ys);
-        let sp = CheckpointedScan::from_parts(SpOp { d }, block, elems, summaries, tail)?;
         let mut session = Session {
             hmm: Arc::clone(&self.hmm),
             scan: Session::pinned_scan(self.scan, block),
             ys,
-            sp,
-            sp_protos: sp_element_protos(&self.hmm),
+            kind,
+            sp: None,
+            bs: None,
             mp: None,
             ws: Workspace::default(),
         };
-        if track_map {
-            session.ensure_mp();
+        match kind {
+            SessionKind::SumProduct => {
+                let summaries: Vec<SpElement> = snap
+                    .get("sp_summaries")
+                    .as_arr()
+                    .ok_or_else(|| {
+                        Error::invalid_request("session snapshot: 'sp_summaries'")
+                    })?
+                    .iter()
+                    .map(sp_element_from_json)
+                    .collect::<Result<_>>()?;
+                let tail = match snap.get("sp_tail") {
+                    Json::Null => None,
+                    v => Some(sp_element_from_json(v)?),
+                };
+                for e in summaries.iter().chain(tail.as_ref()) {
+                    check_sp_shape(e, d)?;
+                }
+                let elems = sp_element_chain(&self.hmm, &session.ys);
+                let scan = CheckpointedScan::from_parts(
+                    SpOp { d },
+                    block,
+                    elems,
+                    summaries,
+                    tail,
+                )?;
+                session.sp =
+                    Some(SpTrack { scan, protos: sp_element_protos(&self.hmm) });
+                if track_map {
+                    session.ensure_mp();
+                }
+            }
+            SessionKind::Bayes => {
+                let summaries: Vec<BsElement> = snap
+                    .get("bs_summaries")
+                    .as_arr()
+                    .ok_or_else(|| {
+                        Error::invalid_request("session snapshot: 'bs_summaries'")
+                    })?
+                    .iter()
+                    .map(bs_element_from_json)
+                    .collect::<Result<_>>()?;
+                let tail = match snap.get("bs_tail") {
+                    Json::Null => None,
+                    v => Some(bs_element_from_json(v)?),
+                };
+                for e in summaries.iter().chain(tail.as_ref()) {
+                    check_bs_shape(e, d)?;
+                }
+                let elems = bs_element_chain(&self.hmm, &session.ys);
+                let scan = CheckpointedScan::from_parts(
+                    BsFilterOp { d },
+                    block,
+                    elems,
+                    summaries,
+                    tail,
+                )?;
+                session.bs =
+                    Some(BsTrack { scan, protos: bs_element_protos(&self.hmm) });
+            }
         }
         Ok(session)
     }
 }
 
 impl Session {
-    fn new(hmm: Arc<Hmm>, scan: ScanOptions, block: usize, track_map: bool) -> Self {
-        let d = hmm.num_states();
-        let sp = CheckpointedScan::new(SpOp { d }, block);
-        let sp_protos = sp_element_protos(&hmm);
-        let mp = track_map.then(|| MpTrack::new(&hmm, block));
+    fn new(hmm: Arc<Hmm>, scan: ScanOptions, block: usize, opts: SessionOptions) -> Self {
+        let (sp, bs, mp) = match opts.kind {
+            SessionKind::SumProduct => (
+                Some(SpTrack::new(&hmm, block)),
+                None,
+                opts.track_map.then(|| MpTrack::new(&hmm, block)),
+            ),
+            SessionKind::Bayes => (None, Some(BsTrack::new(&hmm, block)), None),
+        };
         Self {
             scan: Self::pinned_scan(scan, block),
             hmm,
             ys: Vec::new(),
+            kind: opts.kind,
             sp,
-            sp_protos,
+            bs,
             mp,
             ws: Workspace::default(),
         }
@@ -259,9 +397,18 @@ impl Session {
         self.ys.is_empty()
     }
 
+    /// The element family this session streams.
+    pub fn kind(&self) -> SessionKind {
+        self.kind
+    }
+
     /// Checkpoint block length B.
     pub fn block(&self) -> usize {
-        self.sp.block()
+        match (&self.sp, &self.bs) {
+            (Some(sp), _) => sp.scan.block(),
+            (_, Some(bs)) => bs.scan.block(),
+            _ => unreachable!("session has exactly one primary track"),
+        }
     }
 
     /// The scan options [`finish`](Self::finish) runs under — configure
@@ -277,10 +424,10 @@ impl Session {
     }
 
     /// Ingest observations: O(k·D³) fold work — per observation, one
-    /// retained chain element plus one transient D×D scratch inside the
-    /// operator's fold step (a scratch-carrying fold API is a ROADMAP
-    /// follow-on). Rejects out-of-range symbols atomically (no partial
-    /// append); an empty slice is a no-op.
+    /// retained chain element plus one scratch-carried fold step (no
+    /// transient allocation; see `scan::CheckpointedScan::push`).
+    /// Rejects out-of-range symbols atomically (no partial append); an
+    /// empty slice is a no-op.
     pub fn push(&mut self, obs: &[u32]) -> Result<()> {
         if obs.is_empty() {
             return Ok(());
@@ -288,11 +435,29 @@ impl Session {
         self.hmm.check_observations(obs)?;
         for &y in obs {
             let k = self.ys.len();
-            self.sp
-                .push(element_at(k, y, || sp_prior_element(&self.hmm, y), &self.sp_protos));
+            if let Some(sp) = &mut self.sp {
+                sp.scan.push(element_at(
+                    k,
+                    y,
+                    || sp_prior_element(&self.hmm, y),
+                    &sp.protos,
+                ));
+            }
+            if let Some(bs) = &mut self.bs {
+                bs.scan.push(element_at(
+                    k,
+                    y,
+                    || bs_prior_element(&self.hmm, y),
+                    &bs.protos,
+                ));
+            }
             if let Some(mp) = &mut self.mp {
-                mp.scan
-                    .push(element_at(k, y, || mp_prior_element(&self.hmm, y), &mp.protos));
+                mp.scan.push(element_at(
+                    k,
+                    y,
+                    || mp_prior_element(&self.hmm, y),
+                    &mp.protos,
+                ));
             }
             self.ys.push(y);
         }
@@ -300,27 +465,49 @@ impl Session {
     }
 
     /// The current filtering marginal p(x_t | y_{1:t}) and running
-    /// log-likelihood — one combine off the checkpoint state.
+    /// log-likelihood — one combine off the checkpoint state, for either
+    /// element family.
     pub fn filtered(&self) -> Result<Filtered> {
         self.check_nonempty()?;
-        let prefix = self.sp.prefix();
-        let mut probs: Vec<f64> = prefix.mat.row(0).to_vec();
-        let sum = normalize_sum(&mut probs);
-        let log_likelihood = prefix.log_scale + sum.max(f64::MIN_POSITIVE).ln();
-        Ok(Filtered { probs, log_likelihood, step: self.ys.len() })
+        let step = self.ys.len();
+        match (&self.sp, &self.bs) {
+            (Some(sp), _) => {
+                let prefix = sp.scan.prefix();
+                let mut probs: Vec<f64> = prefix.mat.row(0).to_vec();
+                let sum = normalize_sum(&mut probs);
+                let log_likelihood =
+                    prefix.log_scale + sum.max(f64::MIN_POSITIVE).ln();
+                Ok(Filtered { probs, log_likelihood, step })
+            }
+            (_, Some(bs)) => {
+                // Row 0 of f is p(x_t | y_{1:t}) once the prior element
+                // is absorbed; ĝ is constant in x_0 = rescaled p(y_{1:t}).
+                let prefix = bs.scan.prefix();
+                let mut probs: Vec<f64> = prefix.f.row(0).to_vec();
+                normalize_sum(&mut probs);
+                let log_likelihood =
+                    prefix.log_scale + prefix.g[0].max(TINY).ln();
+                Ok(Filtered { probs, log_likelihood, step })
+            }
+            _ => unreachable!("session has exactly one primary track"),
+        }
     }
 
     /// Fixed-lag smoothing: exact marginals p(x_k | y_{1:t}) for the
     /// last `lag` steps (fewer when the session is younger), via a
     /// forward suffix rescan from the covering checkpoint and a parallel
     /// backward scan over the window only — O((lag + B)·D³).
+    /// Sum-product sessions only.
     pub fn smoothed_lag(&mut self, lag: usize) -> Result<LagSmoothed> {
         self.check_nonempty()?;
+        let Some(sp) = self.sp.as_ref() else {
+            return Err(bayes_unsupported("smoothed_lag"));
+        };
         let d = self.hmm.num_states();
         let sb = &mut self.ws.stream;
         let win = lag_window(
-            &self.sp,
-            &self.sp_protos,
+            &sp.scan,
+            &sp.protos,
             sp_terminal(d),
             &self.ys,
             lag,
@@ -347,9 +534,13 @@ impl Session {
     /// max-product analogue of [`smoothed_lag`](Self::smoothed_lag)).
     /// The first call on a session opened without
     /// [`SessionOptions::track_map`] replays the history into the
-    /// max-product scan (O(T); incremental afterwards).
+    /// max-product scan (O(T); incremental afterwards). Sum-product
+    /// sessions only.
     pub fn map_lag(&mut self, lag: usize) -> Result<LagDecoded> {
         self.check_nonempty()?;
+        if self.sp.is_none() {
+            return Err(bayes_unsupported("map_lag"));
+        }
         self.ensure_mp();
         let d = self.hmm.num_states();
         let mp = self.mp.as_ref().expect("ensure_mp");
@@ -381,16 +572,29 @@ impl Session {
     }
 
     /// The exact full-sequence smoothing posterior — bit-identical to
-    /// `Engine::run(Algorithm::SpPar, ..)` under
+    /// `Engine::run(Algorithm::SpPar, ..)` (sum-product sessions) or
+    /// `Engine::run(Algorithm::BsPar, ..)` (Bayes sessions) under
     /// [`scan_options`](Self::scan_options). The forward scan comes from
     /// the checkpoints (phase 3 only — half the combines of a cold run);
-    /// the backward scan is unavoidable O(T). The session stays usable:
+    /// the backward pass is unavoidable O(T). The session stays usable:
     /// more pushes may follow.
     pub fn finish(&mut self) -> Result<Posterior> {
         self.check_nonempty()?;
         let d = self.hmm.num_states();
+        if let Some(bs) = &self.bs {
+            // BS-Par replay: checkpointed forward materialization, then
+            // the shared RTS backward pass.
+            bs.scan.materialize_into(&mut self.ws.bs.elems, self.scan);
+            return Ok(bs_posterior_from_forward(
+                &self.hmm,
+                &self.ws.bs.elems,
+                self.scan,
+                &mut self.ws.bs.rts,
+            ));
+        }
+        let sp = self.sp.as_ref().expect("sp track");
         materialize_full(
-            &self.sp,
+            &sp.scan,
             sp_terminal(d),
             self.scan,
             &mut self.ws.sp.fwd,
@@ -402,9 +606,12 @@ impl Session {
 
     /// The exact full-sequence MAP estimate — bit-identical to
     /// `Engine::run(Algorithm::MpPar, ..)` under
-    /// [`scan_options`](Self::scan_options).
+    /// [`scan_options`](Self::scan_options). Sum-product sessions only.
     pub fn finish_map(&mut self) -> Result<MapEstimate> {
         self.check_nonempty()?;
+        if self.sp.is_none() {
+            return Err(bayes_unsupported("finish_map"));
+        }
         self.ensure_mp();
         let d = self.hmm.num_states();
         let mp = self.mp.as_ref().expect("ensure_mp");
@@ -419,28 +626,49 @@ impl Session {
         Ok(mp_map_from_scans(d, &self.ws.mp.fwd, &self.ws.mp.bwd))
     }
 
-    /// Export the session as JSON: observations, options, and the
-    /// sum-product block summaries (exact element serialization — see
+    /// Export the session as JSON: observations, options, and the block
+    /// summaries of the primary track (exact element serialization — see
     /// `elements::serde`), so [`Engine::resume_session`] restores
     /// without refolding. The max-product track, when enabled, is
-    /// rebuilt by replay on resume.
+    /// rebuilt by replay on resume. This is also the eviction payload of
+    /// the coordinator's session store.
     pub fn snapshot(&self) -> Json {
         let mut obj = BTreeMap::new();
         obj.insert("version".to_string(), Json::Num(1.0));
-        obj.insert("block".to_string(), Json::Num(self.sp.block() as f64));
+        obj.insert("kind".to_string(), Json::Str(self.kind.name().to_string()));
+        obj.insert("block".to_string(), Json::Num(self.block() as f64));
         obj.insert("track_map".to_string(), Json::Bool(self.mp.is_some()));
         obj.insert(
             "ys".to_string(),
             Json::Arr(self.ys.iter().map(|&y| Json::Num(y as f64)).collect()),
         );
-        obj.insert(
-            "sp_summaries".to_string(),
-            Json::Arr(self.sp.summaries().iter().map(sp_element_to_json).collect()),
-        );
-        obj.insert(
-            "sp_tail".to_string(),
-            self.sp.tail_acc().map_or(Json::Null, sp_element_to_json),
-        );
+        match (&self.sp, &self.bs) {
+            (Some(sp), _) => {
+                obj.insert(
+                    "sp_summaries".to_string(),
+                    Json::Arr(
+                        sp.scan.summaries().iter().map(sp_element_to_json).collect(),
+                    ),
+                );
+                obj.insert(
+                    "sp_tail".to_string(),
+                    sp.scan.tail_acc().map_or(Json::Null, sp_element_to_json),
+                );
+            }
+            (_, Some(bs)) => {
+                obj.insert(
+                    "bs_summaries".to_string(),
+                    Json::Arr(
+                        bs.scan.summaries().iter().map(bs_element_to_json).collect(),
+                    ),
+                );
+                obj.insert(
+                    "bs_tail".to_string(),
+                    bs.scan.tail_acc().map_or(Json::Null, bs_element_to_json),
+                );
+            }
+            _ => unreachable!("session has exactly one primary track"),
+        }
         Json::Obj(obj)
     }
 
@@ -450,11 +678,14 @@ impl Session {
         if self.mp.is_some() {
             return;
         }
-        let mut track = MpTrack::new(&self.hmm, self.sp.block());
+        let mut track = MpTrack::new(&self.hmm, self.block());
         for (k, &y) in self.ys.iter().enumerate() {
-            track
-                .scan
-                .push(element_at(k, y, || mp_prior_element(&self.hmm, y), &track.protos));
+            track.scan.push(element_at(
+                k,
+                y,
+                || mp_prior_element(&self.hmm, y),
+                &track.protos,
+            ));
         }
         self.mp = Some(track);
     }
@@ -469,9 +700,19 @@ impl Session {
     }
 }
 
+/// The typed rejection for queries the Bayesian element family does not
+/// serve (fixed-lag windows and MAP tracks need the potential-based
+/// elements).
+fn bayes_unsupported(what: &str) -> Error {
+    Error::invalid_request(format!(
+        "bayes (BS-Par) sessions support push/filtered/finish/snapshot only: \
+         {what} is not implemented for the Bayesian element family"
+    ))
+}
+
 /// The chain element for absolute step `k`: the prior element at k = 0,
 /// a prototype clone afterwards — the single definition every append
-/// path (sp, mp, replay) shares, since the bit-identity contract
+/// path (sp, bs, mp, replay) shares, since the bit-identity contract
 /// depends on them agreeing with the one-shot chain builders.
 fn element_at<E: Clone>(
     k: usize,

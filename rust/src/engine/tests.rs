@@ -15,7 +15,8 @@ use crate::runtime::{ArtifactExec, Manifest, Value};
 use crate::scan::ScanOptions;
 
 use super::{
-    Algorithm, Engine, EngineOutput, NativeBackend, SessionOptions, XlaBackend,
+    Algorithm, Engine, EngineOutput, NativeBackend, SessionKind, SessionOptions,
+    XlaBackend,
 };
 use crate::proptestx::Runner;
 
@@ -444,6 +445,165 @@ fn session_snapshot_resume_is_bit_identical() {
     // Unknown snapshot versions are rejected up front.
     let future = crate::jsonx::Json::parse(r#"{"version": 2, "block": 8}"#).unwrap();
     assert!(engine.resume_session(&future).is_err());
+}
+
+/// Bayes-kind sessions stream the BS-Par element algebra: any split of
+/// a sequence into random pushes yields `finish()` bit-identical to the
+/// one-shot `Engine::run(BsPar, ..)` under the same scan options.
+#[test]
+fn bayes_session_finish_bit_identical_over_random_push_splits() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let mut runner = Runner::new("bayes-session-splits");
+    runner.run(10, |r| {
+        let t = 1 + r.below(400) as usize;
+        let block = 1 + r.below(48) as usize;
+        let opts = ScanOptions {
+            threads: 1 + r.below(4) as usize,
+            min_parallel_work: 8,
+            ..ScanOptions::default().with_block(block)
+        };
+        let mut engine = Engine::builder(hmm.clone()).scan_options(opts).build();
+        let ys = sample(&hmm, t, r).observations;
+        let want =
+            engine.run(Algorithm::BsPar, &ys).unwrap().into_posterior().unwrap();
+
+        let mut s = engine.open_session(SessionOptions {
+            kind: SessionKind::Bayes,
+            ..SessionOptions::default()
+        });
+        assert_eq!(s.kind(), SessionKind::Bayes);
+        let mut i = 0;
+        while i < t {
+            let j = (i + 1 + r.below(7) as usize).min(t);
+            s.push(&ys[i..j]).unwrap();
+            i = j;
+        }
+        let got = s.finish().unwrap();
+        assert_eq!(got, want, "bayes finish T={t} B={block}");
+        // finish() leaves the session usable — repeat is idempotent.
+        assert_eq!(s.finish().unwrap(), want);
+    });
+}
+
+#[test]
+fn bayes_session_filtered_tracks_forward_filter() {
+    // Per-step probabilities against a hand-rolled forward filter and
+    // the running log-likelihood against sp_seq (filter-derived).
+    let hmm = gilbert_elliott(GeParams::default());
+    let engine = Engine::builder(hmm.clone())
+        .scan_options(ScanOptions::default().with_block(16))
+        .build();
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xB5F1);
+    let ys = sample(&hmm, 120, &mut rng).observations;
+    let mut s = engine.open_session(SessionOptions {
+        kind: SessionKind::Bayes,
+        ..SessionOptions::default()
+    });
+    let d = hmm.num_states();
+    let mut f = vec![0.0f64; d];
+    for (k, &y) in ys.iter().enumerate() {
+        s.push(&[y]).unwrap();
+        let e = hmm.emission_col(y);
+        if k == 0 {
+            for j in 0..d {
+                f[j] = hmm.prior()[j] * e[j];
+            }
+        } else {
+            let prev = f.clone();
+            for j in 0..d {
+                let mut acc = 0.0;
+                for (i, &p) in prev.iter().enumerate() {
+                    acc += p * hmm.transition()[(i, j)];
+                }
+                f[j] = acc * e[j];
+            }
+        }
+        let sum: f64 = f.iter().sum();
+        f.iter_mut().for_each(|v| *v /= sum);
+        let got = s.filtered().unwrap();
+        assert_eq!(got.step, k + 1);
+        for (j, &fj) in f.iter().enumerate() {
+            assert!(
+                (got.probs[j] - fj).abs() < 1e-9,
+                "k={k} j={j}: {} vs {fj}",
+                got.probs[j]
+            );
+        }
+        let want_ll =
+            inference::sp_seq(&hmm, &ys[..=k]).unwrap().log_likelihood();
+        assert!(
+            (got.log_likelihood - want_ll).abs() <= 1e-9 * (1.0 + want_ll.abs()),
+            "k={k}: {} vs {want_ll}",
+            got.log_likelihood
+        );
+    }
+    // Fixed-lag and MAP queries are typed errors for this family, and a
+    // failed query leaves the session usable.
+    assert!(s.smoothed_lag(4).is_err());
+    assert!(s.map_lag(4).is_err());
+    assert!(s.finish_map().is_err());
+    assert!(s.finish().is_ok());
+    assert_eq!(s.len(), 120);
+}
+
+/// The eviction acceptance bar: repeated spill → restore cycles through
+/// the JSON wire format, interleaved with random pushes, stay bitwise
+/// identical to the never-evicted session and the one-shot run — for
+/// both element families.
+#[test]
+fn session_spill_restore_cycles_bit_identical() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let mut runner = Runner::new("session-spill-cycles");
+    runner.run(8, |r| {
+        let t = 1 + r.below(400) as usize;
+        let block = 1 + r.below(40) as usize;
+        let opts = ScanOptions {
+            threads: 1 + r.below(3) as usize,
+            min_parallel_work: 8,
+            ..ScanOptions::default().with_block(block)
+        };
+        let mut engine = Engine::builder(hmm.clone()).scan_options(opts).build();
+        let ys = sample(&hmm, t, r).observations;
+
+        for kind in [SessionKind::SumProduct, SessionKind::Bayes] {
+            let opts = SessionOptions {
+                kind,
+                track_map: kind == SessionKind::SumProduct,
+                ..SessionOptions::default()
+            };
+            let mut live = engine.open_session(opts);
+            let mut restored = engine.open_session(opts);
+            let mut i = 0;
+            while i < t {
+                let j = (i + 1 + r.below(23) as usize).min(t);
+                live.push(&ys[i..j]).unwrap();
+                restored.push(&ys[i..j]).unwrap();
+                if r.below(2) == 0 {
+                    // Spill/restore cycle through the wire format.
+                    let wire = restored.snapshot().to_string_compact();
+                    let snap = crate::jsonx::Json::parse(&wire).unwrap();
+                    restored = engine.resume_session(&snap).unwrap();
+                }
+                i = j;
+            }
+            let a = live.finish().unwrap();
+            let b = restored.finish().unwrap();
+            assert_eq!(a, b, "{kind:?} spill cycles diverged (T={t} B={block})");
+            let alg = match kind {
+                SessionKind::SumProduct => Algorithm::SpPar,
+                SessionKind::Bayes => Algorithm::BsPar,
+            };
+            let want = engine.run(alg, &ys).unwrap().into_posterior().unwrap();
+            assert_eq!(a, want, "{kind:?} diverged from one-shot (T={t})");
+            if kind == SessionKind::SumProduct {
+                assert_eq!(
+                    live.finish_map().unwrap(),
+                    restored.finish_map().unwrap(),
+                    "map diverged (T={t} B={block})"
+                );
+            }
+        }
+    });
 }
 
 #[test]

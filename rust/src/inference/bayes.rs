@@ -4,7 +4,7 @@
 //! the potential-based SP methods — the two differ in backward-pass
 //! structure (RTS vs two-filter), not in results.
 
-use crate::elements::{bs_element_chain_into, BsFilterOp, TINY};
+use crate::elements::{bs_element_chain_into, BsElement, BsFilterOp, TINY};
 use crate::error::Result;
 use crate::hmm::Hmm;
 use crate::linalg::{normalize_sum, Mat};
@@ -121,15 +121,30 @@ pub fn bs_par_ws(
     ws: &mut Workspace,
 ) -> Result<Posterior> {
     hmm.check_observations(ys)?;
-    let d = hmm.num_states();
-    let t = ys.len();
 
     // Forward: filtering-element scan (scanned in place — the chain is
     // rebuilt into the same buffer on the next call).
-    let op = BsFilterOp { d };
+    let op = BsFilterOp { d: hmm.num_states() };
     let fwd = &mut ws.bs.elems;
     bs_element_chain_into(hmm, ys, fwd);
     run_scan(&op, fwd.as_mut_slice(), opts);
+    Ok(bs_posterior_from_forward(hmm, fwd, opts, &mut ws.bs.rts))
+}
+
+/// The BS-Par backward pass over an *already-scanned* forward element
+/// chain (`fwd[k]` = a_{0:k+1}): filtered marginals → RTS conditional
+/// suffix scan → smoothed posterior. Shared by [`bs_par_ws`] and the
+/// streaming session's Bayes `finish` path (which materializes `fwd`
+/// from its checkpoints), so the two cannot diverge. `fwd` must be
+/// non-empty.
+pub(crate) fn bs_posterior_from_forward(
+    hmm: &Hmm,
+    fwd: &[BsElement],
+    opts: ScanOptions,
+    suffix: &mut Vec<Mat>,
+) -> Posterior {
+    let d = hmm.num_states();
+    let t = fwd.len();
     // After absorbing the first element the conditional rows coincide:
     // row 0 of f is p(x_k | y_{1:k}).
     let filtered: Vec<&[f64]> = fwd.iter().map(|e| e.f.row(0)).collect();
@@ -142,7 +157,6 @@ pub fn bs_par_ws(
     // Backward: RTS conditionals S_k from filtered marginals, composed
     // by a reversed scan; smoothed_k = filtered_{T-1} · R_k.
     let pi = hmm.transition();
-    let suffix = &mut ws.bs.rts;
     if suffix.len() != t
         || suffix.first().map_or(true, |m| m.rows() != d || m.cols() != d)
     {
@@ -193,7 +207,7 @@ pub fn bs_par_ws(
         normalize_sum(g);
     }
 
-    Ok(Posterior::new(d, gamma, loglik))
+    Posterior::new(d, gamma, loglik)
 }
 
 #[cfg(test)]

@@ -38,6 +38,7 @@ pub use types::{MapEstimate, Posterior};
 pub use viterbi::viterbi;
 pub use workspace::{BsBuffers, MpBuffers, SpBuffers, StreamBuffers, Workspace};
 
+pub(crate) use bayes::bs_posterior_from_forward;
 pub(crate) use maxprod::mp_map_from_scans;
 pub(crate) use sumprod::sp_posterior_from_scans;
 pub(crate) use workspace::{apply_growth_policy, copy_elements_shifted, ElementBuf};

@@ -15,6 +15,11 @@
 use crate::elements::{BsElement, MpElement, SpElement};
 use crate::linalg::Mat;
 
+// The in-place-overwrite capability the copy helpers below build on
+// lives in `scan` (its `CheckpointedScan::suffix_into` shares it); the
+// element-type impls live in `elements`.
+pub(crate) use crate::scan::ElementBuf;
+
 /// Scratch buffers for the sum-product family (`sp_par`).
 #[derive(Debug, Default)]
 pub struct SpBuffers {
@@ -72,45 +77,6 @@ pub struct Workspace {
     pub mp: MpBuffers,
     pub bs: BsBuffers,
     pub stream: StreamBuffers,
-}
-
-/// Elements that can be overwritten in place from a same-shape source —
-/// the contract the copy helpers below need to skip reallocation.
-pub(crate) trait ElementBuf: Clone {
-    /// Shape key: two elements with equal keys share buffer layout.
-    fn shape_key(&self) -> (usize, usize);
-    /// Overwrite `self` from `src` (shapes already verified equal).
-    fn overwrite_from(&mut self, src: &Self);
-}
-
-impl ElementBuf for SpElement {
-    fn shape_key(&self) -> (usize, usize) {
-        (self.mat.rows(), self.mat.cols())
-    }
-    fn overwrite_from(&mut self, src: &Self) {
-        self.mat.data_mut().copy_from_slice(src.mat.data());
-        self.log_scale = src.log_scale;
-    }
-}
-
-impl ElementBuf for MpElement {
-    fn shape_key(&self) -> (usize, usize) {
-        (self.mat.rows(), self.mat.cols())
-    }
-    fn overwrite_from(&mut self, src: &Self) {
-        self.mat.data_mut().copy_from_slice(src.mat.data());
-    }
-}
-
-impl ElementBuf for BsElement {
-    fn shape_key(&self) -> (usize, usize) {
-        (self.f.rows(), self.f.cols())
-    }
-    fn overwrite_from(&mut self, src: &Self) {
-        self.f.data_mut().copy_from_slice(src.f.data());
-        self.g.copy_from_slice(&src.g);
-        self.log_scale = src.log_scale;
-    }
 }
 
 fn reusable<E: ElementBuf>(src_len: usize, src_key: (usize, usize), dst: &[E]) -> bool {

@@ -13,7 +13,9 @@
 //! * **Serving runtime** — [`engine`] (the unified inference API: one
 //!   entry point for all nine algorithms, pluggable backends, reusable
 //!   workspaces, and streaming [`engine::Session`]s over checkpointed
-//!   scans), [`runtime`] (PJRT artifact loading and execution) and
+//!   scans), [`store`] (the durable session store: disk spill, LRU
+//!   eviction and crash recovery under the streaming coordinator),
+//!   [`runtime`] (PJRT artifact loading and execution) and
 //!   [`coordinator`] (router, batcher, temporal sharder): the L3 layer
 //!   that serves inference requests over the AOT-compiled XLA artifacts
 //!   produced by `python/compile/aot.py`.
@@ -43,6 +45,7 @@ pub mod runtime;
 pub mod scan;
 pub mod semiring;
 pub mod simulator;
+pub mod store;
 pub mod xla_stub;
 
 pub use error::{Error, Result};

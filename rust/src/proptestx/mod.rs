@@ -19,11 +19,7 @@ pub struct Runner {
 impl Runner {
     pub fn new(name: &str) -> Self {
         // FNV-1a of the name → stable seed independent of test order.
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in name.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
+        let h = crate::rng::fnv1a_64(crate::rng::FNV1A_OFFSET, name.as_bytes());
         Self { base_seed: h, name: name.to_string() }
     }
 
@@ -66,6 +62,56 @@ impl Runner {
             idx += 1;
         });
     }
+}
+
+/// Per-thread allocation counting for "this hot path is allocation-free"
+/// assertions (the `dhat`/`allocation-counter` crates are unavailable
+/// offline). Only compiled into the test binary: a counting
+/// `#[global_allocator]` that forwards to the system allocator and bumps
+/// a thread-local counter on every `alloc`/`realloc`. Tests snapshot
+/// [`alloc_count::current`] around the code under test; other test
+/// threads don't interfere because the counter is thread-local.
+#[cfg(test)]
+pub mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    thread_local! {
+        static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Allocations observed on the current thread so far.
+    pub fn current() -> u64 {
+        ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+    }
+
+    pub struct CountingAllocator;
+
+    // SAFETY: forwards every operation to `System` unchanged; the
+    // counter bump allocates nothing (const-initialized Cell TLS).
+    unsafe impl GlobalAlloc for CountingAllocator {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static COUNTING: CountingAllocator = CountingAllocator;
 }
 
 /// Generator helpers for common HMM-shaped data.

@@ -4,7 +4,25 @@
 //! [`SplitMix64`] seeds [`Xoshiro256StarStar`], the general-purpose
 //! generator used throughout the workload generators and tests.
 //! Distribution helpers cover exactly what the HMM experiments need:
-//! uniforms, Bernoulli draws and categorical sampling.
+//! uniforms, Bernoulli draws and categorical sampling. [`fnv1a_64`] is
+//! the crate's one non-cryptographic byte hash (proptest seed
+//! derivation, session-log framing checksums, model fingerprints).
+
+/// FNV-1a 64 offset basis — the fresh-start seed for [`fnv1a_64`].
+pub const FNV1A_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a 64 over `bytes`, continuing from `seed` (pass
+/// [`FNV1A_OFFSET`] to start fresh; pass a previous result to chain
+/// multi-part inputs). One definition shared by every caller so the
+/// hash can never silently diverge between them.
+pub fn fnv1a_64(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
 
 /// SplitMix64 — tiny, fast seeder (Steele, Lea & Flood 2014).
 #[derive(Debug, Clone)]

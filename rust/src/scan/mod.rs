@@ -53,6 +53,21 @@ pub trait AssocOp<E>: Sync {
         acc
     }
 
+    /// One fold step with caller-owned scratch: `acc ← acc ⊗ e`, where
+    /// `scratch` is a same-shape element the operator may use as its
+    /// output buffer (swap-style). Must be bitwise one step of
+    /// [`fold`](Self::fold) — `scan::CheckpointedScan::push` relies on
+    /// that to keep steady-state appends allocation-free without
+    /// breaking the bit-identity contract. The default allocates via
+    /// [`combine`](Self::combine); matrix operators override it.
+    fn fold_step(&self, acc: &mut E, e: &E, scratch: &mut E)
+    where
+        E: Clone,
+    {
+        let _ = scratch;
+        *acc = self.combine(acc, e);
+    }
+
     /// In-place inclusive rescan with an incoming carry:
     /// `elems[i] ← carry ⊗ e_0 ⊗ … ⊗ e_i`. Same override rationale as
     /// [`fold`](Self::fold).
@@ -92,6 +107,19 @@ pub trait AssocOp<E>: Sync {
             *e = acc.clone();
         }
     }
+}
+
+/// Elements whose storage can be overwritten in place from a same-shape
+/// source — what the buffer-reusing scan paths
+/// ([`CheckpointedScan::suffix_into`], the inference workspace copy
+/// helpers) need to skip per-call allocation. For heap-backed elements
+/// (the D×D matrix families) `overwrite_from` reuses the existing
+/// buffers; value-type elements just assign.
+pub trait ElementBuf: Clone {
+    /// Shape key: two elements with equal keys share buffer layout.
+    fn shape_key(&self) -> (usize, usize);
+    /// Overwrite `self` from `src` (shapes already verified equal).
+    fn overwrite_from(&mut self, src: &Self);
 }
 
 /// Flipped operator: `combine(a, b) = inner.combine(b, a)`. Used by the

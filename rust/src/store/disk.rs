@@ -1,0 +1,541 @@
+//! Disk-backed [`SessionStore`]: one append-ahead log file per session,
+//! `std::fs` only.
+//!
+//! ## File format
+//!
+//! `<dir>/sess_<id:016x>.log` is a sequence of framed records:
+//!
+//! ```text
+//! ┌────────────────────────────────┬─────────────┬────┐
+//! │ "llllllllllllllll cccccccccccc │   payload   │ \n │
+//! │  cccc\n"  (len, fnv64 — hex)   │ (len bytes) │    │
+//! └────────────────────────────────┴─────────────┴────┘
+//! ```
+//!
+//! The 34-byte header carries the payload length and its FNV-1a 64
+//! checksum, both as fixed-width hex; the payload is one compact-JSON
+//! record:
+//!
+//! * `{"type":"open","meta":{…}}` — written once by [`create`];
+//! * `{"type":"append","ys":[…]}` — one per logged observation chunk;
+//! * `{"type":"ckpt","snap":{…}}` — a full [`Session::snapshot`],
+//!   superseding every record before it.
+//!
+//! ## Crash safety
+//!
+//! Records are appended with a single `write_all` + fsync and parsed
+//! back prefix-wise: the reader stops at the first truncated header,
+//! short payload, checksum mismatch or unparsable JSON, and returns
+//! every record before it. A crash mid-append therefore costs at most
+//! the half-written tail record — and since the coordinator logs a
+//! chunk *before* applying it to the resident session, every
+//! observation the resident session ever held is a fully-framed,
+//! fsynced record. [`compact`] rewrites the log as `open` + `ckpt` via
+//! a temp file and an atomic rename (followed on unix by a directory
+//! fsync, so the entry itself survives the crash; other targets have no
+//! portable directory fsync and weaken that to best-effort), leaving
+//! either the old or the new log, never a mix. File operations are serialized per session id
+//! (sharded locks): same-id append/compact/remove are mutually
+//! exclusive, while appends to different sessions fsync concurrently.
+//!
+//! [`create`]: SessionStore::create
+//! [`compact`]: SessionStore::compact
+//! [`Session::snapshot`]: crate::engine::Session::snapshot
+
+use std::collections::BTreeMap;
+use std::fs::{self, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::jsonx::Json;
+
+use super::{SessionMeta, SessionStore, StoredSession};
+
+/// Header layout: 16 hex chars (length), space, 16 hex chars (fnv64),
+/// newline.
+const HEADER_LEN: usize = 34;
+
+/// The framing checksum: fresh-start FNV-1a 64 (`rng::fnv1a_64`).
+fn fnv64(bytes: &[u8]) -> u64 {
+    crate::rng::fnv1a_64(crate::rng::FNV1A_OFFSET, bytes)
+}
+
+fn frame(payload: &str) -> Vec<u8> {
+    let bytes = payload.as_bytes();
+    let mut out =
+        format!("{:016x} {:016x}\n", bytes.len(), fnv64(bytes)).into_bytes();
+    out.extend_from_slice(bytes);
+    out.push(b'\n');
+    out
+}
+
+fn parse_hex(bytes: &[u8]) -> Option<u64> {
+    let s = std::str::from_utf8(bytes).ok()?;
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Parse the valid record prefix of a log image; everything after the
+/// first framing violation (the crash tail) is ignored.
+fn parse_records(data: &[u8]) -> Vec<Json> {
+    let mut out = Vec::new();
+    let mut pos = 0usize;
+    while pos + HEADER_LEN <= data.len() {
+        let header = &data[pos..pos + HEADER_LEN];
+        if header[16] != b' ' || header[33] != b'\n' {
+            break;
+        }
+        let (Some(len), Some(sum)) =
+            (parse_hex(&header[0..16]), parse_hex(&header[17..33]))
+        else {
+            break;
+        };
+        let start = pos + HEADER_LEN;
+        let Some(end) = start.checked_add(len as usize) else { break };
+        if end >= data.len() || data[end] != b'\n' {
+            break; // truncated payload / missing terminator
+        }
+        let payload = &data[start..end];
+        if fnv64(payload) != sum {
+            break; // torn write
+        }
+        let Ok(text) = std::str::from_utf8(payload) else { break };
+        let Ok(record) = Json::parse(text) else { break };
+        out.push(record);
+        pos = end + 1;
+    }
+    out
+}
+
+/// Fold a record sequence into [`StoredSession`] form. The first record
+/// must be `open`; a `ckpt` supersedes everything before it.
+fn fold_records(records: &[Json]) -> Result<StoredSession> {
+    let first = records
+        .first()
+        .ok_or_else(|| Error::invalid_request("session log: empty"))?;
+    if first.get("type").as_str() != Some("open") {
+        return Err(Error::invalid_request(
+            "session log: first record is not 'open'",
+        ));
+    }
+    let meta = SessionMeta::from_json(first.get("meta"))?;
+    let mut stored = StoredSession { meta, snapshot: None, appends: Vec::new() };
+    for record in &records[1..] {
+        match record.get("type").as_str() {
+            Some("append") => {
+                let ys = record
+                    .get("ys")
+                    .as_arr()
+                    .ok_or_else(|| {
+                        Error::invalid_request("session log: append without 'ys'")
+                    })?
+                    .iter()
+                    .map(|v| {
+                        v.as_usize().and_then(|u| u32::try_from(u).ok()).ok_or_else(
+                            || Error::invalid_request("session log: bad symbol"),
+                        )
+                    })
+                    .collect::<Result<Vec<u32>>>()?;
+                stored.appends.push(ys);
+            }
+            Some("ckpt") => {
+                stored.snapshot = Some(record.get("snap").clone());
+                stored.appends.clear();
+            }
+            _ => {
+                return Err(Error::invalid_request(
+                    "session log: unknown record type",
+                ))
+            }
+        }
+    }
+    Ok(stored)
+}
+
+/// Number of id-sharded file-op locks (see `DiskStore::locks`).
+const LOCK_SHARDS: usize = 16;
+
+/// Append-ahead-log session store under a single directory.
+pub struct DiskStore {
+    dir: PathBuf,
+    /// Per-id shard locks. Same-session append/compact/remove must be
+    /// mutually exclusive (an append racing a compact's rename would
+    /// land on the unlinked old inode and vanish); different sessions
+    /// touch different files, so they only share a lock by shard-hash
+    /// accident — per-append fsyncs do not serialize fleet-wide.
+    locks: Vec<Mutex<()>>,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<DiskStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        // Sweep temp files orphaned by a crash between tmp-write and
+        // rename: a create-crash session was never acknowledged, and a
+        // compact-crash left the original log intact — either way the
+        // tmp is dead weight that would otherwise accumulate forever.
+        for entry in fs::read_dir(&dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if name.starts_with("sess_") && name.ends_with(".tmp") {
+                let _ = fs::remove_file(entry.path());
+            }
+        }
+        let locks = (0..LOCK_SHARDS).map(|_| Mutex::new(())).collect();
+        Ok(DiskStore { dir, locks })
+    }
+
+    /// The store's root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path_for(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("sess_{id:016x}.log"))
+    }
+
+    fn lock_for(&self, id: u64) -> std::sync::MutexGuard<'_, ()> {
+        self.locks[(id % LOCK_SHARDS as u64) as usize].lock().unwrap()
+    }
+
+    /// fsync the store directory so a just-created/renamed log entry
+    /// survives a crash — file-content fsync alone does not cover the
+    /// directory metadata on POSIX. Non-unix targets have no portable
+    /// directory-fsync, so there this is a no-op and the
+    /// entry-survives-crash guarantee weakens to best-effort (the log
+    /// contents themselves are still fsynced).
+    fn sync_dir(&self) -> Result<()> {
+        #[cfg(unix)]
+        fs::File::open(&self.dir)?.sync_all()?;
+        Ok(())
+    }
+
+    fn append_record(&self, id: u64, payload: &str) -> Result<()> {
+        let _guard = self.lock_for(id);
+        let path = self.path_for(id);
+        let mut file = OpenOptions::new().append(true).open(&path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                Error::invalid_request(format!("store: unknown session {id}"))
+            } else {
+                Error::Io(e)
+            }
+        })?;
+        // fsync: the append-ahead durability argument (module docs) rests
+        // on the record reaching stable storage before the resident
+        // session applies it — `flush` alone stops at the page cache.
+        // Group commit across sessions is a ROADMAP follow-on.
+        let len_before = file.metadata()?.len();
+        if let Err(e) =
+            file.write_all(&frame(payload)).and_then(|()| file.sync_all())
+        {
+            // Roll the torn tail back (best-effort): leaving partial
+            // frame bytes mid-log would hide every later acknowledged
+            // record from the prefix-valid reader.
+            let _ = file.set_len(len_before);
+            return Err(Error::Io(e));
+        }
+        Ok(())
+    }
+
+    fn read_stored(&self, id: u64) -> Result<StoredSession> {
+        let path = self.path_for(id);
+        let data = fs::read(&path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                Error::invalid_request(format!("store: unknown session {id}"))
+            } else {
+                Error::Io(e)
+            }
+        })?;
+        fold_records(&parse_records(&data))
+    }
+}
+
+/// Inverse of `path_for`'s naming scheme: `sess_<id:016x>.log` → id.
+/// The single definition both directory scans (`recover`, `max_id`) go
+/// through — if they ever diverged, `max_id` could under-seed the id
+/// allocator and re-open the log-overwrite hazard it exists to prevent.
+fn parse_session_filename(name: &str) -> Option<u64> {
+    let hex = name.strip_prefix("sess_")?.strip_suffix(".log")?;
+    u64::from_str_radix(hex, 16).ok()
+}
+
+fn open_record(meta: &SessionMeta) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("type".to_string(), Json::Str("open".to_string()));
+    obj.insert("meta".to_string(), meta.to_json());
+    Json::Obj(obj).to_string_compact()
+}
+
+fn ckpt_record(snapshot: &Json) -> String {
+    let mut obj = BTreeMap::new();
+    obj.insert("type".to_string(), Json::Str("ckpt".to_string()));
+    obj.insert("snap".to_string(), snapshot.clone());
+    Json::Obj(obj).to_string_compact()
+}
+
+impl SessionStore for DiskStore {
+    fn name(&self) -> &'static str {
+        "disk"
+    }
+
+    fn create(&self, id: u64, meta: &SessionMeta) -> Result<()> {
+        let _guard = self.lock_for(id);
+        let path = self.path_for(id);
+        let tmp = path.with_extension("tmp");
+        {
+            let mut file = fs::File::create(&tmp)?;
+            file.write_all(&frame(&open_record(meta)))?;
+            file.sync_all()?;
+        }
+        fs::rename(&tmp, &path)?;
+        self.sync_dir()
+    }
+
+    fn log_append(&self, id: u64, ys: &[u32]) -> Result<()> {
+        let mut obj = BTreeMap::new();
+        obj.insert("type".to_string(), Json::Str("append".to_string()));
+        obj.insert(
+            "ys".to_string(),
+            Json::Arr(ys.iter().map(|&y| Json::Num(y as f64)).collect()),
+        );
+        self.append_record(id, &Json::Obj(obj).to_string_compact())
+    }
+
+    fn compact(&self, id: u64, meta: &SessionMeta, snapshot: &Json) -> Result<()> {
+        // Atomically replace the log with its minimal equivalent. The
+        // lock spans the existence check through the rename: a
+        // concurrent same-id log_append cannot land in between (it would
+        // be dropped from the rewrite), and a removed session cannot be
+        // resurrected by a racing compact.
+        let _guard = self.lock_for(id);
+        let path = self.path_for(id);
+        if !path.exists() {
+            return Err(Error::invalid_request(format!(
+                "store: unknown session {id}"
+            )));
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut file = fs::File::create(&tmp)?;
+            file.write_all(&frame(&open_record(meta)))?;
+            file.write_all(&frame(&ckpt_record(snapshot)))?;
+            file.sync_all()?;
+        }
+        fs::rename(&tmp, &path)?;
+        self.sync_dir()
+    }
+
+    fn restore(&self, id: u64) -> Result<StoredSession> {
+        self.read_stored(id)
+    }
+
+    fn remove(&self, id: u64) -> Result<()> {
+        let _guard = self.lock_for(id);
+        match fs::remove_file(self.path_for(id)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(Error::Io(e)),
+        }
+    }
+
+    fn recover(&self) -> Result<Vec<(u64, StoredSession)>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(&self.dir)? {
+            let name = entry?.file_name();
+            let Some(id) = name.to_str().and_then(parse_session_filename) else {
+                continue;
+            };
+            // Unreadable logs are skipped (their valid prefix may still
+            // be recovered on a later restore attempt), never fatal to
+            // the rest of the fleet.
+            if let Ok(stored) = self.read_stored(id) {
+                out.push((id, stored));
+            }
+        }
+        out.sort_by_key(|(id, _)| *id);
+        Ok(out)
+    }
+
+    fn max_id(&self) -> Result<Option<u64>> {
+        // Filename scan only — no log is opened or parsed, so this is
+        // safe to run on every coordinator construction.
+        let mut max = None;
+        for entry in fs::read_dir(&self.dir)? {
+            let name = entry?.file_name();
+            if let Some(id) = name.to_str().and_then(parse_session_filename) {
+                max = Some(max.map_or(id, |m: u64| m.max(id)));
+            }
+        }
+        Ok(max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::tempdir;
+    use super::*;
+    use crate::engine::{SessionKind, SessionOptions};
+
+    fn meta() -> SessionMeta {
+        SessionMeta {
+            model: "ge".to_string(),
+            options: SessionOptions {
+                block: Some(16),
+                track_map: false,
+                kind: SessionKind::SumProduct,
+            },
+            lag: 8,
+            fingerprint: Some(0x0123_4567_89AB_CDEF),
+        }
+    }
+
+    #[test]
+    fn frame_round_trip_and_checksum() {
+        let rec = r#"{"type":"open","meta":{}}"#;
+        let framed = frame(rec);
+        assert_eq!(framed.len(), HEADER_LEN + rec.len() + 1);
+        let parsed = parse_records(&framed);
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].get("type").as_str(), Some("open"));
+
+        // A flipped payload byte fails the checksum → record dropped.
+        let mut corrupt = framed.clone();
+        corrupt[HEADER_LEN + 2] ^= 0x01;
+        assert!(parse_records(&corrupt).is_empty());
+
+        // Truncations anywhere in the record drop it cleanly.
+        for cut in [1, HEADER_LEN - 1, HEADER_LEN + 3, framed.len() - 1] {
+            assert!(parse_records(&framed[..cut]).is_empty(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn disk_store_lifecycle() {
+        let dir = tempdir("disk-lifecycle");
+        let store = DiskStore::open(&dir).unwrap();
+        assert_eq!(store.name(), "disk");
+        store.create(3, &meta()).unwrap();
+        store.log_append(3, &[0, 1, 1]).unwrap();
+        store.log_append(3, &[1, 0]).unwrap();
+
+        let s = store.restore(3).unwrap();
+        assert_eq!(s.meta, meta());
+        assert!(s.snapshot.is_none());
+        assert_eq!(s.appends, vec![vec![0, 1, 1], vec![1, 0]]);
+        assert_eq!(s.len(), 5);
+
+        // A compact checkpoint supersedes prior records; appends logged
+        // after it stack on top…
+        let snap = Json::parse(r#"{"ys": [0, 1, 1, 1, 0]}"#).unwrap();
+        store.compact(3, &meta(), &snap).unwrap();
+        store.log_append(3, &[1]).unwrap();
+        let s = store.restore(3).unwrap();
+        assert_eq!(s.snapshot.as_ref(), Some(&snap));
+        assert_eq!(s.appends, vec![vec![1]]);
+        assert_eq!(s.len(), 6);
+
+        // …and a re-compact rewrites the file to its minimal form.
+        let size_before = fs::metadata(store.path_for(3)).unwrap().len();
+        let snap2 = Json::parse(r#"{"ys": [0, 1, 1, 1, 0, 1]}"#).unwrap();
+        store.compact(3, &meta(), &snap2).unwrap();
+        let size_after = fs::metadata(store.path_for(3)).unwrap().len();
+        assert!(size_after < size_before, "{size_after} !< {size_before}");
+        let s = store.restore(3).unwrap();
+        assert_eq!(s.meta, meta(), "compact must re-seed the open meta");
+        assert_eq!(s.snapshot.as_ref(), Some(&snap2));
+        assert!(s.appends.is_empty());
+        // Compacting a removed/unknown session is a typed error, not a
+        // silent resurrection.
+        assert!(store.compact(77, &meta(), &snap2).is_err());
+
+        // recover() enumerates sessions; unknown ids / foreign files skip.
+        store.create(9, &meta()).unwrap();
+        fs::write(dir.join("README"), b"not a log").unwrap();
+        fs::write(dir.join("sess_zzzz.log"), b"bad id").unwrap();
+        let all = store.recover().unwrap();
+        assert_eq!(all.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![3, 9]);
+        // max_id sees every stored session without reading a single log.
+        assert_eq!(store.max_id().unwrap(), Some(9));
+
+        store.remove(3).unwrap();
+        store.remove(3).unwrap(); // idempotent
+        assert!(store.restore(3).is_err());
+        assert!(store.log_append(3, &[0]).is_err());
+        assert_eq!(store.recover().unwrap().len(), 1);
+
+        // Temp files orphaned by a crashed create/compact are swept the
+        // next time the store opens; live logs are untouched.
+        let orphan = dir.join("sess_00000000000000aa.tmp");
+        fs::write(&orphan, b"orphan").unwrap();
+        let reopened = DiskStore::open(&dir).unwrap();
+        assert!(!orphan.exists(), "tmp orphan must be swept at open");
+        assert_eq!(reopened.recover().unwrap().len(), 1);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mid_log_ckpt_record_supersedes_prefix() {
+        // The reader must honor a checkpoint record wherever it appears
+        // in the log (robustness for hand-repaired or future layouts),
+        // even though today's writers only ever place it right after the
+        // open record.
+        let mut image = Vec::new();
+        image.extend_from_slice(&frame(&open_record(&meta())));
+        image.extend_from_slice(&frame(
+            r#"{"type":"append","ys":[0,1]}"#,
+        ));
+        image.extend_from_slice(&frame(
+            r#"{"type":"ckpt","snap":{"ys":[0,1,1]}}"#,
+        ));
+        image.extend_from_slice(&frame(
+            r#"{"type":"append","ys":[1]}"#,
+        ));
+        let stored = fold_records(&parse_records(&image)).unwrap();
+        assert_eq!(stored.meta, meta());
+        assert_eq!(
+            stored.snapshot.as_ref().map(|s| s.get("ys").as_arr().unwrap().len()),
+            Some(3)
+        );
+        assert_eq!(stored.appends, vec![vec![1]]);
+        assert_eq!(stored.len(), 4);
+    }
+
+    #[test]
+    fn truncated_tail_keeps_fully_logged_appends() {
+        // The satellite crash test: cut the log mid-record and verify
+        // every fully-framed append survives.
+        let dir = tempdir("disk-truncate");
+        let store = DiskStore::open(&dir).unwrap();
+        store.create(1, &meta()).unwrap();
+        for k in 0..5u32 {
+            store.log_append(1, &[k % 2, (k + 1) % 2, k % 2]).unwrap();
+        }
+        let path = store.path_for(1);
+        let full = fs::read(&path).unwrap();
+
+        // Truncate into the last record (simulated crash mid-write):
+        // every cut here is shorter than one framed append record.
+        for cut in [1usize, 10, 30] {
+            fs::write(&path, &full[..full.len() - cut]).unwrap();
+            let s = store.restore(1).unwrap();
+            assert_eq!(s.appends.len(), 4, "cut={cut}");
+            assert_eq!(s.len(), 12, "cut={cut}");
+        }
+
+        // Garbage appended after valid records is ignored the same way.
+        let mut garbage = full.clone();
+        garbage.extend_from_slice(b"0000000000000bad ");
+        fs::write(&path, &garbage).unwrap();
+        assert_eq!(store.restore(1).unwrap().appends.len(), 5);
+
+        // A log truncated into its *open* record is unreadable — recover
+        // skips it instead of failing the fleet.
+        fs::write(&path, &full[..10]).unwrap();
+        assert!(store.restore(1).is_err());
+        assert!(store.recover().unwrap().is_empty());
+        fs::remove_dir_all(&dir).ok();
+    }
+}

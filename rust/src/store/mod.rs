@@ -1,0 +1,422 @@
+//! Durable session store — the persistence layer under the streaming
+//! coordinator.
+//!
+//! The prefix-sum structure of the scan (paper §IV) makes a cold
+//! session fully characterized by its observations plus the serialized
+//! per-block summaries ([`Session::snapshot`]): raw element chains are
+//! deterministic functions of `(model, ys)`, so spilling a session to
+//! disk and restoring it is *bit-identical* to never having evicted it
+//! (`Engine::resume_session` + replayed appends — property-tested in
+//! `engine::tests` and `coordinator::server::tests`).
+//!
+//! Two implementations sit behind [`SessionStore`]:
+//!
+//! * [`MemStore`] — an in-process map. Eviction works (resident RAM is
+//!   freed; the spilled state lives in the store), crash recovery does
+//!   not. The default, and the reference semantics for the trait.
+//! * [`DiskStore`] — one append-ahead log file per session (std::fs
+//!   only; the crate stays zero-dep). Appends are logged *before* they
+//!   mutate the resident session, so startup replay recovers every
+//!   acknowledged observation after a crash; periodic/spill-time
+//!   checkpoints bound both log length and restore cost. See
+//!   `store::disk` for the record format and crash-safety argument.
+//!
+//! Lifecycle (driven by the coordinator):
+//!
+//! ```text
+//!   open ──▶ create(id, meta)
+//!   append ─▶ log_append(id, ys)          (append-ahead, then push)
+//!   evict ──▶ compact(id, meta, snapshot) + drop the resident Session
+//!   touch ──▶ restore(id) ─▶ resume_session(snapshot) + replay appends
+//!   close ──▶ remove(id)
+//!   crash ──▶ max_id() seeds the id allocator; recover() re-registers
+//!             every stored session (lazily restored on first touch)
+//! ```
+
+pub mod disk;
+
+pub use disk::DiskStore;
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::engine::{SessionKind, SessionOptions};
+use crate::error::{Error, Result};
+use crate::hmm::Hmm;
+use crate::jsonx::Json;
+
+/// Order-sensitive FNV-1a over a model's shape and parameter bit
+/// patterns — the identity the store records alongside each session so
+/// crash recovery can refuse to bind stored scan state to a *different*
+/// model that was re-registered under the same name (snapshot summaries
+/// are trusted, not re-verified; mixing them with rebuilt elements from
+/// another model would silently corrupt results).
+pub fn model_fingerprint(hmm: &Hmm) -> u64 {
+    let mut h = crate::rng::FNV1A_OFFSET;
+    let mut eat = |v: f64| {
+        h = crate::rng::fnv1a_64(h, &v.to_bits().to_le_bytes());
+    };
+    eat(hmm.num_states() as f64);
+    eat(hmm.num_symbols() as f64);
+    for &v in hmm.transition().data() {
+        eat(v);
+    }
+    for &v in hmm.emission().data() {
+        eat(v);
+    }
+    for &v in hmm.prior() {
+        eat(v);
+    }
+    h
+}
+
+/// Everything needed to re-create a session that is not resident:
+/// which model it belongs to, how it was opened, and its serving lag.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionMeta {
+    /// Model registry key.
+    pub model: String,
+    /// Options the session was opened with (block / track_map / kind).
+    pub options: SessionOptions,
+    /// Fixed-lag width appends report at (coordinator-level state).
+    pub lag: usize,
+    /// [`model_fingerprint`] of the parameters the session was opened
+    /// against; `None` when unknown. Recovery skips sessions whose
+    /// stored fingerprint disagrees with the registered model's.
+    pub fingerprint: Option<u64>,
+}
+
+impl SessionMeta {
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("model".to_string(), Json::Str(self.model.clone()));
+        obj.insert(
+            "block".to_string(),
+            self.options.block.map_or(Json::Null, |b| Json::Num(b as f64)),
+        );
+        obj.insert("track_map".to_string(), Json::Bool(self.options.track_map));
+        obj.insert(
+            "kind".to_string(),
+            Json::Str(self.options.kind.name().to_string()),
+        );
+        obj.insert("lag".to_string(), Json::Num(self.lag as f64));
+        if let Some(fp) = self.fingerprint {
+            // Hex string: a u64 does not survive the f64 Num round-trip.
+            obj.insert("model_fp".to_string(), Json::Str(format!("{fp:016x}")));
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(v: &Json) -> Result<SessionMeta> {
+        let model = v
+            .get("model")
+            .as_str()
+            .ok_or_else(|| Error::invalid_request("session meta: 'model'"))?
+            .to_string();
+        let block = match v.get("block") {
+            Json::Null => None,
+            b => Some(b.as_usize().ok_or_else(|| {
+                Error::invalid_request("session meta: invalid 'block'")
+            })?),
+        };
+        let track_map = v.get("track_map").as_bool().unwrap_or(false);
+        let kind = match v.get("kind") {
+            Json::Null => SessionKind::SumProduct,
+            k => k.as_str().and_then(SessionKind::parse).ok_or_else(|| {
+                Error::invalid_request("session meta: unknown 'kind'")
+            })?,
+        };
+        let lag = v.get("lag").as_usize().unwrap_or(0);
+        let fingerprint = match v.get("model_fp") {
+            Json::Null => None,
+            f => Some(
+                f.as_str()
+                    .and_then(|s| u64::from_str_radix(s, 16).ok())
+                    .ok_or_else(|| {
+                        Error::invalid_request("session meta: invalid 'model_fp'")
+                    })?,
+            ),
+        };
+        Ok(SessionMeta {
+            model,
+            options: SessionOptions { block, track_map, kind },
+            lag,
+            fingerprint,
+        })
+    }
+}
+
+/// The stored state of one session: its meta, the latest checkpoint
+/// snapshot (if any), and the observation chunks logged after it.
+///
+/// Restoring is `Engine::resume_session(snapshot)` (or a fresh
+/// `open_session(meta.options)` when no checkpoint exists yet) followed
+/// by pushing every chunk in `appends`, in order — bit-identical to the
+/// live session by the snapshot/resume contract.
+#[derive(Debug, Clone)]
+pub struct StoredSession {
+    pub meta: SessionMeta,
+    /// Latest [`Session::snapshot`] checkpoint, superseding everything
+    /// logged before it.
+    pub snapshot: Option<Json>,
+    /// Observation chunks appended after the snapshot, oldest first.
+    pub appends: Vec<Vec<u32>>,
+}
+
+impl StoredSession {
+    /// Total observations held (snapshot + trailing appends).
+    pub fn len(&self) -> usize {
+        let base = self
+            .snapshot
+            .as_ref()
+            .and_then(|s| s.get("ys").as_arr().map(|a| a.len()))
+            .unwrap_or(0);
+        base + self.appends.iter().map(Vec::len).sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A durable (or at least spill-capable) store of streaming sessions.
+///
+/// Implementations must keep the restore contract exact: `restore`
+/// after any interleaving of `create`/`log_append`/`spill`/`compact`
+/// returns state from which the coordinator rebuilds a session
+/// bit-identical to the live one. All methods take `&self` — stores are
+/// shared across the coordinator's serve path.
+pub trait SessionStore: Send + Sync {
+    /// Implementation name (metrics / logs).
+    fn name(&self) -> &'static str;
+
+    /// Whether stored state survives the process. The coordinator skips
+    /// the per-append write-ahead log (and periodic compaction) for
+    /// non-durable stores — the spill-time snapshot already covers
+    /// everything a same-process restore needs, so logging every chunk
+    /// would only duplicate hot sessions' observations in RAM.
+    fn durable(&self) -> bool {
+        true
+    }
+
+    /// Register a new session (the durable "open" record). Overwrites
+    /// any stale state under the same id.
+    fn create(&self, id: u64, meta: &SessionMeta) -> Result<()>;
+
+    /// Append-ahead log of one observation chunk: must be durable
+    /// before the resident session applies it.
+    fn log_append(&self, id: u64, ys: &[u32]) -> Result<()>;
+
+    /// Persist a snapshot checkpoint *and* drop everything it
+    /// supersedes, bounding stored size and restore cost — the spill
+    /// write of the coordinator's eviction path. `meta` re-seeds the
+    /// open record of the rewritten state (the caller holds it anyway —
+    /// reading it back from the store would make compaction O(stored
+    /// size)).
+    fn compact(&self, id: u64, meta: &SessionMeta, snapshot: &Json) -> Result<()>;
+
+    /// Read back everything needed to restore session `id`.
+    fn restore(&self, id: u64) -> Result<StoredSession>;
+
+    /// Forget session `id` entirely (close).
+    fn remove(&self, id: u64) -> Result<()>;
+
+    /// Enumerate every stored session — crash recovery. Sessions whose
+    /// state cannot be read are skipped, never a hard error.
+    fn recover(&self) -> Result<Vec<(u64, StoredSession)>>;
+
+    /// Highest session id the store holds state for (`None` when
+    /// empty), metadata-only cheap. `Coordinator::new` seeds its id
+    /// allocator from this so a fresh open can never collide with — and
+    /// overwrite the durable log of — a stored session from a previous
+    /// process, even before `recover_sessions` runs. The default suits
+    /// stores that cannot outlive the process.
+    fn max_id(&self) -> Result<Option<u64>> {
+        Ok(None)
+    }
+}
+
+/// In-memory [`SessionStore`]: the default spill target. Sessions
+/// evicted here free their resident element chains (the point of
+/// eviction) but do not survive the process.
+#[derive(Default)]
+pub struct MemStore {
+    sessions: Mutex<BTreeMap<u64, StoredSession>>,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl SessionStore for MemStore {
+    fn name(&self) -> &'static str {
+        "mem"
+    }
+
+    fn durable(&self) -> bool {
+        false
+    }
+
+    fn create(&self, id: u64, meta: &SessionMeta) -> Result<()> {
+        self.sessions.lock().unwrap().insert(
+            id,
+            StoredSession { meta: meta.clone(), snapshot: None, appends: Vec::new() },
+        );
+        Ok(())
+    }
+
+    fn log_append(&self, id: u64, ys: &[u32]) -> Result<()> {
+        let mut sessions = self.sessions.lock().unwrap();
+        let s = sessions
+            .get_mut(&id)
+            .ok_or_else(|| Error::invalid_request(format!("store: unknown session {id}")))?;
+        s.appends.push(ys.to_vec());
+        Ok(())
+    }
+
+    fn compact(&self, id: u64, meta: &SessionMeta, snapshot: &Json) -> Result<()> {
+        let mut sessions = self.sessions.lock().unwrap();
+        let s = sessions
+            .get_mut(&id)
+            .ok_or_else(|| Error::invalid_request(format!("store: unknown session {id}")))?;
+        s.meta = meta.clone();
+        s.snapshot = Some(snapshot.clone());
+        s.appends.clear();
+        Ok(())
+    }
+
+    fn restore(&self, id: u64) -> Result<StoredSession> {
+        self.sessions
+            .lock()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::invalid_request(format!("store: unknown session {id}")))
+    }
+
+    fn remove(&self, id: u64) -> Result<()> {
+        self.sessions.lock().unwrap().remove(&id);
+        Ok(())
+    }
+
+    fn recover(&self) -> Result<Vec<(u64, StoredSession)>> {
+        Ok(self
+            .sessions
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(id, s)| (*id, s.clone()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+
+    /// Unique per-test scratch directory under the system temp dir (the
+    /// CI test job points TMPDIR at the runner's scratch space).
+    pub fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "hmm-scan-{tag}-{}-{}",
+            std::process::id(),
+            NEXT.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).expect("create tempdir");
+        dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> SessionMeta {
+        SessionMeta {
+            model: "ge".to_string(),
+            options: SessionOptions {
+                block: Some(32),
+                track_map: true,
+                kind: SessionKind::SumProduct,
+            },
+            lag: 16,
+            // A value above 2^53 would corrupt under an f64 encoding —
+            // the round-trip test below guards the hex-string choice.
+            fingerprint: Some(0xDEAD_BEEF_CAFE_F00D),
+        }
+    }
+
+    #[test]
+    fn meta_json_round_trips() {
+        let m = meta();
+        let back = SessionMeta::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        // None block/fingerprint and bayes kind survive too.
+        let m2 = SessionMeta {
+            model: "x".into(),
+            options: SessionOptions {
+                block: None,
+                track_map: false,
+                kind: SessionKind::Bayes,
+            },
+            lag: 0,
+            fingerprint: None,
+        };
+        assert_eq!(SessionMeta::from_json(&m2.to_json()).unwrap(), m2);
+        // Missing model / unknown kind / bad fingerprint are typed errors.
+        assert!(SessionMeta::from_json(&Json::Null).is_err());
+        let bad = Json::parse(r#"{"model": "m", "kind": "nope"}"#).unwrap();
+        assert!(SessionMeta::from_json(&bad).is_err());
+        let bad_fp =
+            Json::parse(r#"{"model": "m", "model_fp": "xyz"}"#).unwrap();
+        assert!(SessionMeta::from_json(&bad_fp).is_err());
+    }
+
+    #[test]
+    fn fingerprint_separates_models() {
+        use crate::hmm::{gilbert_elliott, GeParams};
+        let a = model_fingerprint(&gilbert_elliott(GeParams::default()));
+        let b = model_fingerprint(&gilbert_elliott(GeParams {
+            q0: 0.011,
+            ..GeParams::default()
+        }));
+        assert_ne!(a, b, "parameter change must change the fingerprint");
+        assert_eq!(a, model_fingerprint(&gilbert_elliott(GeParams::default())));
+    }
+
+    #[test]
+    fn mem_store_lifecycle() {
+        let store = MemStore::new();
+        assert_eq!(store.name(), "mem");
+        store.create(7, &meta()).unwrap();
+        store.log_append(7, &[0, 1, 1]).unwrap();
+        store.log_append(7, &[1]).unwrap();
+        let s = store.restore(7).unwrap();
+        assert_eq!(s.meta, meta());
+        assert!(s.snapshot.is_none());
+        assert_eq!(s.appends, vec![vec![0, 1, 1], vec![1]]);
+        assert_eq!(s.len(), 4);
+
+        // A compact checkpoint supersedes the appends (and refreshes
+        // the meta); appends logged after it stack on top.
+        let snap = Json::parse(r#"{"ys": [0, 1, 1, 1]}"#).unwrap();
+        store.compact(7, &meta(), &snap).unwrap();
+        let s = store.restore(7).unwrap();
+        assert_eq!(s.snapshot.as_ref(), Some(&snap));
+        assert!(s.appends.is_empty());
+        assert_eq!(s.len(), 4);
+        store.log_append(7, &[0, 0]).unwrap();
+        assert_eq!(store.restore(7).unwrap().len(), 6);
+
+        assert_eq!(store.recover().unwrap().len(), 1);
+        store.remove(7).unwrap();
+        assert!(store.restore(7).is_err());
+        assert!(store.log_append(7, &[0]).is_err());
+        assert!(store.recover().unwrap().is_empty());
+    }
+}
