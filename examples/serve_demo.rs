@@ -13,10 +13,13 @@
 //!
 //! A third phase exercises the *durable session store*: a disk-backed
 //! coordinator with a small resident watermark serves 4× more open
-//! sessions than fit in RAM (evict → transparent restore on append),
+//! sessions than fit in RAM (evict → transparent restore on append,
+//! with the spills and log compactions running on the background
+//! housekeeping worker and append fsyncs batched by group commit),
 //! reports residency via `StreamVerb::Stat`, is dropped mid-flight
 //! ("crash"), and a fresh coordinator recovers every session from the
-//! append-ahead logs — with closes bit-identical to clean engine runs.
+//! append-ahead logs' *metadata* (frame headers, not bodies) — with
+//! closes bit-identical to clean engine runs.
 //!
 //!     cargo run --release --example serve_demo
 
@@ -199,7 +202,9 @@ fn main() -> hmm_scan::Result<()> {
             ledger.push((session, Vec::new()));
         }
         // Round-robin appends: every session's turn finds it evicted,
-        // and the append restores it transparently.
+        // and the append restores it transparently. Quiescing between
+        // rounds makes the worker's spills observable before the next
+        // round's appends (which then deterministically restore).
         for round in 0..4usize {
             for (session, ys) in ledger.iter_mut() {
                 let k = 5 + (*session as usize + round) % 24;
@@ -207,7 +212,11 @@ fn main() -> hmm_scan::Result<()> {
                 coord.stream(StreamRequest::append(1, *session, chunk.clone()))?;
                 ys.extend_from_slice(&chunk);
             }
+            coord.quiesce_housekeeping();
         }
+        // Barrier: the spills run on the housekeeping worker — drain it
+        // before reading the residency gauges.
+        coord.quiesce_housekeeping();
         let probe = ledger[0].0;
         let resp = coord.stream(StreamRequest::stat(2, probe))?;
         if let StreamReply::Stats {
@@ -217,8 +226,10 @@ fn main() -> hmm_scan::Result<()> {
             println!(
                 "\ndurable store at {}:\n  session {probe}: len={len} \
                  resident={resident}; {open_sessions} open / \
-                 {resident_sessions} resident (watermark 8)",
-                store_dir.display()
+                 {resident_sessions} resident (watermark 8, \
+                 ~{} resident KiB)",
+                store_dir.display(),
+                coord.resident_bytes() / 1024,
             );
         }
         let snap = coord.metrics().snapshot();
@@ -226,14 +237,28 @@ fn main() -> hmm_scan::Result<()> {
             "  spills: {}  restores: {}  (restore p50 {}µs  p99 {}µs)",
             snap.spills, snap.restores, snap.restore_p50_us, snap.restore_p99_us
         );
+        println!(
+            "  housekeeping: {} tasks run, queue depth {}; group commit: \
+             {} sync batches ({:.2} appends/sync)",
+            snap.hk_completed,
+            snap.hk_queue_depth,
+            snap.sync_batches,
+            snap.sync_batch_occupancy(),
+        );
         assert!(snap.spills > 0 && snap.restores > 0, "eviction never engaged");
+        assert!(snap.hk_completed > 0, "housekeeping worker never ran");
         // "Crash": drop the coordinator without closing a single session.
     }
 
     let coord = Coordinator::new(durable_config())?;
     coord.register_model("ge", hmm.clone());
     let recovered = coord.recover_sessions()?;
-    println!("  after crash: recovered {recovered}/{open_n} sessions");
+    let snap = coord.metrics().snapshot();
+    println!(
+        "  after crash: recovered {recovered}/{open_n} sessions in {}µs \
+         (metadata-only scan — log bodies stay on disk until first touch)",
+        snap.recovery_scan_us
+    );
     assert_eq!(recovered, open_n);
 
     // Every recovered session keeps serving: append once more, close,

@@ -9,8 +9,11 @@ use std::time::{Duration, Instant};
 /// Bench configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchConfig {
+    /// Unmeasured warmup iterations.
     pub warmup_iters: usize,
+    /// Minimum measured iterations, budget notwithstanding.
     pub min_iters: usize,
+    /// Hard cap on measured iterations.
     pub max_iters: usize,
     /// Stop once total measured time exceeds this budget.
     pub time_budget: Duration,
@@ -42,16 +45,22 @@ impl BenchConfig {
 /// Result of one measured benchmark.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Row label.
     pub name: String,
+    /// Iterations measured.
     pub iters: usize,
+    /// Median iteration time.
     pub median: Duration,
     /// Median absolute deviation — robust spread estimate.
     pub mad: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
 }
 
 impl Measurement {
+    /// The median as seconds (plot axes).
     pub fn median_secs(&self) -> f64 {
         self.median.as_secs_f64()
     }

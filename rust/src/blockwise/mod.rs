@@ -28,15 +28,19 @@ use crate::scan::{seq_scan, seq_scan_rev, AssocOp};
 /// short).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BlockPlan {
+    /// Total sequence length.
     pub t: usize,
+    /// Observations per block.
     pub block_len: usize,
 }
 
 impl BlockPlan {
+    /// A plan over `0..t` with blocks of `block_len` (≥ 1).
     pub fn new(t: usize, block_len: usize) -> Self {
         Self { t, block_len: block_len.max(1) }
     }
 
+    /// Number of blocks (the last may be short).
     pub fn num_blocks(&self) -> usize {
         self.t.div_ceil(self.block_len)
     }

@@ -13,7 +13,9 @@ use crate::error::{Error, Result};
 /// An option specification.
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Option name (without the `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
     /// None → boolean flag; Some(default) → value option.
     pub default: Option<&'static str>,
@@ -22,26 +24,34 @@ pub struct OptSpec {
 /// A subcommand specification.
 #[derive(Debug, Clone)]
 pub struct CommandSpec {
+    /// Subcommand name.
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Accepted options/flags.
     pub opts: Vec<OptSpec>,
+    /// Names of accepted positional arguments (usage text).
     pub positional: Vec<&'static str>,
 }
 
 /// Parsed invocation.
 #[derive(Debug, Clone)]
 pub struct Parsed {
+    /// The matched subcommand.
     pub command: String,
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Positional arguments, as given.
     pub positional: Vec<String>,
 }
 
 impl Parsed {
+    /// An option's value (its default when not supplied).
     pub fn get(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// An option's value parsed as usize, with a typed usage error.
     pub fn get_usize(&self, key: &str) -> Result<usize> {
         let v = self
             .get(key)
@@ -50,6 +60,7 @@ impl Parsed {
             .map_err(|_| Error::usage(format!("--{key}: '{v}' is not an integer")))
     }
 
+    /// An option's value parsed as f64, with a typed usage error.
     pub fn get_f64(&self, key: &str) -> Result<f64> {
         let v = self
             .get(key)
@@ -58,6 +69,7 @@ impl Parsed {
             .map_err(|_| Error::usage(format!("--{key}: '{v}' is not a number")))
     }
 
+    /// Whether a boolean flag was supplied.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
@@ -66,16 +78,21 @@ impl Parsed {
 /// The application CLI: subcommands + global help.
 #[derive(Debug, Clone, Default)]
 pub struct Cli {
+    /// Program name (usage text).
     pub app: &'static str,
+    /// One-line program description.
     pub about: &'static str,
+    /// Registered subcommands.
     pub commands: Vec<CommandSpec>,
 }
 
 impl Cli {
+    /// A CLI with no commands yet.
     pub fn new(app: &'static str, about: &'static str) -> Self {
         Self { app, about, commands: Vec::new() }
     }
 
+    /// Register a subcommand (builder-style).
     pub fn command(
         mut self,
         name: &'static str,
@@ -159,6 +176,7 @@ impl Cli {
         Ok(Parsed { command: spec.name.to_string(), values, flags, positional })
     }
 
+    /// Top-level usage text (program + command list).
     pub fn usage(&self) -> String {
         let mut out = format!("{} — {}\n\nCommands:\n", self.app, self.about);
         for c in &self.commands {
@@ -192,11 +210,12 @@ impl Cli {
     }
 }
 
-/// Shorthand constructors.
+/// Shorthand for a value option with a default.
 pub fn opt(name: &'static str, help: &'static str, default: &'static str) -> OptSpec {
     OptSpec { name, help, default: Some(default) }
 }
 
+/// Shorthand for a boolean flag.
 pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
     OptSpec { name, help, default: None }
 }

@@ -30,6 +30,17 @@ pub struct RunConfig {
     pub xla_workers: usize,
     /// Batching policy.
     pub batcher: BatcherConfig,
+    /// Durable session-store directory for streaming serving
+    /// (`None` = in-memory spill only, nothing survives the process).
+    pub session_store: Option<PathBuf>,
+    /// Resident-session watermark for the streaming coordinator.
+    pub resident_watermark: usize,
+    /// Group-commit fsync deadline window, microseconds (0 = one fsync
+    /// per logged append).
+    pub group_commit_us: u64,
+    /// Run spills/compactions on the background housekeeping worker
+    /// (`false` = in-band on the serve path).
+    pub housekeeping: bool,
 }
 
 impl Default for RunConfig {
@@ -44,6 +55,10 @@ impl Default for RunConfig {
             out_dir: PathBuf::from("results"),
             xla_workers: 4,
             batcher: BatcherConfig::default(),
+            session_store: None,
+            resident_watermark: 1024,
+            group_commit_us: 200,
+            housekeeping: true,
         }
     }
 }
@@ -55,6 +70,7 @@ impl RunConfig {
         Self::from_json(&text)
     }
 
+    /// Parse overrides from a JSON string (missing keys keep defaults).
     pub fn from_json(text: &str) -> Result<Self> {
         let v = Json::parse(text)?;
         let mut c = Self::default();
@@ -92,7 +108,37 @@ impl RunConfig {
         if let Some(mb) = v.get("max_batch").as_usize() {
             c.batcher.max_batch = mb.max(1);
         }
+        if let Some(dir) = v.get("session_store").as_str() {
+            c.session_store =
+                (!dir.is_empty()).then(|| PathBuf::from(dir));
+        }
+        if let Some(w) = v.get("resident_watermark").as_usize() {
+            c.resident_watermark = w;
+        }
+        if let Some(us) = v.get("group_commit_us").as_usize() {
+            c.group_commit_us = us as u64;
+        }
+        if let Some(hk) = v.get("housekeeping").as_bool() {
+            c.housekeeping = hk;
+        }
         Ok(c)
+    }
+
+    /// Coordinator configuration derived from the serving knobs here
+    /// (callers overlay artifacts/worker settings as needed).
+    pub fn coordinator_config(&self) -> crate::coordinator::CoordinatorConfig {
+        crate::coordinator::CoordinatorConfig {
+            xla_workers: self.xla_workers,
+            batcher: self.batcher,
+            scan: self.scan_options(),
+            session_store: self.session_store.clone(),
+            resident_watermark: self.resident_watermark,
+            group_commit_window: std::time::Duration::from_micros(
+                self.group_commit_us,
+            ),
+            housekeeping: self.housekeeping,
+            ..crate::coordinator::CoordinatorConfig::default()
+        }
     }
 
     /// Scan options derived from the thread setting.
@@ -119,6 +165,16 @@ impl RunConfig {
             ("block_len", self.block_len.into()),
             ("out_dir", self.out_dir.display().to_string().into()),
             ("xla_workers", self.xla_workers.into()),
+            (
+                "session_store",
+                match &self.session_store {
+                    Some(dir) => Json::Str(dir.display().to_string()),
+                    None => Json::Str(String::new()),
+                },
+            ),
+            ("resident_watermark", self.resident_watermark.into()),
+            ("group_commit_us", (self.group_commit_us as usize).into()),
+            ("housekeeping", Json::Bool(self.housekeeping)),
         ])
     }
 }
@@ -159,6 +215,34 @@ mod tests {
         assert_eq!(back.ge, c.ge);
         assert_eq!(back.t_grid, c.t_grid);
         assert_eq!(back.seed, c.seed);
+        assert_eq!(back.session_store, c.session_store);
+        assert_eq!(back.resident_watermark, c.resident_watermark);
+        assert_eq!(back.group_commit_us, c.group_commit_us);
+        assert_eq!(back.housekeeping, c.housekeeping);
+    }
+
+    #[test]
+    fn store_knobs_override_and_flow_into_coordinator_config() {
+        let c = RunConfig::from_json(
+            r#"{"session_store": "/tmp/store", "resident_watermark": 7,
+                "group_commit_us": 500, "housekeeping": false}"#,
+        )
+        .unwrap();
+        assert_eq!(c.session_store, Some(PathBuf::from("/tmp/store")));
+        assert_eq!(c.resident_watermark, 7);
+        assert_eq!(c.group_commit_us, 500);
+        assert!(!c.housekeeping);
+        let cc = c.coordinator_config();
+        assert_eq!(cc.session_store, Some(PathBuf::from("/tmp/store")));
+        assert_eq!(cc.resident_watermark, 7);
+        assert_eq!(
+            cc.group_commit_window,
+            std::time::Duration::from_micros(500)
+        );
+        assert!(!cc.housekeeping);
+        // An empty string means "no store" (the CLI's disable value).
+        let c = RunConfig::from_json(r#"{"session_store": ""}"#).unwrap();
+        assert_eq!(c.session_store, None);
     }
 
     #[test]

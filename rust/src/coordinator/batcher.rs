@@ -38,7 +38,9 @@ impl Default for BatcherConfig {
 /// A group of work items that share an artifact key.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Batch<T> {
+    /// Artifact key the items share.
     pub key: String,
+    /// The batched work items, enqueue order preserved.
     pub items: Vec<T>,
 }
 
@@ -54,6 +56,7 @@ pub struct Batcher<T> {
 }
 
 impl<T> Batcher<T> {
+    /// An empty batcher under `config`'s window/size policy.
     pub fn new(config: BatcherConfig) -> Self {
         Self { config, queues: Vec::new() }
     }

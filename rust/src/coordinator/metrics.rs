@@ -59,26 +59,49 @@ pub struct Metrics {
     restores: AtomicU64,
     sessions_recovered: AtomicU64,
     restore_latencies_us: Mutex<SampleWindow>,
+    hk_enqueued: AtomicU64,
+    hk_completed: AtomicU64,
+    sync_batches: AtomicU64,
+    sync_files: AtomicU64,
+    synced_appends: AtomicU64,
+    recovery_scans: AtomicU64,
+    recovery_scan_us: AtomicU64,
 }
 
 /// Point-in-time view of the metrics.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MetricsSnapshot {
+    /// Decode requests received.
     pub requests: u64,
+    /// Decode requests completed successfully.
     pub completed: u64,
+    /// Requests (decode or stream) that returned an error.
     pub failed: u64,
+    /// Batches dispatched by the decode batcher.
     pub batches: u64,
+    /// Requests carried across all dispatched batches.
     pub batched_items: u64,
+    /// Blocks executed by sharded (§V-B) plans.
     pub sharded_blocks: u64,
+    /// Median decode latency over the retained window, µs.
     pub p50_us: u64,
+    /// 99th-percentile decode latency over the retained window, µs.
     pub p99_us: u64,
+    /// Maximum decode latency over the retained window, µs.
     pub max_us: u64,
+    /// Streaming sessions opened.
     pub sessions_opened: u64,
+    /// Streaming sessions closed.
     pub sessions_closed: u64,
+    /// Append verbs served.
     pub appends: u64,
+    /// Observations carried across all appends.
     pub appended_obs: u64,
+    /// Median append latency over the retained window, µs.
     pub append_p50_us: u64,
+    /// 99th-percentile append latency over the retained window, µs.
     pub append_p99_us: u64,
+    /// Maximum append latency over the retained window, µs.
     pub append_max_us: u64,
     /// Suffix-rescan width histogram: (power-of-two upper bound, count),
     /// ascending, empty buckets omitted.
@@ -89,9 +112,31 @@ pub struct MetricsSnapshot {
     pub restores: u64,
     /// Sessions re-registered from the store at startup.
     pub sessions_recovered: u64,
+    /// Median transparent-restore latency over the window, µs.
     pub restore_p50_us: u64,
+    /// 99th-percentile transparent-restore latency, µs.
     pub restore_p99_us: u64,
+    /// Maximum transparent-restore latency, µs.
     pub restore_max_us: u64,
+    /// Housekeeping tasks handed to the background worker so far.
+    pub hk_enqueued: u64,
+    /// Housekeeping tasks the background worker has finished.
+    pub hk_completed: u64,
+    /// Tasks currently waiting in (or running on) the housekeeping
+    /// worker — the bounded-queue depth gauge.
+    pub hk_queue_depth: u64,
+    /// Completed group-commit sync batches (each one deadline window).
+    pub sync_batches: u64,
+    /// fsync syscalls those batches issued (one per dirty log).
+    pub sync_files: u64,
+    /// Append records acked across all completed sync batches.
+    pub synced_appends: u64,
+    /// Recovery scans run (`Coordinator::recover_sessions` calls).
+    pub recovery_scans: u64,
+    /// Wall time of the most recent recovery scan, µs — the gauge the
+    /// metadata-only recovery path keeps near-zero even for stores with
+    /// gigabytes of logged observations.
+    pub recovery_scan_us: u64,
 }
 
 impl MetricsSnapshot {
@@ -112,17 +157,31 @@ impl MetricsSnapshot {
             self.appended_obs as f64 / self.appends as f64
         }
     }
+
+    /// Mean append records acked per group-commit sync batch — the
+    /// amortization factor the deadline window buys (1.0 means every
+    /// append paid its own fsync).
+    pub fn sync_batch_occupancy(&self) -> f64 {
+        if self.sync_batches == 0 {
+            0.0
+        } else {
+            self.synced_appends as f64 / self.sync_batches as f64
+        }
+    }
 }
 
 impl Metrics {
+    /// Fresh, all-zero metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one decode request received.
     pub fn on_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one decode completing in `latency`.
     pub fn on_complete(&self, latency: Duration) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.latencies_us
@@ -131,23 +190,28 @@ impl Metrics {
             .push(latency.as_micros().min(u128::from(u64::MAX)) as u64);
     }
 
+    /// Record one failed request (decode or stream verb).
     pub fn on_failure(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one dispatched batch of `items` requests.
     pub fn on_batch(&self, items: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(items as u64, Ordering::Relaxed);
     }
 
+    /// Record `blocks` blocks executed by a sharded plan.
     pub fn on_sharded_blocks(&self, blocks: usize) {
         self.sharded_blocks.fetch_add(blocks as u64, Ordering::Relaxed);
     }
 
+    /// Record one streaming session opened.
     pub fn on_session_open(&self) {
         self.sessions_opened.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one streaming session closed.
     pub fn on_session_close(&self) {
         self.sessions_closed.fetch_add(1, Ordering::Relaxed);
     }
@@ -183,6 +247,34 @@ impl Metrics {
         self.sessions_recovered.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// Record one task handed to the housekeeping worker.
+    pub fn on_hk_enqueued(&self) {
+        self.hk_enqueued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one housekeeping task finished by the worker.
+    pub fn on_hk_completed(&self) {
+        self.hk_completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one completed group-commit batch: `files` fsyncs covering
+    /// `records` acked append records.
+    pub fn on_sync_batch(&self, files: usize, records: usize) {
+        self.sync_batches.fetch_add(1, Ordering::Relaxed);
+        self.sync_files.fetch_add(files as u64, Ordering::Relaxed);
+        self.synced_appends.fetch_add(records as u64, Ordering::Relaxed);
+    }
+
+    /// Record one recovery scan taking `elapsed` (the metadata walk of
+    /// `Coordinator::recover_sessions`).
+    pub fn on_recovery_scan(&self, elapsed: Duration) {
+        self.recovery_scans.fetch_add(1, Ordering::Relaxed);
+        self.recovery_scan_us.store(
+            elapsed.as_micros().min(u128::from(u64::MAX)) as u64,
+            Ordering::Relaxed,
+        );
+    }
+
     /// Record the forward suffix-rescan width of a fixed-lag query
     /// (bucketed immediately — power-of-two upper bound).
     pub fn on_suffix_width(&self, width: usize) {
@@ -194,6 +286,7 @@ impl Metrics {
             .or_default() += 1;
     }
 
+    /// Point-in-time copy of every counter, gauge and percentile.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut lat = self.latencies_us.lock().unwrap().samples.clone();
         lat.sort_unstable();
@@ -234,6 +327,17 @@ impl Metrics {
             restore_p50_us: pct(&res, 0.50),
             restore_p99_us: pct(&res, 0.99),
             restore_max_us: res.last().copied().unwrap_or(0),
+            hk_enqueued: self.hk_enqueued.load(Ordering::Relaxed),
+            hk_completed: self.hk_completed.load(Ordering::Relaxed),
+            hk_queue_depth: self
+                .hk_enqueued
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.hk_completed.load(Ordering::Relaxed)),
+            sync_batches: self.sync_batches.load(Ordering::Relaxed),
+            sync_files: self.sync_files.load(Ordering::Relaxed),
+            synced_appends: self.synced_appends.load(Ordering::Relaxed),
+            recovery_scans: self.recovery_scans.load(Ordering::Relaxed),
+            recovery_scan_us: self.recovery_scan_us.load(Ordering::Relaxed),
         }
     }
 }
@@ -272,6 +376,31 @@ mod tests {
         assert!(s.suffix_width_hist.is_empty());
         assert_eq!((s.spills, s.restores, s.sessions_recovered), (0, 0, 0));
         assert_eq!(s.restore_p50_us, 0);
+        assert_eq!((s.hk_enqueued, s.hk_completed, s.hk_queue_depth), (0, 0, 0));
+        assert_eq!((s.sync_batches, s.sync_files, s.synced_appends), (0, 0, 0));
+        assert_eq!(s.sync_batch_occupancy(), 0.0);
+        assert_eq!((s.recovery_scans, s.recovery_scan_us), (0, 0));
+    }
+
+    #[test]
+    fn housekeeping_sync_and_recovery_gauges() {
+        let m = Metrics::new();
+        for _ in 0..5 {
+            m.on_hk_enqueued();
+        }
+        for _ in 0..3 {
+            m.on_hk_completed();
+        }
+        m.on_sync_batch(2, 9);
+        m.on_sync_batch(1, 1);
+        m.on_recovery_scan(Duration::from_micros(450));
+        m.on_recovery_scan(Duration::from_micros(120));
+        let s = m.snapshot();
+        assert_eq!((s.hk_enqueued, s.hk_completed, s.hk_queue_depth), (5, 3, 2));
+        assert_eq!((s.sync_batches, s.sync_files, s.synced_appends), (2, 3, 10));
+        assert!((s.sync_batch_occupancy() - 5.0).abs() < 1e-12);
+        assert_eq!(s.recovery_scans, 2);
+        assert_eq!(s.recovery_scan_us, 120, "gauge holds the latest scan");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Request/response types for the decode service.
 //!
-//! The task taxonomy here is a *view* over [`engine::Algorithm`]
+//! The task taxonomy here is a *view* over [`Algorithm`]
 //! — the single source of truth for algorithm names and entry points —
 //! collapsed to what a decode client chooses between: smoothing
 //! marginals, a MAP path, or the Bayesian-smoother formulation.
@@ -113,15 +113,19 @@ pub struct DecodeRequest {
     pub model: String,
     /// Observation symbols (length T ≥ 1).
     pub ys: Vec<u32>,
+    /// Which inference task to run.
     pub algo: Algo,
+    /// Execution-plan constraint (default: router's choice).
     pub mode: ExecMode,
 }
 
 impl DecodeRequest {
+    /// A request in [`ExecMode::Auto`].
     pub fn new(id: u64, model: impl Into<String>, ys: Vec<u32>, algo: Algo) -> Self {
         Self { id, model: model.into(), ys, algo, mode: ExecMode::Auto }
     }
 
+    /// Constrain the execution plan (builder-style).
     pub fn with_mode(mut self, mode: ExecMode) -> Self {
         self.mode = mode;
         self
@@ -131,11 +135,14 @@ impl DecodeRequest {
 /// Decode output payload.
 #[derive(Debug, Clone)]
 pub enum DecodeResult {
+    /// Smoothing marginals (the sum-product / Bayesian tasks).
     Posterior(Posterior),
+    /// MAP path estimate (the max-product task).
     Map(MapEstimate),
 }
 
 impl DecodeResult {
+    /// The posterior payload, when this is a smoothing result.
     pub fn as_posterior(&self) -> Option<&Posterior> {
         match self {
             DecodeResult::Posterior(p) => Some(p),
@@ -143,6 +150,7 @@ impl DecodeResult {
         }
     }
 
+    /// The MAP payload, when this is a decode result.
     pub fn as_map(&self) -> Option<&MapEstimate> {
         match self {
             DecodeResult::Map(m) => Some(m),
@@ -161,19 +169,34 @@ pub enum StreamVerb {
     /// `CoordinatorConfig::max_stream_lag` (appends run an O(lag +
     /// block) query on the serve loop).
     Open {
+        /// Model registry key to bind the session to.
         model: String,
+        /// Session options (checkpoint block, MAP tracking, kind).
         options: SessionOptions,
+        /// Fixed-lag smoothing width returned on every append (0 =
+        /// filtering only).
         lag: usize,
     },
     /// Ingest observations into an open session. Evicted sessions are
     /// transparently restored from the session store first.
-    Append { session: u64, ys: Vec<u32> },
+    Append {
+        /// Target session id (from [`StreamReply::Opened`]).
+        session: u64,
+        /// Observation chunk to append (may be empty — a poll).
+        ys: Vec<u32>,
+    },
     /// Report residency for one session plus coordinator-wide gauges —
     /// cheap (no restore is triggered).
-    Stat { session: u64 },
+    Stat {
+        /// Target session id.
+        session: u64,
+    },
     /// Produce the exact full-sequence posterior and remove the session
     /// (restoring it first when evicted).
-    Close { session: u64 },
+    Close {
+        /// Target session id.
+        session: u64,
+    },
 }
 
 /// A streaming request (see [`StreamVerb`]).
@@ -181,10 +204,12 @@ pub enum StreamVerb {
 pub struct StreamRequest {
     /// Caller-chosen id, echoed in the response.
     pub id: u64,
+    /// The verb to serve.
     pub verb: StreamVerb,
 }
 
 impl StreamRequest {
+    /// An [`StreamVerb::Open`] with default session options.
     pub fn open(id: u64, model: impl Into<String>, lag: usize) -> Self {
         Self {
             id,
@@ -196,14 +221,17 @@ impl StreamRequest {
         }
     }
 
+    /// An [`StreamVerb::Append`] of one observation chunk.
     pub fn append(id: u64, session: u64, ys: Vec<u32>) -> Self {
         Self { id, verb: StreamVerb::Append { session, ys } }
     }
 
+    /// A [`StreamVerb::Stat`] residency probe.
     pub fn stat(id: u64, session: u64) -> Self {
         Self { id, verb: StreamVerb::Stat { session } }
     }
 
+    /// A [`StreamVerb::Close`] for the exact posterior.
     pub fn close(id: u64, session: u64) -> Self {
         Self { id, verb: StreamVerb::Close { session } }
     }
@@ -212,10 +240,14 @@ impl StreamRequest {
 /// Streaming reply payload, shaped by the verb.
 #[derive(Debug, Clone)]
 pub enum StreamReply {
+    /// The session is open and durable; its id serves every later verb.
     Opened {
+        /// Coordinator-assigned session id.
         session: u64,
     },
+    /// One append was applied (and durably logged, disk stores).
     Appended {
+        /// Echo of the target session id.
         session: u64,
         /// Observations held by the session after this append.
         len: usize,
@@ -230,6 +262,7 @@ pub enum StreamReply {
     },
     /// Residency report for one session ([`StreamVerb::Stat`]).
     Stats {
+        /// Echo of the target session id.
         session: u64,
         /// Observations held (resident or spilled).
         len: usize,
@@ -242,8 +275,12 @@ pub enum StreamReply {
         /// Coordinator-wide gauge: sessions currently resident.
         resident_sessions: usize,
     },
+    /// The session is finished and removed everywhere.
     Closed {
+        /// Echo of the target session id.
         session: u64,
+        /// Exact full-sequence posterior, bit-identical to the one-shot
+        /// parallel smoother under the session's scan options.
         posterior: Posterior,
     },
 }
@@ -251,7 +288,9 @@ pub enum StreamReply {
 /// A served streaming response.
 #[derive(Debug, Clone)]
 pub struct StreamResponse {
+    /// Echo of the request id.
     pub id: u64,
+    /// Verb-shaped payload.
     pub reply: StreamReply,
     /// Wall time spent serving the verb.
     pub elapsed: std::time::Duration,
@@ -260,7 +299,9 @@ pub struct StreamResponse {
 /// A served response.
 #[derive(Debug, Clone)]
 pub struct DecodeResponse {
+    /// Echo of the request id.
     pub id: u64,
+    /// The decode payload (posterior or MAP path).
     pub result: DecodeResult,
     /// Human-readable description of the plan that served the request
     /// ("pjrt:sp_par_T1024_D4_M2 pad=24", "sharded:blocks=8", "native").

@@ -73,6 +73,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// A planner under `config`'s routing thresholds.
     pub fn new(config: RouterConfig) -> Self {
         Self { config }
     }

@@ -1,9 +1,10 @@
 //! The coordinator server: XLA worker pool, model registry, decode entry
 //! points, the durable session registry (watermark-driven eviction to a
-//! `store::SessionStore`, transparent restore, crash recovery), and the
-//! channel-fed serve loop.
+//! `store::SessionStore`, transparent restore, crash recovery), the
+//! background housekeeping worker that keeps spills and log compactions
+//! off the serve path, and the channel-fed serve loop.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
@@ -17,6 +18,7 @@ use crate::runtime::{ArtifactExec, Manifest, Registry, Value};
 use crate::scan::ScanOptions;
 use crate::store::{
     model_fingerprint, DiskStore, MemStore, SessionMeta, SessionStore,
+    DEFAULT_GROUP_COMMIT_WINDOW,
 };
 
 use super::batcher::{Batcher, BatcherConfig};
@@ -48,6 +50,8 @@ pub struct XlaPool {
 }
 
 impl XlaPool {
+    /// Spawn `workers` PJRT worker threads over the artifact directory
+    /// `dir` (validating its manifest up front).
     pub fn new(dir: PathBuf, workers: usize) -> Result<Self> {
         // Validate the manifest once up front for a fast, typed failure.
         Manifest::load(&dir)?;
@@ -143,7 +147,9 @@ pub struct CoordinatorConfig {
     pub artifacts: Option<PathBuf>,
     /// XLA worker threads (each owns a PJRT client).
     pub xla_workers: usize,
+    /// Decode-batching policy (window + max batch size).
     pub batcher: BatcherConfig,
+    /// Plan-selection policy (artifact routing thresholds).
     pub router: RouterConfig,
     /// Threading for the native algorithm library.
     pub scan: ScanOptions,
@@ -185,6 +191,32 @@ pub struct CoordinatorConfig {
     /// checkpoint-compaction cycles of its log — bounds both the log
     /// length and the append-replay cost of a restore.
     pub checkpoint_every: usize,
+    /// Run watermark spills and checkpoint compactions on a background
+    /// housekeeping worker (the default): a burst of opens never pays
+    /// snapshot/serde cost in-band, at the price of residency
+    /// transiently overshooting the watermark until the worker catches
+    /// up (the `max_open_sessions` backstop still bounds the registry).
+    /// `false` restores the in-band behavior: every verb re-imposes the
+    /// watermark synchronously before returning.
+    pub housekeeping: bool,
+    /// Bounded depth of the housekeeping work queue. A full queue drops
+    /// new nudges rather than blocking the serve path — safe, because
+    /// every queued task ends with a watermark pass, so pending work
+    /// already covers the dropped intent.
+    pub housekeeping_queue: usize,
+    /// Group-commit deadline window for the disk store's append fsyncs
+    /// (see `store::disk`): appends from concurrent sessions inside one
+    /// window share fsyncs, acked only after their covering sync.
+    /// `Duration::ZERO` fsyncs inline per append. Ignored by non-disk
+    /// stores.
+    pub group_commit_window: Duration,
+    /// Resident-RAM *byte* budget across all resident element chains,
+    /// each session weighted by T·D²·8 bytes (its chain estimate) — so
+    /// eviction sheds one giant session instead of many small ones.
+    /// Enforced alongside the count watermark; `usize::MAX` disables.
+    /// Never spills the last resident session (a lone over-budget
+    /// session would otherwise thrash spill/restore on every touch).
+    pub resident_bytes_watermark: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -203,6 +235,10 @@ impl Default for CoordinatorConfig {
             max_open_sessions: 1 << 16,
             session_store: None,
             checkpoint_every: 4096,
+            housekeeping: true,
+            housekeeping_queue: 64,
+            group_commit_window: DEFAULT_GROUP_COMMIT_WINDOW,
+            resident_bytes_watermark: usize::MAX,
         }
     }
 }
@@ -226,21 +262,20 @@ pub struct Coordinator {
     xla: Option<XlaBackend>,
     router: Router,
     models: RwLock<BTreeMap<String, ModelEntry>>,
-    /// Streaming sessions, keyed like the per-model engine map: each
-    /// entry owns its mutex-serialized slot (resident `engine::Session`
-    /// or an evicted stub restorable from the store).
-    sessions: RwLock<BTreeMap<u64, Arc<SessionEntry>>>,
+    /// The session maps, gauges and spill/restore machinery — shared
+    /// with the housekeeping worker, which holds its own `Arc`.
+    registry: Arc<SessionRegistry>,
+    /// Background spill/compaction worker; `None` runs housekeeping
+    /// in-band on the serve path (`CoordinatorConfig::housekeeping`).
+    housekeeper: Option<Housekeeper>,
     next_session: AtomicU64,
     max_stream_lag: usize,
-    resident_watermark: usize,
     max_open_sessions: usize,
-    checkpoint_every: usize,
-    /// Spill/restore/recovery backend (disk or in-memory).
+    /// Spill/restore/recovery backend — always a clone of
+    /// `registry.store` (kept here so the serve path doesn't chase two
+    /// pointers); constructors must set both from the same Arc.
     store: Arc<dyn SessionStore>,
-    /// Logical LRU clock, bumped on every session touch.
-    clock: AtomicU64,
-    /// Gauge: sessions whose element chains are resident right now.
-    resident: AtomicUsize,
+    /// Always a clone of `registry.metrics` (same invariant).
     metrics: Arc<Metrics>,
     scan: ScanOptions,
     batcher_config: BatcherConfig,
@@ -263,11 +298,20 @@ struct SessionEntry {
     hmm: Arc<Hmm>,
     meta: SessionMeta,
     /// LRU stamp: coordinator clock at the last open/append/close touch.
+    /// Written only inside the registry's `lru`-locked helpers, so the
+    /// ordered index and the stamp can never disagree.
     touch: AtomicU64,
     /// Residency hint readable without the slot lock (eviction scans).
     resident: AtomicBool,
     /// Observations appended since the last log compaction.
     since_ckpt: AtomicU64,
+    /// A checkpoint-compaction request for this session is already on
+    /// the housekeeping queue (dedupes repeated nudges while one is in
+    /// flight).
+    ckpt_pending: AtomicBool,
+    /// Resident bytes currently charged against the byte-budget
+    /// watermark (T·D²·8 at the last push/restore; 0 while evicted).
+    charged: AtomicUsize,
 }
 
 /// Residency state of a session.
@@ -278,7 +322,321 @@ enum SessionSlot {
     Evicted { len: usize },
 }
 
+/// The session-registry core shared by the serve path and the
+/// housekeeping worker: the session map, the ordered LRU index, the
+/// residency gauges, and the spill/restore machinery. Everything here
+/// takes `&self` — the coordinator and the worker hold separate `Arc`s.
+struct SessionRegistry {
+    /// Streaming sessions, keyed like the per-model engine map: each
+    /// entry owns its mutex-serialized slot (resident `engine::Session`
+    /// or an evicted stub restorable from the store).
+    sessions: RwLock<BTreeMap<u64, Arc<SessionEntry>>>,
+    /// Ordered `(touch, id)` index over the *resident* sessions,
+    /// maintained on every touch/spill/restore — victim selection pops
+    /// its first live entry in O(log n), replacing the O(n) session-map
+    /// scan. Lock order: `sessions` (if held) before `lru`; `lru` is
+    /// never held across a slot lock or store call.
+    lru: Mutex<BTreeSet<(u64, u64)>>,
+    /// Logical LRU clock, bumped on every session touch.
+    clock: AtomicU64,
+    /// Gauge: sessions whose element chains are resident right now.
+    resident: AtomicUsize,
+    /// Gauge: estimated resident element-chain bytes (Σ T·D²·8).
+    resident_bytes: AtomicUsize,
+    /// Spill/restore/recovery backend (disk or in-memory).
+    store: Arc<dyn SessionStore>,
+    metrics: Arc<Metrics>,
+    scan: ScanOptions,
+    resident_watermark: usize,
+    resident_bytes_watermark: usize,
+    /// Observations between checkpoint compactions (≥ 1).
+    checkpoint_every: usize,
+}
+
+impl SessionRegistry {
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
+    fn entry(&self, id: u64) -> Result<Arc<SessionEntry>> {
+        self.sessions
+            .read()
+            .unwrap()
+            .get(&id)
+            .cloned()
+            .ok_or_else(|| Error::invalid_request(format!("unknown session {id}")))
+    }
+
+    /// Stamp a fresh touch and re-key the LRU index entry (resident
+    /// sessions only — evicted ones are not indexed).
+    fn touch(&self, id: u64, entry: &SessionEntry) {
+        let mut lru = self.lru.lock().unwrap();
+        let now = self.tick();
+        let old = entry.touch.swap(now, Ordering::Relaxed);
+        if entry.resident.load(Ordering::Relaxed) {
+            lru.remove(&(old, id));
+            lru.insert((now, id));
+        }
+    }
+
+    /// Flip `entry` resident (idempotent): gauge, flag and index move
+    /// together under the `lru` lock, so a racing touch can never leave
+    /// a stale index key behind.
+    fn note_resident(&self, id: u64, entry: &SessionEntry) {
+        let mut lru = self.lru.lock().unwrap();
+        if !entry.resident.swap(true, Ordering::Relaxed) {
+            self.resident.fetch_add(1, Ordering::Relaxed);
+            lru.insert((entry.touch.load(Ordering::Relaxed), id));
+        }
+    }
+
+    /// Flip `entry` evicted (idempotent; the swap guard keeps a
+    /// close/spill race from double-decrementing the gauge) and release
+    /// its byte charge.
+    fn note_evicted(&self, id: u64, entry: &SessionEntry) {
+        {
+            let mut lru = self.lru.lock().unwrap();
+            if entry.resident.swap(false, Ordering::Relaxed) {
+                self.resident.fetch_sub(1, Ordering::Relaxed);
+                lru.remove(&(entry.touch.load(Ordering::Relaxed), id));
+            }
+        }
+        let old = entry.charged.swap(0, Ordering::Relaxed);
+        self.resident_bytes.fetch_sub(old, Ordering::Relaxed);
+    }
+
+    /// Re-estimate a resident session's byte charge after its length
+    /// changed (called under the session's slot lock).
+    fn recharge(&self, entry: &SessionEntry, len: usize) {
+        let d = entry.hmm.num_states();
+        let new = len.saturating_mul(d.saturating_mul(d).saturating_mul(8));
+        let old = entry.charged.swap(new, Ordering::Relaxed);
+        if new >= old {
+            self.resident_bytes.fetch_add(new - old, Ordering::Relaxed);
+        } else {
+            self.resident_bytes.fetch_sub(old - new, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether eviction has work: the count watermark is breached, or
+    /// the byte budget is (never counting a lone resident session —
+    /// spilling it would thrash restore/spill on every touch).
+    fn over_watermark(&self) -> bool {
+        let resident = self.resident.load(Ordering::Relaxed);
+        resident > self.resident_watermark
+            || (resident > 1
+                && self.resident_bytes.load(Ordering::Relaxed)
+                    > self.resident_bytes_watermark)
+    }
+
+    /// Least-recently-touched resident session other than `protect`:
+    /// the first live entry of the ordered index (stale keys met on the
+    /// way — closed or already-spilled sessions — are swept out).
+    fn pick_victim(
+        &self,
+        protect: Option<u64>,
+    ) -> Option<(u64, Arc<SessionEntry>)> {
+        let sessions = self.sessions.read().unwrap();
+        let mut lru = self.lru.lock().unwrap();
+        let mut stale = Vec::new();
+        let mut found = None;
+        for &(touch, id) in lru.iter() {
+            if Some(id) == protect {
+                continue;
+            }
+            match sessions.get(&id) {
+                Some(e) if e.resident.load(Ordering::Relaxed) => {
+                    found = Some((id, Arc::clone(e)));
+                    break;
+                }
+                _ => stale.push((touch, id)),
+            }
+        }
+        for key in stale {
+            lru.remove(&key);
+        }
+        found
+    }
+
+    /// Restore an evicted session into its slot (no-op when resident):
+    /// resume from the stored checkpoint snapshot (bit-identical — the
+    /// `elements::serde` round-trip is exact) and replay the appends
+    /// logged after it. Called under the session's slot lock.
+    fn make_resident(
+        &self,
+        id: u64,
+        entry: &SessionEntry,
+        slot: &mut SessionSlot,
+    ) -> Result<()> {
+        if matches!(slot, SessionSlot::Resident(_)) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let stored = self.store.restore(id)?;
+        // Restore against the session's *original* model handle — never
+        // the registry's current entry, which a re-registration may have
+        // replaced. Resident sessions keep their Arc<Hmm> across
+        // re-registration; evicted ones must behave identically, or
+        // eviction stops being transparent.
+        let engine = Engine::builder(Arc::clone(&entry.hmm))
+            .scan_options(self.scan)
+            .build();
+        let mut session = match &stored.snapshot {
+            Some(snap) => engine.resume_session(snap)?,
+            None => engine.open_session(entry.meta.options),
+        };
+        for chunk in &stored.appends {
+            session.push(chunk)?;
+        }
+        let len = session.len();
+        *slot = SessionSlot::Resident(session);
+        self.note_resident(id, entry);
+        self.recharge(entry, len);
+        self.metrics.on_restore(t0.elapsed());
+        Ok(())
+    }
+
+    /// Demote one resident session to the store: snapshot → compacted
+    /// log → drop the in-RAM chain. No-op when already evicted. An
+    /// append racing this spill queues behind the slot lock and
+    /// restores on entry — it can never observe a half-spilled chain.
+    fn spill_session(&self, id: u64, entry: &SessionEntry) -> Result<()> {
+        let mut slot = entry.slot.lock().expect("session mutex poisoned");
+        let SessionSlot::Resident(session) = &mut *slot else {
+            return Ok(());
+        };
+        let len = session.len();
+        self.store.compact(id, &entry.meta, &session.snapshot())?;
+        entry.since_ckpt.store(0, Ordering::Relaxed);
+        *slot = SessionSlot::Evicted { len };
+        self.note_evicted(id, entry);
+        self.metrics.on_spill();
+        Ok(())
+    }
+
+    /// Checkpoint-compact one session's log in the background (the
+    /// housekeeping twin of the old in-band compaction). Evicted
+    /// sessions are skipped — the spill already compacted them.
+    fn compact_session(&self, id: u64, entry: &SessionEntry) {
+        let mut slot = entry.slot.lock().expect("session mutex poisoned");
+        if let SessionSlot::Resident(session) = &mut *slot {
+            // Best-effort: a failed compaction leaves the (longer but
+            // valid) log in place; since_ckpt keeps growing, so a later
+            // append re-requests it.
+            if self.store.compact(id, &entry.meta, &session.snapshot()).is_ok() {
+                entry.since_ckpt.store(0, Ordering::Relaxed);
+            }
+        }
+        entry.ckpt_pending.store(false, Ordering::Relaxed);
+    }
+
+    /// Watermark-driven eviction: while residency exceeds the count or
+    /// byte watermark, spill the least-recently-touched session (never
+    /// `protect` — the session serving the current verb, in-band mode).
+    fn enforce_watermark(&self, protect: Option<u64>) {
+        while self.over_watermark() {
+            let Some((id, entry)) = self.pick_victim(protect) else { break };
+            if self.spill_session(id, &entry).is_err() {
+                // Store failure: stop evicting and keep serving from RAM
+                // rather than dropping state.
+                break;
+            }
+        }
+    }
+}
+
+/// Work items for the housekeeping worker.
+enum HkTask {
+    /// Re-impose the residency watermarks (spill victims as needed).
+    Enforce,
+    /// Checkpoint-compact one session's append-ahead log.
+    Compact(u64),
+    /// Reply once everything queued before this task (plus a final
+    /// watermark pass) has completed — the quiesce barrier.
+    Quiesce(mpsc::Sender<()>),
+}
+
+/// The background housekeeping worker: one thread draining a bounded
+/// queue of spill/compaction work so the serve path never pays
+/// snapshot-serde or compaction fsyncs in-band. Dropping it closes the
+/// queue and joins the thread.
+struct Housekeeper {
+    tx: Option<mpsc::SyncSender<HkTask>>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl Housekeeper {
+    fn spawn(registry: Arc<SessionRegistry>, queue: usize) -> Housekeeper {
+        let (tx, rx) = mpsc::sync_channel::<HkTask>(queue.max(1));
+        let join = thread::Builder::new()
+            .name("hmm-scan-housekeeper".into())
+            .spawn(move || {
+                while let Ok(task) = rx.recv() {
+                    match task {
+                        HkTask::Enforce => {
+                            registry.enforce_watermark(None);
+                            registry.metrics.on_hk_completed();
+                        }
+                        HkTask::Compact(id) => {
+                            if let Ok(entry) = registry.entry(id) {
+                                registry.compact_session(id, &entry);
+                            }
+                            // Every task ends with a watermark pass, so
+                            // a nudge dropped on a full queue is still
+                            // covered by whatever was already queued.
+                            registry.enforce_watermark(None);
+                            registry.metrics.on_hk_completed();
+                        }
+                        HkTask::Quiesce(done) => {
+                            registry.enforce_watermark(None);
+                            let _ = done.send(());
+                        }
+                    }
+                }
+            })
+            .expect("spawn housekeeper");
+        Housekeeper { tx: Some(tx), join: Some(join) }
+    }
+
+    /// Non-blocking enqueue; `false` when the bounded queue is full.
+    fn submit(&self, task: HkTask) -> bool {
+        self.tx
+            .as_ref()
+            .expect("housekeeper shut down")
+            .try_send(task)
+            .is_ok()
+    }
+
+    /// Block until the worker has drained everything queued so far and
+    /// run a final watermark pass.
+    fn quiesce(&self) {
+        let (done_tx, done_rx) = mpsc::channel();
+        let sent = self
+            .tx
+            .as_ref()
+            .expect("housekeeper shut down")
+            .send(HkTask::Quiesce(done_tx))
+            .is_ok();
+        if sent {
+            let _ = done_rx.recv();
+        }
+    }
+}
+
+impl Drop for Housekeeper {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
 impl Coordinator {
+    /// Build a coordinator: XLA pool (when artifacts are configured),
+    /// session store (disk-backed when `session_store` is set, with
+    /// group commit wired to the metrics), registry, and — unless
+    /// disabled — the background housekeeping worker.
     pub fn new(config: CoordinatorConfig) -> Result<Self> {
         let (manifest, pool) = match &config.artifacts {
             Some(dir) => {
@@ -295,8 +653,17 @@ impl Coordinator {
             }
             _ => None,
         };
+        let metrics = Arc::new(Metrics::new());
         let store: Arc<dyn SessionStore> = match &config.session_store {
-            Some(dir) => Arc::new(DiskStore::open(dir.clone())?),
+            Some(dir) => {
+                let mut disk = DiskStore::open(dir.clone())?
+                    .with_group_commit_window(config.group_commit_window);
+                let m = Arc::clone(&metrics);
+                disk.set_sync_observer(move |files, records| {
+                    m.on_sync_batch(files, records)
+                });
+                Arc::new(disk)
+            }
             None => Arc::new(MemStore::new()),
         };
         // Seed the id allocator past everything the store already holds:
@@ -304,27 +671,42 @@ impl Coordinator {
         // durable log of — a crashed session's id, even when the
         // operator serves opens before calling `recover_sessions`.
         let first_free_id = store.max_id()?.unwrap_or(0);
+        let registry = Arc::new(SessionRegistry {
+            sessions: RwLock::new(BTreeMap::new()),
+            lru: Mutex::new(BTreeSet::new()),
+            clock: AtomicU64::new(0),
+            resident: AtomicUsize::new(0),
+            resident_bytes: AtomicUsize::new(0),
+            store: Arc::clone(&store),
+            metrics: Arc::clone(&metrics),
+            scan: config.scan,
+            resident_watermark: config.resident_watermark,
+            resident_bytes_watermark: config.resident_bytes_watermark,
+            checkpoint_every: config.checkpoint_every.max(1),
+        });
+        let housekeeper = config.housekeeping.then(|| {
+            Housekeeper::spawn(Arc::clone(&registry), config.housekeeping_queue)
+        });
         Ok(Self {
             manifest,
             pool,
             xla,
             router: Router::new(config.router),
             models: RwLock::new(BTreeMap::new()),
-            sessions: RwLock::new(BTreeMap::new()),
+            registry,
+            housekeeper,
             next_session: AtomicU64::new(first_free_id),
             max_stream_lag: config.max_stream_lag,
-            resident_watermark: config.resident_watermark,
             max_open_sessions: config.max_open_sessions,
-            checkpoint_every: config.checkpoint_every.max(1),
             store,
-            clock: AtomicU64::new(0),
-            resident: AtomicUsize::new(0),
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             scan: config.scan,
             batcher_config: config.batcher,
         })
     }
 
+    /// Register (or replace) a servable model under `id`, building its
+    /// dedicated engine with the coordinator's scan options.
     pub fn register_model(&self, id: impl Into<String>, hmm: Hmm) {
         let hmm = Arc::new(hmm);
         let engine = Engine::builder(Arc::clone(&hmm))
@@ -343,14 +725,17 @@ impl Coordinator {
             .ok_or_else(|| Error::invalid_request(format!("unknown model '{id}'")))
     }
 
+    /// Look up a registered model by id.
     pub fn model(&self, id: &str) -> Result<Arc<Hmm>> {
         Ok(self.entry(id)?.hmm)
     }
 
+    /// The serving metrics (counters, gauges, latency percentiles).
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
+    /// The loaded artifact manifest, when PJRT serving is enabled.
     pub fn manifest(&self) -> Option<&Manifest> {
         self.manifest.as_deref()
     }
@@ -493,25 +878,27 @@ impl Coordinator {
                     slot: Mutex::new(SessionSlot::Resident(session)),
                     hmm: entry.hmm,
                     meta,
-                    touch: AtomicU64::new(self.tick()),
+                    touch: AtomicU64::new(self.registry.tick()),
                     resident: AtomicBool::new(true),
                     since_ckpt: AtomicU64::new(0),
+                    ckpt_pending: AtomicBool::new(false),
+                    charged: AtomicUsize::new(0),
                 });
                 // Count the residency *before* the entry is published:
                 // a concurrent eviction scan may spill it the moment it
                 // appears in the map, and its swap-guarded decrement
                 // must never land on a gauge that has not yet been
                 // incremented (usize wrap → permanent eviction churn).
-                self.resident.fetch_add(1, Ordering::Relaxed);
+                self.registry.resident.fetch_add(1, Ordering::Relaxed);
                 {
                     // DoS backstop, checked atomically with the insert:
                     // even spilled sessions cost a registry entry + store
                     // state, so total opens stay bounded (the watermark
                     // only bounds *residency*).
-                    let mut sessions = self.sessions.write().unwrap();
+                    let mut sessions = self.registry.sessions.write().unwrap();
                     if sessions.len() >= self.max_open_sessions {
                         drop(sessions);
-                        self.resident.fetch_sub(1, Ordering::Relaxed);
+                        self.registry.resident.fetch_sub(1, Ordering::Relaxed);
                         return Err(Error::invalid_request(format!(
                             "open session limit {} reached",
                             self.max_open_sessions
@@ -519,18 +906,28 @@ impl Coordinator {
                     }
                     sessions.insert(id, Arc::clone(&sess_entry));
                 }
+                // Index the new resident for O(log n) victim selection.
+                // This three-step publish (gauge above, map insert,
+                // index insert) intentionally bypasses `note_resident`:
+                // the flag is already true, and the id is unreachable
+                // to other verbs until the reply below — keep it that
+                // way if these steps are ever reordered, or the
+                // gauge/flag/index-move-together invariant of the
+                // registry helpers stops holding.
+                self.registry.lru.lock().unwrap().insert((
+                    sess_entry.touch.load(Ordering::Relaxed),
+                    id,
+                ));
                 // Durable open record before the id is revealed to the
                 // client (the entry is registered but unreachable until
                 // the reply); a create failure rolls the open back.
                 if let Err(e) = self.store.create(id, &sess_entry.meta) {
-                    self.sessions.write().unwrap().remove(&id);
-                    if sess_entry.resident.swap(false, Ordering::Relaxed) {
-                        self.resident.fetch_sub(1, Ordering::Relaxed);
-                    }
+                    self.registry.sessions.write().unwrap().remove(&id);
+                    self.registry.note_evicted(id, &sess_entry);
                     return Err(e);
                 }
                 self.metrics.on_session_open();
-                self.enforce_watermark(Some(id));
+                self.kick_housekeeping(Some(id));
                 Ok(StreamReply::Opened { session: id })
             }
             StreamVerb::Append { session, ys } => {
@@ -545,14 +942,16 @@ impl Coordinator {
                 let reply = (|| -> Result<StreamReply> {
                     let mut slot =
                         entry.slot.lock().expect("session mutex poisoned");
-                    self.make_resident(session, &entry, &mut slot)?;
+                    self.registry.make_resident(session, &entry, &mut slot)?;
                     // Append-ahead: the chunk is durable before the
                     // resident session applies it (a crash between the
-                    // two replays it from the log on recovery).
-                    // Non-durable stores skip the log — their spill-time
-                    // snapshot covers everything a same-process restore
-                    // needs, and logging every chunk would duplicate hot
-                    // sessions' observations in RAM.
+                    // two replays it from the log on recovery; a disk
+                    // store acks only after a covering group-commit
+                    // fsync). Non-durable stores skip the log — their
+                    // spill-time snapshot covers everything a
+                    // same-process restore needs, and logging every
+                    // chunk would duplicate hot sessions' observations
+                    // in RAM.
                     if !ys.is_empty() && self.store.durable() {
                         self.store.log_append(session, &ys)?;
                     }
@@ -560,6 +959,7 @@ impl Coordinator {
                         unreachable!("make_resident")
                     };
                     s.push(&ys)?;
+                    self.registry.recharge(&entry, s.len());
                     let filtered = s.filtered()?;
                     let (window, plan_hint) = if entry.meta.lag > 0 {
                         let win = s.smoothed_lag(entry.meta.lag)?;
@@ -579,21 +979,44 @@ impl Coordinator {
                     // Periodic checkpoint + compaction bounds the log
                     // length and the append-replay cost of a future
                     // restore (moot for non-durable stores, which have
-                    // no log). Best-effort: a failed compaction leaves
-                    // the (longer but valid) log in place and retries on
-                    // a later append.
+                    // no log). With a housekeeper the O(T) snapshot
+                    // serde runs off the serve path (one in-flight
+                    // request per session); in-band mode compacts here,
+                    // best-effort — a failed compaction leaves the
+                    // (longer but valid) log in place and retries on a
+                    // later append.
                     let since = entry
                         .since_ckpt
                         .fetch_add(ys.len() as u64, Ordering::Relaxed)
                         + ys.len() as u64;
-                    if since >= self.checkpoint_every as u64
+                    if since >= self.registry.checkpoint_every as u64
                         && self.store.durable()
-                        && self
-                            .store
-                            .compact(session, &entry.meta, &s.snapshot())
-                            .is_ok()
                     {
-                        entry.since_ckpt.store(0, Ordering::Relaxed);
+                        match &self.housekeeper {
+                            Some(hk) => {
+                                if !entry.ckpt_pending.swap(true, Ordering::Relaxed)
+                                {
+                                    if hk.submit(HkTask::Compact(session)) {
+                                        self.metrics.on_hk_enqueued();
+                                    } else {
+                                        // Queue full: clear the claim so
+                                        // a later append re-requests.
+                                        entry
+                                            .ckpt_pending
+                                            .store(false, Ordering::Relaxed);
+                                    }
+                                }
+                            }
+                            None => {
+                                if self
+                                    .store
+                                    .compact(session, &entry.meta, &s.snapshot())
+                                    .is_ok()
+                                {
+                                    entry.since_ckpt.store(0, Ordering::Relaxed);
+                                }
+                            }
+                        }
                     }
                     Ok(StreamReply::Appended {
                         session,
@@ -603,14 +1026,14 @@ impl Coordinator {
                         plan_hint,
                     })
                 })();
-                entry.touch.store(self.tick(), Ordering::Relaxed);
+                self.registry.touch(session, &entry);
                 if reply.is_ok() {
                     self.metrics.on_append(ys.len(), start.elapsed());
                 }
                 // Success or failure, the verb may have restored the
-                // session — re-impose the watermark either way (the
-                // failure-path twin of Close's handling).
-                self.enforce_watermark(Some(session));
+                // session — re-impose (or request) the watermark either
+                // way (the failure-path twin of Close's handling).
+                self.kick_housekeeping(Some(session));
                 reply
             }
             StreamVerb::Stat { session } => {
@@ -634,7 +1057,7 @@ impl Coordinator {
             StreamVerb::Close { session } => {
                 let entry = self.session_entry(session)?;
                 let mut slot = entry.slot.lock().expect("session mutex poisoned");
-                self.make_resident(session, &entry, &mut slot)?;
+                self.registry.make_resident(session, &entry, &mut slot)?;
                 let SessionSlot::Resident(s) = &mut *slot else {
                     unreachable!("make_resident")
                 };
@@ -647,17 +1070,22 @@ impl Coordinator {
                     Ok(p) => p,
                     Err(e) => {
                         drop(slot);
-                        self.enforce_watermark(None);
+                        self.kick_housekeeping(None);
                         return Err(e);
                     }
                 };
                 // Remove under the slot lock so a concurrent eviction
                 // scan cannot spill the session back into the store
                 // between finish and removal.
-                if self.sessions.write().unwrap().remove(&session).is_some() {
-                    if entry.resident.swap(false, Ordering::Relaxed) {
-                        self.resident.fetch_sub(1, Ordering::Relaxed);
-                    }
+                if self
+                    .registry
+                    .sessions
+                    .write()
+                    .unwrap()
+                    .remove(&session)
+                    .is_some()
+                {
+                    self.registry.note_evicted(session, &entry);
                     // Best-effort: a failed store removal leaves an
                     // orphan log that a later recovery resurrects as a
                     // never-closed session — consistent, just unclosed.
@@ -670,99 +1098,34 @@ impl Coordinator {
     }
 
     fn session_entry(&self, id: u64) -> Result<Arc<SessionEntry>> {
-        self.sessions
-            .read()
-            .unwrap()
-            .get(&id)
-            .cloned()
-            .ok_or_else(|| Error::invalid_request(format!("unknown session {id}")))
+        self.registry.entry(id)
     }
 
-    fn tick(&self) -> u64 {
-        self.clock.fetch_add(1, Ordering::Relaxed)
-    }
-
-    /// Restore an evicted session into its slot (no-op when resident):
-    /// resume from the stored checkpoint snapshot (bit-identical — the
-    /// `elements::serde` round-trip is exact) and replay the appends
-    /// logged after it.
-    fn make_resident(
-        &self,
-        id: u64,
-        entry: &SessionEntry,
-        slot: &mut SessionSlot,
-    ) -> Result<()> {
-        if matches!(slot, SessionSlot::Resident(_)) {
-            return Ok(());
-        }
-        let t0 = Instant::now();
-        let stored = self.store.restore(id)?;
-        // Restore against the session's *original* model handle — never
-        // the registry's current entry, which a re-registration may have
-        // replaced. Resident sessions keep their Arc<Hmm> across
-        // re-registration; evicted ones must behave identically, or
-        // eviction stops being transparent.
-        let engine = Engine::builder(Arc::clone(&entry.hmm))
-            .scan_options(self.scan)
-            .build();
-        let mut session = match &stored.snapshot {
-            Some(snap) => engine.resume_session(snap)?,
-            None => engine.open_session(entry.meta.options),
-        };
-        for chunk in &stored.appends {
-            session.push(chunk)?;
-        }
-        *slot = SessionSlot::Resident(session);
-        // swap-guarded for symmetry with spill/close: increment only on
-        // a genuine false→true transition.
-        if !entry.resident.swap(true, Ordering::Relaxed) {
-            self.resident.fetch_add(1, Ordering::Relaxed);
-        }
-        self.metrics.on_restore(t0.elapsed());
-        Ok(())
-    }
-
-    /// Demote one resident session to the store: snapshot → compacted
-    /// log → drop the in-RAM chain. No-op when already evicted.
-    fn spill_session(&self, id: u64, entry: &SessionEntry) -> Result<()> {
-        let mut slot = entry.slot.lock().expect("session mutex poisoned");
-        let SessionSlot::Resident(session) = &mut *slot else {
-            return Ok(());
-        };
-        let len = session.len();
-        self.store.compact(id, &entry.meta, &session.snapshot())?;
-        entry.since_ckpt.store(0, Ordering::Relaxed);
-        *slot = SessionSlot::Evicted { len };
-        // swap-guarded like Close's removal: a close that lost the store
-        // race already gave this residency back, and a second decrement
-        // would wrap the gauge.
-        if entry.resident.swap(false, Ordering::Relaxed) {
-            self.resident.fetch_sub(1, Ordering::Relaxed);
-        }
-        self.metrics.on_spill();
-        Ok(())
-    }
-
-    /// Watermark-driven eviction: while more sessions are resident than
-    /// the watermark allows, spill the least-recently-appended one
-    /// (never `protect` — the session serving the current verb).
-    fn enforce_watermark(&self, protect: Option<u64>) {
-        while self.resident_sessions() > self.resident_watermark {
-            let victim = {
-                let sessions = self.sessions.read().unwrap();
-                sessions
-                    .iter()
-                    .filter(|(id, _)| Some(**id) != protect)
-                    .filter(|(_, e)| e.resident.load(Ordering::Relaxed))
-                    .min_by_key(|(_, e)| e.touch.load(Ordering::Relaxed))
-                    .map(|(id, e)| (*id, Arc::clone(e)))
-            };
-            let Some((id, entry)) = victim else { break };
-            if self.spill_session(id, &entry).is_err() {
-                // Store failure: stop evicting and keep serving from RAM
-                // rather than dropping state.
-                break;
+    /// After-verb housekeeping. In background mode (the default) this
+    /// is a gauge check plus, when the watermark is breached, one
+    /// non-blocking nudge to the worker — the serve path never
+    /// snapshots, serializes or fsyncs here. In in-band mode it
+    /// enforces the watermark synchronously, exactly as before the
+    /// housekeeping worker existed (`protect` shields the session
+    /// serving the current verb).
+    fn kick_housekeeping(&self, protect: Option<u64>) {
+        match &self.housekeeper {
+            Some(hk) => {
+                if self.registry.over_watermark() && hk.submit(HkTask::Enforce) {
+                    self.metrics.on_hk_enqueued();
+                }
             }
+            None => self.registry.enforce_watermark(protect),
+        }
+    }
+
+    /// Wait for the background housekeeping worker to drain everything
+    /// queued so far and run a final watermark pass; no-op in in-band
+    /// mode. Tests and benchmarks use this as a barrier before
+    /// asserting residency gauges.
+    pub fn quiesce_housekeeping(&self) {
+        if let Some(hk) = &self.housekeeper {
+            hk.quiesce();
         }
     }
 
@@ -770,20 +1133,25 @@ impl Coordinator {
     /// path. Call after registering models; sessions bound to models not
     /// (yet) registered stay in the store untouched and are picked up by
     /// a later call. Recovered sessions come back *evicted* (lazily
-    /// restored on first touch), so recovery cost is O(metadata), not
-    /// O(total observations). Returns the number re-registered.
+    /// restored on first touch) from the store's **metadata-only** scan
+    /// ([`SessionStore::recover_meta`]): with a disk store, startup
+    /// reads frame headers, not log bodies, so recovery cost is
+    /// O(#sessions) — not O(stored bytes) — no matter how much has been
+    /// logged. Returns the number re-registered; the scan's wall time
+    /// lands in the `recovery_scan_us` metric gauge.
     pub fn recover_sessions(&self) -> Result<usize> {
-        let stored = self.store.recover()?;
+        let t0 = Instant::now();
+        let stored = self.store.recover_meta()?;
         let mut n = 0usize;
-        for (id, s) in stored {
+        for (id, meta, len) in stored {
             // Advance the id allocator past *every* stored id — including
             // sessions skipped below — so a fresh open can never reuse
             // (and overwrite the durable log of) a stored session.
             self.next_session.fetch_max(id, Ordering::Relaxed);
-            if self.sessions.read().unwrap().contains_key(&id) {
+            if self.registry.sessions.read().unwrap().contains_key(&id) {
                 continue;
             }
-            let Ok(model) = self.entry(&s.meta.model) else { continue };
+            let Ok(model) = self.entry(&meta.model) else { continue };
             // Recovered sessions must satisfy the same serve-cost guards
             // opens do (appends run O(lag + block) on the serve loop): a
             // restart under tighter limits — or a tampered log — must
@@ -792,8 +1160,8 @@ impl Coordinator {
             // re-running recovery picks them up.
             let max_block =
                 self.max_stream_lag.max(crate::engine::DEFAULT_SESSION_BLOCK);
-            if s.meta.lag > self.max_stream_lag
-                || s.meta.options.block.is_some_and(|b| b > max_block)
+            if meta.lag > self.max_stream_lag
+                || meta.options.block.is_some_and(|b| b > max_block)
             {
                 continue;
             }
@@ -803,38 +1171,48 @@ impl Coordinator {
             // rebuilt from other parameters would silently corrupt
             // results. The session stays in the store for an operator
             // who re-registers the original model.
-            if let Some(fp) = s.meta.fingerprint {
+            if let Some(fp) = meta.fingerprint {
                 if fp != model_fingerprint(&model.hmm) {
                     continue;
                 }
             }
-            let len = s.len();
-            self.sessions.write().unwrap().insert(
+            self.registry.sessions.write().unwrap().insert(
                 id,
                 Arc::new(SessionEntry {
                     slot: Mutex::new(SessionSlot::Evicted { len }),
                     hmm: model.hmm,
-                    meta: s.meta,
-                    touch: AtomicU64::new(self.tick()),
+                    meta,
+                    touch: AtomicU64::new(self.registry.tick()),
                     resident: AtomicBool::new(false),
                     since_ckpt: AtomicU64::new(0),
+                    ckpt_pending: AtomicBool::new(false),
+                    charged: AtomicUsize::new(0),
                 }),
             );
             n += 1;
         }
+        self.metrics.on_recovery_scan(t0.elapsed());
         self.metrics.on_recovered(n);
         Ok(n)
     }
 
     /// Number of currently open streaming sessions (any residency).
     pub fn open_sessions(&self) -> usize {
-        self.sessions.read().unwrap().len()
+        self.registry.sessions.read().unwrap().len()
     }
 
     /// Number of sessions whose element chains are resident in RAM
-    /// (bounded by the configured watermark between verbs).
+    /// (bounded by the configured watermark once housekeeping has
+    /// caught up — `quiesce_housekeeping` is the barrier).
     pub fn resident_sessions(&self) -> usize {
-        self.resident.load(Ordering::Relaxed)
+        self.registry.resident.load(Ordering::Relaxed)
+    }
+
+    /// Estimated resident element-chain bytes across all resident
+    /// sessions (each weighted T·D²·8) — the gauge the byte-budget
+    /// watermark bounds.
+    pub fn resident_bytes(&self) -> usize {
+        self.registry.resident_bytes.load(Ordering::Relaxed)
     }
 
     /// The session store behind eviction and recovery (observability).
@@ -1295,6 +1673,9 @@ mod tests {
             ids.push((sa, sb));
         }
         assert_eq!(evicting.open_sessions(), n);
+        // Eviction runs on the housekeeping worker by default: quiesce
+        // is the barrier that makes the watermark observable.
+        evicting.quiesce_housekeeping();
         assert!(evicting.resident_sessions() <= 4);
 
         // Round-robin appends: every session is evicted and restored
@@ -1318,6 +1699,7 @@ mod tests {
                 };
                 assert_eq!(la, lb);
                 assert_eq!(fa, fb, "filtered diverged (session {i} round {round})");
+                evicting.quiesce_housekeeping();
                 assert!(
                     evicting.resident_sessions() <= 4,
                     "watermark breached at session {i} round {round}"
@@ -1408,11 +1790,13 @@ mod tests {
         else {
             panic!()
         };
+        c.quiesce_housekeeping();
         assert_eq!(c.resident_sessions(), 1, "second open must evict the first");
 
         // Closing the evicted, still-empty s1 restores it and fails —
         // the session survives and residency returns under the mark.
         assert!(c.stream(StreamRequest::close(3, s1)).is_err());
+        c.quiesce_housekeeping();
         assert!(c.resident_sessions() <= 1, "failed close breached watermark");
 
         // Both sessions remain fully usable afterwards.
@@ -1421,6 +1805,168 @@ mod tests {
         assert!(c.stream(StreamRequest::close(6, s1)).is_ok());
         assert!(c.stream(StreamRequest::close(7, s2)).is_ok());
         assert_eq!(c.open_sessions(), 0);
+    }
+
+    /// `housekeeping: false` preserves the pre-worker semantics: every
+    /// verb re-imposes the watermark before returning, no barrier
+    /// needed.
+    #[test]
+    fn in_band_mode_enforces_watermark_synchronously() {
+        let c = Coordinator::new(CoordinatorConfig {
+            resident_watermark: 1,
+            housekeeping: false,
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        c.register_model("ge", gilbert_elliott(GeParams::default()));
+        for i in 0..3u64 {
+            c.stream(StreamRequest::open(i, "ge", 0)).unwrap();
+        }
+        // No quiesce: the serve path itself spilled the victims.
+        assert_eq!(c.resident_sessions(), 1);
+        assert!(c.metrics().snapshot().spills >= 2);
+        assert_eq!(c.metrics().snapshot().hk_enqueued, 0, "no worker in-band");
+    }
+
+    /// The byte-budget watermark weighs residency by T·D²·8 bytes: one
+    /// fat session breaches a budget that many small ones fit under,
+    /// and eviction sheds the cold tail — never the lone survivor.
+    #[test]
+    fn byte_budget_watermark_spills_by_weight() {
+        let hmm = gilbert_elliott(GeParams::default());
+        let budget = 600 * 4 * 4 * 8; // ≈ 600 resident observations at D = 4
+        let c = Coordinator::new(CoordinatorConfig {
+            resident_watermark: 1024, // the count bound never binds here
+            resident_bytes_watermark: budget,
+            housekeeping: false, // in-band: deterministic gauges
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        c.register_model("ge", hmm.clone());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(0xB17E);
+
+        // Eight small sessions fit comfortably under the byte budget.
+        for i in 0..8u64 {
+            let StreamReply::Opened { session } =
+                c.stream(StreamRequest::open(i, "ge", 0)).unwrap().reply
+            else {
+                panic!()
+            };
+            let chunk = sample(&hmm, 20, &mut rng).observations;
+            c.stream(StreamRequest::append(1, session, chunk)).unwrap();
+        }
+        assert_eq!(c.resident_sessions(), 8, "small sessions must not spill");
+        assert!(c.resident_bytes() <= budget);
+
+        // One fat session blows the budget: cold sessions spill even
+        // though the *count* watermark is nowhere near breached.
+        let StreamReply::Opened { session: fat } =
+            c.stream(StreamRequest::open(99, "ge", 0)).unwrap().reply
+        else {
+            panic!()
+        };
+        let chunk = sample(&hmm, 700, &mut rng).observations;
+        c.stream(StreamRequest::append(2, fat, chunk)).unwrap();
+        assert!(c.metrics().snapshot().spills > 0, "byte budget never engaged");
+        assert!(c.resident_sessions() < 9);
+        // The freshly-touched fat session itself survives: eviction
+        // drains the cold tail first and never spills the last resident.
+        let StreamReply::Stats { resident, .. } =
+            c.stream(StreamRequest::stat(3, fat)).unwrap().reply
+        else {
+            panic!()
+        };
+        assert!(resident, "the hot fat session must not thrash");
+    }
+
+    /// The housekeeping concurrency bar: appends race the background
+    /// worker's spills and compactions of the very sessions being
+    /// appended (watermark 1, tiny checkpoint interval), and every
+    /// close stays bit-identical to a never-evicted control coordinator
+    /// fed the same chunks.
+    #[test]
+    fn concurrent_appends_race_background_housekeeping() {
+        let dir = crate::store::testutil::tempdir("coord-hk-race");
+        let hmm = gilbert_elliott(GeParams::default());
+        let racing = Arc::new(
+            Coordinator::new(CoordinatorConfig {
+                resident_watermark: 1,
+                session_store: Some(dir.clone()),
+                checkpoint_every: 16,
+                ..CoordinatorConfig::native_only()
+            })
+            .unwrap(),
+        );
+        racing.register_model("ge", hmm.clone());
+        let control = native_coord(); // default watermark: never evicts
+
+        // Pre-generate per-session chunk schedules so both coordinators
+        // see identical observations despite the racing threads.
+        let mut rng = Xoshiro256StarStar::seed_from_u64(0xACE5);
+        let sessions = 4usize;
+        let rounds = 12usize;
+        let schedules: Vec<Vec<Vec<u32>>> = (0..sessions)
+            .map(|_| {
+                (0..rounds)
+                    .map(|r| sample(&hmm, 5 + (r * 7) % 23, &mut rng).observations)
+                    .collect()
+            })
+            .collect();
+
+        let ids: Vec<u64> = (0..sessions)
+            .map(|i| {
+                let r =
+                    racing.stream(StreamRequest::open(i as u64, "ge", 0)).unwrap();
+                let StreamReply::Opened { session } = r.reply else { panic!() };
+                session
+            })
+            .collect();
+
+        std::thread::scope(|scope| {
+            for (i, chunks) in schedules.iter().enumerate() {
+                let racing = Arc::clone(&racing);
+                let id = ids[i];
+                scope.spawn(move || {
+                    for chunk in chunks {
+                        racing
+                            .stream(StreamRequest::append(1, id, chunk.clone()))
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        racing.quiesce_housekeeping();
+        let snap = racing.metrics().snapshot();
+        assert!(snap.spills > 0, "housekeeping never spilled under the race");
+        assert!(
+            snap.hk_completed > 0,
+            "the background worker never processed a task"
+        );
+
+        // Control run: same chunks, sequential, never evicted — closes
+        // must agree bit-for-bit.
+        for (i, chunks) in schedules.iter().enumerate() {
+            let r = control
+                .stream(StreamRequest::open(50 + i as u64, "ge", 0))
+                .unwrap();
+            let StreamReply::Opened { session } = r.reply else { panic!() };
+            for chunk in chunks {
+                control
+                    .stream(StreamRequest::append(2, session, chunk.clone()))
+                    .unwrap();
+            }
+            let want = control.stream(StreamRequest::close(3, session)).unwrap();
+            let got = racing.stream(StreamRequest::close(3, ids[i])).unwrap();
+            let StreamReply::Closed { posterior: b, .. } = want.reply else {
+                panic!()
+            };
+            let StreamReply::Closed { posterior: a, .. } = got.reply else {
+                panic!()
+            };
+            assert_eq!(a, b, "session {i} diverged under background housekeeping");
+        }
+        assert_eq!(racing.open_sessions(), 0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// Crash recovery end-to-end: a disk-backed coordinator is dropped
@@ -1458,6 +2004,7 @@ mod tests {
                 }
                 expected.insert(session, ys);
             }
+            c.quiesce_housekeeping();
             assert!(c.resident_sessions() <= 2);
             assert!(c.metrics().snapshot().spills > 0);
             // Crash: drop the coordinator without closing anything.
@@ -1466,7 +2013,9 @@ mod tests {
         // Simulate a torn tail write on one log: recovery must keep
         // every fully-framed record and drop only the torn tail.
         let (&torn_id, _) = expected.iter().next().unwrap();
-        let torn_path = dir.join(format!("sess_{torn_id:016x}.log"));
+        let torn_path = dir
+            .join(format!("{:02x}", torn_id % 256))
+            .join(format!("sess_{torn_id:016x}.log"));
         let mut bytes = std::fs::read(&torn_path).unwrap();
         bytes.extend_from_slice(b"00000000000000ff 00"); // truncated header
         std::fs::write(&torn_path, &bytes).unwrap();

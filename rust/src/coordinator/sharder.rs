@@ -32,10 +32,15 @@ pub use crate::runtime::{marshal_block, ArtifactExec};
 /// Sharded-plan parameters resolved by the router.
 #[derive(Debug, Clone)]
 pub struct ShardedArtifacts {
+    /// Fold artifact for the first block (seeds the prior).
     pub fold_first: String,
+    /// Fold artifact for every interior block.
     pub fold_mid: String,
+    /// Finalize artifact for the first block.
     pub finalize_first: String,
+    /// Finalize artifact for every interior block.
     pub finalize_mid: String,
+    /// Observations per block the artifacts were compiled for.
     pub block_len: usize,
 }
 
@@ -205,6 +210,7 @@ pub fn mp_sharded(
 /// Native mock executor used by unit tests (and the `--no-xla` path):
 /// runs the fold/finalize semantics with the native element algebra.
 pub struct NativeExec {
+    /// The model whose element algebra the mock executes with.
     pub hmm: Hmm,
 }
 

@@ -13,7 +13,8 @@
 //! * [`BsElement`] / [`BsFilterOp`] — the Bayesian-filtering element of
 //!   Ref. [30] (discrete analogue): conditional matrix + rescaled
 //!   likelihood vector; used by BS-Par.
-//! * [`element_chain`] — builds the per-step elements from an [`Hmm`]
+//! * [`sp_element_chain`] / [`mp_element_chain`] /
+//!   [`bs_element_chain`] — build the per-step elements from an [`Hmm`]
 //!   and an observation sequence (Definition 3 / Eq. 15). The per-symbol
 //!   prototypes ([`sp_element_protos`] / [`mp_element_protos`]) and the
 //!   prior elements ([`sp_prior_element`] / [`mp_prior_element`]) are
@@ -42,7 +43,9 @@ pub const NEG_INF: f64 = -1e30;
 /// a_{i:j} = exp(log_scale) · mat, with mat ≥ 0 max-normalized to 1.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SpElement {
+    /// Max-normalized non-negative potential matrix.
     pub mat: Mat,
+    /// Log of the factored-out scale.
     pub log_scale: f64,
 }
 
@@ -66,6 +69,7 @@ impl SpElement {
 /// The ⊗ operator of Eq. (16): rescaled matrix product over (+, ×).
 #[derive(Debug, Clone, Copy)]
 pub struct SpOp {
+    /// State-space size D.
     pub d: usize,
 }
 
@@ -154,12 +158,14 @@ impl AssocOp<SpElement> for SpOp {
 /// probability over interior paths.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MpElement {
+    /// Log-domain max-probability matrix.
     pub mat: Mat,
 }
 
 /// The ∨ operator of Eq. (42): max-plus matrix product.
 #[derive(Debug, Clone, Copy)]
 pub struct MpOp {
+    /// State-space size D.
     pub d: usize,
 }
 
@@ -236,8 +242,11 @@ impl AssocOp<MpElement> for MpOp {
 /// max-product formulation of §IV-C avoids.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PathElement {
+    /// Log-domain max-probability matrix.
     pub mat: Mat,
+    /// Best interior path per state pair, row-major.
     pub paths: Vec<Vec<u32>>,
+    /// Length of every interior path.
     pub interior_len: usize,
 }
 
@@ -253,6 +262,7 @@ impl PathElement {
 /// concatenate paths through the maximizing midpoint (Eq. 35).
 #[derive(Debug, Clone, Copy)]
 pub struct PathOp {
+    /// State-space size D.
     pub d: usize,
 }
 
@@ -334,14 +344,18 @@ fn is_log_identity(m: &Mat) -> bool {
 /// ĝ(x_{k-1}) ∝ p(y-segment | x_{k-1}) max-normalized with log scale γ.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BsElement {
+    /// Conditional-filter matrix f, row-stochastic.
     pub f: Mat,
+    /// Max-normalized likelihood vector ĝ.
     pub g: Vec<f64>,
+    /// Log of ĝ's factored-out scale (γ).
     pub log_scale: f64,
 }
 
 /// Combine of filtering elements (the discrete parallel-filter rule).
 #[derive(Debug, Clone, Copy)]
 pub struct BsFilterOp {
+    /// State-space size D.
     pub d: usize,
 }
 
@@ -718,6 +732,7 @@ pub fn bs_element_chain_into(hmm: &Hmm, ys: &[u32], out: &mut Vec<BsElement>) {
     }
 }
 
+/// `ln` clamped to the log-domain zero ([`NEG_INF`]) for x ≤ 0.
 pub fn safe_ln(x: f64) -> f64 {
     if x > 0.0 {
         x.ln()

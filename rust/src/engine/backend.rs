@@ -93,6 +93,7 @@ pub struct XlaBackend {
 }
 
 impl XlaBackend {
+    /// A backend over an artifact executor and its manifest.
     pub fn new(
         exec: Arc<dyn ArtifactExec + Send + Sync>,
         manifest: Arc<Manifest>,
@@ -100,6 +101,7 @@ impl XlaBackend {
         Self { exec, manifest }
     }
 
+    /// The manifest of compiled artifacts this backend routes over.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

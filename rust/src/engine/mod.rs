@@ -67,6 +67,7 @@ pub enum EngineOutput {
 }
 
 impl EngineOutput {
+    /// The posterior payload, when this is a smoothing result.
     pub fn as_posterior(&self) -> Option<&Posterior> {
         match self {
             EngineOutput::Posterior(p) => Some(p),
@@ -74,6 +75,7 @@ impl EngineOutput {
         }
     }
 
+    /// The MAP payload, when this is a decode result.
     pub fn as_map(&self) -> Option<&MapEstimate> {
         match self {
             EngineOutput::Map(m) => Some(m),
@@ -81,6 +83,7 @@ impl EngineOutput {
         }
     }
 
+    /// The training payload, when this is a Baum–Welch result.
     pub fn as_training(&self) -> Option<&BaumWelchResult> {
         match self {
             EngineOutput::Training(t) => Some(t),
@@ -88,6 +91,7 @@ impl EngineOutput {
         }
     }
 
+    /// Unwrap the posterior; typed error on any other output kind.
     pub fn into_posterior(self) -> Result<Posterior> {
         match self {
             EngineOutput::Posterior(p) => Ok(p),
@@ -98,6 +102,7 @@ impl EngineOutput {
         }
     }
 
+    /// Unwrap the MAP estimate; typed error on any other output kind.
     pub fn into_map(self) -> Result<MapEstimate> {
         match self {
             EngineOutput::Map(m) => Ok(m),
@@ -108,6 +113,7 @@ impl EngineOutput {
         }
     }
 
+    /// Unwrap the training result; typed error on any other kind.
     pub fn into_training(self) -> Result<BaumWelchResult> {
         match self {
             EngineOutput::Training(t) => Ok(*t),
@@ -156,6 +162,7 @@ impl EngineBuilder {
         self
     }
 
+    /// Finish the builder (native backend unless one was supplied).
     pub fn build(self) -> Engine {
         Engine {
             hmm: self.hmm,
@@ -188,14 +195,17 @@ impl Engine {
         }
     }
 
+    /// The model this engine serves.
     pub fn hmm(&self) -> &Hmm {
         &self.hmm
     }
 
+    /// The engine's threading/schedule options.
     pub fn scan_options(&self) -> ScanOptions {
         self.scan
     }
 
+    /// Name of the execution backend ("native" / "xla").
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
     }

@@ -4,7 +4,7 @@
 //! A [`Session`] is a long-lived, resumable inference state: the paper's
 //! prefix-scan formulation makes the running forward product an
 //! associative prefix, so appending k observations costs O(k) summary
-//! folds (via [`scan::CheckpointedScan`]) instead of the O(T) rerun a
+//! folds (via [`CheckpointedScan`]) instead of the O(T) rerun a
 //! complete-sequence API forces on streaming clients.
 //!
 //! ```text
@@ -128,7 +128,9 @@ pub struct SessionOptions {
 /// and the running log-likelihood log p(y_{1:step}).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Filtered {
+    /// Filtering marginal p(x_step | y_{1:step}), length D.
     pub probs: Vec<f64>,
+    /// Running log-likelihood log p(y_{1:step}).
     pub log_likelihood: f64,
     /// Number of observations conditioned on (the absolute step is
     /// `step - 1`).
@@ -140,7 +142,9 @@ pub struct Filtered {
 /// pushed so far.
 #[derive(Debug, Clone)]
 pub struct LagSmoothed {
+    /// Absolute step of the window's first marginal.
     pub start: usize,
+    /// Smoothing marginals over the window.
     pub posterior: Posterior,
     /// Width of the forward suffix rescan that served the query (≤ lag
     /// + block) — the coordinator's suffix-width histogram feeds on it.
@@ -152,9 +156,13 @@ pub struct LagSmoothed {
 /// window), plus the running joint log-maximum.
 #[derive(Debug, Clone)]
 pub struct LagDecoded {
+    /// Absolute step of the window's first state.
     pub start: usize,
+    /// MAP-consistent states over the window.
     pub path: Vec<u32>,
+    /// Running joint log-maximum over the full prefix.
     pub log_prob: f64,
+    /// Width of the forward suffix rescan that served the query.
     pub rescan_width: usize,
 }
 
@@ -393,6 +401,7 @@ impl Session {
         self.ys.len()
     }
 
+    /// Whether nothing has been pushed yet.
     pub fn is_empty(&self) -> bool {
         self.ys.is_empty()
     }

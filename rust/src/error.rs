@@ -19,7 +19,12 @@ pub enum Error {
     InvalidRequest(String),
 
     /// JSON parse/serialize failure (jsonx substrate).
-    Json { offset: usize, msg: String },
+    Json {
+        /// Byte offset of the failure in the input text.
+        offset: usize,
+        /// What went wrong there.
+        msg: String,
+    },
 
     /// Artifact manifest problems: missing file, bad signature, …
     Artifact(String),
@@ -70,21 +75,27 @@ impl From<std::io::Error> for Error {
 }
 
 impl Error {
+    /// An [`Error::InvalidModel`] from any displayable message.
     pub fn invalid_model(msg: impl fmt::Display) -> Self {
         Error::InvalidModel(msg.to_string())
     }
+    /// An [`Error::InvalidRequest`] from any displayable message.
     pub fn invalid_request(msg: impl fmt::Display) -> Self {
         Error::InvalidRequest(msg.to_string())
     }
+    /// An [`Error::Artifact`] from any displayable message.
     pub fn artifact(msg: impl fmt::Display) -> Self {
         Error::Artifact(msg.to_string())
     }
+    /// An [`Error::Xla`] from any displayable message.
     pub fn xla(msg: impl fmt::Display) -> Self {
         Error::Xla(msg.to_string())
     }
+    /// An [`Error::Coordinator`] from any displayable message.
     pub fn coordinator(msg: impl fmt::Display) -> Self {
         Error::Coordinator(msg.to_string())
     }
+    /// An [`Error::Usage`] from any displayable message.
     pub fn usage(msg: impl fmt::Display) -> Self {
         Error::Usage(msg.to_string())
     }

@@ -61,6 +61,7 @@ impl ThreadPool {
         Self::new(default_parallelism())
     }
 
+    /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.size
     }
@@ -119,6 +120,7 @@ pub struct WgGuard {
 }
 
 impl WaitGroup {
+    /// A latch that opens after `count` guard drops.
     pub fn new(count: usize) -> Self {
         Self {
             inner: Arc::new(WgInner {
@@ -129,10 +131,12 @@ impl WaitGroup {
         }
     }
 
+    /// Hand out one RAII decrement (dropped even on panic).
     pub fn guard(&self) -> WgGuard {
         WgGuard { inner: Arc::clone(&self.inner) }
     }
 
+    /// Block until every guard has dropped.
     pub fn wait(&self) {
         let mut g = self.inner.mutex.lock().unwrap();
         while self.inner.count.load(Ordering::Acquire) != 0 {
@@ -192,14 +196,17 @@ unsafe impl<E: Send> Send for SharedSliceMut<E> {}
 unsafe impl<E: Send> Sync for SharedSliceMut<E> {}
 
 impl<E> SharedSliceMut<E> {
+    /// Wrap a slice for disjoint-range parallel writes.
     pub fn new(slice: &mut [E]) -> Self {
         Self { ptr: slice.as_mut_ptr(), len: slice.len() }
     }
 
+    /// Length of the wrapped slice.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the wrapped slice is empty.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

@@ -53,14 +53,17 @@ impl Hmm {
         self.obs.cols()
     }
 
+    /// Transition matrix Π (D×D, rows sum to 1).
     pub fn transition(&self) -> &Mat {
         &self.pi
     }
 
+    /// Emission matrix O (D×M, rows sum to 1).
     pub fn emission(&self) -> &Mat {
         &self.obs
     }
 
+    /// Prior distribution over the initial state (length D).
     pub fn prior(&self) -> &[f64] {
         &self.prior
     }

@@ -7,7 +7,9 @@ use super::Hmm;
 /// A sampled trajectory: hidden states and the observations they emitted.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Trajectory {
+    /// Hidden state sequence x_{1:T}.
     pub states: Vec<u32>,
+    /// Emitted observation sequence y_{1:T}.
     pub observations: Vec<u32>,
 }
 

@@ -21,10 +21,13 @@ pub enum EStepBackend {
 /// Options for [`baum_welch`].
 #[derive(Debug, Clone, Copy)]
 pub struct BaumWelchOptions {
+    /// Maximum EM iterations.
     pub max_iters: usize,
     /// Stop when the log-likelihood improves by less than this.
     pub tol: f64,
+    /// Which forward–backward engine runs the E-step.
     pub backend: EStepBackend,
+    /// Threading/schedule options for the parallel E-step.
     pub scan: ScanOptions,
     /// Dirichlet-style additive smoothing of the M-step counts, keeping
     /// estimated rows strictly positive.
@@ -46,11 +49,14 @@ impl Default for BaumWelchOptions {
 /// Result of EM training.
 #[derive(Debug, Clone)]
 pub struct BaumWelchResult {
+    /// The estimated model after the final iteration.
     pub model: Hmm,
     /// log p(y | θ_i) per iteration — monotone non-decreasing (checked by
     /// tests; the property EM guarantees).
     pub loglik_curve: Vec<f64>,
+    /// Iterations actually run.
     pub iterations: usize,
+    /// Whether the tolerance stop fired before `max_iters`.
     pub converged: bool,
 }
 

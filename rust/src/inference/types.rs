@@ -9,6 +9,7 @@ pub struct Posterior {
 }
 
 impl Posterior {
+    /// Wrap a row-major (T, D) marginal buffer and its log-likelihood.
     pub fn new(d: usize, gamma: Vec<f64>, loglik: f64) -> Self {
         assert!(d > 0 && gamma.len() % d == 0, "gamma shape");
         Self { d, gamma, loglik }
@@ -19,6 +20,7 @@ impl Posterior {
         self.gamma.len() / self.d
     }
 
+    /// Whether the posterior covers zero steps.
     pub fn is_empty(&self) -> bool {
         self.gamma.is_empty()
     }
@@ -55,7 +57,9 @@ impl Posterior {
 /// log probability log p(x*_{1:T}, y_{1:T}).
 #[derive(Debug, Clone, PartialEq)]
 pub struct MapEstimate {
+    /// The most likely state sequence x*_{1:T}.
     pub path: Vec<u32>,
+    /// Joint log probability log p(x*_{1:T}, y_{1:T}).
     pub log_prob: f64,
 }
 

@@ -23,23 +23,31 @@ pub(crate) use crate::scan::ElementBuf;
 /// Scratch buffers for the sum-product family (`sp_par`).
 #[derive(Debug, Default)]
 pub struct SpBuffers {
+    /// Element chain built from the observations.
     pub elems: Vec<SpElement>,
+    /// Forward prefix-scan values.
     pub fwd: Vec<SpElement>,
+    /// Backward suffix-scan values.
     pub bwd: Vec<SpElement>,
 }
 
 /// Scratch buffers for the max-product family (`mp_par`).
 #[derive(Debug, Default)]
 pub struct MpBuffers {
+    /// Element chain built from the observations.
     pub elems: Vec<MpElement>,
+    /// Forward prefix-scan values.
     pub fwd: Vec<MpElement>,
+    /// Backward suffix-scan values.
     pub bwd: Vec<MpElement>,
 }
 
 /// Scratch buffers for the Bayesian-smoother family (`bs_par`).
 #[derive(Debug, Default)]
 pub struct BsBuffers {
+    /// Element chain built from the observations.
     pub elems: Vec<BsElement>,
+    /// RTS backward-pass smoothing gains.
     pub rts: Vec<Mat>,
 }
 
@@ -48,9 +56,13 @@ pub struct BsBuffers {
 /// window and the backward suffix-scan input.
 #[derive(Debug, Default)]
 pub struct StreamBuffers {
+    /// Sum-product forward values over the covering window.
     pub sp_fwd_win: Vec<SpElement>,
+    /// Sum-product backward suffix-scan input/output.
     pub sp_bwd_win: Vec<SpElement>,
+    /// Max-product forward values over the covering window.
     pub mp_fwd_win: Vec<MpElement>,
+    /// Max-product backward suffix-scan input/output.
     pub mp_bwd_win: Vec<MpElement>,
 }
 
@@ -73,9 +85,13 @@ pub(crate) fn apply_growth_policy<E>(buf: &mut Vec<E>, need: usize) {
 /// first use and overwritten in place afterwards.
 #[derive(Debug, Default)]
 pub struct Workspace {
+    /// Sum-product scratch.
     pub sp: SpBuffers,
+    /// Max-product scratch.
     pub mp: MpBuffers,
+    /// Bayesian-smoother scratch.
     pub bs: BsBuffers,
+    /// Streaming fixed-lag window scratch.
     pub stream: StreamBuffers,
 }
 

@@ -15,15 +15,22 @@ use crate::error::{Error, Result};
 /// so serialization is deterministic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (f64 — integers above 2^53 do not round-trip).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object, keys sorted.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing input is an error).
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -37,6 +44,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// The string payload, when this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -44,6 +52,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, when this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -51,6 +60,8 @@ impl Json {
         }
     }
 
+    /// The numeric payload as a non-negative integer (rejects
+    /// fractional and negative values).
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as usize),
@@ -58,6 +69,7 @@ impl Json {
         }
     }
 
+    /// The boolean payload, when this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -65,6 +77,7 @@ impl Json {
         }
     }
 
+    /// The element slice, when this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -72,6 +85,7 @@ impl Json {
         }
     }
 
+    /// The key→value map, when this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -95,12 +109,14 @@ impl Json {
             .ok_or_else(|| Error::artifact(format!("missing string field '{key}'")))
     }
 
+    /// Required non-negative-integer field, typed error when absent.
     pub fn req_usize(&self, key: &str) -> Result<usize> {
         self.get(key)
             .as_usize()
             .ok_or_else(|| Error::artifact(format!("missing integer field '{key}'")))
     }
 
+    /// Required array field, typed error when absent.
     pub fn req_arr(&self, key: &str) -> Result<&[Json]> {
         self.get(key)
             .as_arr()
@@ -109,12 +125,14 @@ impl Json {
 
     // -- serialization -----------------------------------------------------
 
+    /// Serialize with no whitespace (the store/wire form).
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None, 0);
         out
     }
 
+    /// Serialize with two-space indentation (the human form).
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, Some(2), 0);

@@ -24,6 +24,11 @@
 //!   in-tree replacements for crates unavailable in the offline build
 //!   environment plus the work-span GPU simulator used for Figs. 4–6.
 
+// Public API documentation is enforced: `cargo doc --no-deps` runs in
+// CI with `RUSTDOCFLAGS="-D warnings"`, so an undocumented public item
+// or a broken intra-doc link fails the build there.
+#![warn(missing_docs)]
+
 pub mod benchx;
 pub mod blockwise;
 pub mod cli;

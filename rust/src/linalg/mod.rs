@@ -29,14 +29,17 @@ impl fmt::Debug for Mat {
 }
 
 impl Mat {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Constant-filled matrix.
     pub fn filled(rows: usize, cols: usize, v: f64) -> Self {
         Self { rows, cols, data: vec![v; rows * cols] }
     }
 
+    /// Wrap a row-major buffer (length must be rows·cols).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Self { rows, cols, data }
@@ -57,35 +60,42 @@ impl Mat {
         Self::filled(rows, cols, S::one())
     }
 
+    /// Row count.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// The row-major backing buffer.
     #[inline]
     pub fn data(&self) -> &[f64] {
         &self.data
     }
 
+    /// Mutable row-major backing buffer.
     #[inline]
     pub fn data_mut(&mut self) -> &mut [f64] {
         &mut self.data
     }
 
+    /// One row as a slice.
     #[inline]
     pub fn row(&self, r: usize) -> &[f64] {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// One column, copied out.
     pub fn col(&self, c: usize) -> Vec<f64> {
         (0..self.rows).map(|r| self[(r, c)]).collect()
     }
 
+    /// The transposed matrix (copied).
     pub fn transpose(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for r in 0..self.rows {
@@ -96,10 +106,12 @@ impl Mat {
         out
     }
 
+    /// Largest absolute entry (0 for an empty matrix).
     pub fn max_abs(&self) -> f64 {
         self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
     }
 
+    /// Largest entry (−∞ for an empty matrix).
     pub fn max(&self) -> f64 {
         self.data.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v))
     }

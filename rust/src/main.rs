@@ -58,6 +58,7 @@ fn cli() -> Cli {
                 opt("requests", "number of requests", "64"),
                 opt("t", "sequence length per request", "1000"),
                 opt("workers", "XLA worker threads", "4"),
+                opt("store", "durable session-store directory ('' = memory)", ""),
                 opt("config", "JSON config file path", ""),
                 flag("native", "serve natively (no artifacts)"),
             ],
@@ -177,11 +178,19 @@ fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
     let n = p.get_usize("requests")?;
     let t = p.get_usize("t")?;
     let workers = p.get_usize("workers")?;
-    let coord_config = if p.flag("native") {
-        CoordinatorConfig::native_only()
+    // Store/housekeeping knobs come from the JSON config; the CLI can
+    // point the durable store somewhere without editing a file.
+    let mut coord_config = config.coordinator_config();
+    if p.flag("native") {
+        coord_config.artifacts = None;
     } else {
-        CoordinatorConfig { xla_workers: workers, ..CoordinatorConfig::default() }
-    };
+        coord_config.xla_workers = workers;
+    }
+    if let Some(dir) = p.get("store") {
+        if !dir.is_empty() {
+            coord_config.session_store = Some(dir.into());
+        }
+    }
     let coord = Arc::new(Coordinator::new(coord_config)?);
     let hmm = gilbert_elliott(config.ge);
     coord.register_model("ge", hmm.clone());
@@ -219,6 +228,16 @@ fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
         snap.batches,
         snap.batch_occupancy(),
         snap.sharded_blocks
+    );
+    println!(
+        "session store: {}   spills {}   restores {}   hk queue {}   \
+         sync batches {} ({:.2} appends/sync)",
+        coord.session_store().name(),
+        snap.spills,
+        snap.restores,
+        snap.hk_queue_depth,
+        snap.sync_batches,
+        snap.sync_batch_occupancy(),
     );
     Ok(())
 }

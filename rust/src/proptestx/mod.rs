@@ -17,6 +17,7 @@ pub struct Runner {
 }
 
 impl Runner {
+    /// A runner seeded deterministically from its name.
     pub fn new(name: &str) -> Self {
         // FNV-1a of the name → stable seed independent of test order.
         let h = crate::rng::fnv1a_64(crate::rng::FNV1A_OFFSET, name.as_bytes());
@@ -85,6 +86,7 @@ pub mod alloc_count {
         ALLOCS.try_with(|c| c.get()).unwrap_or(0)
     }
 
+    /// System-allocator wrapper that counts thread-local allocations.
     pub struct CountingAllocator;
 
     // SAFETY: forwards every operation to `System` unchanged; the

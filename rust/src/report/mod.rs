@@ -11,15 +11,19 @@ use crate::error::Result;
 /// A named series of (x, y) points — one plotted line.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Series {
+    /// Legend label.
     pub name: String,
+    /// The (x, y) samples, plot order.
     pub points: Vec<(f64, f64)>,
 }
 
 impl Series {
+    /// An empty named series.
     pub fn new(name: impl Into<String>) -> Self {
         Self { name: name.into(), points: Vec::new() }
     }
 
+    /// Append one sample.
     pub fn push(&mut self, x: f64, y: f64) {
         self.points.push((x, y));
     }
@@ -75,9 +79,13 @@ fn csv_escape(s: &str) -> String {
 /// Options for [`ascii_plot`].
 #[derive(Debug, Clone, Copy)]
 pub struct PlotOptions {
+    /// Plot width in character cells.
     pub width: usize,
+    /// Plot height in character cells.
     pub height: usize,
+    /// Log-scale the x axis.
     pub log_x: bool,
+    /// Log-scale the y axis.
     pub log_y: bool,
 }
 

@@ -31,10 +31,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seed the generator.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64 uniform bits.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -59,6 +61,7 @@ impl Xoshiro256StarStar {
         }
     }
 
+    /// Next 64 uniform bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

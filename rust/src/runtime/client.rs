@@ -12,21 +12,26 @@ use super::manifest::{ArtifactSpec, DType, IoSpec};
 /// A host tensor crossing the PJRT boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// f32 tensor: flat data + shape.
     F32(Vec<f32>, Vec<usize>),
+    /// i32 tensor: flat data + shape.
     I32(Vec<i32>, Vec<usize>),
 }
 
 impl Value {
+    /// A rank-0 f32 tensor.
     pub fn scalar_f32(v: f32) -> Self {
         Value::F32(vec![v], vec![])
     }
 
+    /// Tensor shape (empty = scalar).
     pub fn shape(&self) -> &[usize] {
         match self {
             Value::F32(_, s) | Value::I32(_, s) => s,
         }
     }
 
+    /// Element dtype.
     pub fn dtype(&self) -> DType {
         match self {
             Value::F32(..) => DType::F32,
@@ -34,6 +39,7 @@ impl Value {
         }
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         match self {
             Value::F32(d, _) => d.len(),
@@ -41,10 +47,12 @@ impl Value {
         }
     }
 
+    /// Whether the tensor holds zero elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The flat f32 data; typed error for other dtypes.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Value::F32(d, _) => Ok(d),
@@ -52,6 +60,7 @@ impl Value {
         }
     }
 
+    /// The flat i32 data; typed error for other dtypes.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Value::I32(d, _) => Ok(d),
@@ -113,14 +122,18 @@ pub struct XlaRuntime {
 }
 
 impl XlaRuntime {
+    /// Construct over the CPU PJRT plugin (typed error when the real
+    /// bindings are absent — the offline stub).
     pub fn cpu() -> Result<Self> {
         Ok(Self { client: xla::PjRtClient::cpu().map_err(Error::xla)? })
     }
 
+    /// Platform name reported by the client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Devices the client sees.
     pub fn device_count(&self) -> usize {
         self.client.device_count()
     }
@@ -151,10 +164,12 @@ pub struct Executable {
 }
 
 impl Executable {
+    /// The manifest signature this executable was compiled against.
     pub fn spec(&self) -> &ArtifactSpec {
         &self.spec
     }
 
+    /// Validate `inputs` against the signature and execute.
     pub fn run(&self, inputs: &[Value]) -> Result<Vec<Value>> {
         if inputs.len() != self.spec.inputs.len() {
             return Err(Error::invalid_request(format!(

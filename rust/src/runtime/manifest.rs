@@ -15,7 +15,9 @@ use crate::jsonx::Json;
 /// Tensor element type used in artifact signatures.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -32,12 +34,16 @@ impl DType {
 /// One input or output tensor in an artifact signature.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IoSpec {
+    /// Tensor name in the artifact signature.
     pub name: String,
+    /// Static tensor shape.
     pub shape: Vec<usize>,
+    /// Element dtype.
     pub dtype: DType,
 }
 
 impl IoSpec {
+    /// Product of the shape dimensions.
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
@@ -46,16 +52,20 @@ impl IoSpec {
 /// Whole-sequence vs block-wise (§V-B) artifact.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ArtifactKind {
+    /// Whole-sequence artifact (padded to a static T).
     Core,
+    /// Block-wise fold/finalize artifact for sharded plans.
     Block,
 }
 
 /// One compiled artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactSpec {
+    /// Unique artifact name (manifest key).
     pub name: String,
     /// L2 entry point name (`sp_par`, `viterbi`, `sp_block_fold_mid`, …).
     pub entry: String,
+    /// Core vs block artifact.
     pub kind: ArtifactKind,
     /// Static sequence length (core) or block length (block).
     pub t: usize,
@@ -65,7 +75,9 @@ pub struct ArtifactSpec {
     pub m: usize,
     /// Absolute path of the HLO text file.
     pub path: PathBuf,
+    /// Input tensor signature, positional.
     pub inputs: Vec<IoSpec>,
+    /// Output tensor signature, positional.
     pub outputs: Vec<IoSpec>,
 }
 
@@ -133,14 +145,17 @@ impl Manifest {
         Ok(())
     }
 
+    /// The artifact directory the manifest was loaded from.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// Every artifact, manifest order.
     pub fn artifacts(&self) -> &[ArtifactSpec] {
         &self.artifacts
     }
 
+    /// Look up one artifact by its unique name.
     pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name)
     }

@@ -42,6 +42,8 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Open over an artifact directory: loads the manifest and builds
+    /// the PJRT client.
     pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
         let manifest = Manifest::load(dir.into())?;
         let runtime = XlaRuntime::cpu()?;
@@ -53,10 +55,12 @@ impl Registry {
         Self::open(artifacts_dir())
     }
 
+    /// The loaded manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// The PJRT runtime executables compile against.
     pub fn runtime(&self) -> &XlaRuntime {
         &self.runtime
     }

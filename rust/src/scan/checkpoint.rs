@@ -112,6 +112,7 @@ where
         self.elems.len()
     }
 
+    /// Whether nothing has been appended yet.
     pub fn is_empty(&self) -> bool {
         self.elems.is_empty()
     }

@@ -241,6 +241,7 @@ impl Default for ScanOptions {
 }
 
 impl ScanOptions {
+    /// Single-threaded options (parallel dispatch never engages).
     pub fn serial() -> Self {
         Self {
             threads: 1,
@@ -250,6 +251,7 @@ impl ScanOptions {
         }
     }
 
+    /// Select the scan schedule (builder-style).
     pub fn with_engine(mut self, engine: ScanEngine) -> Self {
         self.engine = engine;
         self

@@ -41,8 +41,11 @@ pub enum OpClass {
 /// of `block` dependent combines).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Level {
+    /// Operation class every task in the level executes.
     pub class: OpClass,
+    /// Independent tasks in the level.
     pub count: usize,
+    /// Dependent ops inside each task.
     pub ops_per_item: usize,
 }
 
@@ -50,14 +53,17 @@ pub struct Level {
 /// independent.
 #[derive(Debug, Clone, Default)]
 pub struct Dag {
+    /// The levels, execution order.
     pub levels: Vec<Level>,
 }
 
 impl Dag {
+    /// Append a level of `count` single-op tasks.
     pub fn push(&mut self, class: OpClass, count: usize) {
         self.push_tasks(class, count, 1);
     }
 
+    /// Append a level of `count` tasks of `ops_per_item` dependent ops.
     pub fn push_tasks(&mut self, class: OpClass, count: usize, ops_per_item: usize) {
         if count > 0 && ops_per_item > 0 {
             self.levels.push(Level { class, count, ops_per_item });
@@ -113,7 +119,9 @@ impl CostModel {
 /// The simulated device.
 #[derive(Debug, Clone, Copy)]
 pub struct Device {
+    /// Parallel cores available.
     pub cores: usize,
+    /// Per-op cost calibration.
     pub cost: CostModel,
 }
 

@@ -3,7 +3,8 @@
 //!
 //! The prefix-sum structure of the scan (paper §IV) makes a cold
 //! session fully characterized by its observations plus the serialized
-//! per-block summaries ([`Session::snapshot`]): raw element chains are
+//! per-block summaries ([`Session::snapshot`](crate::engine::Session::snapshot)):
+//! raw element chains are
 //! deterministic functions of `(model, ys)`, so spilling a session to
 //! disk and restoring it is *bit-identical* to never having evicted it
 //! (`Engine::resume_session` + replayed appends — property-tested in
@@ -29,13 +30,17 @@
 //!   evict ──▶ compact(id, meta, snapshot) + drop the resident Session
 //!   touch ──▶ restore(id) ─▶ resume_session(snapshot) + replay appends
 //!   close ──▶ remove(id)
-//!   crash ──▶ max_id() seeds the id allocator; recover() re-registers
+//!   crash ──▶ max_id() seeds the id allocator; recover_meta() re-registers
 //!             every stored session (lazily restored on first touch)
 //! ```
+//!
+//! The disk format itself — framing, checksums, record kinds, the
+//! compaction/rename protocol, torn-tail semantics, and the sharded
+//! directory layout — is specified in `docs/STORE_FORMAT.md`.
 
 pub mod disk;
 
-pub use disk::DiskStore;
+pub use disk::{DiskStore, DEFAULT_GROUP_COMMIT_WINDOW, FORMAT_VERSION};
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -87,6 +92,7 @@ pub struct SessionMeta {
 }
 
 impl SessionMeta {
+    /// Serialize for the store's durable `open` record.
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
         obj.insert("model".to_string(), Json::Str(self.model.clone()));
@@ -107,6 +113,8 @@ impl SessionMeta {
         Json::Obj(obj)
     }
 
+    /// Inverse of [`to_json`](Self::to_json); typed errors on missing
+    /// or malformed fields.
     pub fn from_json(v: &Json) -> Result<SessionMeta> {
         let model = v
             .get("model")
@@ -155,9 +163,10 @@ impl SessionMeta {
 /// live session by the snapshot/resume contract.
 #[derive(Debug, Clone)]
 pub struct StoredSession {
+    /// The session's durable identity (model, options, lag).
     pub meta: SessionMeta,
-    /// Latest [`Session::snapshot`] checkpoint, superseding everything
-    /// logged before it.
+    /// Latest [`Session::snapshot`](crate::engine::Session::snapshot)
+    /// checkpoint, superseding everything logged before it.
     pub snapshot: Option<Json>,
     /// Observation chunks appended after the snapshot, oldest first.
     pub appends: Vec<Vec<u32>>,
@@ -174,6 +183,7 @@ impl StoredSession {
         base + self.appends.iter().map(Vec::len).sum::<usize>()
     }
 
+    /// Whether no observations are held at all.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -225,6 +235,25 @@ pub trait SessionStore: Send + Sync {
     /// state cannot be read are skipped, never a hard error.
     fn recover(&self) -> Result<Vec<(u64, StoredSession)>>;
 
+    /// Metadata-only enumeration for crash recovery: `(id, meta, length)`
+    /// per stored session, without materializing snapshots or append
+    /// chunks. `Coordinator::recover_sessions` re-registers sessions as
+    /// *evicted* stubs, so this is all it needs — a store that can
+    /// answer from headers alone (as [`DiskStore`] does) makes
+    /// startup O(#sessions) instead of O(stored bytes). The default
+    /// falls back to a full [`recover`](Self::recover). Unreadable
+    /// sessions are skipped, never a hard error.
+    fn recover_meta(&self) -> Result<Vec<(u64, SessionMeta, usize)>> {
+        Ok(self
+            .recover()?
+            .into_iter()
+            .map(|(id, s)| {
+                let len = s.len();
+                (id, s.meta, len)
+            })
+            .collect())
+    }
+
     /// Highest session id the store holds state for (`None` when
     /// empty), metadata-only cheap. `Coordinator::new` seeds its id
     /// allocator from this so a fresh open can never collide with — and
@@ -245,6 +274,7 @@ pub struct MemStore {
 }
 
 impl MemStore {
+    /// An empty in-memory store.
     pub fn new() -> Self {
         Self::default()
     }
@@ -414,6 +444,12 @@ mod tests {
         assert_eq!(store.restore(7).unwrap().len(), 6);
 
         assert_eq!(store.recover().unwrap().len(), 1);
+        // The default metadata-only scan agrees with the full one.
+        let metas = store.recover_meta().unwrap();
+        assert_eq!(metas.len(), 1);
+        assert_eq!(metas[0].0, 7);
+        assert_eq!(metas[0].1, meta());
+        assert_eq!(metas[0].2, 6);
         store.remove(7).unwrap();
         assert!(store.restore(7).is_err());
         assert!(store.log_append(7, &[0]).is_err());

@@ -41,15 +41,19 @@ fn unavailable<T>() -> XlaResult<T> {
 /// Typed storage behind a [`Literal`].
 #[derive(Debug, Clone)]
 pub enum LiteralData {
+    /// f32 payload.
     F32(Vec<f32>),
+    /// i32 payload.
     I32(Vec<i32>),
 }
 
 /// Element types that can cross the literal boundary.
 pub trait NativeType: Copy {
+    /// Copy the literal's payload out as this type.
     fn read(lit: &Literal) -> XlaResult<Vec<Self>>
     where
         Self: Sized;
+    /// Wrap a host slice as literal storage.
     fn store(data: &[Self]) -> LiteralData;
 }
 
@@ -91,6 +95,8 @@ impl Literal {
         Literal { data: T::store(data), dims: vec![data.len() as i64] }
     }
 
+    /// Reinterpret the literal under new dims (element count must
+    /// match).
     pub fn reshape(&self, dims: &[i64]) -> XlaResult<Literal> {
         let want: i64 = dims.iter().product();
         let have = match &self.data {
@@ -105,10 +111,12 @@ impl Literal {
         Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
     }
 
+    /// The literal's dims.
     pub fn dims(&self) -> &[i64] {
         &self.dims
     }
 
+    /// Copy the payload out as `T`.
     pub fn to_vec<T: NativeType>(&self) -> XlaResult<Vec<T>> {
         T::read(self)
     }
@@ -124,18 +132,23 @@ impl Literal {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// CPU client — always the typed "unavailable" error in the stub.
     pub fn cpu() -> XlaResult<PjRtClient> {
         unavailable()
     }
 
+    /// Platform name (constant in the stub).
     pub fn platform_name(&self) -> String {
         "stub".to_string()
     }
 
+    /// Device count (zero in the stub).
     pub fn device_count(&self) -> usize {
         0
     }
 
+    /// Compile a computation — unreachable in the stub (no client can
+    /// be constructed).
     pub fn compile(
         &self,
         _comp: &XlaComputation,
@@ -148,6 +161,7 @@ impl PjRtClient {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Parse an HLO text file — typed "unavailable" error in the stub.
     pub fn from_text_file(_path: &str) -> XlaResult<HloModuleProto> {
         unavailable()
     }
@@ -157,6 +171,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Wrap a parsed module.
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
@@ -166,6 +181,7 @@ impl XlaComputation {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Execute with literal arguments — unreachable in the stub.
     pub fn execute<L: std::borrow::Borrow<Literal>>(
         &self,
         _args: &[L],
@@ -178,6 +194,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Copy the buffer back to a host literal — unreachable in the stub.
     pub fn to_literal_sync(&self) -> XlaResult<Literal> {
         unavailable()
     }
