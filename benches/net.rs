@@ -1,0 +1,145 @@
+//! Bench target: the network serving layer — sustained decode
+//! throughput and wire latency over loopback TCP, swept across
+//! concurrent connections × pipelining depth.
+//!
+//! Each cell starts a fresh `NetServer` over a native coordinator,
+//! spawns `conns` client threads, and keeps `pipeline` decode requests
+//! in flight per connection (send → match response by id). Reported per
+//! cell: sustained req/s and p50/p99/max request latency (send to
+//! response, including queueing behind the pipeline).
+//!
+//! The acceptance row: ≥ 4 concurrent pipelined connections must be
+//! measured (the fleet shape the coordinator's worker pools are sized
+//! for). `HMM_SCAN_BENCH_SMOKE=1` shrinks the sweep to a CI smoke run.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hmm_scan::coordinator::{Algo, Coordinator, CoordinatorConfig, DecodeRequest};
+use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
+use hmm_scan::net::{NetClient, NetServer, NetServerConfig};
+use hmm_scan::rng::Xoshiro256StarStar;
+
+fn pct_us(sorted: &[Duration], p: f64) -> u128 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).floor() as usize;
+    sorted[idx].as_micros()
+}
+
+/// One sweep cell: `conns` connections × `pipeline` in-flight each,
+/// `requests` decodes per connection of length `t`. Returns
+/// (total served, wall, sorted latencies).
+fn run_cell(
+    addr: &str,
+    conns: usize,
+    pipeline: usize,
+    requests: usize,
+    t: usize,
+) -> (usize, Duration, Vec<Duration>) {
+    let hmm = gilbert_elliott(GeParams::default());
+    let t0 = Instant::now();
+    let mut all: Vec<Duration> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..conns {
+            let hmm = hmm.clone();
+            joins.push(scope.spawn(move || {
+                let mut client =
+                    NetClient::connect(addr).expect("bench client connect");
+                let mut rng =
+                    Xoshiro256StarStar::seed_from_u64(0xBE7 + c as u64);
+                let reqs: Vec<DecodeRequest> = (0..requests)
+                    .map(|i| {
+                        let ys = sample(&hmm, t, &mut rng).observations;
+                        let algo =
+                            if i % 2 == 0 { Algo::Smooth } else { Algo::Map };
+                        DecodeRequest::new(i as u64, "ge", ys, algo)
+                    })
+                    .collect();
+                client
+                    .pipeline_decodes(reqs, pipeline)
+                    .expect("pipelined decode failed")
+            }));
+        }
+        for join in joins {
+            all.extend(join.join().expect("bench thread panicked"));
+        }
+    });
+    let wall = t0.elapsed();
+    all.sort_unstable();
+    (conns * requests, wall, all)
+}
+
+fn main() {
+    let smoke = std::env::var("HMM_SCAN_BENCH_SMOKE").as_deref() == Ok("1");
+    let (conn_grid, pipe_grid, requests, t): (&[usize], &[usize], usize, usize) =
+        if smoke {
+            (&[4], &[1, 8], 24, 256)
+        } else {
+            (&[1, 4, 8], &[1, 8, 32], 128, 512)
+        };
+
+    let coord = Arc::new(
+        Coordinator::new(CoordinatorConfig::native_only())
+            .expect("bench coordinator"),
+    );
+    coord.register_model("ge", gilbert_elliott(GeParams::default()));
+    let server = NetServer::start(
+        Arc::clone(&coord),
+        "127.0.0.1:0",
+        NetServerConfig {
+            max_connections: conn_grid.iter().copied().max().unwrap_or(8) + 4,
+            max_inflight_per_conn: pipe_grid.iter().copied().max().unwrap_or(32),
+            exec_threads: hmm_scan::exec::default_parallelism().min(8),
+            ..NetServerConfig::default()
+        },
+    )
+    .expect("bench server");
+    let addr = server.local_addr().to_string();
+    println!(
+        "net bench on {addr} (T={t}, {requests} reqs/conn; latency includes \
+         pipeline queueing)"
+    );
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>10}",
+        "conns x pipeline", "req/s", "p50", "p99", "max"
+    );
+
+    let mut measured_4plus_pipelined = false;
+    for &conns in conn_grid {
+        for &pipeline in pipe_grid {
+            let (served, wall, lat) =
+                run_cell(&addr, conns, pipeline, requests, t);
+            println!(
+                "{:<22} {:>10.1} {:>9}µ {:>9}µ {:>9}µ",
+                format!("{conns} x {pipeline}"),
+                served as f64 / wall.as_secs_f64(),
+                pct_us(&lat, 0.50),
+                pct_us(&lat, 0.99),
+                lat.last().map_or(0, |d| d.as_micros()),
+            );
+            if conns >= 4 && pipeline > 1 {
+                measured_4plus_pipelined = true;
+            }
+        }
+    }
+    assert!(
+        measured_4plus_pipelined,
+        "the sweep must cover ≥4 concurrent pipelined connections"
+    );
+
+    let graceful = server.shutdown(Duration::from_secs(10));
+    let snap = coord.metrics().snapshot();
+    println!(
+        "\nserver: {} conns served, {} wire decodes, drain {}",
+        snap.conns_opened,
+        snap.wire_verbs
+            .iter()
+            .find(|v| v.verb == "decode")
+            .map_or(0, |v| v.count),
+        if graceful { "graceful" } else { "forced" },
+    );
+    assert_eq!(snap.failed, 0, "no request may fail under the sweep");
+}

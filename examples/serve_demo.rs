@@ -21,17 +21,24 @@
 //! append-ahead logs' *metadata* (frame headers, not bodies) — with
 //! closes bit-identical to clean engine runs.
 //!
+//! A fourth phase drives the coordinator over the *network layer*: a
+//! `net::NetServer` on loopback, a `net::NetClient` running decodes and
+//! a full streaming lifecycle over TCP, with every response asserted
+//! **bit-identical** to the same request issued in-process — then a
+//! graceful drain.
+//!
 //!     cargo run --release --example serve_demo
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use hmm_scan::coordinator::{
-    Algo, Coordinator, CoordinatorConfig, DecodeRequest, StreamReply,
-    StreamRequest,
+    Algo, Coordinator, CoordinatorConfig, DecodeRequest, DecodeResult,
+    StreamReply, StreamRequest,
 };
-use hmm_scan::engine::{Algorithm, Engine, DEFAULT_SESSION_BLOCK};
+use hmm_scan::engine::{Algorithm, Engine, SessionOptions, DEFAULT_SESSION_BLOCK};
 use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
+use hmm_scan::net::{NetClient, NetServer, NetServerConfig};
 use hmm_scan::rng::Xoshiro256StarStar;
 use hmm_scan::scan::ScanOptions;
 
@@ -292,5 +299,93 @@ fn main() -> hmm_scan::Result<()> {
         t2.elapsed()
     );
     let _ = std::fs::remove_dir_all(&store_dir);
+
+    // ---- network phase: the coordinator over TCP loopback ------------
+    let net_coord = Arc::new(Coordinator::new(CoordinatorConfig::native_only())?);
+    net_coord.register_model("ge", hmm.clone());
+    let server = NetServer::start(
+        Arc::clone(&net_coord),
+        "127.0.0.1:0",
+        NetServerConfig::default(),
+    )?;
+    let addr = server.local_addr();
+    println!("\nnetwork layer up on {addr} (wire protocol v{})",
+             hmm_scan::net::WIRE_VERSION);
+    let t3 = Instant::now();
+    let mut client = NetClient::connect(addr.to_string())?;
+    client.ping()?;
+
+    // Decodes over the wire, bit-identical to in-process.
+    let mut wire_ok = 0usize;
+    for i in 0..24usize {
+        let t = [120usize, 900, 4000][i % 3];
+        let ys = sample(&hmm, t, &mut rng).observations;
+        let algo = if i % 2 == 0 { Algo::Smooth } else { Algo::Map };
+        let remote = client.decode(&DecodeRequest::new(i as u64, "ge", ys.clone(), algo))?;
+        let local = net_coord.decode(DecodeRequest::new(i as u64, "ge", ys, algo))?;
+        let identical = match (&remote.result, &local.result) {
+            (DecodeResult::Posterior(a), DecodeResult::Posterior(b)) => a == b,
+            (DecodeResult::Map(a), DecodeResult::Map(b)) => a == b,
+            _ => false,
+        };
+        assert!(identical, "wire decode diverged from in-process");
+        wire_ok += 1;
+    }
+
+    // A streaming lifecycle over the wire, mirrored in-process.
+    let remote_sid = client.open("ge", SessionOptions::default(), 32)?;
+    let opened = net_coord.stream(StreamRequest::open(0, "ge", 32))?;
+    let StreamReply::Opened { session: local_sid } = opened.reply else {
+        panic!("expected Opened")
+    };
+    for round in 0..12usize {
+        let k = 1 + (round * 17) % 40;
+        let chunk = sample(&hmm, k, &mut rng).observations;
+        let remote = client.append(remote_sid, &chunk)?;
+        let local =
+            net_coord.stream(StreamRequest::append(0, local_sid, chunk))?;
+        let (
+            StreamReply::Appended { filtered: rf, window: rw, .. },
+            StreamReply::Appended { filtered: lf, window: lw, .. },
+        ) = (remote, local.reply)
+        else {
+            panic!("expected Appended")
+        };
+        assert_eq!(rf, lf, "wire filtered diverged");
+        assert_eq!(
+            rw.map(|w| w.posterior),
+            lw.map(|w| w.posterior),
+            "wire lag window diverged"
+        );
+    }
+    let remote_posterior = client.close(remote_sid)?;
+    let closed = net_coord.stream(StreamRequest::close(0, local_sid))?;
+    let StreamReply::Closed { posterior: local_posterior, .. } = closed.reply
+    else {
+        panic!("expected Closed")
+    };
+    assert_eq!(remote_posterior, local_posterior, "wire posterior diverged");
+
+    drop(client);
+    let graceful = server.shutdown(Duration::from_secs(5));
+    let snap = net_coord.metrics().snapshot();
+    println!(
+        "  {wire_ok} wire decodes + 1 streaming session verified \
+         bit-identical to in-process results in {:?}",
+        t3.elapsed()
+    );
+    println!(
+        "  conns: {} opened / {} refused; drain: {}",
+        snap.conns_opened,
+        snap.conns_refused,
+        if graceful { "graceful" } else { "forced" },
+    );
+    for v in &snap.wire_verbs {
+        println!(
+            "  wire {:<7} n={:<5} p50 {}µs  p99 {}µs  max {}µs",
+            v.verb, v.count, v.p50_us, v.p99_us, v.max_us
+        );
+    }
+    assert!(graceful, "loopback drain must be graceful");
     Ok(())
 }

@@ -66,6 +66,29 @@ pub struct Metrics {
     synced_appends: AtomicU64,
     recovery_scans: AtomicU64,
     recovery_scan_us: AtomicU64,
+    conns_opened: AtomicU64,
+    conns_closed: AtomicU64,
+    conns_refused: AtomicU64,
+    wire_inflight: AtomicU64,
+    /// Per-verb wire serving latency (decode / open / append / stat /
+    /// close): request count plus a bounded sample window each.
+    wire_verbs: Mutex<BTreeMap<&'static str, (u64, SampleWindow)>>,
+}
+
+/// Per-verb wire latency percentiles over the retained sample window
+/// (see [`MetricsSnapshot::wire_verbs`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireVerbStats {
+    /// Verb name ("decode", "open", "append", "stat", "close").
+    pub verb: String,
+    /// Requests of this verb served over the wire.
+    pub count: u64,
+    /// Median wire serving latency over the window, µs.
+    pub p50_us: u64,
+    /// 99th-percentile wire serving latency over the window, µs.
+    pub p99_us: u64,
+    /// Maximum wire serving latency over the window, µs.
+    pub max_us: u64,
 }
 
 /// Point-in-time view of the metrics.
@@ -137,6 +160,20 @@ pub struct MetricsSnapshot {
     /// metadata-only recovery path keeps near-zero even for stores with
     /// gigabytes of logged observations.
     pub recovery_scan_us: u64,
+    /// TCP connections accepted by the network layer.
+    pub conns_opened: u64,
+    /// TCP connections that have since closed.
+    pub conns_closed: u64,
+    /// Connections refused (over `max_connections`, or while draining).
+    pub conns_refused: u64,
+    /// Gauge: connections open right now (`opened - closed`).
+    pub open_conns: u64,
+    /// Gauge: wire requests dispatched but not yet answered across all
+    /// connections.
+    pub wire_inflight: u64,
+    /// Per-verb wire serving latency (request-decoded → response
+    /// queued), ascending by verb name.
+    pub wire_verbs: Vec<WireVerbStats>,
 }
 
 impl MetricsSnapshot {
@@ -275,6 +312,43 @@ impl Metrics {
         );
     }
 
+    /// Record one TCP connection accepted.
+    pub fn on_conn_open(&self) {
+        self.conns_opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one TCP connection closed.
+    pub fn on_conn_close(&self) {
+        self.conns_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one TCP connection refused (capacity or drain).
+    pub fn on_conn_refused(&self) {
+        self.conns_refused.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one wire request dispatched (pairs with
+    /// [`on_wire_done`](Self::on_wire_done) — the difference is the
+    /// in-flight gauge).
+    pub fn on_wire_start(&self) {
+        self.wire_inflight.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one wire request answered: `verb` serving latency from
+    /// frame decoded to response queued.
+    pub fn on_wire_done(&self, verb: &'static str, latency: Duration) {
+        // Guard against unpaired calls: the gauge must never wrap.
+        let _ = self.wire_inflight.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| v.checked_sub(1),
+        );
+        let mut verbs = self.wire_verbs.lock().unwrap();
+        let entry = verbs.entry(verb).or_insert_with(Default::default);
+        entry.0 += 1;
+        entry.1.push(latency.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
     /// Record the forward suffix-rescan width of a fixed-lag query
     /// (bucketed immediately — power-of-two upper bound).
     pub fn on_suffix_width(&self, width: usize) {
@@ -303,6 +377,23 @@ impl Metrics {
             }
         };
         let hist = self.suffix_widths.lock().unwrap().clone();
+        let wire_verbs: Vec<WireVerbStats> = self
+            .wire_verbs
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(verb, (count, window))| {
+                let mut lat = window.samples.clone();
+                lat.sort_unstable();
+                WireVerbStats {
+                    verb: verb.to_string(),
+                    count: *count,
+                    p50_us: pct(&lat, 0.50),
+                    p99_us: pct(&lat, 0.99),
+                    max_us: lat.last().copied().unwrap_or(0),
+                }
+            })
+            .collect();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -338,6 +429,15 @@ impl Metrics {
             synced_appends: self.synced_appends.load(Ordering::Relaxed),
             recovery_scans: self.recovery_scans.load(Ordering::Relaxed),
             recovery_scan_us: self.recovery_scan_us.load(Ordering::Relaxed),
+            conns_opened: self.conns_opened.load(Ordering::Relaxed),
+            conns_closed: self.conns_closed.load(Ordering::Relaxed),
+            conns_refused: self.conns_refused.load(Ordering::Relaxed),
+            open_conns: self
+                .conns_opened
+                .load(Ordering::Relaxed)
+                .saturating_sub(self.conns_closed.load(Ordering::Relaxed)),
+            wire_inflight: self.wire_inflight.load(Ordering::Relaxed),
+            wire_verbs,
         }
     }
 }
@@ -445,6 +545,37 @@ mod tests {
             s.suffix_width_hist,
             vec![(1, 1), (2, 1), (4, 1), (64, 2), (128, 2), (1024, 1)]
         );
+    }
+
+    #[test]
+    fn connection_and_wire_gauges() {
+        let m = Metrics::new();
+        m.on_conn_open();
+        m.on_conn_open();
+        m.on_conn_refused();
+        m.on_conn_close();
+        m.on_wire_start();
+        m.on_wire_start();
+        m.on_wire_done("decode", Duration::from_micros(120));
+        for i in 1..=4u64 {
+            m.on_wire_start();
+            m.on_wire_done("append", Duration::from_micros(i * 10));
+        }
+        let s = m.snapshot();
+        assert_eq!((s.conns_opened, s.conns_closed, s.conns_refused), (2, 1, 1));
+        assert_eq!(s.open_conns, 1);
+        assert_eq!(s.wire_inflight, 1, "one decode still in flight");
+        assert_eq!(s.wire_verbs.len(), 2);
+        let append = s.wire_verbs.iter().find(|v| v.verb == "append").unwrap();
+        assert_eq!(append.count, 4);
+        assert_eq!(append.p50_us, 20);
+        assert_eq!(append.max_us, 40);
+        let decode = s.wire_verbs.iter().find(|v| v.verb == "decode").unwrap();
+        assert_eq!((decode.count, decode.max_us), (1, 120));
+        // Unpaired done calls clamp at zero instead of wrapping.
+        m.on_wire_done("decode", Duration::ZERO);
+        m.on_wire_done("decode", Duration::ZERO);
+        assert_eq!(m.snapshot().wire_inflight, 0);
     }
 
     #[test]

@@ -1,16 +1,24 @@
 //! Exact jsonx serialization for the scan element types.
 //!
 //! This is the block-summary interchange behind `engine::Session`
-//! snapshot/resume (and the future eviction-to-disk path): a session can
+//! snapshot/resume (and the eviction-to-disk path): a session can
 //! export its `CheckpointedScan` summaries, drop them, and restore
-//! without refolding. The round-trip is *bit-exact* for finite f64
-//! values — jsonx prints integers exactly and non-integers via Rust's
-//! shortest round-trip `Display` — which the restore contract relies on
-//! (restored scans must keep producing bit-identical results). All our
-//! element payloads are finite by construction ([`TINY`](super::TINY)
-//! floors, [`NEG_INF`](super::NEG_INF) = -1e30 stand-in).
+//! without refolding. The round-trip is *bit-exact*: numeric payloads
+//! are written as **hex-f64** strings — 16 lowercase hex characters per
+//! value, the big-endian `f64::to_bits` pattern — which both halves
+//! (≈ 2× smaller logs) and exactifies the encoding for *every* bit
+//! pattern, not just the finite values jsonx's shortest round-trip
+//! decimal already preserved. Readers accept both forms: a number array
+//! (the legacy decimal encoding of store-format v2 / snapshot v1) and a
+//! hex string, so old records stay readable forever.
+//!
+//! Observation sequences get the same treatment via [`obs_to_json`]: a
+//! bit-packed hex payload `{"n": count, "w": bits-per-symbol, "x":
+//! "hex"}` (1/2/4/8/16/32 bits per symbol, chosen from the largest
+//! symbol), ~4× smaller than the decimal array for binary alphabets.
 
 use std::collections::BTreeMap;
+use std::fmt::Write as _;
 
 use crate::error::{Error, Result};
 use crate::jsonx::Json;
@@ -18,15 +26,211 @@ use crate::linalg::Mat;
 
 use super::{BsElement, MpElement, SpElement};
 
-/// Matrix → `{"rows": R, "cols": C, "data": [..]}` (row-major).
+/// Pack f64 values as fixed-width hex: 16 lowercase hex characters per
+/// value (the big-endian `to_bits` pattern). Bit-exact for every value,
+/// including non-finite ones.
+pub fn f64s_to_hex(vals: &[f64]) -> String {
+    let mut s = String::with_capacity(vals.len() * 16);
+    for v in vals {
+        let _ = write!(s, "{:016x}", v.to_bits());
+    }
+    s
+}
+
+/// Inverse of [`f64s_to_hex`]; typed error on any malformed payload.
+pub fn f64s_from_hex(s: &str) -> Result<Vec<f64>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 16 != 0 {
+        return Err(Error::invalid_request(format!(
+            "hex f64 payload: length {} is not a multiple of 16",
+            bytes.len()
+        )));
+    }
+    bytes
+        .chunks(16)
+        .map(|chunk| {
+            std::str::from_utf8(chunk)
+                .ok()
+                .and_then(|t| u64::from_str_radix(t, 16).ok())
+                .map(f64::from_bits)
+                .ok_or_else(|| {
+                    Error::invalid_request("hex f64 payload: non-hex characters")
+                })
+        })
+        .collect()
+}
+
+/// Bits per symbol the packed observation encoding uses for a maximum
+/// symbol value: the smallest of 1/2/4/8/16/32 that fits.
+fn obs_bits(max: u32) -> usize {
+    let need = (32 - max.leading_zeros()).max(1) as usize;
+    need.next_power_of_two()
+}
+
+/// Observation sequence → bit-packed hex object `{"n": count, "w":
+/// bits-per-symbol, "x": "hex"}`. Symbols are packed big-endian within
+/// each hex character (sub-nibble widths) or as fixed-width hex numbers
+/// (≥ 4 bits). [`obs_from_json`] is the inverse; it also accepts the
+/// legacy plain number array.
+pub fn obs_to_json(ys: &[u32]) -> Json {
+    let bits = obs_bits(ys.iter().copied().max().unwrap_or(0));
+    let mut s = String::with_capacity(ys.len() * bits / 4 + 1);
+    if bits >= 4 {
+        let width = bits / 4;
+        for &y in ys {
+            let _ = write!(s, "{y:0width$x}");
+        }
+    } else {
+        let per = 4 / bits;
+        for chunk in ys.chunks(per) {
+            let mut nib = 0u32;
+            for (i, &y) in chunk.iter().enumerate() {
+                nib |= y << (4 - bits * (i + 1));
+            }
+            let _ = write!(s, "{nib:x}");
+        }
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("n".to_string(), Json::Num(ys.len() as f64));
+    obj.insert("w".to_string(), Json::Num(bits as f64));
+    obj.insert("x".to_string(), Json::Str(s));
+    Json::Obj(obj)
+}
+
+/// Parse an observation sequence: either the packed hex object written
+/// by [`obs_to_json`] or the legacy plain number array. Typed errors on
+/// anything malformed — never a panic.
+pub fn obs_from_json(v: &Json) -> Result<Vec<u32>> {
+    match v {
+        Json::Arr(a) => a
+            .iter()
+            .map(|x| {
+                x.as_usize().and_then(|u| u32::try_from(u).ok()).ok_or_else(
+                    || Error::invalid_request("observations: bad symbol"),
+                )
+            })
+            .collect(),
+        Json::Obj(_) => {
+            let n = v.get("n").as_usize().ok_or_else(|| {
+                Error::invalid_request("packed observations: missing 'n'")
+            })?;
+            let bits = v.get("w").as_usize().ok_or_else(|| {
+                Error::invalid_request("packed observations: missing 'w'")
+            })?;
+            if !matches!(bits, 1 | 2 | 4 | 8 | 16 | 32) {
+                return Err(Error::invalid_request(format!(
+                    "packed observations: unsupported width {bits}"
+                )));
+            }
+            let hex = v.get("x").as_str().ok_or_else(|| {
+                Error::invalid_request("packed observations: missing 'x'")
+            })?;
+            let want_chars = (n * bits).div_ceil(4);
+            if hex.len() != want_chars {
+                return Err(Error::invalid_request(format!(
+                    "packed observations: {} hex chars for {n} symbols at \
+                     {bits} bits (expected {want_chars})",
+                    hex.len()
+                )));
+            }
+            let mut out = Vec::with_capacity(n);
+            if bits >= 4 {
+                let width = bits / 4;
+                for chunk in hex.as_bytes().chunks(width) {
+                    let t = std::str::from_utf8(chunk).ok();
+                    let y = t
+                        .and_then(|t| u32::from_str_radix(t, 16).ok())
+                        .ok_or_else(|| {
+                            Error::invalid_request(
+                                "packed observations: non-hex characters",
+                            )
+                        })?;
+                    out.push(y);
+                }
+            } else {
+                let per = 4 / bits;
+                let mask = (1u32 << bits) - 1;
+                'chars: for c in hex.chars() {
+                    let nib = c.to_digit(16).ok_or_else(|| {
+                        Error::invalid_request(
+                            "packed observations: non-hex characters",
+                        )
+                    })?;
+                    for i in 0..per {
+                        if out.len() == n {
+                            break 'chars;
+                        }
+                        out.push((nib >> (4 - bits * (i + 1))) & mask);
+                    }
+                }
+            }
+            out.truncate(n);
+            Ok(out)
+        }
+        _ => Err(Error::invalid_request(
+            "observations: expected an array or a packed hex object",
+        )),
+    }
+}
+
+/// Observation count of a serialized sequence (either encoding) without
+/// materializing the symbols — what `StoredSession::len` and the store's
+/// checkpoint headers read.
+pub fn obs_len_from_json(v: &Json) -> Option<usize> {
+    match v {
+        Json::Arr(a) => Some(a.len()),
+        Json::Obj(_) => v.get("n").as_usize(),
+        _ => None,
+    }
+}
+
+/// Recursively rewrite every packed payload in `v` into the legacy
+/// decimal encoding: hex-f64 strings under `data`/`g` keys become number
+/// arrays, and packed observation objects become symbol arrays. This is
+/// the v2-era compatibility *writer* — tests use it to prove old decimal
+/// records stay readable, and the log-size bench uses it as the
+/// uncompressed baseline.
+pub fn to_decimal_json(v: &Json) -> Json {
+    match v {
+        Json::Obj(o) => {
+            if o.contains_key("n") && o.contains_key("w") && o.contains_key("x") {
+                if let Ok(ys) = obs_from_json(v) {
+                    return Json::Arr(
+                        ys.into_iter().map(|y| Json::Num(y as f64)).collect(),
+                    );
+                }
+            }
+            Json::Obj(
+                o.iter()
+                    .map(|(k, val)| {
+                        let new = match (k.as_str(), val) {
+                            ("data" | "g", Json::Str(s)) => match f64s_from_hex(s)
+                            {
+                                Ok(vals) => Json::Arr(
+                                    vals.into_iter().map(Json::Num).collect(),
+                                ),
+                                Err(_) => to_decimal_json(val),
+                            },
+                            _ => to_decimal_json(val),
+                        };
+                        (k.clone(), new)
+                    })
+                    .collect(),
+            )
+        }
+        Json::Arr(a) => Json::Arr(a.iter().map(to_decimal_json).collect()),
+        other => other.clone(),
+    }
+}
+
+/// Matrix → `{"rows": R, "cols": C, "data": "<hex-f64>"}` (row-major
+/// packed hex; see [`f64s_to_hex`]). [`mat_from_json`] also accepts the
+/// legacy decimal `"data": [..]` array.
 pub fn mat_to_json(m: &Mat) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("rows".to_string(), Json::Num(m.rows() as f64));
     obj.insert("cols".to_string(), Json::Num(m.cols() as f64));
-    obj.insert(
-        "data".to_string(),
-        Json::Arr(m.data().iter().map(|&v| Json::Num(v)).collect()),
-    );
+    obj.insert("data".to_string(), Json::Str(f64s_to_hex(m.data())));
     Json::Obj(obj)
 }
 
@@ -80,14 +284,13 @@ pub fn mp_element_from_json(v: &Json) -> Result<MpElement> {
     Ok(MpElement { mat: mat_from_json(v.get("mat"))? })
 }
 
-/// Bayesian filtering element → `{"f": .., "g": [..], "log_scale": ..}`.
+/// Bayesian filtering element → `{"f": .., "g": "<hex-f64>",
+/// "log_scale": ..}` (the reader also accepts a legacy decimal `g`
+/// array).
 pub fn bs_element_to_json(e: &BsElement) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("f".to_string(), mat_to_json(&e.f));
-    obj.insert(
-        "g".to_string(),
-        Json::Arr(e.g.iter().map(|&v| Json::Num(v)).collect()),
-    );
+    obj.insert("g".to_string(), Json::Str(f64s_to_hex(&e.g)));
     obj.insert("log_scale".to_string(), Json::Num(e.log_scale));
     Json::Obj(obj)
 }
@@ -130,15 +333,24 @@ pub fn check_bs_shape(e: &BsElement, d: usize) -> Result<()> {
     Ok(())
 }
 
+/// Parse an f64 vector from either encoding: a hex-f64 string (the
+/// packed form every writer emits now) or the legacy decimal array.
 fn f64_vec_from_json(v: &Json, what: &str) -> Result<Vec<f64>> {
-    v.as_arr()
-        .ok_or_else(|| Error::invalid_request(format!("{what} not an array")))?
-        .iter()
-        .map(|x| {
-            x.as_f64()
-                .ok_or_else(|| Error::invalid_request(format!("{what}: non-number")))
-        })
-        .collect()
+    match v {
+        Json::Str(s) => f64s_from_hex(s)
+            .map_err(|_| Error::invalid_request(format!("{what}: bad hex"))),
+        Json::Arr(a) => a
+            .iter()
+            .map(|x| {
+                x.as_f64().ok_or_else(|| {
+                    Error::invalid_request(format!("{what}: non-number"))
+                })
+            })
+            .collect(),
+        _ => Err(Error::invalid_request(format!(
+            "{what}: expected a hex string or an array"
+        ))),
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +400,116 @@ mod tests {
                 .unwrap();
         assert_eq!(back.data(), m.data());
         assert_eq!((back.rows(), back.cols()), (2, 3));
+    }
+
+    #[test]
+    fn hex_f64_round_trip_any_bits() {
+        let vals = [
+            0.0,
+            -0.0,
+            1.0,
+            0.1 + 0.2,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            NEG_INF,
+        ];
+        let hex = f64s_to_hex(&vals);
+        assert_eq!(hex.len(), vals.len() * 16);
+        let back = f64s_from_hex(&hex).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "bit pattern must survive");
+        }
+        assert!(f64s_from_hex("0123").is_err(), "length not multiple of 16");
+        assert!(f64s_from_hex("zzzzzzzzzzzzzzzz").is_err(), "non-hex chars");
+    }
+
+    #[test]
+    fn obs_packing_round_trips_every_width() {
+        // Alphabets forcing 1, 2, 4, 8, 16 and 32 bit symbols.
+        for max in [1u32, 3, 11, 200, 40_000, u32::MAX] {
+            for n in [0usize, 1, 2, 3, 7, 64, 101] {
+                let ys: Vec<u32> = (0..n)
+                    .map(|k| {
+                        (k as u32).wrapping_mul(2_654_435_761) % max.max(1)
+                    })
+                    .collect();
+                let ys = if n > 0 {
+                    // Force the max symbol to appear so the width is hit.
+                    let mut ys = ys;
+                    ys[0] = max;
+                    ys
+                } else {
+                    ys
+                };
+                let packed = obs_to_json(&ys);
+                assert_eq!(obs_len_from_json(&packed), Some(n));
+                let back = obs_from_json(&packed).unwrap();
+                assert_eq!(back, ys, "max={max} n={n}");
+                // The legacy decimal array still parses to the same.
+                let legacy = to_decimal_json(&packed);
+                assert!(matches!(legacy, Json::Arr(_)));
+                assert_eq!(obs_from_json(&legacy).unwrap(), ys);
+            }
+        }
+        // Binary sequences pack ~4× denser than "0,1," decimal arrays.
+        let ys: Vec<u32> = (0..1024).map(|k| k % 2).collect();
+        let packed = obs_to_json(&ys).to_string_compact();
+        let legacy = to_decimal_json(&obs_to_json(&ys)).to_string_compact();
+        assert!(
+            packed.len() * 3 < legacy.len(),
+            "packed {} !<< legacy {}",
+            packed.len(),
+            legacy.len()
+        );
+    }
+
+    #[test]
+    fn malformed_packed_obs_are_rejected() {
+        for bad in [
+            r#"{"n": 4, "w": 3, "x": "ff"}"#,  // unsupported width
+            r#"{"n": 4, "w": 1, "x": "ff"}"#,  // wrong hex length
+            r#"{"n": 4, "w": 8, "x": "zzzzzzzz"}"#, // non-hex
+            r#"{"n": 4, "w": 1}"#,             // missing payload
+            r#"{"w": 1, "x": ""}"#,            // missing count
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(obs_from_json(&v).is_err(), "should reject {bad}");
+        }
+        assert!(obs_from_json(&Json::Num(3.0)).is_err());
+        assert!(obs_from_json(&Json::parse("[1, -2]").unwrap()).is_err());
+    }
+
+    #[test]
+    fn legacy_decimal_elements_still_parse() {
+        // A v2-era element record (decimal arrays) reads back bit-exact.
+        let h = gilbert_elliott(GeParams::default());
+        let ys = vec![0u32, 1, 1, 0, 1];
+        for e in sp_element_chain(&h, &ys) {
+            let legacy = to_decimal_json(&sp_element_to_json(&e));
+            assert!(legacy.get("mat").get("data").as_arr().is_some());
+            assert_eq!(sp_element_from_json(&legacy).unwrap(), e);
+        }
+        for e in bs_element_chain(&h, &ys) {
+            let legacy = to_decimal_json(&bs_element_to_json(&e));
+            assert!(legacy.get("g").as_arr().is_some());
+            assert_eq!(bs_element_from_json(&legacy).unwrap(), e);
+        }
+        // And the packed form is smaller for full-precision payloads
+        // (block summaries after many folds print 17 significant digits
+        // in decimal; single-step protos can print shorter).
+        let m = Mat::from_vec(
+            2,
+            2,
+            vec![0.1 + 0.2, (0.3f64).ln(), 1.0 / 3.0, 2.0_f64.sqrt()],
+        );
+        let packed = mat_to_json(&m).to_string_compact();
+        let legacy = to_decimal_json(&mat_to_json(&m)).to_string_compact();
+        assert!(
+            packed.len() < legacy.len(),
+            "packed {packed} !< legacy {legacy}"
+        );
     }
 
     #[test]

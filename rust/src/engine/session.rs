@@ -53,7 +53,7 @@ use std::sync::Arc;
 
 use crate::elements::serde::{
     bs_element_from_json, bs_element_to_json, check_bs_shape, check_sp_shape,
-    sp_element_from_json, sp_element_to_json,
+    obs_from_json, obs_to_json, sp_element_from_json, sp_element_to_json,
 };
 use crate::elements::{
     bs_element_chain, bs_element_protos, bs_prior_element, mp_element_protos,
@@ -253,9 +253,13 @@ impl Engine {
     /// state: shape mismatches are rejected, stale summaries are not
     /// re-verified.
     pub fn resume_session(&self, snap: &Json) -> Result<Session> {
-        if snap.get("version").as_usize() != Some(1) {
+        // Version 1 wrote decimal number arrays; version 2 writes the
+        // packed hex payloads of `elements::serde`. The payload parsers
+        // accept both encodings, so both versions resume here.
+        if !matches!(snap.get("version").as_usize(), Some(1 | 2)) {
             return Err(Error::invalid_request(
-                "session snapshot: unsupported or missing version (expected 1)",
+                "session snapshot: unsupported or missing version \
+                 (expected 1 or 2)",
             ));
         }
         let kind = match snap.get("kind") {
@@ -273,19 +277,12 @@ impl Engine {
             .ok_or_else(|| Error::invalid_request("session snapshot: 'block'"))?
             .max(1);
         let track_map = snap.get("track_map").as_bool().unwrap_or(false);
-        let ys: Vec<u32> = snap
-            .get("ys")
-            .as_arr()
-            .ok_or_else(|| Error::invalid_request("session snapshot: 'ys'"))?
-            .iter()
-            .map(|v| {
-                v.as_usize()
-                    .and_then(|u| u32::try_from(u).ok())
-                    .ok_or_else(|| {
-                        Error::invalid_request("session snapshot: invalid symbol")
-                    })
-            })
-            .collect::<Result<_>>()?;
+        let ys: Vec<u32> = match snap.get("ys") {
+            Json::Null => {
+                return Err(Error::invalid_request("session snapshot: 'ys'"))
+            }
+            v => obs_from_json(v)?,
+        };
         if !ys.is_empty() {
             self.hmm.check_observations(&ys)?;
         }
@@ -643,14 +640,14 @@ impl Session {
     /// the coordinator's session store.
     pub fn snapshot(&self) -> Json {
         let mut obj = BTreeMap::new();
-        obj.insert("version".to_string(), Json::Num(1.0));
+        // Version 2: observations and element payloads use the packed
+        // hex encodings of `elements::serde` (~2× smaller spill logs);
+        // `resume_session` still accepts version-1 decimal snapshots.
+        obj.insert("version".to_string(), Json::Num(2.0));
         obj.insert("kind".to_string(), Json::Str(self.kind.name().to_string()));
         obj.insert("block".to_string(), Json::Num(self.block() as f64));
         obj.insert("track_map".to_string(), Json::Bool(self.mp.is_some()));
-        obj.insert(
-            "ys".to_string(),
-            Json::Arr(self.ys.iter().map(|&y| Json::Num(y as f64)).collect()),
-        );
+        obj.insert("ys".to_string(), obs_to_json(&self.ys));
         match (&self.sp, &self.bs) {
             (Some(sp), _) => {
                 obj.insert(

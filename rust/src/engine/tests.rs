@@ -443,8 +443,31 @@ fn session_snapshot_resume_is_bit_identical() {
     .unwrap();
     assert!(engine.resume_session(&bad_shape).is_err());
     // Unknown snapshot versions are rejected up front.
-    let future = crate::jsonx::Json::parse(r#"{"version": 2, "block": 8}"#).unwrap();
+    let future = crate::jsonx::Json::parse(r#"{"version": 3, "block": 8}"#).unwrap();
     assert!(engine.resume_session(&future).is_err());
+
+    // A version-1 snapshot (decimal payloads, the pre-compression
+    // encoding) resumes bit-identically: rewrite the packed payloads to
+    // decimal arrays and downgrade the version stamp.
+    let mut live = engine
+        .open_session(SessionOptions { track_map: true, ..SessionOptions::default() });
+    live.push(&ys[..200]).unwrap();
+    let legacy = match crate::elements::serde::to_decimal_json(&live.snapshot()) {
+        crate::jsonx::Json::Obj(mut o) => {
+            assert!(o.get("ys").and_then(|v| v.as_arr()).is_some());
+            o.insert("version".to_string(), crate::jsonx::Json::Num(1.0));
+            crate::jsonx::Json::Obj(o)
+        }
+        other => panic!("snapshot must be an object, got {other:?}"),
+    };
+    let mut resumed = engine.resume_session(&legacy).unwrap();
+    live.push(&ys[200..]).unwrap();
+    resumed.push(&ys[200..]).unwrap();
+    assert_eq!(
+        live.finish().unwrap(),
+        resumed.finish().unwrap(),
+        "decimal (v1) snapshot resume diverged"
+    );
 }
 
 /// Bayes-kind sessions stream the BS-Par element algebra: any split of

@@ -15,10 +15,12 @@
 //!   workspaces, and streaming [`engine::Session`]s over checkpointed
 //!   scans), [`store`] (the durable session store: disk spill, LRU
 //!   eviction and crash recovery under the streaming coordinator),
-//!   [`runtime`] (PJRT artifact loading and execution) and
+//!   [`runtime`] (PJRT artifact loading and execution),
 //!   [`coordinator`] (router, batcher, temporal sharder): the L3 layer
 //!   that serves inference requests over the AOT-compiled XLA artifacts
-//!   produced by `python/compile/aot.py`.
+//!   produced by `python/compile/aot.py`, and [`net`] (the L4 network
+//!   layer: TCP front-end, versioned wire protocol, and client — what
+//!   turns the coordinator into a deployable server).
 //! * **Substrates** — [`rng`], [`jsonx`], [`exec`], [`cli`], [`benchx`],
 //!   [`proptestx`], [`report`], [`config`], [`simulator`], [`xla_stub`]:
 //!   in-tree replacements for crates unavailable in the offline build
@@ -43,6 +45,7 @@ pub mod hmm;
 pub mod inference;
 pub mod jsonx;
 pub mod linalg;
+pub mod net;
 pub mod proptestx;
 pub mod report;
 pub mod rng;

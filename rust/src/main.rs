@@ -1,24 +1,30 @@
 //! `hmm-scan` — launcher for the temporal-parallel HMM inference system.
 //!
 //! Subcommands:
-//!   decode    run one inference request through the coordinator
-//!   serve     start the coordinator and drive a synthetic request load
-//!   figures   regenerate the paper's figures/tables into results/
-//!   simulate  query the work-span GPU simulator
-//!   train     Baum–Welch parameter estimation (§V-C) on GE data
-//!   info      artifact manifest + environment report
+//!   decode     run one inference request through the coordinator
+//!   serve      start the coordinator (TCP with --listen, else a
+//!              synthetic in-process load)
+//!   bench-net  drive a remote server: verify bit-identity vs a local
+//!              coordinator, then measure wire throughput/latency
+//!   figures    regenerate the paper's figures/tables into results/
+//!   simulate   query the work-span GPU simulator
+//!   train      Baum–Welch parameter estimation (§V-C) on GE data
+//!   info       artifact manifest + environment report
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use hmm_scan::cli::{flag, opt, Cli};
 use hmm_scan::config::RunConfig;
 use hmm_scan::coordinator::{
-    Algo, Coordinator, CoordinatorConfig, DecodeRequest, ExecMode,
+    Algo, Coordinator, CoordinatorConfig, DecodeRequest, DecodeResult,
+    ExecMode, StreamReply, StreamRequest,
 };
-use hmm_scan::engine::{Algorithm, Engine};
+use hmm_scan::engine::{Algorithm, Engine, SessionOptions};
 use hmm_scan::error::{Error, Result};
 use hmm_scan::hmm::{gilbert_elliott, sample};
 use hmm_scan::inference::{BaumWelchOptions, EStepBackend};
+use hmm_scan::net::{NetClient, NetServer, NetServerConfig};
 use hmm_scan::rng::Xoshiro256StarStar;
 use hmm_scan::simulator::Device;
 
@@ -53,14 +59,32 @@ fn cli() -> Cli {
         )
         .command(
             "serve",
-            "start the coordinator and run a synthetic request load",
+            "start the coordinator: TCP with --listen, else a synthetic load",
             vec![
-                opt("requests", "number of requests", "64"),
-                opt("t", "sequence length per request", "1000"),
+                opt("requests", "number of requests (synthetic mode)", "64"),
+                opt("t", "sequence length per request (synthetic mode)", "1000"),
                 opt("workers", "XLA worker threads", "4"),
                 opt("store", "durable session-store directory ('' = memory)", ""),
+                opt("listen", "TCP listen address, e.g. 127.0.0.1:7171 ('' = synthetic load)", ""),
+                opt("duration", "seconds to serve TCP before draining (0 = forever)", "0"),
+                opt("max-conns", "TCP connection limit", "64"),
+                opt("max-inflight", "pipelined requests per connection", "32"),
                 opt("config", "JSON config file path", ""),
                 flag("native", "serve natively (no artifacts)"),
+            ],
+            vec![],
+        )
+        .command(
+            "bench-net",
+            "verify + benchmark a remote server over the wire protocol",
+            vec![
+                opt("connect", "server address (host:port)", ""),
+                opt("requests", "decode requests per connection", "64"),
+                opt("t", "sequence length per request", "512"),
+                opt("conns", "concurrent client connections", "4"),
+                opt("pipeline", "requests in flight per connection", "8"),
+                opt("seed", "workload RNG seed", "3405691582"),
+                opt("config", "JSON config file path", ""),
             ],
             vec![],
         )
@@ -113,6 +137,7 @@ fn run(args: &[String]) -> Result<()> {
     match parsed.command.as_str() {
         "decode" => cmd_decode(&parsed),
         "serve" => cmd_serve(&parsed),
+        "bench-net" => cmd_bench_net(&parsed),
         "figures" => cmd_figures(&parsed),
         "simulate" => cmd_simulate(&parsed),
         "train" => cmd_train(&parsed),
@@ -195,6 +220,48 @@ fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
     let hmm = gilbert_elliott(config.ge);
     coord.register_model("ge", hmm.clone());
 
+    // TCP mode: expose every decode and streaming verb over the wire
+    // (docs/WIRE_FORMAT.md) and serve until killed (or --duration).
+    if let Some(listen) = p.get("listen").filter(|l| !l.is_empty()) {
+        let net_config = NetServerConfig {
+            max_connections: p.get_usize("max-conns")?,
+            max_inflight_per_conn: p.get_usize("max-inflight")?,
+            ..NetServerConfig::default()
+        };
+        let server =
+            NetServer::start(Arc::clone(&coord), listen, net_config)?;
+        // The exact line CI's loopback job parses for the bound port.
+        println!("listening on {}", server.local_addr());
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        let duration = p.get_usize("duration")?;
+        let started = Instant::now();
+        loop {
+            std::thread::sleep(Duration::from_millis(500));
+            if duration > 0
+                && started.elapsed() >= Duration::from_secs(duration as u64)
+            {
+                break;
+            }
+        }
+        let graceful = server.shutdown(Duration::from_secs(10));
+        let snap = coord.metrics().snapshot();
+        println!(
+            "drained ({}): {} conns served ({} refused), {} decode reqs",
+            if graceful { "graceful" } else { "forced" },
+            snap.conns_opened,
+            snap.conns_refused,
+            snap.requests,
+        );
+        for v in &snap.wire_verbs {
+            println!(
+                "  wire {:<7} n={:<7} p50 {}µs  p99 {}µs  max {}µs",
+                v.verb, v.count, v.p50_us, v.p99_us, v.max_us
+            );
+        }
+        return Ok(());
+    }
+
     let handle = Arc::clone(&coord).serve();
     let mut rng = Xoshiro256StarStar::seed_from_u64(config.seed);
     let t0 = std::time::Instant::now();
@@ -238,6 +305,162 @@ fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
         snap.hk_queue_depth,
         snap.sync_batches,
         snap.sync_batch_occupancy(),
+    );
+    Ok(())
+}
+
+/// Drive a remote server end to end: first verify that decode and the
+/// full streaming lifecycle return results **bit-identical** to a local
+/// native coordinator fed the same requests (any mismatch is a nonzero
+/// exit — CI's loopback smoke job relies on that), then measure
+/// pipelined wire throughput and latency.
+fn cmd_bench_net(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let config = load_config(p)?;
+    let addr = match p.get("connect") {
+        Some(a) if !a.is_empty() => a.to_string(),
+        _ => return Err(Error::usage("bench-net requires --connect HOST:PORT")),
+    };
+    let requests = p.get_usize("requests")?;
+    let t = p.get_usize("t")?;
+    let conns = p.get_usize("conns")?.max(1);
+    let pipeline = p.get_usize("pipeline")?.max(1);
+    let seed = p.get_usize("seed")? as u64;
+
+    let hmm = gilbert_elliott(config.ge);
+    let local = Coordinator::new(CoordinatorConfig::native_only())?;
+    local.register_model("ge", hmm.clone());
+    let mut client = NetClient::connect(&addr)?;
+    client.ping()?;
+    println!("connected to {addr}");
+
+    // ---- verification: remote must equal in-process, bit for bit ----
+    let mut rng = Xoshiro256StarStar::seed_from_u64(seed);
+    let ys = sample(&hmm, t.max(8), &mut rng).observations;
+    for algo in Algo::ALL {
+        let req = DecodeRequest::new(1, "ge", ys.clone(), algo)
+            .with_mode(ExecMode::Native);
+        let remote = client.decode(&req)?;
+        let want = local.decode(req)?;
+        let ok = match (&remote.result, &want.result) {
+            (DecodeResult::Posterior(a), DecodeResult::Posterior(b)) => a == b,
+            (DecodeResult::Map(a), DecodeResult::Map(b)) => a == b,
+            _ => false,
+        };
+        if !ok {
+            return Err(Error::coordinator(format!(
+                "verification failed: remote {algo:?} decode diverged from \
+                 the local coordinator"
+            )));
+        }
+    }
+    // Streaming lifecycle: open → append* → stat → close, mirrored on
+    // the local coordinator.
+    let remote_sid = client.open("ge", SessionOptions::default(), 16)?;
+    let opened = local.stream(StreamRequest::open(0, "ge", 16))?;
+    let StreamReply::Opened { session: local_sid } = opened.reply else {
+        return Err(Error::coordinator("local open failed"));
+    };
+    for chunk in ys.chunks((ys.len() / 3).max(1)) {
+        let remote = client.append(remote_sid, chunk)?;
+        let want =
+            local.stream(StreamRequest::append(0, local_sid, chunk.to_vec()))?;
+        let (
+            StreamReply::Appended { len: rl, filtered: rf, window: rw, .. },
+            StreamReply::Appended { len: wl, filtered: wf, window: ww, .. },
+        ) = (remote, want.reply)
+        else {
+            return Err(Error::coordinator("append reply shape mismatch"));
+        };
+        let windows_match = match (&rw, &ww) {
+            (Some(a), Some(b)) => {
+                a.start == b.start && a.posterior == b.posterior
+            }
+            (None, None) => true,
+            _ => false,
+        };
+        if rl != wl || rf != wf || !windows_match {
+            return Err(Error::coordinator(
+                "verification failed: streaming append diverged over the wire",
+            ));
+        }
+    }
+    let StreamReply::Stats { len, .. } = client.stat(remote_sid)? else {
+        return Err(Error::coordinator("stat reply shape mismatch"));
+    };
+    if len != ys.len() {
+        return Err(Error::coordinator(format!(
+            "verification failed: stat reports {len} of {} observations",
+            ys.len()
+        )));
+    }
+    let remote_posterior = client.close(remote_sid)?;
+    let closed = local.stream(StreamRequest::close(0, local_sid))?;
+    let StreamReply::Closed { posterior: want_posterior, .. } = closed.reply
+    else {
+        return Err(Error::coordinator("local close failed"));
+    };
+    if remote_posterior != want_posterior {
+        return Err(Error::coordinator(
+            "verification failed: close posterior diverged over the wire",
+        ));
+    }
+    println!(
+        "verification OK: decode ×{} and open→append→stat→close are \
+         bit-identical to the local coordinator",
+        Algo::ALL.len()
+    );
+
+    // ---- throughput: conns × pipelining ------------------------------
+    let t0 = Instant::now();
+    let mut all_lat: Vec<Duration> = Vec::new();
+    let mut served = 0usize;
+    std::thread::scope(|scope| -> Result<()> {
+        let mut joins = Vec::new();
+        for c in 0..conns {
+            let addr = addr.clone();
+            let hmm = hmm.clone();
+            joins.push(scope.spawn(move || -> Result<Vec<Duration>> {
+                let mut client = NetClient::connect(&addr)?;
+                let mut rng =
+                    Xoshiro256StarStar::seed_from_u64(seed ^ (c as u64 + 1));
+                let reqs: Vec<DecodeRequest> = (0..requests)
+                    .map(|i| {
+                        let ys = sample(&hmm, t, &mut rng).observations;
+                        let algo =
+                            if i % 2 == 0 { Algo::Smooth } else { Algo::Map };
+                        DecodeRequest::new(i as u64, "ge", ys, algo)
+                    })
+                    .collect();
+                client.pipeline_decodes(reqs, pipeline)
+            }));
+        }
+        for join in joins {
+            let lat = join.join().expect("bench thread panicked")?;
+            served += lat.len();
+            all_lat.extend(lat);
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed();
+    all_lat.sort_unstable();
+    let pct = |p: f64| -> u128 {
+        if all_lat.is_empty() {
+            0
+        } else {
+            let idx = ((all_lat.len() as f64 - 1.0) * p).floor() as usize;
+            all_lat[idx].as_micros()
+        }
+    };
+    println!(
+        "throughput: {served} requests over {conns} conns × pipeline \
+         {pipeline} in {wall:?} = {:.1} req/s",
+        served as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "wire latency: p50 {}µs  p99 {}µs  max {}µs",
+        pct(0.50),
+        pct(0.99),
+        all_lat.last().map_or(0, |d| d.as_micros())
     );
     Ok(())
 }
@@ -385,6 +608,7 @@ mod tests {
         assert!(run(&argv("")).is_err());
         assert!(run(&argv("decode --algo nope")).is_err());
         assert!(run(&argv("decode --mode nope")).is_err());
+        assert!(run(&argv("bench-net")).is_err(), "--connect is required");
     }
 
     #[test]

@@ -1,0 +1,429 @@
+//! Blocking Rust client for the TCP serving layer.
+//!
+//! [`NetClient`] speaks the `net::wire` protocol over one persistent
+//! connection: `decode`, and the streaming verbs `open` / `append` /
+//! `stat` / `close`. Sessions are **coordinator-scoped, not
+//! connection-scoped** — a session id stays valid across reconnects —
+//! so the client auto-reconnects on connection failure and re-`Stat`s
+//! every session it has opened to re-validate them against the server
+//! (ROADMAP: "auto-reconnect with session re-Stat").
+//!
+//! Retry safety: verbs other than `append` are idempotent and are
+//! retried once after a reconnect. A lost `append` is ambiguous — the
+//! chunk may or may not have been applied — so the client compares the
+//! session's server-side length (from the re-`Stat`) against its own
+//! acked ledger: if the chunk landed, it polls the post-append state
+//! with an empty append instead of double-applying; if it did not, it
+//! re-sends; anything else is a typed error, never a silent
+//! double-apply.
+//!
+//! The pipelined half ([`send_decode`](NetClient::send_decode) /
+//! [`recv_decode`](NetClient::recv_decode)) is what the throughput
+//! bench drives: many requests in flight on one connection, responses
+//! matched by id in whatever order the server completes them. Don't mix
+//! pipelined sends with the blocking calls on one client.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    DecodeRequest, DecodeResponse, StreamReply, StreamRequest, StreamResponse,
+    StreamVerb,
+};
+use crate::engine::SessionOptions;
+use crate::error::{Error, Result};
+use crate::inference::Posterior;
+use crate::jsonx::Json;
+
+use super::wire::{self, Frame, FrameKind};
+
+/// Blocking wire-protocol client (see the module docs).
+pub struct NetClient {
+    addr: String,
+    stream: Option<TcpStream>,
+    next_id: u64,
+    /// Sessions opened through this client: id → observations acked by
+    /// the server (the ledger the append-retry logic compares against).
+    sessions: BTreeMap<u64, usize>,
+    read_timeout: Duration,
+    write_timeout: Duration,
+    max_frame_payload: usize,
+}
+
+impl NetClient {
+    /// Connect and handshake (a ping round trip — which also surfaces a
+    /// draining/busy server's refusal frame as a typed error).
+    pub fn connect(addr: impl AsRef<str>) -> Result<NetClient> {
+        let mut client = NetClient {
+            addr: addr.as_ref().to_string(),
+            stream: None,
+            next_id: 0,
+            sessions: BTreeMap::new(),
+            read_timeout: Duration::from_secs(60),
+            write_timeout: Duration::from_secs(10),
+            max_frame_payload: wire::DEFAULT_MAX_PAYLOAD,
+        };
+        client.reconnect()?;
+        Ok(client)
+    }
+
+    /// Replace the response-read timeout (builder-style; default 60 s —
+    /// a decode of a long sequence is slow on purpose).
+    pub fn with_read_timeout(mut self, timeout: Duration) -> NetClient {
+        self.read_timeout = timeout;
+        if let Some(s) = &self.stream {
+            let _ = s.set_read_timeout(Some(timeout));
+        }
+        self
+    }
+
+    /// The server address this client targets.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Sessions this client has opened and not yet closed, with their
+    /// acked observation counts.
+    pub fn tracked_sessions(&self) -> &BTreeMap<u64, usize> {
+        &self.sessions
+    }
+
+    /// (Re-)establish the connection and handshake with a ping.
+    fn reconnect(&mut self) -> Result<()> {
+        self.stream = None;
+        let stream = TcpStream::connect(&self.addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(self.read_timeout))?;
+        stream.set_write_timeout(Some(self.write_timeout))?;
+        self.stream = Some(stream);
+        let frame = self.roundtrip(FrameKind::Ping, &Json::Null)?;
+        if frame.kind != FrameKind::Pong {
+            self.stream = None;
+            return Err(Error::coordinator(format!(
+                "handshake: expected pong, got {:?}",
+                frame.kind
+            )));
+        }
+        Ok(())
+    }
+
+    fn stream_mut(&mut self) -> Result<&mut TcpStream> {
+        self.stream
+            .as_mut()
+            .ok_or_else(|| Error::coordinator("client not connected"))
+    }
+
+    fn next_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    /// One blocking request/response exchange. Error frames become
+    /// typed errors; a non-matching response id is a protocol error
+    /// (the blocking API keeps exactly one request outstanding).
+    fn roundtrip(&mut self, kind: FrameKind, payload: &Json) -> Result<Frame> {
+        let id = self.next_id();
+        let max = self.max_frame_payload;
+        let stream = self.stream_mut()?;
+        stream.write_all(&wire::encode_frame(id, kind, payload))?;
+        stream.flush()?;
+        let frame = wire::read_frame(stream, max)?;
+        if frame.kind == FrameKind::Error {
+            return Err(wire::error_from_json(&frame.payload));
+        }
+        if frame.id != id {
+            return Err(Error::coordinator(format!(
+                "wire: response id {} for request {id} (blocking clients \
+                 keep one request in flight)",
+                frame.id
+            )));
+        }
+        Ok(frame)
+    }
+
+    /// `roundtrip` with one transparent reconnect + session
+    /// re-validation on a connection-level failure. Only for verbs that
+    /// are safe to re-send (everything but a non-empty append).
+    fn call(&mut self, kind: FrameKind, payload: &Json) -> Result<Frame> {
+        match self.roundtrip(kind, payload) {
+            Err(Error::Io(_)) => {
+                self.reconnect()?;
+                self.revalidate_sessions();
+                self.roundtrip(kind, payload)
+            }
+            other => other,
+        }
+    }
+
+    /// Re-`Stat` every tracked session after a reconnect: refresh acked
+    /// lengths from the server; sessions the server no longer knows are
+    /// dropped from tracking (their next use errors with the server's
+    /// own message).
+    fn revalidate_sessions(&mut self) {
+        let ids: Vec<u64> = self.sessions.keys().copied().collect();
+        for id in ids {
+            let payload =
+                wire::stream_request_to_json(&StreamRequest::stat(0, id));
+            match self.roundtrip(FrameKind::StreamRequest, &payload) {
+                Ok(frame) => {
+                    if let Ok(resp) =
+                        wire::stream_response_from_json(frame.id, &frame.payload)
+                    {
+                        if let StreamReply::Stats { len, .. } = resp.reply {
+                            self.sessions.insert(id, len);
+                        }
+                    }
+                }
+                Err(Error::Io(_)) => return, // connection died again
+                Err(_) => {
+                    self.sessions.remove(&id);
+                }
+            }
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        self.call(FrameKind::Ping, &Json::Null).map(|_| ())
+    }
+
+    /// Serve one decode request remotely. The response's `id` echoes
+    /// the wire request id the client assigned (not `req.id`).
+    pub fn decode(&mut self, req: &DecodeRequest) -> Result<DecodeResponse> {
+        let payload = wire::decode_request_to_json(req);
+        let frame = self.call(FrameKind::DecodeRequest, &payload)?;
+        if frame.kind != FrameKind::DecodeResponse {
+            return Err(Error::coordinator(format!(
+                "wire: expected a decode response, got {:?}",
+                frame.kind
+            )));
+        }
+        wire::decode_response_from_json(frame.id, &frame.payload)
+    }
+
+    fn stream_call(&mut self, req: &StreamRequest) -> Result<StreamResponse> {
+        let payload = wire::stream_request_to_json(req);
+        let frame = self.call(FrameKind::StreamRequest, &payload)?;
+        parse_stream_response(frame)
+    }
+
+    /// Open a streaming session; returns the server-assigned id (valid
+    /// across reconnects — sessions live in the coordinator).
+    pub fn open(
+        &mut self,
+        model: &str,
+        options: SessionOptions,
+        lag: usize,
+    ) -> Result<u64> {
+        let req = StreamRequest {
+            id: 0,
+            verb: StreamVerb::Open { model: model.to_string(), options, lag },
+        };
+        let resp = self.stream_call(&req)?;
+        match resp.reply {
+            StreamReply::Opened { session } => {
+                self.sessions.insert(session, 0);
+                Ok(session)
+            }
+            other => Err(Error::coordinator(format!(
+                "stream open: unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Append observations; returns the [`StreamReply::Appended`]
+    /// payload (filtering marginal + optional fixed-lag window).
+    ///
+    /// On a connection failure mid-append the client reconnects and
+    /// resolves the ambiguity through the session's re-`Stat`ed length
+    /// before deciding to re-send (see the module docs); a session this
+    /// client does not track cannot be resolved and returns a typed
+    /// error instead of risking a double-apply.
+    pub fn append(&mut self, session: u64, ys: &[u32]) -> Result<StreamReply> {
+        let req = StreamRequest::append(0, session, ys.to_vec());
+        let payload = wire::stream_request_to_json(&req);
+        let outcome = self.roundtrip(FrameKind::StreamRequest, &payload);
+        let resp = match outcome {
+            Ok(frame) => parse_stream_response(frame)?,
+            Err(Error::Io(_)) => {
+                let acked = self.sessions.get(&session).copied();
+                self.reconnect()?;
+                self.revalidate_sessions();
+                let (Some(before), Some(&now)) =
+                    (acked, self.sessions.get(&session))
+                else {
+                    return Err(Error::coordinator(format!(
+                        "connection lost mid-append to untracked session \
+                         {session}; cannot prove whether the chunk applied — \
+                         stat the session and retry explicitly"
+                    )));
+                };
+                if now == before + ys.len() {
+                    // The lost append landed; poll the resulting state
+                    // with an empty (idempotent) append.
+                    let poll = StreamRequest::append(0, session, Vec::new());
+                    self.stream_call(&poll)?
+                } else if now == before {
+                    // Re-send exactly once, WITHOUT the auto-reconnect
+                    // wrapper: if this attempt also dies mid-flight the
+                    // ambiguity is back, and blindly re-sending again
+                    // could double-apply — surface the error instead
+                    // (the caller's retry re-enters this Stat-ledger
+                    // resolution, which stays safe).
+                    parse_stream_response(
+                        self.roundtrip(FrameKind::StreamRequest, &payload)?,
+                    )?
+                } else {
+                    return Err(Error::coordinator(format!(
+                        "session {session} is at {now} observations after \
+                         reconnect (expected {before} or {}); refusing to \
+                         re-append",
+                        before + ys.len()
+                    )));
+                }
+            }
+            Err(e) => return Err(e),
+        };
+        match resp.reply {
+            reply @ StreamReply::Appended { .. } => {
+                if let StreamReply::Appended { len, .. } = &reply {
+                    self.sessions.insert(session, *len);
+                }
+                Ok(reply)
+            }
+            other => Err(Error::coordinator(format!(
+                "stream append: unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Residency/length probe for one session.
+    pub fn stat(&mut self, session: u64) -> Result<StreamReply> {
+        let resp = self.stream_call(&StreamRequest::stat(0, session))?;
+        match resp.reply {
+            reply @ StreamReply::Stats { .. } => {
+                if let StreamReply::Stats { len, .. } = &reply {
+                    if self.sessions.contains_key(&session) {
+                        self.sessions.insert(session, *len);
+                    }
+                }
+                Ok(reply)
+            }
+            other => Err(Error::coordinator(format!(
+                "stream stat: unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Close a session for its exact full-sequence posterior.
+    pub fn close(&mut self, session: u64) -> Result<Posterior> {
+        let resp = self.stream_call(&StreamRequest::close(0, session))?;
+        match resp.reply {
+            StreamReply::Closed { posterior, .. } => {
+                self.sessions.remove(&session);
+                Ok(posterior)
+            }
+            other => Err(Error::coordinator(format!(
+                "stream close: unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    // -- pipelined half (benches) ------------------------------------------
+
+    /// Fire one decode request without waiting; returns the wire id to
+    /// match against [`recv_decode`](Self::recv_decode). No
+    /// auto-reconnect — a pipeline's in-flight set dies with the
+    /// connection.
+    pub fn send_decode(&mut self, req: &DecodeRequest) -> Result<u64> {
+        let id = self.next_id();
+        let payload = wire::decode_request_to_json(req);
+        let stream = self.stream_mut()?;
+        stream.write_all(&wire::encode_frame(
+            id,
+            FrameKind::DecodeRequest,
+            &payload,
+        ))?;
+        Ok(id)
+    }
+
+    /// Flush buffered pipelined sends to the server.
+    pub fn flush(&mut self) -> Result<()> {
+        self.stream_mut()?.flush()?;
+        Ok(())
+    }
+
+    /// Drive a batch of decode requests through the pipelined half,
+    /// keeping at most `pipeline` in flight; returns one send→response
+    /// latency per request (in completion order). The single harness
+    /// behind `hmm-scan bench-net` and `benches/net.rs`. Any
+    /// request-level failure aborts with its error.
+    pub fn pipeline_decodes(
+        &mut self,
+        reqs: impl IntoIterator<Item = DecodeRequest>,
+        pipeline: usize,
+    ) -> Result<Vec<Duration>> {
+        let pipeline = pipeline.max(1);
+        let mut inflight: BTreeMap<u64, Instant> = BTreeMap::new();
+        let mut lat = Vec::new();
+        for req in reqs {
+            while inflight.len() >= pipeline {
+                self.drain_one(&mut inflight, &mut lat)?;
+            }
+            let id = self.send_decode(&req)?;
+            self.flush()?;
+            inflight.insert(id, Instant::now());
+        }
+        while !inflight.is_empty() {
+            self.drain_one(&mut inflight, &mut lat)?;
+        }
+        Ok(lat)
+    }
+
+    /// Receive one pipelined response and record its latency.
+    fn drain_one(
+        &mut self,
+        inflight: &mut BTreeMap<u64, Instant>,
+        lat: &mut Vec<Duration>,
+    ) -> Result<()> {
+        let (id, resp) = self.recv_decode()?;
+        resp?;
+        if let Some(sent) = inflight.remove(&id) {
+            lat.push(sent.elapsed());
+        }
+        Ok(())
+    }
+
+    /// Receive the next pipelined response (any order): the wire id and
+    /// the per-request outcome.
+    pub fn recv_decode(&mut self) -> Result<(u64, Result<DecodeResponse>)> {
+        let max = self.max_frame_payload;
+        let stream = self.stream_mut()?;
+        let frame = wire::read_frame(stream, max)?;
+        match frame.kind {
+            FrameKind::DecodeResponse => {
+                let resp =
+                    wire::decode_response_from_json(frame.id, &frame.payload);
+                Ok((frame.id, resp))
+            }
+            FrameKind::Error => {
+                Ok((frame.id, Err(wire::error_from_json(&frame.payload))))
+            }
+            other => Err(Error::coordinator(format!(
+                "wire: unexpected {other:?} frame in a decode pipeline"
+            ))),
+        }
+    }
+}
+
+fn parse_stream_response(frame: Frame) -> Result<StreamResponse> {
+    if frame.kind != FrameKind::StreamResponse {
+        return Err(Error::coordinator(format!(
+            "wire: expected a stream response, got {:?}",
+            frame.kind
+        )));
+    }
+    wire::stream_response_from_json(frame.id, &frame.payload)
+}

@@ -1,0 +1,34 @@
+//! The network serving layer (L4): a TCP front-end over the
+//! [`Coordinator`](crate::coordinator::Coordinator), a versioned wire
+//! protocol, and a blocking client.
+//!
+//! After four PRs of in-process serving (`mpsc`-fed serve loop), this
+//! is what makes the coordinator a *deployable server*: remote callers
+//! reach every decode and streaming verb over persistent TCP
+//! connections with pipelining, backpressure and graceful drain.
+//!
+//! * [`wire`] — length-prefixed, checksummed, versioned frames carrying
+//!   compact-JSON payloads with the packed hex encodings of
+//!   `elements::serde` (bit-exact f64 round trips). Spec:
+//!   `docs/WIRE_FORMAT.md`.
+//! * [`server`] — [`NetServer`]: accept loop, per-connection
+//!   reader/writer, decode execution on a shared `exec::ThreadPool`,
+//!   `max_connections` / `max_inflight_per_conn` limits, drain +
+//!   graceful shutdown.
+//! * [`client`] — [`NetClient`]: blocking verbs plus a pipelined decode
+//!   half for benches; auto-reconnect with per-session re-`Stat`.
+//!
+//! CLI: `hmm-scan serve --listen ADDR` starts a server; `hmm-scan
+//! bench-net --connect ADDR` verifies a remote server bit-for-bit
+//! against a local coordinator and measures wire throughput. The
+//! loopback bit-identity contract — remote responses exactly equal to
+//! in-process `Coordinator::decode`/`stream` results — is enforced by
+//! the tests in [`server`] and by CI's loopback smoke job.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::NetClient;
+pub use server::{NetServer, NetServerConfig};
+pub use wire::{Frame, FrameKind, WIRE_VERSION};

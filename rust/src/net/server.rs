@@ -1,0 +1,881 @@
+//! The TCP front-end: persistent connections, pipelined requests,
+//! backpressure, and graceful drain over a [`Coordinator`].
+//!
+//! ## Architecture
+//!
+//! ```text
+//!                    accept thread ──▶ refuse (busy / draining)
+//!                         │
+//!                         ▼ hands the connection to
+//!                 conn pool (exec::ThreadPool, one slot per connection)
+//!                         │
+//!        ┌────────────────┴─────────────────┐
+//!        │ reader (pool worker)             │ writer thread
+//!        │  frame → parse → dispatch        │  response frames, in
+//!        │  · stream verbs: inline,         │  completion order
+//!        │    arrival order                 ▲
+//!        │  · decode: work pool ────────────┘ (mpsc, out-of-order)
+//!        └──────────────────────────────────┘
+//! ```
+//!
+//! * **Pipelining / out-of-order completion.** A client may write many
+//!   request frames before reading responses. Decode requests are
+//!   executed concurrently on the shared work pool and complete out of
+//!   order — responses are matched by the echoed request id. Streaming
+//!   verbs are executed inline on the connection's reader in arrival
+//!   order (an append stream is order-sensitive), so per-connection
+//!   stream semantics match a local `Coordinator::stream` call sequence
+//!   while decodes overlap freely around them.
+//! * **Backpressure.** `max_connections` bounds accepted connections
+//!   (beyond it the accept loop replies with a refusal error frame and
+//!   closes); `max_inflight_per_conn` bounds dispatched-but-unanswered
+//!   requests per connection — the reader stops reading until a slot
+//!   frees, which backpressures the client through TCP. Read and write
+//!   timeouts bound how long a stalled peer can pin a worker mid-frame.
+//! * **Drain / shutdown.** [`NetServer::drain`] refuses *new*
+//!   connections while existing ones keep being served — in-flight
+//!   streaming sessions run to completion and their final acks are
+//!   written. [`NetServer::shutdown`] drains, waits up to a grace
+//!   period for clients to finish and disconnect, then force-closes
+//!   stragglers and joins every thread. See DESIGN.md §6 for the state
+//!   machine.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Coordinator;
+use crate::error::{Error, Result};
+use crate::exec::ThreadPool;
+use crate::jsonx::Json;
+
+use super::wire::{self, Frame, FrameKind};
+
+/// Server lifecycle states (the drain state machine, DESIGN.md §6).
+const RUNNING: u8 = 0;
+const DRAINING: u8 = 1;
+const CLOSED: u8 = 2;
+
+/// Tuning knobs for [`NetServer::start`].
+#[derive(Debug, Clone)]
+pub struct NetServerConfig {
+    /// Concurrent connections accepted; beyond this the accept loop
+    /// replies with a refusal error frame and closes the socket.
+    pub max_connections: usize,
+    /// Dispatched-but-unanswered requests one connection may have in
+    /// flight. The reader stops pulling frames at the cap, so a client
+    /// pipelining harder than the server completes is backpressured by
+    /// TCP rather than ballooning server memory.
+    pub max_inflight_per_conn: usize,
+    /// Reader poll tick: an idle connection wakes this often to check
+    /// for shutdown; a peer stalling *mid-frame* for this long is
+    /// dropped (slow-loris guard).
+    pub read_timeout: Duration,
+    /// Cap on a blocked response write before the connection is
+    /// declared dead.
+    pub write_timeout: Duration,
+    /// Worker threads of the shared decode-execution pool.
+    pub exec_threads: usize,
+    /// Per-frame payload cap handed to the wire decoder.
+    pub max_frame_payload: usize,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        Self {
+            max_connections: 64,
+            max_inflight_per_conn: 32,
+            read_timeout: Duration::from_millis(250),
+            write_timeout: Duration::from_secs(10),
+            exec_threads: 4,
+            max_frame_payload: wire::DEFAULT_MAX_PAYLOAD,
+        }
+    }
+}
+
+/// Per-connection in-flight request counter (the
+/// `max_inflight_per_conn` backpressure gate).
+struct Inflight {
+    count: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl Inflight {
+    fn new() -> Arc<Inflight> {
+        Arc::new(Inflight { count: Mutex::new(0), freed: Condvar::new() })
+    }
+
+    /// Block until a slot frees, then take it.
+    fn acquire(&self, cap: usize) {
+        let mut n = self.count.lock().unwrap();
+        while *n >= cap.max(1) {
+            n = self.freed.wait(n).unwrap();
+        }
+        *n += 1;
+    }
+
+    fn release(&self) {
+        let mut n = self.count.lock().unwrap();
+        *n = n.saturating_sub(1);
+        self.freed.notify_one();
+    }
+}
+
+/// State shared by the accept loop and every connection handler.
+struct Shared {
+    coord: Arc<Coordinator>,
+    config: NetServerConfig,
+    state: AtomicU8,
+    /// Active connection count; the condvar wakes drain/shutdown waits.
+    conns: Mutex<usize>,
+    conns_cv: Condvar,
+    /// Clones of live connection streams, for force-close at shutdown.
+    live: Mutex<BTreeMap<u64, TcpStream>>,
+    conn_seq: AtomicU64,
+}
+
+impl Shared {
+    fn state(&self) -> u8 {
+        self.state.load(Ordering::Acquire)
+    }
+
+    fn conn_done(&self, id: u64) {
+        self.live.lock().unwrap().remove(&id);
+        let mut n = self.conns.lock().unwrap();
+        *n = n.saturating_sub(1);
+        self.conns_cv.notify_all();
+        self.coord.metrics().on_conn_close();
+    }
+}
+
+/// A running TCP front-end. Dropping it shuts down with no grace
+/// period; call [`shutdown`](Self::shutdown) for a graceful drain.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    /// Connection handlers run here — the accept loop hands each
+    /// accepted connection to this pool, sized exactly
+    /// `max_connections` so a handler never queues behind another.
+    conn_pool: Option<Arc<ThreadPool>>,
+    /// Decode execution pool (shared across connections).
+    work: Option<Arc<ThreadPool>>,
+    accept: Option<thread::JoinHandle<()>>,
+    local: SocketAddr,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving `coord` over it. Returns once the listener is
+    /// bound; [`local_addr`](Self::local_addr) reports the actual
+    /// address.
+    pub fn start(
+        coord: Arc<Coordinator>,
+        listen: &str,
+        config: NetServerConfig,
+    ) -> Result<NetServer> {
+        let listener = TcpListener::bind(listen)?;
+        let local = listener.local_addr()?;
+        let conn_pool = Arc::new(ThreadPool::new(config.max_connections.max(1)));
+        let work = Arc::new(ThreadPool::new(config.exec_threads.max(1)));
+        let shared = Arc::new(Shared {
+            coord,
+            config,
+            state: AtomicU8::new(RUNNING),
+            conns: Mutex::new(0),
+            conns_cv: Condvar::new(),
+            live: Mutex::new(BTreeMap::new()),
+            conn_seq: AtomicU64::new(0),
+        });
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let conn_pool = Arc::clone(&conn_pool);
+            let work = Arc::clone(&work);
+            thread::Builder::new()
+                .name("hmm-scan-net-accept".into())
+                .spawn(move || accept_loop(shared, listener, conn_pool, work))
+                .expect("spawn accept thread")
+        };
+        Ok(NetServer {
+            shared,
+            conn_pool: Some(conn_pool),
+            work: Some(work),
+            accept: Some(accept),
+            local,
+        })
+    }
+
+    /// The bound listen address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Number of currently-connected clients.
+    pub fn active_connections(&self) -> usize {
+        *self.shared.conns.lock().unwrap()
+    }
+
+    /// Enter the draining state: new connections are refused with a
+    /// typed error frame; existing connections keep being served until
+    /// their clients disconnect — in-flight streaming sessions complete
+    /// and their final responses are acked. Idempotent; a no-op after
+    /// shutdown begins.
+    pub fn drain(&self) {
+        let _ = self.shared.state.compare_exchange(
+            RUNNING,
+            DRAINING,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+    }
+
+    /// Whether the server is refusing new connections.
+    pub fn is_draining(&self) -> bool {
+        self.shared.state() != RUNNING
+    }
+
+    /// Graceful shutdown: drain, wait up to `grace` for every client to
+    /// finish and disconnect, then close the listener, force-close any
+    /// straggler connections, and join all threads. Returns `true` when
+    /// every connection drained within the grace period (no client was
+    /// cut off mid-stream).
+    pub fn shutdown(mut self, grace: Duration) -> bool {
+        self.drain();
+        let graceful = {
+            let deadline = Instant::now() + grace;
+            let mut n = self.shared.conns.lock().unwrap();
+            while *n > 0 {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                let (guard, _) =
+                    self.shared.conns_cv.wait_timeout(n, left).unwrap();
+                n = guard;
+            }
+            *n == 0
+        };
+        self.close_and_join();
+        graceful
+    }
+
+    /// Stop accepting, force-close connections, join every thread.
+    fn close_and_join(&mut self) {
+        self.shared.state.store(CLOSED, Ordering::Release);
+        // Wake the accept loop out of its blocking accept().
+        let _ = TcpStream::connect(self.local);
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        // Force-close stragglers; their readers exit on the socket
+        // error (or at the next idle tick, which also checks CLOSED).
+        for (_, stream) in self.shared.live.lock().unwrap().iter() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        {
+            let mut n = self.shared.conns.lock().unwrap();
+            while *n > 0 {
+                let (guard, timeout) = self
+                    .shared
+                    .conns_cv
+                    .wait_timeout(n, Duration::from_secs(5))
+                    .unwrap();
+                n = guard;
+                if timeout.timed_out() {
+                    break; // leak rather than hang — readers are stuck in IO
+                }
+            }
+        }
+        // Join the pools on this thread (never from one of their own
+        // workers): connection handlers have exited, so both drains are
+        // immediate.
+        self.work.take();
+        self.conn_pool.take();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if self.accept.is_some() || self.conn_pool.is_some() {
+            self.close_and_join();
+        }
+    }
+}
+
+/// Best-effort refusal: an error frame with id 0, then close.
+fn refuse(mut stream: TcpStream, why: &str, write_timeout: Duration) {
+    let _ = stream.set_write_timeout(Some(write_timeout));
+    let err = Error::coordinator(why);
+    let _ = stream.write_all(&wire::encode_frame(
+        0,
+        FrameKind::Error,
+        &wire::error_to_json(&err),
+    ));
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn accept_loop(
+    shared: Arc<Shared>,
+    listener: TcpListener,
+    conn_pool: Arc<ThreadPool>,
+    work: Arc<ThreadPool>,
+) {
+    loop {
+        let (stream, _peer) = match listener.accept() {
+            Ok(conn) => conn,
+            Err(_) => {
+                if shared.state() == CLOSED {
+                    break;
+                }
+                continue;
+            }
+        };
+        match shared.state() {
+            CLOSED => break, // the shutdown wake-up connection
+            DRAINING => {
+                shared.coord.metrics().on_conn_refused();
+                refuse(stream, "server draining: connection refused",
+                       shared.config.write_timeout);
+                continue;
+            }
+            _ => {}
+        }
+        {
+            let mut conns = shared.conns.lock().unwrap();
+            if *conns >= shared.config.max_connections.max(1) {
+                drop(conns);
+                shared.coord.metrics().on_conn_refused();
+                refuse(
+                    stream,
+                    "server busy: connection limit reached",
+                    shared.config.write_timeout,
+                );
+                continue;
+            }
+            *conns += 1;
+        }
+        let id = shared.conn_seq.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            shared.live.lock().unwrap().insert(id, clone);
+        }
+        shared.coord.metrics().on_conn_open();
+        let shared2 = Arc::clone(&shared);
+        let work2 = Arc::clone(&work);
+        conn_pool.submit(move || {
+            serve_connection(&shared2, &work2, id, stream);
+            shared2.conn_done(id);
+        });
+    }
+}
+
+/// Outcome of one reader poll.
+enum Poll {
+    Frame(Frame),
+    Idle,
+    Closed,
+}
+
+/// Read one frame, distinguishing a clean peer close and an idle
+/// timeout (no bytes yet) from hard errors. Once the first byte of a
+/// frame has arrived the rest must follow within the read timeout —
+/// a mid-frame stall is an error (slow-loris guard).
+fn poll_frame(stream: &mut TcpStream, max_payload: usize) -> Result<Poll> {
+    let mut first = [0u8; 1];
+    match stream.read(&mut first) {
+        Ok(0) => return Ok(Poll::Closed),
+        Ok(_) => {}
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) =>
+        {
+            return Ok(Poll::Idle)
+        }
+        Err(e) => return Err(Error::Io(e)),
+    }
+    let mut r = (&first[..]).chain(stream);
+    wire::read_frame(&mut r, max_payload).map(Poll::Frame)
+}
+
+/// Serve one connection until the peer closes, a framing violation
+/// occurs, or the server shuts down. Runs on a connection-pool worker.
+fn serve_connection(
+    shared: &Arc<Shared>,
+    work: &Arc<ThreadPool>,
+    _conn_id: u64,
+    mut stream: TcpStream,
+) {
+    let cfg = &shared.config;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let Ok(write_half) = stream.try_clone() else { return };
+    let _ = write_half.set_write_timeout(Some(cfg.write_timeout));
+
+    // Writer thread: serializes response frames in completion order.
+    // Senders: this reader plus one clone per in-flight decode job; the
+    // writer exits when all of them are gone (or on a write error).
+    let (tx, rx) = mpsc::channel::<(u64, FrameKind, Json)>();
+    let writer = thread::Builder::new()
+        .name("hmm-scan-net-writer".into())
+        .spawn(move || writer_loop(write_half, rx))
+        .expect("spawn connection writer");
+
+    let inflight = Inflight::new();
+    loop {
+        if shared.state() == CLOSED {
+            break;
+        }
+        let frame = match poll_frame(&mut stream, cfg.max_frame_payload) {
+            Ok(Poll::Frame(f)) => f,
+            Ok(Poll::Idle) => continue,
+            Ok(Poll::Closed) => break,
+            Err(e) => {
+                // Framing is unrecoverable: report once (best effort)
+                // and drop the connection.
+                let _ =
+                    tx.send((0, FrameKind::Error, wire::error_to_json(&e)));
+                break;
+            }
+        };
+        match frame.kind {
+            FrameKind::Ping => {
+                let _ = tx.send((frame.id, FrameKind::Pong, Json::Null));
+            }
+            FrameKind::DecodeRequest => {
+                let req = match wire::decode_request_from_json(
+                    frame.id,
+                    &frame.payload,
+                ) {
+                    Ok(req) => req,
+                    Err(e) => {
+                        shared.coord.metrics().on_failure();
+                        let _ = tx.send((
+                            frame.id,
+                            FrameKind::Error,
+                            wire::error_to_json(&e),
+                        ));
+                        continue;
+                    }
+                };
+                // Take an in-flight slot *before* spawning: at the cap
+                // this blocks the reader, which is the backpressure.
+                inflight.acquire(cfg.max_inflight_per_conn);
+                shared.coord.metrics().on_wire_start();
+                let coord = Arc::clone(&shared.coord);
+                let job_tx = tx.clone();
+                let job_inflight = Arc::clone(&inflight);
+                work.submit(move || {
+                    let t0 = Instant::now();
+                    let (kind, payload) = match coord.decode(req) {
+                        Ok(resp) => (
+                            FrameKind::DecodeResponse,
+                            wire::decode_response_to_json(&resp),
+                        ),
+                        Err(e) => (FrameKind::Error, wire::error_to_json(&e)),
+                    };
+                    coord.metrics().on_wire_done("decode", t0.elapsed());
+                    let _ = job_tx.send((frame.id, kind, payload));
+                    job_inflight.release();
+                });
+            }
+            FrameKind::StreamRequest => {
+                // Stream verbs execute inline, in arrival order — an
+                // append sequence must apply in the order the client
+                // sent it. Decodes already dispatched keep completing
+                // concurrently around this.
+                let t0 = Instant::now();
+                shared.coord.metrics().on_wire_start();
+                let (verb_name, outcome) = match wire::stream_request_from_json(
+                    frame.id,
+                    &frame.payload,
+                ) {
+                    Ok(req) => {
+                        (stream_verb_name(&req), shared.coord.stream(req))
+                    }
+                    Err(e) => ("stream", Err(e)),
+                };
+                let (kind, payload) = match outcome {
+                    Ok(resp) => (
+                        FrameKind::StreamResponse,
+                        wire::stream_response_to_json(&resp),
+                    ),
+                    Err(e) => (FrameKind::Error, wire::error_to_json(&e)),
+                };
+                shared.coord.metrics().on_wire_done(verb_name, t0.elapsed());
+                let _ = tx.send((frame.id, kind, payload));
+            }
+            // A client must never send response kinds; protocol error.
+            kind if kind.is_response() => {
+                let e = Error::invalid_request(format!(
+                    "wire: client sent a response frame (0x{:02x})",
+                    kind.code()
+                ));
+                let _ =
+                    tx.send((frame.id, FrameKind::Error, wire::error_to_json(&e)));
+                break;
+            }
+            _ => unreachable!("request kinds are handled above"),
+        }
+    }
+    // Drop our sender; in-flight decode jobs hold clones, so the writer
+    // stays up exactly until the last pending response is written.
+    drop(tx);
+    let _ = writer.join();
+}
+
+fn stream_verb_name(req: &crate::coordinator::StreamRequest) -> &'static str {
+    match req.verb {
+        crate::coordinator::StreamVerb::Open { .. } => "open",
+        crate::coordinator::StreamVerb::Append { .. } => "append",
+        crate::coordinator::StreamVerb::Stat { .. } => "stat",
+        crate::coordinator::StreamVerb::Close { .. } => "close",
+    }
+}
+
+/// Drain the response channel onto the socket. Batches whatever is
+/// immediately available between flushes; exits when every sender is
+/// gone (connection finished) or on a write error (peer vanished — the
+/// socket is shut down so the reader unblocks promptly).
+fn writer_loop(stream: TcpStream, rx: mpsc::Receiver<(u64, FrameKind, Json)>) {
+    let mut w = std::io::BufWriter::new(&stream);
+    'outer: while let Ok((id, kind, payload)) = rx.recv() {
+        if wire::write_frame(&mut w, id, kind, &payload).is_err() {
+            break;
+        }
+        // Opportunistic batch: coalesce already-completed responses
+        // into one flush.
+        while let Ok((id, kind, payload)) = rx.try_recv() {
+            if wire::write_frame(&mut w, id, kind, &payload).is_err() {
+                break 'outer;
+            }
+        }
+        if w.flush().is_err() {
+            break;
+        }
+    }
+    let _ = w.flush();
+    drop(w);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{
+        Algo, CoordinatorConfig, DecodeRequest, DecodeResult, StreamReply,
+        StreamRequest,
+    };
+    use crate::engine::SessionOptions;
+    use crate::hmm::{gilbert_elliott, GeParams};
+    use crate::net::NetClient;
+    use crate::rng::Xoshiro256StarStar;
+    use crate::store::testutil::tempdir;
+
+    fn test_config() -> NetServerConfig {
+        NetServerConfig {
+            max_connections: 8,
+            max_inflight_per_conn: 8,
+            read_timeout: Duration::from_millis(50),
+            ..NetServerConfig::default()
+        }
+    }
+
+    fn coord_with_store(dir: &std::path::Path) -> Arc<Coordinator> {
+        let c = Coordinator::new(CoordinatorConfig {
+            session_store: Some(dir.to_path_buf()),
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        c.register_model("ge", gilbert_elliott(GeParams::default()));
+        Arc::new(c)
+    }
+
+    fn native_coord() -> Arc<Coordinator> {
+        let c = Coordinator::new(CoordinatorConfig::native_only()).unwrap();
+        c.register_model("ge", gilbert_elliott(GeParams::default()));
+        Arc::new(c)
+    }
+
+    /// The loopback acceptance bar: a `NetClient` driving decode and
+    /// open → append* → stat → close over TCP returns responses
+    /// **bit-identical** to the same requests issued in-process via
+    /// `Coordinator::decode`/`stream` — including after a server
+    /// crash/restart + `recover_sessions`.
+    #[test]
+    fn loopback_bit_identical_to_in_process() {
+        let dir = tempdir("net-loopback");
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(0xE77);
+        let ys = crate::hmm::sample(&hmm, 300, &mut rng).observations;
+
+        let coord = coord_with_store(&dir);
+        let server =
+            NetServer::start(Arc::clone(&coord), "127.0.0.1:0", test_config())
+                .unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = NetClient::connect(&addr).unwrap();
+        client.ping().unwrap();
+
+        // Every decode task, remote vs in-process on the same
+        // coordinator: results and plans must match exactly.
+        for algo in Algo::ALL {
+            let remote = client
+                .decode(&DecodeRequest::new(1, "ge", ys.clone(), algo))
+                .unwrap();
+            let local = coord
+                .decode(DecodeRequest::new(1, "ge", ys.clone(), algo))
+                .unwrap();
+            assert_eq!(remote.plan, local.plan);
+            match (&remote.result, &local.result) {
+                (DecodeResult::Posterior(a), DecodeResult::Posterior(b)) => {
+                    assert_eq!(a, b, "{algo:?} posterior diverged over the wire")
+                }
+                (DecodeResult::Map(a), DecodeResult::Map(b)) => {
+                    assert_eq!(a, b, "MAP path diverged over the wire")
+                }
+                (a, b) => panic!("result shape diverged: {a:?} vs {b:?}"),
+            }
+        }
+        // Errors surface as typed failures, not hangs or garbage.
+        assert!(client
+            .decode(&DecodeRequest::new(1, "nope", vec![0], Algo::Smooth))
+            .is_err());
+        assert!(client
+            .decode(&DecodeRequest::new(1, "ge", vec![9], Algo::Map))
+            .is_err());
+
+        // Streaming: one remote and one in-process session on the same
+        // coordinator, fed identical chunks.
+        let remote_sid =
+            client.open("ge", SessionOptions::default(), 8).unwrap();
+        let opened = coord.stream(StreamRequest::open(0, "ge", 8)).unwrap();
+        let StreamReply::Opened { session: local_sid } = opened.reply else {
+            panic!("expected Opened")
+        };
+        for chunk in ys.chunks(64) {
+            let remote = client.append(remote_sid, chunk).unwrap();
+            let local = coord
+                .stream(StreamRequest::append(0, local_sid, chunk.to_vec()))
+                .unwrap();
+            let StreamReply::Appended {
+                len: rl, filtered: rf, window: rw, ..
+            } = remote
+            else {
+                panic!("expected Appended")
+            };
+            let StreamReply::Appended {
+                len: ll, filtered: lf, window: lw, ..
+            } = local.reply
+            else {
+                panic!("expected Appended")
+            };
+            assert_eq!(rl, ll);
+            assert_eq!(rf, lf, "filtered marginal diverged over the wire");
+            let (rw, lw) = (rw.unwrap(), lw.unwrap());
+            assert_eq!(rw.start, lw.start);
+            assert_eq!(rw.posterior, lw.posterior, "lag window diverged");
+        }
+        let StreamReply::Stats { len, model, .. } =
+            client.stat(remote_sid).unwrap()
+        else {
+            panic!("expected Stats")
+        };
+        assert_eq!(len, 300);
+        assert_eq!(model, "ge");
+
+        // "Crash": stop the server and coordinator with both sessions
+        // open, then recover from the durable store.
+        drop(client);
+        assert!(server.shutdown(Duration::from_secs(5)));
+        drop(coord);
+
+        let coord = coord_with_store(&dir);
+        let recovered = coord.recover_sessions().unwrap();
+        assert!(recovered >= 2, "recovered only {recovered} sessions");
+        let server =
+            NetServer::start(Arc::clone(&coord), "127.0.0.1:0", test_config())
+                .unwrap();
+        let mut client =
+            NetClient::connect(server.local_addr().to_string()).unwrap();
+
+        let extra = crate::hmm::sample(&hmm, 40, &mut rng).observations;
+        let remote = client.append(remote_sid, &extra).unwrap();
+        let local = coord
+            .stream(StreamRequest::append(0, local_sid, extra.clone()))
+            .unwrap();
+        let StreamReply::Appended { filtered: rf, .. } = remote else {
+            panic!("expected Appended")
+        };
+        let StreamReply::Appended { filtered: lf, .. } = local.reply else {
+            panic!("expected Appended")
+        };
+        assert_eq!(rf, lf, "filtered diverged after crash recovery");
+
+        let remote_posterior = client.close(remote_sid).unwrap();
+        let closed =
+            coord.stream(StreamRequest::close(0, local_sid)).unwrap();
+        let StreamReply::Closed { posterior: local_posterior, .. } =
+            closed.reply
+        else {
+            panic!("expected Closed")
+        };
+        assert_eq!(
+            remote_posterior, local_posterior,
+            "posterior diverged over the wire after restart + recovery"
+        );
+        let snap = coord.metrics().snapshot();
+        assert!(snap.conns_opened >= 1);
+        assert!(snap.wire_verbs.iter().any(|v| v.verb == "append"));
+        drop(client);
+        assert!(server.shutdown(Duration::from_secs(5)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The drain satellite: in-flight streaming sessions complete and
+    /// ack before the listener closes; new connects are refused while
+    /// draining.
+    #[test]
+    fn drain_completes_inflight_sessions_and_refuses_new_connects() {
+        let coord = native_coord();
+        let server =
+            NetServer::start(Arc::clone(&coord), "127.0.0.1:0", test_config())
+                .unwrap();
+        let addr = server.local_addr().to_string();
+
+        let mut client = NetClient::connect(&addr).unwrap();
+        let sid = client.open("ge", SessionOptions::default(), 0).unwrap();
+        client.append(sid, &[0, 1, 1, 0]).unwrap();
+        assert_eq!(server.active_connections(), 1);
+
+        server.drain();
+        assert!(server.is_draining());
+        // New connections are refused during drain…
+        assert!(
+            NetClient::connect(&addr).is_err(),
+            "draining server accepted a new client"
+        );
+        // …while the in-flight session keeps being served to
+        // completion, including its final close ack.
+        client.append(sid, &[1, 0]).unwrap();
+        let posterior = client.close(sid).unwrap();
+        assert_eq!(posterior.len(), 6);
+        assert_eq!(coord.open_sessions(), 0, "close must have been served");
+
+        drop(client);
+        let graceful = server.shutdown(Duration::from_secs(5));
+        assert!(graceful, "all clients were gone; drain must be graceful");
+        // The listener is closed: nothing accepts on the address now.
+        assert!(std::net::TcpStream::connect(&addr).is_err());
+        let snap = coord.metrics().snapshot();
+        assert!(snap.conns_refused >= 1);
+        assert_eq!(snap.open_conns, 0);
+    }
+
+    /// Pipelining: many requests written ahead on one connection, all
+    /// responses arrive (possibly out of order) and match by id,
+    /// bit-identical to in-process decodes.
+    #[test]
+    fn pipelined_decodes_match_by_id() {
+        let coord = native_coord();
+        let hmm = gilbert_elliott(GeParams::default());
+        let server =
+            NetServer::start(Arc::clone(&coord), "127.0.0.1:0", test_config())
+                .unwrap();
+        let mut client =
+            NetClient::connect(server.local_addr().to_string()).unwrap();
+        let mut rng = Xoshiro256StarStar::seed_from_u64(0x91f);
+
+        let n = 12usize;
+        let mut by_id = std::collections::BTreeMap::new();
+        for i in 0..n {
+            let t = 40 + (i % 5) * 30;
+            let ys = crate::hmm::sample(&hmm, t, &mut rng).observations;
+            let algo = if i % 2 == 0 { Algo::Smooth } else { Algo::Map };
+            let req = DecodeRequest::new(i as u64, "ge", ys, algo);
+            let id = client.send_decode(&req).unwrap();
+            by_id.insert(id, req);
+        }
+        client.flush().unwrap();
+        for _ in 0..n {
+            let (id, resp) = client.recv_decode().unwrap();
+            let req = by_id.remove(&id).expect("unknown or duplicate id");
+            let remote = resp.unwrap();
+            let local = coord.decode(req).unwrap();
+            match (&remote.result, &local.result) {
+                (DecodeResult::Posterior(a), DecodeResult::Posterior(b)) => {
+                    assert_eq!(a, b)
+                }
+                (DecodeResult::Map(a), DecodeResult::Map(b)) => {
+                    assert_eq!(a, b)
+                }
+                (a, b) => panic!("shape diverged: {a:?} vs {b:?}"),
+            }
+        }
+        assert!(by_id.is_empty(), "a response never arrived");
+        drop(client);
+        server.shutdown(Duration::from_secs(5));
+    }
+
+    /// Framing violations (garbage bytes, oversized declared length)
+    /// kill only the offending connection; the server keeps serving
+    /// fresh clients.
+    #[test]
+    fn garbage_frames_kill_only_that_connection() {
+        let coord = native_coord();
+        let server =
+            NetServer::start(Arc::clone(&coord), "127.0.0.1:0", test_config())
+                .unwrap();
+        let addr = server.local_addr().to_string();
+
+        // Garbage magic.
+        {
+            let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+            raw.write_all(b"totally not a frame, much longer than a header")
+                .unwrap();
+            let mut buf = [0u8; 1024];
+            // The server replies with an error frame (id 0) and/or
+            // closes; either way the read drains to EOF.
+            loop {
+                match raw.read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(_) => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+        // Oversized declared payload length.
+        {
+            let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+            let mut header = Vec::new();
+            header.extend_from_slice(&wire::MAGIC);
+            header.push(wire::WIRE_VERSION);
+            header.push(FrameKind::DecodeRequest.code());
+            header.extend_from_slice(&[0u8; 2]);
+            header.extend_from_slice(&7u64.to_le_bytes());
+            header.extend_from_slice(&u32::MAX.to_le_bytes());
+            header.extend_from_slice(&0u64.to_le_bytes());
+            raw.write_all(&header).unwrap();
+            let mut buf = [0u8; 1024];
+            loop {
+                match raw.read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(_) => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+        // A well-behaved client still gets served.
+        let mut client = NetClient::connect(&addr).unwrap();
+        client.ping().unwrap();
+        let resp = client
+            .decode(&DecodeRequest::new(1, "ge", vec![0, 1, 1], Algo::Smooth))
+            .unwrap();
+        assert_eq!(resp.result.as_posterior().unwrap().len(), 3);
+        drop(client);
+        server.shutdown(Duration::from_secs(5));
+    }
+}
+

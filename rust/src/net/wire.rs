@@ -1,0 +1,1035 @@
+//! The versioned wire protocol — framing and payload serde for the TCP
+//! serving layer.
+//!
+//! The byte-level contract is **specified** in `docs/WIRE_FORMAT.md`;
+//! this module is one reader/writer of it. Summary:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "HMWP"
+//! 4       1     protocol version (1)
+//! 5       1     frame kind (see [`FrameKind`])
+//! 6       2     reserved (zero)
+//! 8       8     request id, u64 little-endian (echoed in the response)
+//! 16      4     payload length, u32 little-endian
+//! 20      8     FNV-1a 64 checksum of the payload, little-endian
+//! 28      len   payload — compact JSON, UTF-8
+//! ```
+//!
+//! Decoding is defensive end to end: bad magic, a newer version, an
+//! unknown kind, an oversized length, a short read, a checksum mismatch
+//! or unparsable JSON are all *typed errors*, never panics — the server
+//! treats them as connection-fatal (framing cannot be resynchronized),
+//! while a well-framed request with a malformed payload only fails that
+//! request. Numeric payloads reuse the packed hex encodings of
+//! [`elements::serde`](crate::elements::serde) (bit-exact f64 round
+//! trips), so a decode served over the wire is **bit-identical** to the
+//! same request served in-process — the loopback tests assert exactly
+//! that.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use crate::coordinator::{
+    Algo, DecodeRequest, DecodeResponse, DecodeResult, ExecMode, StreamReply,
+    StreamRequest, StreamResponse, StreamVerb,
+};
+use crate::elements::serde::{f64s_from_hex, f64s_to_hex, obs_from_json, obs_to_json};
+use crate::engine::{Filtered, LagSmoothed, SessionKind, SessionOptions};
+use crate::error::{Error, Result};
+use crate::inference::{MapEstimate, Posterior};
+use crate::jsonx::Json;
+
+/// Current wire-protocol revision; readers reject frames stamped with a
+/// newer version.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"HMWP";
+
+/// Fixed binary header length (see the module docs for the layout).
+pub const HEADER_LEN: usize = 28;
+
+/// Default ceiling on a frame's payload length (64 MiB) — a garbage or
+/// hostile length field is rejected before any allocation happens.
+pub const DEFAULT_MAX_PAYLOAD: usize = 1 << 26;
+
+/// The framing checksum: fresh-start FNV-1a 64 (same function the
+/// session store frames with).
+fn fnv64(bytes: &[u8]) -> u64 {
+    crate::rng::fnv1a_64(crate::rng::FNV1A_OFFSET, bytes)
+}
+
+/// What a frame carries. Requests flow client → server; responses (and
+/// [`FrameKind::Error`]) flow back, carrying the request's id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// A [`DecodeRequest`] payload.
+    DecodeRequest,
+    /// A [`StreamRequest`] payload (open / append / stat / close).
+    StreamRequest,
+    /// Liveness / handshake probe (null payload).
+    Ping,
+    /// A [`DecodeResponse`] payload.
+    DecodeResponse,
+    /// A [`StreamResponse`] payload.
+    StreamResponse,
+    /// Reply to [`FrameKind::Ping`] (null payload).
+    Pong,
+    /// A serialized [`Error`] payload (`{"code": .., "msg": ..}`).
+    Error,
+}
+
+impl FrameKind {
+    /// Every kind, for exhaustive round-trip tests.
+    pub const ALL: [FrameKind; 7] = [
+        FrameKind::DecodeRequest,
+        FrameKind::StreamRequest,
+        FrameKind::Ping,
+        FrameKind::DecodeResponse,
+        FrameKind::StreamResponse,
+        FrameKind::Pong,
+        FrameKind::Error,
+    ];
+
+    /// The header byte for this kind.
+    pub fn code(self) -> u8 {
+        match self {
+            FrameKind::DecodeRequest => 0x01,
+            FrameKind::StreamRequest => 0x02,
+            FrameKind::Ping => 0x03,
+            FrameKind::DecodeResponse => 0x81,
+            FrameKind::StreamResponse => 0x82,
+            FrameKind::Pong => 0x83,
+            FrameKind::Error => 0xee,
+        }
+    }
+
+    /// Inverse of [`code`](Self::code).
+    pub fn from_code(code: u8) -> Option<FrameKind> {
+        FrameKind::ALL.into_iter().find(|k| k.code() == code)
+    }
+
+    /// Whether this kind flows server → client.
+    pub fn is_response(self) -> bool {
+        matches!(
+            self,
+            FrameKind::DecodeResponse
+                | FrameKind::StreamResponse
+                | FrameKind::Pong
+                | FrameKind::Error
+        )
+    }
+}
+
+/// One decoded frame: the echoed request id, the kind, and the parsed
+/// JSON payload.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// Request id (client-chosen; echoed verbatim in responses).
+    pub id: u64,
+    /// What the payload is.
+    pub kind: FrameKind,
+    /// The payload ([`Json::Null`] for ping/pong).
+    pub payload: Json,
+}
+
+/// Encode one frame to bytes (header + compact-JSON payload).
+pub fn encode_frame(id: u64, kind: FrameKind, payload: &Json) -> Vec<u8> {
+    let body = payload.to_string_compact().into_bytes();
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(kind.code());
+    out.extend_from_slice(&[0u8; 2]);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&fnv64(&body).to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Write one frame (no flush — callers batch and flush).
+pub fn write_frame(
+    w: &mut impl Write,
+    id: u64,
+    kind: FrameKind,
+    payload: &Json,
+) -> Result<()> {
+    w.write_all(&encode_frame(id, kind, payload))?;
+    Ok(())
+}
+
+/// Parsed fixed header fields.
+struct Header {
+    id: u64,
+    kind: FrameKind,
+    len: usize,
+    sum: u64,
+}
+
+fn parse_header(h: &[u8; HEADER_LEN], max_payload: usize) -> Result<Header> {
+    if h[0..4] != MAGIC {
+        return Err(Error::invalid_request("wire: bad frame magic"));
+    }
+    if h[4] == 0 || h[4] > WIRE_VERSION {
+        return Err(Error::invalid_request(format!(
+            "wire: protocol version {} is not supported (max {WIRE_VERSION})",
+            h[4]
+        )));
+    }
+    let kind = FrameKind::from_code(h[5]).ok_or_else(|| {
+        Error::invalid_request(format!("wire: unknown frame kind 0x{:02x}", h[5]))
+    })?;
+    if h[6] != 0 || h[7] != 0 {
+        return Err(Error::invalid_request("wire: nonzero reserved bytes"));
+    }
+    let id = u64::from_le_bytes(h[8..16].try_into().expect("8 bytes"));
+    let len = u32::from_le_bytes(h[16..20].try_into().expect("4 bytes")) as usize;
+    if len > max_payload {
+        return Err(Error::invalid_request(format!(
+            "wire: frame payload of {len} bytes exceeds the {max_payload} cap"
+        )));
+    }
+    let sum = u64::from_le_bytes(h[20..28].try_into().expect("8 bytes"));
+    Ok(Header { id, kind, len, sum })
+}
+
+/// Read one complete frame. Every structural violation — short read,
+/// bad magic, future version, unknown kind, oversized or checksum-failed
+/// payload, non-JSON body — is a typed error (the caller treats it as
+/// connection-fatal; framing cannot resynchronize after garbage).
+pub fn read_frame(r: &mut impl Read, max_payload: usize) -> Result<Frame> {
+    let mut h = [0u8; HEADER_LEN];
+    r.read_exact(&mut h)?;
+    let header = parse_header(&h, max_payload)?;
+    let mut body = vec![0u8; header.len];
+    r.read_exact(&mut body)?;
+    if fnv64(&body) != header.sum {
+        return Err(Error::invalid_request("wire: frame checksum mismatch"));
+    }
+    let text = std::str::from_utf8(&body)
+        .map_err(|_| Error::invalid_request("wire: non-UTF-8 frame payload"))?;
+    let payload =
+        if text.is_empty() { Json::Null } else { Json::parse(text)? };
+    Ok(Frame { id: header.id, kind: header.kind, payload })
+}
+
+// ===========================================================================
+// Payload serde — requests
+// ===========================================================================
+
+fn exec_mode_name(mode: ExecMode) -> &'static str {
+    match mode {
+        ExecMode::Auto => "auto",
+        ExecMode::Native => "native",
+        ExecMode::Pjrt => "pjrt",
+        ExecMode::Sharded => "sharded",
+    }
+}
+
+fn exec_mode_parse(s: &str) -> Option<ExecMode> {
+    match s {
+        "auto" => Some(ExecMode::Auto),
+        "native" => Some(ExecMode::Native),
+        "pjrt" => Some(ExecMode::Pjrt),
+        "sharded" => Some(ExecMode::Sharded),
+        _ => None,
+    }
+}
+
+fn req_u64(v: &Json, key: &str, what: &str) -> Result<u64> {
+    v.get(key)
+        .as_usize()
+        .map(|u| u as u64)
+        .ok_or_else(|| Error::invalid_request(format!("{what}: missing '{key}'")))
+}
+
+/// [`DecodeRequest`] → wire payload. The request id travels in the
+/// frame header, not the payload.
+pub fn decode_request_to_json(req: &DecodeRequest) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("model".to_string(), Json::Str(req.model.clone()));
+    obj.insert("ys".to_string(), obs_to_json(&req.ys));
+    obj.insert("algo".to_string(), req.algo.to_json());
+    obj.insert(
+        "mode".to_string(),
+        Json::Str(exec_mode_name(req.mode).to_string()),
+    );
+    Json::Obj(obj)
+}
+
+/// Inverse of [`decode_request_to_json`]; `id` is the frame header's
+/// request id.
+pub fn decode_request_from_json(id: u64, v: &Json) -> Result<DecodeRequest> {
+    let model = v
+        .get("model")
+        .as_str()
+        .ok_or_else(|| Error::invalid_request("decode request: missing 'model'"))?
+        .to_string();
+    let ys = match v.get("ys") {
+        Json::Null => {
+            return Err(Error::invalid_request("decode request: missing 'ys'"))
+        }
+        obs => obs_from_json(obs)?,
+    };
+    let algo = Algo::from_json(v.get("algo")).ok_or_else(|| {
+        Error::invalid_request("decode request: missing or unknown 'algo'")
+    })?;
+    let mode = match v.get("mode") {
+        Json::Null => ExecMode::Auto,
+        m => m.as_str().and_then(exec_mode_parse).ok_or_else(|| {
+            Error::invalid_request("decode request: unknown 'mode'")
+        })?,
+    };
+    Ok(DecodeRequest { id, model, ys, algo, mode })
+}
+
+/// [`StreamRequest`] → wire payload (the verb object).
+pub fn stream_request_to_json(req: &StreamRequest) -> Json {
+    let mut obj = BTreeMap::new();
+    match &req.verb {
+        StreamVerb::Open { model, options, lag } => {
+            obj.insert("verb".to_string(), Json::Str("open".to_string()));
+            obj.insert("model".to_string(), Json::Str(model.clone()));
+            obj.insert(
+                "block".to_string(),
+                options.block.map_or(Json::Null, |b| Json::Num(b as f64)),
+            );
+            obj.insert("track_map".to_string(), Json::Bool(options.track_map));
+            obj.insert(
+                "kind".to_string(),
+                Json::Str(options.kind.name().to_string()),
+            );
+            obj.insert("lag".to_string(), Json::Num(*lag as f64));
+        }
+        StreamVerb::Append { session, ys } => {
+            obj.insert("verb".to_string(), Json::Str("append".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+            obj.insert("ys".to_string(), obs_to_json(ys));
+        }
+        StreamVerb::Stat { session } => {
+            obj.insert("verb".to_string(), Json::Str("stat".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+        }
+        StreamVerb::Close { session } => {
+            obj.insert("verb".to_string(), Json::Str("close".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+        }
+    }
+    Json::Obj(obj)
+}
+
+/// Inverse of [`stream_request_to_json`]; `id` is the frame header's
+/// request id.
+pub fn stream_request_from_json(id: u64, v: &Json) -> Result<StreamRequest> {
+    let verb = match v.get("verb").as_str() {
+        Some("open") => {
+            let model = v
+                .get("model")
+                .as_str()
+                .ok_or_else(|| {
+                    Error::invalid_request("stream open: missing 'model'")
+                })?
+                .to_string();
+            let block = match v.get("block") {
+                Json::Null => None,
+                b => Some(b.as_usize().ok_or_else(|| {
+                    Error::invalid_request("stream open: invalid 'block'")
+                })?),
+            };
+            let track_map = v.get("track_map").as_bool().unwrap_or(false);
+            let kind = match v.get("kind") {
+                Json::Null => SessionKind::SumProduct,
+                k => k.as_str().and_then(SessionKind::parse).ok_or_else(|| {
+                    Error::invalid_request("stream open: unknown 'kind'")
+                })?,
+            };
+            let lag = v.get("lag").as_usize().unwrap_or(0);
+            StreamVerb::Open {
+                model,
+                options: SessionOptions { block, track_map, kind },
+                lag,
+            }
+        }
+        Some("append") => {
+            let session = req_u64(v, "session", "stream append")?;
+            let ys = match v.get("ys") {
+                Json::Null => Vec::new(),
+                obs => obs_from_json(obs)?,
+            };
+            StreamVerb::Append { session, ys }
+        }
+        Some("stat") => {
+            StreamVerb::Stat { session: req_u64(v, "session", "stream stat")? }
+        }
+        Some("close") => {
+            StreamVerb::Close { session: req_u64(v, "session", "stream close")? }
+        }
+        _ => {
+            return Err(Error::invalid_request(
+                "stream request: missing or unknown 'verb'",
+            ))
+        }
+    };
+    Ok(StreamRequest { id, verb })
+}
+
+// ===========================================================================
+// Payload serde — results and responses
+// ===========================================================================
+
+/// [`Posterior`] → `{"d": D, "loglik": .., "gamma": "<hex-f64>"}` —
+/// hex-f64 marginals keep the wire round trip bit-exact.
+pub fn posterior_to_json(p: &Posterior) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("d".to_string(), Json::Num(p.num_states() as f64));
+    obj.insert("loglik".to_string(), Json::Num(p.log_likelihood()));
+    obj.insert("gamma".to_string(), Json::Str(f64s_to_hex(p.gamma_flat())));
+    Json::Obj(obj)
+}
+
+/// Inverse of [`posterior_to_json`]; shape-validated so a malformed
+/// payload is a typed error, not a downstream panic.
+pub fn posterior_from_json(v: &Json) -> Result<Posterior> {
+    let d = v
+        .get("d")
+        .as_usize()
+        .filter(|&d| d > 0)
+        .ok_or_else(|| Error::invalid_request("posterior: missing 'd'"))?;
+    let loglik = v
+        .get("loglik")
+        .as_f64()
+        .ok_or_else(|| Error::invalid_request("posterior: missing 'loglik'"))?;
+    let gamma = match v.get("gamma") {
+        Json::Str(s) => f64s_from_hex(s)?,
+        _ => return Err(Error::invalid_request("posterior: missing 'gamma'")),
+    };
+    if gamma.len() % d != 0 {
+        return Err(Error::invalid_request(format!(
+            "posterior: {} marginals for {d} states",
+            gamma.len()
+        )));
+    }
+    Ok(Posterior::new(d, gamma, loglik))
+}
+
+fn map_to_json(m: &MapEstimate) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("path".to_string(), obs_to_json(&m.path));
+    obj.insert("log_prob".to_string(), Json::Num(m.log_prob));
+    Json::Obj(obj)
+}
+
+fn map_from_json(v: &Json) -> Result<MapEstimate> {
+    let path = match v.get("path") {
+        Json::Null => {
+            return Err(Error::invalid_request("map estimate: missing 'path'"))
+        }
+        p => obs_from_json(p)?,
+    };
+    let log_prob = v.get("log_prob").as_f64().ok_or_else(|| {
+        Error::invalid_request("map estimate: missing 'log_prob'")
+    })?;
+    Ok(MapEstimate { path, log_prob })
+}
+
+fn decode_result_to_json(r: &DecodeResult) -> Json {
+    let mut obj = BTreeMap::new();
+    match r {
+        DecodeResult::Posterior(p) => {
+            obj.insert("type".to_string(), Json::Str("posterior".to_string()));
+            obj.insert("posterior".to_string(), posterior_to_json(p));
+        }
+        DecodeResult::Map(m) => {
+            obj.insert("type".to_string(), Json::Str("map".to_string()));
+            obj.insert("map".to_string(), map_to_json(m));
+        }
+    }
+    Json::Obj(obj)
+}
+
+fn decode_result_from_json(v: &Json) -> Result<DecodeResult> {
+    match v.get("type").as_str() {
+        Some("posterior") => {
+            Ok(DecodeResult::Posterior(posterior_from_json(v.get("posterior"))?))
+        }
+        Some("map") => Ok(DecodeResult::Map(map_from_json(v.get("map"))?)),
+        _ => Err(Error::invalid_request("decode result: unknown 'type'")),
+    }
+}
+
+/// [`DecodeResponse`] → wire payload (the id travels in the frame).
+pub fn decode_response_to_json(resp: &DecodeResponse) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("plan".to_string(), Json::Str(resp.plan.clone()));
+    obj.insert(
+        "elapsed_us".to_string(),
+        Json::Num(resp.elapsed.as_micros().min(u128::from(u64::MAX)) as f64),
+    );
+    obj.insert("result".to_string(), decode_result_to_json(&resp.result));
+    Json::Obj(obj)
+}
+
+/// Inverse of [`decode_response_to_json`].
+pub fn decode_response_from_json(id: u64, v: &Json) -> Result<DecodeResponse> {
+    let plan = v
+        .get("plan")
+        .as_str()
+        .ok_or_else(|| Error::invalid_request("decode response: missing 'plan'"))?
+        .to_string();
+    let elapsed =
+        Duration::from_micros(v.get("elapsed_us").as_f64().unwrap_or(0.0) as u64);
+    let result = decode_result_from_json(v.get("result"))?;
+    Ok(DecodeResponse { id, result, plan, elapsed })
+}
+
+fn filtered_to_json(f: &Filtered) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("probs".to_string(), Json::Str(f64s_to_hex(&f.probs)));
+    obj.insert("loglik".to_string(), Json::Num(f.log_likelihood));
+    obj.insert("step".to_string(), Json::Num(f.step as f64));
+    Json::Obj(obj)
+}
+
+fn filtered_from_json(v: &Json) -> Result<Filtered> {
+    let probs = match v.get("probs") {
+        Json::Str(s) => f64s_from_hex(s)?,
+        _ => return Err(Error::invalid_request("filtered: missing 'probs'")),
+    };
+    let log_likelihood = v
+        .get("loglik")
+        .as_f64()
+        .ok_or_else(|| Error::invalid_request("filtered: missing 'loglik'"))?;
+    let step = v
+        .get("step")
+        .as_usize()
+        .ok_or_else(|| Error::invalid_request("filtered: missing 'step'"))?;
+    Ok(Filtered { probs, log_likelihood, step })
+}
+
+fn lag_smoothed_to_json(w: &LagSmoothed) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("start".to_string(), Json::Num(w.start as f64));
+    obj.insert("posterior".to_string(), posterior_to_json(&w.posterior));
+    obj.insert("rescan_width".to_string(), Json::Num(w.rescan_width as f64));
+    Json::Obj(obj)
+}
+
+fn lag_smoothed_from_json(v: &Json) -> Result<LagSmoothed> {
+    let start = v
+        .get("start")
+        .as_usize()
+        .ok_or_else(|| Error::invalid_request("lag window: missing 'start'"))?;
+    let posterior = posterior_from_json(v.get("posterior"))?;
+    let rescan_width = v.get("rescan_width").as_usize().unwrap_or(0);
+    Ok(LagSmoothed { start, posterior, rescan_width })
+}
+
+fn stream_reply_to_json(reply: &StreamReply) -> Json {
+    let mut obj = BTreeMap::new();
+    match reply {
+        StreamReply::Opened { session } => {
+            obj.insert("reply".to_string(), Json::Str("opened".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+        }
+        StreamReply::Appended { session, len, filtered, window, plan_hint } => {
+            obj.insert("reply".to_string(), Json::Str("appended".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+            obj.insert("len".to_string(), Json::Num(*len as f64));
+            obj.insert("filtered".to_string(), filtered_to_json(filtered));
+            obj.insert(
+                "window".to_string(),
+                window.as_ref().map_or(Json::Null, lag_smoothed_to_json),
+            );
+            obj.insert(
+                "plan_hint".to_string(),
+                plan_hint
+                    .as_ref()
+                    .map_or(Json::Null, |h| Json::Str(h.clone())),
+            );
+        }
+        StreamReply::Stats {
+            session,
+            len,
+            resident,
+            model,
+            open_sessions,
+            resident_sessions,
+        } => {
+            obj.insert("reply".to_string(), Json::Str("stats".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+            obj.insert("len".to_string(), Json::Num(*len as f64));
+            obj.insert("resident".to_string(), Json::Bool(*resident));
+            obj.insert("model".to_string(), Json::Str(model.clone()));
+            obj.insert(
+                "open_sessions".to_string(),
+                Json::Num(*open_sessions as f64),
+            );
+            obj.insert(
+                "resident_sessions".to_string(),
+                Json::Num(*resident_sessions as f64),
+            );
+        }
+        StreamReply::Closed { session, posterior } => {
+            obj.insert("reply".to_string(), Json::Str("closed".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+            obj.insert("posterior".to_string(), posterior_to_json(posterior));
+        }
+    }
+    Json::Obj(obj)
+}
+
+fn stream_reply_from_json(v: &Json) -> Result<StreamReply> {
+    match v.get("reply").as_str() {
+        Some("opened") => Ok(StreamReply::Opened {
+            session: req_u64(v, "session", "stream reply")?,
+        }),
+        Some("appended") => Ok(StreamReply::Appended {
+            session: req_u64(v, "session", "stream reply")?,
+            len: v.get("len").as_usize().ok_or_else(|| {
+                Error::invalid_request("stream reply: missing 'len'")
+            })?,
+            filtered: filtered_from_json(v.get("filtered"))?,
+            window: match v.get("window") {
+                Json::Null => None,
+                w => Some(lag_smoothed_from_json(w)?),
+            },
+            plan_hint: v.get("plan_hint").as_str().map(str::to_string),
+        }),
+        Some("stats") => Ok(StreamReply::Stats {
+            session: req_u64(v, "session", "stream reply")?,
+            len: v.get("len").as_usize().ok_or_else(|| {
+                Error::invalid_request("stream reply: missing 'len'")
+            })?,
+            resident: v.get("resident").as_bool().unwrap_or(false),
+            model: v.get("model").as_str().unwrap_or_default().to_string(),
+            open_sessions: v.get("open_sessions").as_usize().unwrap_or(0),
+            resident_sessions: v.get("resident_sessions").as_usize().unwrap_or(0),
+        }),
+        Some("closed") => Ok(StreamReply::Closed {
+            session: req_u64(v, "session", "stream reply")?,
+            posterior: posterior_from_json(v.get("posterior"))?,
+        }),
+        _ => Err(Error::invalid_request("stream reply: unknown 'reply'")),
+    }
+}
+
+/// [`StreamResponse`] → wire payload (the id travels in the frame).
+pub fn stream_response_to_json(resp: &StreamResponse) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert(
+        "elapsed_us".to_string(),
+        Json::Num(resp.elapsed.as_micros().min(u128::from(u64::MAX)) as f64),
+    );
+    obj.insert("reply".to_string(), stream_reply_to_json(&resp.reply));
+    Json::Obj(obj)
+}
+
+/// Inverse of [`stream_response_to_json`].
+pub fn stream_response_from_json(id: u64, v: &Json) -> Result<StreamResponse> {
+    let elapsed =
+        Duration::from_micros(v.get("elapsed_us").as_f64().unwrap_or(0.0) as u64);
+    let reply = stream_reply_from_json(v.get("reply"))?;
+    Ok(StreamResponse { id, reply, elapsed })
+}
+
+// ===========================================================================
+// Payload serde — errors
+// ===========================================================================
+
+fn error_code(e: &Error) -> &'static str {
+    match e {
+        Error::InvalidModel(_) => "invalid_model",
+        Error::InvalidRequest(_) => "invalid_request",
+        Error::Json { .. } => "json",
+        Error::Artifact(_) => "artifact",
+        Error::Xla(_) => "xla",
+        Error::Coordinator(_) => "coordinator",
+        Error::Usage(_) => "usage",
+        Error::Io(_) => "io",
+    }
+}
+
+/// [`Error`] → `{"code": .., "msg": ..}` for an error frame.
+pub fn error_to_json(e: &Error) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("code".to_string(), Json::Str(error_code(e).to_string()));
+    obj.insert("msg".to_string(), Json::Str(e.to_string()));
+    Json::Obj(obj)
+}
+
+/// Inverse of [`error_to_json`]: reconstruct a typed error from an
+/// error frame (best effort — remote IO/JSON details collapse into the
+/// message text).
+pub fn error_from_json(v: &Json) -> Error {
+    let msg = v.get("msg").as_str().unwrap_or("unknown remote error");
+    match v.get("code").as_str() {
+        Some("invalid_model") => Error::invalid_model(msg),
+        Some("invalid_request") => Error::invalid_request(msg),
+        Some("artifact") => Error::artifact(msg),
+        Some("xla") => Error::xla(msg),
+        Some("usage") => Error::usage(msg),
+        _ => Error::coordinator(format!("remote: {msg}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptestx::Runner;
+
+    fn round_frame(id: u64, kind: FrameKind, payload: Json) -> Frame {
+        let bytes = encode_frame(id, kind, &payload);
+        read_frame(&mut &bytes[..], DEFAULT_MAX_PAYLOAD).unwrap()
+    }
+
+    #[test]
+    fn frame_round_trip_all_kinds() {
+        for kind in FrameKind::ALL {
+            let payload = if matches!(kind, FrameKind::Ping | FrameKind::Pong) {
+                Json::Null
+            } else {
+                Json::parse(r#"{"k": [1, 2.5, "s"]}"#).unwrap()
+            };
+            let f = round_frame(0xDEAD_BEEF_0000_0001, kind, payload.clone());
+            assert_eq!(f.id, 0xDEAD_BEEF_0000_0001);
+            assert_eq!(f.kind, kind);
+            assert_eq!(f.payload, payload);
+            assert_eq!(FrameKind::from_code(kind.code()), Some(kind));
+        }
+        assert_eq!(FrameKind::from_code(0x55), None);
+    }
+
+    #[test]
+    fn decoder_rejects_garbage_without_panicking() {
+        let good = encode_frame(7, FrameKind::DecodeRequest, &Json::Num(1.0));
+
+        // Truncations at every length short of the full frame.
+        for cut in 0..good.len() {
+            assert!(
+                read_frame(&mut &good[..cut], DEFAULT_MAX_PAYLOAD).is_err(),
+                "cut={cut}"
+            );
+        }
+        // A bit flip anywhere breaks magic, version, reserved bytes,
+        // length, checksum, or the payload sum. Two fields are
+        // structurally opaque: the id (any value is a valid id) and a
+        // kind flip that happens to land on another registered code.
+        for byte in 0..good.len() {
+            for bit in 0..8u8 {
+                let mut bad = good.clone();
+                bad[byte] ^= 1 << bit;
+                let structurally_ok = match byte {
+                    8..=15 => true,
+                    5 => FrameKind::from_code(bad[5]).is_some(),
+                    _ => false,
+                };
+                let out = read_frame(&mut &bad[..], DEFAULT_MAX_PAYLOAD);
+                if structurally_ok {
+                    assert!(out.is_ok(), "byte={byte} bit={bit} rejected");
+                } else {
+                    assert!(out.is_err(), "byte={byte} bit={bit} parsed");
+                }
+            }
+        }
+        // An oversized declared length is rejected before allocation.
+        let huge = {
+            let mut h = good.clone();
+            h[16..20].copy_from_slice(&(u32::MAX).to_le_bytes());
+            h
+        };
+        assert!(read_frame(&mut &huge[..], DEFAULT_MAX_PAYLOAD).is_err());
+        // …and a frame over a caller-chosen cap too.
+        assert!(read_frame(&mut &good[..], 0).is_err());
+        // A future protocol version is refused.
+        let future = {
+            let mut h = good.clone();
+            h[4] = WIRE_VERSION + 1;
+            h
+        };
+        assert!(read_frame(&mut &future[..], DEFAULT_MAX_PAYLOAD).is_err());
+    }
+
+    fn rand_ys(r: &mut crate::rng::Xoshiro256StarStar, max: u32) -> Vec<u32> {
+        let n = (r.next_u64() % 40) as usize;
+        (0..n).map(|_| (r.next_u64() as u32) % (max + 1)).collect()
+    }
+
+    fn rand_f64s(r: &mut crate::rng::Xoshiro256StarStar, n: usize) -> Vec<f64> {
+        // Strictly positive ratio: the `| 1` keeps ln() finite (the Num
+        // encoding for scalars handles finite values only).
+        (0..n)
+            .map(|_| ((r.next_u64() | 1) as f64 / u64::MAX as f64).ln())
+            .collect()
+    }
+
+    /// Property: every request and response variant round-trips the
+    /// codec bit-exactly — the wire contract behind the loopback
+    /// bit-identity acceptance test.
+    #[test]
+    fn payload_round_trip_every_variant() {
+        let mut runner = Runner::new("wire-payload-roundtrip");
+        runner.run(50, |r| {
+            let id = r.next_u64();
+
+            // Decode request, all algos × modes.
+            let algo = Algo::ALL[(r.next_u64() % 3) as usize];
+            let mode = [
+                ExecMode::Auto,
+                ExecMode::Native,
+                ExecMode::Pjrt,
+                ExecMode::Sharded,
+            ][(r.next_u64() % 4) as usize];
+            let req = DecodeRequest {
+                id,
+                model: "ge".to_string(),
+                ys: {
+                    let mut ys = rand_ys(r, 3);
+                    ys.push(1); // decode requires non-empty
+                    ys
+                },
+                algo,
+                mode,
+            };
+            let back =
+                decode_request_from_json(id, &decode_request_to_json(&req))
+                    .unwrap();
+            assert_eq!(back.model, req.model);
+            assert_eq!(back.ys, req.ys);
+            assert_eq!(back.algo, req.algo);
+            assert_eq!(back.mode, req.mode);
+
+            // Stream request, every verb.
+            let session = r.next_u64() % (1 << 50);
+            let verbs = [
+                StreamVerb::Open {
+                    model: "m".to_string(),
+                    options: SessionOptions {
+                        block: if r.next_u64() % 2 == 0 {
+                            None
+                        } else {
+                            Some(1 + (r.next_u64() % 512) as usize)
+                        },
+                        track_map: r.next_u64() % 2 == 0,
+                        kind: if r.next_u64() % 2 == 0 {
+                            SessionKind::SumProduct
+                        } else {
+                            SessionKind::Bayes
+                        },
+                    },
+                    lag: (r.next_u64() % 128) as usize,
+                },
+                StreamVerb::Append { session, ys: rand_ys(r, 5) },
+                StreamVerb::Stat { session },
+                StreamVerb::Close { session },
+            ];
+            for verb in verbs {
+                let req = StreamRequest { id, verb };
+                let back =
+                    stream_request_from_json(id, &stream_request_to_json(&req))
+                        .unwrap();
+                match (&req.verb, &back.verb) {
+                    (
+                        StreamVerb::Open { model: m1, options: o1, lag: l1 },
+                        StreamVerb::Open { model: m2, options: o2, lag: l2 },
+                    ) => {
+                        assert_eq!((m1, o1, l1), (m2, o2, l2));
+                    }
+                    (
+                        StreamVerb::Append { session: s1, ys: y1 },
+                        StreamVerb::Append { session: s2, ys: y2 },
+                    ) => assert_eq!((s1, y1), (s2, y2)),
+                    (
+                        StreamVerb::Stat { session: s1 },
+                        StreamVerb::Stat { session: s2 },
+                    ) => assert_eq!(s1, s2),
+                    (
+                        StreamVerb::Close { session: s1 },
+                        StreamVerb::Close { session: s2 },
+                    ) => assert_eq!(s1, s2),
+                    (a, b) => panic!("verb changed shape: {a:?} -> {b:?}"),
+                }
+            }
+
+            // Decode responses: posterior and map payloads, exact f64s.
+            let d = 2 + (r.next_u64() % 4) as usize;
+            let t = 1 + (r.next_u64() % 20) as usize;
+            let gamma = rand_f64s(r, d * t);
+            let loglik = rand_f64s(r, 1)[0];
+            let resp = DecodeResponse {
+                id,
+                result: DecodeResult::Posterior(Posterior::new(
+                    d,
+                    gamma.clone(),
+                    loglik,
+                )),
+                plan: "native".to_string(),
+                elapsed: Duration::from_micros(r.next_u64() % 1_000_000),
+            };
+            let back =
+                decode_response_from_json(id, &decode_response_to_json(&resp))
+                    .unwrap();
+            assert_eq!(back.plan, resp.plan);
+            assert_eq!(back.elapsed, resp.elapsed);
+            let p = back.result.as_posterior().unwrap();
+            assert_eq!(p.gamma_flat(), &gamma[..], "gamma must be bit-exact");
+            assert_eq!(p.log_likelihood().to_bits(), loglik.to_bits());
+
+            let map = MapEstimate { path: rand_ys(r, 3), log_prob: loglik };
+            let resp = DecodeResponse {
+                id,
+                result: DecodeResult::Map(map.clone()),
+                plan: "pjrt:mp".to_string(),
+                elapsed: Duration::from_micros(3),
+            };
+            let back =
+                decode_response_from_json(id, &decode_response_to_json(&resp))
+                    .unwrap();
+            assert_eq!(back.result.as_map().unwrap(), &map);
+
+            // Stream responses: every reply variant.
+            let filtered = Filtered {
+                probs: rand_f64s(r, d),
+                log_likelihood: loglik,
+                step: t,
+            };
+            let window = LagSmoothed {
+                start: (r.next_u64() % 100) as usize,
+                posterior: Posterior::new(d, gamma.clone(), loglik),
+                rescan_width: (r.next_u64() % 300) as usize,
+            };
+            let replies = [
+                StreamReply::Opened { session },
+                StreamReply::Appended {
+                    session,
+                    len: t,
+                    filtered: filtered.clone(),
+                    window: if r.next_u64() % 2 == 0 {
+                        Some(window)
+                    } else {
+                        None
+                    },
+                    plan_hint: if r.next_u64() % 2 == 0 {
+                        Some("sp_par_T1024_D4_M2".to_string())
+                    } else {
+                        None
+                    },
+                },
+                StreamReply::Stats {
+                    session,
+                    len: t,
+                    resident: r.next_u64() % 2 == 0,
+                    model: "ge".to_string(),
+                    open_sessions: 5,
+                    resident_sessions: 3,
+                },
+                StreamReply::Closed {
+                    session,
+                    posterior: Posterior::new(d, gamma.clone(), loglik),
+                },
+            ];
+            for reply in replies {
+                let resp = StreamResponse {
+                    id,
+                    reply,
+                    elapsed: Duration::from_micros(r.next_u64() % 10_000),
+                };
+                let back = stream_response_from_json(
+                    id,
+                    &stream_response_to_json(&resp),
+                )
+                .unwrap();
+                assert_eq!(back.elapsed, resp.elapsed);
+                match (&resp.reply, &back.reply) {
+                    (
+                        StreamReply::Opened { session: a },
+                        StreamReply::Opened { session: b },
+                    ) => assert_eq!(a, b),
+                    (
+                        StreamReply::Appended {
+                            session: s1,
+                            len: l1,
+                            filtered: f1,
+                            window: w1,
+                            plan_hint: h1,
+                        },
+                        StreamReply::Appended {
+                            session: s2,
+                            len: l2,
+                            filtered: f2,
+                            window: w2,
+                            plan_hint: h2,
+                        },
+                    ) => {
+                        assert_eq!((s1, l1, h1), (s2, l2, h2));
+                        assert_eq!(f1, f2, "filtered must be bit-exact");
+                        assert_eq!(w1.is_some(), w2.is_some());
+                        if let (Some(a), Some(b)) = (w1, w2) {
+                            assert_eq!(a.start, b.start);
+                            assert_eq!(a.rescan_width, b.rescan_width);
+                            assert_eq!(a.posterior, b.posterior);
+                        }
+                    }
+                    (
+                        StreamReply::Stats {
+                            session: s1, len: l1, resident: r1, model: m1, ..
+                        },
+                        StreamReply::Stats {
+                            session: s2, len: l2, resident: r2, model: m2, ..
+                        },
+                    ) => assert_eq!((s1, l1, r1, m1), (s2, l2, r2, m2)),
+                    (
+                        StreamReply::Closed { session: s1, posterior: p1 },
+                        StreamReply::Closed { session: s2, posterior: p2 },
+                    ) => {
+                        assert_eq!(s1, s2);
+                        assert_eq!(p1, p2, "posterior must be bit-exact");
+                    }
+                    (a, b) => panic!("reply changed shape: {a:?} -> {b:?}"),
+                }
+            }
+        });
+    }
+
+    /// Property: malformed *payloads* (well-framed, wrong JSON shape)
+    /// are typed errors on every parser — never panics.
+    #[test]
+    fn malformed_payloads_are_typed_errors() {
+        let bads = [
+            Json::Null,
+            Json::Num(1.0),
+            Json::Str("x".to_string()),
+            Json::parse(r#"{"verb": "nope"}"#).unwrap(),
+            Json::parse(r#"{"verb": "append"}"#).unwrap(),
+            Json::parse(r#"{"reply": "opened"}"#).unwrap(),
+            Json::parse(r#"{"model": 3}"#).unwrap(),
+            Json::parse(r#"{"d": 2, "loglik": 1, "gamma": "zz"}"#).unwrap(),
+            Json::parse(r#"{"d": 3, "loglik": 1, "gamma": 5}"#).unwrap(),
+            Json::parse(r#"{"d": 0, "loglik": 1, "gamma": ""}"#).unwrap(),
+        ];
+        for bad in &bads {
+            assert!(decode_request_from_json(1, bad).is_err(), "{bad:?}");
+            assert!(stream_request_from_json(1, bad).is_err(), "{bad:?}");
+            assert!(decode_response_from_json(1, bad).is_err(), "{bad:?}");
+            assert!(stream_response_from_json(1, bad).is_err(), "{bad:?}");
+            assert!(posterior_from_json(bad).is_err(), "{bad:?}");
+        }
+        // d=3 with 2 gamma values: shape mismatch is typed.
+        let bad_shape = Json::parse(
+            r#"{"d": 3, "loglik": 1,
+                "gamma": "00000000000000000000000000000000"}"#,
+        )
+        .unwrap();
+        assert!(posterior_from_json(&bad_shape).is_err());
+        // Errors round-trip with their codes.
+        let e = Error::invalid_request("nope");
+        let back = error_from_json(&error_to_json(&e));
+        assert!(matches!(back, Error::InvalidRequest(_)));
+        assert!(back.to_string().contains("nope"));
+        let e = Error::coordinator("queue closed");
+        let back = error_from_json(&error_to_json(&e));
+        assert!(back.to_string().contains("queue closed"));
+    }
+}

@@ -2,7 +2,7 @@
 //! `std::fs` only.
 //!
 //! The on-disk format is **specified** in `docs/STORE_FORMAT.md`
-//! (format version 2); what follows is the implementation-side summary.
+//! (format version 3); what follows is the implementation-side summary.
 //! Keep the two in sync — the spec is the contract, this file is one
 //! reader/writer of it.
 //!
@@ -27,13 +27,18 @@
 //! observation count without parsing a single JSON body
 //! ([`recover_meta`]). The payload is one compact-JSON record:
 //!
-//! * kind `o` (count 0) — `{"meta":{…},"type":"open","v":2}`, written
+//! * kind `o` (count 0) — `{"meta":{…},"type":"open","v":3}`, written
 //!   once by [`create`]; `v` is the format-version byte readers use to
 //!   reject logs written by a *future* format revision.
-//! * kind `a` (count = chunk length) — `{"type":"append","ys":[…]}`,
-//!   one per logged observation chunk.
+//! * kind `a` (count = chunk length) — `{"type":"append","ys":{…}}`,
+//!   one per logged observation chunk; `ys` is the bit-packed hex
+//!   object of `elements::serde::obs_to_json` (v2 wrote a decimal
+//!   array — still readable). Appends to a log still stamped `"v":2`
+//!   keep the decimal encoding so the stamp stays honest; compaction
+//!   rewrites the log at the current version.
 //! * kind `c` (count = snapshot length) — `{"snap":{…},"type":"ckpt"}`,
-//!   a full [`Session::snapshot`], superseding every record before it.
+//!   a full [`Session::snapshot`] (v2 of the snapshot encoding: packed
+//!   hex payloads), superseding every record before it.
 //!
 //! ## Crash safety
 //!
@@ -100,8 +105,12 @@ use super::{SessionMeta, SessionStore, StoredSession};
 
 /// Current on-disk format revision (see `docs/STORE_FORMAT.md`). Written
 /// as `"v"` in every `open` record; readers reject logs whose recorded
-/// version is newer than this.
-pub const FORMAT_VERSION: usize = 2;
+/// version is newer than this. Version 3 packs append and checkpoint
+/// payloads with the hex encodings of `elements::serde` (bit-packed
+/// observation hex, hex-f64 element matrices — ~2× smaller logs);
+/// version-2 decimal records remain readable because every payload
+/// parser accepts both encodings.
+pub const FORMAT_VERSION: usize = 3;
 
 /// Header layout: 16 hex chars (payload length), space, 16 hex chars
 /// (fnv64 checksum), space, 1 kind char (`o`/`a`/`c`), space, 16 hex
@@ -222,19 +231,16 @@ fn fold_records(records: &[Json]) -> Result<StoredSession> {
     for record in &records[1..] {
         match record.get("type").as_str() {
             Some("append") => {
-                let ys = record
-                    .get("ys")
-                    .as_arr()
-                    .ok_or_else(|| {
-                        Error::invalid_request("session log: append without 'ys'")
-                    })?
-                    .iter()
-                    .map(|v| {
-                        v.as_usize().and_then(|u| u32::try_from(u).ok()).ok_or_else(
-                            || Error::invalid_request("session log: bad symbol"),
-                        )
-                    })
-                    .collect::<Result<Vec<u32>>>()?;
+                // v3 writes the bit-packed hex object, v2 wrote a plain
+                // decimal array — `obs_from_json` reads both.
+                let ys = match record.get("ys") {
+                    Json::Null => {
+                        return Err(Error::invalid_request(
+                            "session log: append without 'ys'",
+                        ))
+                    }
+                    v => crate::elements::serde::obs_from_json(v)?,
+                };
                 stored.appends.push(ys);
             }
             Some("ckpt") => {
@@ -337,6 +343,12 @@ pub struct DiskStore {
     /// Log bytes read back (restore + recovery scans) — the counter the
     /// metadata-only recovery path is measured against.
     bytes_read: AtomicU64,
+    /// Cached `"v"` stamp per open log. Append writers match the log's
+    /// recorded version (a v2-stamped log keeps receiving decimal
+    /// append records until a compaction rewrites it at
+    /// [`FORMAT_VERSION`]), so the stamp always describes every record
+    /// in its log — the property the version-detection gate rests on.
+    log_versions: Mutex<BTreeMap<u64, usize>>,
     /// Per-sync-batch hook `(files synced, records acked)` — the
     /// coordinator wires its metrics in here.
     sync_observer: Option<Box<dyn Fn(usize, usize) + Send + Sync>>,
@@ -400,6 +412,7 @@ impl DiskStore {
             synced_appends: AtomicU64::new(0),
             appends_logged: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
+            log_versions: Mutex::new(BTreeMap::new()),
             sync_observer: None,
         })
     }
@@ -666,6 +679,43 @@ impl DiskStore {
         self.read_stored_at(id, &self.path_for(id))
     }
 
+    /// The `"v"` stamp of session `id`'s log, cached after one read.
+    /// Unknown/unreadable logs report the current [`FORMAT_VERSION`]
+    /// (they cannot be parsed by any reader, so the append encoding is
+    /// moot — and the subsequent open-file error is the real signal).
+    fn log_format_version(&self, id: u64) -> usize {
+        if let Some(&v) = self.log_versions.lock().unwrap().get(&id) {
+            return v;
+        }
+        let v = self
+            .read_log_version(&self.path_for(id))
+            .unwrap_or(FORMAT_VERSION);
+        self.log_versions.lock().unwrap().insert(id, v);
+        v
+    }
+
+    /// Read the open record's `"v"` field (one header + one payload
+    /// read); `None` when the log is missing or its open record is
+    /// unreadable.
+    fn read_log_version(&self, path: &Path) -> Option<usize> {
+        let mut file = fs::File::open(path).ok()?;
+        let mut header = [0u8; HEADER_LEN];
+        file.read_exact(&mut header).ok()?;
+        let h = parse_header(&header)?;
+        if h.kind != b'o' {
+            return None;
+        }
+        let mut buf = vec![0u8; h.len];
+        file.read_exact(&mut buf).ok()?;
+        self.bytes_read
+            .fetch_add((HEADER_LEN + h.len) as u64, Ordering::Relaxed);
+        if fnv64(&buf) != h.sum {
+            return None;
+        }
+        let record = Json::parse(std::str::from_utf8(&buf).ok()?).ok()?;
+        Some(record.get("v").as_usize().unwrap_or(1))
+    }
+
     /// Enumerate `(id, log path)` for every stored session: the shard
     /// directories plus any legacy flat-layout stragglers at the root.
     /// The single walk both directory scans (`recover*`, `max_id`) go
@@ -824,10 +874,11 @@ fn ckpt_record(snapshot: &Json) -> String {
     Json::Obj(obj).to_string_compact()
 }
 
-/// Observation count a snapshot holds (`"ys"` length) — the ckpt
-/// record's header count, so metadata scans never parse the body.
+/// Observation count a snapshot holds (`"ys"` length, either encoding)
+/// — the ckpt record's header count, so metadata scans never parse the
+/// body.
 fn snapshot_len(snapshot: &Json) -> usize {
-    snapshot.get("ys").as_arr().map_or(0, |a| a.len())
+    crate::elements::serde::obs_len_from_json(snapshot.get("ys")).unwrap_or(0)
 }
 
 impl SessionStore for DiskStore {
@@ -845,16 +896,23 @@ impl SessionStore for DiskStore {
             file.sync_all()?;
         }
         fs::rename(&tmp, &path)?;
+        self.log_versions.lock().unwrap().insert(id, FORMAT_VERSION);
         self.sync_parent(&path)
     }
 
     fn log_append(&self, id: u64, ys: &[u32]) -> Result<()> {
+        // Match the log's recorded format version: a v2-stamped log
+        // keeps receiving decimal append records (so a pre-v3 reader
+        // stays able to parse everything its stamp claims) until a
+        // compaction rewrites the whole log at the current version.
+        let ys_json = if self.log_format_version(id) >= 3 {
+            crate::elements::serde::obs_to_json(ys)
+        } else {
+            Json::Arr(ys.iter().map(|&y| Json::Num(y as f64)).collect())
+        };
         let mut obj = BTreeMap::new();
         obj.insert("type".to_string(), Json::Str("append".to_string()));
-        obj.insert(
-            "ys".to_string(),
-            Json::Arr(ys.iter().map(|&y| Json::Num(y as f64)).collect()),
-        );
+        obj.insert("ys".to_string(), ys_json);
         self.append_record(id, &Json::Obj(obj).to_string_compact(), ys.len())
     }
 
@@ -883,6 +941,9 @@ impl SessionStore for DiskStore {
             file.sync_all()?;
         }
         fs::rename(&tmp, &path)?;
+        // The rewrite stamps the current version — later appends may
+        // use the current encodings.
+        self.log_versions.lock().unwrap().insert(id, FORMAT_VERSION);
         self.sync_parent(&path)
     }
 
@@ -892,6 +953,7 @@ impl SessionStore for DiskStore {
 
     fn remove(&self, id: u64) -> Result<()> {
         let _guard = self.lock_for(id);
+        self.log_versions.lock().unwrap().remove(&id);
         match fs::remove_file(self.path_for(id)) {
             Ok(()) => Ok(()),
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
@@ -1282,7 +1344,9 @@ mod tests {
     fn recover_meta_reads_headers_not_bodies() {
         let dir = tempdir("disk-meta-scan");
         let store = DiskStore::open(&dir).unwrap();
-        let big: Vec<u32> = (0..800).map(|k| k % 2).collect();
+        // Fat enough that packed (v3) bodies still dwarf the 53-byte
+        // frame headers the metadata scan reads.
+        let big: Vec<u32> = (0..8000).map(|k| k % 2).collect();
         for id in [2u64, 7, 11] {
             store.create(id, &meta()).unwrap();
             for _ in 0..12 {
@@ -1322,6 +1386,98 @@ mod tests {
              — that is a body read, not a header walk"
         );
         fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A version-2 log (decimal append arrays + decimal snapshot
+    /// payloads — the pre-compression encoding) reads back exactly: the
+    /// payload parsers accept both encodings, so the v3 bump never
+    /// strands old stores.
+    #[test]
+    fn v2_decimal_log_stays_readable() {
+        let dir = tempdir("disk-v2-compat");
+        let store = DiskStore::open(&dir).unwrap();
+        let open = format!(
+            r#"{{"meta":{},"type":"open","v":2}}"#,
+            meta().to_json().to_string_compact()
+        );
+        let snap_decimal = Json::parse(r#"{"ys": [0, 1, 1]}"#).unwrap();
+        let mut image = Vec::new();
+        image.extend_from_slice(&frame(&open, b'o', 0));
+        image.extend_from_slice(&frame(
+            &format!(
+                r#"{{"snap":{},"type":"ckpt"}}"#,
+                snap_decimal.to_string_compact()
+            ),
+            b'c',
+            3,
+        ));
+        image.extend_from_slice(&frame(r#"{"type":"append","ys":[1,0]}"#, b'a', 2));
+        fs::write(store.path_for(6), &image).unwrap();
+
+        let s = store.restore(6).unwrap();
+        assert_eq!(s.meta, meta());
+        assert_eq!(s.snapshot.as_ref(), Some(&snap_decimal));
+        assert_eq!(s.appends, vec![vec![1, 0]]);
+        assert_eq!(s.len(), 5);
+        let metas = store.recover_meta().unwrap();
+        assert_eq!((metas[0].0, metas[0].2), (6, 5));
+
+        // New appends match the log's recorded version — a v2 log keeps
+        // receiving *decimal* records, so its "v":2 stamp stays an
+        // honest description of every record (a rolled-back v2 reader
+        // can still parse the whole log).
+        store.log_append(6, &[0, 0, 1]).unwrap();
+        let bytes = fs::read(store.path_for(6)).unwrap();
+        let text = String::from_utf8_lossy(&bytes);
+        assert!(
+            text.contains(r#""ys":[0,0,1]"#),
+            "append to a v2 log must use the decimal encoding"
+        );
+        let s = store.restore(6).unwrap();
+        assert_eq!(s.appends, vec![vec![1, 0], vec![0, 0, 1]]);
+        assert_eq!(s.len(), 8);
+
+        // Compaction rewrites the log at the current version; appends
+        // after it use the packed encoding.
+        store.compact(6, &meta(), &snap_decimal).unwrap();
+        store.log_append(6, &[1, 1, 0, 0]).unwrap();
+        let text =
+            String::from_utf8_lossy(&fs::read(store.path_for(6)).unwrap())
+                .into_owned();
+        assert!(text.contains(r#""v":3"#), "compaction must re-stamp");
+        assert!(
+            text.contains(r#""ys":{"#),
+            "append after compaction must use the packed encoding"
+        );
+        assert_eq!(store.restore(6).unwrap().len(), 7);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The packed append encoding is materially smaller than the decimal
+    /// arrays it replaced (the size claim behind the v3 bump; the full
+    /// snapshot ratio is measured in `benches/streaming.rs`).
+    #[test]
+    fn packed_appends_shrink_the_log() {
+        let ys: Vec<u32> = (0..512).map(|k| k % 2).collect();
+        let packed = {
+            let mut obj = BTreeMap::new();
+            obj.insert("type".to_string(), Json::Str("append".to_string()));
+            obj.insert("ys".to_string(), crate::elements::serde::obs_to_json(&ys));
+            frame(&Json::Obj(obj).to_string_compact(), b'a', ys.len()).len()
+        };
+        let decimal = {
+            let mut obj = BTreeMap::new();
+            obj.insert("type".to_string(), Json::Str("append".to_string()));
+            obj.insert(
+                "ys".to_string(),
+                Json::Arr(ys.iter().map(|&y| Json::Num(y as f64)).collect()),
+            );
+            frame(&Json::Obj(obj).to_string_compact(), b'a', ys.len()).len()
+        };
+        assert!(
+            packed * 2 < decimal,
+            "packed append record {packed} bytes !< half of decimal {decimal}"
+        );
     }
 
     #[test]

@@ -178,7 +178,7 @@ impl StoredSession {
         let base = self
             .snapshot
             .as_ref()
-            .and_then(|s| s.get("ys").as_arr().map(|a| a.len()))
+            .and_then(|s| crate::elements::serde::obs_len_from_json(s.get("ys")))
             .unwrap_or(0);
         base + self.appends.iter().map(Vec::len).sum::<usize>()
     }
