@@ -1,0 +1,217 @@
+//! Bench target: the distributed serving tier — decode throughput
+//! scaling across worker counts through the cluster router.
+//!
+//! Each cell spins up `workers` single-threaded native workers
+//! (`exec_threads: 1`, so one worker's decode throughput is its serial
+//! decode rate and scaling must come from fan-out), fronts them with a
+//! `ClusterRouter` + `NetServer`, and drives the router exactly the way
+//! `bench-net` drives one server: `conns` client threads × `pipeline`
+//! decodes in flight. The full wire path is measured twice per request
+//! (client → router, router → worker).
+//!
+//! Acceptance (ISSUE 6): on an unloaded multi-core host the 2-worker
+//! row must reach ≥ 1.7× the 1-worker throughput and the 4-worker row
+//! ≥ 3×. The assertion is skipped under `HMM_SCAN_BENCH_SMOKE=1` and on
+//! hosts without enough cores to run 4 workers + router + clients
+//! without timeslicing noise.
+//!
+//! Every cell lands as a row in the `"cluster"` section of
+//! `BENCH_net.json` (shared with `bench-net` through
+//! `benchx::merge_bench_json`).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use hmm_scan::cluster::{ClusterConfig, ClusterRouter};
+use hmm_scan::coordinator::{Algo, Coordinator, CoordinatorConfig, DecodeRequest};
+use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
+use hmm_scan::jsonx::Json;
+use hmm_scan::net::{NetClient, NetServer, NetServerConfig};
+use hmm_scan::rng::Xoshiro256StarStar;
+
+fn pct_us(sorted: &[Duration], p: f64) -> u128 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).floor() as usize;
+    sorted[idx].as_micros()
+}
+
+/// One cell: a whole cluster of `workers` single-threaded workers,
+/// driven at `conns × pipeline` offered load. Returns (served, wall,
+/// sorted latencies).
+fn run_cell(
+    workers: usize,
+    conns: usize,
+    pipeline: usize,
+    requests: usize,
+    t: usize,
+) -> (usize, Duration, Vec<Duration>) {
+    let hmm = gilbert_elliott(GeParams::default());
+    let mut pool = Vec::new();
+    for _ in 0..workers {
+        let coord = Arc::new(
+            Coordinator::new(CoordinatorConfig::native_only())
+                .expect("bench worker coordinator"),
+        );
+        coord.register_model("ge", hmm.clone());
+        let server = NetServer::start(
+            Arc::clone(&coord),
+            "127.0.0.1:0",
+            NetServerConfig {
+                // The scaling premise: one decode at a time per worker.
+                exec_threads: 1,
+                max_connections: conns + 8,
+                max_inflight_per_conn: pipeline.max(1) * conns,
+                ..NetServerConfig::default()
+            },
+        )
+        .expect("bench worker server");
+        let addr = server.local_addr().to_string();
+        pool.push((coord, server, addr));
+    }
+    let addrs: Vec<String> = pool.iter().map(|w| w.2.clone()).collect();
+    let mut cluster_config = ClusterConfig::new(addrs);
+    cluster_config.decode_pool = (conns * pipeline / workers.max(1)).max(4);
+    let router =
+        Arc::new(ClusterRouter::new(cluster_config).expect("bench router"));
+    let front = NetServer::start(
+        Arc::clone(&router),
+        "127.0.0.1:0",
+        NetServerConfig {
+            max_connections: conns + 8,
+            max_inflight_per_conn: pipeline.max(1),
+            exec_threads: (conns * pipeline).clamp(4, 32),
+            ..NetServerConfig::default()
+        },
+    )
+    .expect("bench router front");
+    let addr = front.local_addr().to_string();
+
+    let t0 = Instant::now();
+    let mut all: Vec<Duration> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..conns {
+            let hmm = hmm.clone();
+            let addr = addr.clone();
+            joins.push(scope.spawn(move || {
+                let mut client =
+                    NetClient::connect(&addr).expect("bench client connect");
+                let mut rng =
+                    Xoshiro256StarStar::seed_from_u64(0xC105 + c as u64);
+                let reqs: Vec<DecodeRequest> = (0..requests)
+                    .map(|i| {
+                        let ys = sample(&hmm, t, &mut rng).observations;
+                        let algo =
+                            if i % 2 == 0 { Algo::Smooth } else { Algo::Map };
+                        DecodeRequest::new(i as u64, "ge", ys, algo)
+                    })
+                    .collect();
+                client
+                    .pipeline_decodes(reqs, pipeline)
+                    .expect("pipelined decode through the router failed")
+            }));
+        }
+        for join in joins {
+            all.extend(join.join().expect("bench thread panicked"));
+        }
+    });
+    let wall = t0.elapsed();
+
+    let snap = router.metrics().snapshot();
+    assert_eq!(
+        snap.decode_failovers, 0,
+        "loopback bench must not fail over (all workers healthy)"
+    );
+    front.shutdown(Duration::from_secs(10));
+    drop(router);
+    for (coord, server, _) in pool {
+        server.shutdown(Duration::from_secs(10));
+        assert_eq!(
+            coord.metrics().snapshot().failed,
+            0,
+            "no request may fail under the sweep"
+        );
+    }
+    all.sort_unstable();
+    (conns * requests, wall, all)
+}
+
+fn main() {
+    let smoke = std::env::var("HMM_SCAN_BENCH_SMOKE").as_deref() == Ok("1");
+    let (worker_grid, conns, pipeline, requests, t): (&[usize], usize, usize, usize, usize) =
+        if smoke {
+            (&[1, 2], 4, 4, 16, 256)
+        } else {
+            (&[1, 2, 4], 8, 8, 64, 1024)
+        };
+    println!(
+        "cluster bench (T={t}, {conns} conns × pipeline {pipeline}, \
+         {requests} reqs/conn, workers at exec_threads=1)"
+    );
+    println!(
+        "{:<10} {:>10} {:>10} {:>10} {:>10}",
+        "workers", "req/s", "p50", "p99", "max"
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut by_workers: BTreeMap<usize, f64> = BTreeMap::new();
+    for &workers in worker_grid {
+        let (served, wall, lat) = run_cell(workers, conns, pipeline, requests, t);
+        let req_per_s = served as f64 / wall.as_secs_f64();
+        let (p50, p99) = (pct_us(&lat, 0.50), pct_us(&lat, 0.99));
+        let max = lat.last().map_or(0, |d| d.as_micros());
+        println!(
+            "{:<10} {:>10.1} {:>9}µ {:>9}µ {:>9}µ",
+            workers, req_per_s, p50, p99, max
+        );
+        by_workers.insert(workers, req_per_s);
+        let mut row = BTreeMap::new();
+        row.insert("workers".to_string(), Json::Num(workers as f64));
+        row.insert("conns".to_string(), Json::Num(conns as f64));
+        row.insert("pipeline".to_string(), Json::Num(pipeline as f64));
+        row.insert("t".to_string(), Json::Num(t as f64));
+        row.insert("requests".to_string(), Json::Num(served as f64));
+        row.insert("req_per_s".to_string(), Json::Num(req_per_s));
+        row.insert("p50_us".to_string(), Json::Num(p50 as f64));
+        row.insert("p99_us".to_string(), Json::Num(p99 as f64));
+        row.insert("max_us".to_string(), Json::Num(max as f64));
+        rows.push(Json::Obj(row));
+    }
+    let report = std::path::Path::new("BENCH_net.json");
+    hmm_scan::benchx::merge_bench_json(report, "cluster", rows)
+        .expect("write BENCH_net.json");
+    println!("\nwrote {} rows to {}", by_workers.len(), report.display());
+
+    // Scaling acceptance — only meaningful when the host can actually
+    // run 4 workers + router + clients in parallel and the sweep is not
+    // the CI smoke grid.
+    let cores = hmm_scan::exec::default_parallelism();
+    if !smoke && cores >= 8 {
+        let base = by_workers[&1];
+        if let Some(&two) = by_workers.get(&2) {
+            let speedup = two / base;
+            println!("scaling 1→2 workers: {speedup:.2}×");
+            assert!(
+                speedup >= 1.7,
+                "2-worker throughput must reach ≥1.7× of 1 worker \
+                 (got {speedup:.2}×)"
+            );
+        }
+        if let Some(&four) = by_workers.get(&4) {
+            let speedup = four / base;
+            println!("scaling 1→4 workers: {speedup:.2}×");
+            assert!(
+                speedup >= 3.0,
+                "4-worker throughput must reach ≥3× of 1 worker \
+                 (got {speedup:.2}×)"
+            );
+        }
+    } else {
+        println!(
+            "scaling assertion skipped (smoke={smoke}, cores={cores} < 8)"
+        );
+    }
+}

@@ -11,11 +11,17 @@
 //! The acceptance row: ≥ 4 concurrent pipelined connections must be
 //! measured (the fleet shape the coordinator's worker pools are sized
 //! for). `HMM_SCAN_BENCH_SMOKE=1` shrinks the sweep to a CI smoke run.
+//!
+//! Besides the text table, every cell lands as a row in the `"net"`
+//! section of `BENCH_net.json` (shared with `bench-cluster` through
+//! `benchx::merge_bench_json`) so trend tooling never parses stdout.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use hmm_scan::coordinator::{Algo, Coordinator, CoordinatorConfig, DecodeRequest};
+use hmm_scan::jsonx::Json;
 use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
 use hmm_scan::net::{NetClient, NetServer, NetServerConfig};
 use hmm_scan::rng::Xoshiro256StarStar;
@@ -108,23 +114,41 @@ fn main() {
     );
 
     let mut measured_4plus_pipelined = false;
+    let mut rows: Vec<Json> = Vec::new();
     for &conns in conn_grid {
         for &pipeline in pipe_grid {
             let (served, wall, lat) =
                 run_cell(&addr, conns, pipeline, requests, t);
+            let req_per_s = served as f64 / wall.as_secs_f64();
+            let (p50, p99) = (pct_us(&lat, 0.50), pct_us(&lat, 0.99));
+            let max = lat.last().map_or(0, |d| d.as_micros());
             println!(
                 "{:<22} {:>10.1} {:>9}µ {:>9}µ {:>9}µ",
                 format!("{conns} x {pipeline}"),
-                served as f64 / wall.as_secs_f64(),
-                pct_us(&lat, 0.50),
-                pct_us(&lat, 0.99),
-                lat.last().map_or(0, |d| d.as_micros()),
+                req_per_s,
+                p50,
+                p99,
+                max,
             );
+            let mut row = BTreeMap::new();
+            row.insert("conns".to_string(), Json::Num(conns as f64));
+            row.insert("pipeline".to_string(), Json::Num(pipeline as f64));
+            row.insert("t".to_string(), Json::Num(t as f64));
+            row.insert("requests".to_string(), Json::Num(served as f64));
+            row.insert("req_per_s".to_string(), Json::Num(req_per_s));
+            row.insert("p50_us".to_string(), Json::Num(p50 as f64));
+            row.insert("p99_us".to_string(), Json::Num(p99 as f64));
+            row.insert("max_us".to_string(), Json::Num(max as f64));
+            rows.push(Json::Obj(row));
             if conns >= 4 && pipeline > 1 {
                 measured_4plus_pipelined = true;
             }
         }
     }
+    let report = std::path::Path::new("BENCH_net.json");
+    hmm_scan::benchx::merge_bench_json(report, "net", rows)
+        .expect("write BENCH_net.json");
+    println!("\nwrote {} rows to {}", conn_grid.len() * pipe_grid.len(), report.display());
     assert!(
         measured_4plus_pipelined,
         "the sweep must cover ≥4 concurrent pipelined connections"

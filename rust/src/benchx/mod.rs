@@ -3,8 +3,15 @@
 //! Warmup + repeated timed runs with robust statistics (median + MAD),
 //! adaptive repetition targeting a time budget, and table-friendly
 //! reporting. Used by `cargo bench` targets and the figure generators.
+//!
+//! Benches that publish machine-readable results (`bench-net` and
+//! `bench-cluster` → `BENCH_net.json`) share one report file through
+//! [`merge_bench_json`], each owning a named section.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::jsonx::Json;
 
 /// Bench configuration.
 #[derive(Debug, Clone, Copy)]
@@ -113,6 +120,31 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Merge one bench's rows into a shared machine-readable report file.
+///
+/// The file is a single JSON object mapping section names to row
+/// arrays (e.g. `{"net": [...], "cluster": [...]}`). The existing file
+/// is read and re-used when it parses; the caller's `section` is
+/// replaced wholesale with `rows`, every other section is preserved.
+/// An unreadable or malformed file is replaced rather than erroring —
+/// a bench must never fail because a previous run was interrupted
+/// mid-write.
+pub fn merge_bench_json(
+    path: &Path,
+    section: &str,
+    rows: Vec<Json>,
+) -> std::io::Result<()> {
+    let mut doc = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(obj)) => obj,
+            _ => Default::default(),
+        },
+        Err(_) => Default::default(),
+    };
+    doc.insert(section.to_string(), Json::Arr(rows));
+    std::fs::write(path, Json::Obj(doc).to_string_pretty())
+}
+
 /// Render measurements as an aligned text table.
 pub fn format_table(rows: &[Measurement]) -> String {
     let mut out = String::new();
@@ -188,6 +220,31 @@ mod tests {
             || 1 + 1,
         );
         assert!(m.iters <= 7);
+    }
+
+    #[test]
+    fn merge_preserves_other_sections() {
+        use std::collections::BTreeMap;
+        let dir = crate::store::testutil::tempdir("benchjson");
+        let path = dir.join("BENCH_net.json");
+        let row = |n: f64| {
+            let mut obj = BTreeMap::new();
+            obj.insert("x".to_string(), Json::Num(n));
+            Json::Obj(obj)
+        };
+        merge_bench_json(&path, "net", vec![row(1.0)]).unwrap();
+        merge_bench_json(&path, "cluster", vec![row(2.0)]).unwrap();
+        // Re-running one bench replaces only its own section.
+        merge_bench_json(&path, "net", vec![row(3.0)]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("net").as_arr().unwrap()[0].get("x").as_f64(), Some(3.0));
+        assert_eq!(doc.get("cluster").as_arr().unwrap()[0].get("x").as_f64(), Some(2.0));
+        // A corrupt file is replaced, not an error.
+        std::fs::write(&path, "{truncated").unwrap();
+        merge_bench_json(&path, "net", vec![row(4.0)]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("net").as_arr().unwrap()[0].get("x").as_f64(), Some(4.0));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

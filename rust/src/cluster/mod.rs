@@ -1,0 +1,42 @@
+//! The distributed serving tier (L5): a consistent-hash session router
+//! over a pool of independent workers, with health-driven failover and
+//! live session migration.
+//!
+//! One `hmm-scan serve` process scales decode throughput to its core
+//! count and session capacity to its RAM + store; this module scales
+//! both across *processes*. The shape deliberately mirrors the layers
+//! below it — the router is "just" another [`WireService`]
+//! implementation, so the entire existing serving stack (the
+//! `NetServer` front-end, the versioned wire protocol, admission
+//! control, graceful drain, `NetClient` with its append-retry ledger)
+//! is reused unchanged on both sides of the router:
+//!
+//! ```text
+//!   clients ── wire ──▶ NetServer ▷ ClusterRouter ── wire ──▶ NetServer ▷ Coordinator   (worker 1)
+//!                                         │
+//!                                         └────────── wire ──▶ NetServer ▷ Coordinator   (worker N)
+//! ```
+//!
+//! * [`placement`] — 256 placement slots (mirroring the store's
+//!   directory sharding) mapped to workers by rendezvous hashing:
+//!   deterministic, coordination-free, minimal movement on membership
+//!   change.
+//! * [`router`] — the [`ClusterRouter`]: session placement and routing,
+//!   round-robin decode fan-out with failover past dead/busy workers,
+//!   probe-driven membership ([`WorkerState`]), administrative drain,
+//!   and verified live migration (compact-on-A → restore-on-B →
+//!   bit-identical `Stat` check → cutover).
+//!
+//! CLI: `hmm-scan route --listen ADDR --workers A,B,C` fronts a router
+//! with a `NetServer`; `hmm-scan cluster-demo` runs a three-worker
+//! loopback cluster end to end. `bench-cluster` measures decode
+//! throughput scaling across worker counts. Design notes:
+//! `DESIGN.md` §7.
+//!
+//! [`WireService`]: crate::net::WireService
+
+pub mod placement;
+pub mod router;
+
+pub use placement::{place, ranked, slot_of, weight, SLOTS};
+pub use router::{ClusterConfig, ClusterRouter, WorkerState};

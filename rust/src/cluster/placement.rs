@@ -1,0 +1,114 @@
+//! Consistent placement: 256 slots × rendezvous (HRW) hashing.
+//!
+//! A session id maps to one of [`SLOTS`] slots (`id % 256`, mirroring
+//! the store's 256-way directory sharding), and each slot maps to a
+//! worker by **highest-random-weight** hashing: every worker is ranked
+//! by `fnv1a_64(slot ‖ address)` and the maximum wins. The properties
+//! the router leans on:
+//!
+//! * **Deterministic** — placement is a pure function of (slot, member
+//!   set); any process that knows the membership computes the same
+//!   owner, no coordination required.
+//! * **Minimal movement** — removing a worker only re-homes the slots
+//!   that worker owned; every other slot's ranking is untouched (the
+//!   removed candidate never beat them). Adding a worker re-homes only
+//!   the slots the newcomer now wins. This is what keeps a failover or
+//!   scale-out from reshuffling the whole session population.
+
+use crate::rng::{fnv1a_64, FNV1A_OFFSET};
+
+/// Number of placement slots. Matches the session store's directory
+/// fan-out so a slot's sessions land in one store shard per worker.
+pub const SLOTS: usize = 256;
+
+/// The slot a session id belongs to.
+pub fn slot_of(session: u64) -> usize {
+    (session % SLOTS as u64) as usize
+}
+
+/// Rendezvous weight of `worker` for `slot`: the FNV-1a chain over the
+/// slot index and the worker address.
+pub fn weight(slot: usize, worker: &str) -> u64 {
+    let h = fnv1a_64(FNV1A_OFFSET, &(slot as u64).to_le_bytes());
+    fnv1a_64(h, worker.as_bytes())
+}
+
+/// Index (into `workers`) of the slot's owner: the candidate with the
+/// highest rendezvous weight, ties broken by index for determinism.
+/// `None` when `workers` is empty.
+pub fn place(slot: usize, workers: &[&str]) -> Option<usize> {
+    workers
+        .iter()
+        .enumerate()
+        .max_by_key(|(i, w)| (weight(slot, w), usize::MAX - i))
+        .map(|(i, _)| i)
+}
+
+/// Candidate order for the slot: worker indices by descending
+/// rendezvous weight. The router tries them in this order when the
+/// preferred owner refuses (busy) or fails, so spill-over placement is
+/// deterministic too.
+pub fn ranked(slot: usize, workers: &[&str]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..workers.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(weight(slot, workers[i])), i));
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const W3: [&str; 3] = ["10.0.0.1:9000", "10.0.0.2:9000", "10.0.0.3:9000"];
+
+    #[test]
+    fn placement_is_deterministic_and_covers_all_workers() {
+        let mut owned = [0usize; 3];
+        for slot in 0..SLOTS {
+            let a = place(slot, &W3).unwrap();
+            let b = place(slot, &W3).unwrap();
+            assert_eq!(a, b, "placement must be a pure function");
+            owned[a] += 1;
+        }
+        // HRW balances slots across members (no worker starved).
+        for (i, n) in owned.iter().enumerate() {
+            assert!(*n > SLOTS / 8, "worker {i} owns only {n}/{SLOTS} slots");
+        }
+        assert_eq!(owned.iter().sum::<usize>(), SLOTS);
+    }
+
+    #[test]
+    fn removal_moves_only_the_lost_workers_slots() {
+        let survivors = [W3[0], W3[2]];
+        for slot in 0..SLOTS {
+            let before = place(slot, &W3).unwrap();
+            let after = place(slot, &survivors).unwrap();
+            if before != 1 {
+                // Slots the removed worker did not own keep their owner.
+                let kept = [W3[0], W3[2]][after];
+                assert_eq!(
+                    W3[before], kept,
+                    "slot {slot} moved although its owner survived"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ranked_is_a_permutation_led_by_the_owner() {
+        for slot in [0usize, 17, 255] {
+            let order = ranked(slot, &W3);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2]);
+            assert_eq!(order[0], place(slot, &W3).unwrap());
+        }
+    }
+
+    #[test]
+    fn slots_mirror_store_sharding() {
+        assert_eq!(slot_of(0), 0);
+        assert_eq!(slot_of(256), 0);
+        assert_eq!(slot_of(257), 1);
+        assert_eq!(slot_of(u64::MAX), 255);
+    }
+}

@@ -1,0 +1,1057 @@
+//! The session router: one [`WireService`] fanning out to N workers.
+//!
+//! A [`ClusterRouter`] owns a pool of worker endpoints (each an
+//! unmodified `NetServer` + `Coordinator` + store), places streaming
+//! sessions on them by consistent hash of the session id
+//! ([`super::placement`]), and fans decode requests out round-robin
+//! with failover. It implements [`WireService`], so the *same*
+//! `NetServer` front-end, wire protocol, drain state machine and
+//! `NetClient` serve it — a client cannot tell a router from a single
+//! worker.
+//!
+//! ## Per-worker links
+//!
+//! * **Stream link** — one persistent [`NetClient`] per worker,
+//!   serialized by a mutex, carries every session verb. Stream verbs
+//!   for one session must apply in order, and `NetClient`'s
+//!   append-retry ledger lives in the client — keeping one long-lived
+//!   client per worker is what makes a router-side reconnect after a
+//!   worker restart *safe*: the ledger's re-`Stat` resolution proves
+//!   whether an in-flight append landed before ever re-sending, so no
+//!   append double-applies across a failover.
+//! * **Decode pool** — up to `decode_pool` additional connections per
+//!   worker, checked out per request so decodes overlap. A saturated
+//!   pool rejects with a typed [`Error::Busy`] after
+//!   `checkout_timeout` (the router's per-worker in-flight limit), and
+//!   the front-end turns that into a reject-with-retry-after frame.
+//!
+//! ## Membership & health
+//!
+//! A prober thread re-scores every worker each `probe_interval`:
+//! connect + `Stat` probe → [`WorkerState::Up`]; connection refused
+//! with a reject (the worker's own drain/admission control) →
+//! [`WorkerState::Draining`]; connection failure →
+//! [`WorkerState::Down`]. Any verb that hits an I/O error marks the
+//! worker down immediately — the prober brings it back when it
+//! recovers. [`drain_worker`](ClusterRouter::drain_worker) places an
+//! administrative hold (reported as draining, excluded from placement)
+//! and live-migrates every resident session away.
+//!
+//! ## Live migration
+//!
+//! [`migrate_session`](ClusterRouter::migrate_session) moves one
+//! session A→B with traffic paused only for the route flip (the
+//! session's route lock): **export** on A (compact into one
+//! self-contained snapshot), **import** on B (resume bit-identically),
+//! **verify** B's `Stat` reports exactly the exported length and model
+//! before any traffic cuts over, then **release** A's copy. A failed
+//! verification releases B and leaves the route on A — the session
+//! never has two serving homes.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{
+    DecodeRequest, DecodeResponse, Metrics, StreamReply, StreamRequest,
+    StreamResponse, StreamVerb,
+};
+use crate::error::{Error, Result};
+use crate::net::{NetClient, WireService};
+
+use super::placement::{ranked, slot_of};
+
+/// Health/administrative state of one worker as the router sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Serving: eligible for placement, decodes, and migration targets.
+    Up,
+    /// Refusing new work (its own drain/admission control, or an
+    /// administrative hold from [`ClusterRouter::drain_worker`]);
+    /// existing sessions may still be served or migrated away.
+    Draining,
+    /// Unreachable; excluded from everything until a probe succeeds.
+    Down,
+}
+
+impl std::fmt::Display for WorkerState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            WorkerState::Up => "up",
+            WorkerState::Draining => "draining",
+            WorkerState::Down => "down",
+        })
+    }
+}
+
+const HEALTH_UP: u8 = 0;
+const HEALTH_DRAINING: u8 = 1;
+const HEALTH_DOWN: u8 = 2;
+
+/// Bound on fresh-id attempts when a worker reports an id collision
+/// (possible when a worker recovered pre-router sessions from its
+/// store); far above any realistic collision run.
+const MAX_ID_ATTEMPTS: usize = 64;
+
+/// Decode-connection pool of one worker: idle clients plus the count of
+/// every client currently existing (idle or checked out).
+#[derive(Default)]
+struct PoolInner {
+    idle: Vec<NetClient>,
+    created: usize,
+}
+
+/// One worker endpoint and the router's links to it.
+struct Worker {
+    addr: String,
+    /// Probe-scored health ([`HEALTH_UP`] / [`HEALTH_DRAINING`] /
+    /// [`HEALTH_DOWN`]); verbs store [`HEALTH_DOWN`] on I/O errors.
+    health: AtomicU8,
+    /// Administrative drain hold ([`ClusterRouter::drain_worker`]).
+    admin_hold: AtomicBool,
+    /// The persistent stream-verb client (lazily connected, never
+    /// discarded — its append-retry ledger must survive reconnects).
+    stream: Mutex<Option<NetClient>>,
+    pool: Mutex<PoolInner>,
+    pool_freed: Condvar,
+}
+
+impl Worker {
+    fn new(addr: String) -> Worker {
+        Worker {
+            addr,
+            health: AtomicU8::new(HEALTH_UP),
+            admin_hold: AtomicBool::new(false),
+            stream: Mutex::new(None),
+            pool: Mutex::new(PoolInner::default()),
+            pool_freed: Condvar::new(),
+        }
+    }
+
+    fn state(&self) -> WorkerState {
+        if self.admin_hold.load(Ordering::Acquire) {
+            return WorkerState::Draining;
+        }
+        match self.health.load(Ordering::Acquire) {
+            HEALTH_UP => WorkerState::Up,
+            HEALTH_DRAINING => WorkerState::Draining,
+            _ => WorkerState::Down,
+        }
+    }
+
+    fn mark_down(&self) {
+        self.health.store(HEALTH_DOWN, Ordering::Release);
+    }
+}
+
+/// Tuning knobs for [`ClusterRouter::new`].
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Worker addresses (`host:port`), each an independent
+    /// `hmm-scan serve` process. Order is irrelevant to placement
+    /// (rendezvous hashing ranks by address), but duplicates are
+    /// rejected.
+    pub workers: Vec<String>,
+    /// Decode connections kept per worker — the router's per-worker
+    /// in-flight decode limit.
+    pub decode_pool: usize,
+    /// How long a decode waits for a free pooled connection before the
+    /// router rejects it with a typed busy error.
+    pub checkout_timeout: Duration,
+    /// Health-probe period.
+    pub probe_interval: Duration,
+    /// Retry-after hint (ms) carried by router-issued busy rejections.
+    pub retry_after_ms: u64,
+}
+
+impl ClusterConfig {
+    /// A config for `workers` with default tuning.
+    pub fn new<I, S>(workers: I) -> ClusterConfig
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        ClusterConfig {
+            workers: workers.into_iter().map(Into::into).collect(),
+            decode_pool: 4,
+            checkout_timeout: Duration::from_secs(2),
+            probe_interval: Duration::from_secs(1),
+            retry_after_ms: 100,
+        }
+    }
+}
+
+/// Routing state of one placed session: the index of its current home
+/// worker, behind a mutex that serializes session verbs against
+/// migration (a verb holds it for the duration of the worker call; a
+/// migration holds it across the whole export → verify → flip).
+struct SessionRoute {
+    home: Mutex<usize>,
+}
+
+/// The distributed serving tier's router (see the module docs).
+///
+/// Construct with [`new`](Self::new), then either call the
+/// [`WireService`] methods in-process or front it with a
+/// [`NetServer`](crate::net::NetServer) (`hmm-scan route`).
+pub struct ClusterRouter {
+    workers: Vec<Arc<Worker>>,
+    sessions: Mutex<BTreeMap<u64, Arc<SessionRoute>>>,
+    /// Router-owned session id allocator. Workers advance their local
+    /// allocators past every routed id (`OpenAt`/`Import` contract), so
+    /// the two spaces never collide.
+    next_session: AtomicU64,
+    /// Round-robin cursor for sessionless decode fan-out.
+    rr: AtomicUsize,
+    metrics: Arc<Metrics>,
+    config: ClusterConfig,
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    prober: Option<thread::JoinHandle<()>>,
+}
+
+impl ClusterRouter {
+    /// Build a router over `config.workers` and start its health
+    /// prober. Workers need not be reachable yet — each is probed
+    /// once synchronously (so initial states are honest) and then every
+    /// `probe_interval`.
+    pub fn new(config: ClusterConfig) -> Result<ClusterRouter> {
+        if config.workers.is_empty() {
+            return Err(Error::invalid_request(
+                "cluster: at least one worker address is required",
+            ));
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for w in &config.workers {
+            if !seen.insert(w.as_str()) {
+                return Err(Error::invalid_request(format!(
+                    "cluster: duplicate worker address {w}"
+                )));
+            }
+        }
+        let workers: Vec<Arc<Worker>> = config
+            .workers
+            .iter()
+            .map(|a| Arc::new(Worker::new(a.clone())))
+            .collect();
+        for w in &workers {
+            w.health.store(probe(&w.addr), Ordering::Release);
+        }
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let prober = {
+            let stop = Arc::clone(&stop);
+            let workers = workers.clone();
+            let interval = config.probe_interval;
+            thread::Builder::new()
+                .name("hmm-scan-cluster-probe".into())
+                .spawn(move || loop {
+                    {
+                        let (lock, cv) = &*stop;
+                        let guard = lock.lock().unwrap();
+                        if *guard {
+                            break;
+                        }
+                        let (guard, _) =
+                            cv.wait_timeout(guard, interval).unwrap();
+                        if *guard {
+                            break;
+                        }
+                    }
+                    for w in &workers {
+                        w.health.store(probe(&w.addr), Ordering::Release);
+                    }
+                })
+                .expect("spawn cluster prober")
+        };
+        Ok(ClusterRouter {
+            workers,
+            sessions: Mutex::new(BTreeMap::new()),
+            next_session: AtomicU64::new(0),
+            rr: AtomicUsize::new(0),
+            metrics: Arc::new(Metrics::new()),
+            config,
+            stop,
+            prober: Some(prober),
+        })
+    }
+
+    /// The router's metrics registry (placement/migration/failover
+    /// gauges, per-worker link latency, plus everything the fronting
+    /// `NetServer` records).
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Every worker with its current state, in configuration order.
+    pub fn worker_states(&self) -> Vec<(String, WorkerState)> {
+        self.workers.iter().map(|w| (w.addr.clone(), w.state())).collect()
+    }
+
+    /// Sessions currently routed (placed and not yet closed).
+    pub fn open_sessions(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    /// The address currently serving `session`, if the router placed it.
+    pub fn session_home(&self, session: u64) -> Option<String> {
+        let route = self.sessions.lock().unwrap().get(&session).cloned()?;
+        let home = route.home.lock().unwrap();
+        Some(self.workers[*home].addr.clone())
+    }
+
+    fn worker_index(&self, addr: &str) -> Result<usize> {
+        self.workers.iter().position(|w| w.addr == addr).ok_or_else(|| {
+            Error::invalid_request(format!("cluster: unknown worker {addr}"))
+        })
+    }
+
+    /// Administratively drain `addr`: exclude it from placement and
+    /// decode fan-out, then live-migrate every session it serves to its
+    /// rendezvous-preferred surviving worker. Returns how many sessions
+    /// moved. The worker process itself is untouched (stop it with its
+    /// own drain once this returns).
+    pub fn drain_worker(&self, addr: &str) -> Result<usize> {
+        let wi = self.worker_index(addr)?;
+        self.workers[wi].admin_hold.store(true, Ordering::Release);
+        let resident: Vec<u64> = {
+            let sessions = self.sessions.lock().unwrap();
+            sessions
+                .iter()
+                .filter(|(_, r)| *r.home.lock().unwrap() == wi)
+                .map(|(id, _)| *id)
+                .collect()
+        };
+        let addrs: Vec<&str> =
+            self.workers.iter().map(|w| w.addr.as_str()).collect();
+        let mut moved = 0;
+        for id in resident {
+            let target = ranked(slot_of(id), &addrs)
+                .into_iter()
+                .find(|&i| {
+                    i != wi && self.workers[i].state() == WorkerState::Up
+                })
+                .ok_or_else(|| {
+                    Error::coordinator(format!(
+                        "drain of {addr}: no eligible target worker \
+                         ({moved} sessions migrated before giving up)"
+                    ))
+                })?;
+            let target_addr = self.workers[target].addr.clone();
+            self.migrate_session(id, &target_addr)?;
+            moved += 1;
+        }
+        Ok(moved)
+    }
+
+    /// Lift the administrative hold placed by
+    /// [`drain_worker`](Self::drain_worker); the worker re-enters
+    /// rotation at its probed health.
+    pub fn resume_worker(&self, addr: &str) -> Result<()> {
+        let wi = self.worker_index(addr)?;
+        self.workers[wi].admin_hold.store(false, Ordering::Release);
+        Ok(())
+    }
+
+    /// Live-migrate one session to `target` (see the module docs for
+    /// the state machine). No-op if the session already lives there.
+    /// On any verification failure the target copy is released and the
+    /// route is left unchanged.
+    pub fn migrate_session(&self, session: u64, target: &str) -> Result<()> {
+        let ti = self.worker_index(target)?;
+        let route = self
+            .sessions
+            .lock()
+            .unwrap()
+            .get(&session)
+            .cloned()
+            .ok_or_else(|| {
+                Error::invalid_request(format!(
+                    "cluster: unknown session {session}"
+                ))
+            })?;
+        // Holding the route lock pauses this session's verbs for the
+        // whole handoff, so the exported image is provably final.
+        let mut home = route.home.lock().unwrap();
+        if *home == ti {
+            return Ok(());
+        }
+        let src = Arc::clone(&self.workers[*home]);
+        let dst = Arc::clone(&self.workers[ti]);
+        // Compact-on-A: one self-contained checkpoint + meta.
+        let (meta, snapshot, len_a) =
+            self.on_worker_stream(&src, |c| c.export(session))?;
+        let model = meta.model.clone();
+        // Restore-on-B.
+        let len_b = self
+            .on_worker_stream(&dst, |c| c.import(session, meta, snapshot))?;
+        // Verify before cutover: B's own Stat must report exactly the
+        // state A exported — length and model — or traffic stays on A.
+        let verified = len_b == len_a && {
+            let reply = self.on_worker_stream(&dst, |c| c.stat(session))?;
+            matches!(
+                &reply,
+                StreamReply::Stats { len, model: m, .. }
+                    if *len == len_a && *m == model
+            )
+        };
+        if !verified {
+            let _ = self.on_worker_stream(&dst, |c| c.release(session));
+            return Err(Error::coordinator(format!(
+                "migration of session {session} to {target} failed \
+                 verification; route unchanged"
+            )));
+        }
+        // Cut over, then release A's copy (best effort — if A is dying
+        // anyway its copy is unreachable and harmless: the router's id
+        // space never re-issues the id).
+        *home = ti;
+        self.metrics.on_session_migrated();
+        let _ = self.on_worker_stream(&src, |c| c.release(session));
+        Ok(())
+    }
+
+    /// Place a new session: allocate a router id, rank the Up workers
+    /// for its slot, and `open_at` on the first that accepts. Busy and
+    /// unreachable workers are skipped (failed-over); an id collision
+    /// (a worker with recovered pre-router sessions) retries with a
+    /// fresh id.
+    fn open_session(
+        &self,
+        rid: u64,
+        model: &str,
+        options: crate::engine::SessionOptions,
+        lag: usize,
+    ) -> Result<StreamResponse> {
+        let t0 = Instant::now();
+        for _ in 0..MAX_ID_ATTEMPTS {
+            let id = self.next_session.fetch_add(1, Ordering::Relaxed) + 1;
+            let addrs: Vec<&str> =
+                self.workers.iter().map(|w| w.addr.as_str()).collect();
+            let mut collided = false;
+            let mut attempted = false;
+            for wi in ranked(slot_of(id), &addrs) {
+                let w = Arc::clone(&self.workers[wi]);
+                if w.state() != WorkerState::Up {
+                    continue;
+                }
+                if attempted {
+                    self.metrics.on_failover();
+                }
+                attempted = true;
+                let placed = self.on_worker_stream(&w, |c| {
+                    c.open_at(id, model, options, lag)
+                });
+                match placed {
+                    Ok(_) => {
+                        self.sessions.lock().unwrap().insert(
+                            id,
+                            Arc::new(SessionRoute { home: Mutex::new(wi) }),
+                        );
+                        self.metrics.on_session_placed();
+                        return Ok(StreamResponse {
+                            id: rid,
+                            reply: StreamReply::Opened { session: id },
+                            elapsed: t0.elapsed(),
+                        });
+                    }
+                    // Try the next-ranked worker on transient failures.
+                    Err(Error::Io(_)) | Err(Error::Busy { .. }) => continue,
+                    Err(Error::InvalidRequest(msg))
+                        if msg.contains("already exists") =>
+                    {
+                        collided = true;
+                        break; // fresh id, same ranking logic
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            if !collided {
+                // Every Up worker refused or none exists.
+                return Err(Error::busy(
+                    self.config.retry_after_ms,
+                    "cluster: no worker available to place the session",
+                ));
+            }
+        }
+        Err(Error::coordinator(
+            "cluster: session id space exhausted by collisions",
+        ))
+    }
+
+    /// Run a session verb on the session's home worker, holding the
+    /// route lock so migration cannot flip the home mid-verb.
+    fn on_route<T>(
+        &self,
+        session: u64,
+        f: impl FnOnce(&mut NetClient) -> Result<T>,
+    ) -> Result<T> {
+        let route = self
+            .sessions
+            .lock()
+            .unwrap()
+            .get(&session)
+            .cloned()
+            .ok_or_else(|| {
+                Error::invalid_request(format!(
+                    "cluster: unknown session {session} (not placed by this \
+                     router)"
+                ))
+            })?;
+        let home = route.home.lock().unwrap();
+        let w = Arc::clone(&self.workers[*home]);
+        self.on_worker_stream(&w, f)
+    }
+
+    /// Run `f` on the worker's persistent stream client (lazily
+    /// connected), recording link latency and marking the worker down
+    /// on connection-level failures. The client is never discarded:
+    /// its append-retry ledger is what makes retrying safe.
+    fn on_worker_stream<T>(
+        &self,
+        w: &Worker,
+        f: impl FnOnce(&mut NetClient) -> Result<T>,
+    ) -> Result<T> {
+        let mut guard = w.stream.lock().unwrap();
+        if guard.is_none() {
+            match NetClient::connect(&w.addr) {
+                Ok(c) => *guard = Some(c),
+                Err(e) => {
+                    if matches!(e, Error::Io(_)) {
+                        w.mark_down();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let client = guard.as_mut().expect("stream client just ensured");
+        let t0 = Instant::now();
+        let out = f(client);
+        self.metrics.on_worker_call(&w.addr, t0.elapsed());
+        if matches!(out, Err(Error::Io(_))) {
+            w.mark_down();
+        }
+        out
+    }
+
+    /// Check one decode client out of the worker's pool: an idle one,
+    /// a fresh connection below the cap, or — after `checkout_timeout`
+    /// of waiting at the cap — a typed busy rejection.
+    fn checkout(&self, w: &Worker) -> Result<NetClient> {
+        let deadline = Instant::now() + self.config.checkout_timeout;
+        let mut inner = w.pool.lock().unwrap();
+        loop {
+            if let Some(c) = inner.idle.pop() {
+                return Ok(c);
+            }
+            if inner.created < self.config.decode_pool.max(1) {
+                inner.created += 1;
+                drop(inner);
+                return match NetClient::connect(&w.addr) {
+                    Ok(c) => Ok(c),
+                    Err(e) => {
+                        w.pool.lock().unwrap().created -= 1;
+                        w.pool_freed.notify_one();
+                        Err(e)
+                    }
+                };
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(Error::busy(
+                    self.config.retry_after_ms,
+                    format!(
+                        "cluster: decode pool for worker {} saturated",
+                        w.addr
+                    ),
+                ));
+            }
+            let (guard, _) = w.pool_freed.wait_timeout(inner, left).unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Return a healthy decode client to the pool.
+    fn checkin(&self, w: &Worker, client: NetClient) {
+        w.pool.lock().unwrap().idle.push(client);
+        w.pool_freed.notify_one();
+    }
+
+    /// Drop a broken decode client (its connection died).
+    fn discard(&self, w: &Worker) {
+        w.pool.lock().unwrap().created -= 1;
+        w.pool_freed.notify_one();
+    }
+
+    /// One decode attempt against one worker through its pool.
+    fn decode_on(
+        &self,
+        w: &Worker,
+        req: DecodeRequest,
+    ) -> Result<DecodeResponse> {
+        let mut client = self.checkout(w)?;
+        let t0 = Instant::now();
+        let out = client.decode(&req);
+        self.metrics.on_worker_call(&w.addr, t0.elapsed());
+        if matches!(out, Err(Error::Io(_))) {
+            self.discard(w);
+        } else {
+            self.checkin(w, client);
+        }
+        out
+    }
+}
+
+impl Drop for ClusterRouter {
+    fn drop(&mut self) {
+        {
+            let (lock, cv) = &*self.stop;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        if let Some(prober) = self.prober.take() {
+            let _ = prober.join();
+        }
+    }
+}
+
+impl WireService for ClusterRouter {
+    /// Fan one decode out round-robin over the Up workers, failing over
+    /// past unreachable (marked down) and busy ones. Deterministic
+    /// request errors (unknown model, bad observation…) return
+    /// immediately — they would fail identically everywhere.
+    fn decode(&self, req: DecodeRequest) -> Result<DecodeResponse> {
+        let n = self.workers.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut prior_io_failure = false;
+        for k in 0..n {
+            let w = Arc::clone(&self.workers[(start + k) % n]);
+            if w.state() != WorkerState::Up {
+                continue;
+            }
+            if prior_io_failure {
+                self.metrics.on_failover();
+            }
+            match self.decode_on(&w, req.clone()) {
+                Ok(resp) => return Ok(resp),
+                Err(Error::Io(_)) => {
+                    w.mark_down();
+                    prior_io_failure = true;
+                }
+                Err(Error::Busy { .. }) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(Error::busy(
+            self.config.retry_after_ms,
+            "cluster: no worker available for decode",
+        ))
+    }
+
+    /// Serve one streaming verb: `open` places a session; `append` /
+    /// `stat` / `close` follow its route. The migration verbs
+    /// (`open_at` / `export` / `import` / `release`) are router→worker
+    /// internals and are rejected at this tier.
+    fn stream(&self, req: StreamRequest) -> Result<StreamResponse> {
+        let rid = req.id;
+        let t0 = Instant::now();
+        match req.verb {
+            StreamVerb::Open { model, options, lag } => {
+                self.open_session(rid, &model, options, lag)
+            }
+            StreamVerb::Append { session, ys } => {
+                let reply = self.on_route(session, |c| c.append(session, &ys))?;
+                Ok(StreamResponse { id: rid, reply, elapsed: t0.elapsed() })
+            }
+            StreamVerb::Stat { session } => {
+                let reply = self.on_route(session, |c| c.stat(session))?;
+                Ok(StreamResponse { id: rid, reply, elapsed: t0.elapsed() })
+            }
+            StreamVerb::Close { session } => {
+                let posterior =
+                    self.on_route(session, |c| c.close(session))?;
+                self.sessions.lock().unwrap().remove(&session);
+                Ok(StreamResponse {
+                    id: rid,
+                    reply: StreamReply::Closed { session, posterior },
+                    elapsed: t0.elapsed(),
+                })
+            }
+            StreamVerb::OpenAt { .. }
+            | StreamVerb::Export { .. }
+            | StreamVerb::Import { .. }
+            | StreamVerb::Release { .. } => Err(Error::invalid_request(
+                "cluster: migration verbs are router→worker internal and \
+                 not accepted from clients",
+            )),
+        }
+    }
+
+    fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+/// Score one worker: connect + `Stat` probe. A refusal reject means
+/// the worker is alive but draining; a connection failure means down;
+/// anything else (the expected typed unknown-session error included)
+/// means up.
+fn probe(addr: &str) -> u8 {
+    match NetClient::connect(addr) {
+        Ok(mut c) => match c.stat(u64::MAX) {
+            Err(Error::Io(_)) => HEALTH_DOWN,
+            Err(Error::Busy { .. }) => HEALTH_DRAINING,
+            _ => HEALTH_UP,
+        },
+        Err(Error::Busy { .. }) => HEALTH_DRAINING,
+        Err(_) => HEALTH_DOWN,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Algo, Coordinator, CoordinatorConfig};
+    use crate::engine::SessionOptions;
+    use crate::hmm::{gilbert_elliott, GeParams};
+    use crate::net::{NetServer, NetServerConfig};
+    use crate::proptestx::{gen, Runner};
+    use crate::rng::Xoshiro256StarStar;
+
+    fn spawn_worker() -> (Arc<Coordinator>, NetServer, String) {
+        let c = Coordinator::new(CoordinatorConfig::native_only()).unwrap();
+        c.register_model("ge", gilbert_elliott(GeParams::default()));
+        let coord = Arc::new(c);
+        let server = NetServer::start(
+            Arc::clone(&coord),
+            "127.0.0.1:0",
+            NetServerConfig {
+                exec_threads: 2,
+                read_timeout: Duration::from_millis(50),
+                ..NetServerConfig::default()
+            },
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        (coord, server, addr)
+    }
+
+    fn test_router(addrs: Vec<String>) -> ClusterRouter {
+        let mut cfg = ClusterConfig::new(addrs);
+        cfg.probe_interval = Duration::from_millis(100);
+        ClusterRouter::new(cfg).unwrap()
+    }
+
+    /// The acceptance bar end to end: a client talking to a fronted
+    /// router gets decode and streaming responses bit-identical to a
+    /// single local coordinator, across three workers.
+    #[test]
+    fn routed_serving_is_bit_identical_end_to_end() {
+        let workers: Vec<_> = (0..3).map(|_| spawn_worker()).collect();
+        let addrs: Vec<String> =
+            workers.iter().map(|(_, _, a)| a.clone()).collect();
+        let router = Arc::new(test_router(addrs));
+        let front = NetServer::start(
+            Arc::clone(&router),
+            "127.0.0.1:0",
+            NetServerConfig::default(),
+        )
+        .unwrap();
+        let mut client =
+            NetClient::connect(front.local_addr().to_string()).unwrap();
+        client.ping().unwrap();
+
+        let control =
+            Coordinator::new(CoordinatorConfig::native_only()).unwrap();
+        control.register_model("ge", gilbert_elliott(GeParams::default()));
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(0xC1A5);
+        let ys = crate::hmm::sample(&hmm, 240, &mut rng).observations;
+
+        for algo in Algo::ALL {
+            let remote = client
+                .decode(&DecodeRequest::new(7, "ge", ys.clone(), algo))
+                .unwrap();
+            let local = control
+                .decode(DecodeRequest::new(7, "ge", ys.clone(), algo))
+                .unwrap();
+            match (&remote.result, &local.result) {
+                (
+                    crate::coordinator::DecodeResult::Posterior(a),
+                    crate::coordinator::DecodeResult::Posterior(b),
+                ) => assert_eq!(a, b, "{algo:?} diverged through the router"),
+                (
+                    crate::coordinator::DecodeResult::Map(a),
+                    crate::coordinator::DecodeResult::Map(b),
+                ) => assert_eq!(a, b, "MAP diverged through the router"),
+                (a, b) => panic!("shape diverged: {a:?} vs {b:?}"),
+            }
+        }
+        // A bad request is a typed error, not a failover storm.
+        assert!(client
+            .decode(&DecodeRequest::new(7, "nope", vec![0], Algo::Smooth))
+            .is_err());
+
+        // Streaming through the router vs the local control.
+        let sid = client.open("ge", SessionOptions::default(), 8).unwrap();
+        let opened =
+            control.stream(StreamRequest::open(0, "ge", 8)).unwrap();
+        let StreamReply::Opened { session: ctl } = opened.reply else {
+            panic!("expected Opened")
+        };
+        for chunk in ys.chunks(50) {
+            let remote = client.append(sid, chunk).unwrap();
+            let local = control
+                .stream(StreamRequest::append(0, ctl, chunk.to_vec()))
+                .unwrap();
+            let StreamReply::Appended { filtered: rf, window: rw, .. } =
+                remote
+            else {
+                panic!("expected Appended")
+            };
+            let StreamReply::Appended { filtered: lf, window: lw, .. } =
+                local.reply
+            else {
+                panic!("expected Appended")
+            };
+            assert_eq!(rf, lf, "filtered diverged through the router");
+            assert_eq!(
+                rw.unwrap().posterior,
+                lw.unwrap().posterior,
+                "lag window diverged through the router"
+            );
+        }
+        let StreamReply::Stats { len, model, .. } =
+            client.stat(sid).unwrap()
+        else {
+            panic!("expected Stats")
+        };
+        assert_eq!((len, model.as_str()), (240, "ge"));
+        assert!(router.session_home(sid).is_some());
+        assert_eq!(router.open_sessions(), 1);
+
+        let remote_posterior = client.close(sid).unwrap();
+        let closed = control.stream(StreamRequest::close(0, ctl)).unwrap();
+        let StreamReply::Closed { posterior: local_posterior, .. } =
+            closed.reply
+        else {
+            panic!("expected Closed")
+        };
+        assert_eq!(
+            remote_posterior, local_posterior,
+            "posterior diverged through the router"
+        );
+        assert_eq!(router.open_sessions(), 0);
+
+        let snap = router.metrics().snapshot();
+        assert!(snap.sessions_placed >= 1);
+        assert!(!snap.worker_links.is_empty(), "link latency not recorded");
+        drop(client);
+        assert!(front.shutdown(Duration::from_secs(5)));
+        for (_, server, _) in workers {
+            server.shutdown(Duration::from_secs(5));
+        }
+    }
+
+    /// Kill one worker mid-run: decodes keep succeeding (failover), the
+    /// dead worker is marked down, and the failover gauge moves.
+    #[test]
+    fn decode_fails_over_when_a_worker_dies() {
+        let (coord_a, server_a, addr_a) = spawn_worker();
+        let (_coord_b, server_b, addr_b) = spawn_worker();
+        // A long probe interval keeps the prober from marking the dead
+        // worker down first: the decode path itself must discover the
+        // death (and count the failover) for this test to be exact.
+        let mut cfg = ClusterConfig::new(vec![addr_a.clone(), addr_b.clone()]);
+        cfg.probe_interval = Duration::from_secs(300);
+        let router = ClusterRouter::new(cfg).unwrap();
+        let hmm = gilbert_elliott(GeParams::default());
+        let mut rng = Xoshiro256StarStar::seed_from_u64(0xDEAD);
+        let ys = crate::hmm::sample(&hmm, 60, &mut rng).observations;
+
+        let local = coord_a
+            .decode(DecodeRequest::new(1, "ge", ys.clone(), Algo::Smooth))
+            .unwrap();
+        for i in 0..4 {
+            let resp = router
+                .decode(DecodeRequest::new(i, "ge", ys.clone(), Algo::Smooth))
+                .unwrap();
+            assert_eq!(resp.result.as_posterior(), local.result.as_posterior());
+        }
+        // Worker A dies. Every subsequent decode must still succeed.
+        server_a.shutdown(Duration::from_secs(5));
+        for i in 0..6 {
+            let resp = router
+                .decode(DecodeRequest::new(i, "ge", ys.clone(), Algo::Smooth))
+                .unwrap();
+            assert_eq!(
+                resp.result.as_posterior(),
+                local.result.as_posterior(),
+                "failover decode diverged"
+            );
+        }
+        let snap = router.metrics().snapshot();
+        assert!(snap.decode_failovers >= 1, "failover was never recorded");
+        let states = router.worker_states();
+        assert!(
+            states.iter().any(|(a, s)| *a == addr_a
+                && *s == WorkerState::Down),
+            "dead worker not marked down: {states:?}"
+        );
+        assert!(states
+            .iter()
+            .any(|(a, s)| *a == addr_b && *s == WorkerState::Up));
+        server_b.shutdown(Duration::from_secs(5));
+    }
+
+    /// Administrative drain re-homes every session off the drained
+    /// worker and the sessions keep serving bit-identically.
+    #[test]
+    fn drain_worker_rehomes_sessions() {
+        let workers: Vec<_> = (0..3).map(|_| spawn_worker()).collect();
+        let addrs: Vec<String> =
+            workers.iter().map(|(_, _, a)| a.clone()).collect();
+        let router = test_router(addrs.clone());
+
+        let mut sids = Vec::new();
+        for _ in 0..6 {
+            let resp = router
+                .stream(StreamRequest::open(0, "ge", 0))
+                .unwrap();
+            let StreamReply::Opened { session } = resp.reply else {
+                panic!("expected Opened")
+            };
+            router
+                .stream(StreamRequest::append(0, session, vec![0, 1, 1, 0]))
+                .unwrap();
+            sids.push(session);
+        }
+        // Drain whichever worker serves the first session.
+        let victim = router.session_home(sids[0]).unwrap();
+        let moved = router.drain_worker(&victim).unwrap();
+        assert!(moved >= 1, "the victim served at least session {}", sids[0]);
+        for &sid in &sids {
+            assert_ne!(
+                router.session_home(sid).unwrap(),
+                victim,
+                "session {sid} still routed to the drained worker"
+            );
+        }
+        assert!(router
+            .worker_states()
+            .iter()
+            .any(|(a, s)| *a == victim && *s == WorkerState::Draining));
+        // Migrated sessions keep serving.
+        for &sid in &sids {
+            let resp = router
+                .stream(StreamRequest::append(0, sid, vec![1, 0]))
+                .unwrap();
+            let StreamReply::Appended { len, .. } = resp.reply else {
+                panic!("expected Appended")
+            };
+            assert_eq!(len, 6);
+        }
+        assert!(
+            router.metrics().snapshot().sessions_migrated >= moved as u64
+        );
+        router.resume_worker(&victim).unwrap();
+        assert!(router
+            .worker_states()
+            .iter()
+            .any(|(a, s)| *a == victim && *s == WorkerState::Up));
+        for (_, server, _) in workers {
+            server.shutdown(Duration::from_secs(5));
+        }
+    }
+
+    /// The migration acceptance property: across random observation
+    /// sequences, random push splits, and random mid-stream migrations,
+    /// a migrated session's final posterior is bit-identical to a
+    /// never-migrated control session fed the same chunks.
+    #[test]
+    fn migrated_sessions_finish_bit_identical_to_control() {
+        let (_ca, server_a, addr_a) = spawn_worker();
+        let (_cb, server_b, addr_b) = spawn_worker();
+        let router = test_router(vec![addr_a.clone(), addr_b.clone()]);
+        let control =
+            Coordinator::new(CoordinatorConfig::native_only()).unwrap();
+        control.register_model("ge", gilbert_elliott(GeParams::default()));
+
+        let mut migrations = 0u64;
+        Runner::new("cluster-migration-bit-identity").run(4, |rng| {
+            let t = 40 + rng.below(160) as usize;
+            let ys = gen::obs_seq(rng, 2, t);
+            let lag = if rng.below(2) == 0 { 0 } else { 4 };
+
+            let resp =
+                router.stream(StreamRequest::open(0, "ge", lag)).unwrap();
+            let StreamReply::Opened { session } = resp.reply else {
+                panic!("expected Opened")
+            };
+            let opened =
+                control.stream(StreamRequest::open(0, "ge", lag)).unwrap();
+            let StreamReply::Opened { session: ctl } = opened.reply else {
+                panic!("expected Opened")
+            };
+
+            // Random split points; migrate between random chunks (at
+            // least once per case, alternating homes A↔B).
+            let mut rest = ys.as_slice();
+            while !rest.is_empty() {
+                let take = (1 + rng.below(48) as usize).min(rest.len());
+                let (chunk, tail) = rest.split_at(take);
+                rest = tail;
+                router
+                    .stream(StreamRequest::append(
+                        0,
+                        session,
+                        chunk.to_vec(),
+                    ))
+                    .unwrap();
+                control
+                    .stream(StreamRequest::append(0, ctl, chunk.to_vec()))
+                    .unwrap();
+                if rng.below(2) == 0 || rest.is_empty() {
+                    let here = router.session_home(session).unwrap();
+                    let there = if here == addr_a {
+                        addr_b.clone()
+                    } else {
+                        addr_a.clone()
+                    };
+                    router.migrate_session(session, &there).unwrap();
+                    assert_eq!(
+                        router.session_home(session).unwrap(),
+                        there
+                    );
+                    migrations += 1;
+                }
+            }
+
+            let resp = router
+                .stream(StreamRequest::close(0, session))
+                .unwrap();
+            let StreamReply::Closed { posterior: routed, .. } = resp.reply
+            else {
+                panic!("expected Closed")
+            };
+            let closed =
+                control.stream(StreamRequest::close(0, ctl)).unwrap();
+            let StreamReply::Closed { posterior: ctrl, .. } = closed.reply
+            else {
+                panic!("expected Closed")
+            };
+            assert_eq!(
+                routed, ctrl,
+                "migrated session diverged from never-migrated control \
+                 (T={t}, lag={lag})"
+            );
+        });
+        assert!(migrations >= 4, "every case migrates at least once");
+        assert_eq!(
+            router.metrics().snapshot().sessions_migrated,
+            migrations
+        );
+        server_a.shutdown(Duration::from_secs(5));
+        server_b.shutdown(Duration::from_secs(5));
+    }
+}

@@ -73,6 +73,13 @@ pub struct Metrics {
     /// Per-verb wire serving latency (decode / open / append / stat /
     /// close): request count plus a bounded sample window each.
     wire_verbs: Mutex<BTreeMap<&'static str, (u64, SampleWindow)>>,
+    sessions_placed: AtomicU64,
+    sessions_migrated: AtomicU64,
+    decode_failovers: AtomicU64,
+    rejects_sent: AtomicU64,
+    /// Per-worker router-side wire latency (cluster tier): call count
+    /// plus a bounded sample window, keyed by the worker's address.
+    worker_links: Mutex<BTreeMap<String, (u64, SampleWindow)>>,
 }
 
 /// Per-verb wire latency percentiles over the retained sample window
@@ -88,6 +95,23 @@ pub struct WireVerbStats {
     /// 99th-percentile wire serving latency over the window, µs.
     pub p99_us: u64,
     /// Maximum wire serving latency over the window, µs.
+    pub max_us: u64,
+}
+
+/// Per-worker router→worker wire latency percentiles over the retained
+/// sample window (see [`MetricsSnapshot::worker_links`]). One entry per
+/// worker address the cluster router has spoken to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerLinkStats {
+    /// Worker address (`host:port`) as configured on the router.
+    pub worker: String,
+    /// Wire calls the router has completed against this worker.
+    pub count: u64,
+    /// Median router→worker wire latency over the window, µs.
+    pub p50_us: u64,
+    /// 99th-percentile router→worker wire latency over the window, µs.
+    pub p99_us: u64,
+    /// Maximum router→worker wire latency over the window, µs.
     pub max_us: u64,
 }
 
@@ -174,6 +198,16 @@ pub struct MetricsSnapshot {
     /// Per-verb wire serving latency (request-decoded → response
     /// queued), ascending by verb name.
     pub wire_verbs: Vec<WireVerbStats>,
+    /// Sessions the cluster router placed on a worker.
+    pub sessions_placed: u64,
+    /// Sessions the cluster router live-migrated between workers.
+    pub sessions_migrated: u64,
+    /// Decode requests the router re-routed after a worker failure.
+    pub decode_failovers: u64,
+    /// Reject (busy) frames sent to clients instead of serving.
+    pub rejects_sent: u64,
+    /// Per-worker router→worker wire latency, ascending by address.
+    pub worker_links: Vec<WorkerLinkStats>,
 }
 
 impl MetricsSnapshot {
@@ -349,6 +383,35 @@ impl Metrics {
         entry.1.push(latency.as_micros().min(u128::from(u64::MAX)) as u64);
     }
 
+    /// Record one session placed on a worker by the cluster router.
+    pub fn on_session_placed(&self) {
+        self.sessions_placed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one session live-migrated between workers.
+    pub fn on_session_migrated(&self) {
+        self.sessions_migrated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one decode re-routed to another worker after a failure.
+    pub fn on_failover(&self) {
+        self.decode_failovers.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one reject (busy) frame sent instead of serving.
+    pub fn on_reject(&self) {
+        self.rejects_sent.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one completed router→worker wire call against `worker`
+    /// taking `latency` (the cluster tier's per-worker link histogram).
+    pub fn on_worker_call(&self, worker: &str, latency: Duration) {
+        let mut links = self.worker_links.lock().unwrap();
+        let entry = links.entry(worker.to_string()).or_default();
+        entry.0 += 1;
+        entry.1.push(latency.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
     /// Record the forward suffix-rescan width of a fixed-lag query
     /// (bucketed immediately — power-of-two upper bound).
     pub fn on_suffix_width(&self, width: usize) {
@@ -387,6 +450,23 @@ impl Metrics {
                 lat.sort_unstable();
                 WireVerbStats {
                     verb: verb.to_string(),
+                    count: *count,
+                    p50_us: pct(&lat, 0.50),
+                    p99_us: pct(&lat, 0.99),
+                    max_us: lat.last().copied().unwrap_or(0),
+                }
+            })
+            .collect();
+        let worker_links: Vec<WorkerLinkStats> = self
+            .worker_links
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(worker, (count, window))| {
+                let mut lat = window.samples.clone();
+                lat.sort_unstable();
+                WorkerLinkStats {
+                    worker: worker.clone(),
                     count: *count,
                     p50_us: pct(&lat, 0.50),
                     p99_us: pct(&lat, 0.99),
@@ -438,6 +518,11 @@ impl Metrics {
                 .saturating_sub(self.conns_closed.load(Ordering::Relaxed)),
             wire_inflight: self.wire_inflight.load(Ordering::Relaxed),
             wire_verbs,
+            sessions_placed: self.sessions_placed.load(Ordering::Relaxed),
+            sessions_migrated: self.sessions_migrated.load(Ordering::Relaxed),
+            decode_failovers: self.decode_failovers.load(Ordering::Relaxed),
+            rejects_sent: self.rejects_sent.load(Ordering::Relaxed),
+            worker_links,
         }
     }
 }
@@ -576,6 +661,39 @@ mod tests {
         m.on_wire_done("decode", Duration::ZERO);
         m.on_wire_done("decode", Duration::ZERO);
         assert_eq!(m.snapshot().wire_inflight, 0);
+    }
+
+    #[test]
+    fn cluster_routing_gauges() {
+        let m = Metrics::new();
+        m.on_session_placed();
+        m.on_session_placed();
+        m.on_session_migrated();
+        m.on_failover();
+        m.on_reject();
+        m.on_reject();
+        m.on_reject();
+        for i in 1..=4u64 {
+            m.on_worker_call("127.0.0.1:9001", Duration::from_micros(i * 10));
+        }
+        m.on_worker_call("127.0.0.1:9002", Duration::from_micros(70));
+        let s = m.snapshot();
+        assert_eq!(s.sessions_placed, 2);
+        assert_eq!(s.sessions_migrated, 1);
+        assert_eq!(s.decode_failovers, 1);
+        assert_eq!(s.rejects_sent, 3);
+        assert_eq!(s.worker_links.len(), 2);
+        let a = &s.worker_links[0];
+        assert_eq!(a.worker, "127.0.0.1:9001");
+        assert_eq!(a.count, 4);
+        assert_eq!(a.p50_us, 20);
+        assert_eq!(a.max_us, 40);
+        let b = &s.worker_links[1];
+        assert_eq!((b.worker.as_str(), b.count, b.max_us), ("127.0.0.1:9002", 1, 70));
+        // Fresh metrics report empty cluster gauges.
+        let empty = Metrics::new().snapshot();
+        assert_eq!(empty.sessions_placed, 0);
+        assert!(empty.worker_links.is_empty());
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod server;
 pub mod sharder;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
-pub use metrics::{Metrics, MetricsSnapshot, WireVerbStats};
+pub use metrics::{Metrics, MetricsSnapshot, WireVerbStats, WorkerLinkStats};
 pub use request::{
     Algo, DecodeRequest, DecodeResponse, DecodeResult, ExecMode, StreamReply,
     StreamRequest, StreamResponse, StreamVerb,

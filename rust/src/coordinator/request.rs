@@ -197,6 +197,52 @@ pub enum StreamVerb {
         /// Target session id.
         session: u64,
     },
+    /// Create a session under a **caller-chosen** id — the cluster
+    /// router's placement verb: the router allocates ids so a session
+    /// keeps one identity across every worker it may live on. Fails if
+    /// the id is already registered; the coordinator advances its own
+    /// allocator past `session` so local opens never collide.
+    OpenAt {
+        /// Caller-chosen session id to register.
+        session: u64,
+        /// Model registry key to bind the session to.
+        model: String,
+        /// Session options (checkpoint block, MAP tracking, kind).
+        options: SessionOptions,
+        /// Fixed-lag smoothing width returned on every append (0 =
+        /// filtering only).
+        lag: usize,
+    },
+    /// Capture a migration snapshot of one session: compact its state
+    /// into a single [`Session::snapshot`](crate::engine::Session)
+    /// checkpoint and return it with the session's meta — the
+    /// compact-on-A half of live migration. The session stays open and
+    /// servable on this worker until [`StreamVerb::Release`].
+    Export {
+        /// Target session id.
+        session: u64,
+    },
+    /// Register a session from an exported snapshot — the restore-on-B
+    /// half of live migration. The restored session is bit-identical to
+    /// the exported one (the snapshot/resume contract). Fails if the id
+    /// is already registered or the model/fingerprint doesn't match a
+    /// registered model.
+    Import {
+        /// Session id to register (the exported session's id).
+        session: u64,
+        /// The exported session's durable meta (model, options, lag).
+        meta: crate::store::SessionMeta,
+        /// The exported [`Session::snapshot`](crate::engine::Session)
+        /// JSON.
+        snapshot: Json,
+    },
+    /// Remove a session *without* finishing it — the cut-over step of
+    /// migration (the source copy is released once the destination
+    /// verifies). No posterior is computed.
+    Release {
+        /// Target session id.
+        session: u64,
+    },
 }
 
 /// A streaming request (see [`StreamVerb`]).
@@ -234,6 +280,45 @@ impl StreamRequest {
     /// A [`StreamVerb::Close`] for the exact posterior.
     pub fn close(id: u64, session: u64) -> Self {
         Self { id, verb: StreamVerb::Close { session } }
+    }
+
+    /// A [`StreamVerb::OpenAt`] placement under a caller-chosen id.
+    pub fn open_at(
+        id: u64,
+        session: u64,
+        model: impl Into<String>,
+        options: SessionOptions,
+        lag: usize,
+    ) -> Self {
+        Self {
+            id,
+            verb: StreamVerb::OpenAt {
+                session,
+                model: model.into(),
+                options,
+                lag,
+            },
+        }
+    }
+
+    /// A [`StreamVerb::Export`] migration-snapshot request.
+    pub fn export(id: u64, session: u64) -> Self {
+        Self { id, verb: StreamVerb::Export { session } }
+    }
+
+    /// A [`StreamVerb::Import`] restore from an exported snapshot.
+    pub fn import(
+        id: u64,
+        session: u64,
+        meta: crate::store::SessionMeta,
+        snapshot: Json,
+    ) -> Self {
+        Self { id, verb: StreamVerb::Import { session, meta, snapshot } }
+    }
+
+    /// A [`StreamVerb::Release`] removal without finish.
+    pub fn release(id: u64, session: u64) -> Self {
+        Self { id, verb: StreamVerb::Release { session } }
     }
 }
 
@@ -282,6 +367,33 @@ pub enum StreamReply {
         /// Exact full-sequence posterior, bit-identical to the one-shot
         /// parallel smoother under the session's scan options.
         posterior: Posterior,
+    },
+    /// Migration snapshot of one session ([`StreamVerb::Export`]).
+    Exported {
+        /// Echo of the target session id.
+        session: u64,
+        /// Observations the snapshot covers.
+        len: usize,
+        /// The session's durable meta (model, options, lag,
+        /// fingerprint).
+        meta: crate::store::SessionMeta,
+        /// The [`Session::snapshot`](crate::engine::Session) JSON —
+        /// resume it elsewhere for a bit-identical session.
+        snapshot: Json,
+    },
+    /// A session was registered from a snapshot
+    /// ([`StreamVerb::Import`]).
+    Imported {
+        /// Echo of the imported session id.
+        session: u64,
+        /// Observations the restored session holds.
+        len: usize,
+    },
+    /// A session was removed without finishing
+    /// ([`StreamVerb::Release`]).
+    Released {
+        /// Echo of the released session id.
+        session: u64,
     },
 }
 

@@ -835,32 +835,120 @@ impl Coordinator {
         }
     }
 
+    /// The serve-cost guards every new session must satisfy — shared by
+    /// `Open`, `OpenAt` and (against the imported meta) `Import`.
+    fn check_session_limits(
+        &self,
+        options: &crate::engine::SessionOptions,
+        lag: usize,
+    ) -> Result<()> {
+        if lag > self.max_stream_lag {
+            return Err(Error::invalid_request(format!(
+                "requested lag {lag} exceeds the configured maximum {}",
+                self.max_stream_lag
+            )));
+        }
+        // The append cost is O(lag + block), so the block is capped
+        // alongside the lag — otherwise a huge client block re-opens
+        // the degrade-every-append hole the lag cap closes.
+        let max_block =
+            self.max_stream_lag.max(crate::engine::DEFAULT_SESSION_BLOCK);
+        if options.block.is_some_and(|b| b > max_block) {
+            return Err(Error::invalid_request(format!(
+                "requested block {} exceeds the maximum {max_block}",
+                options.block.unwrap_or(0)
+            )));
+        }
+        if options.kind == SessionKind::Bayes && lag > 0 {
+            return Err(Error::invalid_request(
+                "bayes sessions are filtering-only: open with lag = 0",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Publish a freshly built resident session under `id`: gauge, map
+    /// insert (rejecting an already-registered id), LRU index, durable
+    /// open record — with full rollback on any failure. Shared by
+    /// `Open`, `OpenAt` and `Import`.
+    fn publish_session(
+        &self,
+        id: u64,
+        hmm: Arc<Hmm>,
+        meta: SessionMeta,
+        session: Session,
+    ) -> Result<Arc<SessionEntry>> {
+        let sess_entry = Arc::new(SessionEntry {
+            slot: Mutex::new(SessionSlot::Resident(session)),
+            hmm,
+            meta,
+            touch: AtomicU64::new(self.registry.tick()),
+            resident: AtomicBool::new(true),
+            since_ckpt: AtomicU64::new(0),
+            ckpt_pending: AtomicBool::new(false),
+            charged: AtomicUsize::new(0),
+        });
+        // Count the residency *before* the entry is published:
+        // a concurrent eviction scan may spill it the moment it
+        // appears in the map, and its swap-guarded decrement
+        // must never land on a gauge that has not yet been
+        // incremented (usize wrap → permanent eviction churn).
+        self.registry.resident.fetch_add(1, Ordering::Relaxed);
+        {
+            // DoS backstop, checked atomically with the insert:
+            // even spilled sessions cost a registry entry + store
+            // state, so total opens stay bounded (the watermark
+            // only bounds *residency*).
+            let mut sessions = self.registry.sessions.write().unwrap();
+            if sessions.len() >= self.max_open_sessions {
+                drop(sessions);
+                self.registry.resident.fetch_sub(1, Ordering::Relaxed);
+                return Err(Error::invalid_request(format!(
+                    "open session limit {} reached",
+                    self.max_open_sessions
+                )));
+            }
+            // Caller-chosen ids (`OpenAt` / `Import`) may collide with
+            // a live session; never overwrite it. Allocator-chosen ids
+            // cannot collide (the allocator is seeded past the store
+            // and advanced past every explicit id).
+            if sessions.contains_key(&id) {
+                drop(sessions);
+                self.registry.resident.fetch_sub(1, Ordering::Relaxed);
+                return Err(Error::invalid_request(format!(
+                    "session {id} already exists"
+                )));
+            }
+            sessions.insert(id, Arc::clone(&sess_entry));
+        }
+        // Index the new resident for O(log n) victim selection.
+        // This three-step publish (gauge above, map insert,
+        // index insert) intentionally bypasses `note_resident`:
+        // the flag is already true, and the id is unreachable
+        // to other verbs until the reply below — keep it that
+        // way if these steps are ever reordered, or the
+        // gauge/flag/index-move-together invariant of the
+        // registry helpers stops holding.
+        self.registry.lru.lock().unwrap().insert((
+            sess_entry.touch.load(Ordering::Relaxed),
+            id,
+        ));
+        // Durable open record before the id is revealed to the
+        // client (the entry is registered but unreachable until
+        // the reply); a create failure rolls the open back.
+        if let Err(e) = self.store.create(id, &sess_entry.meta) {
+            self.registry.sessions.write().unwrap().remove(&id);
+            self.registry.note_evicted(id, &sess_entry);
+            return Err(e);
+        }
+        self.metrics.on_session_open();
+        Ok(sess_entry)
+    }
+
     fn stream_verb(&self, verb: StreamVerb, start: Instant) -> Result<StreamReply> {
         match verb {
             StreamVerb::Open { model, options, lag } => {
-                if lag > self.max_stream_lag {
-                    return Err(Error::invalid_request(format!(
-                        "requested lag {lag} exceeds the configured maximum {}",
-                        self.max_stream_lag
-                    )));
-                }
-                // The append cost is O(lag + block), so the block is
-                // capped alongside the lag — otherwise a huge client
-                // block re-opens the degrade-every-append hole the lag
-                // cap closes.
-                let max_block =
-                    self.max_stream_lag.max(crate::engine::DEFAULT_SESSION_BLOCK);
-                if options.block.is_some_and(|b| b > max_block) {
-                    return Err(Error::invalid_request(format!(
-                        "requested block {} exceeds the maximum {max_block}",
-                        options.block.unwrap_or(0)
-                    )));
-                }
-                if options.kind == SessionKind::Bayes && lag > 0 {
-                    return Err(Error::invalid_request(
-                        "bayes sessions are filtering-only: open with lag = 0",
-                    ));
-                }
+                self.check_session_limits(&options, lag)?;
                 let entry = self.entry(&model)?;
                 let session = {
                     let engine =
@@ -874,61 +962,123 @@ impl Coordinator {
                     lag,
                     fingerprint: Some(model_fingerprint(&entry.hmm)),
                 };
-                let sess_entry = Arc::new(SessionEntry {
-                    slot: Mutex::new(SessionSlot::Resident(session)),
-                    hmm: entry.hmm,
-                    meta,
-                    touch: AtomicU64::new(self.registry.tick()),
-                    resident: AtomicBool::new(true),
-                    since_ckpt: AtomicU64::new(0),
-                    ckpt_pending: AtomicBool::new(false),
-                    charged: AtomicUsize::new(0),
-                });
-                // Count the residency *before* the entry is published:
-                // a concurrent eviction scan may spill it the moment it
-                // appears in the map, and its swap-guarded decrement
-                // must never land on a gauge that has not yet been
-                // incremented (usize wrap → permanent eviction churn).
-                self.registry.resident.fetch_add(1, Ordering::Relaxed);
-                {
-                    // DoS backstop, checked atomically with the insert:
-                    // even spilled sessions cost a registry entry + store
-                    // state, so total opens stay bounded (the watermark
-                    // only bounds *residency*).
-                    let mut sessions = self.registry.sessions.write().unwrap();
-                    if sessions.len() >= self.max_open_sessions {
-                        drop(sessions);
-                        self.registry.resident.fetch_sub(1, Ordering::Relaxed);
-                        return Err(Error::invalid_request(format!(
-                            "open session limit {} reached",
-                            self.max_open_sessions
-                        )));
-                    }
-                    sessions.insert(id, Arc::clone(&sess_entry));
-                }
-                // Index the new resident for O(log n) victim selection.
-                // This three-step publish (gauge above, map insert,
-                // index insert) intentionally bypasses `note_resident`:
-                // the flag is already true, and the id is unreachable
-                // to other verbs until the reply below — keep it that
-                // way if these steps are ever reordered, or the
-                // gauge/flag/index-move-together invariant of the
-                // registry helpers stops holding.
-                self.registry.lru.lock().unwrap().insert((
-                    sess_entry.touch.load(Ordering::Relaxed),
-                    id,
-                ));
-                // Durable open record before the id is revealed to the
-                // client (the entry is registered but unreachable until
-                // the reply); a create failure rolls the open back.
-                if let Err(e) = self.store.create(id, &sess_entry.meta) {
-                    self.registry.sessions.write().unwrap().remove(&id);
-                    self.registry.note_evicted(id, &sess_entry);
-                    return Err(e);
-                }
-                self.metrics.on_session_open();
+                self.publish_session(id, entry.hmm, meta, session)?;
                 self.kick_housekeeping(Some(id));
                 Ok(StreamReply::Opened { session: id })
+            }
+            StreamVerb::OpenAt { session: id, model, options, lag } => {
+                self.check_session_limits(&options, lag)?;
+                let entry = self.entry(&model)?;
+                let session = {
+                    let engine =
+                        entry.engine.lock().expect("engine mutex poisoned");
+                    engine.open_session(options)
+                };
+                // Advance the allocator past the explicit id so a later
+                // local `Open` can never collide with (and overwrite
+                // the durable log of) a router-placed session.
+                self.next_session.fetch_max(id, Ordering::Relaxed);
+                let meta = SessionMeta {
+                    model,
+                    options,
+                    lag,
+                    fingerprint: Some(model_fingerprint(&entry.hmm)),
+                };
+                self.publish_session(id, entry.hmm, meta, session)?;
+                self.kick_housekeeping(Some(id));
+                Ok(StreamReply::Opened { session: id })
+            }
+            StreamVerb::Export { session } => {
+                let entry = self.session_entry(session)?;
+                let reply = (|| -> Result<StreamReply> {
+                    let mut slot =
+                        entry.slot.lock().expect("session mutex poisoned");
+                    self.registry.make_resident(session, &entry, &mut slot)?;
+                    let SessionSlot::Resident(s) = &mut *slot else {
+                        unreachable!("make_resident")
+                    };
+                    // The snapshot alone re-creates the session
+                    // bit-identically (the spill/restore contract), so
+                    // no append tail needs to travel with it.
+                    Ok(StreamReply::Exported {
+                        session,
+                        len: s.len(),
+                        meta: entry.meta.clone(),
+                        snapshot: s.snapshot(),
+                    })
+                })();
+                self.registry.touch(session, &entry);
+                // The export may have just restored the session —
+                // re-impose the watermark either way.
+                self.kick_housekeeping(Some(session));
+                reply
+            }
+            StreamVerb::Import { session: id, meta, snapshot } => {
+                self.check_session_limits(&meta.options, meta.lag)?;
+                let entry = self.entry(&meta.model)?;
+                // Refuse to bind an exported snapshot to a *different*
+                // model registered under the same name — resume trusts
+                // the snapshot's summaries (same rule as recovery).
+                if let Some(fp) = meta.fingerprint {
+                    if fp != model_fingerprint(&entry.hmm) {
+                        return Err(Error::invalid_request(format!(
+                            "import: model '{}' fingerprint mismatch",
+                            meta.model
+                        )));
+                    }
+                }
+                let engine = Engine::builder(Arc::clone(&entry.hmm))
+                    .scan_options(self.scan)
+                    .build();
+                let session = engine.resume_session(&snapshot)?;
+                let len = session.len();
+                self.next_session.fetch_max(id, Ordering::Relaxed);
+                let sess_entry =
+                    self.publish_session(id, entry.hmm, meta, session)?;
+                // Persist the imported state immediately: the open
+                // record alone would make a crash-recovered session
+                // come back *empty*. A compact failure rolls the import
+                // back (the source still holds the session).
+                if let Err(e) =
+                    self.store.compact(id, &sess_entry.meta, &snapshot)
+                {
+                    if self
+                        .registry
+                        .sessions
+                        .write()
+                        .unwrap()
+                        .remove(&id)
+                        .is_some()
+                    {
+                        self.registry.note_evicted(id, &sess_entry);
+                        let _ = self.store.remove(id);
+                        self.metrics.on_session_close();
+                    }
+                    return Err(e);
+                }
+                self.kick_housekeeping(Some(id));
+                Ok(StreamReply::Imported { session: id, len })
+            }
+            StreamVerb::Release { session } => {
+                let entry = self.session_entry(session)?;
+                // Remove under the slot lock so a concurrent eviction
+                // scan cannot spill the session back into the store
+                // mid-removal (same discipline as Close).
+                let slot = entry.slot.lock().expect("session mutex poisoned");
+                if self
+                    .registry
+                    .sessions
+                    .write()
+                    .unwrap()
+                    .remove(&session)
+                    .is_some()
+                {
+                    self.registry.note_evicted(session, &entry);
+                    let _ = self.store.remove(session);
+                    self.metrics.on_session_close();
+                }
+                drop(slot);
+                Ok(StreamReply::Released { session })
             }
             StreamVerb::Append { session, ys } => {
                 let entry = self.session_entry(session)?;

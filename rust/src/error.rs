@@ -38,6 +38,18 @@ pub enum Error {
     /// CLI usage error.
     Usage(String),
 
+    /// Transient overload: the server (or a cluster router) refused the
+    /// request but expects to accept it again after roughly
+    /// `retry_after_ms` milliseconds. Carried over the wire as a
+    /// dedicated reject frame so clients can back off instead of
+    /// treating the refusal as fatal.
+    Busy {
+        /// Suggested client back-off before retrying, in milliseconds.
+        retry_after_ms: u64,
+        /// What was saturated (connection limit, drain, worker pool…).
+        msg: String,
+    },
+
     /// IO failure (transparent).
     Io(std::io::Error),
 }
@@ -54,6 +66,9 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla runtime: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator: {m}"),
             Error::Usage(m) => write!(f, "usage: {m}"),
+            Error::Busy { retry_after_ms, msg } => {
+                write!(f, "busy: {msg} (retry in {retry_after_ms} ms)")
+            }
             Error::Io(e) => write!(f, "{e}"),
         }
     }
@@ -99,6 +114,15 @@ impl Error {
     pub fn usage(msg: impl fmt::Display) -> Self {
         Error::Usage(msg.to_string())
     }
+    /// An [`Error::Busy`] with a retry hint in milliseconds.
+    pub fn busy(retry_after_ms: u64, msg: impl fmt::Display) -> Self {
+        Error::Busy { retry_after_ms, msg: msg.to_string() }
+    }
+    /// Whether this error is a transient-overload rejection a client
+    /// may retry after the carried back-off hint.
+    pub fn is_busy(&self) -> bool {
+        matches!(self, Error::Busy { .. })
+    }
 }
 
 #[cfg(test)]
@@ -115,6 +139,10 @@ mod tests {
             Error::Json { offset: 3, msg: "bad".into() }.to_string(),
             "json error at byte 3: bad"
         );
+        let busy = Error::busy(250, "server draining");
+        assert_eq!(busy.to_string(), "busy: server draining (retry in 250 ms)");
+        assert!(busy.is_busy());
+        assert!(!Error::usage("x").is_busy());
     }
 
     #[test]

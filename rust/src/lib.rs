@@ -20,7 +20,9 @@
 //!   that serves inference requests over the AOT-compiled XLA artifacts
 //!   produced by `python/compile/aot.py`, and [`net`] (the L4 network
 //!   layer: TCP front-end, versioned wire protocol, and client — what
-//!   turns the coordinator into a deployable server).
+//!   turns the coordinator into a deployable server), and [`cluster`]
+//!   (the L5 distributed tier: consistent-hash session router, worker
+//!   pool with health-driven failover, and live session migration).
 //! * **Substrates** — [`rng`], [`jsonx`], [`exec`], [`cli`], [`benchx`],
 //!   [`proptestx`], [`report`], [`config`], [`simulator`], [`xla_stub`]:
 //!   in-tree replacements for crates unavailable in the offline build
@@ -34,6 +36,7 @@
 pub mod benchx;
 pub mod blockwise;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod elements;

@@ -6,6 +6,10 @@
 //!              synthetic in-process load)
 //!   bench-net  drive a remote server: verify bit-identity vs a local
 //!              coordinator, then measure wire throughput/latency
+//!   route      front a worker pool with the consistent-hash session
+//!              router (the distributed serving tier, DESIGN.md §7)
+//!   cluster-demo  three-worker loopback cluster end to end: placement,
+//!              failover-by-drain, live migration, bit-identity checks
 //!   figures    regenerate the paper's figures/tables into results/
 //!   simulate   query the work-span GPU simulator
 //!   train      Baum–Welch parameter estimation (§V-C) on GE data
@@ -15,6 +19,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use hmm_scan::cli::{flag, opt, Cli};
+use hmm_scan::cluster::{ClusterConfig, ClusterRouter};
 use hmm_scan::config::RunConfig;
 use hmm_scan::coordinator::{
     Algo, Coordinator, CoordinatorConfig, DecodeRequest, DecodeResult,
@@ -89,6 +94,29 @@ fn cli() -> Cli {
             vec![],
         )
         .command(
+            "route",
+            "front a worker pool with the consistent-hash session router",
+            vec![
+                opt("listen", "router TCP listen address", "127.0.0.1:0"),
+                opt("workers", "comma-separated worker addresses (host:port,...)", ""),
+                opt("duration", "seconds to route before draining (0 = forever)", "0"),
+                opt("max-conns", "client connection limit", "64"),
+                opt("max-inflight", "pipelined requests per client connection", "32"),
+                opt("pool", "decode connections per worker", "4"),
+            ],
+            vec![],
+        )
+        .command(
+            "cluster-demo",
+            "three-worker loopback cluster: placement, drain, migration",
+            vec![
+                opt("t", "observations per verification sequence", "240"),
+                opt("sessions", "streaming sessions to place", "4"),
+                opt("config", "JSON config file path", ""),
+            ],
+            vec![],
+        )
+        .command(
             "figures",
             "regenerate the paper's figures and tables",
             vec![
@@ -138,6 +166,8 @@ fn run(args: &[String]) -> Result<()> {
         "decode" => cmd_decode(&parsed),
         "serve" => cmd_serve(&parsed),
         "bench-net" => cmd_bench_net(&parsed),
+        "route" => cmd_route(&parsed),
+        "cluster-demo" => cmd_cluster_demo(&parsed),
         "figures" => cmd_figures(&parsed),
         "simulate" => cmd_simulate(&parsed),
         "train" => cmd_train(&parsed),
@@ -245,6 +275,13 @@ fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
             }
         }
         let graceful = server.shutdown(Duration::from_secs(10));
+        // Shutdown ordering: the drain above stops new work, but spill /
+        // sync jobs queued by the served connections may still be in
+        // flight. Quiesce housekeeping *before* the store closes (when
+        // `coord` drops at the end of this function) so every queued
+        // append hits disk — otherwise a --duration run could lose the
+        // tail of its durable log.
+        coord.quiesce_housekeeping();
         let snap = coord.metrics().snapshot();
         println!(
             "drained ({}): {} conns served ({} refused), {} decode reqs",
@@ -465,6 +502,199 @@ fn cmd_bench_net(p: &hmm_scan::cli::Parsed) -> Result<()> {
     Ok(())
 }
 
+/// `route`: front a pool of already-running workers with the cluster
+/// router. Speaks the same wire protocol as `serve`, so `bench-net
+/// --connect <router>` and any `NetClient` work unchanged against it.
+fn cmd_route(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let workers: Vec<String> = match p.get("workers") {
+        Some(list) if !list.is_empty() => list
+            .split(',')
+            .map(|a| a.trim().to_string())
+            .filter(|a| !a.is_empty())
+            .collect(),
+        _ => return Err(Error::usage("route requires --workers A,B,C")),
+    };
+    let mut cluster_config = ClusterConfig::new(workers);
+    cluster_config.decode_pool = p.get_usize("pool")?.max(1);
+    let router = Arc::new(ClusterRouter::new(cluster_config)?);
+    let net_config = NetServerConfig {
+        max_connections: p.get_usize("max-conns")?,
+        max_inflight_per_conn: p.get_usize("max-inflight")?,
+        ..NetServerConfig::default()
+    };
+    let listen = p.get("listen").unwrap_or("127.0.0.1:0");
+    let server = NetServer::start(Arc::clone(&router), listen, net_config)?;
+    // The exact line CI's cluster smoke job parses for the bound port.
+    println!("listening on {}", server.local_addr());
+    for (addr, state) in router.worker_states() {
+        println!("worker {addr}: {state}");
+    }
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+
+    let duration = p.get_usize("duration")?;
+    let started = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(500));
+        if duration > 0
+            && started.elapsed() >= Duration::from_secs(duration as u64)
+        {
+            break;
+        }
+    }
+    let graceful = server.shutdown(Duration::from_secs(10));
+    let snap = router.metrics().snapshot();
+    println!(
+        "drained ({}): {} conns served ({} refused), {} sessions placed, \
+         {} migrated, {} decode failovers, {} rejects",
+        if graceful { "graceful" } else { "forced" },
+        snap.conns_opened,
+        snap.conns_refused,
+        snap.sessions_placed,
+        snap.sessions_migrated,
+        snap.decode_failovers,
+        snap.rejects_sent,
+    );
+    for link in &snap.worker_links {
+        println!(
+            "  worker {:<21} n={:<7} p50 {}µs  p99 {}µs  max {}µs",
+            link.worker, link.count, link.p50_us, link.p99_us, link.max_us
+        );
+    }
+    Ok(())
+}
+
+/// `cluster-demo`: the whole distributed tier on loopback, verified.
+/// Spins up three native workers, fronts them with a router, and drives
+/// a client through decode fan-out, session placement, an
+/// administrative drain (live-migrating every resident session), and
+/// more traffic after the drain — checking every response bit-identical
+/// to a local control coordinator. Any divergence is a nonzero exit.
+fn cmd_cluster_demo(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let config = load_config(p)?;
+    let t = p.get_usize("t")?.max(8);
+    let n_sessions = p.get_usize("sessions")?.max(1);
+    let hmm = gilbert_elliott(config.ge);
+
+    // Three independent workers, each a full serve stack on loopback.
+    let mut workers = Vec::new();
+    for _ in 0..3 {
+        let coord = Arc::new(Coordinator::new(CoordinatorConfig::native_only())?);
+        coord.register_model("ge", hmm.clone());
+        let server = NetServer::start(
+            Arc::clone(&coord),
+            "127.0.0.1:0",
+            NetServerConfig::default(),
+        )?;
+        let addr = server.local_addr().to_string();
+        println!("worker up at {addr}");
+        workers.push((coord, server, addr));
+    }
+    let addrs: Vec<String> = workers.iter().map(|w| w.2.clone()).collect();
+    let router = Arc::new(ClusterRouter::new(ClusterConfig::new(addrs))?);
+    let front = NetServer::start(
+        Arc::clone(&router),
+        "127.0.0.1:0",
+        NetServerConfig::default(),
+    )?;
+    println!("router up at {}", front.local_addr());
+
+    let control = Coordinator::new(CoordinatorConfig::native_only())?;
+    control.register_model("ge", hmm.clone());
+    let mut client = NetClient::connect(front.local_addr().to_string())?;
+    client.ping()?;
+
+    // Decode fan-out: every algorithm, bit-identical to the control.
+    let mut rng = Xoshiro256StarStar::seed_from_u64(config.seed);
+    let ys = sample(&hmm, t, &mut rng).observations;
+    for algo in Algo::ALL {
+        let req = DecodeRequest::new(1, "ge", ys.clone(), algo)
+            .with_mode(ExecMode::Native);
+        let remote = client.decode(&req)?;
+        let want = control.decode(req)?;
+        let ok = match (&remote.result, &want.result) {
+            (DecodeResult::Posterior(a), DecodeResult::Posterior(b)) => a == b,
+            (DecodeResult::Map(a), DecodeResult::Map(b)) => a == b,
+            _ => false,
+        };
+        if !ok {
+            return Err(Error::coordinator(format!(
+                "cluster-demo: routed {algo:?} decode diverged from control"
+            )));
+        }
+    }
+    println!("decode fan-out OK: ×{} bit-identical", Algo::ALL.len());
+
+    // Place sessions and feed the first half of the stream.
+    let mut sessions = Vec::new();
+    for _ in 0..n_sessions {
+        let sid = client.open("ge", SessionOptions::default(), 8)?;
+        let opened = control.stream(StreamRequest::open(0, "ge", 8))?;
+        let StreamReply::Opened { session: ctl } = opened.reply else {
+            return Err(Error::coordinator("control open failed"));
+        };
+        sessions.push((sid, ctl));
+    }
+    let (head, tail) = ys.split_at(ys.len() / 2);
+    for &(sid, ctl) in &sessions {
+        client.append(sid, head)?;
+        control.stream(StreamRequest::append(0, ctl, head.to_vec()))?;
+    }
+    for &(sid, _) in &sessions {
+        let home = router.session_home(sid).ok_or_else(|| {
+            Error::coordinator("placed session has no route")
+        })?;
+        println!("session {sid} placed on {home}");
+    }
+
+    // Drain the worker serving the first session: every resident
+    // session live-migrates (export → import → verified stat → cutover).
+    let victim = router
+        .session_home(sessions[0].0)
+        .ok_or_else(|| Error::coordinator("no home for first session"))?;
+    let moved = router.drain_worker(&victim)?;
+    println!("drained {victim}: {moved} sessions live-migrated");
+
+    // Keep serving after the drain; finish and verify bit-identity.
+    for &(sid, ctl) in &sessions {
+        client.append(sid, tail)?;
+        control.stream(StreamRequest::append(0, ctl, tail.to_vec()))?;
+        let routed = client.close(sid)?;
+        let closed = control.stream(StreamRequest::close(0, ctl))?;
+        let StreamReply::Closed { posterior: want, .. } = closed.reply else {
+            return Err(Error::coordinator("control close failed"));
+        };
+        if routed != want {
+            return Err(Error::coordinator(format!(
+                "cluster-demo: migrated session {sid} diverged from control"
+            )));
+        }
+    }
+    println!(
+        "post-drain serving OK: {n_sessions} migrated sessions finished \
+         bit-identical to control"
+    );
+
+    let snap = router.metrics().snapshot();
+    println!(
+        "router: {} placed, {} migrated, {} failovers",
+        snap.sessions_placed, snap.sessions_migrated, snap.decode_failovers
+    );
+    for link in &snap.worker_links {
+        println!(
+            "  worker {:<21} n={:<7} p50 {}µs  p99 {}µs  max {}µs",
+            link.worker, link.count, link.p50_us, link.p99_us, link.max_us
+        );
+    }
+    drop(client);
+    front.shutdown(Duration::from_secs(5));
+    drop(router);
+    for (_, server, _) in workers {
+        server.shutdown(Duration::from_secs(5));
+    }
+    Ok(())
+}
+
 fn cmd_figures(p: &hmm_scan::cli::Parsed) -> Result<()> {
     let mut config = load_config(p)?;
     if let Some(out) = p.get("out") {
@@ -609,6 +839,12 @@ mod tests {
         assert!(run(&argv("decode --algo nope")).is_err());
         assert!(run(&argv("decode --mode nope")).is_err());
         assert!(run(&argv("bench-net")).is_err(), "--connect is required");
+        assert!(run(&argv("route")).is_err(), "--workers is required");
+    }
+
+    #[test]
+    fn cluster_demo_smoke() {
+        run(&argv("cluster-demo --t 60 --sessions 2")).unwrap();
     }
 
     #[test]

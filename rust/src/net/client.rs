@@ -1,8 +1,10 @@
 //! Blocking Rust client for the TCP serving layer.
 //!
 //! [`NetClient`] speaks the `net::wire` protocol over one persistent
-//! connection: `decode`, and the streaming verbs `open` / `append` /
-//! `stat` / `close`. Sessions are **coordinator-scoped, not
+//! connection: `decode`, the streaming verbs `open` / `append` /
+//! `stat` / `close`, and the cluster-tier verbs `open_at` / `export` /
+//! `import` / `release` the session router drives placement and live
+//! migration with. Sessions are **coordinator-scoped, not
 //! connection-scoped** — a session id stays valid across reconnects —
 //! so the client auto-reconnects on connection failure and re-`Stat`s
 //! every session it has opened to re-validate them against the server
@@ -36,6 +38,7 @@ use crate::engine::SessionOptions;
 use crate::error::{Error, Result};
 use crate::inference::Posterior;
 use crate::jsonx::Json;
+use crate::store::SessionMeta;
 
 use super::wire::{self, Frame, FrameKind};
 
@@ -121,8 +124,9 @@ impl NetClient {
     }
 
     /// One blocking request/response exchange. Error frames become
-    /// typed errors; a non-matching response id is a protocol error
-    /// (the blocking API keeps exactly one request outstanding).
+    /// typed errors, reject frames become retryable [`Error::Busy`]
+    /// values; a non-matching response id is a protocol error (the
+    /// blocking API keeps exactly one request outstanding).
     fn roundtrip(&mut self, kind: FrameKind, payload: &Json) -> Result<Frame> {
         let id = self.next_id();
         let max = self.max_frame_payload;
@@ -132,6 +136,11 @@ impl NetClient {
         let frame = wire::read_frame(stream, max)?;
         if frame.kind == FrameKind::Error {
             return Err(wire::error_from_json(&frame.payload));
+        }
+        // A reject (id 0 when refused at admission, the request id when
+        // refused per-request) carries a back-off hint, not a result.
+        if frame.kind == FrameKind::Reject {
+            return Err(wire::busy_from_reject(&frame.payload));
         }
         if frame.id != id {
             return Err(Error::coordinator(format!(
@@ -229,6 +238,88 @@ impl NetClient {
             }
             other => Err(Error::coordinator(format!(
                 "stream open: unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Open a streaming session under a **caller-chosen** id — the
+    /// cluster router's placement verb, which lets the router keep one
+    /// id space across all workers. Errors if the id is already in use
+    /// on the server.
+    pub fn open_at(
+        &mut self,
+        session: u64,
+        model: &str,
+        options: SessionOptions,
+        lag: usize,
+    ) -> Result<u64> {
+        let req = StreamRequest::open_at(0, session, model, options, lag);
+        let resp = self.stream_call(&req)?;
+        match resp.reply {
+            StreamReply::Opened { session } => {
+                self.sessions.insert(session, 0);
+                Ok(session)
+            }
+            other => Err(Error::coordinator(format!(
+                "stream open_at: unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Export a session's compacted migration image: its metadata, a
+    /// self-contained engine snapshot, and the observation count the
+    /// snapshot covers. The session stays open and serving on this
+    /// server — export is a read.
+    pub fn export(
+        &mut self,
+        session: u64,
+    ) -> Result<(SessionMeta, Json, usize)> {
+        let resp = self.stream_call(&StreamRequest::export(0, session))?;
+        match resp.reply {
+            StreamReply::Exported { meta, snapshot, len, .. } => {
+                Ok((meta, snapshot, len))
+            }
+            other => Err(Error::coordinator(format!(
+                "stream export: unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Restore an exported migration image under the same session id on
+    /// this server (the migration target's half of the handoff).
+    /// Returns the restored observation count — the router compares it
+    /// against the source's before cutting traffic over.
+    pub fn import(
+        &mut self,
+        session: u64,
+        meta: SessionMeta,
+        snapshot: Json,
+    ) -> Result<usize> {
+        let req = StreamRequest::import(0, session, meta, snapshot);
+        let resp = self.stream_call(&req)?;
+        match resp.reply {
+            StreamReply::Imported { len, .. } => {
+                self.sessions.insert(session, len);
+                Ok(len)
+            }
+            other => Err(Error::coordinator(format!(
+                "stream import: unexpected reply {other:?}"
+            ))),
+        }
+    }
+
+    /// Drop a session and its durable record **without** computing a
+    /// final posterior — the migration source's cleanup once the target
+    /// has verified its copy.
+    pub fn release(&mut self, session: u64) -> Result<()> {
+        let resp = self.stream_call(&StreamRequest::release(0, session))?;
+        match resp.reply {
+            StreamReply::Released { .. } => {
+                self.sessions.remove(&session);
+                Ok(())
+            }
+            other => Err(Error::coordinator(format!(
+                "stream release: unexpected reply {other:?}"
             ))),
         }
     }
@@ -411,6 +502,9 @@ impl NetClient {
             FrameKind::Error => {
                 Ok((frame.id, Err(wire::error_from_json(&frame.payload))))
             }
+            FrameKind::Reject => {
+                Ok((frame.id, Err(wire::busy_from_reject(&frame.payload))))
+            }
             other => Err(Error::coordinator(format!(
                 "wire: unexpected {other:?} frame in a decode pipeline"
             ))),
@@ -426,4 +520,136 @@ fn parse_stream_response(frame: Frame) -> Result<StreamResponse> {
         )));
     }
     wire::stream_response_from_json(frame.id, &frame.payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, CoordinatorConfig};
+    use crate::hmm::{gilbert_elliott, GeParams};
+    use crate::net::{NetServer, NetServerConfig};
+    use std::net::Shutdown;
+    use std::sync::Arc;
+
+    fn native_coord() -> Arc<Coordinator> {
+        let c = Coordinator::new(CoordinatorConfig::native_only()).unwrap();
+        c.register_model("ge", gilbert_elliott(GeParams::default()));
+        Arc::new(c)
+    }
+
+    fn server_config() -> NetServerConfig {
+        NetServerConfig {
+            max_connections: 8,
+            read_timeout: Duration::from_millis(50),
+            ..NetServerConfig::default()
+        }
+    }
+
+    /// Sever the client's TCP connection out from under it, simulating
+    /// a connection loss the client only discovers on its next verb.
+    fn sever(client: &NetClient) {
+        let s = client.stream.as_ref().expect("client is connected");
+        let _ = s.shutdown(Shutdown::Both);
+    }
+
+    /// An append racing a server drain: when the reconnect is refused
+    /// (typed reject), the append surfaces a retryable [`Error::Busy`]
+    /// and the server-side session is untouched — never a double-apply,
+    /// never a silent loss.
+    #[test]
+    fn append_racing_drain_surfaces_retryable_busy() {
+        let coord = native_coord();
+        let server =
+            NetServer::start(Arc::clone(&coord), "127.0.0.1:0", server_config())
+                .unwrap();
+        let mut client =
+            NetClient::connect(server.local_addr().to_string()).unwrap();
+        let sid = client.open("ge", SessionOptions::default(), 0).unwrap();
+        client.append(sid, &[0, 1, 1]).unwrap();
+
+        server.drain();
+        sever(&client);
+        let err = client
+            .append(sid, &[1, 0])
+            .expect_err("append through a refused reconnect succeeded");
+        assert!(err.is_busy(), "expected a retryable Busy, got: {err}");
+        // The chunk never reached the server: its length is unchanged,
+        // so a later retry (once capacity returns) re-sends safely.
+        let stat = coord
+            .stream(StreamRequest::stat(0, sid))
+            .unwrap();
+        let StreamReply::Stats { len, .. } = stat.reply else {
+            panic!("expected Stats")
+        };
+        assert_eq!(len, 3, "draining server must not have applied the chunk");
+        server.shutdown(Duration::from_secs(5));
+    }
+
+    /// The append-retry ledger across a reconnect, both ambiguous
+    /// outcomes: a chunk that never applied is re-sent exactly once; a
+    /// chunk that applied but whose ack was lost is **not** re-applied.
+    /// Either way the session converges to the same observations a
+    /// never-interrupted control session holds.
+    #[test]
+    fn reconnect_ledger_never_double_applies() {
+        let coord = native_coord();
+        let server =
+            NetServer::start(Arc::clone(&coord), "127.0.0.1:0", server_config())
+                .unwrap();
+        let mut client =
+            NetClient::connect(server.local_addr().to_string()).unwrap();
+        let sid = client.open("ge", SessionOptions::default(), 0).unwrap();
+        client.append(sid, &[0, 1, 1, 0]).unwrap();
+
+        // Case 1: the connection dies before the chunk reaches the
+        // server — after reconnect the ledger sees the length unchanged
+        // and re-sends exactly once.
+        sever(&client);
+        let reply = client.append(sid, &[1, 1]).unwrap();
+        let StreamReply::Appended { len, .. } = reply else {
+            panic!("expected Appended")
+        };
+        assert_eq!(len, 6);
+
+        // Case 2: the chunk applied but the ack was lost. Stage it by
+        // severing the socket, then applying the same chunk server-side
+        // (as the in-flight append would have): the reconnect ledger
+        // sees length == acked + chunk and must poll, not re-append.
+        sever(&client);
+        let chunk = vec![0u32, 0, 1];
+        coord
+            .stream(StreamRequest::append(0, sid, chunk.clone()))
+            .unwrap();
+        let reply = client.append(sid, &chunk).unwrap();
+        let StreamReply::Appended { len, .. } = reply else {
+            panic!("expected Appended")
+        };
+        assert_eq!(len, 9, "ack-lost chunk was applied twice");
+
+        // The posterior is bit-identical to a control session that saw
+        // every chunk exactly once with no interruptions.
+        let opened = coord.stream(StreamRequest::open(0, "ge", 0)).unwrap();
+        let StreamReply::Opened { session: ctl } = opened.reply else {
+            panic!("expected Opened")
+        };
+        coord
+            .stream(StreamRequest::append(
+                0,
+                ctl,
+                vec![0, 1, 1, 0, 1, 1, 0, 0, 1],
+            ))
+            .unwrap();
+        let remote = client.close(sid).unwrap();
+        let closed = coord.stream(StreamRequest::close(0, ctl)).unwrap();
+        let StreamReply::Closed { posterior: control, .. } = closed.reply
+        else {
+            panic!("expected Closed")
+        };
+        assert_eq!(
+            remote, control,
+            "interrupted session diverged from the uninterrupted control"
+        );
+        drop(client);
+        server.shutdown(Duration::from_secs(5));
+    }
 }

@@ -13,8 +13,10 @@
 //!   `docs/WIRE_FORMAT.md`.
 //! * [`server`] — [`NetServer`]: accept loop, per-connection
 //!   reader/writer, decode execution on a shared `exec::ThreadPool`,
-//!   `max_connections` / `max_inflight_per_conn` limits, drain +
-//!   graceful shutdown.
+//!   `max_connections` / `max_inflight_per_conn` limits with typed
+//!   reject-with-retry-after admission control, drain + graceful
+//!   shutdown. Fronts any [`WireService`] — a local coordinator or the
+//!   cluster tier's router ([`crate::cluster`]).
 //! * [`client`] — [`NetClient`]: blocking verbs plus a pipelined decode
 //!   half for benches; auto-reconnect with per-session re-`Stat`.
 //!
@@ -30,5 +32,5 @@ pub mod server;
 pub mod wire;
 
 pub use client::NetClient;
-pub use server::{NetServer, NetServerConfig};
+pub use server::{NetServer, NetServerConfig, WireService};
 pub use wire::{Frame, FrameKind, WIRE_VERSION};

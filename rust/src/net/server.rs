@@ -1,5 +1,6 @@
 //! The TCP front-end: persistent connections, pipelined requests,
-//! backpressure, and graceful drain over a [`Coordinator`].
+//! backpressure, and graceful drain over any [`WireService`] — a local
+//! [`Coordinator`] or the cluster tier's router.
 //!
 //! ## Architecture
 //!
@@ -27,8 +28,9 @@
 //!   stream semantics match a local `Coordinator::stream` call sequence
 //!   while decodes overlap freely around them.
 //! * **Backpressure.** `max_connections` bounds accepted connections
-//!   (beyond it the accept loop replies with a refusal error frame and
-//!   closes); `max_inflight_per_conn` bounds dispatched-but-unanswered
+//!   (beyond it the accept loop replies with a typed reject frame
+//!   carrying a retry-after hint, and closes); `max_inflight_per_conn`
+//!   bounds dispatched-but-unanswered
 //!   requests per connection — the reader stops reading until a slot
 //!   frees, which backpressures the client through TCP. Read and write
 //!   timeouts bound how long a stalled peer can pin a worker mid-frame.
@@ -48,23 +50,65 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{
+    Coordinator, DecodeRequest, DecodeResponse, Metrics, StreamRequest,
+    StreamResponse,
+};
 use crate::error::{Error, Result};
 use crate::exec::ThreadPool;
 use crate::jsonx::Json;
 
 use super::wire::{self, Frame, FrameKind};
 
+/// The request-serving surface a [`NetServer`] fronts: anything that
+/// can answer decode and streaming requests and owns a [`Metrics`]
+/// registry for the connection and wire counters.
+///
+/// Implemented by [`Coordinator`] (a single-process worker) and by
+/// [`ClusterRouter`](crate::cluster::ClusterRouter) (the distributed
+/// tier's session router), so the identical TCP front-end, wire
+/// protocol, drain state machine, and client code serve both.
+pub trait WireService: Send + Sync {
+    /// Answer one decode request.
+    fn decode(&self, req: DecodeRequest) -> Result<DecodeResponse>;
+    /// Answer one streaming verb (open / append / stat / close and the
+    /// cluster migration verbs).
+    fn stream(&self, req: StreamRequest) -> Result<StreamResponse>;
+    /// The metrics registry wire-serving counters are recorded in.
+    fn metrics(&self) -> &Metrics;
+}
+
+impl WireService for Coordinator {
+    fn decode(&self, req: DecodeRequest) -> Result<DecodeResponse> {
+        Coordinator::decode(self, req)
+    }
+    fn stream(&self, req: StreamRequest) -> Result<StreamResponse> {
+        Coordinator::stream(self, req)
+    }
+    fn metrics(&self) -> &Metrics {
+        Coordinator::metrics(self)
+    }
+}
+
 /// Server lifecycle states (the drain state machine, DESIGN.md §6).
 const RUNNING: u8 = 0;
 const DRAINING: u8 = 1;
 const CLOSED: u8 = 2;
 
+/// Retry-after hint on a drain refusal: the peer should look for
+/// another server (a router fails over immediately; a bare client
+/// backs off this long before reconnecting).
+const DRAIN_RETRY_MS: u64 = 250;
+/// Retry-after hint when the connection limit is hit: transient — a
+/// short back-off usually finds a freed slot.
+const BUSY_RETRY_MS: u64 = 50;
+
 /// Tuning knobs for [`NetServer::start`].
 #[derive(Debug, Clone)]
 pub struct NetServerConfig {
     /// Concurrent connections accepted; beyond this the accept loop
-    /// replies with a refusal error frame and closes the socket.
+    /// replies with a reject frame (retry-after hint) and closes the
+    /// socket.
     pub max_connections: usize,
     /// Dispatched-but-unanswered requests one connection may have in
     /// flight. The reader stops pulling frames at the cap, so a client
@@ -127,7 +171,7 @@ impl Inflight {
 
 /// State shared by the accept loop and every connection handler.
 struct Shared {
-    coord: Arc<Coordinator>,
+    service: Arc<dyn WireService>,
     config: NetServerConfig,
     state: AtomicU8,
     /// Active connection count; the condvar wakes drain/shutdown waits.
@@ -148,7 +192,7 @@ impl Shared {
         let mut n = self.conns.lock().unwrap();
         *n = n.saturating_sub(1);
         self.conns_cv.notify_all();
-        self.coord.metrics().on_conn_close();
+        self.service.metrics().on_conn_close();
     }
 }
 
@@ -168,20 +212,21 @@ pub struct NetServer {
 
 impl NetServer {
     /// Bind `listen` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
-    /// start serving `coord` over it. Returns once the listener is
-    /// bound; [`local_addr`](Self::local_addr) reports the actual
-    /// address.
-    pub fn start(
-        coord: Arc<Coordinator>,
+    /// start serving `service` — a [`Coordinator`] or any other
+    /// [`WireService`] — over it. Returns once the listener is bound;
+    /// [`local_addr`](Self::local_addr) reports the actual address.
+    pub fn start<S: WireService + 'static>(
+        service: Arc<S>,
         listen: &str,
         config: NetServerConfig,
     ) -> Result<NetServer> {
+        let service: Arc<dyn WireService> = service;
         let listener = TcpListener::bind(listen)?;
         let local = listener.local_addr()?;
         let conn_pool = Arc::new(ThreadPool::new(config.max_connections.max(1)));
         let work = Arc::new(ThreadPool::new(config.exec_threads.max(1)));
         let shared = Arc::new(Shared {
-            coord,
+            service,
             config,
             state: AtomicU8::new(RUNNING),
             conns: Mutex::new(0),
@@ -218,7 +263,7 @@ impl NetServer {
     }
 
     /// Enter the draining state: new connections are refused with a
-    /// typed error frame; existing connections keep being served until
+    /// typed reject frame; existing connections keep being served until
     /// their clients disconnect — in-flight streaming sessions complete
     /// and their final responses are acked. Idempotent; a no-op after
     /// shutdown begins.
@@ -304,14 +349,21 @@ impl Drop for NetServer {
     }
 }
 
-/// Best-effort refusal: an error frame with id 0, then close.
-fn refuse(mut stream: TcpStream, why: &str, write_timeout: Duration) {
+/// Best-effort refusal: a reject frame with id 0 carrying a
+/// retry-after hint, then close. Clients map it to [`Error::Busy`] and
+/// can back off and retry (a cluster router retries on another worker)
+/// instead of treating the refusal as fatal.
+fn refuse(
+    mut stream: TcpStream,
+    retry_after_ms: u64,
+    why: &str,
+    write_timeout: Duration,
+) {
     let _ = stream.set_write_timeout(Some(write_timeout));
-    let err = Error::coordinator(why);
     let _ = stream.write_all(&wire::encode_frame(
         0,
-        FrameKind::Error,
-        &wire::error_to_json(&err),
+        FrameKind::Reject,
+        &wire::reject_to_json(retry_after_ms, why),
     ));
     let _ = stream.shutdown(Shutdown::Both);
 }
@@ -335,9 +387,14 @@ fn accept_loop(
         match shared.state() {
             CLOSED => break, // the shutdown wake-up connection
             DRAINING => {
-                shared.coord.metrics().on_conn_refused();
-                refuse(stream, "server draining: connection refused",
-                       shared.config.write_timeout);
+                shared.service.metrics().on_conn_refused();
+                shared.service.metrics().on_reject();
+                refuse(
+                    stream,
+                    DRAIN_RETRY_MS,
+                    "server draining: connection refused",
+                    shared.config.write_timeout,
+                );
                 continue;
             }
             _ => {}
@@ -346,9 +403,11 @@ fn accept_loop(
             let mut conns = shared.conns.lock().unwrap();
             if *conns >= shared.config.max_connections.max(1) {
                 drop(conns);
-                shared.coord.metrics().on_conn_refused();
+                shared.service.metrics().on_conn_refused();
+                shared.service.metrics().on_reject();
                 refuse(
                     stream,
+                    BUSY_RETRY_MS,
                     "server busy: connection limit reached",
                     shared.config.write_timeout,
                 );
@@ -360,7 +419,7 @@ fn accept_loop(
         if let Ok(clone) = stream.try_clone() {
             shared.live.lock().unwrap().insert(id, clone);
         }
-        shared.coord.metrics().on_conn_open();
+        shared.service.metrics().on_conn_open();
         let shared2 = Arc::clone(&shared);
         let work2 = Arc::clone(&work);
         conn_pool.submit(move || {
@@ -451,7 +510,7 @@ fn serve_connection(
                 ) {
                     Ok(req) => req,
                     Err(e) => {
-                        shared.coord.metrics().on_failure();
+                        shared.service.metrics().on_failure();
                         let _ = tx.send((
                             frame.id,
                             FrameKind::Error,
@@ -463,20 +522,20 @@ fn serve_connection(
                 // Take an in-flight slot *before* spawning: at the cap
                 // this blocks the reader, which is the backpressure.
                 inflight.acquire(cfg.max_inflight_per_conn);
-                shared.coord.metrics().on_wire_start();
-                let coord = Arc::clone(&shared.coord);
+                shared.service.metrics().on_wire_start();
+                let service = Arc::clone(&shared.service);
                 let job_tx = tx.clone();
                 let job_inflight = Arc::clone(&inflight);
                 work.submit(move || {
                     let t0 = Instant::now();
-                    let (kind, payload) = match coord.decode(req) {
-                        Ok(resp) => (
+                    let outcome = service.decode(req).map(|resp| {
+                        (
                             FrameKind::DecodeResponse,
                             wire::decode_response_to_json(&resp),
-                        ),
-                        Err(e) => (FrameKind::Error, wire::error_to_json(&e)),
-                    };
-                    coord.metrics().on_wire_done("decode", t0.elapsed());
+                        )
+                    });
+                    let (kind, payload) = response_parts(&service, outcome);
+                    service.metrics().on_wire_done("decode", t0.elapsed());
                     let _ = job_tx.send((frame.id, kind, payload));
                     job_inflight.release();
                 });
@@ -487,24 +546,24 @@ fn serve_connection(
                 // sent it. Decodes already dispatched keep completing
                 // concurrently around this.
                 let t0 = Instant::now();
-                shared.coord.metrics().on_wire_start();
+                shared.service.metrics().on_wire_start();
                 let (verb_name, outcome) = match wire::stream_request_from_json(
                     frame.id,
                     &frame.payload,
                 ) {
                     Ok(req) => {
-                        (stream_verb_name(&req), shared.coord.stream(req))
+                        (stream_verb_name(&req), shared.service.stream(req))
                     }
                     Err(e) => ("stream", Err(e)),
                 };
-                let (kind, payload) = match outcome {
-                    Ok(resp) => (
+                let outcome = outcome.map(|resp| {
+                    (
                         FrameKind::StreamResponse,
                         wire::stream_response_to_json(&resp),
-                    ),
-                    Err(e) => (FrameKind::Error, wire::error_to_json(&e)),
-                };
-                shared.coord.metrics().on_wire_done(verb_name, t0.elapsed());
+                    )
+                });
+                let (kind, payload) = response_parts(&shared.service, outcome);
+                shared.service.metrics().on_wire_done(verb_name, t0.elapsed());
                 let _ = tx.send((frame.id, kind, payload));
             }
             // A client must never send response kinds; protocol error.
@@ -526,12 +585,34 @@ fn serve_connection(
     let _ = writer.join();
 }
 
+/// Map a verb outcome to response frame parts: success passes through;
+/// a transient [`Error::Busy`] becomes a reject frame with the carried
+/// retry-after hint (and is counted); any other error becomes a typed
+/// error frame.
+fn response_parts(
+    service: &Arc<dyn WireService>,
+    outcome: Result<(FrameKind, Json)>,
+) -> (FrameKind, Json) {
+    match outcome {
+        Ok(parts) => parts,
+        Err(Error::Busy { retry_after_ms, msg }) => {
+            service.metrics().on_reject();
+            (FrameKind::Reject, wire::reject_to_json(retry_after_ms, &msg))
+        }
+        Err(e) => (FrameKind::Error, wire::error_to_json(&e)),
+    }
+}
+
 fn stream_verb_name(req: &crate::coordinator::StreamRequest) -> &'static str {
     match req.verb {
         crate::coordinator::StreamVerb::Open { .. } => "open",
+        crate::coordinator::StreamVerb::OpenAt { .. } => "open_at",
         crate::coordinator::StreamVerb::Append { .. } => "append",
         crate::coordinator::StreamVerb::Stat { .. } => "stat",
         crate::coordinator::StreamVerb::Close { .. } => "close",
+        crate::coordinator::StreamVerb::Export { .. } => "export",
+        crate::coordinator::StreamVerb::Import { .. } => "import",
+        crate::coordinator::StreamVerb::Release { .. } => "release",
     }
 }
 
@@ -772,6 +853,41 @@ mod tests {
         let snap = coord.metrics().snapshot();
         assert!(snap.conns_refused >= 1);
         assert_eq!(snap.open_conns, 0);
+    }
+
+    /// Admission control is a typed reject frame, not a silent TCP
+    /// refusal: over the connection cap the client observes a retryable
+    /// [`Error::Busy`] carrying a back-off hint, and the reject is
+    /// counted in the metrics registry.
+    #[test]
+    fn connection_cap_rejects_with_retry_hint() {
+        let coord = native_coord();
+        let server = NetServer::start(
+            Arc::clone(&coord),
+            "127.0.0.1:0",
+            NetServerConfig { max_connections: 1, ..test_config() },
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+        let mut first = NetClient::connect(&addr).unwrap();
+        // The ping response proves the accept loop has counted this
+        // connection, so the next connect deterministically hits the cap.
+        first.ping().unwrap();
+        let err =
+            NetClient::connect(&addr).expect_err("over-cap connect succeeded");
+        match err {
+            Error::Busy { retry_after_ms, .. } => {
+                assert!(retry_after_ms > 0, "reject must carry a retry hint")
+            }
+            other => panic!("expected Busy, got: {other}"),
+        }
+        let snap = coord.metrics().snapshot();
+        assert!(snap.rejects_sent >= 1);
+        assert!(snap.conns_refused >= 1);
+        // The admitted client keeps being served.
+        first.ping().unwrap();
+        drop(first);
+        server.shutdown(Duration::from_secs(5));
     }
 
     /// Pipelining: many requests written ahead on one connection, all

@@ -7,7 +7,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "HMWP"
-//! 4       1     protocol version (1)
+//! 4       1     protocol version (2; readers accept 1..=2)
 //! 5       1     frame kind (see [`FrameKind`])
 //! 6       2     reserved (zero)
 //! 8       8     request id, u64 little-endian (echoed in the response)
@@ -40,10 +40,13 @@ use crate::engine::{Filtered, LagSmoothed, SessionKind, SessionOptions};
 use crate::error::{Error, Result};
 use crate::inference::{MapEstimate, Posterior};
 use crate::jsonx::Json;
+use crate::store::SessionMeta;
 
 /// Current wire-protocol revision; readers reject frames stamped with a
-/// newer version.
-pub const WIRE_VERSION: u8 = 1;
+/// newer version (and accept every older one — v2 added the
+/// [`FrameKind::Reject`] frame and the cluster-router stream verbs
+/// without changing any v1 encoding).
+pub const WIRE_VERSION: u8 = 2;
 
 /// Frame magic: the first four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"HMWP";
@@ -77,19 +80,26 @@ pub enum FrameKind {
     StreamResponse,
     /// Reply to [`FrameKind::Ping`] (null payload).
     Pong,
+    /// Typed admission rejection (v2): the request was refused because
+    /// of transient overload (connection limit, drain, saturated worker
+    /// pool), with a retry hint — `{"retry_after_ms": .., "msg": ..}`.
+    /// Unlike [`FrameKind::Error`], this is an explicit *back off and
+    /// retry* signal, never a request failure.
+    Reject,
     /// A serialized [`Error`] payload (`{"code": .., "msg": ..}`).
     Error,
 }
 
 impl FrameKind {
     /// Every kind, for exhaustive round-trip tests.
-    pub const ALL: [FrameKind; 7] = [
+    pub const ALL: [FrameKind; 8] = [
         FrameKind::DecodeRequest,
         FrameKind::StreamRequest,
         FrameKind::Ping,
         FrameKind::DecodeResponse,
         FrameKind::StreamResponse,
         FrameKind::Pong,
+        FrameKind::Reject,
         FrameKind::Error,
     ];
 
@@ -102,6 +112,7 @@ impl FrameKind {
             FrameKind::DecodeResponse => 0x81,
             FrameKind::StreamResponse => 0x82,
             FrameKind::Pong => 0x83,
+            FrameKind::Reject => 0x84,
             FrameKind::Error => 0xee,
         }
     }
@@ -118,6 +129,7 @@ impl FrameKind {
             FrameKind::DecodeResponse
                 | FrameKind::StreamResponse
                 | FrameKind::Pong
+                | FrameKind::Reject
                 | FrameKind::Error
         )
     }
@@ -317,6 +329,35 @@ pub fn stream_request_to_json(req: &StreamRequest) -> Json {
             obj.insert("verb".to_string(), Json::Str("close".to_string()));
             obj.insert("session".to_string(), Json::Num(*session as f64));
         }
+        StreamVerb::OpenAt { session, model, options, lag } => {
+            obj.insert("verb".to_string(), Json::Str("open_at".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+            obj.insert("model".to_string(), Json::Str(model.clone()));
+            obj.insert(
+                "block".to_string(),
+                options.block.map_or(Json::Null, |b| Json::Num(b as f64)),
+            );
+            obj.insert("track_map".to_string(), Json::Bool(options.track_map));
+            obj.insert(
+                "kind".to_string(),
+                Json::Str(options.kind.name().to_string()),
+            );
+            obj.insert("lag".to_string(), Json::Num(*lag as f64));
+        }
+        StreamVerb::Export { session } => {
+            obj.insert("verb".to_string(), Json::Str("export".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+        }
+        StreamVerb::Import { session, meta, snapshot } => {
+            obj.insert("verb".to_string(), Json::Str("import".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+            obj.insert("meta".to_string(), meta.to_json());
+            obj.insert("snapshot".to_string(), snapshot.clone());
+        }
+        StreamVerb::Release { session } => {
+            obj.insert("verb".to_string(), Json::Str("release".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+        }
     }
     Json::Obj(obj)
 }
@@ -367,6 +408,55 @@ pub fn stream_request_from_json(id: u64, v: &Json) -> Result<StreamRequest> {
         Some("close") => {
             StreamVerb::Close { session: req_u64(v, "session", "stream close")? }
         }
+        Some("open_at") => {
+            let session = req_u64(v, "session", "stream open_at")?;
+            let model = v
+                .get("model")
+                .as_str()
+                .ok_or_else(|| {
+                    Error::invalid_request("stream open_at: missing 'model'")
+                })?
+                .to_string();
+            let block = match v.get("block") {
+                Json::Null => None,
+                b => Some(b.as_usize().ok_or_else(|| {
+                    Error::invalid_request("stream open_at: invalid 'block'")
+                })?),
+            };
+            let track_map = v.get("track_map").as_bool().unwrap_or(false);
+            let kind = match v.get("kind") {
+                Json::Null => SessionKind::SumProduct,
+                k => k.as_str().and_then(SessionKind::parse).ok_or_else(|| {
+                    Error::invalid_request("stream open_at: unknown 'kind'")
+                })?,
+            };
+            let lag = v.get("lag").as_usize().unwrap_or(0);
+            StreamVerb::OpenAt {
+                session,
+                model,
+                options: SessionOptions { block, track_map, kind },
+                lag,
+            }
+        }
+        Some("export") => StreamVerb::Export {
+            session: req_u64(v, "session", "stream export")?,
+        },
+        Some("import") => {
+            let session = req_u64(v, "session", "stream import")?;
+            let meta = SessionMeta::from_json(v.get("meta"))?;
+            let snapshot = match v.get("snapshot") {
+                Json::Null => {
+                    return Err(Error::invalid_request(
+                        "stream import: missing 'snapshot'",
+                    ))
+                }
+                s => s.clone(),
+            };
+            StreamVerb::Import { session, meta, snapshot }
+        }
+        Some("release") => StreamVerb::Release {
+            session: req_u64(v, "session", "stream release")?,
+        },
         _ => {
             return Err(Error::invalid_request(
                 "stream request: missing or unknown 'verb'",
@@ -577,6 +667,22 @@ fn stream_reply_to_json(reply: &StreamReply) -> Json {
             obj.insert("session".to_string(), Json::Num(*session as f64));
             obj.insert("posterior".to_string(), posterior_to_json(posterior));
         }
+        StreamReply::Exported { session, len, meta, snapshot } => {
+            obj.insert("reply".to_string(), Json::Str("exported".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+            obj.insert("len".to_string(), Json::Num(*len as f64));
+            obj.insert("meta".to_string(), meta.to_json());
+            obj.insert("snapshot".to_string(), snapshot.clone());
+        }
+        StreamReply::Imported { session, len } => {
+            obj.insert("reply".to_string(), Json::Str("imported".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+            obj.insert("len".to_string(), Json::Num(*len as f64));
+        }
+        StreamReply::Released { session } => {
+            obj.insert("reply".to_string(), Json::Str("released".to_string()));
+            obj.insert("session".to_string(), Json::Num(*session as f64));
+        }
     }
     Json::Obj(obj)
 }
@@ -611,6 +717,30 @@ fn stream_reply_from_json(v: &Json) -> Result<StreamReply> {
         Some("closed") => Ok(StreamReply::Closed {
             session: req_u64(v, "session", "stream reply")?,
             posterior: posterior_from_json(v.get("posterior"))?,
+        }),
+        Some("exported") => Ok(StreamReply::Exported {
+            session: req_u64(v, "session", "stream reply")?,
+            len: v.get("len").as_usize().ok_or_else(|| {
+                Error::invalid_request("stream reply: missing 'len'")
+            })?,
+            meta: SessionMeta::from_json(v.get("meta"))?,
+            snapshot: match v.get("snapshot") {
+                Json::Null => {
+                    return Err(Error::invalid_request(
+                        "stream reply: missing 'snapshot'",
+                    ))
+                }
+                s => s.clone(),
+            },
+        }),
+        Some("imported") => Ok(StreamReply::Imported {
+            session: req_u64(v, "session", "stream reply")?,
+            len: v.get("len").as_usize().ok_or_else(|| {
+                Error::invalid_request("stream reply: missing 'len'")
+            })?,
+        }),
+        Some("released") => Ok(StreamReply::Released {
+            session: req_u64(v, "session", "stream reply")?,
         }),
         _ => Err(Error::invalid_request("stream reply: unknown 'reply'")),
     }
@@ -648,15 +778,24 @@ fn error_code(e: &Error) -> &'static str {
         Error::Xla(_) => "xla",
         Error::Coordinator(_) => "coordinator",
         Error::Usage(_) => "usage",
+        Error::Busy { .. } => "busy",
         Error::Io(_) => "io",
     }
 }
 
-/// [`Error`] → `{"code": .., "msg": ..}` for an error frame.
+/// [`Error`] → `{"code": .., "msg": ..}` for an error frame. A
+/// [`Error::Busy`] additionally carries its `retry_after_ms` hint (the
+/// same payload shape a [`FrameKind::Reject`] frame uses).
 pub fn error_to_json(e: &Error) -> Json {
     let mut obj = BTreeMap::new();
     obj.insert("code".to_string(), Json::Str(error_code(e).to_string()));
     obj.insert("msg".to_string(), Json::Str(e.to_string()));
+    if let Error::Busy { retry_after_ms, .. } = e {
+        obj.insert(
+            "retry_after_ms".to_string(),
+            Json::Num(*retry_after_ms as f64),
+        );
+    }
     Json::Obj(obj)
 }
 
@@ -671,8 +810,34 @@ pub fn error_from_json(v: &Json) -> Error {
         Some("artifact") => Error::artifact(msg),
         Some("xla") => Error::xla(msg),
         Some("usage") => Error::usage(msg),
+        Some("busy") => Error::busy(
+            v.get("retry_after_ms").as_usize().unwrap_or(0) as u64,
+            msg,
+        ),
         _ => Error::coordinator(format!("remote: {msg}")),
     }
+}
+
+/// A [`FrameKind::Reject`] payload: `{"retry_after_ms": .., "msg": ..}`
+/// — the typed admission rejection of v2 (connection limit hit, server
+/// draining, every cluster worker saturated).
+pub fn reject_to_json(retry_after_ms: u64, msg: &str) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert(
+        "retry_after_ms".to_string(),
+        Json::Num(retry_after_ms as f64),
+    );
+    obj.insert("msg".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(obj)
+}
+
+/// Surface a received [`FrameKind::Reject`] payload as the typed
+/// [`Error::Busy`] clients retry on.
+pub fn busy_from_reject(v: &Json) -> Error {
+    Error::busy(
+        v.get("retry_after_ms").as_usize().unwrap_or(0) as u64,
+        v.get("msg").as_str().unwrap_or("request rejected"),
+    )
 }
 
 #[cfg(test)]
@@ -824,6 +989,29 @@ mod tests {
                 StreamVerb::Append { session, ys: rand_ys(r, 5) },
                 StreamVerb::Stat { session },
                 StreamVerb::Close { session },
+                StreamVerb::OpenAt {
+                    session,
+                    model: "m".to_string(),
+                    options: SessionOptions {
+                        block: Some(1 + (r.next_u64() % 512) as usize),
+                        track_map: r.next_u64() % 2 == 0,
+                        kind: SessionKind::SumProduct,
+                    },
+                    lag: (r.next_u64() % 128) as usize,
+                },
+                StreamVerb::Export { session },
+                StreamVerb::Import {
+                    session,
+                    meta: SessionMeta {
+                        model: "m".to_string(),
+                        options: SessionOptions::default(),
+                        lag: (r.next_u64() % 64) as usize,
+                        fingerprint: Some(r.next_u64()),
+                    },
+                    snapshot: Json::parse(r#"{"ys": "0101", "k": 3}"#)
+                        .unwrap(),
+                },
+                StreamVerb::Release { session },
             ];
             for verb in verbs {
                 let req = StreamRequest { id, verb };
@@ -848,6 +1036,30 @@ mod tests {
                     (
                         StreamVerb::Close { session: s1 },
                         StreamVerb::Close { session: s2 },
+                    ) => assert_eq!(s1, s2),
+                    (
+                        StreamVerb::OpenAt {
+                            session: s1, model: m1, options: o1, lag: l1,
+                        },
+                        StreamVerb::OpenAt {
+                            session: s2, model: m2, options: o2, lag: l2,
+                        },
+                    ) => assert_eq!((s1, m1, o1, l1), (s2, m2, o2, l2)),
+                    (
+                        StreamVerb::Export { session: s1 },
+                        StreamVerb::Export { session: s2 },
+                    ) => assert_eq!(s1, s2),
+                    (
+                        StreamVerb::Import {
+                            session: s1, meta: m1, snapshot: n1,
+                        },
+                        StreamVerb::Import {
+                            session: s2, meta: m2, snapshot: n2,
+                        },
+                    ) => assert_eq!((s1, m1, n1), (s2, m2, n2)),
+                    (
+                        StreamVerb::Release { session: s1 },
+                        StreamVerb::Release { session: s2 },
                     ) => assert_eq!(s1, s2),
                     (a, b) => panic!("verb changed shape: {a:?} -> {b:?}"),
                 }
@@ -929,6 +1141,20 @@ mod tests {
                     session,
                     posterior: Posterior::new(d, gamma.clone(), loglik),
                 },
+                StreamReply::Exported {
+                    session,
+                    len: t,
+                    meta: SessionMeta {
+                        model: "ge".to_string(),
+                        options: SessionOptions::default(),
+                        lag: 4,
+                        fingerprint: Some(r.next_u64()),
+                    },
+                    snapshot: Json::parse(r#"{"ys": "00", "chain": [1, 2]}"#)
+                        .unwrap(),
+                },
+                StreamReply::Imported { session, len: t },
+                StreamReply::Released { session },
             ];
             for reply in replies {
                 let resp = StreamResponse {
@@ -987,6 +1213,25 @@ mod tests {
                         assert_eq!(s1, s2);
                         assert_eq!(p1, p2, "posterior must be bit-exact");
                     }
+                    (
+                        StreamReply::Exported {
+                            session: s1, len: l1, meta: m1, snapshot: n1,
+                        },
+                        StreamReply::Exported {
+                            session: s2, len: l2, meta: m2, snapshot: n2,
+                        },
+                    ) => {
+                        assert_eq!((s1, l1, m1), (s2, l2, m2));
+                        assert_eq!(n1, n2, "snapshot must round-trip exactly");
+                    }
+                    (
+                        StreamReply::Imported { session: s1, len: l1 },
+                        StreamReply::Imported { session: s2, len: l2 },
+                    ) => assert_eq!((s1, l1), (s2, l2)),
+                    (
+                        StreamReply::Released { session: s1 },
+                        StreamReply::Released { session: s2 },
+                    ) => assert_eq!(s1, s2),
                     (a, b) => panic!("reply changed shape: {a:?} -> {b:?}"),
                 }
             }
@@ -1031,5 +1276,30 @@ mod tests {
         let e = Error::coordinator("queue closed");
         let back = error_from_json(&error_to_json(&e));
         assert!(back.to_string().contains("queue closed"));
+        // Busy round-trips its retry hint through the error encoding…
+        let e = Error::busy(250, "server draining");
+        let back = error_from_json(&error_to_json(&e));
+        let Error::Busy { retry_after_ms, msg } = back else {
+            panic!("busy did not round-trip: {back:?}");
+        };
+        assert_eq!(retry_after_ms, 250);
+        assert!(msg.contains("server draining"));
+        // …and through the dedicated reject payload.
+        let back = busy_from_reject(&reject_to_json(50, "worker pool full"));
+        let Error::Busy { retry_after_ms, msg } = back else {
+            panic!("reject payload did not surface as busy");
+        };
+        assert_eq!(retry_after_ms, 50);
+        assert_eq!(msg, "worker pool full");
+    }
+
+    #[test]
+    fn reject_frame_round_trips() {
+        let f = round_frame(9, FrameKind::Reject, reject_to_json(100, "busy"));
+        assert_eq!(f.kind, FrameKind::Reject);
+        assert!(f.kind.is_response());
+        assert_eq!(FrameKind::from_code(0x84), Some(FrameKind::Reject));
+        let e = busy_from_reject(&f.payload);
+        assert!(e.is_busy());
     }
 }
