@@ -1,0 +1,147 @@
+//! Bench target: the Kalman tier — classical O(T) filtering/smoothing
+//! vs the parallel-scan variants, swept over sequence length and state
+//! dimension.
+//!
+//! The acceptance claim mirrors the discrete figures: `kf_par`/`ks_par`
+//! overtake their sequential references as T grows (span O(log T) on
+//! enough threads), and the crossover moves earlier as the per-step
+//! combine gets fatter (state dim up). Rows are merged into
+//! `BENCH_kalman.json` under the `"kalman"` section for trend tooling.
+//!
+//! `HMM_SCAN_BENCH_SMOKE=1` shrinks the grid and time budget to a CI
+//! smoke run (a few seconds total).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use hmm_scan::benchx::{bench, black_box, format_table, BenchConfig};
+use hmm_scan::engine::Algorithm;
+use hmm_scan::jsonx::Json;
+use hmm_scan::kalman::{KalmanEngine, Lgssm};
+use hmm_scan::linalg::Mat;
+use hmm_scan::rng::Xoshiro256StarStar;
+
+/// A well-conditioned n-state model observing its first ⌈n/2⌉ states: a
+/// lightly-rotated contraction for A (stable, non-diagonal so the
+/// combines exercise full matrix paths), isotropic Q/R, unit prior.
+fn synthetic_model(n: usize) -> Lgssm {
+    let m = n.div_ceil(2);
+    let mut a = Mat::zeros(n, n);
+    for i in 0..n {
+        a[(i, i)] = 0.95;
+        a[(i, (i + 1) % n)] += 0.05;
+    }
+    let mut q = Mat::zeros(n, n);
+    let mut p0 = Mat::zeros(n, n);
+    for i in 0..n {
+        q[(i, i)] = 0.1;
+        p0[(i, i)] = 1.0;
+    }
+    let mut h = Mat::zeros(m, n);
+    for i in 0..m {
+        h[(i, i)] = 1.0;
+    }
+    let mut r = Mat::zeros(m, m);
+    for i in 0..m {
+        r[(i, i)] = 0.5;
+    }
+    Lgssm::new(a, q, h, r, vec![0.0; n], p0).expect("synthetic model")
+}
+
+fn main() {
+    let smoke = std::env::var("HMM_SCAN_BENCH_SMOKE").as_deref() == Ok("1");
+    let t_grid: &[usize] = if smoke {
+        &[4096]
+    } else {
+        &[1024, 4096, 16384, 65536]
+    };
+    let n_grid: &[usize] = if smoke { &[4] } else { &[2, 4, 8] };
+    let cfg = if smoke {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            time_budget: Duration::from_millis(100),
+        }
+    } else {
+        BenchConfig::default()
+    };
+
+    let algs = [
+        Algorithm::KfSeq,
+        Algorithm::KfPar,
+        Algorithm::KsSeq,
+        Algorithm::KsPar,
+    ];
+    let mut table = Vec::new();
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in n_grid {
+        let model = synthetic_model(n);
+        let obs_dim = model.obs_dim();
+        for &t in t_grid {
+            // Inference cost is data-independent; uniform noise keeps
+            // every value finite without simulating the model.
+            let mut rng = Xoshiro256StarStar::seed_from_u64((n * t) as u64);
+            let obs: Vec<f64> =
+                (0..t * obs_dim).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let mut engine = KalmanEngine::new(model.clone());
+
+            // Parallel and sequential answers agree before we time them
+            // (same check the equivalence tests make, looser here since
+            // the synthetic models vary).
+            let ls = engine
+                .run(Algorithm::KfSeq, &obs)
+                .unwrap()
+                .log_likelihood();
+            let lp = engine
+                .run(Algorithm::KfPar, &obs)
+                .unwrap()
+                .log_likelihood();
+            let rel = ((ls - lp) / ls.abs().max(1.0)).abs();
+            assert!(rel < 1e-6, "n={n} T={t}: seq/par rel err {rel:e}");
+
+            let mut medians = BTreeMap::new();
+            for alg in algs {
+                let meas = bench(&format!("{}/n={n}/T={t}", alg.name()), cfg, || {
+                    engine
+                        .run(alg, black_box(&obs))
+                        .unwrap()
+                        .log_likelihood()
+                });
+                medians.insert(alg.name(), meas.median);
+                table.push(meas);
+            }
+            for alg in algs {
+                let median = medians[alg.name()];
+                let baseline = medians[alg.seq_variant().name()];
+                let mut row = BTreeMap::new();
+                row.insert("algorithm".into(), Json::Str(alg.name().into()));
+                row.insert("t".into(), Json::Num(t as f64));
+                row.insert("state_dim".into(), Json::Num(n as f64));
+                row.insert(
+                    "median_us".into(),
+                    Json::Num(median.as_secs_f64() * 1e6),
+                );
+                row.insert(
+                    "speedup_vs_seq".into(),
+                    Json::Num(
+                        baseline.as_secs_f64()
+                            / median.as_secs_f64().max(1e-12),
+                    ),
+                );
+                rows.push(Json::Obj(row));
+            }
+        }
+    }
+
+    println!("{}", format_table(&table));
+    let report = std::path::Path::new("BENCH_kalman.json");
+    let n_rows = rows.len();
+    hmm_scan::benchx::merge_bench_json(report, "kalman", rows)
+        .expect("write BENCH_kalman.json");
+    println!(
+        "wrote {n_rows} rows to {} (speedup_vs_seq > 1 marks the \
+         parallel-scan win; expect it past the thread-count crossover)",
+        report.display()
+    );
+}

@@ -721,6 +721,10 @@ mod tests {
     fn spawn_worker() -> (Arc<Coordinator>, NetServer, String) {
         let c = Coordinator::new(CoordinatorConfig::native_only()).unwrap();
         c.register_model("ge", gilbert_elliott(GeParams::default()));
+        c.register_lgssm(
+            "cv",
+            crate::kalman::Lgssm::constant_velocity(0.1, 0.8, 0.5),
+        );
         let coord = Arc::new(c);
         let server = NetServer::start(
             Arc::clone(&coord),
@@ -1050,6 +1054,100 @@ mod tests {
         assert_eq!(
             router.metrics().snapshot().sessions_migrated,
             migrations
+        );
+        server_a.shutdown(Duration::from_secs(5));
+        server_b.shutdown(Duration::from_secs(5));
+    }
+
+    /// Kalman sessions ride the same wire, placement and migration
+    /// machinery as the discrete families: a Gaussian session migrated
+    /// mid-stream (with torn observation rows crossing the wire inside
+    /// snapshots) closes bit-identically to a never-migrated local
+    /// control.
+    #[test]
+    fn kalman_sessions_migrate_bit_identical_to_control() {
+        use crate::kalman::{obs_to_words, tests_support::tracking_obs, Lgssm};
+
+        let (_ca, server_a, addr_a) = spawn_worker();
+        let (_cb, server_b, addr_b) = spawn_worker();
+        let router = test_router(vec![addr_a.clone(), addr_b.clone()]);
+        let control =
+            Coordinator::new(CoordinatorConfig::native_only()).unwrap();
+        control.register_lgssm("cv", Lgssm::constant_velocity(0.1, 0.8, 0.5));
+
+        let open = || StreamRequest {
+            id: 0,
+            verb: StreamVerb::Open {
+                model: "cv".into(),
+                options: SessionOptions {
+                    kind: crate::engine::SessionKind::Kalman,
+                    ..Default::default()
+                },
+                lag: 0,
+            },
+        };
+        let m = Lgssm::constant_velocity(0.1, 0.8, 0.5);
+        let words = obs_to_words(&tracking_obs(&m, 90, 11));
+
+        let StreamReply::Opened { session } =
+            router.stream(open()).unwrap().reply
+        else {
+            panic!("expected Opened")
+        };
+        let StreamReply::Opened { session: ctl } =
+            control.stream(open()).unwrap().reply
+        else {
+            panic!("expected Opened")
+        };
+
+        let (mut lo, mut step, mut k) = (0usize, 5usize, 0usize);
+        let mut migrations = 0u64;
+        while lo < words.len() {
+            let hi = (lo + step).min(words.len());
+            let chunk = words[lo..hi].to_vec();
+            lo = hi;
+            step = step % 9 + 3; // odd sizes tear f64 halves mid-chunk
+            let r = router
+                .stream(StreamRequest::append(0, session, chunk.clone()))
+                .unwrap();
+            let c = control
+                .stream(StreamRequest::append(0, ctl, chunk))
+                .unwrap();
+            let StreamReply::Appended { filtered: rf, .. } = r.reply else {
+                panic!("expected Appended")
+            };
+            let StreamReply::Appended { filtered: cf, .. } = c.reply else {
+                panic!("expected Appended")
+            };
+            assert_eq!(rf, cf, "kalman filtered diverged through the router");
+            k += 1;
+            if k % 3 == 0 {
+                let here = router.session_home(session).unwrap();
+                let there = if here == addr_a {
+                    addr_b.clone()
+                } else {
+                    addr_a.clone()
+                };
+                router.migrate_session(session, &there).unwrap();
+                assert_eq!(router.session_home(session).unwrap(), there);
+                migrations += 1;
+            }
+        }
+        assert!(migrations >= 2, "the session never moved");
+
+        let StreamReply::Closed { posterior: routed, .. } =
+            router.stream(StreamRequest::close(0, session)).unwrap().reply
+        else {
+            panic!("expected Closed")
+        };
+        let StreamReply::Closed { posterior: ctrl, .. } =
+            control.stream(StreamRequest::close(0, ctl)).unwrap().reply
+        else {
+            panic!("expected Closed")
+        };
+        assert_eq!(
+            routed, ctrl,
+            "migrated kalman session diverged from local control"
         );
         server_a.shutdown(Duration::from_secs(5));
         server_b.shutdown(Duration::from_secs(5));

@@ -42,15 +42,18 @@ impl Algo {
         }
     }
 
-    /// The task an algorithm belongs to (`None` for training — it is not
-    /// a decode task).
+    /// The task an algorithm belongs to (`None` for training and for
+    /// the Kalman tier — neither is a discrete decode task; Kalman
+    /// traffic flows through `SessionKind::Kalman` stream verbs, not
+    /// one-shot decode requests).
     pub fn from_algorithm(alg: Algorithm) -> Option<Algo> {
         match alg {
             Algorithm::SpSeq | Algorithm::SpPar => Some(Algo::Smooth),
             Algorithm::BsSeq | Algorithm::BsPar => Some(Algo::BayesSmooth),
             Algorithm::Viterbi | Algorithm::MpSeq | Algorithm::MpPar
             | Algorithm::MpPathPar => Some(Algo::Map),
-            Algorithm::BaumWelch => None,
+            Algorithm::BaumWelch | Algorithm::KfSeq | Algorithm::KfPar
+            | Algorithm::KsSeq | Algorithm::KsPar => None,
         }
     }
 
@@ -443,11 +446,18 @@ mod tests {
             assert!(algo.parallel().is_parallel());
             assert!(!algo.sequential().is_parallel());
         }
-        // Every non-training algorithm maps to exactly one task.
+        // Every discrete decode algorithm maps to exactly one task;
+        // training and the Kalman tier (session-only traffic) map to
+        // none.
+        use crate::engine::Task;
         for alg in Algorithm::ALL {
             match Algo::from_algorithm(alg) {
-                Some(_) => assert_ne!(alg, Algorithm::BaumWelch),
-                None => assert_eq!(alg, Algorithm::BaumWelch),
+                Some(_) => assert!(
+                    alg != Algorithm::BaumWelch && alg.task() != Task::Gaussian
+                ),
+                None => assert!(
+                    alg == Algorithm::BaumWelch || alg.task() == Task::Gaussian
+                ),
             }
         }
     }

@@ -11,14 +11,17 @@ use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::engine::{Engine, EngineOutput, Session, SessionKind, XlaBackend};
+use crate::engine::{
+    Engine, EngineOutput, Filtered, Session, SessionKind, XlaBackend,
+};
 use crate::error::{Error, Result};
 use crate::hmm::Hmm;
+use crate::kalman::{KalmanEngine, Lgssm};
 use crate::runtime::{ArtifactExec, Manifest, Registry, Value};
 use crate::scan::ScanOptions;
 use crate::store::{
-    model_fingerprint, DiskStore, MemStore, SessionMeta, SessionStore,
-    DEFAULT_GROUP_COMMIT_WINDOW,
+    lgssm_fingerprint, model_fingerprint, DiskStore, MemStore, SessionMeta,
+    SessionStore, DEFAULT_GROUP_COMMIT_WINDOW,
 };
 
 use super::batcher::{Batcher, BatcherConfig};
@@ -262,6 +265,13 @@ pub struct Coordinator {
     xla: Option<XlaBackend>,
     router: Router,
     models: RwLock<BTreeMap<String, ModelEntry>>,
+    /// Linear-Gaussian model registry — the Kalman tier's sibling of
+    /// `models`. A separate map (rather than a sum type in `models`)
+    /// keeps every decode path untouched: only session verbs with
+    /// `SessionKind::Kalman` consult it. `Lgssm` inference is stateless
+    /// per call, so no per-model engine/mutex pair is needed — sessions
+    /// build a throwaway [`KalmanEngine`] around the shared `Arc`.
+    lgssms: RwLock<BTreeMap<String, Arc<Lgssm>>>,
     /// The session maps, gauges and spill/restore machinery — shared
     /// with the housekeeping worker, which holds its own `Arc`.
     registry: Arc<SessionRegistry>,
@@ -290,12 +300,37 @@ struct ModelEntry {
     engine: Arc<Mutex<Engine>>,
 }
 
+/// The model a session was opened against — discrete or
+/// linear-Gaussian. Mirrors the session's own internal model reference:
+/// exactly one variant per session kind, fixed at open.
+#[derive(Clone)]
+enum ModelHandle {
+    /// A discrete HMM (every non-Kalman [`SessionKind`]).
+    Hmm(Arc<Hmm>),
+    /// A linear-Gaussian state-space model ([`SessionKind::Kalman`]).
+    Lgssm(Arc<Lgssm>),
+}
+
+impl ModelHandle {
+    /// The discrete model, on paths only discrete sessions reach (the
+    /// fixed-lag window hint — Kalman sessions are filtering-only, so
+    /// `lag > 0` implies the Hmm variant).
+    fn hmm(&self) -> &Arc<Hmm> {
+        match self {
+            ModelHandle::Hmm(h) => h,
+            ModelHandle::Lgssm(_) => {
+                unreachable!("discrete model handle on a Kalman session")
+            }
+        }
+    }
+}
+
 /// One open streaming session: its residency slot plus the model handle
 /// (for the router's window hints) and the durable meta (open options +
 /// fixed-lag width) the store needs to re-create it.
 struct SessionEntry {
     slot: Mutex<SessionSlot>,
-    hmm: Arc<Hmm>,
+    model: ModelHandle,
     meta: SessionMeta,
     /// LRU stamp: coordinator clock at the last open/append/close touch.
     /// Written only inside the registry's `lru`-locked helpers, so the
@@ -406,10 +441,25 @@ impl SessionRegistry {
     }
 
     /// Re-estimate a resident session's byte charge after its length
-    /// changed (called under the session's slot lock).
+    /// changed (called under the session's slot lock). `len` is the
+    /// session's observation count — symbols for discrete families,
+    /// encoded u32 words for Kalman (two per f64 observation value).
     fn recharge(&self, entry: &SessionEntry, len: usize) {
-        let d = entry.hmm.num_states();
-        let new = len.saturating_mul(d.saturating_mul(d).saturating_mul(8));
+        let new = match &entry.model {
+            // Discrete chains retain one D×D element per symbol.
+            ModelHandle::Hmm(hmm) => {
+                let d = hmm.num_states();
+                len.saturating_mul(d.saturating_mul(d).saturating_mul(8))
+            }
+            // Kalman chains retain one element per observation *row*
+            // (len / words_per_step rows): three n×n matrices plus two
+            // n-vectors of f64 each.
+            ModelHandle::Lgssm(m) => {
+                let n = m.state_dim();
+                let per_row = (3 * n * n + 2 * n).saturating_mul(8);
+                (len / m.words_per_step().max(1)).saturating_mul(per_row)
+            }
+        };
         let old = entry.charged.swap(new, Ordering::Relaxed);
         if new >= old {
             self.resident_bytes.fetch_add(new - old, Ordering::Relaxed);
@@ -475,15 +525,27 @@ impl SessionRegistry {
         let stored = self.store.restore(id)?;
         // Restore against the session's *original* model handle — never
         // the registry's current entry, which a re-registration may have
-        // replaced. Resident sessions keep their Arc<Hmm> across
+        // replaced. Resident sessions keep their model Arc across
         // re-registration; evicted ones must behave identically, or
         // eviction stops being transparent.
-        let engine = Engine::builder(Arc::clone(&entry.hmm))
-            .scan_options(self.scan)
-            .build();
-        let mut session = match &stored.snapshot {
-            Some(snap) => engine.resume_session(snap)?,
-            None => engine.open_session(entry.meta.options),
+        let mut session = match &entry.model {
+            ModelHandle::Hmm(hmm) => {
+                let engine = Engine::builder(Arc::clone(hmm))
+                    .scan_options(self.scan)
+                    .build();
+                match &stored.snapshot {
+                    Some(snap) => engine.resume_session(snap)?,
+                    None => engine.open_session(entry.meta.options),
+                }
+            }
+            ModelHandle::Lgssm(m) => {
+                let engine = KalmanEngine::from_arc(Arc::clone(m))
+                    .with_scan_options(self.scan);
+                match &stored.snapshot {
+                    Some(snap) => engine.resume_session(snap)?,
+                    None => engine.open_session(entry.meta.options),
+                }
+            }
         };
         for chunk in &stored.appends {
             session.push(chunk)?;
@@ -693,6 +755,7 @@ impl Coordinator {
             xla,
             router: Router::new(config.router),
             models: RwLock::new(BTreeMap::new()),
+            lgssms: RwLock::new(BTreeMap::new()),
             registry,
             housekeeper,
             next_session: AtomicU64::new(first_free_id),
@@ -716,6 +779,15 @@ impl Coordinator {
         self.models.write().unwrap().insert(id.into(), entry);
     }
 
+    /// Register (or replace) a linear-Gaussian model under `id` for
+    /// [`SessionKind::Kalman`] streaming sessions. The namespace is
+    /// separate from [`register_model`](Self::register_model)'s —
+    /// the session kind picks the registry, so an HMM and an `Lgssm`
+    /// may share a name without ambiguity.
+    pub fn register_lgssm(&self, id: impl Into<String>, model: Lgssm) {
+        self.lgssms.write().unwrap().insert(id.into(), Arc::new(model));
+    }
+
     fn entry(&self, id: &str) -> Result<ModelEntry> {
         self.models
             .read()
@@ -725,9 +797,27 @@ impl Coordinator {
             .ok_or_else(|| Error::invalid_request(format!("unknown model '{id}'")))
     }
 
+    fn lgssm_entry(&self, id: &str) -> Result<Arc<Lgssm>> {
+        self.lgssms
+            .read()
+            .unwrap()
+            .get(id)
+            .cloned()
+            .ok_or_else(|| {
+                Error::invalid_request(format!(
+                    "unknown linear-Gaussian model '{id}'"
+                ))
+            })
+    }
+
     /// Look up a registered model by id.
     pub fn model(&self, id: &str) -> Result<Arc<Hmm>> {
         Ok(self.entry(id)?.hmm)
+    }
+
+    /// Look up a registered linear-Gaussian model by id.
+    pub fn lgssm(&self, id: &str) -> Result<Arc<Lgssm>> {
+        self.lgssm_entry(id)
     }
 
     /// The serving metrics (counters, gauges, latency percentiles).
@@ -864,6 +954,11 @@ impl Coordinator {
                 "bayes sessions are filtering-only: open with lag = 0",
             ));
         }
+        if options.kind == SessionKind::Kalman && lag > 0 {
+            return Err(Error::invalid_request(
+                "kalman sessions are filtering-only: open with lag = 0",
+            ));
+        }
         Ok(())
     }
 
@@ -874,13 +969,13 @@ impl Coordinator {
     fn publish_session(
         &self,
         id: u64,
-        hmm: Arc<Hmm>,
+        model: ModelHandle,
         meta: SessionMeta,
         session: Session,
     ) -> Result<Arc<SessionEntry>> {
         let sess_entry = Arc::new(SessionEntry {
             slot: Mutex::new(SessionSlot::Resident(session)),
-            hmm,
+            model,
             meta,
             touch: AtomicU64::new(self.registry.tick()),
             resident: AtomicBool::new(true),
@@ -945,46 +1040,59 @@ impl Coordinator {
         Ok(sess_entry)
     }
 
+    /// Resolve the model a new session binds to and build its resident
+    /// [`Session`] plus model fingerprint — branching on the requested
+    /// kind (`SessionKind::Kalman` opens against the linear-Gaussian
+    /// registry, everything else against the HMM registry). Shared by
+    /// `Open` and `OpenAt`.
+    fn build_session(
+        &self,
+        model_id: &str,
+        options: crate::engine::SessionOptions,
+    ) -> Result<(ModelHandle, Session, u64)> {
+        if options.kind == SessionKind::Kalman {
+            let m = self.lgssm_entry(model_id)?;
+            let engine = KalmanEngine::from_arc(Arc::clone(&m))
+                .with_scan_options(self.scan);
+            let session = engine.open_session(options);
+            let fp = lgssm_fingerprint(&m);
+            Ok((ModelHandle::Lgssm(m), session, fp))
+        } else {
+            let entry = self.entry(model_id)?;
+            let session = {
+                let engine =
+                    entry.engine.lock().expect("engine mutex poisoned");
+                engine.open_session(options)
+            };
+            let fp = model_fingerprint(&entry.hmm);
+            Ok((ModelHandle::Hmm(entry.hmm), session, fp))
+        }
+    }
+
     fn stream_verb(&self, verb: StreamVerb, start: Instant) -> Result<StreamReply> {
         match verb {
             StreamVerb::Open { model, options, lag } => {
                 self.check_session_limits(&options, lag)?;
-                let entry = self.entry(&model)?;
-                let session = {
-                    let engine =
-                        entry.engine.lock().expect("engine mutex poisoned");
-                    engine.open_session(options)
-                };
+                let (handle, session, fp) =
+                    self.build_session(&model, options)?;
                 let id = self.next_session.fetch_add(1, Ordering::Relaxed) + 1;
-                let meta = SessionMeta {
-                    model,
-                    options,
-                    lag,
-                    fingerprint: Some(model_fingerprint(&entry.hmm)),
-                };
-                self.publish_session(id, entry.hmm, meta, session)?;
+                let meta =
+                    SessionMeta { model, options, lag, fingerprint: Some(fp) };
+                self.publish_session(id, handle, meta, session)?;
                 self.kick_housekeeping(Some(id));
                 Ok(StreamReply::Opened { session: id })
             }
             StreamVerb::OpenAt { session: id, model, options, lag } => {
                 self.check_session_limits(&options, lag)?;
-                let entry = self.entry(&model)?;
-                let session = {
-                    let engine =
-                        entry.engine.lock().expect("engine mutex poisoned");
-                    engine.open_session(options)
-                };
+                let (handle, session, fp) =
+                    self.build_session(&model, options)?;
                 // Advance the allocator past the explicit id so a later
                 // local `Open` can never collide with (and overwrite
                 // the durable log of) a router-placed session.
                 self.next_session.fetch_max(id, Ordering::Relaxed);
-                let meta = SessionMeta {
-                    model,
-                    options,
-                    lag,
-                    fingerprint: Some(model_fingerprint(&entry.hmm)),
-                };
-                self.publish_session(id, entry.hmm, meta, session)?;
+                let meta =
+                    SessionMeta { model, options, lag, fingerprint: Some(fp) };
+                self.publish_session(id, handle, meta, session)?;
                 self.kick_housekeeping(Some(id));
                 Ok(StreamReply::Opened { session: id })
             }
@@ -1015,26 +1123,46 @@ impl Coordinator {
             }
             StreamVerb::Import { session: id, meta, snapshot } => {
                 self.check_session_limits(&meta.options, meta.lag)?;
-                let entry = self.entry(&meta.model)?;
                 // Refuse to bind an exported snapshot to a *different*
                 // model registered under the same name — resume trusts
-                // the snapshot's summaries (same rule as recovery).
-                if let Some(fp) = meta.fingerprint {
-                    if fp != model_fingerprint(&entry.hmm) {
-                        return Err(Error::invalid_request(format!(
-                            "import: model '{}' fingerprint mismatch",
-                            meta.model
-                        )));
-                    }
-                }
-                let engine = Engine::builder(Arc::clone(&entry.hmm))
-                    .scan_options(self.scan)
-                    .build();
-                let session = engine.resume_session(&snapshot)?;
+                // the snapshot's summaries (same rule as recovery). The
+                // per-kind fingerprint spaces are disjoint, so a Kalman
+                // snapshot can never sneak past the check onto an HMM.
+                let (handle, session) =
+                    if meta.options.kind == SessionKind::Kalman {
+                        let m = self.lgssm_entry(&meta.model)?;
+                        if let Some(fp) = meta.fingerprint {
+                            if fp != lgssm_fingerprint(&m) {
+                                return Err(Error::invalid_request(format!(
+                                    "import: model '{}' fingerprint mismatch",
+                                    meta.model
+                                )));
+                            }
+                        }
+                        let engine = KalmanEngine::from_arc(Arc::clone(&m))
+                            .with_scan_options(self.scan);
+                        let session = engine.resume_session(&snapshot)?;
+                        (ModelHandle::Lgssm(m), session)
+                    } else {
+                        let entry = self.entry(&meta.model)?;
+                        if let Some(fp) = meta.fingerprint {
+                            if fp != model_fingerprint(&entry.hmm) {
+                                return Err(Error::invalid_request(format!(
+                                    "import: model '{}' fingerprint mismatch",
+                                    meta.model
+                                )));
+                            }
+                        }
+                        let engine = Engine::builder(Arc::clone(&entry.hmm))
+                            .scan_options(self.scan)
+                            .build();
+                        let session = engine.resume_session(&snapshot)?;
+                        (ModelHandle::Hmm(entry.hmm), session)
+                    };
                 let len = session.len();
                 self.next_session.fetch_max(id, Ordering::Relaxed);
                 let sess_entry =
-                    self.publish_session(id, entry.hmm, meta, session)?;
+                    self.publish_session(id, handle, meta, session)?;
                 // Persist the imported state immediately: the open
                 // record alone would make a crash-recovered session
                 // come back *empty*. A compact failure rolls the import
@@ -1085,14 +1213,30 @@ impl Coordinator {
                 // Validate before the durable log so a rejected chunk
                 // never becomes a replayable record. Empty chunks are a
                 // valid poll of the current filtered state — nothing to
-                // validate or log.
+                // validate or log. Kalman chunks can only be judged
+                // against the session's buffered torn-row tail, so their
+                // validation runs below, once the session is resident.
                 if !ys.is_empty() {
-                    entry.hmm.check_observations(&ys)?;
+                    if let ModelHandle::Hmm(hmm) = &entry.model {
+                        hmm.check_observations(&ys)?;
+                    }
                 }
                 let reply = (|| -> Result<StreamReply> {
                     let mut slot =
                         entry.slot.lock().expect("session mutex poisoned");
                     self.registry.make_resident(session, &entry, &mut slot)?;
+                    let SessionSlot::Resident(s) = &mut *slot else {
+                        unreachable!("make_resident")
+                    };
+                    // Kalman validation — resident (the buffered tail is
+                    // part of the judgment) but still ahead of the
+                    // durable log, preserving the no-replayable-invalid-
+                    // chunk invariant the discrete pre-check provides.
+                    if !ys.is_empty()
+                        && matches!(entry.model, ModelHandle::Lgssm(_))
+                    {
+                        s.validate_append(&ys)?;
+                    }
                     // Append-ahead: the chunk is durable before the
                     // resident session applies it (a crash between the
                     // two replays it from the log on recovery; a disk
@@ -1105,12 +1249,30 @@ impl Coordinator {
                     if !ys.is_empty() && self.store.durable() {
                         self.store.log_append(session, &ys)?;
                     }
-                    let SessionSlot::Resident(s) = &mut *slot else {
-                        unreachable!("make_resident")
-                    };
                     s.push(&ys)?;
                     self.registry.recharge(&entry, s.len());
-                    let filtered = s.filtered()?;
+                    let filtered = match s.filtered() {
+                        Ok(f) => f,
+                        // A Kalman append may complete no observation
+                        // row yet (words buffer until a row closes). The
+                        // chunk is already ingested and durably logged,
+                        // so the reply must still succeed — an empty
+                        // step-0 marginal, not an error the client would
+                        // misread as a rejected (hence retryable) append.
+                        Err(_)
+                            if matches!(
+                                entry.model,
+                                ModelHandle::Lgssm(_)
+                            ) =>
+                        {
+                            Filtered {
+                                probs: Vec::new(),
+                                log_likelihood: 0.0,
+                                step: 0,
+                            }
+                        }
+                        Err(e) => return Err(e),
+                    };
                     let (window, plan_hint) = if entry.meta.lag > 0 {
                         let win = s.smoothed_lag(entry.meta.lag)?;
                         self.metrics.on_suffix_width(win.rescan_width);
@@ -1118,8 +1280,8 @@ impl Coordinator {
                             self.manifest.as_deref(),
                             Algo::Smooth,
                             win.rescan_width,
-                            entry.hmm.num_states(),
-                            entry.hmm.num_symbols(),
+                            entry.model.hmm().num_states(),
+                            entry.model.hmm().num_symbols(),
                         );
                         (Some(win), hint)
                     } else {
@@ -1301,7 +1463,6 @@ impl Coordinator {
             if self.registry.sessions.read().unwrap().contains_key(&id) {
                 continue;
             }
-            let Ok(model) = self.entry(&meta.model) else { continue };
             // Recovered sessions must satisfy the same serve-cost guards
             // opens do (appends run O(lag + block) on the serve loop): a
             // restart under tighter limits — or a tampered log — must
@@ -1315,22 +1476,35 @@ impl Coordinator {
             {
                 continue;
             }
-            // Refuse to bind stored scan state to a *different* model
+            // Bind to the registry the session's kind names, and refuse
+            // to bind stored scan state to a *different* model
             // re-registered under the same name: resume trusts the
             // snapshot's summaries, and mixing them with elements
             // rebuilt from other parameters would silently corrupt
             // results. The session stays in the store for an operator
             // who re-registers the original model.
-            if let Some(fp) = meta.fingerprint {
-                if fp != model_fingerprint(&model.hmm) {
+            let handle = if meta.options.kind == SessionKind::Kalman {
+                let Ok(m) = self.lgssm_entry(&meta.model) else { continue };
+                if meta.fingerprint.is_some_and(|fp| fp != lgssm_fingerprint(&m))
+                {
                     continue;
                 }
-            }
+                ModelHandle::Lgssm(m)
+            } else {
+                let Ok(model) = self.entry(&meta.model) else { continue };
+                if meta
+                    .fingerprint
+                    .is_some_and(|fp| fp != model_fingerprint(&model.hmm))
+                {
+                    continue;
+                }
+                ModelHandle::Hmm(model.hmm)
+            };
             self.registry.sessions.write().unwrap().insert(
                 id,
                 Arc::new(SessionEntry {
                     slot: Mutex::new(SessionSlot::Evicted { len }),
-                    hmm: model.hmm,
+                    model: handle,
                     meta,
                     touch: AtomicU64::new(self.registry.tick()),
                     resident: AtomicBool::new(false),
@@ -2281,6 +2455,245 @@ mod tests {
             !first_ids.contains(&session) && session != early,
             "fresh id {session} collides with a recovered session"
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn open_kalman_req(id: u64, model: &str, lag: usize) -> StreamRequest {
+        StreamRequest {
+            id,
+            verb: StreamVerb::Open {
+                model: model.into(),
+                options: crate::engine::SessionOptions {
+                    kind: SessionKind::Kalman,
+                    ..Default::default()
+                },
+                lag,
+            },
+        }
+    }
+
+    /// Kalman session guards at the coordinator layer: the kind picks
+    /// the linear-Gaussian registry, lag is rejected (filtering-only),
+    /// invalid rows never reach the durable log, and a torn first
+    /// append acks with an empty step-0 marginal instead of an error.
+    #[test]
+    fn kalman_session_guards_and_torn_appends() {
+        use crate::kalman::{obs_to_words, Lgssm};
+        let c = native_coord(); // registers the "ge" HMM
+        c.register_lgssm("cv", Lgssm::constant_velocity(0.1, 0.8, 0.5));
+        assert_eq!(c.lgssm("cv").unwrap().state_dim(), 4);
+        assert!(c.lgssm("ge").is_err(), "HMM names are not Lgssm names");
+
+        // Filtering-only: any fixed-lag width is rejected at open.
+        assert!(c.stream(open_kalman_req(1, "cv", 8)).is_err());
+        // Kind Kalman resolves the model in the Lgssm registry — the
+        // "ge" HMM is invisible there.
+        assert!(c.stream(open_kalman_req(2, "ge", 0)).is_err());
+
+        let StreamReply::Opened { session } =
+            c.stream(open_kalman_req(3, "cv", 0)).unwrap().reply
+        else {
+            panic!()
+        };
+        // A non-finite observation row is rejected atomically.
+        let nan_row = obs_to_words(&[f64::NAN, 1.0]);
+        assert!(c.stream(StreamRequest::append(4, session, nan_row)).is_err());
+        let StreamReply::Stats { len, .. } =
+            c.stream(StreamRequest::stat(5, session)).unwrap().reply
+        else {
+            panic!()
+        };
+        assert_eq!(len, 0, "rejected append must not advance the session");
+
+        // A torn first append (3 of 4 words) is ingested and acked with
+        // an empty step-0 marginal — not an error the client would
+        // retry (the words are already durably owned by the session).
+        let words = obs_to_words(&[1.0, 2.0]);
+        let StreamReply::Appended { len, filtered, window, .. } = c
+            .stream(StreamRequest::append(6, session, words[..3].to_vec()))
+            .unwrap()
+            .reply
+        else {
+            panic!()
+        };
+        assert_eq!(len, 3);
+        assert_eq!(filtered.step, 0);
+        assert!(filtered.probs.is_empty());
+        assert!(window.is_none());
+
+        // Completing the row yields the real mean ++ covariance payload.
+        let StreamReply::Appended { len, filtered, .. } = c
+            .stream(StreamRequest::append(7, session, words[3..].to_vec()))
+            .unwrap()
+            .reply
+        else {
+            panic!()
+        };
+        assert_eq!(len, 4);
+        assert_eq!(filtered.step, 1);
+        assert_eq!(filtered.probs.len(), 4 + 16);
+
+        // Close succeeds once no torn words are pending.
+        let StreamReply::Closed { posterior, .. } =
+            c.stream(StreamRequest::close(8, session)).unwrap().reply
+        else {
+            panic!()
+        };
+        assert_eq!(posterior.len(), 1);
+    }
+
+    /// The Kalman-tier acceptance bar: durable Kalman sessions survive
+    /// spill → transparent restore → crash recovery → close, with every
+    /// reply bit-identical to a never-evicted control coordinator fed
+    /// the same word chunks (torn mid-f64 at arbitrary boundaries).
+    #[test]
+    fn kalman_sessions_survive_eviction_and_crash_recovery() {
+        use crate::kalman::{obs_to_words, tests_support::tracking_obs, Lgssm};
+
+        let dir = crate::store::testutil::tempdir("coord-kalman");
+        let model = || Lgssm::constant_velocity(0.1, 0.8, 0.5);
+        let config = || CoordinatorConfig {
+            resident_watermark: 2,
+            session_store: Some(dir.clone()),
+            checkpoint_every: 64,
+            ..CoordinatorConfig::native_only()
+        };
+
+        // Word schedules per session, chunked so f64 halves and whole
+        // observation rows tear at varying boundaries.
+        let sessions = 5usize;
+        let schedules: Vec<Vec<Vec<u32>>> = (0..sessions)
+            .map(|i| {
+                let m = model();
+                let obs = tracking_obs(&m, 40 + 11 * i, i as u64);
+                let words = obs_to_words(&obs);
+                let mut chunks = Vec::new();
+                let (mut lo, mut step) = (0usize, 3usize);
+                while lo < words.len() {
+                    let hi = (lo + step).min(words.len());
+                    chunks.push(words[lo..hi].to_vec());
+                    lo = hi;
+                    step = step % 9 + 3; // cycles 3..=11
+                }
+                chunks
+            })
+            .collect();
+
+        let control =
+            Coordinator::new(CoordinatorConfig::native_only()).unwrap();
+        control.register_lgssm("cv", model());
+        let control_ids: Vec<u64> = (0..sessions)
+            .map(|i| {
+                let r = control.stream(open_kalman_req(i as u64, "cv", 0));
+                let StreamReply::Opened { session } = r.unwrap().reply else {
+                    panic!()
+                };
+                session
+            })
+            .collect();
+
+        let mut expected_len = vec![0usize; sessions];
+        let ids: Vec<u64>;
+        {
+            let c = Coordinator::new(config()).unwrap();
+            c.register_lgssm("cv", model());
+            ids = (0..sessions)
+                .map(|i| {
+                    let r = c.stream(open_kalman_req(i as u64, "cv", 0));
+                    let StreamReply::Opened { session } = r.unwrap().reply
+                    else {
+                        panic!()
+                    };
+                    session
+                })
+                .collect();
+            // Interleave chunk k of every session so the watermark-2
+            // coordinator keeps spilling and restoring mid-stream, with
+            // torn-row tails crossing the snapshot boundary.
+            let rounds = schedules.iter().map(Vec::len).max().unwrap();
+            for k in 0..rounds {
+                for i in 0..sessions {
+                    let Some(chunk) = schedules[i].get(k) else { continue };
+                    let ra = c
+                        .stream(StreamRequest::append(1, ids[i], chunk.clone()))
+                        .unwrap();
+                    let rb = control
+                        .stream(StreamRequest::append(
+                            1,
+                            control_ids[i],
+                            chunk.clone(),
+                        ))
+                        .unwrap();
+                    expected_len[i] += chunk.len();
+                    let StreamReply::Appended {
+                        len: la,
+                        filtered: fa,
+                        window: wa,
+                        ..
+                    } = ra.reply
+                    else {
+                        panic!()
+                    };
+                    let StreamReply::Appended { len: lb, filtered: fb, .. } =
+                        rb.reply
+                    else {
+                        panic!()
+                    };
+                    assert_eq!(la, expected_len[i]);
+                    assert_eq!(la, lb);
+                    assert_eq!(
+                        fa, fb,
+                        "filtered diverged (session {i} chunk {k})"
+                    );
+                    assert!(wa.is_none(), "kalman sessions never window");
+                }
+            }
+            c.quiesce_housekeeping();
+            assert!(c.resident_sessions() <= 2);
+            assert!(c.metrics().snapshot().spills > 0, "eviction never ran");
+            // Crash: drop the coordinator without closing anything.
+        }
+
+        // A *different* Lgssm re-registered under the same name must
+        // not adopt the stored sessions (Gaussian fingerprint mismatch).
+        {
+            let c = Coordinator::new(config()).unwrap();
+            c.register_lgssm("cv", Lgssm::constant_velocity(0.1, 0.8, 0.6));
+            assert_eq!(c.recover_sessions().unwrap(), 0);
+        }
+
+        let c = Coordinator::new(config()).unwrap();
+        c.register_lgssm("cv", model());
+        assert_eq!(c.recover_sessions().unwrap(), sessions);
+        assert_eq!(c.resident_sessions(), 0, "recovery must be lazy");
+        for i in 0..sessions {
+            // Stat reports the logged word count without restoring.
+            let StreamReply::Stats { len, resident, model: name, .. } =
+                c.stream(StreamRequest::stat(1, ids[i])).unwrap().reply
+            else {
+                panic!()
+            };
+            assert_eq!(len, expected_len[i], "session {i} lost words");
+            assert!(!resident);
+            assert_eq!(name, "cv");
+
+            // Close restores transparently; the posterior is bitwise
+            // the never-evicted control's (which the engine tests pin
+            // to the one-shot parallel smoother).
+            let ra = c.stream(StreamRequest::close(2, ids[i])).unwrap();
+            let rb = control
+                .stream(StreamRequest::close(2, control_ids[i]))
+                .unwrap();
+            let StreamReply::Closed { posterior: pa, .. } = ra.reply else {
+                panic!()
+            };
+            let StreamReply::Closed { posterior: pb, .. } = rb.reply else {
+                panic!()
+            };
+            assert_eq!(pa, pb, "session {i} diverged across spill/recover");
+        }
+        assert_eq!(c.open_sessions(), 0);
+        assert!(c.session_store().recover().unwrap().is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -25,6 +25,7 @@ use crate::jsonx::Json;
 use crate::linalg::Mat;
 
 use super::{BsElement, MpElement, SpElement};
+use crate::kalman::KfElement;
 
 /// Pack f64 values as fixed-width hex: 16 lowercase hex characters per
 /// value (the big-endian `to_bits` pattern). Bit-exact for every value,
@@ -306,6 +307,32 @@ pub fn bs_element_from_json(v: &Json) -> Result<BsElement> {
     Ok(BsElement { f, g, log_scale })
 }
 
+/// Kalman filtering element → `{"a": .., "b": "<hex-f64>", "c": ..,
+/// "eta": "<hex-f64>", "j": ..}`. The Gaussian payloads carry means,
+/// covariances, and information blocks whose entries are routinely
+/// negative and can drift non-finite on hostile input — the hex-f64
+/// encoding is bit-exact for all of them, and the reader accepts the
+/// decimal fallbacks like every other element family.
+pub fn kf_element_to_json(e: &KfElement) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("a".to_string(), mat_to_json(&e.a));
+    obj.insert("b".to_string(), Json::Str(f64s_to_hex(&e.b)));
+    obj.insert("c".to_string(), mat_to_json(&e.c));
+    obj.insert("eta".to_string(), Json::Str(f64s_to_hex(&e.eta)));
+    obj.insert("j".to_string(), mat_to_json(&e.j));
+    Json::Obj(obj)
+}
+
+/// Inverse of [`kf_element_to_json`].
+pub fn kf_element_from_json(v: &Json) -> Result<KfElement> {
+    let a = mat_from_json(v.get("a"))?;
+    let b = f64_vec_from_json(v.get("b"), "kf element json: 'b'")?;
+    let c = mat_from_json(v.get("c"))?;
+    let eta = f64_vec_from_json(v.get("eta"), "kf element json: 'eta'")?;
+    let j = mat_from_json(v.get("j"))?;
+    Ok(KfElement { a, b, c, eta, j })
+}
+
 /// Reject a deserialized sum-product element whose matrix does not
 /// match a D-state model — snapshot restore and the session store both
 /// gate on this before the element reaches a scan.
@@ -315,6 +342,32 @@ pub fn check_sp_shape(e: &SpElement, d: usize) -> Result<()> {
             "serialized element: {}x{} matrix for a {d}-state model",
             e.mat.rows(),
             e.mat.cols()
+        )));
+    }
+    Ok(())
+}
+
+/// [`check_sp_shape`] for the Kalman element family: every block must
+/// match an n-state linear-Gaussian model.
+pub fn check_kf_shape(e: &KfElement, n: usize) -> Result<()> {
+    let square = |m: &Mat| m.rows() == n && m.cols() == n;
+    if !square(&e.a)
+        || !square(&e.c)
+        || !square(&e.j)
+        || e.b.len() != n
+        || e.eta.len() != n
+    {
+        return Err(Error::invalid_request(format!(
+            "serialized kf element: blocks ({}x{} A, {}-long b, {}x{} C, \
+             {}-long eta, {}x{} J) for an n={n} model",
+            e.a.rows(),
+            e.a.cols(),
+            e.b.len(),
+            e.c.rows(),
+            e.c.cols(),
+            e.eta.len(),
+            e.j.rows(),
+            e.j.cols()
         )));
     }
     Ok(())
@@ -510,6 +563,54 @@ mod tests {
             packed.len() < legacy.len(),
             "packed {packed} !< legacy {legacy}"
         );
+    }
+
+    #[test]
+    fn kf_element_round_trips_hostile_gaussian_payloads() {
+        // Audit for the Gaussian payloads: means/information vectors are
+        // routinely negative, and covariances can drift negative-definite
+        // or non-finite under garbage input — the snapshot encoding must
+        // carry all of it bit-exactly (spill → restore must not launder
+        // a poisoned session into a healthy-looking one).
+        use crate::kalman::{kf_element_chain, Lgssm};
+        let model = Lgssm::constant_velocity(0.1, 1.0, 0.5);
+        let obs: Vec<f64> = (0..8).map(|k| (k as f64) - 4.0).collect();
+        for e in kf_element_chain(&model, &obs) {
+            let text = kf_element_to_json(&e).to_string_compact();
+            let back = kf_element_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, e);
+        }
+        let hostile = KfElement {
+            a: Mat::from_vec(2, 2, vec![f64::NAN, -0.0, f64::INFINITY, 1e-308]),
+            b: vec![f64::NEG_INFINITY, -3.5],
+            c: Mat::from_vec(2, 2, vec![-1.0, 0.5, 0.5, -2.0]), // neg-definite
+            eta: vec![f64::MIN_POSITIVE, -f64::MAX],
+            j: Mat::from_vec(2, 2, vec![0.0, -0.0, f64::NAN, -1e300]),
+        };
+        let text = kf_element_to_json(&hostile).to_string_compact();
+        let back = kf_element_from_json(&Json::parse(&text).unwrap()).unwrap();
+        // PartialEq fails on NaN; compare bit patterns instead.
+        let bits = |e: &KfElement| -> Vec<u64> {
+            e.a.data()
+                .iter()
+                .chain(&e.b)
+                .chain(e.c.data())
+                .chain(&e.eta)
+                .chain(e.j.data())
+                .map(|v| v.to_bits())
+                .collect()
+        };
+        assert_eq!(bits(&back), bits(&hostile));
+    }
+
+    #[test]
+    fn kf_shape_check_rejects_mismatches() {
+        use crate::kalman::{kf_element_chain, Lgssm};
+        let model = Lgssm::constant_velocity(0.1, 1.0, 0.5);
+        let e = &kf_element_chain(&model, &[1.0, 2.0])[0];
+        assert!(check_kf_shape(e, 4).is_ok());
+        assert!(check_kf_shape(e, 3).is_err());
+        assert!(kf_element_from_json(&Json::parse("{}").unwrap()).is_err());
     }
 
     #[test]

@@ -21,6 +21,16 @@ use crate::jsonx::Json;
 /// | [`MpPar`](Algorithm::MpPar) | MP-Par | Algorithm 5 |
 /// | [`MpPathPar`](Algorithm::MpPathPar) | MP-Path-Par | §IV-B |
 /// | [`BaumWelch`](Algorithm::BaumWelch) | Baum-Welch | §V-C |
+/// | [`KfSeq`](Algorithm::KfSeq) | KF-Seq | 1905.13002, classical KF |
+/// | [`KfPar`](Algorithm::KfPar) | KF-Par | 1905.13002 §3 |
+/// | [`KsSeq`](Algorithm::KsSeq) | KS-Seq | 1905.13002, classical RTS |
+/// | [`KsPar`](Algorithm::KsPar) | KS-Par | 1905.13002 §4 |
+///
+/// The last four are the affine-Gaussian (Kalman) tier of the sibling
+/// paper *Temporal Parallelization of Bayesian Smoothers*
+/// (arXiv:1905.13002); they run on [`crate::kalman::Lgssm`] models
+/// through [`crate::kalman::KalmanEngine`], not the discrete-HMM
+/// [`crate::engine::Engine`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Algorithm {
     /// Classical sum-product smoother (forward–backward).
@@ -41,6 +51,14 @@ pub enum Algorithm {
     MpPathPar,
     /// Baum–Welch EM parameter estimation.
     BaumWelch,
+    /// Classical sequential Kalman filter.
+    KfSeq,
+    /// Parallel-scan Kalman filter.
+    KfPar,
+    /// Classical Rauch–Tung–Striebel smoother.
+    KsSeq,
+    /// Parallel-scan Kalman (RTS) smoother.
+    KsPar,
 }
 
 /// What an algorithm produces — the output-shape family.
@@ -52,11 +70,15 @@ pub enum Task {
     MapDecoding,
     /// Parameter estimation → `BaumWelchResult`.
     Training,
+    /// Gaussian filtered/smoothed moments → `Posterior` with
+    /// `d = n + n²`, row k = `[mean | covariance row-major]`.
+    Gaussian,
 }
 
 impl Algorithm {
-    /// All nine methods, in the paper's order.
-    pub const ALL: [Algorithm; 9] = [
+    /// All thirteen methods: the paper's nine in its order, then the
+    /// Kalman tier of arXiv:1905.13002.
+    pub const ALL: [Algorithm; 13] = [
         Algorithm::SpSeq,
         Algorithm::SpPar,
         Algorithm::BsSeq,
@@ -66,6 +88,10 @@ impl Algorithm {
         Algorithm::MpPar,
         Algorithm::MpPathPar,
         Algorithm::BaumWelch,
+        Algorithm::KfSeq,
+        Algorithm::KfPar,
+        Algorithm::KsSeq,
+        Algorithm::KsPar,
     ];
 
     /// Stable snake_case identifier — also the AOT artifact entry name
@@ -81,6 +107,10 @@ impl Algorithm {
             Algorithm::MpPar => "mp_par",
             Algorithm::MpPathPar => "mp_path_par",
             Algorithm::BaumWelch => "baum_welch",
+            Algorithm::KfSeq => "kf_seq",
+            Algorithm::KfPar => "kf_par",
+            Algorithm::KsSeq => "ks_seq",
+            Algorithm::KsPar => "ks_par",
         }
     }
 
@@ -101,6 +131,10 @@ impl Algorithm {
             Algorithm::MpPar => "MP-Par",
             Algorithm::MpPathPar => "MP-Path-Par",
             Algorithm::BaumWelch => "Baum-Welch",
+            Algorithm::KfSeq => "KF-Seq",
+            Algorithm::KfPar => "KF-Par",
+            Algorithm::KsSeq => "KS-Seq",
+            Algorithm::KsPar => "KS-Par",
         }
     }
 
@@ -117,6 +151,8 @@ impl Algorithm {
             Algorithm::Viterbi | Algorithm::MpSeq | Algorithm::MpPar
             | Algorithm::MpPathPar => Task::MapDecoding,
             Algorithm::BaumWelch => Task::Training,
+            Algorithm::KfSeq | Algorithm::KfPar | Algorithm::KsSeq
+            | Algorithm::KsPar => Task::Gaussian,
         }
     }
 
@@ -124,11 +160,17 @@ impl Algorithm {
     /// incrementally: the parallel-scan formulations whose element
     /// algebra is checkpointable — `SpPar` behind
     /// `Session::filtered`/`smoothed_lag`/`finish`, `MpPar` behind
-    /// `map_lag`/`finish_map`, and `BsPar` behind
-    /// `SessionKind::Bayes` sessions (`filtered`/`finish`; fixed-lag
-    /// queries stay unsupported for that family).
+    /// `map_lag`/`finish_map`, `BsPar` behind `SessionKind::Bayes`
+    /// sessions (`filtered`/`finish`; fixed-lag queries stay
+    /// unsupported for that family), and `KfPar`/`KsPar` behind
+    /// `SessionKind::Kalman` sessions (`filtered` serves the KF-Par
+    /// moments, `finish` the KS-Par smoothing pass).
     pub fn supports_streaming(self) -> bool {
-        matches!(self, Algorithm::SpPar | Algorithm::MpPar | Algorithm::BsPar)
+        matches!(
+            self,
+            Algorithm::SpPar | Algorithm::MpPar | Algorithm::BsPar
+                | Algorithm::KfPar | Algorithm::KsPar
+        )
     }
 
     /// Whether this is a parallel-scan formulation (O(log T) span).
@@ -136,7 +178,7 @@ impl Algorithm {
         matches!(
             self,
             Algorithm::SpPar | Algorithm::BsPar | Algorithm::MpPar
-                | Algorithm::MpPathPar
+                | Algorithm::MpPathPar | Algorithm::KfPar | Algorithm::KsPar
         )
     }
 
@@ -147,6 +189,8 @@ impl Algorithm {
             Algorithm::BsPar => Algorithm::BsSeq,
             Algorithm::MpPar => Algorithm::MpSeq,
             Algorithm::MpPathPar => Algorithm::Viterbi,
+            Algorithm::KfPar => Algorithm::KfSeq,
+            Algorithm::KsPar => Algorithm::KsSeq,
             other => other,
         }
     }
@@ -157,19 +201,23 @@ impl Algorithm {
             Algorithm::SpSeq => Algorithm::SpPar,
             Algorithm::BsSeq => Algorithm::BsPar,
             Algorithm::MpSeq | Algorithm::Viterbi => Algorithm::MpPar,
+            Algorithm::KfSeq => Algorithm::KfPar,
+            Algorithm::KsSeq => Algorithm::KsPar,
             other => other,
         }
     }
 
     /// Block-artifact family prefix for the §V-B sharded plans
-    /// (`{family}_block_fold_first`, …); `None` for training.
+    /// (`{family}_block_fold_first`, …); `None` for training and for
+    /// the Kalman tier (no AOT artifacts compiled for it yet).
     pub fn artifact_family(self) -> Option<&'static str> {
         match self {
             Algorithm::SpSeq | Algorithm::SpPar => Some("sp"),
             Algorithm::BsSeq | Algorithm::BsPar => Some("bs"),
             Algorithm::Viterbi | Algorithm::MpSeq | Algorithm::MpPar
             | Algorithm::MpPathPar => Some("mp"),
-            Algorithm::BaumWelch => None,
+            Algorithm::BaumWelch | Algorithm::KfSeq | Algorithm::KfPar
+            | Algorithm::KsSeq | Algorithm::KsPar => None,
         }
     }
 
@@ -189,8 +237,8 @@ mod tests {
     use super::*;
 
     #[test]
-    fn covers_all_nine_methods() {
-        assert_eq!(Algorithm::ALL.len(), 9);
+    fn covers_all_thirteen_methods() {
+        assert_eq!(Algorithm::ALL.len(), 13);
         // Names are unique.
         for (i, a) in Algorithm::ALL.into_iter().enumerate() {
             for b in &Algorithm::ALL[i + 1..] {
@@ -222,9 +270,13 @@ mod tests {
         assert!(Algorithm::SpPar.supports_streaming());
         assert!(Algorithm::MpPar.supports_streaming());
         assert!(Algorithm::BsPar.supports_streaming());
+        assert!(Algorithm::KfPar.supports_streaming());
+        assert!(Algorithm::KsPar.supports_streaming());
         assert!(!Algorithm::SpSeq.supports_streaming());
         assert!(!Algorithm::BsSeq.supports_streaming());
         assert!(!Algorithm::BaumWelch.supports_streaming());
+        assert!(!Algorithm::KfSeq.supports_streaming());
+        assert!(!Algorithm::KsSeq.supports_streaming());
     }
 
     #[test]
@@ -234,6 +286,10 @@ mod tests {
         assert_eq!(Algorithm::Viterbi.par_variant(), Algorithm::MpPar);
         assert_eq!(Algorithm::MpPathPar.seq_variant(), Algorithm::Viterbi);
         assert_eq!(Algorithm::BaumWelch.seq_variant(), Algorithm::BaumWelch);
+        assert_eq!(Algorithm::KfSeq.par_variant(), Algorithm::KfPar);
+        assert_eq!(Algorithm::KfPar.seq_variant(), Algorithm::KfSeq);
+        assert_eq!(Algorithm::KsSeq.par_variant(), Algorithm::KsPar);
+        assert_eq!(Algorithm::KsPar.seq_variant(), Algorithm::KsSeq);
         for a in Algorithm::ALL {
             // Variant maps preserve the task family.
             assert_eq!(a.task(), a.seq_variant().task());

@@ -79,6 +79,14 @@ impl Backend for NativeBackend {
             Algorithm::BaumWelch => EngineOutput::Training(Box::new(
                 inference::baum_welch(hmm, ys, baum_welch)?,
             )),
+            Algorithm::KfSeq | Algorithm::KfPar | Algorithm::KsSeq
+            | Algorithm::KsPar => {
+                return Err(Error::invalid_request(format!(
+                    "{} runs on linear-Gaussian models — use \
+                     kalman::KalmanEngine, not the discrete-HMM engine",
+                    alg.name()
+                )))
+            }
         })
     }
 }
@@ -215,5 +223,8 @@ pub fn decode_core_outputs(
         Task::Training => {
             Err(Error::artifact("training has no compiled artifact path"))
         }
+        Task::Gaussian => Err(Error::artifact(
+            "the Kalman tier has no compiled artifact path",
+        )),
     }
 }

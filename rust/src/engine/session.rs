@@ -33,13 +33,23 @@
 //!   under the same scan options (`finish_map` ↔ `Algorithm::MpPar`) —
 //!   property-tested over random push splits in `engine::tests`.
 //!
-//! Sessions come in two element families ([`SessionKind`]): the default
-//! sum-product sessions above, and *Bayesian filtering* sessions
+//! Sessions come in three element families ([`SessionKind`]): the
+//! default sum-product sessions above; *Bayesian filtering* sessions
 //! (`SessionKind::Bayes`) that stream the BS-Par element algebra of
 //! Särkkä & García-Fernández — `push`/`filtered`/`finish` only, with
 //! `finish` bit-identical to `Engine::run(Algorithm::BsPar, ..)`;
-//! fixed-lag windows are not implemented for that family and return a
-//! typed error.
+//! and *Kalman* sessions (`SessionKind::Kalman`) that stream the
+//! affine-Gaussian element algebra of `crate::kalman` over a
+//! linear-Gaussian model. Kalman sessions are opened through
+//! [`crate::kalman::KalmanEngine::open_session`] (they carry an
+//! [`Lgssm`], not an HMM) and ingest *encoded* observations — each f64
+//! as two u32 words ([`crate::kalman::obs_to_words`]) — so they ride
+//! the same u32 append channel as the discrete families end to end
+//! (wire, store, router). Appends may split rows at any word boundary;
+//! torn tails buffer until the row completes. `push`/`filtered`/
+//! `finish` are served (`finish` = the full KS-Par smoother,
+//! bit-identical to one-shot `kalman::ks_par` under the session's scan
+//! options); fixed-lag and MAP queries return a typed error.
 //!
 //! Sessions snapshot to JSON ([`Session::snapshot`] /
 //! [`Engine::resume_session`]): observations plus the serialized block
@@ -52,8 +62,10 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::elements::serde::{
-    bs_element_from_json, bs_element_to_json, check_bs_shape, check_sp_shape,
-    obs_from_json, obs_to_json, sp_element_from_json, sp_element_to_json,
+    bs_element_from_json, bs_element_to_json, check_bs_shape, check_kf_shape,
+    check_sp_shape, f64s_from_hex, f64s_to_hex, kf_element_from_json,
+    kf_element_to_json, obs_from_json, obs_to_json, sp_element_from_json,
+    sp_element_to_json,
 };
 use crate::elements::{
     bs_element_chain, bs_element_protos, bs_prior_element, mp_element_protos,
@@ -69,6 +81,11 @@ use crate::inference::{
     MapEstimate, Posterior, Workspace,
 };
 use crate::jsonx::Json;
+use crate::kalman::{
+    kf_element_chain, kf_element_protos, kf_prior_element, kf_step_element,
+    ks_from_forward, predict_moments, step_loglik, words_to_obs, KfElement,
+    KfOp, KfProtos, KsElement, Lgssm,
+};
 use crate::linalg::normalize_sum;
 use crate::scan::{run_scan_rev, CheckpointedScan, ScanEngine, ScanOptions};
 
@@ -88,6 +105,12 @@ pub enum SessionKind {
     /// Bayesian filtering elements (BS-Par): `push`/`filtered`/`finish`
     /// only; fixed-lag and MAP queries return a typed error.
     Bayes,
+    /// Kalman (affine-Gaussian) elements over an [`Lgssm`]:
+    /// `push`/`filtered`/`finish` only, with word-encoded f64
+    /// observations. Opened through
+    /// [`crate::kalman::KalmanEngine::open_session`] — [`Engine`]
+    /// cannot host this family (it has no Gaussian model).
+    Kalman,
 }
 
 impl SessionKind {
@@ -96,6 +119,7 @@ impl SessionKind {
         match self {
             SessionKind::SumProduct => "sp",
             SessionKind::Bayes => "bs",
+            SessionKind::Kalman => "kf",
         }
     }
 
@@ -104,6 +128,7 @@ impl SessionKind {
         match s {
             "sp" => Some(SessionKind::SumProduct),
             "bs" => Some(SessionKind::Bayes),
+            "kf" => Some(SessionKind::Kalman),
             _ => None,
         }
     }
@@ -128,12 +153,18 @@ pub struct SessionOptions {
 /// and the running log-likelihood log p(y_{1:step}).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Filtered {
-    /// Filtering marginal p(x_step | y_{1:step}), length D.
+    /// Filtering marginal p(x_step | y_{1:step}): length D for the
+    /// discrete families; `[mean | covariance row-major]` (length
+    /// n + n²) for Kalman sessions.
     pub probs: Vec<f64>,
-    /// Running log-likelihood log p(y_{1:step}).
+    /// Running log-likelihood log p(y_{1:step}). For Kalman sessions
+    /// this accumulates incrementally per push and is tolerance-equal
+    /// (not bit-equal) to the one-shot value; `finish` recomputes it
+    /// exactly.
     pub log_likelihood: f64,
     /// Number of observations conditioned on (the absolute step is
-    /// `step - 1`).
+    /// `step - 1`). Kalman sessions count complete observation rows,
+    /// not raw words.
     pub step: usize,
 }
 
@@ -212,10 +243,100 @@ impl BsTrack {
     }
 }
 
+/// Kalman streaming track: the checkpointed forward scan over
+/// [`KfElement`]s plus the word-row ingestion state. Unlike the
+/// discrete tracks it owns its model (sessions of this family have no
+/// HMM) and its finish scratch (the discrete [`Workspace`] stays
+/// Gaussian-free).
+struct KfTrack {
+    model: Arc<Lgssm>,
+    scan: CheckpointedScan<KfElement, KfOp>,
+    protos: KfProtos,
+    /// Complete observation rows ingested so far (`ys` may additionally
+    /// hold a torn tail of un-decodable words).
+    steps: usize,
+    /// Running filter log-likelihood over the complete rows. Summed
+    /// incrementally from checkpoint prefixes, so it is tolerance-equal
+    /// (not bit-equal) to the one-shot value; `finish` recomputes it
+    /// exactly through the shared post-pass.
+    loglik: f64,
+    /// Owned `finish` scratch (forward materialization / backward chain).
+    fwd: Vec<KfElement>,
+    bwd: Vec<KsElement>,
+}
+
+impl KfTrack {
+    fn new(model: Arc<Lgssm>, block: usize) -> Self {
+        Self {
+            scan: CheckpointedScan::new(KfOp { n: model.state_dim() }, block),
+            protos: kf_element_protos(&model),
+            model,
+            steps: 0,
+            loglik: 0.0,
+            fwd: Vec::new(),
+            bwd: Vec::new(),
+        }
+    }
+
+    /// Ingest every complete observation row now available in `ys`
+    /// beyond the rows already consumed: decode, accumulate the
+    /// incremental log-likelihood from the current prefix moments, and
+    /// push the chain element (prior element at row 0 — the same
+    /// constructors as the one-shot chain builder, which is what makes
+    /// `finish` bit-identical to one-shot KS-Par).
+    fn drain(&mut self, ys: &[u32]) {
+        let wps = self.model.words_per_step();
+        while (self.steps + 1) * wps <= ys.len() {
+            let lo = self.steps * wps;
+            let row = words_to_obs(&ys[lo..lo + wps]).expect("aligned row");
+            let (pm, pc) = if self.steps == 0 {
+                predict_moments(
+                    &self.model,
+                    self.model.prior_mean(),
+                    self.model.prior_cov(),
+                )
+            } else {
+                let p = self.scan.prefix();
+                predict_moments(&self.model, &p.b, &p.c)
+            };
+            self.loglik += step_loglik(&self.model, &pm, &pc, &row);
+            let e = if self.steps == 0 {
+                kf_prior_element(&self.model, &row)
+            } else {
+                kf_step_element(&self.protos, &row)
+            };
+            self.scan.push(e);
+            self.steps += 1;
+        }
+    }
+}
+
+/// The model a session streams against: discrete families carry the
+/// HMM, the Kalman family a linear-Gaussian model.
+enum ModelRef {
+    Hmm(Arc<Hmm>),
+    Lgssm(Arc<Lgssm>),
+}
+
+impl ModelRef {
+    /// The discrete model — only reachable from sp/bs/mp code paths,
+    /// which exist exactly when the session was opened over an HMM.
+    fn hmm(&self) -> &Arc<Hmm> {
+        match self {
+            ModelRef::Hmm(h) => h,
+            ModelRef::Lgssm(_) => {
+                unreachable!("discrete track on a Kalman session")
+            }
+        }
+    }
+}
+
 /// A long-lived streaming inference session (see the module docs for
-/// the state diagram and cost model). Created by [`Engine::open_session`].
+/// the state diagram and cost model). Created by [`Engine::open_session`]
+/// (discrete families) or [`crate::kalman::KalmanEngine::open_session`]
+/// (Kalman family).
 pub struct Session {
-    hmm: Arc<Hmm>,
+    model: ModelRef,
     scan: ScanOptions,
     ys: Vec<u32>,
     kind: SessionKind,
@@ -223,6 +344,8 @@ pub struct Session {
     sp: Option<SpTrack>,
     /// Some iff `kind == Bayes`.
     bs: Option<BsTrack>,
+    /// Some iff `kind == Kalman`.
+    kf: Option<KfTrack>,
     mp: Option<MpTrack>,
     ws: Workspace,
 }
@@ -235,6 +358,12 @@ impl Engine {
     /// [`Algorithm::BsPar`] for Bayes sessions) on an engine configured
     /// with [`Session::scan_options`] — in particular on *this* engine
     /// when its own options already pin the same block.
+    ///
+    /// # Panics
+    ///
+    /// If `opts.kind` is [`SessionKind::Kalman`] — that family carries a
+    /// Gaussian model this engine does not have; open it through
+    /// [`crate::kalman::KalmanEngine::open_session`].
     ///
     /// [`Algorithm::SpPar`]: super::Algorithm::SpPar
     /// [`Algorithm::BsPar`]: super::Algorithm::BsPar
@@ -253,48 +382,27 @@ impl Engine {
     /// state: shape mismatches are rejected, stale summaries are not
     /// re-verified.
     pub fn resume_session(&self, snap: &Json) -> Result<Session> {
-        // Version 1 wrote decimal number arrays; version 2 writes the
-        // packed hex payloads of `elements::serde`. The payload parsers
-        // accept both encodings, so both versions resume here.
-        if !matches!(snap.get("version").as_usize(), Some(1 | 2)) {
+        let (kind, block, track_map, ys) = snapshot_header(snap)?;
+        if kind == SessionKind::Kalman {
             return Err(Error::invalid_request(
-                "session snapshot: unsupported or missing version \
-                 (expected 1 or 2)",
+                "kalman session snapshots resume through \
+                 kalman::KalmanEngine::resume_session — this engine has no \
+                 Gaussian model",
             ));
         }
-        let kind = match snap.get("kind") {
-            Json::Null => SessionKind::SumProduct, // pre-kind snapshots
-            v => v
-                .as_str()
-                .and_then(SessionKind::parse)
-                .ok_or_else(|| {
-                    Error::invalid_request("session snapshot: unknown 'kind'")
-                })?,
-        };
-        let block = snap
-            .get("block")
-            .as_usize()
-            .ok_or_else(|| Error::invalid_request("session snapshot: 'block'"))?
-            .max(1);
-        let track_map = snap.get("track_map").as_bool().unwrap_or(false);
-        let ys: Vec<u32> = match snap.get("ys") {
-            Json::Null => {
-                return Err(Error::invalid_request("session snapshot: 'ys'"))
-            }
-            v => obs_from_json(v)?,
-        };
         if !ys.is_empty() {
             self.hmm.check_observations(&ys)?;
         }
         let d = self.hmm.num_states();
 
         let mut session = Session {
-            hmm: Arc::clone(&self.hmm),
+            model: ModelRef::Hmm(Arc::clone(&self.hmm)),
             scan: Session::pinned_scan(self.scan, block),
             ys,
             kind,
             sp: None,
             bs: None,
+            kf: None,
             mp: None,
             ws: Workspace::default(),
         };
@@ -358,9 +466,44 @@ impl Engine {
                 session.bs =
                     Some(BsTrack { scan, protos: bs_element_protos(&self.hmm) });
             }
+            SessionKind::Kalman => unreachable!("rejected above"),
         }
         Ok(session)
     }
+}
+
+/// Parse the `version`/`kind`/`block`/`track_map`/`ys` header shared by
+/// every snapshot family ([`Engine::resume_session`] and
+/// `Session::resume_kalman`).
+fn snapshot_header(snap: &Json) -> Result<(SessionKind, usize, bool, Vec<u32>)> {
+    // Version 1 wrote decimal number arrays; version 2 writes the
+    // packed hex payloads of `elements::serde`. The payload parsers
+    // accept both encodings, so both versions resume here.
+    if !matches!(snap.get("version").as_usize(), Some(1 | 2)) {
+        return Err(Error::invalid_request(
+            "session snapshot: unsupported or missing version \
+             (expected 1 or 2)",
+        ));
+    }
+    let kind = match snap.get("kind") {
+        Json::Null => SessionKind::SumProduct, // pre-kind snapshots
+        v => v.as_str().and_then(SessionKind::parse).ok_or_else(|| {
+            Error::invalid_request("session snapshot: unknown 'kind'")
+        })?,
+    };
+    let block = snap
+        .get("block")
+        .as_usize()
+        .ok_or_else(|| Error::invalid_request("session snapshot: 'block'"))?
+        .max(1);
+    let track_map = snap.get("track_map").as_bool().unwrap_or(false);
+    let ys: Vec<u32> = match snap.get("ys") {
+        Json::Null => {
+            return Err(Error::invalid_request("session snapshot: 'ys'"))
+        }
+        v => obs_from_json(v)?,
+    };
+    Ok((kind, block, track_map, ys))
 }
 
 impl Session {
@@ -372,17 +515,130 @@ impl Session {
                 opts.track_map.then(|| MpTrack::new(&hmm, block)),
             ),
             SessionKind::Bayes => (None, Some(BsTrack::new(&hmm, block)), None),
+            SessionKind::Kalman => panic!(
+                "kalman sessions are opened through \
+                 kalman::KalmanEngine::open_session"
+            ),
         };
         Self {
             scan: Self::pinned_scan(scan, block),
-            hmm,
+            model: ModelRef::Hmm(hmm),
             ys: Vec::new(),
             kind: opts.kind,
             sp,
             bs,
+            kf: None,
             mp,
             ws: Workspace::default(),
         }
+    }
+
+    /// Open a Kalman streaming session. Crate-internal: callers go
+    /// through [`crate::kalman::KalmanEngine::open_session`], which
+    /// supplies the Gaussian model and scan options.
+    pub(crate) fn open_kalman(
+        model: Arc<Lgssm>,
+        scan: ScanOptions,
+        block: usize,
+    ) -> Session {
+        Session {
+            scan: Self::pinned_scan(scan, block),
+            model: ModelRef::Lgssm(Arc::clone(&model)),
+            ys: Vec::new(),
+            kind: SessionKind::Kalman,
+            sp: None,
+            bs: None,
+            kf: Some(KfTrack::new(model, block)),
+            mp: None,
+            ws: Workspace::default(),
+        }
+    }
+
+    /// Restore a Kalman session from a [`Session::snapshot`].
+    /// Crate-internal: callers go through
+    /// [`crate::kalman::KalmanEngine::resume_session`]. Mirrors
+    /// [`Engine::resume_session`]: the word stream is replayed into a
+    /// fresh element chain, the serialized block summaries skip the
+    /// refold, and a trailing torn row (if any) stays buffered.
+    pub(crate) fn resume_kalman(
+        model: Arc<Lgssm>,
+        scan: ScanOptions,
+        snap: &Json,
+    ) -> Result<Session> {
+        let (kind, block, _track_map, ys) = snapshot_header(snap)?;
+        if kind != SessionKind::Kalman {
+            return Err(Error::invalid_request(format!(
+                "snapshot kind '{}' is not a kalman session — resume it \
+                 through engine::Engine::resume_session",
+                kind.name()
+            )));
+        }
+        let n = model.state_dim();
+        let summaries: Vec<KfElement> = snap
+            .get("kf_summaries")
+            .as_arr()
+            .ok_or_else(|| {
+                Error::invalid_request("session snapshot: 'kf_summaries'")
+            })?
+            .iter()
+            .map(kf_element_from_json)
+            .collect::<Result<_>>()?;
+        let tail = match snap.get("kf_tail") {
+            Json::Null => None,
+            v => Some(kf_element_from_json(v)?),
+        };
+        for e in summaries.iter().chain(tail.as_ref()) {
+            check_kf_shape(e, n)?;
+        }
+        let loglik = match snap.get("kf_loglik") {
+            // Version 2: one hex-packed f64 (exact restore).
+            Json::Str(s) => {
+                let v = f64s_from_hex(s)?;
+                if v.len() != 1 {
+                    return Err(Error::invalid_request(
+                        "session snapshot: 'kf_loglik' must hold exactly \
+                         one value",
+                    ));
+                }
+                v[0]
+            }
+            Json::Num(v) => *v,
+            _ => {
+                return Err(Error::invalid_request(
+                    "session snapshot: 'kf_loglik'",
+                ))
+            }
+        };
+        let wps = model.words_per_step();
+        let steps = ys.len() / wps;
+        let obs = words_to_obs(&ys[..steps * wps])?;
+        let elems = kf_element_chain(&model, &obs);
+        let scan_cp = CheckpointedScan::from_parts(
+            KfOp { n },
+            block,
+            elems,
+            summaries,
+            tail,
+        )?;
+        Ok(Session {
+            scan: Self::pinned_scan(scan, block),
+            ys,
+            kind: SessionKind::Kalman,
+            sp: None,
+            bs: None,
+            kf: Some(KfTrack {
+                scan: scan_cp,
+                protos: kf_element_protos(&model),
+                model: Arc::clone(&model),
+                steps,
+                loglik,
+                fwd: Vec::new(),
+                bwd: Vec::new(),
+            }),
+            model: ModelRef::Lgssm(model),
+            mp: None,
+            ws: Workspace::default(),
+        })
     }
 
     /// The engine's options with the session's block pinned and the
@@ -393,7 +649,8 @@ impl Session {
         scan
     }
 
-    /// Number of observations pushed so far.
+    /// Number of observations pushed so far (raw u32 words for Kalman
+    /// sessions — divide by `Lgssm::words_per_step` for rows).
     pub fn len(&self) -> usize {
         self.ys.len()
     }
@@ -410,9 +667,10 @@ impl Session {
 
     /// Checkpoint block length B.
     pub fn block(&self) -> usize {
-        match (&self.sp, &self.bs) {
-            (Some(sp), _) => sp.scan.block(),
-            (_, Some(bs)) => bs.scan.block(),
+        match (&self.sp, &self.bs, &self.kf) {
+            (Some(sp), _, _) => sp.scan.block(),
+            (_, Some(bs), _) => bs.scan.block(),
+            (_, _, Some(kf)) => kf.scan.block(),
             _ => unreachable!("session has exactly one primary track"),
         }
     }
@@ -424,9 +682,41 @@ impl Session {
         self.scan
     }
 
-    /// Everything pushed so far.
+    /// Everything pushed so far (the encoded word stream for Kalman
+    /// sessions).
     pub fn observations(&self) -> &[u32] {
         &self.ys
+    }
+
+    /// Validate an append without ingesting it — exactly what
+    /// [`push`](Self::push) would reject, checked ahead of time. The
+    /// coordinator calls this before the chunk reaches the durable
+    /// append-ahead log, so an invalid chunk can never become a
+    /// replayable log record.
+    ///
+    /// For discrete families this is the model's symbol-range check; for
+    /// Kalman sessions the words are joined with any buffered torn-row
+    /// tail and every row the append *completes* is checked finite (a
+    /// torn f64 half cannot be judged until its row closes).
+    pub fn validate_append(&self, obs: &[u32]) -> Result<()> {
+        if obs.is_empty() {
+            return Ok(());
+        }
+        if let Some(kf) = &self.kf {
+            let wps = kf.model.words_per_step();
+            let mut pending = self.ys[kf.steps * wps..].to_vec();
+            pending.extend_from_slice(obs);
+            let complete = (pending.len() / wps) * wps;
+            let rows =
+                words_to_obs(&pending[..complete]).expect("even word count");
+            if let Some(v) = rows.iter().find(|v| !v.is_finite()) {
+                return Err(Error::invalid_request(format!(
+                    "non-finite observation value {v} in append"
+                )));
+            }
+            return Ok(());
+        }
+        self.model.hmm().check_observations(obs)
     }
 
     /// Ingest observations: O(k·D³) fold work — per observation, one
@@ -438,14 +728,19 @@ impl Session {
         if obs.is_empty() {
             return Ok(());
         }
-        self.hmm.check_observations(obs)?;
+        self.validate_append(obs)?;
+        if let Some(kf) = &mut self.kf {
+            self.ys.extend_from_slice(obs);
+            kf.drain(&self.ys);
+            return Ok(());
+        }
         for &y in obs {
             let k = self.ys.len();
             if let Some(sp) = &mut self.sp {
                 sp.scan.push(element_at(
                     k,
                     y,
-                    || sp_prior_element(&self.hmm, y),
+                    || sp_prior_element(self.model.hmm(), y),
                     &sp.protos,
                 ));
             }
@@ -453,7 +748,7 @@ impl Session {
                 bs.scan.push(element_at(
                     k,
                     y,
-                    || bs_prior_element(&self.hmm, y),
+                    || bs_prior_element(self.model.hmm(), y),
                     &bs.protos,
                 ));
             }
@@ -461,7 +756,7 @@ impl Session {
                 mp.scan.push(element_at(
                     k,
                     y,
-                    || mp_prior_element(&self.hmm, y),
+                    || mp_prior_element(self.model.hmm(), y),
                     &mp.protos,
                 ));
             }
@@ -474,6 +769,25 @@ impl Session {
     /// log-likelihood — one combine off the checkpoint state, for either
     /// element family.
     pub fn filtered(&self) -> Result<Filtered> {
+        if let Some(kf) = &self.kf {
+            // Complete rows only: a buffered torn tail is invisible to
+            // queries until its row closes.
+            if kf.steps == 0 {
+                return Err(Error::invalid_request(
+                    "session has no complete observation row yet",
+                ));
+            }
+            let p = kf.scan.prefix();
+            let n = kf.model.state_dim();
+            let mut probs = Vec::with_capacity(n + n * n);
+            probs.extend_from_slice(&p.b);
+            probs.extend_from_slice(p.c.data());
+            return Ok(Filtered {
+                probs,
+                log_likelihood: kf.loglik,
+                step: kf.steps,
+            });
+        }
         self.check_nonempty()?;
         let step = self.ys.len();
         match (&self.sp, &self.bs) {
@@ -506,10 +820,13 @@ impl Session {
     /// Sum-product sessions only.
     pub fn smoothed_lag(&mut self, lag: usize) -> Result<LagSmoothed> {
         self.check_nonempty()?;
+        if self.kf.is_some() {
+            return Err(kalman_unsupported("smoothed_lag"));
+        }
         let Some(sp) = self.sp.as_ref() else {
             return Err(bayes_unsupported("smoothed_lag"));
         };
-        let d = self.hmm.num_states();
+        let d = self.model.hmm().num_states();
         let sb = &mut self.ws.stream;
         let win = lag_window(
             &sp.scan,
@@ -544,11 +861,14 @@ impl Session {
     /// sessions only.
     pub fn map_lag(&mut self, lag: usize) -> Result<LagDecoded> {
         self.check_nonempty()?;
+        if self.kf.is_some() {
+            return Err(kalman_unsupported("map_lag"));
+        }
         if self.sp.is_none() {
             return Err(bayes_unsupported("map_lag"));
         }
         self.ensure_mp();
-        let d = self.hmm.num_states();
+        let d = self.model.hmm().num_states();
         let mp = self.mp.as_ref().expect("ensure_mp");
         let sb = &mut self.ws.stream;
         let win = lag_window(
@@ -586,13 +906,35 @@ impl Session {
     /// more pushes may follow.
     pub fn finish(&mut self) -> Result<Posterior> {
         self.check_nonempty()?;
-        let d = self.hmm.num_states();
+        if let Some(kf) = &mut self.kf {
+            // KS-Par replay: checkpointed forward materialization
+            // (bit-identical to the one-shot forward scan under the
+            // pinned block), then the shared smoothing post-pass — which
+            // also recomputes the log-likelihood exactly.
+            if kf.steps == 0 {
+                return Err(Error::invalid_request(
+                    "session has no complete observation row yet",
+                ));
+            }
+            let wps = kf.model.words_per_step();
+            if self.ys.len() != kf.steps * wps {
+                return Err(Error::invalid_request(
+                    "cannot finish with a torn observation row pending \
+                     (incomplete f64 words buffered)",
+                ));
+            }
+            let obs = words_to_obs(&self.ys)?;
+            kf.scan.materialize_into(&mut kf.fwd, self.scan);
+            let KfTrack { model, fwd, bwd, .. } = kf;
+            return Ok(ks_from_forward(model, &obs, fwd, self.scan, bwd));
+        }
+        let d = self.model.hmm().num_states();
         if let Some(bs) = &self.bs {
             // BS-Par replay: checkpointed forward materialization, then
             // the shared RTS backward pass.
             bs.scan.materialize_into(&mut self.ws.bs.elems, self.scan);
             return Ok(bs_posterior_from_forward(
-                &self.hmm,
+                self.model.hmm(),
                 &self.ws.bs.elems,
                 self.scan,
                 &mut self.ws.bs.rts,
@@ -615,11 +957,14 @@ impl Session {
     /// [`scan_options`](Self::scan_options). Sum-product sessions only.
     pub fn finish_map(&mut self) -> Result<MapEstimate> {
         self.check_nonempty()?;
+        if self.kf.is_some() {
+            return Err(kalman_unsupported("finish_map"));
+        }
         if self.sp.is_none() {
             return Err(bayes_unsupported("finish_map"));
         }
         self.ensure_mp();
-        let d = self.hmm.num_states();
+        let d = self.model.hmm().num_states();
         let mp = self.mp.as_ref().expect("ensure_mp");
         materialize_full(
             &mp.scan,
@@ -648,6 +993,25 @@ impl Session {
         obj.insert("block".to_string(), Json::Num(self.block() as f64));
         obj.insert("track_map".to_string(), Json::Bool(self.mp.is_some()));
         obj.insert("ys".to_string(), obs_to_json(&self.ys));
+        if let Some(kf) = &self.kf {
+            obj.insert(
+                "kf_summaries".to_string(),
+                Json::Arr(
+                    kf.scan.summaries().iter().map(kf_element_to_json).collect(),
+                ),
+            );
+            obj.insert(
+                "kf_tail".to_string(),
+                kf.scan.tail_acc().map_or(Json::Null, kf_element_to_json),
+            );
+            // Exact (hex) so a restored session's `filtered` is
+            // bit-identical to the never-snapshotted one.
+            obj.insert(
+                "kf_loglik".to_string(),
+                Json::Str(f64s_to_hex(&[kf.loglik])),
+            );
+            return Json::Obj(obj);
+        }
         match (&self.sp, &self.bs) {
             (Some(sp), _) => {
                 obj.insert(
@@ -684,12 +1048,12 @@ impl Session {
         if self.mp.is_some() {
             return;
         }
-        let mut track = MpTrack::new(&self.hmm, self.block());
+        let mut track = MpTrack::new(self.model.hmm(), self.block());
         for (k, &y) in self.ys.iter().enumerate() {
             track.scan.push(element_at(
                 k,
                 y,
-                || mp_prior_element(&self.hmm, y),
+                || mp_prior_element(self.model.hmm(), y),
                 &track.protos,
             ));
         }
@@ -713,6 +1077,16 @@ fn bayes_unsupported(what: &str) -> Error {
     Error::invalid_request(format!(
         "bayes (BS-Par) sessions support push/filtered/finish/snapshot only: \
          {what} is not implemented for the Bayesian element family"
+    ))
+}
+
+/// The typed rejection for queries the Kalman element family does not
+/// serve (fixed-lag windows and MAP decoding are discrete-track
+/// features).
+fn kalman_unsupported(what: &str) -> Error {
+    Error::invalid_request(format!(
+        "kalman sessions support push/filtered/finish/snapshot only: \
+         {what} is not implemented for the Gaussian element family"
     ))
 }
 

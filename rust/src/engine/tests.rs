@@ -66,6 +66,13 @@ fn all_nine_algorithms_match_free_functions() {
         let tr = sample(&hmm, t, &mut rng);
         let ys = &tr.observations;
         for alg in Algorithm::ALL {
+            if alg.task() == super::Task::Gaussian {
+                // The Kalman tier runs on Lgssm models through
+                // kalman::KalmanEngine; the discrete engine rejects it
+                // with a typed error (covered further below).
+                assert!(engine.run(alg, ys).is_err());
+                continue;
+            }
             let out = engine.run(alg, ys).unwrap();
             let name = alg.name();
             match alg {
@@ -755,4 +762,171 @@ fn explicit_native_backend_matches_default() {
         EngineOutput::Training(res) => assert!(res.iterations > 0),
         other => panic!("expected training output, got {other:?}"),
     }
+}
+
+/// Kalman-kind sessions stream the affine-Gaussian element algebra over
+/// the u32 word channel: any split of the encoded stream into random
+/// pushes — including splits that tear an f64 or an observation row —
+/// yields `finish()` bit-identical to the one-shot
+/// `KalmanEngine::run(KsPar, ..)` under the same scan options.
+#[test]
+fn kalman_session_finish_bit_identical_over_random_push_splits() {
+    use crate::kalman::{obs_to_words, KalmanEngine, Lgssm};
+    use crate::kalman::tests_support::tracking_obs;
+
+    let mut runner = Runner::new("kalman-session-splits");
+    runner.run(8, |r| {
+        let t = 1 + r.below(200) as usize;
+        let block = 1 + r.below(48) as usize;
+        let opts = ScanOptions {
+            threads: 1 + r.below(4) as usize,
+            min_parallel_work: 8,
+            ..ScanOptions::default().with_block(block)
+        };
+        let model = Lgssm::constant_velocity(0.1, 0.8, 0.5);
+        let obs = tracking_obs(&model, t, r.next_u64());
+        let words = obs_to_words(&obs);
+        let mut engine =
+            KalmanEngine::new(Lgssm::constant_velocity(0.1, 0.8, 0.5))
+                .with_scan_options(opts);
+        let want = engine.run(Algorithm::KsPar, &obs).unwrap();
+
+        let mut s = engine.open_session(SessionOptions::default());
+        assert_eq!(s.kind(), SessionKind::Kalman);
+        assert_eq!(s.block(), block);
+        let mut i = 0;
+        while i < words.len() {
+            // Arbitrary word-boundary splits: chunks of 1..=9 words tear
+            // f64 halves and observation rows alike.
+            let j = (i + 1 + r.below(9) as usize).min(words.len());
+            s.push(&words[i..j]).unwrap();
+            i = j;
+        }
+        let got = s.finish().unwrap();
+        assert_eq!(
+            got.gamma_flat(),
+            want.gamma_flat(),
+            "kalman finish T={t} B={block}"
+        );
+        assert_eq!(
+            got.log_likelihood().to_bits(),
+            want.log_likelihood().to_bits(),
+            "kalman finish loglik T={t} B={block}"
+        );
+        // finish() leaves the session usable — repeat is idempotent.
+        assert_eq!(s.finish().unwrap().gamma_flat(), want.gamma_flat());
+        // filtered() reports complete rows and the packed Gaussian.
+        let f = s.filtered().unwrap();
+        let n = 4;
+        assert_eq!(f.step, t);
+        assert_eq!(f.probs.len(), n + n * n);
+    });
+}
+
+/// Kalman session snapshots restore bit-identically — including a
+/// snapshot taken with a torn observation row buffered — and the
+/// cross-family resume paths reject each other's snapshots.
+#[test]
+fn kalman_session_snapshot_resume_is_bit_identical() {
+    use crate::kalman::{obs_to_words, KalmanEngine, Lgssm};
+    use crate::kalman::tests_support::tracking_obs;
+
+    let model = Lgssm::constant_velocity(0.1, 0.8, 0.5);
+    let obs = tracking_obs(&model, 90, 0xCAFE);
+    let words = obs_to_words(&obs);
+    let engine = KalmanEngine::new(Lgssm::constant_velocity(0.1, 0.8, 0.5))
+        .with_scan_options(ScanOptions::default().with_block(16));
+
+    // Split at an odd word offset: the snapshot carries a torn f64.
+    let cut = 4 * 37 + 3;
+    let mut live = engine.open_session(SessionOptions::default());
+    live.push(&words[..cut]).unwrap();
+
+    let wire = live.snapshot().to_string_compact();
+    let snap = crate::jsonx::Json::parse(&wire).unwrap();
+    let mut resumed = engine.resume_session(&snap).unwrap();
+    assert_eq!(resumed.len(), cut);
+    assert_eq!(
+        live.filtered().unwrap(),
+        resumed.filtered().unwrap(),
+        "restored filtered state diverged (loglik must restore exactly)"
+    );
+
+    live.push(&words[cut..]).unwrap();
+    resumed.push(&words[cut..]).unwrap();
+    let a = live.finish().unwrap();
+    let b = resumed.finish().unwrap();
+    assert_eq!(a.gamma_flat(), b.gamma_flat(), "resume diverged from live");
+    assert_eq!(a.log_likelihood().to_bits(), b.log_likelihood().to_bits());
+
+    // An empty-session snapshot round-trips.
+    let empty = engine.open_session(SessionOptions::default());
+    let resumed = engine.resume_session(&empty.snapshot()).unwrap();
+    assert!(resumed.is_empty());
+
+    // Cross-family confusion is a typed error, both directions.
+    let hmm = gilbert_elliott(GeParams::default());
+    let discrete = Engine::builder(hmm).build();
+    assert!(discrete.resume_session(&snap).is_err());
+    let sp_snap = discrete.open_session(SessionOptions::default()).snapshot();
+    assert!(engine.resume_session(&sp_snap).is_err());
+}
+
+/// The Kalman session surface: unsupported queries are typed errors,
+/// appends reject non-finite rows atomically, and a torn row blocks
+/// `finish` but not buffering.
+#[test]
+fn kalman_session_guards_and_torn_rows() {
+    use crate::kalman::{obs_to_words, KalmanEngine, Lgssm};
+
+    let engine = KalmanEngine::new(Lgssm::constant_velocity(0.1, 1.0, 0.5))
+        .with_scan_options(ScanOptions::default().with_block(8));
+    let mut s = engine.open_session(SessionOptions::default());
+
+    // Nothing pushed: filtered/finish are errors.
+    assert!(s.filtered().is_err());
+    assert!(s.finish().is_err());
+
+    // A partial row buffers; queries still see no complete row.
+    let row = obs_to_words(&[1.0, 2.0]);
+    s.push(&row[..3]).unwrap();
+    assert_eq!(s.len(), 3);
+    assert!(s.filtered().is_err());
+    assert!(s.finish().is_err());
+    s.push(&row[3..]).unwrap();
+    assert_eq!(s.filtered().unwrap().step, 1);
+
+    // A torn row blocks finish until completed.
+    s.push(&row[..1]).unwrap();
+    assert!(s.finish().is_err());
+    s.push(&row[1..]).unwrap();
+    assert_eq!(s.filtered().unwrap().step, 2);
+    assert!(s.finish().is_ok());
+
+    // Non-finite rows are rejected atomically: the words that would
+    // complete the bad row are not ingested.
+    let bad = obs_to_words(&[f64::NAN, 7.0]);
+    let before = s.len();
+    assert!(s.push(&bad).is_err());
+    assert_eq!(s.len(), before, "rejected append must not ingest words");
+    assert_eq!(s.filtered().unwrap().step, 2);
+
+    // Discrete-family queries are typed rejections, not panics.
+    assert!(s.smoothed_lag(4).is_err());
+    assert!(s.map_lag(4).is_err());
+    assert!(s.finish_map().is_err());
+}
+
+/// `Engine::open_session` cannot host the Gaussian family — documented
+/// panic (the coordinator routes by model kind before ever getting
+/// here).
+#[test]
+#[should_panic(expected = "kalman sessions are opened")]
+fn discrete_engine_panics_on_kalman_session_kind() {
+    let hmm = gilbert_elliott(GeParams::default());
+    let engine = Engine::builder(hmm).build();
+    let _ = engine.open_session(SessionOptions {
+        kind: SessionKind::Kalman,
+        ..SessionOptions::default()
+    });
 }

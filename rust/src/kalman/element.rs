@@ -1,0 +1,468 @@
+//! The affine-Gaussian scan elements and operators of arXiv:1905.13002.
+//!
+//! * [`KfElement`] / [`KfOp`] — the filtering element `(A, b, C, η, J)`
+//!   (paper Lemma 7): conditionally on the previous state,
+//!   `p(x_k | y_{1:k}, x_{k-1}) ∝ N(x_k; A·x_{k-1} + b, C)` with an
+//!   information-form likelihood correction `(η, J)` for the evidence.
+//!   The inclusive prefix product of the per-step elements yields the
+//!   *filtered* posterior at every step: mean `b`, covariance `C`.
+//! * [`KsElement`] / [`KsOp`] — the smoothing element `(E, g, L)`
+//!   (paper Lemma 9): `p(x_k | y_{1:k}, x_{k+1}) = N(x_k; E·x_{k+1} +
+//!   g, L)`. The inclusive *suffix* product (via
+//!   [`crate::scan::run_scan_rev`]) yields the smoothed posterior:
+//!   because the last element carries `E = 0`, every suffix collapses
+//!   to `E = 0`, `g` = smoothed mean, `L` = smoothed covariance.
+//! * [`kf_element_protos`] — the observation-independent parts of the
+//!   steady-state element, precomputed once per model so streaming
+//!   sessions can append elements one observation at a time,
+//!   bit-identical to the one-shot [`kf_element_chain`] (the same
+//!   contract `elements::sp_element_protos` gives the HMM sessions).
+//!
+//! Numerical notes (DESIGN.md §8): the combine's only inversion is of
+//! `G = I + C_a·J_b`, which is nonsingular whenever `C` and `J` are PSD
+//! (its eigenvalues are ≥ 1); it goes through the guarded
+//! [`crate::linalg::Lu`] anyway so the combine is total on garbage
+//! input. One factorization serves all five outputs — the `G⁻ᵀ`
+//! applications reuse it via transpose solves. Every covariance /
+//! information output is re-symmetrized.
+
+use super::{add_assign, symmetrize, Lgssm};
+use crate::linalg::{Lu, Mat};
+use crate::scan::{AssocOp, ElementBuf};
+use crate::semiring::Prob;
+
+/// The filtering element `(A, b, C, η, J)` — all blocks n×n or length n.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KfElement {
+    /// Linear term of the conditional mean.
+    pub a: Mat,
+    /// Offset of the conditional mean (the filtered mean, at a prefix).
+    pub b: Vec<f64>,
+    /// Conditional covariance (the filtered covariance, at a prefix).
+    pub c: Mat,
+    /// Information vector of the evidence correction.
+    pub eta: Vec<f64>,
+    /// Information matrix of the evidence correction.
+    pub j: Mat,
+}
+
+impl ElementBuf for KfElement {
+    fn shape_key(&self) -> (usize, usize) {
+        (self.a.rows(), self.a.cols())
+    }
+
+    fn overwrite_from(&mut self, src: &Self) {
+        self.a.data_mut().copy_from_slice(src.a.data());
+        self.b.copy_from_slice(&src.b);
+        self.c.data_mut().copy_from_slice(src.c.data());
+        self.eta.copy_from_slice(&src.eta);
+        self.j.data_mut().copy_from_slice(src.j.data());
+    }
+}
+
+/// The filtering combine of paper Lemma 8.
+#[derive(Debug, Clone, Copy)]
+pub struct KfOp {
+    /// State dimension n.
+    pub n: usize,
+}
+
+impl AssocOp<KfElement> for KfOp {
+    fn identity(&self) -> KfElement {
+        KfElement {
+            a: Mat::identity::<Prob>(self.n),
+            b: vec![0.0; self.n],
+            c: Mat::zeros(self.n, self.n),
+            eta: vec![0.0; self.n],
+            j: Mat::zeros(self.n, self.n),
+        }
+    }
+
+    fn combine(&self, x: &KfElement, y: &KfElement) -> KfElement {
+        let n = self.n;
+        // G = I + C_x·J_y — one LU factorization serves every output
+        // below (G⁻¹ via plain solves, G⁻ᵀ via transpose solves).
+        let mut g = x.c.matmul::<Prob>(&y.j);
+        for i in 0..n {
+            g[(i, i)] += 1.0;
+        }
+        let lu = Lu::factor(&g);
+
+        // A = A_y·G⁻¹·A_x
+        let ginv_ax = lu.solve_mat(&x.a);
+        let a = y.a.matmul::<Prob>(&ginv_ax);
+
+        // b = A_y·G⁻¹·(b_x + C_x·η_y) + b_y
+        let mut v = x.c.matvec::<Prob>(&y.eta);
+        for i in 0..n {
+            v[i] += x.b[i];
+        }
+        let s = lu.solve_vec(&v);
+        let mut b = y.a.matvec::<Prob>(&s);
+        for i in 0..n {
+            b[i] += y.b[i];
+        }
+
+        // C = A_y·G⁻¹·C_x·A_yᵀ + C_y   (symmetrized)
+        let ginv_cx = lu.solve_mat(&x.c);
+        let mut c = y
+            .a
+            .matmul::<Prob>(&ginv_cx)
+            .matmul::<Prob>(&y.a.transpose());
+        add_assign(&mut c, &y.c);
+        symmetrize(&mut c);
+
+        // η = A_xᵀ·G⁻ᵀ·(η_y − J_y·b_x) + η_x
+        let mut w = y.j.matvec::<Prob>(&x.b);
+        for i in 0..n {
+            w[i] = y.eta[i] - w[i];
+        }
+        let u = lu.solve_transpose_vec(&w);
+        let xat = x.a.transpose();
+        let mut eta = xat.matvec::<Prob>(&u);
+        for i in 0..n {
+            eta[i] += x.eta[i];
+        }
+
+        // J = A_xᵀ·G⁻ᵀ·J_y·A_x + J_x   (symmetrized)
+        let jyax = y.j.matmul::<Prob>(&x.a);
+        let gt = lu.solve_transpose_mat(&jyax);
+        let mut j = xat.matmul::<Prob>(&gt);
+        add_assign(&mut j, &x.j);
+        symmetrize(&mut j);
+
+        KfElement { a, b, c, eta, j }
+    }
+}
+
+/// The smoothing element `(E, g, L)` — E and L are n×n, g has length n.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KsElement {
+    /// Linear term of the backward conditional mean.
+    pub e: Mat,
+    /// Offset of the backward conditional mean (the smoothed mean, at a
+    /// suffix).
+    pub g: Vec<f64>,
+    /// Backward conditional covariance (the smoothed covariance, at a
+    /// suffix).
+    pub l: Mat,
+}
+
+impl ElementBuf for KsElement {
+    fn shape_key(&self) -> (usize, usize) {
+        (self.e.rows(), self.e.cols())
+    }
+
+    fn overwrite_from(&mut self, src: &Self) {
+        self.e.data_mut().copy_from_slice(src.e.data());
+        self.g.copy_from_slice(&src.g);
+        self.l.data_mut().copy_from_slice(src.l.data());
+    }
+}
+
+/// The smoothing combine of paper Lemma 10 (x earlier, y later):
+/// `(E_x·E_y, E_x·g_y + g_x, E_x·L_y·E_xᵀ + L_x)`.
+#[derive(Debug, Clone, Copy)]
+pub struct KsOp {
+    /// State dimension n.
+    pub n: usize,
+}
+
+impl AssocOp<KsElement> for KsOp {
+    fn identity(&self) -> KsElement {
+        KsElement {
+            e: Mat::identity::<Prob>(self.n),
+            g: vec![0.0; self.n],
+            l: Mat::zeros(self.n, self.n),
+        }
+    }
+
+    fn combine(&self, x: &KsElement, y: &KsElement) -> KsElement {
+        let n = self.n;
+        let e = x.e.matmul::<Prob>(&y.e);
+        let mut g = x.e.matvec::<Prob>(&y.g);
+        for i in 0..n {
+            g[i] += x.g[i];
+        }
+        let mut l = x
+            .e
+            .matmul::<Prob>(&y.l)
+            .matmul::<Prob>(&x.e.transpose());
+        add_assign(&mut l, &x.l);
+        symmetrize(&mut l);
+        KsElement { e, g, l }
+    }
+}
+
+/// The observation-independent parts of the steady-state (k ≥ 2)
+/// filtering element, precomputed once per model: with
+/// `S = H·Q·Hᵀ + R` and `K = Q·Hᵀ·S⁻¹`,
+///
+/// ```text
+///   Φ  = (I − K·H)·A          (the element's A)
+///   C̃  = (I − K·H)·Q          (the element's C)
+///   J  = Aᵀ·Hᵀ·S⁻¹·H·A        (the element's J)
+///   b  = K·y_k                 per observation
+///   η  = W·y_k,  W = Aᵀ·Hᵀ·S⁻¹ per observation
+/// ```
+#[derive(Debug, Clone)]
+pub struct KfProtos {
+    /// Φ = (I − K·H)·A.
+    pub phi: Mat,
+    /// C̃ = (I − K·H)·Q, symmetrized.
+    pub ctil: Mat,
+    /// J = Aᵀ·Hᵀ·S⁻¹·H·A, symmetrized.
+    pub j: Mat,
+    /// Kalman gain K = Q·Hᵀ·S⁻¹ (n×m).
+    pub gain: Mat,
+    /// W = Aᵀ·Hᵀ·S⁻¹ (n×m).
+    pub w: Mat,
+}
+
+/// Precompute the per-step prototypes for `model`.
+pub fn kf_element_protos(model: &Lgssm) -> KfProtos {
+    let (a, q, h) = (model.a(), model.q(), model.h());
+    let n = model.state_dim();
+    // S = H·Q·Hᵀ + R, symmetrized.
+    let mut s = h.matmul::<Prob>(q).matmul::<Prob>(&h.transpose());
+    add_assign(&mut s, model.r());
+    symmetrize(&mut s);
+    let lu_s = Lu::factor(&s);
+    // K = Q·Hᵀ·S⁻¹: Kᵀ = S⁻ᵀ·H·Qᵀ solved against the factorization.
+    let hqt = h.matmul::<Prob>(&q.transpose());
+    let gain = lu_s.solve_transpose_mat(&hqt).transpose();
+    // I − K·H.
+    let mut ikh = gain.matmul::<Prob>(h);
+    for r in 0..n {
+        for c in 0..n {
+            ikh[(r, c)] = if r == c { 1.0 - ikh[(r, c)] } else { -ikh[(r, c)] };
+        }
+    }
+    let phi = ikh.matmul::<Prob>(a);
+    let mut ctil = ikh.matmul::<Prob>(q);
+    symmetrize(&mut ctil);
+    // V = S⁻¹·H·A (m×n); J = (H·A)ᵀ·V; W = Aᵀ·Hᵀ·S⁻¹ = Vᵀ (S symmetric
+    // by construction above, so the plain solve is the right inverse).
+    let ha = h.matmul::<Prob>(a);
+    let v = lu_s.solve_mat(&ha);
+    let mut j = ha.transpose().matmul::<Prob>(&v);
+    symmetrize(&mut j);
+    let w = v.transpose();
+    KfProtos { phi, ctil, j, gain, w }
+}
+
+/// The k = 1 element, which absorbs the prior: one dynamics step from
+/// `(m0, P0)`, then a Joseph-form measurement update with `y`. Its
+/// `A = 0` erases the (nonexistent) dependence on `x_0`, and `(η, J) =
+/// (0, 0)` because the prior carries no extra evidence.
+pub fn kf_prior_element(model: &Lgssm, y: &[f64]) -> KfElement {
+    let n = model.state_dim();
+    let h = model.h();
+    // One dynamics step from the prior.
+    let (m1, p1) = super::predict_moments(model, model.prior_mean(), model.prior_cov());
+    // S1 = H·P1⁻·Hᵀ + R, symmetrized.
+    let mut s1 = h.matmul::<Prob>(&p1).matmul::<Prob>(&h.transpose());
+    add_assign(&mut s1, model.r());
+    symmetrize(&mut s1);
+    let lu1 = Lu::factor(&s1);
+    // K1 = P1⁻·Hᵀ·S1⁻¹ = (S1⁻¹·H·P1⁻)ᵀ (both factors symmetric).
+    let k1 = lu1.solve_mat(&h.matmul::<Prob>(&p1)).transpose();
+    // Filtered mean m1⁻ + K1·(y − H·m1⁻).
+    let hm = h.matvec::<Prob>(&m1);
+    let innov: Vec<f64> = y.iter().zip(&hm).map(|(yi, hi)| yi - hi).collect();
+    let mut b = k1.matvec::<Prob>(&innov);
+    for i in 0..n {
+        b[i] += m1[i];
+    }
+    // Joseph form: (I−K1·H)·P1⁻·(I−K1·H)ᵀ + K1·R·K1ᵀ, symmetrized.
+    let mut ikh = k1.matmul::<Prob>(h);
+    for r in 0..n {
+        for c in 0..n {
+            ikh[(r, c)] = if r == c { 1.0 - ikh[(r, c)] } else { -ikh[(r, c)] };
+        }
+    }
+    let mut c = ikh.matmul::<Prob>(&p1).matmul::<Prob>(&ikh.transpose());
+    let krk = k1
+        .matmul::<Prob>(model.r())
+        .matmul::<Prob>(&k1.transpose());
+    add_assign(&mut c, &krk);
+    symmetrize(&mut c);
+    KfElement {
+        a: Mat::zeros(n, n),
+        b,
+        c,
+        eta: vec![0.0; n],
+        j: Mat::zeros(n, n),
+    }
+}
+
+/// The steady-state (k ≥ 2) element for observation `y`.
+pub fn kf_step_element(protos: &KfProtos, y: &[f64]) -> KfElement {
+    KfElement {
+        a: protos.phi.clone(),
+        b: protos.gain.matvec::<Prob>(y),
+        c: protos.ctil.clone(),
+        eta: protos.w.matvec::<Prob>(y),
+        j: protos.j.clone(),
+    }
+}
+
+/// Build the full element chain for a flat observation sequence
+/// (`obs.len()` must be a multiple of the observation dimension) into
+/// `out`, reusing its capacity. Streaming sessions build element-by-
+/// element through the same [`kf_prior_element`] / [`kf_step_element`]
+/// calls, so the chains are bit-identical.
+pub fn kf_element_chain_into(model: &Lgssm, obs: &[f64], out: &mut Vec<KfElement>) {
+    let m = model.obs_dim();
+    assert_eq!(obs.len() % m, 0, "flat observation length must be T·m");
+    out.clear();
+    let protos = kf_element_protos(model);
+    for (k, y) in obs.chunks_exact(m).enumerate() {
+        out.push(if k == 0 {
+            kf_prior_element(model, y)
+        } else {
+            kf_step_element(&protos, y)
+        });
+    }
+}
+
+/// Allocating wrapper over [`kf_element_chain_into`].
+pub fn kf_element_chain(model: &Lgssm, obs: &[f64]) -> Vec<KfElement> {
+    let mut out = Vec::new();
+    kf_element_chain_into(model, obs, &mut out);
+    out
+}
+
+/// Build the smoothing element chain from the *scanned* forward chain
+/// (each `fwd[k]` already the inclusive prefix, i.e. carrying the
+/// filtered mean/covariance in `b`/`c`). The last element is
+/// `(0, m_T, P_T)`; interior elements follow paper Lemma 9 with
+/// `E_k = P_k·Aᵀ·(A·P_k·Aᵀ + Q)⁻¹`.
+pub fn ks_element_chain_into(model: &Lgssm, fwd: &[KfElement], out: &mut Vec<KsElement>) {
+    let n = model.state_dim();
+    let a = model.a();
+    out.clear();
+    let t = fwd.len();
+    for (k, f) in fwd.iter().enumerate() {
+        if k + 1 == t {
+            out.push(KsElement { e: Mat::zeros(n, n), g: f.b.clone(), l: f.c.clone() });
+            break;
+        }
+        let (pm, ppred) = super::predict_moments(model, &f.b, &f.c);
+        let lu = Lu::factor(&ppred);
+        // E = P·Aᵀ·Ppred⁻¹ = (Ppred⁻¹·A·P)ᵀ (both factors symmetric).
+        let e = lu.solve_mat(&a.matmul::<Prob>(&f.c)).transpose();
+        // g = m − E·(A·m) = m − E·pm.
+        let epm = e.matvec::<Prob>(&pm);
+        let g: Vec<f64> = f.b.iter().zip(&epm).map(|(mi, ei)| mi - ei).collect();
+        // L = P − E·Ppred·Eᵀ, symmetrized.
+        let mut l = f.c.clone();
+        let cor = e.matmul::<Prob>(&ppred).matmul::<Prob>(&e.transpose());
+        for (x, y) in l.data_mut().iter_mut().zip(cor.data()) {
+            *x -= y;
+        }
+        symmetrize(&mut l);
+        out.push(KsElement { e, g, l });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptestx::Runner;
+    use crate::rng::Xoshiro256StarStar;
+
+    fn rand_obs(r: &mut Xoshiro256StarStar, t: usize, m: usize) -> Vec<f64> {
+        (0..t * m).map(|_| r.uniform(-5.0, 5.0)).collect()
+    }
+
+    fn elems_close(a: &KfElement, b: &KfElement, tol: f64) -> bool {
+        let pairs = [
+            (a.a.data(), b.a.data()),
+            (&a.b[..], &b.b[..]),
+            (a.c.data(), b.c.data()),
+            (&a.eta[..], &b.eta[..]),
+            (a.j.data(), b.j.data()),
+        ];
+        pairs.iter().all(|(x, y)| {
+            x.iter()
+                .zip(y.iter())
+                .all(|(u, v)| (u - v).abs() <= tol * (1.0 + u.abs().max(v.abs())))
+        })
+    }
+
+    #[test]
+    fn kf_combine_is_associative() {
+        let model = Lgssm::constant_velocity(0.1, 1.0, 0.5);
+        let op = KfOp { n: model.state_dim() };
+        let mut runner = Runner::new("kalman-kf-assoc");
+        runner.run(40, |r| {
+            let obs = rand_obs(r, 3, model.obs_dim());
+            let es = kf_element_chain(&model, &obs);
+            let left = op.combine(&op.combine(&es[0], &es[1]), &es[2]);
+            let right = op.combine(&es[0], &op.combine(&es[1], &es[2]));
+            assert!(elems_close(&left, &right, 1e-9), "associativity violated");
+        });
+    }
+
+    #[test]
+    fn kf_identity_is_neutral() {
+        let model = Lgssm::constant_velocity(0.05, 2.0, 0.25);
+        let op = KfOp { n: model.state_dim() };
+        let mut runner = Runner::new("kalman-kf-identity");
+        runner.run(40, |r| {
+            let obs = rand_obs(r, 2, model.obs_dim());
+            let es = kf_element_chain(&model, &obs);
+            for e in &es {
+                assert!(elems_close(&op.combine(&op.identity(), e), e, 1e-12));
+                assert!(elems_close(&op.combine(e, &op.identity()), e, 1e-12));
+            }
+        });
+    }
+
+    #[test]
+    fn ks_identity_is_neutral_and_op_associative() {
+        let n = 3;
+        let op = KsOp { n };
+        let mut runner = Runner::new("kalman-ks-laws");
+        runner.run(40, |r| {
+            let rand_elem = |r: &mut Xoshiro256StarStar| {
+                let e = Mat::from_vec(n, n, (0..n * n).map(|_| r.uniform(-1.0, 1.0)).collect());
+                let g: Vec<f64> = (0..n).map(|_| r.uniform(-1.0, 1.0)).collect();
+                let mut l = Mat::from_vec(n, n, (0..n * n).map(|_| r.uniform(0.0, 1.0)).collect());
+                super::super::symmetrize(&mut l);
+                KsElement { e, g, l }
+            };
+            let (a, b, c) = (rand_elem(r), rand_elem(r), rand_elem(r));
+            let left = op.combine(&op.combine(&a, &b), &c);
+            let right = op.combine(&a, &op.combine(&b, &c));
+            let close = |x: &KsElement, y: &KsElement, tol: f64| {
+                x.e.data()
+                    .iter()
+                    .zip(y.e.data())
+                    .chain(x.g.iter().zip(y.g.iter()))
+                    .chain(x.l.data().iter().zip(y.l.data()))
+                    .all(|(u, v)| (u - v).abs() <= tol * (1.0 + u.abs().max(v.abs())))
+            };
+            assert!(close(&left, &right, 1e-10));
+            assert!(close(&op.combine(&op.identity(), &a), &a, 1e-12));
+            assert!(close(&op.combine(&a, &op.identity()), &a, 1e-12));
+        });
+    }
+
+    #[test]
+    fn combine_is_total_on_garbage() {
+        // The scan contract: combine must not panic, whatever the input.
+        let op = KfOp { n: 2 };
+        let junk = KfElement {
+            a: Mat::filled(2, 2, f64::NAN),
+            b: vec![f64::INFINITY; 2],
+            c: Mat::filled(2, 2, -1.0),
+            eta: vec![f64::NEG_INFINITY; 2],
+            j: Mat::filled(2, 2, f64::INFINITY),
+        };
+        let _ = op.combine(&junk, &junk);
+        let _ = op.combine(&op.identity(), &junk);
+        let _ = op.combine(&junk, &op.identity());
+    }
+}

@@ -1,0 +1,293 @@
+//! The Kalman-tier engine — one entry point for the four
+//! linear-Gaussian algorithms, with workspace reuse and batched runs.
+//!
+//! [`KalmanEngine`] is the Gaussian sibling of [`crate::engine::Engine`]:
+//! it owns the model, the scan schedule, and a reusable
+//! [`KalmanWorkspace`] so repeated calls on a serving hot path overwrite
+//! the per-call element buffers in place instead of reallocating them.
+//! The discrete engine rejects Gaussian algorithms with a typed error
+//! and points callers here; this engine does the mirror-image reject for
+//! discrete algorithms.
+
+use std::sync::Arc;
+
+use crate::engine::{
+    Algorithm, Session, SessionOptions, DEFAULT_SESSION_BLOCK,
+};
+use crate::error::{Error, Result};
+use crate::inference::Posterior;
+use crate::jsonx::Json;
+use crate::scan::ScanOptions;
+
+use super::filters::{kf_par, kf_seq, ks_par, ks_seq, KalmanWorkspace};
+use super::{words_to_obs, Lgssm};
+
+/// The unified entry point for linear-Gaussian inference.
+///
+/// ```no_run
+/// use hmm_scan::engine::Algorithm;
+/// use hmm_scan::kalman::{KalmanEngine, Lgssm};
+///
+/// let mut engine = KalmanEngine::new(Lgssm::constant_velocity(0.1, 1.0, 0.5));
+/// let post = engine.run(Algorithm::KsPar, &[1.0, 2.0, 1.1, 2.2]).unwrap();
+/// println!("log p(y) = {}", post.log_likelihood());
+/// ```
+#[derive(Debug, Clone)]
+pub struct KalmanEngine {
+    model: Arc<Lgssm>,
+    scan: ScanOptions,
+    ws: KalmanWorkspace,
+}
+
+impl KalmanEngine {
+    /// An engine over `model` with default scan options.
+    pub fn new(model: Lgssm) -> Self {
+        Self::from_arc(Arc::new(model))
+    }
+
+    /// An engine over an already-shared model (the coordinator keeps one
+    /// `Arc<Lgssm>` per registered model across many sessions).
+    pub fn from_arc(model: Arc<Lgssm>) -> Self {
+        Self { model, scan: ScanOptions::default(), ws: KalmanWorkspace::default() }
+    }
+
+    /// Replace the threading/schedule options (builder-style).
+    pub fn with_scan_options(mut self, scan: ScanOptions) -> Self {
+        self.scan = scan;
+        self
+    }
+
+    /// The model this engine runs on.
+    pub fn model(&self) -> &Lgssm {
+        &self.model
+    }
+
+    /// The engine's threading/schedule options.
+    pub fn scan_options(&self) -> ScanOptions {
+        self.scan
+    }
+
+    /// Run one Gaussian algorithm on one observation sequence.
+    ///
+    /// `obs` is row-major `[T, obs_dim]` (length must be a multiple of
+    /// the model's observation dimension, every value finite). Discrete
+    /// algorithms are rejected with a typed error pointing at
+    /// [`crate::engine::Engine`]. `&mut self` because the parallel
+    /// methods reuse the engine's scratch workspace; results are
+    /// identical to the free functions in [`super::filters`].
+    pub fn run(&mut self, alg: Algorithm, obs: &[f64]) -> Result<Posterior> {
+        self.check_observations(obs)?;
+        run_one(&self.model, alg, obs, self.scan, &mut self.ws)
+    }
+
+    /// Run on a wire-encoded observation stream (the u32 word encoding
+    /// produced by [`super::obs_to_words`] — what sessions carry over
+    /// TCP). Decodes and delegates to [`KalmanEngine::run`].
+    pub fn run_words(&mut self, alg: Algorithm, words: &[u32]) -> Result<Posterior> {
+        let obs = words_to_obs(words)?;
+        self.run(alg, &obs)
+    }
+
+    /// Run one algorithm over many sequences, fanned out over
+    /// `exec::parallel_for_chunks` with one scratch workspace per worker.
+    ///
+    /// Mirrors [`crate::engine::Engine::run_batch`]: the thread budget is
+    /// split across the batch dimension first, each of the
+    /// min(n, threads) workers runs its sequences with ⌊threads / n⌋
+    /// scan threads, so the total never oversubscribes the machine.
+    /// Results preserve input order with per-sequence errors per slot.
+    pub fn run_batch(
+        &self,
+        alg: Algorithm,
+        seqs: &[Vec<f64>],
+    ) -> Vec<Result<Posterior>> {
+        let n = seqs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let threads = self.scan.threads.max(1);
+        let per_seq_threads = (threads / n).max(1);
+        let per_seq_scan = if per_seq_threads == 1 {
+            ScanOptions { threads: 1, min_parallel_work: usize::MAX, ..self.scan }
+        } else {
+            ScanOptions { threads: per_seq_threads, ..self.scan }
+        };
+
+        let mut out: Vec<Option<Result<Posterior>>> = Vec::new();
+        out.resize_with(n, || None);
+        {
+            let slots = crate::exec::SharedSliceMut::new(&mut out);
+            let model = &self.model;
+            crate::exec::parallel_for_chunks(n, threads, |_, lo, hi| {
+                let mut ws = KalmanWorkspace::default();
+                for i in lo..hi {
+                    let r = check_observations_of(model, &seqs[i]).and_then(|()| {
+                        run_one(model, alg, &seqs[i], per_seq_scan, &mut ws)
+                    });
+                    // SAFETY: slot i is written by exactly one chunk
+                    // (chunks partition 0..n).
+                    unsafe { slots.write(i, Some(r)) };
+                }
+            });
+        }
+        out.into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(Error::coordinator("batch slot lost"))))
+            .collect()
+    }
+
+    /// Open a streaming Kalman session
+    /// ([`crate::engine::SessionKind::Kalman`]) against
+    /// this engine's model and scan options — the Gaussian counterpart
+    /// of [`crate::engine::Engine::open_session`]. The session ingests
+    /// *word-encoded* observations ([`super::obs_to_words`]) so it rides
+    /// the same u32 append channel as the discrete families; its
+    /// `finish` is bit-identical to [`KalmanEngine::run`] with
+    /// [`Algorithm::KsPar`] under the session's pinned scan options.
+    /// `opts.kind` and `opts.track_map` are ignored (the family is
+    /// implied; there is no Gaussian MAP track).
+    pub fn open_session(&self, opts: SessionOptions) -> Session {
+        let block = opts
+            .block
+            .or(self.scan.block)
+            .unwrap_or(DEFAULT_SESSION_BLOCK)
+            .max(1);
+        Session::open_kalman(Arc::clone(&self.model), self.scan, block)
+    }
+
+    /// Restore a Kalman session from a [`Session::snapshot`] — the
+    /// Gaussian counterpart of
+    /// [`crate::engine::Engine::resume_session`]. Snapshots of discrete
+    /// sessions are rejected with a typed error.
+    pub fn resume_session(&self, snap: &Json) -> Result<Session> {
+        Session::resume_kalman(Arc::clone(&self.model), self.scan, snap)
+    }
+
+    fn check_observations(&self, obs: &[f64]) -> Result<()> {
+        check_observations_of(&self.model, obs)
+    }
+}
+
+/// Validate a row-major `[T, obs_dim]` observation slice against `model`.
+fn check_observations_of(model: &Lgssm, obs: &[f64]) -> Result<()> {
+    let m = model.obs_dim();
+    if obs.len() % m != 0 {
+        return Err(Error::invalid_request(format!(
+            "observation stream length {} is not a multiple of obs_dim {m}",
+            obs.len()
+        )));
+    }
+    if let Some(v) = obs.iter().find(|v| !v.is_finite()) {
+        return Err(Error::invalid_request(format!(
+            "non-finite observation value {v}"
+        )));
+    }
+    Ok(())
+}
+
+/// Dispatch one validated request to the algorithm library.
+fn run_one(
+    model: &Lgssm,
+    alg: Algorithm,
+    obs: &[f64],
+    scan: ScanOptions,
+    ws: &mut KalmanWorkspace,
+) -> Result<Posterior> {
+    match alg {
+        Algorithm::KfSeq => Ok(kf_seq(model, obs)),
+        Algorithm::KfPar => Ok(kf_par(model, obs, scan, ws)),
+        Algorithm::KsSeq => Ok(ks_seq(model, obs)),
+        Algorithm::KsPar => Ok(ks_par(model, obs, scan, ws)),
+        other => Err(Error::invalid_request(format!(
+            "{} runs on discrete HMMs — use engine::Engine, not the \
+             Kalman engine",
+            other.name()
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kalman::filters::tests_support::tracking_obs;
+
+    fn model() -> Lgssm {
+        Lgssm::constant_velocity(0.1, 0.8, 0.5)
+    }
+
+    #[test]
+    fn engine_matches_free_functions_for_all_four_algorithms() {
+        let m = model();
+        let obs = tracking_obs(&m, 200, 7);
+        let mut engine = KalmanEngine::new(model());
+        for alg in [
+            Algorithm::KfSeq,
+            Algorithm::KfPar,
+            Algorithm::KsSeq,
+            Algorithm::KsPar,
+        ] {
+            let got = engine.run(alg, &obs).unwrap();
+            let scan = engine.scan_options();
+            let mut ws = KalmanWorkspace::default();
+            let want = match alg {
+                Algorithm::KfSeq => kf_seq(&m, &obs),
+                Algorithm::KfPar => kf_par(&m, &obs, scan, &mut ws),
+                Algorithm::KsSeq => ks_seq(&m, &obs),
+                Algorithm::KsPar => ks_par(&m, &obs, scan, &mut ws),
+                _ => unreachable!(),
+            };
+            assert_eq!(got.gamma_flat(), want.gamma_flat(), "{}", alg.name());
+            assert_eq!(
+                got.log_likelihood().to_bits(),
+                want.log_likelihood().to_bits(),
+                "{}",
+                alg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn engine_rejects_discrete_algorithms_and_bad_streams() {
+        let mut engine = KalmanEngine::new(model());
+        assert!(engine.run(Algorithm::SpPar, &[1.0, 2.0]).is_err());
+        assert!(engine.run(Algorithm::Viterbi, &[]).is_err());
+        // Torn row (obs_dim is 2).
+        assert!(engine.run(Algorithm::KfSeq, &[1.0]).is_err());
+        // Non-finite value.
+        assert!(engine.run(Algorithm::KfSeq, &[1.0, f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn run_words_round_trips_the_wire_codec() {
+        let m = model();
+        let obs = tracking_obs(&m, 64, 3);
+        let words = crate::kalman::obs_to_words(&obs);
+        let mut engine = KalmanEngine::new(model());
+        let via_words = engine.run_words(Algorithm::KsPar, &words).unwrap();
+        let direct = engine.run(Algorithm::KsPar, &obs).unwrap();
+        assert_eq!(via_words.gamma_flat(), direct.gamma_flat());
+    }
+
+    #[test]
+    fn run_batch_matches_single_runs_in_order() {
+        let m = model();
+        let seqs: Vec<Vec<f64>> = (0..6)
+            .map(|i| tracking_obs(&m, 40 + 17 * i, i as u64))
+            .collect();
+        let engine = KalmanEngine::new(model());
+        let batch = engine.run_batch(Algorithm::KfPar, &seqs);
+        assert_eq!(batch.len(), seqs.len());
+        let mut solo = KalmanEngine::new(model());
+        for (i, r) in batch.iter().enumerate() {
+            let got = r.as_ref().unwrap();
+            let want = solo.run(Algorithm::KfPar, &seqs[i]).unwrap();
+            assert_eq!(got.gamma_flat(), want.gamma_flat(), "slot {i}");
+        }
+        // Per-slot errors: a torn row in one sequence must not poison
+        // its neighbours.
+        let mut bad = seqs.clone();
+        bad[2].pop();
+        let mixed = engine.run_batch(Algorithm::KfPar, &bad);
+        assert!(mixed[2].is_err());
+        assert!(mixed[0].is_ok() && mixed[5].is_ok());
+    }
+}

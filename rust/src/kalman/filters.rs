@@ -1,0 +1,419 @@
+//! Sequential references and scan-based parallel cores for the Kalman
+//! tier.
+//!
+//! * [`kf_seq`] — the classical Kalman filter (predict / Joseph-form
+//!   update), the reference KF-Par must match.
+//! * [`ks_seq`] — the classical Rauch–Tung–Striebel smoother, the
+//!   reference KS-Par must match.
+//! * [`kf_par`] / [`ks_par`] — element chain + [`crate::scan::run_scan`]
+//!   (and [`crate::scan::run_scan_rev`] for the smoothing pass).
+//! * [`loglik_from_forward`] — the shared marginal-likelihood post-pass
+//!   over scanned forward elements; one-shot parallel runs and
+//!   streaming `Session::finish` both call it, which is what makes
+//!   their log-likelihoods bit-identical.
+//!
+//! Posterior packing: state dimension n becomes a [`Posterior`] with
+//! `d = n + n²`; row k is `[mean | covariance row-major]`. Filtering
+//! algorithms pack filtered moments, smoothing algorithms smoothed
+//! moments; `loglik` is the filter marginal likelihood either way.
+
+use super::element::{
+    kf_element_chain_into, ks_element_chain_into, KfElement, KfOp, KsElement, KsOp,
+};
+use super::{add_assign, symmetrize, Lgssm};
+use crate::inference::Posterior;
+use crate::linalg::{Lu, Mat};
+use crate::scan::{run_scan, run_scan_rev, ScanOptions};
+use crate::semiring::Prob;
+
+/// Reusable scratch for the parallel Kalman cores (element chains and
+/// the smoothing buffer) — the Gaussian sibling of
+/// [`crate::inference::Workspace`].
+#[derive(Debug, Clone, Default)]
+pub struct KalmanWorkspace {
+    pub(crate) fwd: Vec<KfElement>,
+    pub(crate) bwd: Vec<KsElement>,
+}
+
+/// One dynamics step of the moments: `(A·mean, A·cov·Aᵀ + Q)`, the
+/// covariance symmetrized.
+pub(crate) fn predict_moments(model: &Lgssm, mean: &[f64], cov: &Mat) -> (Vec<f64>, Mat) {
+    let a = model.a();
+    let pm = a.matvec::<Prob>(mean);
+    let mut pc = a.matmul::<Prob>(cov).matmul::<Prob>(&a.transpose());
+    add_assign(&mut pc, model.q());
+    symmetrize(&mut pc);
+    (pm, pc)
+}
+
+/// Factor the innovation covariance `S = H·P⁻·Hᵀ + R` (symmetrized).
+fn innovation_lu(model: &Lgssm, pred_cov: &Mat) -> Lu {
+    let h = model.h();
+    let mut s = h.matmul::<Prob>(pred_cov).matmul::<Prob>(&h.transpose());
+    add_assign(&mut s, model.r());
+    symmetrize(&mut s);
+    Lu::factor(&s)
+}
+
+/// One observation's contribution to the filter marginal log-likelihood,
+/// from the *predicted* moments: `log N(y; H·m⁻, H·P⁻·Hᵀ + R)`.
+pub(crate) fn step_loglik(model: &Lgssm, pred_mean: &[f64], pred_cov: &Mat, y: &[f64]) -> f64 {
+    let m = model.obs_dim();
+    let lu = innovation_lu(model, pred_cov);
+    let hm = model.h().matvec::<Prob>(pred_mean);
+    let innov: Vec<f64> = y.iter().zip(&hm).map(|(yi, hi)| yi - hi).collect();
+    let alpha = lu.solve_vec(&innov);
+    let quad: f64 = innov.iter().zip(&alpha).map(|(v, a)| v * a).sum();
+    let ln_2pi = (2.0 * std::f64::consts::PI).ln();
+    -0.5 * (m as f64 * ln_2pi + lu.ln_abs_det() + quad)
+}
+
+/// The filter marginal log-likelihood recomputed from *scanned* forward
+/// elements (`fwd[k]` carries the filtered moments in `b`/`c`). The
+/// one-shot parallel cores and streaming `Session::finish` share this
+/// exact pass, so their log-likelihoods are bit-identical given
+/// identical forward chains.
+pub fn loglik_from_forward(model: &Lgssm, obs: &[f64], fwd: &[KfElement]) -> f64 {
+    let m = model.obs_dim();
+    let mut ll = 0.0;
+    let mut prev_mean: &[f64] = model.prior_mean();
+    let mut prev_cov: &Mat = model.prior_cov();
+    for (k, y) in obs.chunks_exact(m).enumerate() {
+        let (pm, pc) = predict_moments(model, prev_mean, prev_cov);
+        ll += step_loglik(model, &pm, &pc, y);
+        prev_mean = &fwd[k].b;
+        prev_cov = &fwd[k].c;
+    }
+    ll
+}
+
+/// Joseph-form measurement update of a predicted covariance with gain
+/// `K`: `(I−K·H)·P⁻·(I−K·H)ᵀ + K·R·Kᵀ`, symmetrized. Algebraically
+/// equal to `(I−K·H)·P⁻` but keeps the result PSD under rounding.
+fn joseph_cov(model: &Lgssm, pred_cov: &Mat, k: &Mat) -> Mat {
+    let n = model.state_dim();
+    let mut ikh = k.matmul::<Prob>(model.h());
+    for r in 0..n {
+        for c in 0..n {
+            ikh[(r, c)] = if r == c { 1.0 - ikh[(r, c)] } else { -ikh[(r, c)] };
+        }
+    }
+    let mut cov = ikh.matmul::<Prob>(pred_cov).matmul::<Prob>(&ikh.transpose());
+    let krk = k.matmul::<Prob>(model.r()).matmul::<Prob>(&k.transpose());
+    add_assign(&mut cov, &krk);
+    symmetrize(&mut cov);
+    cov
+}
+
+fn pack_row(gamma: &mut Vec<f64>, mean: &[f64], cov: &Mat) {
+    gamma.extend_from_slice(mean);
+    gamma.extend_from_slice(cov.data());
+}
+
+/// Classical sequential Kalman filter (KF-Seq). Returns the filtered
+/// moments per step (`d = n + n²`, rows `[mean | cov]`) and the filter
+/// marginal log-likelihood.
+pub fn kf_seq(model: &Lgssm, obs: &[f64]) -> Posterior {
+    let n = model.state_dim();
+    let m = model.obs_dim();
+    assert_eq!(obs.len() % m, 0, "flat observation length must be T·m");
+    let d = n + n * n;
+    let t = obs.len() / m;
+    let mut gamma = Vec::with_capacity(t * d);
+    let mut mean = model.prior_mean().to_vec();
+    let mut cov = model.prior_cov().clone();
+    let mut ll = 0.0;
+    let h = model.h();
+    for y in obs.chunks_exact(m) {
+        let (pm, pc) = predict_moments(model, &mean, &cov);
+        ll += step_loglik(model, &pm, &pc, y);
+        let lu = innovation_lu(model, &pc);
+        // K = P⁻·Hᵀ·S⁻¹ = (S⁻¹·H·P⁻)ᵀ (both factors symmetric).
+        let k = lu.solve_mat(&h.matmul::<Prob>(&pc)).transpose();
+        let hm = h.matvec::<Prob>(&pm);
+        let innov: Vec<f64> = y.iter().zip(&hm).map(|(yi, hi)| yi - hi).collect();
+        mean = k.matvec::<Prob>(&innov);
+        for i in 0..n {
+            mean[i] += pm[i];
+        }
+        cov = joseph_cov(model, &pc, &k);
+        pack_row(&mut gamma, &mean, &cov);
+    }
+    Posterior::new(d, gamma, ll)
+}
+
+/// Classical Rauch–Tung–Striebel smoother (KS-Seq): one [`kf_seq`]-style
+/// forward pass, then the backward gain recursion
+/// `G_k = P_k·Aᵀ·(A·P_k·Aᵀ + Q)⁻¹`.
+pub fn ks_seq(model: &Lgssm, obs: &[f64]) -> Posterior {
+    let n = model.state_dim();
+    let m = model.obs_dim();
+    assert_eq!(obs.len() % m, 0, "flat observation length must be T·m");
+    let d = n + n * n;
+    let t = obs.len() / m;
+    // Forward pass, keeping every filtered moment.
+    let mut means: Vec<Vec<f64>> = Vec::with_capacity(t);
+    let mut covs: Vec<Mat> = Vec::with_capacity(t);
+    let mut mean = model.prior_mean().to_vec();
+    let mut cov = model.prior_cov().clone();
+    let mut ll = 0.0;
+    let h = model.h();
+    let a = model.a();
+    for y in obs.chunks_exact(m) {
+        let (pm, pc) = predict_moments(model, &mean, &cov);
+        ll += step_loglik(model, &pm, &pc, y);
+        let lu = innovation_lu(model, &pc);
+        let k = lu.solve_mat(&h.matmul::<Prob>(&pc)).transpose();
+        let hm = h.matvec::<Prob>(&pm);
+        let innov: Vec<f64> = y.iter().zip(&hm).map(|(yi, hi)| yi - hi).collect();
+        mean = k.matvec::<Prob>(&innov);
+        for i in 0..n {
+            mean[i] += pm[i];
+        }
+        cov = joseph_cov(model, &pc, &k);
+        means.push(mean.clone());
+        covs.push(cov.clone());
+    }
+    // Backward pass, filling rows last-to-first.
+    let mut gamma = vec![0.0; t * d];
+    if t > 0 {
+        let write = |gamma: &mut [f64], k: usize, mean: &[f64], cov: &Mat| {
+            gamma[k * d..k * d + n].copy_from_slice(mean);
+            gamma[k * d + n..(k + 1) * d].copy_from_slice(cov.data());
+        };
+        let mut sm = means[t - 1].clone();
+        let mut sp = covs[t - 1].clone();
+        write(&mut gamma, t - 1, &sm, &sp);
+        for k in (0..t - 1).rev() {
+            let (pm, pc) = predict_moments(model, &means[k], &covs[k]);
+            let lu = Lu::factor(&pc);
+            // G = P_k·Aᵀ·Ppred⁻¹ = (Ppred⁻¹·A·P_k)ᵀ.
+            let g = lu.solve_mat(&a.matmul::<Prob>(&covs[k])).transpose();
+            let diff: Vec<f64> = sm.iter().zip(&pm).map(|(s, p)| s - p).collect();
+            let gd = g.matvec::<Prob>(&diff);
+            sm = means[k].iter().zip(&gd).map(|(mk, v)| mk + v).collect();
+            let mut dcov = sp.clone();
+            for (x, y) in dcov.data_mut().iter_mut().zip(pc.data()) {
+                *x -= y;
+            }
+            sp = covs[k].clone();
+            let corr = g.matmul::<Prob>(&dcov).matmul::<Prob>(&g.transpose());
+            add_assign(&mut sp, &corr);
+            symmetrize(&mut sp);
+            write(&mut gamma, k, &sm, &sp);
+        }
+    }
+    Posterior::new(d, gamma, ll)
+}
+
+/// Parallel Kalman filter (KF-Par): element chain + prefix scan.
+pub fn kf_par(
+    model: &Lgssm,
+    obs: &[f64],
+    opts: ScanOptions,
+    ws: &mut KalmanWorkspace,
+) -> Posterior {
+    let n = model.state_dim();
+    kf_element_chain_into(model, obs, &mut ws.fwd);
+    run_scan(&KfOp { n }, &mut ws.fwd, opts);
+    let ll = loglik_from_forward(model, obs, &ws.fwd);
+    let d = n + n * n;
+    let mut gamma = Vec::with_capacity(ws.fwd.len() * d);
+    for e in &ws.fwd {
+        pack_row(&mut gamma, &e.b, &e.c);
+    }
+    Posterior::new(d, gamma, ll)
+}
+
+/// Parallel Kalman (RTS) smoother (KS-Par): forward prefix scan, then
+/// smoothing elements combined by a suffix scan.
+pub fn ks_par(
+    model: &Lgssm,
+    obs: &[f64],
+    opts: ScanOptions,
+    ws: &mut KalmanWorkspace,
+) -> Posterior {
+    let n = model.state_dim();
+    kf_element_chain_into(model, obs, &mut ws.fwd);
+    run_scan(&KfOp { n }, &mut ws.fwd, opts);
+    // Split borrows: the smoothing pass reads `fwd` and writes `bwd`.
+    let KalmanWorkspace { fwd, bwd } = ws;
+    ks_from_forward(model, obs, fwd, opts, bwd)
+}
+
+/// The smoothing tail shared by one-shot [`ks_par`] and streaming
+/// `Session::finish`: build the smoothing chain from scanned forward
+/// elements, suffix-scan it, and pack the posterior with the
+/// [`loglik_from_forward`] post-pass. Given bit-identical forward
+/// chains, the outputs are bit-identical — that is the session
+/// `finish`-equals-one-shot property.
+pub fn ks_from_forward(
+    model: &Lgssm,
+    obs: &[f64],
+    fwd: &[KfElement],
+    opts: ScanOptions,
+    bwd: &mut Vec<KsElement>,
+) -> Posterior {
+    let n = model.state_dim();
+    ks_element_chain_into(model, fwd, bwd);
+    run_scan_rev(&KsOp { n }, bwd, opts);
+    let ll = loglik_from_forward(model, obs, fwd);
+    let d = n + n * n;
+    let mut gamma = Vec::with_capacity(bwd.len() * d);
+    for e in bwd.iter() {
+        pack_row(&mut gamma, &e.g, &e.l);
+    }
+    Posterior::new(d, gamma, ll)
+}
+
+/// Deterministic observation generators shared by the Kalman test
+/// modules (filters, engine, sessions).
+#[cfg(test)]
+pub(crate) mod tests_support {
+    use super::Lgssm;
+    use crate::rng::Xoshiro256StarStar;
+
+    /// A bounded wandering trajectory plus noise — any finite
+    /// observation sequence is valid input for the equivalence
+    /// properties, so this only needs to be deterministic per seed.
+    pub(crate) fn tracking_obs(model: &Lgssm, t: usize, seed: u64) -> Vec<f64> {
+        let mut r = Xoshiro256StarStar::seed_from_u64(seed);
+        let m = model.obs_dim();
+        let mut obs = Vec::with_capacity(t * m);
+        let mut pos = vec![0.0; m];
+        for _ in 0..t {
+            for p in pos.iter_mut() {
+                *p += r.uniform(-0.5, 0.5);
+                obs.push(*p + r.uniform(-0.2, 0.2));
+            }
+        }
+        obs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptestx::Runner;
+    use crate::rng::Xoshiro256StarStar;
+
+    fn tracking_obs(r: &mut Xoshiro256StarStar, model: &Lgssm, t: usize) -> Vec<f64> {
+        super::tests_support::tracking_obs(model, t, r.next_u64())
+    }
+
+    // Tolerance rationale (satellite of the bit-exact HMM tests in
+    // `inference::tests::par_equals_seq_on_ge_long`): the HMM par/seq
+    // pairs are *bit-identical* because their combines are plain
+    // semiring matmuls whose operands are identical under any
+    // association. The Gaussian combines are not — the parallel
+    // association routes different matrices through the G = I + C·J
+    // solves than the sequential update order does, so KF-Par/KS-Par
+    // agree with KF-Seq/KS-Seq only up to floating-point
+    // reassociation. Empirically the relative error is ~1e-10 at
+    // T = 4096 for well-conditioned models; 1e-6 leaves margin for
+    // FMA/codegen differences across platforms while still catching
+    // any real algebra bug (which shows up at O(1)).
+    const KALMAN_TOL: f64 = 1e-6;
+
+    fn rel_err(a: f64, b: f64) -> f64 {
+        (a - b).abs() / (1.0 + a.abs().max(b.abs()))
+    }
+
+    fn max_rel_err(a: &Posterior, b: &Posterior) -> f64 {
+        assert_eq!(a.num_states(), b.num_states());
+        assert_eq!(a.gamma_flat().len(), b.gamma_flat().len());
+        a.gamma_flat()
+            .iter()
+            .zip(b.gamma_flat())
+            .map(|(x, y)| rel_err(*x, *y))
+            .fold(rel_err(a.log_likelihood(), b.log_likelihood()), f64::max)
+    }
+
+    fn par_opts() -> ScanOptions {
+        ScanOptions { threads: 4, min_parallel_work: 8, ..ScanOptions::default() }
+    }
+
+    #[test]
+    fn kf_par_equals_kf_seq_within_tolerance() {
+        let model = Lgssm::constant_velocity(0.1, 1.0, 0.5);
+        let mut runner = Runner::new("kalman-kf-equivalence");
+        let mut ws = KalmanWorkspace::default();
+        for &t in &[1usize, 100, 1000, 4096] {
+            runner.run(1, |r| {
+                let obs = tracking_obs(r, &model, t);
+                let seq = kf_seq(&model, &obs);
+                let par = kf_par(&model, &obs, par_opts(), &mut ws);
+                let err = max_rel_err(&seq, &par);
+                assert!(err < KALMAN_TOL, "T={t}: max rel err {err:e}");
+            });
+        }
+    }
+
+    #[test]
+    fn ks_par_equals_ks_seq_within_tolerance() {
+        let model = Lgssm::constant_velocity(0.1, 1.0, 0.5);
+        let mut runner = Runner::new("kalman-ks-equivalence");
+        let mut ws = KalmanWorkspace::default();
+        for &t in &[1usize, 100, 1000, 4096] {
+            runner.run(1, |r| {
+                let obs = tracking_obs(r, &model, t);
+                let seq = ks_seq(&model, &obs);
+                let par = ks_par(&model, &obs, par_opts(), &mut ws);
+                let err = max_rel_err(&seq, &par);
+                assert!(err < KALMAN_TOL, "T={t}: max rel err {err:e}");
+            });
+        }
+    }
+
+    #[test]
+    fn smoother_agrees_with_filter_at_the_last_step() {
+        // The smoothed marginal at T equals the filtered marginal at T —
+        // true for both the sequential and the parallel formulations.
+        let model = Lgssm::constant_velocity(0.2, 0.5, 1.0);
+        let mut runner = Runner::new("kalman-smoother-final-step");
+        let mut ws = KalmanWorkspace::default();
+        runner.run(10, |r| {
+            let t = 1 + (r.next_u64() % 64) as usize;
+            let obs = tracking_obs(r, &model, t);
+            let filt = kf_seq(&model, &obs);
+            let smooth = ks_par(&model, &obs, ScanOptions::serial(), &mut ws);
+            for (x, y) in filt.gamma(t - 1).iter().zip(smooth.gamma(t - 1)) {
+                assert!(rel_err(*x, *y) < KALMAN_TOL);
+            }
+        });
+    }
+
+    #[test]
+    fn serial_and_threaded_scans_agree() {
+        // Same engine family, different schedules: chunked-serial vs
+        // chunked-threaded vs Blelloch all reassociate, so tolerance
+        // comparison again.
+        use crate::scan::ScanEngine;
+        let model = Lgssm::constant_velocity(0.1, 1.0, 0.5);
+        let mut runner = Runner::new("kalman-schedule-agreement");
+        let mut ws = KalmanWorkspace::default();
+        let mut ws2 = KalmanWorkspace::default();
+        runner.run(5, |r| {
+            let obs = tracking_obs(r, &model, 257);
+            let serial = ks_par(&model, &obs, ScanOptions::serial(), &mut ws);
+            let threaded = ks_par(&model, &obs, par_opts(), &mut ws2);
+            let blelloch = ks_par(
+                &model,
+                &obs,
+                par_opts().with_engine(ScanEngine::Blelloch),
+                &mut ws2,
+            );
+            assert!(max_rel_err(&serial, &threaded) < KALMAN_TOL);
+            assert!(max_rel_err(&serial, &blelloch) < KALMAN_TOL);
+        });
+    }
+
+    #[test]
+    fn empty_sequence_is_a_valid_degenerate_posterior() {
+        let model = Lgssm::constant_velocity(0.1, 1.0, 0.5);
+        let mut ws = KalmanWorkspace::default();
+        let p = kf_par(&model, &[], ScanOptions::serial(), &mut ws);
+        assert!(p.is_empty());
+        assert_eq!(p.log_likelihood(), 0.0);
+    }
+}

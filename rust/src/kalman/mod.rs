@@ -1,0 +1,391 @@
+//! Parallel Kalman filtering & smoothing — the affine-Gaussian inference
+//! tier of *Temporal Parallelization of Bayesian Smoothers* (Särkkä &
+//! García-Fernández, arXiv:1905.13002), running on the same scan stack
+//! as the discrete-HMM algorithms.
+//!
+//! The recipe is the paper's general one: define associative elements
+//! and an operator, then any parallel prefix-sum computes the filter.
+//! For a linear-Gaussian state-space model ([`Lgssm`]) the filtering
+//! element is the five-tuple `(A, b, C, η, J)` of [`KfElement`] — an
+//! affine-Gaussian conditional plus an information-form likelihood
+//! correction — and the smoothing element is the `(E, g, L)` triple of
+//! [`KsElement`]. Both get [`crate::scan::AssocOp`] impls, so
+//! `seq_scan`, the Blelloch tree, the chunked scan, and the streaming
+//! [`crate::scan::CheckpointedScan`] all drive them unchanged.
+//!
+//! Numerical hardening (DESIGN.md §8): every combine symmetrizes its
+//! covariance/information outputs, the sequential reference filter uses
+//! the Joseph-form covariance update, and all solves go through the
+//! guarded [`crate::linalg::Lu`] factorization so a combine is *total* —
+//! a scan must never panic mid-tree, even on garbage input.
+//!
+//! Contents:
+//! * [`Lgssm`] — the model (A, Q, H, R, prior), validated like
+//!   [`crate::hmm::Hmm`].
+//! * [`element`] — elements, operators, per-step prototypes, chain
+//!   builders (mirroring `elements::sp_element_chain` & friends).
+//! * [`kf_seq`] / [`ks_seq`] — classical Kalman filter and RTS smoother,
+//!   the sequential references for equivalence testing.
+//! * [`kf_par`] / [`ks_par`] — the scan-based parallel filter/smoother.
+//! * [`KalmanEngine`] — `engine::Engine`'s sibling for Gaussian models:
+//!   one-shot runs, batches, and streaming [`crate::engine::Session`]s
+//!   (`SessionKind::Kalman`).
+//! * [`obs_to_words`] / [`words_to_obs`] — the exact f64 ↔ u32-word
+//!   codec that lets Gaussian observations ride the existing u32 append
+//!   channel (wire, store, router) bit-exactly.
+
+pub mod element;
+mod engine;
+mod filters;
+
+pub use element::{
+    kf_element_chain, kf_element_chain_into, kf_element_protos, kf_prior_element,
+    kf_step_element, ks_element_chain_into, KfElement, KfOp, KfProtos, KsElement, KsOp,
+};
+pub use engine::KalmanEngine;
+pub use filters::{
+    kf_par, kf_seq, ks_from_forward, ks_par, ks_seq, loglik_from_forward, KalmanWorkspace,
+};
+pub(crate) use filters::{predict_moments, step_loglik};
+#[cfg(test)]
+pub(crate) use filters::tests_support;
+
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// A linear-Gaussian state-space model:
+///
+/// ```text
+///   x_k = A·x_{k-1} + q_k,   q_k ~ N(0, Q)
+///   y_k = H·x_k     + r_k,   r_k ~ N(0, R)
+///   x_0 ~ N(m0, P0)          (prior; the first observation is y_1,
+///                             taken after one dynamics step)
+/// ```
+///
+/// Validation mirrors [`crate::hmm::Hmm::new`]: shapes are checked, all
+/// entries must be finite, and the covariance inputs (Q, R, P0) must be
+/// symmetric. Positive-definiteness is *not* checked (too expensive to
+/// verify exactly); the guarded solves keep inference total either way.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lgssm {
+    a: Mat,
+    q: Mat,
+    h: Mat,
+    r: Mat,
+    m0: Vec<f64>,
+    p0: Mat,
+}
+
+/// Relative symmetry tolerance for covariance inputs.
+const SYM_TOL: f64 = 1e-9;
+
+fn check_symmetric(m: &Mat, what: &str) -> Result<()> {
+    let scale = 1.0 + m.max_abs();
+    for i in 0..m.rows() {
+        for j in i + 1..m.cols() {
+            if (m[(i, j)] - m[(j, i)]).abs() > SYM_TOL * scale {
+                return Err(Error::invalid_model(format!(
+                    "{what} is not symmetric at ({i}, {j})"
+                )));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn check_finite(data: &[f64], what: &str) -> Result<()> {
+    if data.iter().any(|v| !v.is_finite()) {
+        return Err(Error::invalid_model(format!("{what} has a non-finite entry")));
+    }
+    Ok(())
+}
+
+impl Lgssm {
+    /// Build and validate a model. `a`/`q` are n×n, `h` is m×n, `r` is
+    /// m×m, `m0` has length n, `p0` is n×n.
+    pub fn new(a: Mat, q: Mat, h: Mat, r: Mat, m0: Vec<f64>, p0: Mat) -> Result<Self> {
+        let n = a.rows();
+        let m = h.rows();
+        if n == 0 {
+            return Err(Error::invalid_model("state dimension must be positive"));
+        }
+        if m == 0 {
+            return Err(Error::invalid_model("observation dimension must be positive"));
+        }
+        if a.cols() != n {
+            return Err(Error::invalid_model("transition matrix A must be square"));
+        }
+        if (q.rows(), q.cols()) != (n, n) {
+            return Err(Error::invalid_model("process noise Q must be n×n"));
+        }
+        if h.cols() != n {
+            return Err(Error::invalid_model("observation matrix H must be m×n"));
+        }
+        if (r.rows(), r.cols()) != (m, m) {
+            return Err(Error::invalid_model("observation noise R must be m×m"));
+        }
+        if m0.len() != n {
+            return Err(Error::invalid_model("prior mean must have length n"));
+        }
+        if (p0.rows(), p0.cols()) != (n, n) {
+            return Err(Error::invalid_model("prior covariance P0 must be n×n"));
+        }
+        check_finite(a.data(), "transition matrix A")?;
+        check_finite(q.data(), "process noise Q")?;
+        check_finite(h.data(), "observation matrix H")?;
+        check_finite(r.data(), "observation noise R")?;
+        check_finite(&m0, "prior mean m0")?;
+        check_finite(p0.data(), "prior covariance P0")?;
+        check_symmetric(&q, "process noise Q")?;
+        check_symmetric(&r, "observation noise R")?;
+        check_symmetric(&p0, "prior covariance P0")?;
+        Ok(Self { a, q, h, r, m0, p0 })
+    }
+
+    /// State dimension n.
+    pub fn state_dim(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Observation dimension m.
+    pub fn obs_dim(&self) -> usize {
+        self.h.rows()
+    }
+
+    /// u32 words per time step on the append channel (2 per f64 — see
+    /// [`obs_to_words`]).
+    pub fn words_per_step(&self) -> usize {
+        2 * self.obs_dim()
+    }
+
+    /// Transition matrix A (n×n).
+    pub fn a(&self) -> &Mat {
+        &self.a
+    }
+
+    /// Process noise covariance Q (n×n).
+    pub fn q(&self) -> &Mat {
+        &self.q
+    }
+
+    /// Observation matrix H (m×n).
+    pub fn h(&self) -> &Mat {
+        &self.h
+    }
+
+    /// Observation noise covariance R (m×m).
+    pub fn r(&self) -> &Mat {
+        &self.r
+    }
+
+    /// Prior mean m0 (length n).
+    pub fn prior_mean(&self) -> &[f64] {
+        &self.m0
+    }
+
+    /// Prior covariance P0 (n×n).
+    pub fn prior_cov(&self) -> &Mat {
+        &self.p0
+    }
+
+    /// The classic constant-velocity tracking model: 4 states
+    /// `[px, py, vx, vy]`, 2 observations `[px, py]`, discretized
+    /// white-noise-acceleration process noise with spectral density
+    /// `q`, isotropic measurement noise with variance `r`, and a
+    /// diffuse-ish prior at the origin.
+    pub fn constant_velocity(dt: f64, q: f64, r: f64) -> Self {
+        assert!(dt > 0.0 && q > 0.0 && r > 0.0, "dt, q, r must be positive");
+        #[rustfmt::skip]
+        let a = Mat::from_vec(4, 4, vec![
+            1.0, 0.0,  dt, 0.0,
+            0.0, 1.0, 0.0,  dt,
+            0.0, 0.0, 1.0, 0.0,
+            0.0, 0.0, 0.0, 1.0,
+        ]);
+        let (d3, d2) = (dt * dt * dt / 3.0, dt * dt / 2.0);
+        #[rustfmt::skip]
+        let qm = Mat::from_vec(4, 4, vec![
+            q * d3, 0.0,    q * d2, 0.0,
+            0.0,    q * d3, 0.0,    q * d2,
+            q * d2, 0.0,    q * dt, 0.0,
+            0.0,    q * d2, 0.0,    q * dt,
+        ]);
+        #[rustfmt::skip]
+        let h = Mat::from_vec(2, 4, vec![
+            1.0, 0.0, 0.0, 0.0,
+            0.0, 1.0, 0.0, 0.0,
+        ]);
+        let mut rm = Mat::zeros(2, 2);
+        rm[(0, 0)] = r;
+        rm[(1, 1)] = r;
+        let mut p0 = Mat::zeros(4, 4);
+        for i in 0..4 {
+            p0[(i, i)] = 10.0;
+        }
+        Self::new(a, qm, h, rm, vec![0.0; 4], p0).expect("constant-velocity model is valid")
+    }
+}
+
+/// FNV-1a fingerprint of an [`Lgssm`] — the Gaussian sibling of
+/// [`crate::store::model_fingerprint`], used by crash recovery to refuse
+/// snapshot summaries from a model re-registered under the same name.
+/// A leading tag keeps the Gaussian and discrete fingerprint domains
+/// disjoint even for coincidentally equal parameter bytes.
+pub fn lgssm_fingerprint(model: &Lgssm) -> u64 {
+    let mut h = crate::rng::fnv1a_64(crate::rng::FNV1A_OFFSET, b"lgssm");
+    let mut eat = |v: f64| {
+        h = crate::rng::fnv1a_64(h, &v.to_bits().to_le_bytes());
+    };
+    eat(model.state_dim() as f64);
+    eat(model.obs_dim() as f64);
+    for part in [&model.a, &model.q, &model.h, &model.r, &model.p0] {
+        for &v in part.data() {
+            eat(v);
+        }
+    }
+    for &v in &model.m0 {
+        eat(v);
+    }
+    h
+}
+
+/// Encode f64 observations as u32 words for the append channel: each
+/// value becomes two words, high 32 bits of `to_bits()` first. The
+/// codec is exact for every bit pattern (NaN payloads included), so
+/// Gaussian observations ride the existing wire/store/router u32
+/// channel without any lossy conversion.
+pub fn obs_to_words(obs: &[f64]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(obs.len() * 2);
+    for &v in obs {
+        let bits = v.to_bits();
+        out.push((bits >> 32) as u32);
+        out.push(bits as u32);
+    }
+    out
+}
+
+/// Decode the word stream of [`obs_to_words`] back to f64s. The word
+/// count must be even (a torn half-value cannot be decoded).
+pub fn words_to_obs(words: &[u32]) -> Result<Vec<f64>> {
+    if words.len() % 2 != 0 {
+        return Err(Error::invalid_request(
+            "observation word stream has a torn f64 (odd word count)",
+        ));
+    }
+    Ok(words
+        .chunks_exact(2)
+        .map(|w| f64::from_bits(((w[0] as u64) << 32) | w[1] as u64))
+        .collect())
+}
+
+/// Symmetrize in place: `m ← (m + mᵀ)/2`. Covariance and information
+/// matrices drift off symmetry under floating-point combines; every
+/// operator re-projects so the drift cannot compound across a scan.
+pub(crate) fn symmetrize(m: &mut Mat) {
+    for i in 0..m.rows() {
+        for j in i + 1..m.cols() {
+            let v = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = v;
+            m[(j, i)] = v;
+        }
+    }
+}
+
+/// `a ← a + b` entrywise.
+pub(crate) fn add_assign(a: &mut Mat, b: &Mat) {
+    debug_assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+    for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+        *x += y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptestx::Runner;
+
+    fn valid_model() -> Lgssm {
+        Lgssm::constant_velocity(0.1, 1.0, 0.5)
+    }
+
+    #[test]
+    fn constant_velocity_shapes() {
+        let m = valid_model();
+        assert_eq!(m.state_dim(), 4);
+        assert_eq!(m.obs_dim(), 2);
+        assert_eq!(m.words_per_step(), 4);
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes_and_values() {
+        let m = valid_model();
+        // Non-square A.
+        assert!(Lgssm::new(
+            Mat::zeros(4, 3),
+            m.q().clone(),
+            m.h().clone(),
+            m.r().clone(),
+            m.prior_mean().to_vec(),
+            m.prior_cov().clone(),
+        )
+        .is_err());
+        // Asymmetric Q.
+        let mut q = m.q().clone();
+        q[(0, 1)] += 1.0;
+        assert!(Lgssm::new(
+            m.a().clone(),
+            q,
+            m.h().clone(),
+            m.r().clone(),
+            m.prior_mean().to_vec(),
+            m.prior_cov().clone(),
+        )
+        .is_err());
+        // Non-finite entry.
+        let mut a = m.a().clone();
+        a[(0, 0)] = f64::NAN;
+        assert!(Lgssm::new(
+            a,
+            m.q().clone(),
+            m.h().clone(),
+            m.r().clone(),
+            m.prior_mean().to_vec(),
+            m.prior_cov().clone(),
+        )
+        .is_err());
+        // Wrong prior length.
+        assert!(Lgssm::new(
+            m.a().clone(),
+            m.q().clone(),
+            m.h().clone(),
+            m.r().clone(),
+            vec![0.0; 3],
+            m.prior_cov().clone(),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn word_codec_is_bit_exact_for_any_bits() {
+        let mut runner = Runner::new("kalman-word-codec");
+        runner.run(100, |r| {
+            let vals: Vec<f64> = (0..8).map(|_| f64::from_bits(r.next_u64())).collect();
+            let words = obs_to_words(&vals);
+            assert_eq!(words.len(), vals.len() * 2);
+            let back = words_to_obs(&words).unwrap();
+            for (a, b) in vals.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+        // Torn stream is rejected, not mis-decoded.
+        assert!(words_to_obs(&[1]).is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_models() {
+        let a = valid_model();
+        let b = Lgssm::constant_velocity(0.1, 1.0, 0.50001);
+        assert_ne!(lgssm_fingerprint(&a), lgssm_fingerprint(&b));
+        assert_eq!(lgssm_fingerprint(&a), lgssm_fingerprint(&a.clone()));
+    }
+}

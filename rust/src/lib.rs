@@ -47,6 +47,7 @@ pub mod exec;
 pub mod hmm;
 pub mod inference;
 pub mod jsonx;
+pub mod kalman;
 pub mod linalg;
 pub mod net;
 pub mod proptestx;

@@ -244,6 +244,195 @@ pub fn normalize_sum(v: &mut [f64]) -> f64 {
     s
 }
 
+/// Row-pivoted LU factorization `P·A = L·U` with a tiny-pivot guard —
+/// the solve kernel behind the Kalman-tier combines (`kalman::KfOp`).
+///
+/// The factorization and every solve are *total*: a singular (or
+/// garbage — NaN/Inf) input never panics or divides by exact zero.
+/// Pivots whose magnitude falls below a threshold scaled to the
+/// matrix's largest entry are replaced by the signed threshold, so the
+/// solves keep producing (possibly nonsensical, but finite-operation)
+/// output — exactly the contract `scan::AssocOp::combine` needs, since
+/// a scan must never panic mid-tree. Well-conditioned inputs are
+/// untouched by the guard and solve to ordinary partial-pivoting
+/// accuracy.
+#[derive(Debug, Clone)]
+pub struct Lu {
+    /// L (unit diagonal, strictly below) and U (on/above) packed in one
+    /// matrix.
+    lu: Mat,
+    /// Row permutation: `(P·A)[i, j] = A[perm[i], j]`.
+    perm: Vec<usize>,
+}
+
+impl Lu {
+    /// Factor a square matrix. See the type docs for the pivot guard.
+    pub fn factor(a: &Mat) -> Lu {
+        assert_eq!(a.rows(), a.cols(), "LU factorization needs a square matrix");
+        let n = a.rows();
+        // Guard scaled to the matrix magnitude; MIN_POSITIVE floor keeps
+        // the all-zero (and non-finite) cases total too.
+        let scale = a.max_abs();
+        let guard = if scale.is_finite() && scale > 0.0 {
+            (scale * f64::EPSILON).max(f64::MIN_POSITIVE)
+        } else {
+            f64::MIN_POSITIVE
+        };
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // Partial pivot: largest |entry| in column k at or below the
+            // diagonal (NaN entries compare false and are skipped).
+            let mut p = k;
+            let mut best = lu[(k, k)].abs();
+            for r in k + 1..n {
+                let v = lu[(r, k)].abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if p != k {
+                perm.swap(p, k);
+                for c in 0..n {
+                    let tmp = lu[(k, c)];
+                    lu[(k, c)] = lu[(p, c)];
+                    lu[(p, c)] = tmp;
+                }
+            }
+            let mut piv = lu[(k, k)];
+            if !(piv.abs() > guard) {
+                // Singular / tiny / NaN pivot: substitute the signed
+                // guard so elimination and the solves stay total.
+                piv = if piv < 0.0 { -guard } else { guard };
+                lu[(k, k)] = piv;
+            }
+            for r in k + 1..n {
+                let m = lu[(r, k)] / piv;
+                lu[(r, k)] = m;
+                if m == 0.0 {
+                    continue;
+                }
+                for c in k + 1..n {
+                    lu[(r, c)] -= m * lu[(k, c)];
+                }
+            }
+        }
+        Lu { lu, perm }
+    }
+
+    /// Matrix dimension n.
+    pub fn dim(&self) -> usize {
+        self.lu.rows()
+    }
+
+    /// `log |det A|` — the sum of log-magnitudes of the U diagonal
+    /// (guarded pivots included), as the Gaussian log-likelihood needs.
+    pub fn ln_abs_det(&self) -> f64 {
+        (0..self.dim()).map(|i| self.lu[(i, i)].abs().ln()).sum()
+    }
+
+    /// Solve `A·x = b`.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        assert_eq!(b.len(), n, "rhs length mismatch");
+        // y ← P·b, then forward-substitute L·y' = y (unit diagonal).
+        let mut y: Vec<f64> = (0..n).map(|i| b[self.perm[i]]).collect();
+        for i in 1..n {
+            let mut acc = y[i];
+            for k in 0..i {
+                let l = self.lu[(i, k)];
+                if l == 0.0 {
+                    continue; // exact-zero skip keeps identity solves exact
+                }
+                acc -= l * y[k];
+            }
+            y[i] = acc;
+        }
+        // Back-substitute U·x = y.
+        for i in (0..n).rev() {
+            let mut acc = y[i];
+            for c in i + 1..n {
+                let u = self.lu[(i, c)];
+                if u == 0.0 {
+                    continue;
+                }
+                acc -= u * y[c];
+            }
+            y[i] = acc / self.lu[(i, i)];
+        }
+        y
+    }
+
+    /// Solve `A·X = B` column-wise (B may be rectangular n×m).
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.dim();
+        assert_eq!(b.rows(), n, "rhs row-count mismatch");
+        let mut out = Mat::zeros(n, b.cols());
+        for c in 0..b.cols() {
+            let col = b.col(c);
+            let x = self.solve_vec(&col);
+            for (r, v) in x.into_iter().enumerate() {
+                out[(r, c)] = v;
+            }
+        }
+        out
+    }
+
+    /// Solve `Aᵀ·x = b` (transpose solve, no refactorization): since
+    /// `Aᵀ = Uᵀ·Lᵀ·P`, forward-substitute `Uᵀ·z = b`, back-substitute
+    /// `Lᵀ·w = z`, then un-permute `x[perm[i]] = w[i]`.
+    pub fn solve_transpose_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.dim();
+        assert_eq!(b.len(), n, "rhs length mismatch");
+        // Uᵀ is lower-triangular with the U diagonal.
+        let mut z = b.to_vec();
+        for i in 0..n {
+            let mut acc = z[i];
+            for k in 0..i {
+                let u = self.lu[(k, i)];
+                if u == 0.0 {
+                    continue;
+                }
+                acc -= u * z[k];
+            }
+            z[i] = acc / self.lu[(i, i)];
+        }
+        // Lᵀ is upper-triangular with a unit diagonal.
+        for i in (0..n).rev() {
+            let mut acc = z[i];
+            for k in i + 1..n {
+                let l = self.lu[(k, i)];
+                if l == 0.0 {
+                    continue;
+                }
+                acc -= l * z[k];
+            }
+            z[i] = acc;
+        }
+        let mut x = vec![0.0; n];
+        for (i, v) in z.into_iter().enumerate() {
+            x[self.perm[i]] = v;
+        }
+        x
+    }
+
+    /// Solve `Aᵀ·X = B` column-wise.
+    pub fn solve_transpose_mat(&self, b: &Mat) -> Mat {
+        let n = self.dim();
+        assert_eq!(b.rows(), n, "rhs row-count mismatch");
+        let mut out = Mat::zeros(n, b.cols());
+        for c in 0..b.cols() {
+            let col = b.col(c);
+            let x = self.solve_transpose_vec(&col);
+            for (r, v) in x.into_iter().enumerate() {
+                out[(r, c)] = v;
+            }
+        }
+        out
+    }
+}
+
 /// Index of the maximum element (first maximizer on ties).
 pub fn argmax(v: &[f64]) -> usize {
     let mut best = 0;
@@ -393,5 +582,100 @@ mod tests {
         assert_eq!((t.rows(), t.cols()), (3, 2));
         assert_eq!(t.row(1), &[2.0, 5.0]);
         assert_eq!(a.col(2), vec![3.0, 6.0]);
+    }
+
+    /// A well-conditioned random matrix: random entries plus a dominant
+    /// diagonal, so the LU solves should hit ordinary accuracy.
+    fn dominant_matrix(r: &mut crate::rng::Xoshiro256StarStar, d: usize) -> Mat {
+        let mut m = Mat::from_vec(
+            d,
+            d,
+            (0..d * d).map(|_| r.uniform(-1.0, 1.0)).collect(),
+        );
+        for i in 0..d {
+            m[(i, i)] += d as f64 + 1.0;
+        }
+        m
+    }
+
+    #[test]
+    fn lu_solve_round_trips() {
+        let mut runner = Runner::new("linalg-lu-solve");
+        runner.run(50, |r| {
+            let d = 1 + r.below(6) as usize;
+            let a = dominant_matrix(r, d);
+            let lu = Lu::factor(&a);
+            let x: Vec<f64> = (0..d).map(|_| r.uniform(-2.0, 2.0)).collect();
+            let b = a.matvec::<Prob>(&x);
+            let got = lu.solve_vec(&b);
+            for (u, v) in x.iter().zip(&got) {
+                assert!(close(*u, *v), "solve_vec: {u} vs {v}");
+            }
+            // Matrix solve: A·X = A·M recovers M.
+            let m = dominant_matrix(r, d);
+            let am = a.matmul::<Prob>(&m);
+            assert!(mats_close(&lu.solve_mat(&am), &m));
+        });
+    }
+
+    #[test]
+    fn lu_transpose_solve_matches_transposed_factorization() {
+        let mut runner = Runner::new("linalg-lu-transpose");
+        runner.run(50, |r| {
+            let d = 1 + r.below(6) as usize;
+            let a = dominant_matrix(r, d);
+            let lu = Lu::factor(&a);
+            let lut = Lu::factor(&a.transpose());
+            let b: Vec<f64> = (0..d).map(|_| r.uniform(-2.0, 2.0)).collect();
+            let via_transpose_solve = lu.solve_transpose_vec(&b);
+            let via_refactor = lut.solve_vec(&b);
+            for (u, v) in via_transpose_solve.iter().zip(&via_refactor) {
+                assert!(close(*u, *v), "transpose solve: {u} vs {v}");
+            }
+            let bm = dominant_matrix(r, d);
+            assert!(mats_close(&lu.solve_transpose_mat(&bm), &lut.solve_mat(&bm)));
+        });
+    }
+
+    #[test]
+    fn lu_identity_solves_are_bit_exact() {
+        // The exact-zero skips keep identity solves free of rounding —
+        // the property that makes `combine(identity, e)` value-exact in
+        // the Kalman scan operators.
+        let d = 5;
+        let i = Mat::identity::<Prob>(d);
+        let lu = Lu::factor(&i);
+        let b = vec![1.25, -3.5, 0.0, f64::MIN_POSITIVE, 1e300];
+        assert_eq!(lu.solve_vec(&b), b);
+        assert_eq!(lu.solve_transpose_vec(&b), b);
+        assert_eq!(lu.ln_abs_det(), 0.0);
+    }
+
+    #[test]
+    fn lu_ln_abs_det_matches_known_values() {
+        // Diagonal matrix: |det| = product of |diagonal|.
+        let a = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, -2.0]);
+        let lu = Lu::factor(&a);
+        assert!(close(lu.ln_abs_det(), 6.0_f64.ln()));
+        // Permutation effects: a matrix needing a row swap.
+        let b = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        assert!(close(Lu::factor(&b).ln_abs_det(), 0.0));
+    }
+
+    #[test]
+    fn lu_is_total_on_singular_and_garbage_input() {
+        // Singular, all-zero, and non-finite matrices must factor and
+        // solve without panicking (the scan-combine totality contract).
+        for m in [
+            Mat::zeros(3, 3),
+            Mat::filled(3, 3, 1.0), // rank 1
+            Mat::filled(3, 3, f64::NAN),
+            Mat::filled(3, 3, f64::INFINITY),
+        ] {
+            let lu = Lu::factor(&m);
+            let _ = lu.solve_vec(&[1.0, 2.0, 3.0]);
+            let _ = lu.solve_transpose_vec(&[1.0, 2.0, 3.0]);
+            let _ = lu.ln_abs_det();
+        }
     }
 }

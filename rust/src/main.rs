@@ -249,6 +249,12 @@ fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
     let coord = Arc::new(Coordinator::new(coord_config)?);
     let hmm = gilbert_elliott(config.ge);
     coord.register_model("ge", hmm.clone());
+    // The canonical Kalman-tier model, so remote clients can open
+    // `SessionKind::Kalman` sessions against a stock server.
+    coord.register_lgssm(
+        "cv",
+        hmm_scan::kalman::Lgssm::constant_velocity(0.1, 0.8, 0.5),
+    );
 
     // TCP mode: expose every decode and streaming verb over the wire
     // (docs/WIRE_FORMAT.md) and serve until killed (or --duration).

@@ -978,10 +978,10 @@ mod tests {
                             Some(1 + (r.next_u64() % 512) as usize)
                         },
                         track_map: r.next_u64() % 2 == 0,
-                        kind: if r.next_u64() % 2 == 0 {
-                            SessionKind::SumProduct
-                        } else {
-                            SessionKind::Bayes
+                        kind: match r.next_u64() % 3 {
+                            0 => SessionKind::SumProduct,
+                            1 => SessionKind::Bayes,
+                            _ => SessionKind::Kalman,
                         },
                     },
                     lag: (r.next_u64() % 128) as usize,
@@ -995,7 +995,11 @@ mod tests {
                     options: SessionOptions {
                         block: Some(1 + (r.next_u64() % 512) as usize),
                         track_map: r.next_u64() % 2 == 0,
-                        kind: SessionKind::SumProduct,
+                        kind: if r.next_u64() % 2 == 0 {
+                            SessionKind::SumProduct
+                        } else {
+                            SessionKind::Kalman
+                        },
                     },
                     lag: (r.next_u64() % 128) as usize,
                 },

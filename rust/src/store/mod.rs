@@ -75,6 +75,11 @@ pub fn model_fingerprint(hmm: &Hmm) -> u64 {
     h
 }
 
+// [`model_fingerprint`]'s linear-Gaussian sibling lives next to the
+// model it hashes; re-exported here so store/recovery call sites read
+// symmetrically with the discrete path.
+pub use crate::kalman::lgssm_fingerprint;
+
 /// Everything needed to re-create a session that is not resident:
 /// which model it belongs to, how it was opened, and its serving lag.
 #[derive(Debug, Clone, PartialEq)]
@@ -417,6 +422,18 @@ mod tests {
         }));
         assert_ne!(a, b, "parameter change must change the fingerprint");
         assert_eq!(a, model_fingerprint(&gilbert_elliott(GeParams::default())));
+    }
+
+    #[test]
+    fn lgssm_fingerprint_separates_models() {
+        use crate::kalman::Lgssm;
+        let a = lgssm_fingerprint(&Lgssm::constant_velocity(0.1, 0.8, 0.5));
+        let b = lgssm_fingerprint(&Lgssm::constant_velocity(0.1, 0.8, 0.6));
+        assert_ne!(a, b, "parameter change must change the fingerprint");
+        assert_eq!(
+            a,
+            lgssm_fingerprint(&Lgssm::constant_velocity(0.1, 0.8, 0.5))
+        );
     }
 
     #[test]
