@@ -25,6 +25,11 @@
 //! * **recovery scan** — byte-read counters for metadata-only recovery
 //!   (`recover_meta`, frame headers only) vs the full log parse.
 //!
+//! A final **timeline overhead** section measures the append hot path
+//! with coordinator event recording on vs off — recording is one
+//! bounded-channel send per append, so the p50 must stay within 5% of
+//! the timeline-off baseline (the observability tier's overhead claim).
+//!
 //! `HMM_SCAN_BENCH_SMOKE=1` shrinks the grid and time budget to a CI
 //! smoke run (a few seconds total).
 
@@ -38,6 +43,7 @@ use hmm_scan::coordinator::{
 use hmm_scan::elements::serde::to_decimal_json;
 use hmm_scan::engine::{Algorithm, Engine, SessionOptions};
 use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
+use hmm_scan::obs::Timeline;
 use hmm_scan::rng::Xoshiro256StarStar;
 use hmm_scan::scan::ScanOptions;
 use hmm_scan::store::{
@@ -209,6 +215,52 @@ fn recovery_scan_cost(
     }
     let _ = std::fs::remove_dir_all(&dir);
     (stored_bytes, meta_bytes, full_bytes, meta_wall, full_wall)
+}
+
+/// Median append latency with the event timeline enabled or not — the
+/// cost of one bounded-channel send (event rendered writer-side) on the
+/// coordinator's append hot path. No store, so appends never spill:
+/// the delta is the recording itself, not housekeeping noise.
+fn timeline_append_p50(with_timeline: bool, smoke: bool) -> Duration {
+    let hmm = gilbert_elliott(GeParams::default());
+    let dir = std::env::temp_dir().join(format!(
+        "hmm-scan-bench-tl{}-{}",
+        with_timeline as u8,
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let timeline = if with_timeline {
+        Some(Timeline::open(&dir).expect("bench timeline"))
+    } else {
+        None
+    };
+    let coord = Coordinator::new(CoordinatorConfig {
+        timeline: timeline.clone(),
+        ..CoordinatorConfig::native_only()
+    })
+    .expect("bench coordinator");
+    coord.register_model("ge", hmm.clone());
+    let mut rng = Xoshiro256StarStar::seed_from_u64(17);
+    let r = coord.stream(StreamRequest::open(0, "ge", 0)).expect("open");
+    let StreamReply::Opened { session } = r.reply else { unreachable!() };
+    let rounds = if smoke { 200 } else { 4000 };
+    let mut lat = Vec::with_capacity(rounds);
+    for seq in 0..rounds {
+        let chunk = sample(&hmm, 8, &mut rng).observations;
+        let t0 = Instant::now();
+        coord
+            .stream(StreamRequest::append(seq as u64 + 1, session, chunk))
+            .expect("append");
+        lat.push(t0.elapsed());
+    }
+    if let Some(tl) = &timeline {
+        tl.flush();
+    }
+    drop(coord);
+    lat.sort_unstable();
+    let p50 = pct(&lat, 0.50);
+    let _ = std::fs::remove_dir_all(&dir);
+    p50
 }
 
 fn main() {
@@ -447,4 +499,22 @@ fn main() {
         "packed checkpoint log shrank only {ratio:.2}× (want ≥ 1.8×)"
     );
     let _ = std::fs::remove_dir_all(&dir);
+
+    // ---- timeline overhead: event recording on the append hot path ----
+    let tl_off = timeline_append_p50(false, smoke);
+    let tl_on = timeline_append_p50(true, smoke);
+    let overhead =
+        tl_on.as_secs_f64() / tl_off.as_secs_f64().max(1e-9) - 1.0;
+    println!("\ntimeline overhead (append hot path, recording on vs off):");
+    println!("  timeline=off  append p50 {:>9}", fmt_duration(tl_off));
+    println!(
+        "  timeline=on   append p50 {:>9}   ({:+.1}%)",
+        fmt_duration(tl_on),
+        overhead * 100.0
+    );
+    assert!(
+        overhead < 0.05 || smoke,
+        "timeline recording added {:.1}% to append p50 (want < 5%)",
+        overhead * 100.0
+    );
 }

@@ -60,6 +60,7 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::net::{NetClient, WireService};
+use crate::obs::{Timeline, TimelineEvent};
 
 use super::placement::{ranked, slot_of};
 
@@ -164,6 +165,12 @@ pub struct ClusterConfig {
     pub probe_interval: Duration,
     /// Retry-after hint (ms) carried by router-issued busy rejections.
     pub retry_after_ms: u64,
+    /// Optional event timeline: placements, migrations (begin, verify,
+    /// cutover), drains and routed-session closes are appended to it.
+    /// Share one timeline with the fronting server's
+    /// [`crate::net::NetServerConfig::timeline`] for a single
+    /// interleaved log of connection and routing events.
+    pub timeline: Option<Arc<Timeline>>,
 }
 
 impl ClusterConfig {
@@ -179,6 +186,7 @@ impl ClusterConfig {
             checkout_timeout: Duration::from_secs(2),
             probe_interval: Duration::from_secs(1),
             retry_after_ms: 100,
+            timeline: None,
         }
     }
 }
@@ -306,6 +314,14 @@ impl ClusterRouter {
         })
     }
 
+    /// Append an event to the timeline (no-op without one; never
+    /// blocks — a full channel drops the event and bumps a counter).
+    fn record(&self, event: TimelineEvent) {
+        if let Some(timeline) = &self.config.timeline {
+            timeline.record(event);
+        }
+    }
+
     /// Administratively drain `addr`: exclude it from placement and
     /// decode fan-out, then live-migrate every session it serves to its
     /// rendezvous-preferred surviving worker. Returns how many sessions
@@ -314,6 +330,7 @@ impl ClusterRouter {
     pub fn drain_worker(&self, addr: &str) -> Result<usize> {
         let wi = self.worker_index(addr)?;
         self.workers[wi].admin_hold.store(true, Ordering::Release);
+        self.record(TimelineEvent::Drain { target: addr.to_string() });
         let resident: Vec<u64> = {
             let sessions = self.sessions.lock().unwrap();
             sessions
@@ -378,6 +395,11 @@ impl ClusterRouter {
         }
         let src = Arc::clone(&self.workers[*home]);
         let dst = Arc::clone(&self.workers[ti]);
+        self.record(TimelineEvent::MigrateBegin {
+            session,
+            from: src.addr.clone(),
+            to: dst.addr.clone(),
+        });
         // Compact-on-A: one self-contained checkpoint + meta.
         let (meta, snapshot, len_a) =
             self.on_worker_stream(&src, |c| c.export(session))?;
@@ -402,11 +424,21 @@ impl ClusterRouter {
                  verification; route unchanged"
             )));
         }
+        self.record(TimelineEvent::MigrateVerify {
+            session,
+            to: dst.addr.clone(),
+        });
         // Cut over, then release A's copy (best effort — if A is dying
         // anyway its copy is unreachable and harmless: the router's id
         // space never re-issues the id).
+        let from = src.addr.clone();
         *home = ti;
         self.metrics.on_session_migrated();
+        self.record(TimelineEvent::MigrateCutover {
+            session,
+            from,
+            to: dst.addr.clone(),
+        });
         let _ = self.on_worker_stream(&src, |c| c.release(session));
         Ok(())
     }
@@ -449,6 +481,10 @@ impl ClusterRouter {
                             Arc::new(SessionRoute { home: Mutex::new(wi) }),
                         );
                         self.metrics.on_session_placed();
+                        self.record(TimelineEvent::Place {
+                            session: id,
+                            worker: w.addr.clone(),
+                        });
                         return Ok(StreamResponse {
                             id: rid,
                             reply: StreamReply::Opened { session: id },
@@ -671,6 +707,7 @@ impl WireService for ClusterRouter {
                 let posterior =
                     self.on_route(session, |c| c.close(session))?;
                 self.sessions.lock().unwrap().remove(&session);
+                self.record(TimelineEvent::SessionClose { session });
                 Ok(StreamResponse {
                     id: rid,
                     reply: StreamReply::Closed { session, posterior },
@@ -1151,5 +1188,146 @@ mod tests {
         );
         server_a.shutdown(Duration::from_secs(5));
         server_b.shutdown(Duration::from_secs(5));
+    }
+
+    /// The cluster observability acceptance bar: with per-worker and
+    /// router timelines, replaying each log reconstructs the live view
+    /// exactly — the worker's session registry bit-identical to its
+    /// `Stat` across spills and restores, and the router's placements
+    /// identical to the live routes across live migrations — and the
+    /// scrape verb round-trips through a fronted router.
+    #[test]
+    fn cluster_timelines_replay_to_live_state() {
+        use crate::obs::{read_events, replay_records, Timeline};
+
+        let dir = crate::store::testutil::tempdir("cluster-timeline");
+        // Worker A: disk store, watermark 1, its own timeline.
+        let wa_tl = Timeline::open(dir.join("wa-tl")).unwrap();
+        let ca = Coordinator::new(CoordinatorConfig {
+            resident_watermark: 1,
+            session_store: Some(dir.join("wa-store")),
+            timeline: Some(Arc::clone(&wa_tl)),
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        ca.register_model("ge", gilbert_elliott(GeParams::default()));
+        let ca = Arc::new(ca);
+        let server_a = NetServer::start(
+            Arc::clone(&ca),
+            "127.0.0.1:0",
+            NetServerConfig::default(),
+        )
+        .unwrap();
+        let addr_a = server_a.local_addr().to_string();
+        let (_cb, server_b, addr_b) = spawn_worker();
+
+        let rt_tl = Timeline::open(dir.join("rt-tl")).unwrap();
+        let mut cfg = ClusterConfig::new(vec![addr_a.clone(), addr_b.clone()]);
+        cfg.probe_interval = Duration::from_millis(100);
+        cfg.timeline = Some(Arc::clone(&rt_tl));
+        let router = Arc::new(ClusterRouter::new(cfg).unwrap());
+
+        let mut sids = Vec::new();
+        for _ in 0..4 {
+            let StreamReply::Opened { session } = router
+                .stream(StreamRequest::open(0, "ge", 0))
+                .unwrap()
+                .reply
+            else {
+                panic!("expected Opened")
+            };
+            router
+                .stream(StreamRequest::append(0, session, vec![0, 1]))
+                .unwrap();
+            sids.push(session);
+        }
+        // Herd every session onto worker A so its watermark-1 registry
+        // spills, then append to each so evicted ones restore.
+        let mut migrated = 0u64;
+        for &sid in &sids {
+            if router.session_home(sid).unwrap() != addr_a {
+                router.migrate_session(sid, &addr_a).unwrap();
+                migrated += 1;
+            }
+        }
+        ca.quiesce_housekeeping();
+        for &sid in &sids {
+            router.stream(StreamRequest::append(0, sid, vec![1])).unwrap();
+        }
+        // One more live migration after the spill/restore churn.
+        router.migrate_session(sids[0], &addr_b).unwrap();
+        migrated += 1;
+        ca.quiesce_housekeeping();
+        let snap = ca.metrics().snapshot();
+        assert!(snap.spills > 0, "worker A never spilled");
+        assert!(snap.restores > 0, "worker A never restored");
+
+        // Worker A's timeline replays to its live registry.
+        wa_tl.flush();
+        let state = replay_records(&read_events(wa_tl.dir()).unwrap(), None);
+        assert_eq!(state.open_sessions(), ca.open_sessions());
+        assert_eq!(state.resident_sessions(), ca.resident_sessions());
+        for (&sid, view) in &state.sessions {
+            let StreamReply::Stats { len, resident, model, .. } =
+                ca.stream(StreamRequest::stat(0, sid)).unwrap().reply
+            else {
+                panic!("expected Stats")
+            };
+            assert_eq!(
+                (view.len, view.resident, view.model.as_str()),
+                (len, resident, model.as_str()),
+                "worker A session {sid} diverged from replay"
+            );
+        }
+        assert_eq!(wa_tl.dropped(), 0);
+
+        // The router's timeline replays to the live routes.
+        rt_tl.flush();
+        let rt = replay_records(&read_events(rt_tl.dir()).unwrap(), None);
+        assert_eq!(rt.migrations, migrated);
+        assert_eq!(rt.placements.len(), sids.len());
+        for &sid in &sids {
+            assert_eq!(
+                rt.placements.get(&sid),
+                router.session_home(sid).as_ref(),
+                "router placement for session {sid} diverged from replay"
+            );
+        }
+
+        // Scrape round-trips through a fronted router, and a close
+        // replays the placement away.
+        let front = NetServer::start(
+            Arc::clone(&router),
+            "127.0.0.1:0",
+            NetServerConfig::default(),
+        )
+        .unwrap();
+        let mut client =
+            NetClient::connect(front.local_addr().to_string()).unwrap();
+        let text = client.scrape().unwrap();
+        for line in text.lines() {
+            let (key, value) = line.split_once(' ').unwrap();
+            assert!(!key.is_empty());
+            assert!(value.parse::<f64>().is_ok(), "unparseable line: {line}");
+        }
+        let placed = format!("sessions_placed {}", sids.len());
+        assert!(text.contains(&placed), "scrape missing: {placed}");
+        assert!(text.contains(&format!("sessions_migrated {migrated}")));
+        assert!(text.contains("worker_"), "no per-worker link lines");
+
+        client.close(sids[1]).unwrap();
+        rt_tl.flush();
+        let rt = replay_records(&read_events(rt_tl.dir()).unwrap(), None);
+        assert!(
+            !rt.placements.contains_key(&sids[1]),
+            "closed session must replay out of the placements"
+        );
+        assert_eq!(rt_tl.dropped(), 0);
+
+        drop(client);
+        assert!(front.shutdown(Duration::from_secs(5)));
+        server_a.shutdown(Duration::from_secs(5));
+        server_b.shutdown(Duration::from_secs(5));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -77,6 +77,8 @@ pub struct Metrics {
     sessions_migrated: AtomicU64,
     decode_failovers: AtomicU64,
     rejects_sent: AtomicU64,
+    deadline_sheds: AtomicU64,
+    quota_sheds: AtomicU64,
     /// Per-worker router-side wire latency (cluster tier): call count
     /// plus a bounded sample window, keyed by the worker's address.
     worker_links: Mutex<BTreeMap<String, (u64, SampleWindow)>>,
@@ -206,6 +208,12 @@ pub struct MetricsSnapshot {
     pub decode_failovers: u64,
     /// Reject (busy) frames sent to clients instead of serving.
     pub rejects_sent: u64,
+    /// Requests shed because they would have started past their
+    /// client-declared `deadline_ms` (a subset of `rejects_sent`).
+    pub deadline_sheds: u64,
+    /// Requests shed by the per-connection in-flight quota (a subset of
+    /// `rejects_sent`).
+    pub quota_sheds: u64,
     /// Per-worker router→worker wire latency, ascending by address.
     pub worker_links: Vec<WorkerLinkStats>,
 }
@@ -239,6 +247,108 @@ impl MetricsSnapshot {
             self.synced_appends as f64 / self.sync_batches as f64
         }
     }
+
+    /// Render the full snapshot in the stable `key value` line format
+    /// the wire scrape verb serves (`hmm-scan stat --connect ADDR`).
+    ///
+    /// One line per metric: a `[a-z0-9_]+` key, one space, a decimal
+    /// value (integers for counters/gauges/percentiles, `{:.3}` floats
+    /// for the occupancy ratios). Dynamic families embed their member
+    /// in the key — `suffix_width_le_<bound>`, `wire_verb_<verb>_<stat>`,
+    /// `worker_<address>_<stat>` (addresses sanitized to the key
+    /// alphabet) — so the output stays line-oriented and
+    /// `grep`/`awk`-parseable. Keys are append-only across releases:
+    /// scrapers may rely on a present key keeping its meaning. The
+    /// format is specified in `docs/OBSERVABILITY.md`.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut kv = |k: &str, v: u64| {
+            let _ = writeln!(out, "{k} {v}");
+        };
+        kv("requests", self.requests);
+        kv("completed", self.completed);
+        kv("failed", self.failed);
+        kv("batches", self.batches);
+        kv("batched_items", self.batched_items);
+        kv("sharded_blocks", self.sharded_blocks);
+        kv("p50_us", self.p50_us);
+        kv("p99_us", self.p99_us);
+        kv("max_us", self.max_us);
+        kv("sessions_opened", self.sessions_opened);
+        kv("sessions_closed", self.sessions_closed);
+        kv("appends", self.appends);
+        kv("appended_obs", self.appended_obs);
+        kv("append_p50_us", self.append_p50_us);
+        kv("append_p99_us", self.append_p99_us);
+        kv("append_max_us", self.append_max_us);
+        kv("spills", self.spills);
+        kv("restores", self.restores);
+        kv("sessions_recovered", self.sessions_recovered);
+        kv("restore_p50_us", self.restore_p50_us);
+        kv("restore_p99_us", self.restore_p99_us);
+        kv("restore_max_us", self.restore_max_us);
+        kv("hk_enqueued", self.hk_enqueued);
+        kv("hk_completed", self.hk_completed);
+        kv("hk_queue_depth", self.hk_queue_depth);
+        kv("sync_batches", self.sync_batches);
+        kv("sync_files", self.sync_files);
+        kv("synced_appends", self.synced_appends);
+        kv("recovery_scans", self.recovery_scans);
+        kv("recovery_scan_us", self.recovery_scan_us);
+        kv("conns_opened", self.conns_opened);
+        kv("conns_closed", self.conns_closed);
+        kv("conns_refused", self.conns_refused);
+        kv("open_conns", self.open_conns);
+        kv("wire_inflight", self.wire_inflight);
+        kv("sessions_placed", self.sessions_placed);
+        kv("sessions_migrated", self.sessions_migrated);
+        kv("decode_failovers", self.decode_failovers);
+        kv("rejects_sent", self.rejects_sent);
+        kv("deadline_sheds", self.deadline_sheds);
+        kv("quota_sheds", self.quota_sheds);
+        let _ = writeln!(out, "batch_occupancy {:.3}", self.batch_occupancy());
+        let _ =
+            writeln!(out, "append_occupancy {:.3}", self.append_occupancy());
+        let _ = writeln!(
+            out,
+            "sync_batch_occupancy {:.3}",
+            self.sync_batch_occupancy()
+        );
+        for (bound, count) in &self.suffix_width_hist {
+            let _ = writeln!(out, "suffix_width_le_{bound} {count}");
+        }
+        for v in &self.wire_verbs {
+            let verb = sanitize_key(&v.verb);
+            let _ = writeln!(out, "wire_verb_{verb}_count {}", v.count);
+            let _ = writeln!(out, "wire_verb_{verb}_p50_us {}", v.p50_us);
+            let _ = writeln!(out, "wire_verb_{verb}_p99_us {}", v.p99_us);
+            let _ = writeln!(out, "wire_verb_{verb}_max_us {}", v.max_us);
+        }
+        for w in &self.worker_links {
+            let worker = sanitize_key(&w.worker);
+            let _ = writeln!(out, "worker_{worker}_count {}", w.count);
+            let _ = writeln!(out, "worker_{worker}_p50_us {}", w.p50_us);
+            let _ = writeln!(out, "worker_{worker}_p99_us {}", w.p99_us);
+            let _ = writeln!(out, "worker_{worker}_max_us {}", w.max_us);
+        }
+        out
+    }
+}
+
+/// Map an arbitrary member name (a verb or a `host:port` worker
+/// address) onto the scrape-key alphabet: lowercased ASCII
+/// alphanumerics preserved, every other byte replaced by `_`.
+fn sanitize_key(s: &str) -> String {
+    s.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() {
+                c.to_ascii_lowercase()
+            } else {
+                '_'
+            }
+        })
+        .collect()
 }
 
 impl Metrics {
@@ -403,6 +513,19 @@ impl Metrics {
         self.rejects_sent.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one request shed because it would have started past its
+    /// client-declared deadline (counted alongside
+    /// [`on_reject`](Self::on_reject), which the reject path also
+    /// records).
+    pub fn on_deadline_shed(&self) {
+        self.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request shed by the per-connection in-flight quota.
+    pub fn on_quota_shed(&self) {
+        self.quota_sheds.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record one completed router→worker wire call against `worker`
     /// taking `latency` (the cluster tier's per-worker link histogram).
     pub fn on_worker_call(&self, worker: &str, latency: Duration) {
@@ -522,6 +645,8 @@ impl Metrics {
             sessions_migrated: self.sessions_migrated.load(Ordering::Relaxed),
             decode_failovers: self.decode_failovers.load(Ordering::Relaxed),
             rejects_sent: self.rejects_sent.load(Ordering::Relaxed),
+            deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
+            quota_sheds: self.quota_sheds.load(Ordering::Relaxed),
             worker_links,
         }
     }
@@ -711,6 +836,112 @@ mod tests {
         // Counters still see everything; percentiles cover the window.
         assert_eq!(s.appends, (MAX_LATENCY_SAMPLES + 500) as u64);
         assert!(s.append_max_us >= MAX_LATENCY_SAMPLES as u64);
+    }
+
+    #[test]
+    fn sample_window_wrap_keeps_only_the_most_recent_window() {
+        // Push one full window (values 0..MAX), then 500 more
+        // (MAX..MAX+500): the ring must hold exactly the most recent
+        // MAX values, i.e. 500..MAX+500, with the oldest overwritten.
+        let mut w = SampleWindow::default();
+        for v in 0..(MAX_LATENCY_SAMPLES + 500) as u64 {
+            w.push(v);
+        }
+        assert_eq!(w.samples.len(), MAX_LATENCY_SAMPLES);
+        assert_eq!(w.next, 500, "next points at the oldest surviving slot");
+        let mut sorted = w.samples.clone();
+        sorted.sort_unstable();
+        let expect: Vec<u64> =
+            (500..(MAX_LATENCY_SAMPLES + 500) as u64).collect();
+        assert_eq!(sorted, expect, "window is exactly the last MAX pushes");
+    }
+
+    #[test]
+    fn sample_window_wrap_edge_overwrites_slot_zero_first() {
+        // The next-pointer wrap edge: after exactly MAX pushes `next`
+        // is still 0, so push MAX+1 must overwrite slot 0 (the oldest
+        // sample), and a full extra lap must land `next` back at 0.
+        let mut w = SampleWindow::default();
+        for v in 0..MAX_LATENCY_SAMPLES as u64 {
+            w.push(v);
+        }
+        assert_eq!(w.next, 0);
+        assert_eq!(w.samples[0], 0);
+        w.push(777_777);
+        assert_eq!(w.samples[0], 777_777, "slot 0 is overwritten first");
+        assert_eq!(w.next, 1);
+        assert_eq!(w.samples[1], 1, "slot 1 still holds the old value");
+        for v in 0..(MAX_LATENCY_SAMPLES - 1) as u64 {
+            w.push(v);
+        }
+        assert_eq!(w.next, 0, "a full lap wraps the pointer back to 0");
+        assert_eq!(w.samples.len(), MAX_LATENCY_SAMPLES);
+    }
+
+    #[test]
+    fn wrapped_percentiles_reflect_only_the_recent_window() {
+        // Satellite regression: a huge early outlier must fall out of
+        // the percentile window once MAX more samples displace it.
+        let m = Metrics::new();
+        m.on_append(1, Duration::from_micros(10_000_000));
+        let s = m.snapshot();
+        assert_eq!(s.append_max_us, 10_000_000);
+        for _ in 0..MAX_LATENCY_SAMPLES {
+            m.on_append(1, Duration::from_micros(50));
+        }
+        let s = m.snapshot();
+        assert_eq!(
+            s.append_max_us, 50,
+            "the outlier was overwritten by the wrapped window"
+        );
+        assert_eq!(s.append_p50_us, 50);
+        assert_eq!(s.appends, MAX_LATENCY_SAMPLES as u64 + 1);
+    }
+
+    #[test]
+    fn shed_counters_and_scrape_rendering() {
+        let m = Metrics::new();
+        m.on_request();
+        m.on_complete(Duration::from_micros(40));
+        m.on_reject();
+        m.on_deadline_shed();
+        m.on_quota_shed();
+        m.on_wire_start();
+        m.on_wire_done("decode", Duration::from_micros(25));
+        m.on_worker_call("127.0.0.1:9001", Duration::from_micros(30));
+        m.on_suffix_width(3);
+        let s = m.snapshot();
+        assert_eq!((s.rejects_sent, s.deadline_sheds, s.quota_sheds), (1, 1, 1));
+        let text = s.render_text();
+        // Every line is `key value` over the scrape alphabet.
+        for line in text.lines() {
+            let (key, value) = line.split_once(' ').expect("key value");
+            assert!(!key.is_empty());
+            assert!(
+                key.bytes().all(|b| b.is_ascii_lowercase()
+                    || b.is_ascii_digit()
+                    || b == b'_'),
+                "bad key: {key}"
+            );
+            assert!(value.parse::<f64>().is_ok(), "bad value: {line}");
+        }
+        let get = |k: &str| -> String {
+            text.lines()
+                .find_map(|l| l.strip_prefix(&format!("{k} ")))
+                .unwrap_or_else(|| panic!("missing key {k}"))
+                .to_string()
+        };
+        assert_eq!(get("requests"), "1");
+        assert_eq!(get("rejects_sent"), "1");
+        assert_eq!(get("deadline_sheds"), "1");
+        assert_eq!(get("quota_sheds"), "1");
+        assert_eq!(get("wire_inflight"), "0");
+        assert_eq!(get("wire_verb_decode_count"), "1");
+        assert_eq!(get("wire_verb_decode_max_us"), "25");
+        assert_eq!(get("worker_127_0_0_1_9001_count"), "1");
+        assert_eq!(get("worker_127_0_0_1_9001_max_us"), "30");
+        assert_eq!(get("suffix_width_le_4"), "1");
+        assert_eq!(get("batch_occupancy"), "0.000");
     }
 
     #[test]

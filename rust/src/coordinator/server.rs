@@ -17,6 +17,7 @@ use crate::engine::{
 use crate::error::{Error, Result};
 use crate::hmm::Hmm;
 use crate::kalman::{KalmanEngine, Lgssm};
+use crate::obs::{Timeline, TimelineEvent};
 use crate::runtime::{ArtifactExec, Manifest, Registry, Value};
 use crate::scan::ScanOptions;
 use crate::store::{
@@ -220,6 +221,15 @@ pub struct CoordinatorConfig {
     /// Never spills the last resident session (a lone over-budget
     /// session would otherwise thrash spill/restore on every touch).
     pub resident_bytes_watermark: usize,
+    /// Optional event timeline: every session transition (open, append,
+    /// spill, restore, close, release, recover) is appended to it as a
+    /// durable record. `None` (the default) disables emission entirely;
+    /// with a timeline, recording is non-blocking — `obs::Timeline`
+    /// drops events on a full channel rather than stalling the serve
+    /// path. Share one timeline with
+    /// [`crate::net::NetServerConfig::timeline`] to interleave
+    /// connection and session events in a single monotonic log.
+    pub timeline: Option<Arc<Timeline>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -242,6 +252,7 @@ impl Default for CoordinatorConfig {
             housekeeping_queue: 64,
             group_commit_window: DEFAULT_GROUP_COMMIT_WINDOW,
             resident_bytes_watermark: usize::MAX,
+            timeline: None,
         }
     }
 }
@@ -386,9 +397,22 @@ struct SessionRegistry {
     resident_bytes_watermark: usize,
     /// Observations between checkpoint compactions (≥ 1).
     checkpoint_every: usize,
+    /// Optional event timeline; session transitions land here. Lives on
+    /// the registry (not the coordinator) because spills and restores
+    /// are driven by the housekeeping worker, which only holds the
+    /// registry.
+    timeline: Option<Arc<Timeline>>,
 }
 
 impl SessionRegistry {
+    /// Append an event to the timeline (no-op without one; never
+    /// blocks — a full channel drops the event and bumps a counter).
+    fn record(&self, event: TimelineEvent) {
+        if let Some(timeline) = &self.timeline {
+            timeline.record(event);
+        }
+    }
+
     fn tick(&self) -> u64 {
         self.clock.fetch_add(1, Ordering::Relaxed)
     }
@@ -555,6 +579,7 @@ impl SessionRegistry {
         self.note_resident(id, entry);
         self.recharge(entry, len);
         self.metrics.on_restore(t0.elapsed());
+        self.record(TimelineEvent::Restore { session: id, len });
         Ok(())
     }
 
@@ -573,6 +598,7 @@ impl SessionRegistry {
         *slot = SessionSlot::Evicted { len };
         self.note_evicted(id, entry);
         self.metrics.on_spill();
+        self.record(TimelineEvent::Spill { session: id, len });
         Ok(())
     }
 
@@ -745,6 +771,7 @@ impl Coordinator {
             resident_watermark: config.resident_watermark,
             resident_bytes_watermark: config.resident_bytes_watermark,
             checkpoint_every: config.checkpoint_every.max(1),
+            timeline: config.timeline.clone(),
         });
         let housekeeper = config.housekeeping.then(|| {
             Housekeeper::spawn(Arc::clone(&registry), config.housekeeping_queue)
@@ -1078,7 +1105,12 @@ impl Coordinator {
                 let id = self.next_session.fetch_add(1, Ordering::Relaxed) + 1;
                 let meta =
                     SessionMeta { model, options, lag, fingerprint: Some(fp) };
-                self.publish_session(id, handle, meta, session)?;
+                let entry = self.publish_session(id, handle, meta, session)?;
+                self.registry.record(TimelineEvent::SessionOpen {
+                    session: id,
+                    model: entry.meta.model.clone(),
+                    len: 0,
+                });
                 self.kick_housekeeping(Some(id));
                 Ok(StreamReply::Opened { session: id })
             }
@@ -1092,7 +1124,12 @@ impl Coordinator {
                 self.next_session.fetch_max(id, Ordering::Relaxed);
                 let meta =
                     SessionMeta { model, options, lag, fingerprint: Some(fp) };
-                self.publish_session(id, handle, meta, session)?;
+                let entry = self.publish_session(id, handle, meta, session)?;
+                self.registry.record(TimelineEvent::SessionOpen {
+                    session: id,
+                    model: entry.meta.model.clone(),
+                    len: 0,
+                });
                 self.kick_housekeeping(Some(id));
                 Ok(StreamReply::Opened { session: id })
             }
@@ -1184,6 +1221,13 @@ impl Coordinator {
                     }
                     return Err(e);
                 }
+                // Recorded only after the compact above: a rolled-back
+                // import must not leave an open event with no close.
+                self.registry.record(TimelineEvent::SessionOpen {
+                    session: id,
+                    model: sess_entry.meta.model.clone(),
+                    len,
+                });
                 self.kick_housekeeping(Some(id));
                 Ok(StreamReply::Imported { session: id, len })
             }
@@ -1204,6 +1248,7 @@ impl Coordinator {
                     self.registry.note_evicted(session, &entry);
                     let _ = self.store.remove(session);
                     self.metrics.on_session_close();
+                    self.registry.record(TimelineEvent::Release { session });
                 }
                 drop(slot);
                 Ok(StreamReply::Released { session })
@@ -1339,8 +1384,13 @@ impl Coordinator {
                     })
                 })();
                 self.registry.touch(session, &entry);
-                if reply.is_ok() {
+                if let Ok(StreamReply::Appended { len, .. }) = &reply {
                     self.metrics.on_append(ys.len(), start.elapsed());
+                    self.registry.record(TimelineEvent::Append {
+                        session,
+                        appended: ys.len(),
+                        len: *len,
+                    });
                 }
                 // Success or failure, the verb may have restored the
                 // session — re-impose (or request) the watermark either
@@ -1403,6 +1453,7 @@ impl Coordinator {
                     // never-closed session — consistent, just unclosed.
                     let _ = self.store.remove(session);
                     self.metrics.on_session_close();
+                    self.registry.record(TimelineEvent::SessionClose { session });
                 }
                 Ok(StreamReply::Closed { session, posterior })
             }
@@ -1500,6 +1551,7 @@ impl Coordinator {
                 }
                 ModelHandle::Hmm(model.hmm)
             };
+            let model_name = meta.model.clone();
             self.registry.sessions.write().unwrap().insert(
                 id,
                 Arc::new(SessionEntry {
@@ -1513,6 +1565,11 @@ impl Coordinator {
                     charged: AtomicUsize::new(0),
                 }),
             );
+            self.registry.record(TimelineEvent::Recover {
+                session: id,
+                model: model_name,
+                len,
+            });
             n += 1;
         }
         self.metrics.on_recovery_scan(t0.elapsed());
@@ -2455,6 +2512,127 @@ mod tests {
             !first_ids.contains(&session) && session != early,
             "fresh id {session} collides with a recovered session"
         );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The replay acceptance bar: folding the event timeline
+    /// reconstructs the live registry view — per-session model, length
+    /// and residency plus the open/resident counts — exactly as `Stat`
+    /// reports it, across opens, appends, spills, restores, a close and
+    /// a crash recovery; an `--until` cut reproduces the intermediate
+    /// state at that seq.
+    #[test]
+    fn timeline_replay_matches_live_registry_state() {
+        use crate::obs::{read_events, replay_records};
+
+        let dir = crate::store::testutil::tempdir("coord-timeline");
+        let tl_dir = dir.join("timeline");
+        let timeline = Timeline::open(&tl_dir).unwrap();
+        let hmm = gilbert_elliott(GeParams::default());
+        let config = || CoordinatorConfig {
+            resident_watermark: 1,
+            housekeeping: false, // in-band: deterministic spill order
+            session_store: Some(dir.join("store")),
+            timeline: Some(Arc::clone(&timeline)),
+            ..CoordinatorConfig::native_only()
+        };
+        let (s1, s2);
+        {
+            let c = Coordinator::new(config()).unwrap();
+            c.register_model("ge", hmm.clone());
+            let StreamReply::Opened { session } =
+                c.stream(StreamRequest::open(1, "ge", 0)).unwrap().reply
+            else {
+                panic!()
+            };
+            s1 = session;
+            c.stream(StreamRequest::append(2, s1, vec![0, 1, 1])).unwrap();
+            // Watermark 1: opening s2 spills s1 in-band.
+            let StreamReply::Opened { session } =
+                c.stream(StreamRequest::open(3, "ge", 0)).unwrap().reply
+            else {
+                panic!()
+            };
+            s2 = session;
+            c.stream(StreamRequest::append(4, s2, vec![1, 0])).unwrap();
+            // Appending to the spilled s1 restores it and spills s2.
+            c.stream(StreamRequest::append(5, s1, vec![0])).unwrap();
+            let snap = c.metrics().snapshot();
+            assert_eq!((snap.spills, snap.restores), (2, 1));
+
+            // Live truth at this seq, straight from Stat.
+            let StreamReply::Stats {
+                len,
+                resident,
+                model,
+                open_sessions,
+                resident_sessions,
+                ..
+            } = c.stream(StreamRequest::stat(6, s1)).unwrap().reply
+            else {
+                panic!()
+            };
+
+            timeline.flush();
+            let records = read_events(&tl_dir).unwrap();
+            let state = replay_records(&records, None);
+            assert_eq!(state.last_seq, timeline.last_seq());
+            assert_eq!(state.open_sessions(), open_sessions);
+            assert_eq!(state.resident_sessions(), resident_sessions);
+            let view = &state.sessions[&s1];
+            assert_eq!(
+                (view.model.as_str(), view.len, view.resident),
+                (model.as_str(), len, resident)
+            );
+            assert_eq!(
+                (state.sessions[&s2].len, state.sessions[&s2].resident),
+                (2, false)
+            );
+
+            // Cut the replay at the first spill: both sessions open,
+            // s1 just evicted at length 3, only s2 resident.
+            let cut = records
+                .iter()
+                .find(|r| matches!(r.event, TimelineEvent::Spill { .. }))
+                .unwrap()
+                .seq;
+            let mid = replay_records(&records, Some(cut));
+            assert_eq!(mid.open_sessions(), 2);
+            assert_eq!(mid.resident_sessions(), 1);
+            assert_eq!(
+                (mid.sessions[&s1].len, mid.sessions[&s1].resident),
+                (3, false)
+            );
+
+            // Close s2 (restores it first), then crash with s1 open.
+            c.stream(StreamRequest::close(7, s2)).unwrap();
+        }
+
+        let c = Coordinator::new(config()).unwrap();
+        c.register_model("ge", hmm);
+        assert_eq!(c.recover_sessions().unwrap(), 1);
+        let StreamReply::Stats {
+            len, resident, open_sessions, resident_sessions, ..
+        } = c.stream(StreamRequest::stat(8, s1)).unwrap().reply
+        else {
+            panic!()
+        };
+
+        timeline.flush();
+        let records = read_events(&tl_dir).unwrap();
+        let state = replay_records(&records, None);
+        assert_eq!(state.recovered, 1);
+        assert_eq!(state.open_sessions(), open_sessions);
+        assert_eq!(state.resident_sessions(), resident_sessions);
+        assert_eq!(
+            (state.sessions[&s1].len, state.sessions[&s1].resident),
+            (len, resident)
+        );
+        assert!(
+            !state.sessions.contains_key(&s2),
+            "closed session must replay away"
+        );
+        assert_eq!(timeline.dropped(), 0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -22,7 +22,9 @@
 //!   layer: TCP front-end, versioned wire protocol, and client — what
 //!   turns the coordinator into a deployable server), and [`cluster`]
 //!   (the L5 distributed tier: consistent-hash session router, worker
-//!   pool with health-driven failover, and live session migration).
+//!   pool with health-driven failover, and live session migration),
+//!   plus [`obs`] (the observability tier: replayable event-sourced
+//!   timeline, wire-scrapable metrics, deadline/quota load shedding).
 //! * **Substrates** — [`rng`], [`jsonx`], [`exec`], [`cli`], [`benchx`],
 //!   [`proptestx`], [`report`], [`config`], [`simulator`], [`xla_stub`]:
 //!   in-tree replacements for crates unavailable in the offline build
@@ -50,6 +52,7 @@ pub mod jsonx;
 pub mod kalman;
 pub mod linalg;
 pub mod net;
+pub mod obs;
 pub mod proptestx;
 pub mod report;
 pub mod rng;

@@ -8,6 +8,9 @@
 //!              coordinator, then measure wire throughput/latency
 //!   route      front a worker pool with the consistent-hash session
 //!              router (the distributed serving tier, DESIGN.md §7)
+//!   stat       scrape a remote server's metrics as `key value` text
+//!   replay     fold an event timeline back into the registry view it
+//!              implies (docs/OBSERVABILITY.md)
 //!   cluster-demo  three-worker loopback cluster end to end: placement,
 //!              failover-by-drain, live migration, bit-identity checks
 //!   figures    regenerate the paper's figures/tables into results/
@@ -74,6 +77,8 @@ fn cli() -> Cli {
                 opt("duration", "seconds to serve TCP before draining (0 = forever)", "0"),
                 opt("max-conns", "TCP connection limit", "64"),
                 opt("max-inflight", "pipelined requests per connection", "32"),
+                opt("inflight-quota", "per-connection decode quota: shed instead of block past it (0 = off)", "0"),
+                opt("timeline", "event-timeline directory ('' = off)", ""),
                 opt("config", "JSON config file path", ""),
                 flag("native", "serve natively (no artifacts)"),
             ],
@@ -103,6 +108,22 @@ fn cli() -> Cli {
                 opt("max-conns", "client connection limit", "64"),
                 opt("max-inflight", "pipelined requests per client connection", "32"),
                 opt("pool", "decode connections per worker", "4"),
+                opt("timeline", "event-timeline directory ('' = off)", ""),
+            ],
+            vec![],
+        )
+        .command(
+            "stat",
+            "scrape a remote server's metrics snapshot as key-value text",
+            vec![opt("connect", "server address (host:port)", "")],
+            vec![],
+        )
+        .command(
+            "replay",
+            "fold an event timeline back into the registry view it implies",
+            vec![
+                opt("timeline", "timeline directory to fold", ""),
+                opt("until", "stop after this sequence number (0 = all)", "0"),
             ],
             vec![],
         )
@@ -167,6 +188,8 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => cmd_serve(&parsed),
         "bench-net" => cmd_bench_net(&parsed),
         "route" => cmd_route(&parsed),
+        "stat" => cmd_stat(&parsed),
+        "replay" => cmd_replay(&parsed),
         "cluster-demo" => cmd_cluster_demo(&parsed),
         "figures" => cmd_figures(&parsed),
         "simulate" => cmd_simulate(&parsed),
@@ -246,6 +269,16 @@ fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
             coord_config.session_store = Some(dir.into());
         }
     }
+    // One shared timeline across the coordinator and the net server, so
+    // session and connection events interleave in a single monotonic
+    // log (`hmm-scan replay --timeline DIR` folds it back).
+    let timeline = match p.get("timeline") {
+        Some(dir) if !dir.is_empty() => {
+            Some(hmm_scan::obs::Timeline::open(dir)?)
+        }
+        _ => None,
+    };
+    coord_config.timeline = timeline.clone();
     let coord = Arc::new(Coordinator::new(coord_config)?);
     let hmm = gilbert_elliott(config.ge);
     coord.register_model("ge", hmm.clone());
@@ -262,6 +295,8 @@ fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
         let net_config = NetServerConfig {
             max_connections: p.get_usize("max-conns")?,
             max_inflight_per_conn: p.get_usize("max-inflight")?,
+            inflight_quota: p.get_usize("inflight-quota")?,
+            timeline: timeline.clone(),
             ..NetServerConfig::default()
         };
         let server =
@@ -288,6 +323,9 @@ fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
         // append hits disk — otherwise a --duration run could lose the
         // tail of its durable log.
         coord.quiesce_housekeeping();
+        if let Some(tl) = &timeline {
+            tl.flush();
+        }
         let snap = coord.metrics().snapshot();
         println!(
             "drained ({}): {} conns served ({} refused), {} decode reqs",
@@ -522,10 +560,20 @@ fn cmd_route(p: &hmm_scan::cli::Parsed) -> Result<()> {
     };
     let mut cluster_config = ClusterConfig::new(workers);
     cluster_config.decode_pool = p.get_usize("pool")?.max(1);
+    // One shared timeline across the router and its front-end, so
+    // placement/migration events interleave with connection events.
+    let timeline = match p.get("timeline") {
+        Some(dir) if !dir.is_empty() => {
+            Some(hmm_scan::obs::Timeline::open(dir)?)
+        }
+        _ => None,
+    };
+    cluster_config.timeline = timeline.clone();
     let router = Arc::new(ClusterRouter::new(cluster_config)?);
     let net_config = NetServerConfig {
         max_connections: p.get_usize("max-conns")?,
         max_inflight_per_conn: p.get_usize("max-inflight")?,
+        timeline: timeline.clone(),
         ..NetServerConfig::default()
     };
     let listen = p.get("listen").unwrap_or("127.0.0.1:0");
@@ -549,6 +597,9 @@ fn cmd_route(p: &hmm_scan::cli::Parsed) -> Result<()> {
         }
     }
     let graceful = server.shutdown(Duration::from_secs(10));
+    if let Some(tl) = &timeline {
+        tl.flush();
+    }
     let snap = router.metrics().snapshot();
     println!(
         "drained ({}): {} conns served ({} refused), {} sessions placed, \
@@ -567,6 +618,74 @@ fn cmd_route(p: &hmm_scan::cli::Parsed) -> Result<()> {
             link.worker, link.count, link.p50_us, link.p99_us, link.max_us
         );
     }
+    Ok(())
+}
+
+/// `stat`: scrape a remote server's full metrics snapshot as `key
+/// value` text (the wire v3 scrape verb). Works identically against a
+/// worker (`serve --listen`) and a router (`route`) front-end — the
+/// scrape renders whatever `WireService` the server fronts.
+fn cmd_stat(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let addr = match p.get("connect") {
+        Some(a) if !a.is_empty() => a.to_string(),
+        _ => return Err(Error::usage("stat requires --connect HOST:PORT")),
+    };
+    let mut client = NetClient::connect(&addr)?;
+    let text = client.scrape()?;
+    print!("{text}");
+    Ok(())
+}
+
+/// `replay`: fold a recorded event timeline back into the state it
+/// implies — open sessions with model/length/residency, cluster
+/// placements, connection and shed counters — optionally stopping at
+/// `--until SEQ` to reconstruct an intermediate moment. The replayed
+/// view is bit-identical to what a live `Stat` reported at the same
+/// seq (the coordinator and cluster test suites enforce this).
+fn cmd_replay(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let dir = match p.get("timeline") {
+        Some(d) if !d.is_empty() => d.to_string(),
+        _ => return Err(Error::usage("replay requires --timeline DIR")),
+    };
+    let until = p.get_usize("until")?;
+    let until = (until > 0).then_some(until as u64);
+    let records = hmm_scan::obs::read_events(&dir)?;
+    let state = hmm_scan::obs::replay_records(&records, until);
+    println!(
+        "replayed {} events (last seq {})",
+        state.events, state.last_seq
+    );
+    // The exact line CI's observability job parses for the final count.
+    println!(
+        "sessions: {} open, {} resident",
+        state.open_sessions(),
+        state.resident_sessions()
+    );
+    for (id, v) in &state.sessions {
+        println!(
+            "  session {id}: model {} len {} {}",
+            v.model,
+            v.len,
+            if v.resident { "resident" } else { "evicted" }
+        );
+    }
+    if !state.placements.is_empty() {
+        println!("placements:");
+        for (id, worker) in &state.placements {
+            println!("  session {id} -> {worker}");
+        }
+    }
+    println!(
+        "conns: {} opened, {} closed, {} refused, {} still open",
+        state.conns_opened,
+        state.conns_closed,
+        state.conns_refused,
+        state.open_conns.len()
+    );
+    println!(
+        "rejects {}  drains {}  migrations {}  recovered {}",
+        state.rejects, state.drains, state.migrations, state.recovered
+    );
     Ok(())
 }
 
@@ -846,6 +965,42 @@ mod tests {
         assert!(run(&argv("decode --mode nope")).is_err());
         assert!(run(&argv("bench-net")).is_err(), "--connect is required");
         assert!(run(&argv("route")).is_err(), "--workers is required");
+        assert!(run(&argv("stat")).is_err(), "--connect is required");
+        assert!(run(&argv("replay")).is_err(), "--timeline is required");
+    }
+
+    #[test]
+    fn replay_command_smoke() {
+        use hmm_scan::obs::{Timeline, TimelineEvent};
+        let dir = std::env::temp_dir()
+            .join(format!("hmm-scan-replay-cmd-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        {
+            let tl = Timeline::open(&dir).unwrap();
+            tl.record(TimelineEvent::SessionOpen {
+                session: 1,
+                model: "ge".into(),
+                len: 0,
+            });
+            tl.record(TimelineEvent::Append {
+                session: 1,
+                appended: 3,
+                len: 3,
+            });
+            tl.record(TimelineEvent::ConnOpen { conn: 1 });
+            tl.flush();
+        }
+        let cmd = format!("replay --timeline {}", dir.display());
+        run(&argv(&cmd)).unwrap();
+        run(&argv(&format!("{cmd} --until 1"))).unwrap();
+        // An absent directory is a typed error, not a panic.
+        let missing = dir.join("nope");
+        assert!(run(&argv(&format!(
+            "replay --timeline {}",
+            missing.display()
+        )))
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

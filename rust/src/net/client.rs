@@ -24,6 +24,14 @@
 //! bench drives: many requests in flight on one connection, responses
 //! matched by id in whatever order the server completes them. Don't mix
 //! pipelined sends with the blocking calls on one client.
+//!
+//! v3 additions: [`scrape`](NetClient::scrape) fetches the server's
+//! metrics snapshot as stable `key value` text, and
+//! [`set_deadline_ms`](NetClient::set_deadline_ms) stamps a per-request
+//! `deadline_ms` budget onto outgoing requests — a server that cannot
+//! start a request within the budget sheds it with a retryable
+//! [`Error::Busy`] instead of serving an answer the caller has stopped
+//! waiting for.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -53,6 +61,9 @@ pub struct NetClient {
     read_timeout: Duration,
     write_timeout: Duration,
     max_frame_payload: usize,
+    /// When set, stamped as `deadline_ms` onto every outgoing decode,
+    /// stream, and pipelined request (overload control, wire v3).
+    deadline_ms: Option<u64>,
 }
 
 impl NetClient {
@@ -67,6 +78,7 @@ impl NetClient {
             read_timeout: Duration::from_secs(60),
             write_timeout: Duration::from_secs(10),
             max_frame_payload: wire::DEFAULT_MAX_PAYLOAD,
+            deadline_ms: None,
         };
         client.reconnect()?;
         Ok(client)
@@ -85,6 +97,23 @@ impl NetClient {
     /// The server address this client targets.
     pub fn addr(&self) -> &str {
         &self.addr
+    }
+
+    /// Set (or clear) the per-request `deadline_ms` budget stamped onto
+    /// every subsequent decode, streaming, and pipelined request. A
+    /// request the server cannot *start* within the budget is shed with
+    /// a retryable [`Error::Busy`]; `0` means "shed unless immediate".
+    /// Internal traffic (ping, reconnect re-`Stat`s) is never stamped.
+    pub fn set_deadline_ms(&mut self, deadline_ms: Option<u64>) {
+        self.deadline_ms = deadline_ms;
+    }
+
+    /// Stamp the configured deadline onto an outgoing request payload.
+    fn stamp(&self, payload: Json) -> Json {
+        match self.deadline_ms {
+            Some(ms) => wire::with_deadline_ms(payload, ms),
+            None => payload,
+        }
     }
 
     /// Sessions this client has opened and not yet closed, with their
@@ -198,10 +227,27 @@ impl NetClient {
         self.call(FrameKind::Ping, &Json::Null).map(|_| ())
     }
 
+    /// Fetch the server's full metrics snapshot rendered as stable
+    /// `key value` scrape text (one metric per line — the wire verb
+    /// behind `hmm-scan stat --connect ADDR`). Works against any
+    /// [`WireService`](crate::net::WireService): a coordinator's server
+    /// reports worker-local metrics, a cluster router's reports the
+    /// routing tier's.
+    pub fn scrape(&mut self) -> Result<String> {
+        let frame = self.call(FrameKind::ScrapeRequest, &Json::Null)?;
+        if frame.kind != FrameKind::ScrapeResponse {
+            return Err(Error::coordinator(format!(
+                "wire: expected a scrape response, got {:?}",
+                frame.kind
+            )));
+        }
+        wire::scrape_text_from_json(&frame.payload)
+    }
+
     /// Serve one decode request remotely. The response's `id` echoes
     /// the wire request id the client assigned (not `req.id`).
     pub fn decode(&mut self, req: &DecodeRequest) -> Result<DecodeResponse> {
-        let payload = wire::decode_request_to_json(req);
+        let payload = self.stamp(wire::decode_request_to_json(req));
         let frame = self.call(FrameKind::DecodeRequest, &payload)?;
         if frame.kind != FrameKind::DecodeResponse {
             return Err(Error::coordinator(format!(
@@ -213,7 +259,7 @@ impl NetClient {
     }
 
     fn stream_call(&mut self, req: &StreamRequest) -> Result<StreamResponse> {
-        let payload = wire::stream_request_to_json(req);
+        let payload = self.stamp(wire::stream_request_to_json(req));
         let frame = self.call(FrameKind::StreamRequest, &payload)?;
         parse_stream_response(frame)
     }
@@ -334,7 +380,7 @@ impl NetClient {
     /// error instead of risking a double-apply.
     pub fn append(&mut self, session: u64, ys: &[u32]) -> Result<StreamReply> {
         let req = StreamRequest::append(0, session, ys.to_vec());
-        let payload = wire::stream_request_to_json(&req);
+        let payload = self.stamp(wire::stream_request_to_json(&req));
         let outcome = self.roundtrip(FrameKind::StreamRequest, &payload);
         let resp = match outcome {
             Ok(frame) => parse_stream_response(frame)?,
@@ -430,7 +476,7 @@ impl NetClient {
     /// connection.
     pub fn send_decode(&mut self, req: &DecodeRequest) -> Result<u64> {
         let id = self.next_id();
-        let payload = wire::decode_request_to_json(req);
+        let payload = self.stamp(wire::decode_request_to_json(req));
         let stream = self.stream_mut()?;
         stream.write_all(&wire::encode_frame(
             id,
@@ -649,6 +695,60 @@ mod tests {
             remote, control,
             "interrupted session diverged from the uninterrupted control"
         );
+        drop(client);
+        server.shutdown(Duration::from_secs(5));
+    }
+
+    /// v3 client surface: `scrape` returns the server's metrics as
+    /// parseable `key value` text, and a zero `deadline_ms` budget sheds
+    /// both decode and stream requests with a retryable Busy — then
+    /// clearing the budget restores normal service on the same
+    /// connection.
+    #[test]
+    fn scrape_and_deadline_budget_through_the_client() {
+        use crate::coordinator::{Algo, DecodeRequest};
+
+        let coord = native_coord();
+        let server =
+            NetServer::start(Arc::clone(&coord), "127.0.0.1:0", server_config())
+                .unwrap();
+        let mut client =
+            NetClient::connect(server.local_addr().to_string()).unwrap();
+        client
+            .decode(&DecodeRequest::new(1, "ge", vec![0, 1, 1], Algo::Smooth))
+            .unwrap();
+
+        let text = client.scrape().unwrap();
+        let mut keys = std::collections::BTreeMap::new();
+        for line in text.lines() {
+            let (k, v) = line.split_once(' ').expect("scrape line is `key value`");
+            assert!(v.parse::<f64>().is_ok(), "unparseable value in: {line}");
+            keys.insert(k.to_string(), v.to_string());
+        }
+        assert_eq!(keys.get("requests").map(String::as_str), Some("1"));
+        assert!(keys.contains_key("wire_verb_decode_count"));
+        assert!(keys.contains_key("deadline_sheds"));
+
+        // An already-expired budget sheds every request kind with a
+        // retryable Busy.
+        client.set_deadline_ms(Some(0));
+        let err = client
+            .decode(&DecodeRequest::new(2, "ge", vec![0, 1], Algo::Smooth))
+            .expect_err("expired-deadline decode was served");
+        assert!(err.is_busy(), "expected Busy, got: {err}");
+        let err = client
+            .open("ge", SessionOptions::default(), 0)
+            .expect_err("expired-deadline open was served");
+        assert!(err.is_busy(), "expected Busy, got: {err}");
+
+        // Clearing the budget restores service on the same connection.
+        client.set_deadline_ms(None);
+        client
+            .decode(&DecodeRequest::new(3, "ge", vec![1, 0, 0], Algo::Smooth))
+            .unwrap();
+        let snap = coord.metrics().snapshot();
+        assert!(snap.deadline_sheds >= 2, "sheds: {}", snap.deadline_sheds);
+        assert!(snap.rejects_sent >= 2);
         drop(client);
         server.shutdown(Duration::from_secs(5));
     }

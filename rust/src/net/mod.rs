@@ -22,10 +22,19 @@
 //!
 //! CLI: `hmm-scan serve --listen ADDR` starts a server; `hmm-scan
 //! bench-net --connect ADDR` verifies a remote server bit-for-bit
-//! against a local coordinator and measures wire throughput. The
-//! loopback bit-identity contract — remote responses exactly equal to
-//! in-process `Coordinator::decode`/`stream` results — is enforced by
-//! the tests in [`server`] and by CI's loopback smoke job.
+//! against a local coordinator and measures wire throughput; `hmm-scan
+//! stat --connect ADDR` scrapes the server's metrics snapshot as
+//! `key value` text (wire v3). The loopback bit-identity contract —
+//! remote responses exactly equal to in-process
+//! `Coordinator::decode`/`stream` results — is enforced by the tests in
+//! [`server`] and by CI's loopback smoke job.
+//!
+//! Observability and overload control (v3, see `docs/OBSERVABILITY.md`):
+//! the server records connection and shed events to an optional
+//! [`obs::Timeline`](crate::obs::Timeline), sheds requests whose
+//! `deadline_ms` budget lapses before execution, and converts the
+//! per-connection in-flight gate into a load-shedding quota via
+//! [`NetServerConfig::inflight_quota`].
 
 pub mod client;
 pub mod server;

@@ -41,6 +41,16 @@
 //!   period for clients to finish and disconnect, then force-closes
 //!   stragglers and joins every thread. See DESIGN.md §6 for the state
 //!   machine.
+//! * **Observability / overload control (v3).** A scrape request
+//!   ([`FrameKind::ScrapeRequest`]) renders the full metrics snapshot
+//!   as stable `key value` text; when a [`Timeline`] is configured,
+//!   connection opens/closes/refusals, drains, and request sheds are
+//!   appended to it. Requests may carry a `deadline_ms` budget — one
+//!   that expires before execution starts is shed with the typed
+//!   reject frame instead of burning a worker on an answer the client
+//!   has stopped waiting for — and `inflight_quota` converts the
+//!   per-connection backpressure gate into a load-shedding quota. See
+//!   docs/OBSERVABILITY.md.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -57,6 +67,7 @@ use crate::coordinator::{
 use crate::error::{Error, Result};
 use crate::exec::ThreadPool;
 use crate::jsonx::Json;
+use crate::obs::{Timeline, TimelineEvent};
 
 use super::wire::{self, Frame, FrameKind};
 
@@ -126,6 +137,17 @@ pub struct NetServerConfig {
     pub exec_threads: usize,
     /// Per-frame payload cap handed to the wire decoder.
     pub max_frame_payload: usize,
+    /// Per-connection decode quota for overload *shedding* (as opposed
+    /// to the blocking backpressure of `max_inflight_per_conn`): with a
+    /// non-zero quota, a decode arriving while that many are already in
+    /// flight on the connection is answered immediately with a typed
+    /// reject frame instead of stalling the reader. `0` (the default)
+    /// disables shedding and keeps the pure-backpressure behaviour.
+    pub inflight_quota: usize,
+    /// Event timeline connection opens/closes/refusals, drains, and
+    /// request sheds are recorded to. `None` (the default) disables
+    /// emission entirely; recording is non-blocking either way.
+    pub timeline: Option<Arc<Timeline>>,
 }
 
 impl Default for NetServerConfig {
@@ -137,6 +159,8 @@ impl Default for NetServerConfig {
             write_timeout: Duration::from_secs(10),
             exec_threads: 4,
             max_frame_payload: wire::DEFAULT_MAX_PAYLOAD,
+            inflight_quota: 0,
+            timeline: None,
         }
     }
 }
@@ -160,6 +184,24 @@ impl Inflight {
             n = self.freed.wait(n).unwrap();
         }
         *n += 1;
+    }
+
+    /// Admission with overload shedding: with `quota == 0` this is the
+    /// blocking [`acquire`](Self::acquire); with a non-zero quota the
+    /// slot is taken only if fewer than `min(quota, cap)` requests are
+    /// in flight, and `false` (shed) is returned otherwise — the reader
+    /// never stalls, the caller answers with a reject frame.
+    fn acquire_within_quota(&self, cap: usize, quota: usize) -> bool {
+        if quota == 0 {
+            self.acquire(cap);
+            return true;
+        }
+        let mut n = self.count.lock().unwrap();
+        if *n >= quota.min(cap.max(1)) {
+            return false;
+        }
+        *n += 1;
+        true
     }
 
     fn release(&self) {
@@ -187,12 +229,21 @@ impl Shared {
         self.state.load(Ordering::Acquire)
     }
 
+    /// Append an event to the configured timeline (no-op without one;
+    /// non-blocking with one).
+    fn record(&self, event: TimelineEvent) {
+        if let Some(timeline) = &self.config.timeline {
+            timeline.record(event);
+        }
+    }
+
     fn conn_done(&self, id: u64) {
         self.live.lock().unwrap().remove(&id);
         let mut n = self.conns.lock().unwrap();
         *n = n.saturating_sub(1);
         self.conns_cv.notify_all();
         self.service.metrics().on_conn_close();
+        self.record(TimelineEvent::ConnClose { conn: id });
     }
 }
 
@@ -268,12 +319,20 @@ impl NetServer {
     /// and their final responses are acked. Idempotent; a no-op after
     /// shutdown begins.
     pub fn drain(&self) {
-        let _ = self.shared.state.compare_exchange(
-            RUNNING,
-            DRAINING,
-            Ordering::AcqRel,
-            Ordering::Acquire,
-        );
+        let entered = self
+            .shared
+            .state
+            .compare_exchange(
+                RUNNING,
+                DRAINING,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok();
+        if entered {
+            self.shared
+                .record(TimelineEvent::Drain { target: self.local.to_string() });
+        }
     }
 
     /// Whether the server is refusing new connections.
@@ -389,6 +448,7 @@ fn accept_loop(
             DRAINING => {
                 shared.service.metrics().on_conn_refused();
                 shared.service.metrics().on_reject();
+                shared.record(TimelineEvent::ConnRefuse);
                 refuse(
                     stream,
                     DRAIN_RETRY_MS,
@@ -405,6 +465,7 @@ fn accept_loop(
                 drop(conns);
                 shared.service.metrics().on_conn_refused();
                 shared.service.metrics().on_reject();
+                shared.record(TimelineEvent::ConnRefuse);
                 refuse(
                     stream,
                     BUSY_RETRY_MS,
@@ -420,6 +481,7 @@ fn accept_loop(
             shared.live.lock().unwrap().insert(id, clone);
         }
         shared.service.metrics().on_conn_open();
+        shared.record(TimelineEvent::ConnOpen { conn: id });
         let shared2 = Arc::clone(&shared);
         let work2 = Arc::clone(&work);
         conn_pool.submit(move || {
@@ -499,6 +561,9 @@ fn serve_connection(
                 break;
             }
         };
+        // Deadline budgets are measured from frame arrival: a request
+        // whose `deadline_ms` elapses before execution begins is shed.
+        let arrival = Instant::now();
         match frame.kind {
             FrameKind::Ping => {
                 let _ = tx.send((frame.id, FrameKind::Pong, Json::Null));
@@ -519,23 +584,70 @@ fn serve_connection(
                         continue;
                     }
                 };
+                let deadline = wire::deadline_ms_from_json(&frame.payload);
                 // Take an in-flight slot *before* spawning: at the cap
-                // this blocks the reader, which is the backpressure.
-                inflight.acquire(cfg.max_inflight_per_conn);
+                // this blocks the reader (the backpressure) — unless an
+                // overload quota is set, in which case the request is
+                // shed right here with a typed reject frame.
+                if !inflight.acquire_within_quota(
+                    cfg.max_inflight_per_conn,
+                    cfg.inflight_quota,
+                ) {
+                    shared.service.metrics().on_quota_shed();
+                    shared.service.metrics().on_reject();
+                    let msg = "server overloaded: in-flight quota reached";
+                    shared
+                        .record(TimelineEvent::Reject { msg: msg.to_string() });
+                    let _ = tx.send((
+                        frame.id,
+                        FrameKind::Reject,
+                        wire::reject_to_json(BUSY_RETRY_MS, msg),
+                    ));
+                    continue;
+                }
+                // A deadline that lapsed while the reader was blocked on
+                // the slot: shed before touching the wire gauge.
+                if deadline_expired(arrival, deadline) {
+                    inflight.release();
+                    shared.service.metrics().on_deadline_shed();
+                    shared.service.metrics().on_reject();
+                    let msg = "deadline_ms exceeded before dispatch";
+                    shared
+                        .record(TimelineEvent::Reject { msg: msg.to_string() });
+                    let _ = tx.send((
+                        frame.id,
+                        FrameKind::Reject,
+                        wire::reject_to_json(0, msg),
+                    ));
+                    continue;
+                }
                 shared.service.metrics().on_wire_start();
-                let service = Arc::clone(&shared.service);
+                let job_shared = Arc::clone(shared);
                 let job_tx = tx.clone();
                 let job_inflight = Arc::clone(&inflight);
                 work.submit(move || {
                     let t0 = Instant::now();
-                    let outcome = service.decode(req).map(|resp| {
-                        (
-                            FrameKind::DecodeResponse,
-                            wire::decode_response_to_json(&resp),
-                        )
-                    });
-                    let (kind, payload) = response_parts(&service, outcome);
-                    service.metrics().on_wire_done("decode", t0.elapsed());
+                    // Re-check the budget: the job may have queued
+                    // behind other decodes in the work pool.
+                    let outcome = if deadline_expired(arrival, deadline) {
+                        job_shared.service.metrics().on_deadline_shed();
+                        Err(Error::busy(
+                            0,
+                            "deadline_ms exceeded before execution",
+                        ))
+                    } else {
+                        job_shared.service.decode(req).map(|resp| {
+                            (
+                                FrameKind::DecodeResponse,
+                                wire::decode_response_to_json(&resp),
+                            )
+                        })
+                    };
+                    let (kind, payload) = response_parts(&job_shared, outcome);
+                    job_shared
+                        .service
+                        .metrics()
+                        .on_wire_done("decode", t0.elapsed());
                     let _ = job_tx.send((frame.id, kind, payload));
                     job_inflight.release();
                 });
@@ -547,14 +659,27 @@ fn serve_connection(
                 // concurrently around this.
                 let t0 = Instant::now();
                 shared.service.metrics().on_wire_start();
-                let (verb_name, outcome) = match wire::stream_request_from_json(
-                    frame.id,
-                    &frame.payload,
-                ) {
-                    Ok(req) => {
-                        (stream_verb_name(&req), shared.service.stream(req))
+                let deadline = wire::deadline_ms_from_json(&frame.payload);
+                let (verb_name, outcome) = if deadline_expired(arrival, deadline)
+                {
+                    shared.service.metrics().on_deadline_shed();
+                    (
+                        "stream",
+                        Err(Error::busy(
+                            0,
+                            "deadline_ms exceeded before execution",
+                        )),
+                    )
+                } else {
+                    match wire::stream_request_from_json(
+                        frame.id,
+                        &frame.payload,
+                    ) {
+                        Ok(req) => {
+                            (stream_verb_name(&req), shared.service.stream(req))
+                        }
+                        Err(e) => ("stream", Err(e)),
                     }
-                    Err(e) => ("stream", Err(e)),
                 };
                 let outcome = outcome.map(|resp| {
                     (
@@ -562,9 +687,23 @@ fn serve_connection(
                         wire::stream_response_to_json(&resp),
                     )
                 });
-                let (kind, payload) = response_parts(&shared.service, outcome);
+                let (kind, payload) = response_parts(shared, outcome);
                 shared.service.metrics().on_wire_done(verb_name, t0.elapsed());
                 let _ = tx.send((frame.id, kind, payload));
+            }
+            FrameKind::ScrapeRequest => {
+                // Render the full metrics snapshot as stable `key value`
+                // text (the scrape includes itself in `wire_inflight`,
+                // which is honest: the scrape *is* in flight).
+                let t0 = Instant::now();
+                shared.service.metrics().on_wire_start();
+                let text = shared.service.metrics().snapshot().render_text();
+                shared.service.metrics().on_wire_done("scrape", t0.elapsed());
+                let _ = tx.send((
+                    frame.id,
+                    FrameKind::ScrapeResponse,
+                    wire::scrape_to_json(&text),
+                ));
             }
             // A client must never send response kinds; protocol error.
             kind if kind.is_response() => {
@@ -585,18 +724,29 @@ fn serve_connection(
     let _ = writer.join();
 }
 
+/// Whether a request's `deadline_ms` budget (measured from frame
+/// arrival) has lapsed. No deadline never expires; a zero budget is
+/// already expired.
+fn deadline_expired(arrival: Instant, deadline_ms: Option<u64>) -> bool {
+    match deadline_ms {
+        Some(ms) => arrival.elapsed() >= Duration::from_millis(ms),
+        None => false,
+    }
+}
+
 /// Map a verb outcome to response frame parts: success passes through;
 /// a transient [`Error::Busy`] becomes a reject frame with the carried
-/// retry-after hint (and is counted); any other error becomes a typed
-/// error frame.
+/// retry-after hint (counted, and landed in the timeline); any other
+/// error becomes a typed error frame.
 fn response_parts(
-    service: &Arc<dyn WireService>,
+    shared: &Shared,
     outcome: Result<(FrameKind, Json)>,
 ) -> (FrameKind, Json) {
     match outcome {
         Ok(parts) => parts,
         Err(Error::Busy { retry_after_ms, msg }) => {
-            service.metrics().on_reject();
+            shared.service.metrics().on_reject();
+            shared.record(TimelineEvent::Reject { msg: msg.clone() });
             (FrameKind::Reject, wire::reject_to_json(retry_after_ms, &msg))
         }
         Err(e) => (FrameKind::Error, wire::error_to_json(&e)),
@@ -678,6 +828,57 @@ mod tests {
         let c = Coordinator::new(CoordinatorConfig::native_only()).unwrap();
         c.register_model("ge", gilbert_elliott(GeParams::default()));
         Arc::new(c)
+    }
+
+    /// A [`WireService`] whose decodes block on a gate until released —
+    /// deterministic in-flight pressure for the quota and gauge tests.
+    struct GatedService {
+        inner: Arc<Coordinator>,
+        gate: Mutex<bool>,
+        cv: Condvar,
+    }
+
+    impl GatedService {
+        fn new(inner: Arc<Coordinator>) -> Arc<GatedService> {
+            Arc::new(GatedService {
+                inner,
+                gate: Mutex::new(false),
+                cv: Condvar::new(),
+            })
+        }
+
+        /// Open the gate permanently: blocked and future decodes pass.
+        fn release(&self) {
+            *self.gate.lock().unwrap() = true;
+            self.cv.notify_all();
+        }
+    }
+
+    impl WireService for GatedService {
+        fn decode(&self, req: DecodeRequest) -> Result<DecodeResponse> {
+            let mut open = self.gate.lock().unwrap();
+            while !*open {
+                open = self.cv.wait(open).unwrap();
+            }
+            drop(open);
+            self.inner.decode(req)
+        }
+        fn stream(&self, req: StreamRequest) -> Result<StreamResponse> {
+            self.inner.stream(req)
+        }
+        fn metrics(&self) -> &Metrics {
+            self.inner.metrics()
+        }
+    }
+
+    /// Poll until `cond` holds (5 s deadline) — for assertions about
+    /// state another thread settles asynchronously.
+    fn wait_for(cond: impl Fn() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !cond() {
+            assert!(Instant::now() < deadline, "condition not reached in 5s");
+            thread::sleep(Duration::from_millis(5));
+        }
     }
 
     /// The loopback acceptance bar: a `NetClient` driving decode and
@@ -992,6 +1193,175 @@ mod tests {
         assert_eq!(resp.result.as_posterior().unwrap().len(), 3);
         drop(client);
         server.shutdown(Duration::from_secs(5));
+    }
+
+    /// The gauge-pairing audit (observability satellite): every path
+    /// that can abandon a request — malformed decode payloads, failing
+    /// decodes, expired deadlines, a connection dying with a decode in
+    /// flight — leaves `wire_inflight` balanced back at zero.
+    #[test]
+    fn wire_inflight_gauge_survives_every_error_path() {
+        let coord = native_coord();
+        let service = GatedService::new(Arc::clone(&coord));
+        let server =
+            NetServer::start(Arc::clone(&service), "127.0.0.1:0", test_config())
+                .unwrap();
+        let addr = server.local_addr().to_string();
+
+        // Malformed decode payload: a typed error frame, sent before the
+        // gauge is ever touched.
+        {
+            let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+            raw.write_all(&wire::encode_frame(
+                7,
+                FrameKind::DecodeRequest,
+                &Json::Str("not a decode request".to_string()),
+            ))
+            .unwrap();
+            let frame =
+                wire::read_frame(&mut raw, wire::DEFAULT_MAX_PAYLOAD).unwrap();
+            assert_eq!(frame.kind, FrameKind::Error);
+            assert_eq!(coord.metrics().snapshot().wire_inflight, 0);
+        }
+
+        // Connection death with a decode in flight: the job's start/done
+        // pair still runs even though the response write fails.
+        {
+            let mut client = NetClient::connect(&addr).unwrap();
+            client
+                .send_decode(&DecodeRequest::new(
+                    1,
+                    "ge",
+                    vec![0, 1],
+                    Algo::Smooth,
+                ))
+                .unwrap();
+            client.flush().unwrap();
+            wait_for(|| coord.metrics().snapshot().wire_inflight == 1);
+            drop(client);
+            service.release();
+            wait_for(|| coord.metrics().snapshot().wire_inflight == 0);
+        }
+
+        // Failing decode and expired deadlines on a live connection (the
+        // gate is open now, so ordinary decodes execute).
+        let mut client = NetClient::connect(&addr).unwrap();
+        assert!(client
+            .decode(&DecodeRequest::new(2, "nope", vec![0], Algo::Smooth))
+            .is_err());
+        client.set_deadline_ms(Some(0));
+        let err = client
+            .decode(&DecodeRequest::new(3, "ge", vec![0], Algo::Smooth))
+            .expect_err("expired-deadline decode was served");
+        assert!(err.is_busy());
+        let err = client
+            .open("ge", SessionOptions::default(), 0)
+            .expect_err("expired-deadline open was served");
+        assert!(err.is_busy());
+        client.set_deadline_ms(None);
+
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.wire_inflight, 0, "an error path leaked the gauge");
+        assert!(snap.deadline_sheds >= 2);
+        assert!(snap.rejects_sent >= 2);
+        drop(client);
+        server.shutdown(Duration::from_secs(5));
+        assert_eq!(coord.metrics().snapshot().wire_inflight, 0);
+    }
+
+    /// With a non-zero `inflight_quota` an over-quota decode is shed
+    /// with a typed reject frame instead of stalling the reader, and the
+    /// connection keeps serving.
+    #[test]
+    fn quota_sheds_decodes_instead_of_blocking_the_reader() {
+        let coord = native_coord();
+        let service = GatedService::new(Arc::clone(&coord));
+        let server = NetServer::start(
+            Arc::clone(&service),
+            "127.0.0.1:0",
+            NetServerConfig { inflight_quota: 1, ..test_config() },
+        )
+        .unwrap();
+        let mut client =
+            NetClient::connect(server.local_addr().to_string()).unwrap();
+        let id1 = client
+            .send_decode(&DecodeRequest::new(1, "ge", vec![0, 1, 1], Algo::Smooth))
+            .unwrap();
+        let id2 = client
+            .send_decode(&DecodeRequest::new(2, "ge", vec![1, 0], Algo::Smooth))
+            .unwrap();
+        client.flush().unwrap();
+        // The second decode is shed while the first holds the only
+        // quota slot…
+        let (id, resp) = client.recv_decode().unwrap();
+        assert_eq!(id, id2, "the shed must answer before the gated decode");
+        let err = resp.expect_err("over-quota decode was served");
+        assert!(err.is_busy(), "expected Busy, got: {err}");
+        // …and the first completes untouched once the gate opens.
+        service.release();
+        let (id, resp) = client.recv_decode().unwrap();
+        assert_eq!(id, id1);
+        resp.unwrap();
+        let snap = coord.metrics().snapshot();
+        assert_eq!(snap.quota_sheds, 1);
+        assert!(snap.rejects_sent >= 1);
+        drop(client);
+        server.shutdown(Duration::from_secs(5));
+        assert_eq!(coord.metrics().snapshot().wire_inflight, 0);
+    }
+
+    /// Server-level timeline: connection opens/closes/refusals, drains,
+    /// and request sheds land in the configured timeline, and replay
+    /// folds them back into matching counters.
+    #[test]
+    fn timeline_records_the_connection_lifecycle() {
+        let dir = tempdir("net-timeline");
+        let timeline = crate::obs::Timeline::open(&dir).unwrap();
+        let coord = native_coord();
+        let server = NetServer::start(
+            Arc::clone(&coord),
+            "127.0.0.1:0",
+            NetServerConfig {
+                timeline: Some(Arc::clone(&timeline)),
+                max_connections: 1,
+                ..test_config()
+            },
+        )
+        .unwrap();
+        let addr = server.local_addr().to_string();
+
+        let mut client = NetClient::connect(&addr).unwrap();
+        client.ping().unwrap();
+        // Over the connection cap: a refusal.
+        assert!(NetClient::connect(&addr).is_err());
+        // An expired deadline: a request-level shed.
+        client.set_deadline_ms(Some(0));
+        assert!(client
+            .decode(&DecodeRequest::new(1, "ge", vec![0], Algo::Smooth))
+            .is_err());
+        client.set_deadline_ms(None);
+        server.drain();
+        server.drain(); // idempotent: must not log a second drain
+        drop(client);
+        // Expected events: conn-open, conn-refuse, reject, drain,
+        // conn-close — the close lands asynchronously after the reader
+        // notices the disconnect, so poll the sequence number.
+        wait_for(|| {
+            timeline.flush();
+            timeline.last_seq() >= 5
+        });
+        let records = crate::obs::read_events(&dir).unwrap();
+        let state = crate::obs::replay_records(&records, None);
+        assert_eq!(state.conns_opened, 1);
+        assert_eq!(state.conns_closed, 1);
+        assert_eq!(state.conns_refused, 1);
+        assert_eq!(state.rejects, 1);
+        assert_eq!(state.drains, 1);
+        assert!(state.open_conns.is_empty());
+        assert_eq!(timeline.dropped(), 0);
+        drop(server);
+        drop(timeline);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }
 

@@ -7,7 +7,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "HMWP"
-//! 4       1     protocol version (2; readers accept 1..=2)
+//! 4       1     protocol version (3; readers accept 1..=3)
 //! 5       1     frame kind (see [`FrameKind`])
 //! 6       2     reserved (zero)
 //! 8       8     request id, u64 little-endian (echoed in the response)
@@ -44,9 +44,11 @@ use crate::store::SessionMeta;
 
 /// Current wire-protocol revision; readers reject frames stamped with a
 /// newer version (and accept every older one — v2 added the
-/// [`FrameKind::Reject`] frame and the cluster-router stream verbs
-/// without changing any v1 encoding).
-pub const WIRE_VERSION: u8 = 2;
+/// [`FrameKind::Reject`] frame and the cluster-router stream verbs; v3
+/// adds the metrics scrape pair [`FrameKind::ScrapeRequest`] /
+/// [`FrameKind::ScrapeResponse`] and the optional per-request
+/// `deadline_ms` payload field, without changing any older encoding).
+pub const WIRE_VERSION: u8 = 3;
 
 /// Frame magic: the first four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"HMWP";
@@ -74,12 +76,19 @@ pub enum FrameKind {
     StreamRequest,
     /// Liveness / handshake probe (null payload).
     Ping,
+    /// Metrics scrape request (v3, null payload): ask the server for
+    /// its full metrics snapshot rendered as stable `key value` text.
+    ScrapeRequest,
     /// A [`DecodeResponse`] payload.
     DecodeResponse,
     /// A [`StreamResponse`] payload.
     StreamResponse,
     /// Reply to [`FrameKind::Ping`] (null payload).
     Pong,
+    /// Reply to [`FrameKind::ScrapeRequest`] (v3): `{"text": ..}`, the
+    /// scrape body in the line format of
+    /// [`MetricsSnapshot::render_text`](crate::coordinator::MetricsSnapshot::render_text).
+    ScrapeResponse,
     /// Typed admission rejection (v2): the request was refused because
     /// of transient overload (connection limit, drain, saturated worker
     /// pool), with a retry hint — `{"retry_after_ms": .., "msg": ..}`.
@@ -92,13 +101,15 @@ pub enum FrameKind {
 
 impl FrameKind {
     /// Every kind, for exhaustive round-trip tests.
-    pub const ALL: [FrameKind; 8] = [
+    pub const ALL: [FrameKind; 10] = [
         FrameKind::DecodeRequest,
         FrameKind::StreamRequest,
         FrameKind::Ping,
+        FrameKind::ScrapeRequest,
         FrameKind::DecodeResponse,
         FrameKind::StreamResponse,
         FrameKind::Pong,
+        FrameKind::ScrapeResponse,
         FrameKind::Reject,
         FrameKind::Error,
     ];
@@ -109,10 +120,12 @@ impl FrameKind {
             FrameKind::DecodeRequest => 0x01,
             FrameKind::StreamRequest => 0x02,
             FrameKind::Ping => 0x03,
+            FrameKind::ScrapeRequest => 0x04,
             FrameKind::DecodeResponse => 0x81,
             FrameKind::StreamResponse => 0x82,
             FrameKind::Pong => 0x83,
             FrameKind::Reject => 0x84,
+            FrameKind::ScrapeResponse => 0x85,
             FrameKind::Error => 0xee,
         }
     }
@@ -129,6 +142,7 @@ impl FrameKind {
             FrameKind::DecodeResponse
                 | FrameKind::StreamResponse
                 | FrameKind::Pong
+                | FrameKind::ScrapeResponse
                 | FrameKind::Reject
                 | FrameKind::Error
         )
@@ -840,6 +854,51 @@ pub fn busy_from_reject(v: &Json) -> Error {
     )
 }
 
+// ===========================================================================
+// Payload serde — metrics scrape and overload control (v3)
+// ===========================================================================
+
+/// A [`FrameKind::ScrapeResponse`] payload: `{"text": ..}`, the scrape
+/// body rendered server-side so every service (coordinator or cluster
+/// router) serves the identical stable line format.
+pub fn scrape_to_json(text: &str) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("text".to_string(), Json::Str(text.to_string()));
+    Json::Obj(obj)
+}
+
+/// Inverse of [`scrape_to_json`].
+pub fn scrape_text_from_json(v: &Json) -> Result<String> {
+    v.get("text")
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::invalid_request("scrape response: missing 'text'"))
+}
+
+/// Read the optional per-request `deadline_ms` payload field (v3
+/// overload control). Absent or non-numeric means no deadline; `0`
+/// means already expired (useful for tests and explicit sheds). The
+/// field rides *next to* the request object's own keys — additive, so
+/// v2 readers simply ignore it.
+pub fn deadline_ms_from_json(v: &Json) -> Option<u64> {
+    match v.get("deadline_ms") {
+        Json::Null => None,
+        d => d.as_usize().map(|ms| ms as u64),
+    }
+}
+
+/// Stamp `deadline_ms` onto a request payload (client side). Non-object
+/// payloads (ping) are returned unchanged.
+pub fn with_deadline_ms(payload: Json, deadline_ms: u64) -> Json {
+    match payload {
+        Json::Obj(mut obj) => {
+            obj.insert("deadline_ms".to_string(), Json::Num(deadline_ms as f64));
+            Json::Obj(obj)
+        }
+        other => other,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -853,7 +912,10 @@ mod tests {
     #[test]
     fn frame_round_trip_all_kinds() {
         for kind in FrameKind::ALL {
-            let payload = if matches!(kind, FrameKind::Ping | FrameKind::Pong) {
+            let payload = if matches!(
+                kind,
+                FrameKind::Ping | FrameKind::Pong | FrameKind::ScrapeRequest
+            ) {
                 Json::Null
             } else {
                 Json::parse(r#"{"k": [1, 2.5, "s"]}"#).unwrap()
@@ -1305,5 +1367,45 @@ mod tests {
         assert_eq!(FrameKind::from_code(0x84), Some(FrameKind::Reject));
         let e = busy_from_reject(&f.payload);
         assert!(e.is_busy());
+    }
+
+    #[test]
+    fn scrape_frames_round_trip() {
+        let req = round_frame(11, FrameKind::ScrapeRequest, Json::Null);
+        assert_eq!(req.kind, FrameKind::ScrapeRequest);
+        assert!(!req.kind.is_response());
+        assert_eq!(FrameKind::from_code(0x04), Some(FrameKind::ScrapeRequest));
+        let text = "requests 3\nwire_inflight 0\n";
+        let resp =
+            round_frame(11, FrameKind::ScrapeResponse, scrape_to_json(text));
+        assert_eq!(resp.kind, FrameKind::ScrapeResponse);
+        assert!(resp.kind.is_response());
+        assert_eq!(FrameKind::from_code(0x85), Some(FrameKind::ScrapeResponse));
+        assert_eq!(scrape_text_from_json(&resp.payload).unwrap(), text);
+        assert!(scrape_text_from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn deadline_field_is_additive_and_optional() {
+        let req = DecodeRequest::new(3, "ge", vec![1, 0, 1], Algo::Smooth);
+        let bare = decode_request_to_json(&req);
+        assert_eq!(deadline_ms_from_json(&bare), None);
+        let stamped = with_deadline_ms(bare.clone(), 250);
+        assert_eq!(deadline_ms_from_json(&stamped), Some(250));
+        // The extra key is invisible to the request parser (additive
+        // within the version rules: unknown keys are ignored).
+        let back = decode_request_from_json(3, &stamped).unwrap();
+        assert_eq!(back.ys, req.ys);
+        assert_eq!(back.model, req.model);
+        // Zero is a real (already expired) deadline, not "none".
+        assert_eq!(deadline_ms_from_json(&with_deadline_ms(bare, 0)), Some(0));
+        // Non-object payloads pass through untouched.
+        assert_eq!(with_deadline_ms(Json::Null, 9), Json::Null);
+        // Stream requests carry it the same way.
+        let sreq = StreamRequest::stat(4, 77);
+        let stamped = with_deadline_ms(stream_request_to_json(&sreq), 10);
+        assert_eq!(deadline_ms_from_json(&stamped), Some(10));
+        let back = stream_request_from_json(4, &stamped).unwrap();
+        assert!(matches!(back.verb, StreamVerb::Stat { session: 77 }));
     }
 }

@@ -1,0 +1,363 @@
+//! Timeline event vocabulary: every session / connection / cluster
+//! state transition the serving stack records.
+//!
+//! Events are deliberately *flat* — one kind string plus a handful of
+//! scalar fields — so a record stays a single short compact-JSON line
+//! and the replay fold (`obs::replay`) never needs to interpret nested
+//! payloads. The JSON encoding is part of the timeline's on-disk
+//! contract, specified in `docs/OBSERVABILITY.md`.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::jsonx::Json;
+
+/// One recorded state transition.
+///
+/// The coordinator emits the session-lifecycle kinds (`open`, `append`,
+/// `spill`, `restore`, `close`, `release`, `recover`), the network
+/// server the connection kinds (`conn-open`, `conn-close`,
+/// `conn-refuse`, `reject`, `drain`), and the cluster router the
+/// placement kinds (`place`, `migrate-begin`, `migrate-verify`,
+/// `migrate-cutover`, plus its own `close`/`reject`/`drain`). Replay
+/// folds any mix — a server and its fronting network layer share one
+/// timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TimelineEvent {
+    /// A session was opened (or imported) and is resident.
+    SessionOpen {
+        /// Session id.
+        session: u64,
+        /// Model registry key the session is bound to.
+        model: String,
+        /// Observations held at open (> 0 only for imports).
+        len: usize,
+    },
+    /// An observation chunk was appended (the session is resident).
+    Append {
+        /// Session id.
+        session: u64,
+        /// Observations in this chunk.
+        appended: usize,
+        /// Observations held after the append.
+        len: usize,
+    },
+    /// A session's element chain was spilled to the session store.
+    Spill {
+        /// Session id.
+        session: u64,
+        /// Observations covered by the spill checkpoint.
+        len: usize,
+    },
+    /// An evicted session was restored into RAM.
+    Restore {
+        /// Session id.
+        session: u64,
+        /// Observations held after the restore.
+        len: usize,
+    },
+    /// A session was closed (finished) and removed everywhere.
+    SessionClose {
+        /// Session id.
+        session: u64,
+    },
+    /// A session was released without finishing (migration source).
+    Release {
+        /// Session id.
+        session: u64,
+    },
+    /// Crash recovery re-registered a stored session (evicted).
+    Recover {
+        /// Session id.
+        session: u64,
+        /// Model registry key the session is bound to.
+        model: String,
+        /// Observations the store holds for it.
+        len: usize,
+    },
+    /// A client connection was accepted.
+    ConnOpen {
+        /// Server-assigned connection id.
+        conn: u64,
+    },
+    /// A client connection ended (either side).
+    ConnClose {
+        /// Server-assigned connection id.
+        conn: u64,
+    },
+    /// A connection was refused (admission control or drain).
+    ConnRefuse,
+    /// A request was shed with a typed reject frame.
+    Reject {
+        /// What was saturated (drain, quota, deadline, worker pool…).
+        msg: String,
+    },
+    /// A drain began (`target` = `"server"`, or a worker address for a
+    /// cluster-router administrative drain).
+    Drain {
+        /// What is draining.
+        target: String,
+    },
+    /// The cluster router placed a session on a worker.
+    Place {
+        /// Session id.
+        session: u64,
+        /// Worker address the session now lives on.
+        worker: String,
+    },
+    /// A live migration started (route lock held).
+    MigrateBegin {
+        /// Session id.
+        session: u64,
+        /// Source worker address.
+        from: String,
+        /// Destination worker address.
+        to: String,
+    },
+    /// The migrated copy verified (length + model match) on the target.
+    MigrateVerify {
+        /// Session id.
+        session: u64,
+        /// Destination worker address.
+        to: String,
+    },
+    /// The route cut over to the destination worker.
+    MigrateCutover {
+        /// Session id.
+        session: u64,
+        /// Source worker address.
+        from: String,
+        /// Destination worker address (the new home).
+        to: String,
+    },
+}
+
+impl TimelineEvent {
+    /// Stable kind string (the record's `"ev"` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TimelineEvent::SessionOpen { .. } => "open",
+            TimelineEvent::Append { .. } => "append",
+            TimelineEvent::Spill { .. } => "spill",
+            TimelineEvent::Restore { .. } => "restore",
+            TimelineEvent::SessionClose { .. } => "close",
+            TimelineEvent::Release { .. } => "release",
+            TimelineEvent::Recover { .. } => "recover",
+            TimelineEvent::ConnOpen { .. } => "conn-open",
+            TimelineEvent::ConnClose { .. } => "conn-close",
+            TimelineEvent::ConnRefuse => "conn-refuse",
+            TimelineEvent::Reject { .. } => "reject",
+            TimelineEvent::Drain { .. } => "drain",
+            TimelineEvent::Place { .. } => "place",
+            TimelineEvent::MigrateBegin { .. } => "migrate-begin",
+            TimelineEvent::MigrateVerify { .. } => "migrate-verify",
+            TimelineEvent::MigrateCutover { .. } => "migrate-cutover",
+        }
+    }
+
+    /// Serialize as the flat record object (without the writer-assigned
+    /// `seq`/`ts` fields — `obs::log` stamps those).
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("ev".to_string(), Json::Str(self.kind().to_string()));
+        let mut num = |obj: &mut BTreeMap<String, Json>, k: &str, v: u64| {
+            obj.insert(k.to_string(), Json::Num(v as f64));
+        };
+        match self {
+            TimelineEvent::SessionOpen { session, model, len }
+            | TimelineEvent::Recover { session, model, len } => {
+                num(&mut obj, "session", *session);
+                obj.insert("model".to_string(), Json::Str(model.clone()));
+                num(&mut obj, "len", *len as u64);
+            }
+            TimelineEvent::Append { session, appended, len } => {
+                num(&mut obj, "session", *session);
+                num(&mut obj, "n", *appended as u64);
+                num(&mut obj, "len", *len as u64);
+            }
+            TimelineEvent::Spill { session, len }
+            | TimelineEvent::Restore { session, len } => {
+                num(&mut obj, "session", *session);
+                num(&mut obj, "len", *len as u64);
+            }
+            TimelineEvent::SessionClose { session }
+            | TimelineEvent::Release { session } => {
+                num(&mut obj, "session", *session);
+            }
+            TimelineEvent::ConnOpen { conn }
+            | TimelineEvent::ConnClose { conn } => {
+                num(&mut obj, "conn", *conn);
+            }
+            TimelineEvent::ConnRefuse => {}
+            TimelineEvent::Reject { msg } => {
+                obj.insert("msg".to_string(), Json::Str(msg.clone()));
+            }
+            TimelineEvent::Drain { target } => {
+                obj.insert("target".to_string(), Json::Str(target.clone()));
+            }
+            TimelineEvent::Place { session, worker } => {
+                num(&mut obj, "session", *session);
+                obj.insert("worker".to_string(), Json::Str(worker.clone()));
+            }
+            TimelineEvent::MigrateBegin { session, from, to } => {
+                num(&mut obj, "session", *session);
+                obj.insert("from".to_string(), Json::Str(from.clone()));
+                obj.insert("to".to_string(), Json::Str(to.clone()));
+            }
+            TimelineEvent::MigrateVerify { session, to } => {
+                num(&mut obj, "session", *session);
+                obj.insert("to".to_string(), Json::Str(to.clone()));
+            }
+            TimelineEvent::MigrateCutover { session, from, to } => {
+                num(&mut obj, "session", *session);
+                obj.insert("from".to_string(), Json::Str(from.clone()));
+                obj.insert("to".to_string(), Json::Str(to.clone()));
+            }
+        }
+        Json::Obj(obj)
+    }
+
+    /// Inverse of [`to_json`](Self::to_json); typed errors on missing
+    /// or malformed fields, unknown kinds included (a reader must not
+    /// silently mis-fold a record written by a future revision).
+    pub fn from_json(v: &Json) -> Result<TimelineEvent> {
+        let kind = v
+            .get("ev")
+            .as_str()
+            .ok_or_else(|| Error::invalid_request("timeline record: 'ev'"))?;
+        let num = |key: &str| -> Result<u64> {
+            v.get(key).as_usize().map(|n| n as u64).ok_or_else(|| {
+                Error::invalid_request(format!("timeline record: '{key}'"))
+            })
+        };
+        let text = |key: &str| -> Result<String> {
+            v.get(key)
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| {
+                    Error::invalid_request(format!("timeline record: '{key}'"))
+                })
+        };
+        Ok(match kind {
+            "open" => TimelineEvent::SessionOpen {
+                session: num("session")?,
+                model: text("model")?,
+                len: num("len")? as usize,
+            },
+            "append" => TimelineEvent::Append {
+                session: num("session")?,
+                appended: num("n")? as usize,
+                len: num("len")? as usize,
+            },
+            "spill" => TimelineEvent::Spill {
+                session: num("session")?,
+                len: num("len")? as usize,
+            },
+            "restore" => TimelineEvent::Restore {
+                session: num("session")?,
+                len: num("len")? as usize,
+            },
+            "close" => TimelineEvent::SessionClose { session: num("session")? },
+            "release" => TimelineEvent::Release { session: num("session")? },
+            "recover" => TimelineEvent::Recover {
+                session: num("session")?,
+                model: text("model")?,
+                len: num("len")? as usize,
+            },
+            "conn-open" => TimelineEvent::ConnOpen { conn: num("conn")? },
+            "conn-close" => TimelineEvent::ConnClose { conn: num("conn")? },
+            "conn-refuse" => TimelineEvent::ConnRefuse,
+            "reject" => TimelineEvent::Reject { msg: text("msg")? },
+            "drain" => TimelineEvent::Drain { target: text("target")? },
+            "place" => TimelineEvent::Place {
+                session: num("session")?,
+                worker: text("worker")?,
+            },
+            "migrate-begin" => TimelineEvent::MigrateBegin {
+                session: num("session")?,
+                from: text("from")?,
+                to: text("to")?,
+            },
+            "migrate-verify" => TimelineEvent::MigrateVerify {
+                session: num("session")?,
+                to: text("to")?,
+            },
+            "migrate-cutover" => TimelineEvent::MigrateCutover {
+                session: num("session")?,
+                from: text("from")?,
+                to: text("to")?,
+            },
+            other => {
+                return Err(Error::invalid_request(format!(
+                    "timeline record: unknown event kind '{other}'"
+                )))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn every_event() -> Vec<TimelineEvent> {
+        vec![
+            TimelineEvent::SessionOpen {
+                session: 7,
+                model: "ge".into(),
+                len: 0,
+            },
+            TimelineEvent::Append { session: 7, appended: 32, len: 96 },
+            TimelineEvent::Spill { session: 7, len: 96 },
+            TimelineEvent::Restore { session: 7, len: 96 },
+            TimelineEvent::SessionClose { session: 7 },
+            TimelineEvent::Release { session: 9 },
+            TimelineEvent::Recover {
+                session: 3,
+                model: "cv".into(),
+                len: 40,
+            },
+            TimelineEvent::ConnOpen { conn: 1 },
+            TimelineEvent::ConnClose { conn: 1 },
+            TimelineEvent::ConnRefuse,
+            TimelineEvent::Reject { msg: "draining".into() },
+            TimelineEvent::Drain { target: "server".into() },
+            TimelineEvent::Place { session: 7, worker: "127.0.0.1:9001".into() },
+            TimelineEvent::MigrateBegin {
+                session: 7,
+                from: "a:1".into(),
+                to: "b:2".into(),
+            },
+            TimelineEvent::MigrateVerify { session: 7, to: "b:2".into() },
+            TimelineEvent::MigrateCutover {
+                session: 7,
+                from: "a:1".into(),
+                to: "b:2".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn json_round_trip_every_kind() {
+        for ev in every_event() {
+            let json = ev.to_json();
+            // The encoding survives a full text round-trip (what the
+            // log writer/reader actually do).
+            let text = json.to_string_compact();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(TimelineEvent::from_json(&back).unwrap(), ev);
+            assert_eq!(back.get("ev").as_str().unwrap(), ev.kind());
+        }
+    }
+
+    #[test]
+    fn malformed_records_are_typed_errors() {
+        assert!(TimelineEvent::from_json(&Json::Null).is_err());
+        let unknown = Json::parse(r#"{"ev":"warp"}"#).unwrap();
+        assert!(TimelineEvent::from_json(&unknown).is_err());
+        let missing = Json::parse(r#"{"ev":"open","model":"ge"}"#).unwrap();
+        assert!(TimelineEvent::from_json(&missing).is_err());
+        let bad_type = Json::parse(r#"{"ev":"append","session":"x"}"#).unwrap();
+        assert!(TimelineEvent::from_json(&bad_type).is_err());
+    }
+}

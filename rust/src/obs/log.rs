@@ -1,0 +1,701 @@
+//! Segmented, crash-safe timeline log: the durable side of the
+//! observability tier.
+//!
+//! ## On-disk format
+//!
+//! A timeline directory holds numbered segments
+//! `tl_<segment:08x>.log`, each a sequence of framed records using the
+//! session store's framing idiom (`docs/STORE_FORMAT.md`): a fixed
+//! 53-byte header — 16 hex chars payload length, space, 16 hex chars
+//! FNV-1a 64 checksum, space, one kind char (`e` for event), space,
+//! 16 hex chars sequence number, newline — followed by the compact-JSON
+//! payload and a terminating newline. The payload is the flat
+//! [`TimelineEvent`] object plus two writer-stamped fields: `"seq"`
+//! (monotonic across segments, starts at 1) and `"ts"` (coarse
+//! wall-clock milliseconds since the unix epoch). Carrying the sequence
+//! number in the header too means a scan can walk a timeline with
+//! `seek` alone, exactly like the store's metadata-only recovery.
+//!
+//! ## Crash safety
+//!
+//! Readers are prefix-valid: [`read_events`] stops at the first framing
+//! violation (truncated header, short payload, checksum mismatch,
+//! unparsable JSON, non-monotonic sequence) and returns every record
+//! before it — a crash mid-append costs at most the half-written tail
+//! record. [`Timeline::open`] repairs a torn tail by truncating the
+//! last segment back to its valid prefix before resuming, and resumes
+//! the sequence counter from the last durable record.
+//!
+//! ## The serve path never stalls
+//!
+//! [`Timeline::record`] is a bounded `try_send` onto a channel drained
+//! by a dedicated writer thread — it never blocks and never touches the
+//! filesystem. When the channel is full the event is *dropped* and
+//! counted ([`Timeline::dropped`]); replay then reflects the recorded
+//! prefix, which is the honest trade for never adding fsync latency to
+//! an append. The writer thread batches every queued event it can drain
+//! into one `write_all` + `sync_all` per wakeup — the same group-commit
+//! amortization the session store applies to appends.
+
+use std::fmt;
+use std::fs::{self, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::error::{Error, Result};
+use crate::jsonx::Json;
+
+use super::event::TimelineEvent;
+
+/// Header layout (mirrors the session store): 16 hex chars payload
+/// length, space, 16 hex chars fnv64 checksum, space, 1 kind char,
+/// space, 16 hex chars sequence number, newline.
+const HEADER_LEN: usize = 53;
+
+/// The single record kind a timeline segment holds.
+const EVENT_KIND: u8 = b'e';
+
+/// Rotate to a fresh segment once the current one crosses this size.
+const SEGMENT_BYTES: u64 = 4 << 20;
+
+/// Bounded depth of the emit channel; events beyond it are dropped
+/// (counted) rather than ever blocking the serve path.
+const CHANNEL_DEPTH: usize = 1024;
+
+/// The framing checksum: fresh-start FNV-1a 64 (`rng::fnv1a_64`).
+fn fnv64(bytes: &[u8]) -> u64 {
+    crate::rng::fnv1a_64(crate::rng::FNV1A_OFFSET, bytes)
+}
+
+fn frame(payload: &str, seq: u64) -> Vec<u8> {
+    let bytes = payload.as_bytes();
+    let mut out = format!(
+        "{:016x} {:016x} {} {:016x}\n",
+        bytes.len(),
+        fnv64(bytes),
+        EVENT_KIND as char,
+        seq
+    )
+    .into_bytes();
+    debug_assert_eq!(out.len(), HEADER_LEN);
+    out.extend_from_slice(bytes);
+    out.push(b'\n');
+    out
+}
+
+fn parse_hex(bytes: &[u8]) -> Option<u64> {
+    let s = std::str::from_utf8(bytes).ok()?;
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// One parsed frame header (the fixed 53-byte prefix of every record).
+#[derive(Debug, Clone, Copy)]
+struct FrameHeader {
+    /// Payload byte length.
+    len: usize,
+    /// FNV-1a 64 checksum of the payload.
+    sum: u64,
+    /// Sequence number (also stamped inside the payload).
+    seq: u64,
+}
+
+/// Parse one frame header; `None` on any structural violation (the
+/// prefix-valid readers treat that as the crash tail).
+fn parse_header(h: &[u8]) -> Option<FrameHeader> {
+    if h.len() < HEADER_LEN {
+        return None;
+    }
+    if h[16] != b' ' || h[33] != b' ' || h[35] != b' ' || h[52] != b'\n' {
+        return None;
+    }
+    if h[34] != EVENT_KIND {
+        return None;
+    }
+    let len = usize::try_from(parse_hex(&h[0..16])?).ok()?;
+    let sum = parse_hex(&h[17..33])?;
+    let seq = parse_hex(&h[36..52])?;
+    Some(FrameHeader { len, sum, seq })
+}
+
+/// One timeline record: the writer-stamped ordering fields plus the
+/// decoded event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimelineRecord {
+    /// Monotonic sequence number (1-based, contiguous across segments).
+    pub seq: u64,
+    /// Coarse wall-clock milliseconds since the unix epoch at emit.
+    pub ts_ms: u64,
+    /// The recorded state transition.
+    pub event: TimelineEvent,
+}
+
+/// Parse the valid record prefix of one segment image; everything after
+/// the first framing violation (the crash tail) is ignored. Returns the
+/// records plus the byte length of the valid prefix (what a torn-tail
+/// repair truncates back to).
+fn parse_segment_prefix(data: &[u8]) -> (Vec<TimelineRecord>, usize) {
+    let mut out: Vec<TimelineRecord> = Vec::new();
+    let mut pos = 0usize;
+    while pos + HEADER_LEN <= data.len() {
+        let Some(h) = parse_header(&data[pos..pos + HEADER_LEN]) else {
+            break;
+        };
+        let start = pos + HEADER_LEN;
+        let Some(end) = start.checked_add(h.len) else { break };
+        if end >= data.len() || data[end] != b'\n' {
+            break; // truncated payload / missing terminator
+        }
+        let payload = &data[start..end];
+        if fnv64(payload) != h.sum {
+            break; // torn write
+        }
+        let Ok(text) = std::str::from_utf8(payload) else { break };
+        let Ok(json) = Json::parse(text) else { break };
+        let Some(record) = record_from_json(&json) else { break };
+        if record.seq != h.seq {
+            break; // header/payload disagree — treat as tail
+        }
+        if let Some(prev) = out.last() {
+            if record.seq <= prev.seq {
+                break; // sequence must be strictly monotonic
+            }
+        }
+        out.push(record);
+        pos = end + 1;
+    }
+    (out, pos)
+}
+
+fn record_from_json(json: &Json) -> Option<TimelineRecord> {
+    let seq = json.get("seq").as_usize()? as u64;
+    let ts_ms = json.get("ts").as_usize()? as u64;
+    let event = TimelineEvent::from_json(json).ok()?;
+    Some(TimelineRecord { seq, ts_ms, event })
+}
+
+/// Segment file name for index `n` (`tl_<n:08x>.log`).
+fn segment_name(n: u64) -> String {
+    format!("tl_{n:08x}.log")
+}
+
+/// Parse a segment file name back to its index.
+fn segment_index(name: &str) -> Option<u64> {
+    let hex = name.strip_prefix("tl_")?.strip_suffix(".log")?;
+    if hex.len() != 8 {
+        return None;
+    }
+    u64::from_str_radix(hex, 16).ok()
+}
+
+/// Sorted indices of the segments present in a timeline directory.
+fn list_segments(dir: &Path) -> Result<Vec<u64>> {
+    let mut out = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        if let Some(idx) =
+            entry.file_name().to_str().and_then(segment_index)
+        {
+            out.push(idx);
+        }
+    }
+    out.sort_unstable();
+    Ok(out)
+}
+
+/// Read every decodable record in a timeline directory, in sequence
+/// order: segments ascending, each prefix-valid. A framing violation
+/// ends the stream — segments after a torn one are unreachable history
+/// and are not read (only the live tail segment can legitimately be
+/// torn, so in practice this is "everything up to the crash point").
+pub fn read_events(dir: impl AsRef<Path>) -> Result<Vec<TimelineRecord>> {
+    let dir = dir.as_ref();
+    if !dir.is_dir() {
+        return Err(Error::invalid_request(format!(
+            "timeline directory not found: {}",
+            dir.display()
+        )));
+    }
+    let mut out = Vec::new();
+    for idx in list_segments(dir)? {
+        let data = fs::read(dir.join(segment_name(idx)))?;
+        let (mut records, valid) = parse_segment_prefix(&data);
+        // Cross-segment monotonicity: a segment that restarts the
+        // sequence is not a continuation of this timeline.
+        if let (Some(prev), Some(first)) = (
+            out.last().map(|r: &TimelineRecord| r.seq),
+            records.first().map(|r| r.seq),
+        ) {
+            if first <= prev {
+                break;
+            }
+        }
+        let torn = valid < data.len();
+        out.append(&mut records);
+        if torn {
+            break;
+        }
+    }
+    Ok(out)
+}
+
+/// What the writer thread receives: an event stamped with its emit-time
+/// coarse timestamp, or a flush barrier.
+enum TlMsg {
+    Event(TimelineEvent, u64),
+    Flush(mpsc::Sender<()>),
+}
+
+/// Handle to a live timeline: cheap, non-blocking [`record`] from any
+/// thread; one background writer owns the segment files. Share it as
+/// `Arc<Timeline>` between the coordinator, the network server, and the
+/// cluster router — their events interleave under one monotonic
+/// sequence.
+///
+/// [`record`]: Timeline::record
+pub struct Timeline {
+    tx: Option<mpsc::SyncSender<TlMsg>>,
+    dropped: AtomicU64,
+    last_seq: Arc<AtomicU64>,
+    dir: PathBuf,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl fmt::Debug for Timeline {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Timeline")
+            .field("dir", &self.dir)
+            .field("last_seq", &self.last_seq.load(Ordering::Relaxed))
+            .field("dropped", &self.dropped.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+/// The writer thread's file state: current segment handle plus its
+/// byte length (for rotation).
+struct SegmentWriter {
+    dir: PathBuf,
+    segment: u64,
+    file: Option<fs::File>,
+    written: u64,
+}
+
+impl SegmentWriter {
+    /// Append one framed record, rotating first if the current segment
+    /// is full. Returns whether the (best-effort) write succeeded.
+    fn append(&mut self, buf: &[u8]) -> bool {
+        if self.file.is_some() && self.written >= SEGMENT_BYTES {
+            self.sync();
+            self.segment += 1;
+            self.file = None;
+            self.written = 0;
+        }
+        if self.file.is_none() {
+            let path = self.dir.join(segment_name(self.segment));
+            let opened = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .and_then(|f| {
+                    self.written = f.metadata()?.len();
+                    Ok(f)
+                });
+            match opened {
+                Ok(f) => {
+                    self.file = Some(f);
+                    sync_parent(&path);
+                }
+                Err(_) => return false,
+            }
+        }
+        let Some(file) = self.file.as_mut() else { return false };
+        match file.write_all(buf) {
+            Ok(()) => {
+                self.written += buf.len() as u64;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Fsync the current segment (the group-commit barrier).
+    fn sync(&mut self) {
+        if let Some(file) = &self.file {
+            let _ = file.sync_all();
+        }
+    }
+}
+
+/// Directory-entry durability for a freshly created segment (unix: fsync
+/// the parent directory; no portable equivalent elsewhere).
+fn sync_parent(_path: &Path) {
+    #[cfg(unix)]
+    {
+        if let Some(parent) = _path.parent() {
+            if let Ok(dir) = fs::File::open(parent) {
+                let _ = dir.sync_all();
+            }
+        }
+    }
+}
+
+impl Timeline {
+    /// Open (or resume) the timeline in `dir`, creating the directory
+    /// if needed. A torn tail record left by a crash is truncated away;
+    /// the sequence counter resumes after the last durable record.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Arc<Timeline>> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        let segments = list_segments(&dir)?;
+        let (mut segment, mut seq, mut written) = (0u64, 0u64, 0u64);
+        if let Some(&last) = segments.last() {
+            segment = last;
+            let path = dir.join(segment_name(last));
+            let data = fs::read(&path)?;
+            let (records, valid) = parse_segment_prefix(&data);
+            if valid < data.len() {
+                // Torn tail: repair in place, exactly like the store's
+                // recovery sweep.
+                let f = OpenOptions::new().write(true).open(&path)?;
+                f.set_len(valid as u64)?;
+                f.sync_all()?;
+            }
+            written = valid as u64;
+            seq = records.last().map(|r| r.seq).unwrap_or(0);
+            if seq == 0 && segments.len() > 1 {
+                // Last segment empty/unreadable: resume after the one
+                // before it.
+                for &idx in segments.iter().rev().skip(1) {
+                    let data = fs::read(dir.join(segment_name(idx)))?;
+                    let (records, _) = parse_segment_prefix(&data);
+                    if let Some(r) = records.last() {
+                        seq = r.seq;
+                        break;
+                    }
+                }
+            }
+        }
+        let (tx, rx) = mpsc::sync_channel::<TlMsg>(CHANNEL_DEPTH);
+        let last_seq = Arc::new(AtomicU64::new(seq));
+        let thread_seq = Arc::clone(&last_seq);
+        let mut writer =
+            SegmentWriter { dir: dir.clone(), segment, file: None, written };
+        let join = thread::Builder::new()
+            .name("hmm-scan-timeline".to_string())
+            .spawn(move || {
+                let mut seq = seq;
+                loop {
+                    let first = match rx.recv() {
+                        Ok(msg) => msg,
+                        Err(_) => break,
+                    };
+                    let mut batch = Vec::new();
+                    let mut flushes = Vec::new();
+                    let mut sort = |msg: TlMsg| match msg {
+                        TlMsg::Event(ev, ts) => batch.push((ev, ts)),
+                        TlMsg::Flush(done) => flushes.push(done),
+                    };
+                    sort(first);
+                    while let Ok(msg) = rx.try_recv() {
+                        sort(msg);
+                    }
+                    let mut wrote = false;
+                    for (event, ts_ms) in batch {
+                        seq += 1;
+                        let Json::Obj(mut obj) = event.to_json() else {
+                            unreachable!("events serialize as objects")
+                        };
+                        obj.insert("seq".to_string(), Json::Num(seq as f64));
+                        obj.insert("ts".to_string(), Json::Num(ts_ms as f64));
+                        let payload = Json::Obj(obj).to_string_compact();
+                        wrote |= writer.append(&frame(&payload, seq));
+                    }
+                    if wrote {
+                        writer.sync();
+                    }
+                    thread_seq.store(seq, Ordering::SeqCst);
+                    for done in flushes {
+                        let _ = done.send(());
+                    }
+                }
+                writer.sync();
+            })
+            .map_err(|e| {
+                Error::coordinator(format!("timeline writer spawn: {e}"))
+            })?;
+        Ok(Arc::new(Timeline {
+            tx: Some(tx),
+            dropped: AtomicU64::new(0),
+            last_seq,
+            dir,
+            join: Some(join),
+        }))
+    }
+
+    /// Record one event. Non-blocking: if the bounded channel is full
+    /// the event is dropped and counted instead of stalling the caller.
+    pub fn record(&self, event: TimelineEvent) {
+        let ts = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let tx = self.tx.as_ref().expect("timeline channel live until drop");
+        if tx.try_send(TlMsg::Event(event, ts)).is_err() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Block until every event recorded before this call is framed and
+    /// fsynced. Test/shutdown barrier — never on the serve path.
+    pub fn flush(&self) {
+        let (done_tx, done_rx) = mpsc::channel();
+        let tx = self.tx.as_ref().expect("timeline channel live until drop");
+        if tx.send(TlMsg::Flush(done_tx)).is_ok() {
+            let _ = done_rx.recv();
+        }
+    }
+
+    /// Sequence number of the last durably written record (0 before any
+    /// event lands). Exact after [`flush`](Timeline::flush).
+    pub fn last_seq(&self) -> u64 {
+        self.last_seq.load(Ordering::SeqCst)
+    }
+
+    /// Events dropped because the bounded channel was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The timeline directory this handle writes to.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl Drop for Timeline {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Build the framed bytes of a record exactly as the writer thread
+/// does — the torn-tail tests cut real frames, not approximations.
+#[cfg(test)]
+pub(crate) fn framed_record(
+    event: &TimelineEvent,
+    seq: u64,
+    ts_ms: u64,
+) -> Vec<u8> {
+    let Json::Obj(mut obj) = event.to_json() else {
+        unreachable!("events serialize as objects")
+    };
+    obj.insert("seq".to_string(), Json::Num(seq as f64));
+    obj.insert("ts".to_string(), Json::Num(ts_ms as f64));
+    let payload = Json::Obj(obj).to_string_compact();
+    frame(&payload, seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptestx::Runner;
+
+    fn events(n: usize) -> Vec<TimelineEvent> {
+        (0..n)
+            .map(|i| match i % 4 {
+                0 => TimelineEvent::SessionOpen {
+                    session: i as u64,
+                    model: "ge".to_string(),
+                    len: 0,
+                },
+                1 => TimelineEvent::Append {
+                    session: i as u64 - 1,
+                    appended: 8,
+                    len: 8 * (i / 4 + 1),
+                },
+                2 => TimelineEvent::Spill { session: i as u64 - 2, len: 8 },
+                _ => TimelineEvent::ConnOpen { conn: i as u64 },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn write_flush_read_round_trip() {
+        let dir = crate::store::testutil::tempdir("obs-roundtrip");
+        let evs = events(17);
+        {
+            let tl = Timeline::open(&dir).unwrap();
+            for ev in &evs {
+                tl.record(ev.clone());
+            }
+            tl.flush();
+            assert_eq!(tl.last_seq(), evs.len() as u64);
+            assert_eq!(tl.dropped(), 0);
+        }
+        let records = read_events(&dir).unwrap();
+        assert_eq!(records.len(), evs.len());
+        for (i, (rec, ev)) in records.iter().zip(&evs).enumerate() {
+            assert_eq!(rec.seq, i as u64 + 1);
+            assert_eq!(&rec.event, ev);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reopen_resumes_the_sequence() {
+        let dir = crate::store::testutil::tempdir("obs-resume");
+        {
+            let tl = Timeline::open(&dir).unwrap();
+            for ev in events(5) {
+                tl.record(ev);
+            }
+            tl.flush();
+        }
+        {
+            let tl = Timeline::open(&dir).unwrap();
+            assert_eq!(tl.last_seq(), 5);
+            tl.record(TimelineEvent::Drain { target: "server".to_string() });
+            tl.flush();
+            assert_eq!(tl.last_seq(), 6);
+        }
+        let records = read_events(&dir).unwrap();
+        assert_eq!(records.len(), 6);
+        assert_eq!(records.last().unwrap().seq, 6);
+        assert_eq!(
+            records.last().unwrap().event,
+            TimelineEvent::Drain { target: "server".to_string() }
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_recovers_longest_valid_prefix_at_every_offset() {
+        // Satellite: mirror of the store's torn-tail property tests.
+        // Build a segment of K framed records, then truncate at every
+        // byte offset of the tail record — the reader must recover
+        // exactly the first K-1 records, and `open` must repair the
+        // file back to that prefix.
+        let dir = crate::store::testutil::tempdir("obs-torn");
+        std::fs::create_dir_all(&dir).unwrap();
+        let evs = events(6);
+        let mut full = Vec::new();
+        let mut boundaries = vec![0usize];
+        for (i, ev) in evs.iter().enumerate() {
+            full.extend_from_slice(&framed_record(ev, i as u64 + 1, 1000 + i as u64));
+            boundaries.push(full.len());
+        }
+        let tail_start = boundaries[evs.len() - 1];
+        let path = dir.join(segment_name(0));
+        for cut in tail_start..full.len() {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let records = read_events(&dir).unwrap();
+            assert_eq!(
+                records.len(),
+                evs.len() - 1,
+                "cut at byte {cut} must keep exactly the valid prefix"
+            );
+            assert_eq!(records.last().unwrap().seq, evs.len() as u64 - 1);
+        }
+        // The undamaged image reads in full.
+        std::fs::write(&path, &full).unwrap();
+        assert_eq!(read_events(&dir).unwrap().len(), evs.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn random_cuts_recover_a_valid_prefix() {
+        // Randomized companion to the exhaustive tail sweep: a cut
+        // anywhere in the image recovers the longest record prefix that
+        // fits under the cut, and reopening repairs + resumes from it.
+        let dir = crate::store::testutil::tempdir("obs-torn-prop");
+        std::fs::create_dir_all(&dir).unwrap();
+        let evs = events(9);
+        let mut full = Vec::new();
+        let mut boundaries = vec![0usize];
+        for (i, ev) in evs.iter().enumerate() {
+            full.extend_from_slice(&framed_record(ev, i as u64 + 1, i as u64));
+            boundaries.push(full.len());
+        }
+        let path = dir.join(segment_name(0));
+        let mut runner = Runner::new("obs-timeline-torn-tail");
+        runner.run(64, |rng| {
+            let cut = (rng.next_u64() as usize) % (full.len() + 1);
+            let expect =
+                boundaries.iter().filter(|&&b| b > 0 && b <= cut).count();
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let records = read_events(&dir).unwrap();
+            assert_eq!(records.len(), expect, "cut at byte {cut}");
+            // Reopen: the torn tail is truncated and the sequence
+            // resumes exactly after the surviving prefix.
+            {
+                let tl = Timeline::open(&dir).unwrap();
+                assert_eq!(tl.last_seq(), expect as u64);
+                tl.record(TimelineEvent::ConnRefuse);
+                tl.flush();
+            }
+            let records = read_events(&dir).unwrap();
+            assert_eq!(records.len(), expect + 1);
+            assert_eq!(records.last().unwrap().seq, expect as u64 + 1);
+            assert_eq!(records.last().unwrap().event, TimelineEvent::ConnRefuse);
+        });
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_checksum_ends_the_stream() {
+        let dir = crate::store::testutil::tempdir("obs-corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let evs = events(4);
+        let mut full = Vec::new();
+        let mut starts = Vec::new();
+        for (i, ev) in evs.iter().enumerate() {
+            starts.push(full.len());
+            full.extend_from_slice(&framed_record(ev, i as u64 + 1, 0));
+        }
+        // Flip one payload byte of record 3 (0-indexed 2): records
+        // 1..=2 survive, 3 and 4 are gone.
+        let mut bad = full.clone();
+        bad[starts[2] + HEADER_LEN] ^= 0x01;
+        std::fs::write(dir.join(segment_name(0)), &bad).unwrap();
+        let records = read_events(&dir).unwrap();
+        assert_eq!(records.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn segments_rotate_and_read_in_order() {
+        // Drive rotation through the real writer by writing two
+        // segments' worth of records via the private segment API, then
+        // confirm read order. (SEGMENT_BYTES is large; simulate the
+        // boundary by writing segment files directly with continuing
+        // sequence numbers, as rotation does.)
+        let dir = crate::store::testutil::tempdir("obs-segments");
+        std::fs::create_dir_all(&dir).unwrap();
+        let evs = events(8);
+        let mut seg0 = Vec::new();
+        let mut seg1 = Vec::new();
+        for (i, ev) in evs.iter().enumerate() {
+            let buf = framed_record(ev, i as u64 + 1, 0);
+            if i < 5 {
+                seg0.extend_from_slice(&buf);
+            } else {
+                seg1.extend_from_slice(&buf);
+            }
+        }
+        std::fs::write(dir.join(segment_name(0)), &seg0).unwrap();
+        std::fs::write(dir.join(segment_name(1)), &seg1).unwrap();
+        let records = read_events(&dir).unwrap();
+        assert_eq!(records.len(), 8);
+        assert!(records.windows(2).all(|w| w[1].seq == w[0].seq + 1));
+        // A reopened timeline resumes after the last segment's tail.
+        let tl = Timeline::open(&dir).unwrap();
+        assert_eq!(tl.last_seq(), 8);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

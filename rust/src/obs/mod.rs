@@ -1,0 +1,33 @@
+//! Observability tier: an event-sourced, replayable coordinator
+//! timeline.
+//!
+//! The serving stack (coordinator → session store → TCP front-end →
+//! cluster router) exposes counters through
+//! [`Metrics`](crate::coordinator::Metrics), but counters cannot answer
+//! *why* — why a session spilled, why a p99 spiked, why a request was
+//! shed. This module adds the event log that can: every session,
+//! connection, and cluster state transition is appended to a segmented,
+//! crash-safe timeline ([`log`]) through a bounded non-blocking channel
+//! (the serve path never stalls on observability), and [`replay`] folds
+//! that log back into the registry view — resident set, open
+//! connections, per-worker placement — deterministically, at any
+//! sequence number. `docs/OBSERVABILITY.md` specifies the record
+//! schema, the scrape line format, and the replay semantics.
+//!
+//! Layout:
+//!
+//! * [`event`] — the flat [`TimelineEvent`] vocabulary and its JSON
+//!   encoding.
+//! * [`log`] — [`Timeline`] (bounded-channel writer, segmented framed
+//!   log mirroring `docs/STORE_FORMAT.md`) and the prefix-valid
+//!   [`read_events`] reader.
+//! * [`replay`] — the pure [`replay`](replay::replay) fold producing
+//!   [`ReplayState`].
+
+pub mod event;
+pub mod log;
+pub mod replay;
+
+pub use event::TimelineEvent;
+pub use log::{read_events, Timeline, TimelineRecord};
+pub use replay::{replay as replay_records, ReplayState, SessionView};

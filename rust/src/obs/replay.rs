@@ -1,0 +1,294 @@
+//! Deterministic replay: fold a timeline into the registry view it
+//! describes.
+//!
+//! Replay is a pure left-fold over [`TimelineRecord`]s — no clocks, no
+//! I/O — so the same log always reconstructs the same state, and
+//! `--until SEQ` answers "what did the coordinator look like at
+//! sequence N" exactly. The reconstructed view carries what a live
+//! `Stat` reports (per-session model / length / residency, plus the
+//! open- and resident-session counts) and the cluster router's
+//! per-worker placement map; the end-to-end tests assert both against
+//! the live services at the same sequence number.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::event::TimelineEvent;
+use super::log::TimelineRecord;
+
+/// Reconstructed per-session state (what a live `Stat` reports).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionView {
+    /// Model registry key the session is bound to.
+    pub model: String,
+    /// Observations the session holds.
+    pub len: usize,
+    /// Whether the session is resident in RAM (vs evicted to the
+    /// store).
+    pub resident: bool,
+}
+
+/// The fold result: registry view plus connection/control counters.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ReplayState {
+    /// Open sessions by id.
+    pub sessions: BTreeMap<u64, SessionView>,
+    /// Cluster placements: session id → worker address (router
+    /// timelines only).
+    pub placements: BTreeMap<u64, String>,
+    /// Connection ids currently open.
+    pub open_conns: BTreeSet<u64>,
+    /// Connections accepted so far.
+    pub conns_opened: u64,
+    /// Connections ended so far.
+    pub conns_closed: u64,
+    /// Connections refused at admission.
+    pub conns_refused: u64,
+    /// Requests shed with a typed reject frame.
+    pub rejects: u64,
+    /// Drains begun (server shutdowns + router worker drains).
+    pub drains: u64,
+    /// Completed migrations (cutovers).
+    pub migrations: u64,
+    /// Sessions re-registered by crash recovery.
+    pub recovered: u64,
+    /// Records folded in.
+    pub events: u64,
+    /// Sequence number of the last folded record (0 if none).
+    pub last_seq: u64,
+}
+
+impl ReplayState {
+    /// Sessions currently open.
+    pub fn open_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Sessions currently resident in RAM.
+    pub fn resident_sessions(&self) -> usize {
+        self.sessions.values().filter(|s| s.resident).count()
+    }
+
+    fn session(&mut self, id: u64) -> &mut SessionView {
+        self.sessions.entry(id).or_insert_with(|| SessionView {
+            model: String::new(),
+            len: 0,
+            resident: false,
+        })
+    }
+
+    fn apply(&mut self, event: &TimelineEvent) {
+        match event {
+            TimelineEvent::SessionOpen { session, model, len } => {
+                self.sessions.insert(
+                    *session,
+                    SessionView {
+                        model: model.clone(),
+                        len: *len,
+                        resident: true,
+                    },
+                );
+            }
+            TimelineEvent::Append { session, len, .. } => {
+                let s = self.session(*session);
+                s.len = *len;
+                s.resident = true;
+            }
+            TimelineEvent::Spill { session, len } => {
+                let s = self.session(*session);
+                s.len = *len;
+                s.resident = false;
+            }
+            TimelineEvent::Restore { session, len } => {
+                let s = self.session(*session);
+                s.len = *len;
+                s.resident = true;
+            }
+            TimelineEvent::SessionClose { session }
+            | TimelineEvent::Release { session } => {
+                self.sessions.remove(session);
+                self.placements.remove(session);
+            }
+            TimelineEvent::Recover { session, model, len } => {
+                self.sessions.insert(
+                    *session,
+                    SessionView {
+                        model: model.clone(),
+                        len: *len,
+                        resident: false,
+                    },
+                );
+                self.recovered += 1;
+            }
+            TimelineEvent::ConnOpen { conn } => {
+                self.open_conns.insert(*conn);
+                self.conns_opened += 1;
+            }
+            TimelineEvent::ConnClose { conn } => {
+                self.open_conns.remove(conn);
+                self.conns_closed += 1;
+            }
+            TimelineEvent::ConnRefuse => self.conns_refused += 1,
+            TimelineEvent::Reject { .. } => self.rejects += 1,
+            TimelineEvent::Drain { .. } => self.drains += 1,
+            TimelineEvent::Place { session, worker } => {
+                self.placements.insert(*session, worker.clone());
+            }
+            TimelineEvent::MigrateBegin { .. }
+            | TimelineEvent::MigrateVerify { .. } => {}
+            TimelineEvent::MigrateCutover { session, to, .. } => {
+                self.placements.insert(*session, to.clone());
+                self.migrations += 1;
+            }
+        }
+    }
+}
+
+/// Fold `records` (in order) into the registry view, stopping after the
+/// record with sequence number `until` when given (`None` folds
+/// everything).
+pub fn replay(records: &[TimelineRecord], until: Option<u64>) -> ReplayState {
+    let mut state = ReplayState::default();
+    for record in records {
+        if let Some(limit) = until {
+            if record.seq > limit {
+                break;
+            }
+        }
+        state.apply(&record.event);
+        state.events += 1;
+        state.last_seq = record.seq;
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq: u64, event: TimelineEvent) -> TimelineRecord {
+        TimelineRecord { seq, ts_ms: seq, event }
+    }
+
+    fn sample() -> Vec<TimelineRecord> {
+        vec![
+            rec(1, TimelineEvent::ConnOpen { conn: 1 }),
+            rec(
+                2,
+                TimelineEvent::SessionOpen {
+                    session: 10,
+                    model: "ge".to_string(),
+                    len: 0,
+                },
+            ),
+            rec(3, TimelineEvent::Append { session: 10, appended: 8, len: 8 }),
+            rec(4, TimelineEvent::Spill { session: 10, len: 8 }),
+            rec(
+                5,
+                TimelineEvent::SessionOpen {
+                    session: 11,
+                    model: "cv".to_string(),
+                    len: 0,
+                },
+            ),
+            rec(6, TimelineEvent::Restore { session: 10, len: 8 }),
+            rec(7, TimelineEvent::Append { session: 10, appended: 4, len: 12 }),
+            rec(8, TimelineEvent::SessionClose { session: 11 }),
+            rec(9, TimelineEvent::ConnClose { conn: 1 }),
+        ]
+    }
+
+    #[test]
+    fn fold_reconstructs_the_registry_view() {
+        let state = replay(&sample(), None);
+        assert_eq!(state.events, 9);
+        assert_eq!(state.last_seq, 9);
+        assert_eq!(state.open_sessions(), 1);
+        assert_eq!(state.resident_sessions(), 1);
+        let s = &state.sessions[&10];
+        assert_eq!(s.model, "ge");
+        assert_eq!(s.len, 12);
+        assert!(s.resident);
+        assert!(state.open_conns.is_empty());
+        assert_eq!((state.conns_opened, state.conns_closed), (1, 1));
+    }
+
+    #[test]
+    fn until_stops_at_the_requested_sequence() {
+        // At seq 4 session 10 is spilled and session 11 not yet open.
+        let state = replay(&sample(), Some(4));
+        assert_eq!(state.last_seq, 4);
+        assert_eq!(state.open_sessions(), 1);
+        assert_eq!(state.resident_sessions(), 0);
+        assert_eq!(state.sessions[&10].len, 8);
+        assert_eq!(state.open_conns.len(), 1);
+        // Until beyond the log folds everything.
+        assert_eq!(replay(&sample(), Some(99)), replay(&sample(), None));
+    }
+
+    #[test]
+    fn placements_follow_migration_cutover() {
+        let records = vec![
+            rec(
+                1,
+                TimelineEvent::Place {
+                    session: 5,
+                    worker: "a:1".to_string(),
+                },
+            ),
+            rec(
+                2,
+                TimelineEvent::MigrateBegin {
+                    session: 5,
+                    from: "a:1".to_string(),
+                    to: "b:2".to_string(),
+                },
+            ),
+            rec(
+                3,
+                TimelineEvent::MigrateVerify {
+                    session: 5,
+                    to: "b:2".to_string(),
+                },
+            ),
+            rec(
+                4,
+                TimelineEvent::MigrateCutover {
+                    session: 5,
+                    from: "a:1".to_string(),
+                    to: "b:2".to_string(),
+                },
+            ),
+        ];
+        // Mid-migration the route still points at the source.
+        let mid = replay(&records, Some(3));
+        assert_eq!(mid.placements[&5], "a:1");
+        assert_eq!(mid.migrations, 0);
+        let done = replay(&records, None);
+        assert_eq!(done.placements[&5], "b:2");
+        assert_eq!(done.migrations, 1);
+        // Close drops the placement.
+        let mut all = records;
+        all.push(rec(5, TimelineEvent::SessionClose { session: 5 }));
+        assert!(replay(&all, None).placements.is_empty());
+    }
+
+    #[test]
+    fn recover_registers_evicted_sessions() {
+        let records = vec![
+            rec(
+                1,
+                TimelineEvent::Recover {
+                    session: 3,
+                    model: "ge".to_string(),
+                    len: 40,
+                },
+            ),
+            rec(2, TimelineEvent::Restore { session: 3, len: 40 }),
+        ];
+        let state = replay(&records, Some(1));
+        assert_eq!(state.recovered, 1);
+        assert!(!state.sessions[&3].resident);
+        let state = replay(&records, None);
+        assert!(state.sessions[&3].resident);
+    }
+}
