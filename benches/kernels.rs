@@ -1,0 +1,186 @@
+//! Bench target: the specialized kernel tier — const-generic combine
+//! microkernels vs the generic semiring matmul, and the batched SoA
+//! combine vs the same lanes pushed through the scalar kernel one at a
+//! time.
+//!
+//! The acceptance claim: at the small state dimensions HMM serving
+//! lives at (D ≤ 8), the monomorphized D-specialized kernels beat the
+//! generic loop by ≥ 2× on combine throughput (asserted below outside
+//! smoke mode — the kernels are bit-identical, so the only difference
+//! the dispatch makes is speed). Rows are merged into
+//! `BENCH_kernels.json` under the `"kernels"` section for trend
+//! tooling.
+//!
+//! `HMM_SCAN_BENCH_SMOKE=1` shrinks the grid and time budget to a CI
+//! smoke run (a few seconds total) and skips the throughput assertion.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use hmm_scan::benchx::{bench, black_box, format_table, BenchConfig, Measurement};
+use hmm_scan::jsonx::Json;
+use hmm_scan::linalg::kernels::{batch_matmul_soa, set_kernels_enabled, SoaBatch};
+use hmm_scan::linalg::{matmul_into, matmul_into_generic, Mat};
+use hmm_scan::rng::Xoshiro256StarStar;
+use hmm_scan::semiring::{MaxPlus, Prob, Semiring};
+
+/// Matmuls per timed closure call: a single D×D combine is nanoseconds,
+/// so each sample amortizes the measurement overhead over a fixed batch
+/// (identical on both sides of every comparison).
+const REPS: usize = 512;
+
+fn random_mat(r: &mut Xoshiro256StarStar, d: usize, log_domain: bool) -> Mat {
+    let data = (0..d * d)
+        .map(|_| {
+            if log_domain {
+                r.uniform(-30.0, 5.0)
+            } else {
+                r.uniform(0.05, 1.5)
+            }
+        })
+        .collect();
+    Mat::from_vec(d, d, data)
+}
+
+fn row(
+    semiring: &str,
+    d: usize,
+    variant: &str,
+    lanes: Option<usize>,
+    median: Duration,
+    speedup: Option<(&str, f64)>,
+) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("semiring".into(), Json::Str(semiring.into()));
+    obj.insert("d".into(), Json::Num(d as f64));
+    obj.insert("variant".into(), Json::Str(variant.into()));
+    if let Some(l) = lanes {
+        obj.insert("lanes".into(), Json::Num(l as f64));
+    }
+    obj.insert("median_us".into(), Json::Num(median.as_secs_f64() * 1e6));
+    if let Some((key, v)) = speedup {
+        obj.insert(key.into(), Json::Num(v));
+    }
+    Json::Obj(obj)
+}
+
+/// One semiring × one shape: specialized vs generic scalar kernel, then
+/// the batched SoA sweep vs the same lanes through the scalar kernel.
+fn bench_shape<S: Semiring>(
+    d: usize,
+    lanes: usize,
+    log_domain: bool,
+    cfg: BenchConfig,
+    smoke: bool,
+    table: &mut Vec<Measurement>,
+    rows: &mut Vec<Json>,
+) {
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0xC0DE ^ ((d as u64) << 16));
+    let a = random_mat(&mut rng, d, log_domain);
+    let b = random_mat(&mut rng, d, log_domain);
+    let mut out = Mat::zeros(d, d);
+
+    let spec = bench(&format!("{}/D={d}/specialized", S::NAME), cfg, || {
+        for _ in 0..REPS {
+            matmul_into::<S>(black_box(&a), black_box(&b), &mut out);
+        }
+        out.data()[0]
+    });
+    let generic = bench(&format!("{}/D={d}/generic", S::NAME), cfg, || {
+        for _ in 0..REPS {
+            matmul_into_generic::<S>(black_box(&a), black_box(&b), &mut out);
+        }
+        out.data()[0]
+    });
+    let ratio =
+        generic.median.as_secs_f64() / spec.median.as_secs_f64().max(1e-12);
+    println!("{}/D={d}: specialized is {ratio:.2}x the generic kernel", S::NAME);
+    if !smoke && d <= 8 {
+        assert!(
+            ratio >= 2.0,
+            "{}/D={d}: specialized kernel must be >= 2x generic, got {ratio:.2}x",
+            S::NAME
+        );
+    }
+
+    let la: Vec<Mat> = (0..lanes).map(|_| random_mat(&mut rng, d, log_domain)).collect();
+    let lb: Vec<Mat> = (0..lanes).map(|_| random_mat(&mut rng, d, log_domain)).collect();
+    let mut sa = SoaBatch::zeros(d, lanes);
+    let mut sb = SoaBatch::zeros(d, lanes);
+    for (lane, (x, y)) in la.iter().zip(&lb).enumerate() {
+        sa.set_lane(lane, x);
+        sb.set_lane(lane, y);
+    }
+    let mut so = SoaBatch::zeros(d, lanes);
+    let soa = bench(&format!("{}/D={d}/soa_batched/L={lanes}", S::NAME), cfg, || {
+        batch_matmul_soa::<S>(black_box(&sa), black_box(&sb), &mut so);
+        so.data()[0]
+    });
+    let per_lane =
+        bench(&format!("{}/D={d}/soa_per_lane/L={lanes}", S::NAME), cfg, || {
+            for (x, y) in la.iter().zip(&lb) {
+                matmul_into::<S>(black_box(x), black_box(y), &mut out);
+            }
+            out.data()[0]
+        });
+    let soa_ratio =
+        per_lane.median.as_secs_f64() / soa.median.as_secs_f64().max(1e-12);
+
+    rows.push(row(
+        S::NAME,
+        d,
+        "specialized",
+        None,
+        spec.median,
+        Some(("speedup_vs_generic", ratio)),
+    ));
+    rows.push(row(S::NAME, d, "generic", None, generic.median, None));
+    rows.push(row(
+        S::NAME,
+        d,
+        "soa_batched",
+        Some(lanes),
+        soa.median,
+        Some(("speedup_vs_per_lane", soa_ratio)),
+    ));
+    rows.push(row(S::NAME, d, "soa_per_lane", Some(lanes), per_lane.median, None));
+    table.push(spec);
+    table.push(generic);
+    table.push(soa);
+    table.push(per_lane);
+}
+
+fn main() {
+    let smoke = std::env::var("HMM_SCAN_BENCH_SMOKE").as_deref() == Ok("1");
+    let lanes = if smoke { 32 } else { 256 };
+    let cfg = if smoke {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 10,
+            time_budget: Duration::from_millis(100),
+        }
+    } else {
+        BenchConfig::default()
+    };
+
+    set_kernels_enabled(true);
+    let mut table = Vec::new();
+    let mut rows: Vec<Json> = Vec::new();
+    for d in [2usize, 4, 8, 16] {
+        bench_shape::<Prob>(d, lanes, false, cfg, smoke, &mut table, &mut rows);
+        bench_shape::<MaxPlus>(d, lanes, true, cfg, smoke, &mut table, &mut rows);
+    }
+
+    println!("{}", format_table(&table));
+    let report = std::path::Path::new("BENCH_kernels.json");
+    let n_rows = rows.len();
+    hmm_scan::benchx::merge_bench_json(report, "kernels", rows)
+        .expect("write BENCH_kernels.json");
+    println!(
+        "wrote {n_rows} rows to {} (speedup_vs_generic is the microkernel \
+         win at a monomorphized shape; speedup_vs_per_lane is the batched \
+         SoA sweep's win over lane-at-a-time combines)",
+        report.display()
+    );
+}

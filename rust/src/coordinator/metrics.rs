@@ -216,6 +216,12 @@ pub struct MetricsSnapshot {
     pub quota_sheds: u64,
     /// Per-worker router→worker wire latency, ascending by address.
     pub worker_links: Vec<WorkerLinkStats>,
+    /// Process-wide linear-algebra kernel dispatch counters (specialized
+    /// microkernel hits per shape, generic fallbacks, batched SoA
+    /// sweeps). Unlike the serving counters above these are global to
+    /// the process, not per-[`Metrics`] instance: every coordinator in
+    /// the process reports the same kernel totals.
+    pub kernels: crate::linalg::kernels::KernelStatsSnapshot,
 }
 
 impl MetricsSnapshot {
@@ -307,6 +313,13 @@ impl MetricsSnapshot {
         kv("rejects_sent", self.rejects_sent);
         kv("deadline_sheds", self.deadline_sheds);
         kv("quota_sheds", self.quota_sheds);
+        kv("kernel_spec_d2", self.kernels.spec_d2);
+        kv("kernel_spec_d4", self.kernels.spec_d4);
+        kv("kernel_spec_d8", self.kernels.spec_d8);
+        kv("kernel_spec_d16", self.kernels.spec_d16);
+        kv("kernel_generic", self.kernels.generic);
+        kv("kernel_batched_calls", self.kernels.batched_calls);
+        kv("kernel_batched_lanes", self.kernels.batched_lanes);
         let _ = writeln!(out, "batch_occupancy {:.3}", self.batch_occupancy());
         let _ =
             writeln!(out, "append_occupancy {:.3}", self.append_occupancy());
@@ -648,6 +661,7 @@ impl Metrics {
             deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
             quota_sheds: self.quota_sheds.load(Ordering::Relaxed),
             worker_links,
+            kernels: crate::linalg::kernels::kernel_stats(),
         }
     }
 }
@@ -942,6 +956,41 @@ mod tests {
         assert_eq!(get("worker_127_0_0_1_9001_max_us"), "30");
         assert_eq!(get("suffix_width_le_4"), "1");
         assert_eq!(get("batch_occupancy"), "0.000");
+    }
+
+    #[test]
+    fn kernel_counters_surface_and_are_monotone() {
+        use crate::linalg::kernels::{set_kernels_enabled, toggle_guard};
+        use crate::linalg::{matmul_into, Mat};
+        use crate::semiring::Prob;
+        let _guard = toggle_guard();
+        set_kernels_enabled(true);
+        let before = Metrics::new().snapshot().kernels;
+        let a4 = Mat::from_vec(4, 4, (0..16).map(|i| 0.1 + i as f64).collect());
+        let mut out4 = Mat::zeros(4, 4);
+        matmul_into::<Prob>(&a4, &a4, &mut out4);
+        let a3 = Mat::from_vec(3, 3, (0..9).map(|i| 0.1 + i as f64).collect());
+        let mut out3 = Mat::zeros(3, 3);
+        matmul_into::<Prob>(&a3, &a3, &mut out3);
+        let after = Metrics::new().snapshot().kernels;
+        assert!(after.spec_d4 >= before.spec_d4 + 1, "4x4 must hit the D=4 kernel");
+        assert!(after.generic >= before.generic + 1, "3x3 must fall back to generic");
+        let text = Metrics::new().snapshot().render_text();
+        for key in [
+            "kernel_spec_d2",
+            "kernel_spec_d4",
+            "kernel_spec_d8",
+            "kernel_spec_d16",
+            "kernel_generic",
+            "kernel_batched_calls",
+            "kernel_batched_lanes",
+        ] {
+            let found = text
+                .lines()
+                .any(|l| l.strip_prefix(key).is_some_and(|r| r.starts_with(' ')));
+            assert!(found, "missing scrape key {key}");
+        }
+        set_kernels_enabled(true);
     }
 
     #[test]

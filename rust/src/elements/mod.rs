@@ -26,6 +26,7 @@
 pub mod serde;
 
 use crate::hmm::Hmm;
+use crate::linalg::kernels::{batch_matmul_soa, kernels_enabled, SoaBatch};
 use crate::linalg::Mat;
 use crate::scan::{AssocOp, ElementBuf};
 use crate::semiring::{MaxPlus, Prob};
@@ -148,6 +149,67 @@ impl AssocOp<SpElement> for SpOp {
             e.log_scale = acc.log_scale;
         }
     }
+
+    // Level-batched overrides: pack the whole disjoint pair set of one
+    // Blelloch level into the SoA batched kernel — one contiguous pass
+    // instead of one matmul per node. Per lane, `batch_matmul_soa` runs
+    // the scalar kernel's operation sequence, and the renormalization
+    // below is `combine`'s, so both hooks stay bit-identical to the
+    // default per-pair loops (asserted in this module's tests).
+    fn combine_pairs_up(&self, elems: &mut [SpElement], pairs: &[(usize, usize)]) {
+        if pairs.len() < 2 || !kernels_enabled() {
+            for &(j, k) in pairs {
+                elems[k] = self.combine(&elems[j], &elems[k]);
+            }
+            return;
+        }
+        let lanes = pairs.len();
+        let mut a = SoaBatch::zeros(self.d, lanes);
+        let mut b = SoaBatch::zeros(self.d, lanes);
+        for (lane, &(j, k)) in pairs.iter().enumerate() {
+            a.set_lane(lane, &elems[j].mat);
+            b.set_lane(lane, &elems[k].mat);
+        }
+        let mut out = SoaBatch::zeros(self.d, lanes);
+        batch_matmul_soa::<Prob>(&a, &b, &mut out);
+        for (lane, &(j, k)) in pairs.iter().enumerate() {
+            out.lane_into(lane, &mut elems[k].mat);
+            let m = elems[k].mat.max().max(TINY);
+            elems[k].mat.scale(1.0 / m);
+            elems[k].log_scale = elems[j].log_scale + elems[k].log_scale + m.ln();
+        }
+    }
+
+    fn combine_pairs_down(&self, elems: &mut [SpElement], pairs: &[(usize, usize)]) {
+        if pairs.len() < 2 || !kernels_enabled() {
+            for &(j, k) in pairs {
+                let t = elems[j].clone();
+                elems[j] = elems[k].clone();
+                elems[k] = self.combine(&elems[k], &t);
+            }
+            return;
+        }
+        let lanes = pairs.len();
+        let mut a = SoaBatch::zeros(self.d, lanes);
+        let mut b = SoaBatch::zeros(self.d, lanes);
+        for (lane, &(j, k)) in pairs.iter().enumerate() {
+            // The down-sweep combine is old-k ⊗ old-j.
+            a.set_lane(lane, &elems[k].mat);
+            b.set_lane(lane, &elems[j].mat);
+        }
+        let mut out = SoaBatch::zeros(self.d, lanes);
+        batch_matmul_soa::<Prob>(&a, &b, &mut out);
+        for (lane, &(j, k)) in pairs.iter().enumerate() {
+            // After the swap, elems[j] is old-k (the down-sweep's pass-
+            // through) and elems[k] carries old-j's log_scale, so the
+            // log-scale sum below is combine(old-k, old-j)'s exactly.
+            elems.swap(j, k);
+            out.lane_into(lane, &mut elems[k].mat);
+            let m = elems[k].mat.max().max(TINY);
+            elems[k].mat.scale(1.0 / m);
+            elems[k].log_scale = elems[j].log_scale + elems[k].log_scale + m.ln();
+        }
+    }
 }
 
 // ===========================================================================
@@ -225,6 +287,54 @@ impl AssocOp<MpElement> for MpOp {
             crate::linalg::matmul_into::<MaxPlus>(&e.mat, &acc.mat, &mut tmp);
             std::mem::swap(&mut acc.mat, &mut tmp);
             e.mat.data_mut().copy_from_slice(acc.mat.data());
+        }
+    }
+
+    // Level-batched overrides — see SpOp; the max-product element has no
+    // rescale step, so the lanes come back verbatim.
+    fn combine_pairs_up(&self, elems: &mut [MpElement], pairs: &[(usize, usize)]) {
+        if pairs.len() < 2 || !kernels_enabled() {
+            for &(j, k) in pairs {
+                elems[k] = self.combine(&elems[j], &elems[k]);
+            }
+            return;
+        }
+        let lanes = pairs.len();
+        let mut a = SoaBatch::zeros(self.d, lanes);
+        let mut b = SoaBatch::zeros(self.d, lanes);
+        for (lane, &(j, k)) in pairs.iter().enumerate() {
+            a.set_lane(lane, &elems[j].mat);
+            b.set_lane(lane, &elems[k].mat);
+        }
+        let mut out = SoaBatch::zeros(self.d, lanes);
+        batch_matmul_soa::<MaxPlus>(&a, &b, &mut out);
+        for (lane, &(_, k)) in pairs.iter().enumerate() {
+            out.lane_into(lane, &mut elems[k].mat);
+        }
+    }
+
+    fn combine_pairs_down(&self, elems: &mut [MpElement], pairs: &[(usize, usize)]) {
+        if pairs.len() < 2 || !kernels_enabled() {
+            for &(j, k) in pairs {
+                let t = elems[j].clone();
+                elems[j] = elems[k].clone();
+                elems[k] = self.combine(&elems[k], &t);
+            }
+            return;
+        }
+        let lanes = pairs.len();
+        let mut a = SoaBatch::zeros(self.d, lanes);
+        let mut b = SoaBatch::zeros(self.d, lanes);
+        for (lane, &(j, k)) in pairs.iter().enumerate() {
+            // The down-sweep combine is old-k ⊗ old-j.
+            a.set_lane(lane, &elems[k].mat);
+            b.set_lane(lane, &elems[j].mat);
+        }
+        let mut out = SoaBatch::zeros(self.d, lanes);
+        batch_matmul_soa::<MaxPlus>(&a, &b, &mut out);
+        for (lane, &(j, k)) in pairs.iter().enumerate() {
+            elems.swap(j, k);
+            out.lane_into(lane, &mut elems[k].mat);
         }
     }
 }
@@ -1025,6 +1135,77 @@ mod tests {
             bs_op.fold_step(&mut acc, &b, &mut scratch);
             assert_eq!(acc, want, "bs fold_step");
         });
+    }
+
+    #[test]
+    fn pair_hooks_match_default_loops_bitwise() {
+        // The batched SoA pair hooks must be indistinguishable — bit for
+        // bit — from the per-pair default loops, for both sweeps, both
+        // element families, specialized and generic D.
+        use crate::linalg::kernels::{set_kernels_enabled, toggle_guard};
+        use crate::proptestx::assert_bits_eq;
+        let _guard = toggle_guard();
+        let mut runner = Runner::new("pair-hooks");
+        runner.run(15, |r| {
+            for d in [2usize, 3, 4, 8] {
+                let n = 16;
+                let pairs: Vec<(usize, usize)> =
+                    (0..n / 2).map(|i| (2 * i, 2 * i + 1)).collect();
+
+                let sp_op = SpOp { d };
+                let elems: Vec<SpElement> = (0..n).map(|_| rand_sp(r, d)).collect();
+                set_kernels_enabled(true);
+                let mut up = elems.clone();
+                sp_op.combine_pairs_up(&mut up, &pairs);
+                let mut down = elems.clone();
+                sp_op.combine_pairs_down(&mut down, &pairs);
+                set_kernels_enabled(false);
+                let mut want_up = elems.clone();
+                for &(j, k) in &pairs {
+                    want_up[k] = sp_op.combine(&want_up[j], &want_up[k]);
+                }
+                let mut want_down = elems.clone();
+                for &(j, k) in &pairs {
+                    let t = want_down[j].clone();
+                    want_down[j] = want_down[k].clone();
+                    want_down[k] = sp_op.combine(&want_down[k], &t);
+                }
+                for (g, w) in up.iter().zip(&want_up) {
+                    assert_bits_eq("sp up", g.mat.data(), w.mat.data());
+                    assert_eq!(g.log_scale.to_bits(), w.log_scale.to_bits());
+                }
+                for (g, w) in down.iter().zip(&want_down) {
+                    assert_bits_eq("sp down", g.mat.data(), w.mat.data());
+                    assert_eq!(g.log_scale.to_bits(), w.log_scale.to_bits());
+                }
+
+                let mp_op = MpOp { d };
+                let melems: Vec<MpElement> = (0..n).map(|_| rand_mp(r, d)).collect();
+                set_kernels_enabled(true);
+                let mut mup = melems.clone();
+                mp_op.combine_pairs_up(&mut mup, &pairs);
+                let mut mdown = melems.clone();
+                mp_op.combine_pairs_down(&mut mdown, &pairs);
+                set_kernels_enabled(false);
+                let mut mwant_up = melems.clone();
+                for &(j, k) in &pairs {
+                    mwant_up[k] = mp_op.combine(&mwant_up[j], &mwant_up[k]);
+                }
+                let mut mwant_down = melems;
+                for &(j, k) in &pairs {
+                    let t = mwant_down[j].clone();
+                    mwant_down[j] = mwant_down[k].clone();
+                    mwant_down[k] = mp_op.combine(&mwant_down[k], &t);
+                }
+                for (g, w) in mup.iter().zip(&mwant_up) {
+                    assert_bits_eq("mp up", g.mat.data(), w.mat.data());
+                }
+                for (g, w) in mdown.iter().zip(&mwant_down) {
+                    assert_bits_eq("mp down", g.mat.data(), w.mat.data());
+                }
+            }
+        });
+        set_kernels_enabled(true);
     }
 
     #[test]

@@ -930,3 +930,115 @@ fn discrete_engine_panics_on_kalman_session_kind() {
         ..SessionOptions::default()
     });
 }
+
+// ---------------------------------------------------------------------------
+// Kernel tier (the on/off bit-identity acceptance bar)
+// ---------------------------------------------------------------------------
+
+fn assert_outputs_bit_identical(label: &str, a: &EngineOutput, b: &EngineOutput) {
+    use crate::proptestx::assert_bits_eq;
+    match (a, b) {
+        (EngineOutput::Posterior(x), EngineOutput::Posterior(y)) => {
+            assert_bits_eq(label, x.gamma_flat(), y.gamma_flat());
+            assert_bits_eq(label, &[x.log_likelihood()], &[y.log_likelihood()]);
+        }
+        (EngineOutput::Map(x), EngineOutput::Map(y)) => {
+            assert_eq!(x.path, y.path, "{label}: MAP path diverged");
+            assert_bits_eq(label, &[x.log_prob], &[y.log_prob]);
+        }
+        (EngineOutput::Training(x), EngineOutput::Training(y)) => {
+            assert_eq!(x.iterations, y.iterations, "{label}: iterations");
+            assert_bits_eq(label, &x.loglik_curve, &y.loglik_curve);
+            assert_bits_eq(label, x.model.transition().data(), y.model.transition().data());
+            assert_bits_eq(label, x.model.emission().data(), y.model.emission().data());
+            assert_bits_eq(label, x.model.prior(), y.model.prior());
+        }
+        _ => panic!("{label}: output kinds diverged"),
+    }
+}
+
+/// The kernel-tier acceptance bar: every [`Algorithm`] variant produces
+/// bit-identical output with the specialized kernels force-enabled vs
+/// force-disabled, across D ∈ {2, 4, 8, 16} (every microkernel shape)
+/// and T ∈ {1, 100, 4096}. The discrete variants run on random D-state
+/// HMMs; the four Gaussian variants run through `KalmanEngine` on the
+/// 4-state constant-velocity model (the D = 4 kernel) in the D = 4 leg.
+#[test]
+fn all_thirteen_algorithms_bit_identical_kernels_on_vs_off() {
+    use crate::kalman::tests_support::tracking_obs;
+    use crate::kalman::{KalmanEngine, Lgssm};
+    use crate::linalg::kernels::{set_kernels_enabled, toggle_guard};
+    use crate::linalg::Mat;
+    use crate::proptestx::gen;
+
+    let _guard = toggle_guard();
+    let opts = ScanOptions {
+        threads: 2,
+        min_parallel_work: 4,
+        ..ScanOptions::default()
+    };
+    let bw = BaumWelchOptions {
+        max_iters: 2,
+        backend: EStepBackend::ParallelScan,
+        scan: opts,
+        ..Default::default()
+    };
+    let m = 3usize;
+    let mut rng = Xoshiro256StarStar::seed_from_u64(0x13A1);
+    for d in [2usize, 4, 8, 16] {
+        let pi = Mat::from_vec(d, d, gen::stochastic_matrix(&mut rng, d));
+        let mut obs = Mat::zeros(d, m);
+        for row in 0..d {
+            let vals = gen::prob_vector(&mut rng, m);
+            for (c, v) in vals.into_iter().enumerate() {
+                obs[(row, c)] = v;
+            }
+        }
+        let hmm = crate::hmm::Hmm::new(pi, obs, gen::prob_vector(&mut rng, d)).unwrap();
+        let mut engine = Engine::builder(hmm)
+            .scan_options(opts)
+            .baum_welch_options(bw)
+            .build();
+        for t in [1usize, 100, 4096] {
+            let ys = gen::obs_seq(&mut rng, m, t);
+            for alg in Algorithm::ALL {
+                if alg.task() == super::Task::Gaussian {
+                    continue; // served by KalmanEngine below
+                }
+                set_kernels_enabled(true);
+                let on = engine.run(alg, &ys).unwrap();
+                set_kernels_enabled(false);
+                let off = engine.run(alg, &ys).unwrap();
+                set_kernels_enabled(true);
+                let label = format!("{} D={d} T={t}", alg.name());
+                assert_outputs_bit_identical(&label, &on, &off);
+            }
+            if d == 4 {
+                let model = Lgssm::constant_velocity(0.1, 0.8, 0.5);
+                let zs = tracking_obs(&model, t, 0xBEEF ^ t as u64);
+                let mut ke = KalmanEngine::new(model).with_scan_options(opts);
+                for alg in Algorithm::ALL {
+                    if alg.task() != super::Task::Gaussian {
+                        continue;
+                    }
+                    set_kernels_enabled(true);
+                    let on = ke.run(alg, &zs).unwrap();
+                    set_kernels_enabled(false);
+                    let off = ke.run(alg, &zs).unwrap();
+                    set_kernels_enabled(true);
+                    let label = format!("{} T={t}", alg.name());
+                    crate::proptestx::assert_bits_eq(
+                        &label,
+                        on.gamma_flat(),
+                        off.gamma_flat(),
+                    );
+                    crate::proptestx::assert_bits_eq(
+                        &label,
+                        &[on.log_likelihood()],
+                        &[off.log_likelihood()],
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,549 @@
+//! Shape-specialized semiring matmul microkernels and batched SoA combines.
+//!
+//! Every algorithm in the stack — the paper's sum-product / max-product
+//! scans (Eq. 16/42) and the Kalman tier alike — bottoms out in D×D `f64`
+//! semiring matrix products inside [`AssocOp::combine`]. This module is
+//! the raw-speed tier under [`matmul_into`]:
+//!
+//!   * [`spec_mm`] — a const-generic microkernel, monomorphized per
+//!     semiring **and** per D ∈ {2, 4, 8, 16}. The compile-time shape
+//!     lets the compiler fully unroll the j-loop and keep the output row
+//!     in registers, which is what autovectorization needs. `Prob` gets
+//!     a mul/add inner loop, `MaxPlus` gets add/max — two genuinely
+//!     different instruction mixes (max-plus has no FMA form), produced
+//!     from one source by monomorphization over the [`Semiring`] type.
+//!   * [`batch_matmul_soa`] — a batched combine over a
+//!     structure-of-arrays layout ([`SoaBatch`]): lane ℓ of the batch is
+//!     one D×D matrix, and entry (r, c) of every lane is contiguous in
+//!     memory. One pass over the contiguous lane runs combines a whole
+//!     level-sweep of the tree scan at once.
+//!
+//! Both take the dispatch path behind [`matmul_into`] via
+//! [`Semiring::specialized_matmul`]; shapes outside {2, 4, 8, 16} fall
+//! back to [`matmul_into_generic`].
+//!
+//! **Bit-identity contract.** Every kernel here reproduces the generic
+//! kernel bit-for-bit: the same k-ascending accumulation order, the same
+//! `aik == S::zero()` annihilator skip (which is load-bearing — it keeps
+//! `0 × ∞` from minting NaNs through structural zeros), and no FMA
+//! contraction (Rust never auto-contracts `mul` + `add`). The
+//! differential harness in this module's tests asserts `f64::to_bits`
+//! equality against [`matmul_into_generic`] for both semirings over
+//! adversarial inputs (±0.0, subnormals, ±∞, NaN). That contract is why
+//! the kernels can be toggled freely: results never depend on which
+//! path ran.
+//!
+//! **Toggle.** `HMM_SCAN_KERNELS=0|off|false|no` disables the tier at
+//! process start; [`set_kernels_enabled`] flips it at runtime (used by
+//! the differential tests and the force-on/force-off e2e regression).
+//!
+//! [`AssocOp::combine`]: crate::scan::AssocOp::combine
+//! [`matmul_into`]: crate::linalg::matmul_into
+//! [`matmul_into_generic`]: crate::linalg::matmul_into_generic
+//! [`Semiring::specialized_matmul`]: crate::semiring::Semiring::specialized_matmul
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+
+use crate::linalg::Mat;
+use crate::semiring::Semiring;
+
+/// Kernel-tier enable state: 0 = unset (read env on first use), 1 = on,
+/// 2 = off. Relaxed ordering is fine — both paths are bit-identical, so
+/// a racy flip can never change a result.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+static SPEC_D2: AtomicU64 = AtomicU64::new(0);
+static SPEC_D4: AtomicU64 = AtomicU64::new(0);
+static SPEC_D8: AtomicU64 = AtomicU64::new(0);
+static SPEC_D16: AtomicU64 = AtomicU64::new(0);
+static GENERIC: AtomicU64 = AtomicU64::new(0);
+static BATCHED_CALLS: AtomicU64 = AtomicU64::new(0);
+static BATCHED_LANES: AtomicU64 = AtomicU64::new(0);
+
+/// Whether the specialized-kernel tier is active. First call reads the
+/// `HMM_SCAN_KERNELS` environment variable; later calls are one relaxed
+/// atomic load.
+#[inline]
+pub fn kernels_enabled() -> bool {
+    match MODE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let v = std::env::var("HMM_SCAN_KERNELS");
+            let on = env_enables(v.ok().as_deref());
+            MODE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Force the kernel tier on or off for this process, overriding the
+/// environment. Pure atomic store (no allocation), so tests can flip it
+/// inside allocation-counting windows.
+#[inline]
+pub fn set_kernels_enabled(on: bool) {
+    MODE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+/// Pure decision function for the `HMM_SCAN_KERNELS` variable: unset
+/// means on; `0`, `off`, `false`, `no` (any case, surrounding
+/// whitespace ignored) mean off; anything else means on.
+pub(crate) fn env_enables(value: Option<&str>) -> bool {
+    match value {
+        None => true,
+        Some(v) => !matches!(
+            v.trim().to_ascii_lowercase().as_str(),
+            "0" | "off" | "false" | "no"
+        ),
+    }
+}
+
+/// Point-in-time counts of which kernel served each combine. Counters
+/// are process-wide (relaxed atomics bumped on the hot path) and
+/// monotone; the metrics scrape surfaces them as `kernel_*` keys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct KernelStatsSnapshot {
+    /// Calls served by the D=2 specialized kernel.
+    pub spec_d2: u64,
+    /// Calls served by the D=4 specialized kernel.
+    pub spec_d4: u64,
+    /// Calls served by the D=8 specialized kernel.
+    pub spec_d8: u64,
+    /// Calls served by the D=16 specialized kernel.
+    pub spec_d16: u64,
+    /// Calls that fell back to the generic kernel (non-specialized
+    /// shape, non-square product, or kernels disabled).
+    pub generic: u64,
+    /// Batched SoA combine invocations.
+    pub batched_calls: u64,
+    /// Total lanes (element pairs) combined across all batched calls.
+    pub batched_lanes: u64,
+}
+
+/// Snapshot the process-wide kernel counters.
+pub fn kernel_stats() -> KernelStatsSnapshot {
+    KernelStatsSnapshot {
+        spec_d2: SPEC_D2.load(Ordering::Relaxed),
+        spec_d4: SPEC_D4.load(Ordering::Relaxed),
+        spec_d8: SPEC_D8.load(Ordering::Relaxed),
+        spec_d16: SPEC_D16.load(Ordering::Relaxed),
+        generic: GENERIC.load(Ordering::Relaxed),
+        batched_calls: BATCHED_CALLS.load(Ordering::Relaxed),
+        batched_lanes: BATCHED_LANES.load(Ordering::Relaxed),
+    }
+}
+
+/// Record one generic-kernel fallback (called by `matmul_into`).
+#[inline]
+pub(crate) fn note_generic() {
+    GENERIC.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Whether a square shape has a specialized kernel.
+#[inline]
+pub fn specializes(d: usize) -> bool {
+    matches!(d, 2 | 4 | 8 | 16)
+}
+
+/// Shape-dispatch entry point: run the specialized kernel for a square
+/// D×D product if one exists and the tier is enabled. Returns `false`
+/// (buffers untouched) when the caller should fall back to the generic
+/// kernel. Slices are row-major D×D.
+#[inline]
+pub fn dispatch<S: Semiring>(d: usize, a: &[f64], b: &[f64], out: &mut [f64]) -> bool {
+    if !kernels_enabled() {
+        return false;
+    }
+    match d {
+        2 => {
+            SPEC_D2.fetch_add(1, Ordering::Relaxed);
+            spec_mm::<S, 2>(a, b, out);
+            true
+        }
+        4 => {
+            SPEC_D4.fetch_add(1, Ordering::Relaxed);
+            spec_mm::<S, 4>(a, b, out);
+            true
+        }
+        8 => {
+            SPEC_D8.fetch_add(1, Ordering::Relaxed);
+            spec_mm::<S, 8>(a, b, out);
+            true
+        }
+        16 => {
+            SPEC_D16.fetch_add(1, Ordering::Relaxed);
+            spec_mm::<S, 16>(a, b, out);
+            true
+        }
+        _ => false,
+    }
+}
+
+/// Const-generic D×D semiring matmul microkernel: `out = a ⋆ b`.
+///
+/// Monomorphized per (semiring, D), so the compiler sees fixed trip
+/// counts: the row accumulator `[f64; D]` stays in registers and the
+/// inner `zip` over `&[f64; D]` unrolls/vectorizes. The accumulation is
+/// k-ascending with the generic kernel's annihilator skip, so results
+/// are bit-identical to [`matmul_into_generic`] — including when `out`
+/// aliases neither, one, or both inputs *by value* (the accumulator
+/// makes the kernel safe for `a ⋆ a` into a distinct buffer; Rust's
+/// borrow rules already forbid true slice aliasing).
+///
+/// [`matmul_into_generic`]: crate::linalg::matmul_into_generic
+pub fn spec_mm<S: Semiring, const D: usize>(a: &[f64], b: &[f64], out: &mut [f64]) {
+    assert_eq!(a.len(), D * D, "spec_mm: a is not DxD");
+    assert_eq!(b.len(), D * D, "spec_mm: b is not DxD");
+    assert_eq!(out.len(), D * D, "spec_mm: out is not DxD");
+    for (arow, orow) in a.chunks_exact(D).zip(out.chunks_exact_mut(D)) {
+        let mut acc = [S::zero(); D];
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == S::zero() {
+                continue; // annihilator: skip the whole row of b
+            }
+            let brow: &[f64; D] = b[k * D..k * D + D].try_into().unwrap();
+            for (o, &bkj) in acc.iter_mut().zip(brow) {
+                *o = S::add(*o, S::mul(aik, bkj));
+            }
+        }
+        orow.copy_from_slice(&acc);
+    }
+}
+
+/// A batch of D×D matrices in structure-of-arrays layout: entry (r, c)
+/// of lane ℓ lives at `data[(r·D + c)·lanes + ℓ]`, so a fixed matrix
+/// entry across all lanes is one contiguous run. That is the layout
+/// [`batch_matmul_soa`] streams over — the batched analogue of packing
+/// a whole tree-scan level into one kernel call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SoaBatch {
+    d: usize,
+    lanes: usize,
+    data: Vec<f64>,
+}
+
+impl SoaBatch {
+    /// An all-zero batch of `lanes` D×D matrices.
+    pub fn zeros(d: usize, lanes: usize) -> Self {
+        Self { d, lanes, data: vec![0.0; d * d * lanes] }
+    }
+
+    /// Matrix dimension D.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Number of lanes (matrices) in the batch.
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// The SoA backing buffer (length D·D·lanes).
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Scatter one row-major D×D matrix into lane `lane`.
+    pub fn set_lane(&mut self, lane: usize, m: &Mat) {
+        assert!(lane < self.lanes, "lane {lane} out of range");
+        assert_eq!((m.rows(), m.cols()), (self.d, self.d), "lane shape mismatch");
+        for (idx, &v) in m.data().iter().enumerate() {
+            self.data[idx * self.lanes + lane] = v;
+        }
+    }
+
+    /// Gather lane `lane` back into a row-major D×D matrix.
+    pub fn lane_into(&self, lane: usize, out: &mut Mat) {
+        assert!(lane < self.lanes, "lane {lane} out of range");
+        assert_eq!((out.rows(), out.cols()), (self.d, self.d), "lane shape mismatch");
+        for (idx, v) in out.data_mut().iter_mut().enumerate() {
+            *v = self.data[idx * self.lanes + lane];
+        }
+    }
+}
+
+/// Batched semiring matmul over SoA batches: for every lane ℓ,
+/// `out[ℓ] = a[ℓ] ⋆ b[ℓ]`.
+///
+/// The loop nest is (i, k, j, lane) with the lane loop innermost over
+/// three contiguous runs — a vector-friendly shape (the per-lane
+/// annihilator skip compiles to a select). Per lane, the operations and
+/// their order are exactly the scalar kernel's (k ascending, zero
+/// skip), so each lane is bit-identical to [`matmul_into_generic`] on
+/// that lane's matrices.
+///
+/// [`matmul_into_generic`]: crate::linalg::matmul_into_generic
+pub fn batch_matmul_soa<S: Semiring>(a: &SoaBatch, b: &SoaBatch, out: &mut SoaBatch) {
+    let (d, lanes) = (a.d, a.lanes);
+    assert_eq!((b.d, b.lanes), (d, lanes), "batch shape mismatch");
+    assert_eq!((out.d, out.lanes), (d, lanes), "batch shape mismatch");
+    BATCHED_CALLS.fetch_add(1, Ordering::Relaxed);
+    BATCHED_LANES.fetch_add(lanes as u64, Ordering::Relaxed);
+    out.data.fill(S::zero());
+    if lanes == 0 {
+        return;
+    }
+    for i in 0..d {
+        for k in 0..d {
+            let arun = &a.data[(i * d + k) * lanes..(i * d + k + 1) * lanes];
+            for j in 0..d {
+                let brun = &b.data[(k * d + j) * lanes..(k * d + j + 1) * lanes];
+                let orun = &mut out.data[(i * d + j) * lanes..(i * d + j + 1) * lanes];
+                for ((o, &av), &bv) in orun.iter_mut().zip(arun).zip(brun) {
+                    if av == S::zero() {
+                        continue; // same annihilator skip, per lane
+                    }
+                    *o = S::add(*o, S::mul(av, bv));
+                }
+            }
+        }
+    }
+}
+
+/// Serializes tests that flip the process-wide kernel toggle. Every
+/// test that calls [`set_kernels_enabled`] must hold this guard for its
+/// whole body, or parallel `cargo test` runs will race on [`MODE`].
+#[cfg(test)]
+pub(crate) fn toggle_guard() -> std::sync::MutexGuard<'static, ()> {
+    use std::sync::{Mutex, PoisonError};
+    static TOGGLE_LOCK: Mutex<()> = Mutex::new(());
+    TOGGLE_LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_into, matmul_into_generic};
+    use crate::proptestx::{assert_bits_eq, gen, Runner};
+    use crate::semiring::{MaxPlus, Prob};
+
+    fn log_domain<S: Semiring>() -> bool {
+        S::zero() == f64::NEG_INFINITY
+    }
+
+    /// The differential harness: specialized kernel vs generic kernel,
+    /// bit-for-bit, over adversarial matrices, with the output buffer
+    /// pre-poisoned with NaN and an `a ⋆ a` same-input pattern.
+    fn spec_vs_generic<S: Semiring, const D: usize>() {
+        let mut runner = Runner::new(&format!("kernel-diff-{}-d{}", S::NAME, D));
+        runner.run(200, |r| {
+            let a = gen::adversarial_matrix(r, D, log_domain::<S>());
+            let b = gen::adversarial_matrix(r, D, log_domain::<S>());
+            let mut got = vec![f64::NAN; D * D];
+            spec_mm::<S, D>(&a, &b, &mut got);
+            let am = Mat::from_vec(D, D, a.clone());
+            let bm = Mat::from_vec(D, D, b.clone());
+            let mut want = Mat::filled(D, D, f64::NAN);
+            matmul_into_generic::<S>(&am, &bm, &mut want);
+            assert_bits_eq(&format!("{} d={} a*b", S::NAME, D), &got, want.data());
+            // Same-input pattern: a ⋆ a (the up-sweep combines an
+            // element with itself at degenerate tree shapes).
+            let mut got_aa = vec![f64::NAN; D * D];
+            spec_mm::<S, D>(&a, &a, &mut got_aa);
+            let mut want_aa = Mat::filled(D, D, f64::NAN);
+            matmul_into_generic::<S>(&am, &am, &mut want_aa);
+            assert_bits_eq(&format!("{} d={} a*a", S::NAME, D), &got_aa, want_aa.data());
+        });
+    }
+
+    #[test]
+    fn differential_prob_all_specialized_shapes() {
+        spec_vs_generic::<Prob, 2>();
+        spec_vs_generic::<Prob, 4>();
+        spec_vs_generic::<Prob, 8>();
+        spec_vs_generic::<Prob, 16>();
+    }
+
+    #[test]
+    fn differential_maxplus_all_specialized_shapes() {
+        spec_vs_generic::<MaxPlus, 2>();
+        spec_vs_generic::<MaxPlus, 4>();
+        spec_vs_generic::<MaxPlus, 8>();
+        spec_vs_generic::<MaxPlus, 16>();
+    }
+
+    #[test]
+    fn dispatch_covers_exactly_the_specialized_shapes() {
+        let _guard = toggle_guard();
+        set_kernels_enabled(true);
+        for d in [2usize, 4, 8, 16] {
+            assert!(specializes(d));
+            let a = vec![0.5; d * d];
+            let b = vec![0.25; d * d];
+            let mut out = vec![f64::NAN; d * d];
+            assert!(dispatch::<Prob>(d, &a, &b, &mut out));
+        }
+        for d in [1usize, 3, 5, 17, 64] {
+            assert!(!specializes(d));
+            let a = vec![0.5; d * d];
+            let b = vec![0.25; d * d];
+            let mut out = vec![f64::NAN; d * d];
+            assert!(!dispatch::<Prob>(d, &a, &b, &mut out));
+            // fallback contract: buffers untouched on false
+            assert!(out.iter().all(|v| v.is_nan()));
+        }
+        set_kernels_enabled(true);
+    }
+
+    #[test]
+    fn matmul_into_identical_across_dispatch_boundary() {
+        // D ∈ {1, 3, 5, 17, 64} take the generic path; D ∈ {2, 4, 8, 16}
+        // the specialized one. All must agree bitwise with the generic
+        // kernel called directly.
+        let _guard = toggle_guard();
+        set_kernels_enabled(true);
+        let mut runner = Runner::new("kernel-boundary");
+        runner.run(40, |r| {
+            for d in [1usize, 2, 3, 4, 5, 8, 16, 17, 64] {
+                let a = Mat::from_vec(d, d, gen::adversarial_matrix(r, d, false));
+                let b = Mat::from_vec(d, d, gen::adversarial_matrix(r, d, false));
+                let mut via_dispatch = Mat::filled(d, d, f64::NAN);
+                matmul_into::<Prob>(&a, &b, &mut via_dispatch);
+                let mut via_generic = Mat::filled(d, d, f64::NAN);
+                matmul_into_generic::<Prob>(&a, &b, &mut via_generic);
+                assert_bits_eq(
+                    &format!("boundary d={d}"),
+                    via_dispatch.data(),
+                    via_generic.data(),
+                );
+            }
+        });
+        set_kernels_enabled(true);
+    }
+
+    #[test]
+    fn dispatch_counters_are_monotone() {
+        let _guard = toggle_guard();
+        set_kernels_enabled(true);
+        let before = kernel_stats();
+        let a = Mat::identity::<Prob>(4);
+        let b = Mat::identity::<Prob>(4);
+        let mut out = Mat::zeros(4, 4);
+        matmul_into::<Prob>(&a, &b, &mut out);
+        let g = Mat::identity::<Prob>(3);
+        let mut gout = Mat::zeros(3, 3);
+        matmul_into::<Prob>(&g, &g, &mut gout);
+        let after = kernel_stats();
+        assert!(after.spec_d4 >= before.spec_d4 + 1);
+        assert!(after.generic >= before.generic + 1);
+        set_kernels_enabled(true);
+    }
+
+    #[test]
+    fn batched_soa_matches_scalar_kernel_per_lane() {
+        // Seeded sweep over batch shapes, including the degenerate
+        // lanes = 0 and 1 and odd / non-power-of-two lane counts that a
+        // non-power-of-two tree level produces.
+        let mut runner = Runner::new("kernel-soa");
+        for &(d, lanes) in &[
+            (2usize, 0usize),
+            (2, 1),
+            (2, 7),
+            (3, 5),
+            (4, 1),
+            (4, 13),
+            (5, 3),
+            (8, 9),
+            (16, 2),
+        ] {
+            runner.run(20, |r| {
+                let mats_a: Vec<Mat> = (0..lanes)
+                    .map(|_| Mat::from_vec(d, d, gen::adversarial_matrix(r, d, false)))
+                    .collect();
+                let mats_b: Vec<Mat> = (0..lanes)
+                    .map(|_| Mat::from_vec(d, d, gen::adversarial_matrix(r, d, false)))
+                    .collect();
+                let mut a = SoaBatch::zeros(d, lanes);
+                let mut b = SoaBatch::zeros(d, lanes);
+                for (lane, (ma, mb)) in mats_a.iter().zip(&mats_b).enumerate() {
+                    a.set_lane(lane, ma);
+                    b.set_lane(lane, mb);
+                }
+                let mut out = SoaBatch::zeros(d, lanes);
+                batch_matmul_soa::<Prob>(&a, &b, &mut out);
+                let mut got = Mat::zeros(d, d);
+                let mut want = Mat::filled(d, d, f64::NAN);
+                for (lane, (ma, mb)) in mats_a.iter().zip(&mats_b).enumerate() {
+                    out.lane_into(lane, &mut got);
+                    matmul_into_generic::<Prob>(ma, mb, &mut want);
+                    assert_bits_eq(&format!("soa d={d} lane {lane}"), got.data(), want.data());
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn batched_soa_maxplus_matches_scalar_kernel() {
+        let mut runner = Runner::new("kernel-soa-maxplus");
+        runner.run(40, |r| {
+            let (d, lanes) = (4usize, 11usize);
+            let mats_a: Vec<Mat> = (0..lanes)
+                .map(|_| Mat::from_vec(d, d, gen::adversarial_matrix(r, d, true)))
+                .collect();
+            let mats_b: Vec<Mat> = (0..lanes)
+                .map(|_| Mat::from_vec(d, d, gen::adversarial_matrix(r, d, true)))
+                .collect();
+            let mut a = SoaBatch::zeros(d, lanes);
+            let mut b = SoaBatch::zeros(d, lanes);
+            for (lane, (ma, mb)) in mats_a.iter().zip(&mats_b).enumerate() {
+                a.set_lane(lane, ma);
+                b.set_lane(lane, mb);
+            }
+            let mut out = SoaBatch::zeros(d, lanes);
+            batch_matmul_soa::<MaxPlus>(&a, &b, &mut out);
+            let mut got = Mat::zeros(d, d);
+            let mut want = Mat::filled(d, d, f64::NAN);
+            for (lane, (ma, mb)) in mats_a.iter().zip(&mats_b).enumerate() {
+                out.lane_into(lane, &mut got);
+                matmul_into_generic::<MaxPlus>(ma, mb, &mut want);
+                assert_bits_eq(
+                    &format!("soa maxplus lane {lane}"),
+                    got.data(),
+                    want.data(),
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn soa_lane_round_trip() {
+        let m = Mat::from_vec(2, 2, vec![1.0, -0.0, f64::INFINITY, 5e-324]);
+        let mut batch = SoaBatch::zeros(2, 3);
+        batch.set_lane(1, &m);
+        let mut back = Mat::zeros(2, 2);
+        batch.lane_into(1, &mut back);
+        assert_bits_eq("soa round trip", back.data(), m.data());
+        // untouched lanes stay zero
+        batch.lane_into(0, &mut back);
+        assert!(back.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn toggle_disables_and_reenables_dispatch() {
+        let _guard = toggle_guard();
+        set_kernels_enabled(false);
+        let a = vec![1.0; 4];
+        let b = vec![1.0; 4];
+        let mut out = vec![f64::NAN; 4];
+        assert!(!dispatch::<Prob>(2, &a, &b, &mut out));
+        set_kernels_enabled(true);
+        assert!(dispatch::<Prob>(2, &a, &b, &mut out));
+        assert!(kernels_enabled());
+    }
+
+    #[test]
+    fn env_decision_table() {
+        assert!(env_enables(None));
+        assert!(env_enables(Some("1")));
+        assert!(env_enables(Some("on")));
+        assert!(env_enables(Some("anything")));
+        assert!(!env_enables(Some("0")));
+        assert!(!env_enables(Some("off")));
+        assert!(!env_enables(Some("OFF")));
+        assert!(!env_enables(Some("false")));
+        assert!(!env_enables(Some(" no ")));
+    }
+}

@@ -10,6 +10,8 @@ use std::fmt;
 
 use crate::semiring::Semiring;
 
+pub mod kernels;
+
 /// Dense row-major matrix of `f64`.
 #[derive(Clone, PartialEq)]
 pub struct Mat {
@@ -213,8 +215,31 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 }
 
 /// `out = a ⋆ b` without allocating (out must be pre-shaped and is
-/// overwritten). The ikj ordering keeps the inner loop contiguous.
+/// overwritten).
+///
+/// Square D×D products with D ∈ {2, 4, 8, 16} are served by the
+/// const-generic microkernels in [`kernels`] (per-semiring, via
+/// [`Semiring::specialized_matmul`]); everything else falls through to
+/// [`matmul_into_generic`]. Both paths are bit-identical — see the
+/// kernel module's differential harness — so callers never observe
+/// which one ran except through the [`kernels::kernel_stats`] counters.
 pub fn matmul_into<S: Semiring>(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    let d = a.rows;
+    if d == a.cols && d == b.cols && S::specialized_matmul(d, &a.data, &b.data, &mut out.data) {
+        return;
+    }
+    kernels::note_generic();
+    matmul_into_generic::<S>(a, b, out);
+}
+
+/// The reference ikj kernel behind [`matmul_into`]: works for any
+/// shape, keeps the inner loop contiguous, and skips `S::zero()` rows
+/// of `a` (the annihilator shortcut that also keeps structural zeros
+/// from minting NaNs via `0 × ∞`). The specialized kernels are defined
+/// to match this function bit-for-bit.
+pub fn matmul_into_generic<S: Semiring>(a: &Mat, b: &Mat, out: &mut Mat) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((out.rows, out.cols), (a.rows, b.cols));
     out.data.fill(S::zero());

@@ -65,6 +65,30 @@ impl Runner {
     }
 }
 
+/// Assert two f64 slices are **bit-identical** (`f64::to_bits`), with a
+/// hex dump of the first mismatch. Bitwise comparison (not `==`)
+/// distinguishes `0.0` from `-0.0` and treats equal-bit NaNs as equal —
+/// the contract the kernel differential harness checks.
+pub fn assert_bits_eq(label: &str, got: &[f64], want: &[f64]) {
+    assert_eq!(
+        got.len(),
+        want.len(),
+        "{label}: length mismatch {} vs {}",
+        got.len(),
+        want.len()
+    );
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{label}: bit mismatch at index {i}: got {g:?} ({:#018x}), \
+             want {w:?} ({:#018x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
 /// Per-thread allocation counting for "this hot path is allocation-free"
 /// assertions (the `dhat`/`allocation-counter` crates are unavailable
 /// offline). Only compiled into the test binary: a counting
@@ -149,6 +173,70 @@ pub mod gen {
     pub fn obs_seq(r: &mut Xoshiro256StarStar, m: usize, len: usize) -> Vec<u32> {
         (0..len).map(|_| r.below(m as u64) as u32).collect()
     }
+
+    /// Adversarial values for the linear-domain semirings (`Prob`,
+    /// `MaxTimes`): signed zeros, subnormals, huge/tiny magnitudes,
+    /// infinities, NaN.
+    const ADVERSARIAL_LINEAR: [f64; 15] = [
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        f64::MIN_POSITIVE,
+        5e-324, // smallest subnormal
+        1e-310, // mid-range subnormal
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::NAN,
+        1e300,
+        1e-300,
+        0.5,
+        2.0,
+        -3.5,
+    ];
+
+    /// Adversarial values for the log-domain semirings (`MaxPlus`,
+    /// `LogProb`): −∞ is the additive zero there, so it appears
+    /// alongside signed zeros, subnormals, exp-overflow magnitudes and
+    /// NaN.
+    const ADVERSARIAL_LOG: [f64; 11] = [
+        f64::NEG_INFINITY,
+        0.0,
+        -0.0,
+        f64::INFINITY,
+        f64::NAN,
+        -1e30,
+        5e-324,
+        -745.3, // exp() underflows to 0
+        708.4,  // exp() overflows to ∞
+        1.5,
+        -2.5,
+    ];
+
+    /// A d×d row-major matrix whose entries are ~50% drawn from an
+    /// adversarial pool (signed zeros, subnormals, ±∞, NaN, extreme
+    /// magnitudes) and otherwise uniform. `log_domain` selects the pool
+    /// whose special values match semirings with `zero() = −∞`
+    /// (`MaxPlus`, `LogProb`). Built for differential kernel tests,
+    /// where bit-identity must survive exactly these inputs.
+    pub fn adversarial_matrix(r: &mut Xoshiro256StarStar, d: usize, log_domain: bool) -> Vec<f64> {
+        let pool: &[f64] = if log_domain {
+            &ADVERSARIAL_LOG
+        } else {
+            &ADVERSARIAL_LINEAR
+        };
+        (0..d * d)
+            .map(|_| {
+                if r.below(2) == 0 {
+                    pool[r.below(pool.len() as u64) as usize]
+                } else if log_domain {
+                    r.uniform(-30.0, 5.0)
+                } else {
+                    r.uniform(0.0, 1.5)
+                }
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -195,5 +283,27 @@ mod tests {
     #[should_panic]
     fn failures_propagate() {
         Runner::new("fails").run(10, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn adversarial_matrix_has_right_shape_and_hits_special_values() {
+        let mut saw_nonfinite = false;
+        Runner::new("gen-adversarial").run(20, |r| {
+            for log_domain in [false, true] {
+                let m = gen::adversarial_matrix(r, 8, log_domain);
+                assert_eq!(m.len(), 64);
+                saw_nonfinite |= m.iter().any(|v| !v.is_finite());
+            }
+        });
+        // With ~50% adversarial draws over 20×2 matrices, non-finite
+        // specials are statistically certain under the fixed seed.
+        assert!(saw_nonfinite);
+    }
+
+    #[test]
+    fn assert_bits_eq_distinguishes_signed_zero_and_accepts_nan() {
+        assert_bits_eq("nan-ok", &[f64::NAN, -0.0], &[f64::NAN, -0.0]);
+        let r = std::panic::catch_unwind(|| assert_bits_eq("zero-sign", &[0.0], &[-0.0]));
+        assert!(r.is_err());
     }
 }

@@ -512,8 +512,18 @@ mod tests {
     #[test]
     fn push_steady_state_is_allocation_free() {
         use crate::elements::{SpElement, SpOp};
+        use crate::linalg::kernels::{set_kernels_enabled, toggle_guard};
         use crate::linalg::Mat;
         use crate::proptestx::alloc_count;
+
+        // Pin the kernel tier on (a pure atomic store) before the
+        // measured window: the first `kernels_enabled()` call would
+        // otherwise read the environment inside it, which allocates.
+        // The guard keeps other tests from flipping the process-wide
+        // toggle mid-measurement — D=4 pushes must stay allocation-free
+        // *through the specialized dispatch path*.
+        let _guard = toggle_guard();
+        set_kernels_enabled(true);
 
         let d = 4usize;
         let block = 8usize;

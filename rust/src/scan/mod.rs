@@ -107,6 +107,32 @@ pub trait AssocOp<E>: Sync {
             *e = acc.clone();
         }
     }
+
+    /// Combine every `(j, k)` pair of one up-sweep tree level:
+    /// `a[k] ← a[j] ⊗ a[k]`. The pairs of a Blelloch level are pairwise
+    /// disjoint, so operators may batch them into one kernel pass — the
+    /// D×D matrix operators override this with the SoA batched combine
+    /// (`linalg::kernels::batch_matmul_soa`). Overrides must be bitwise
+    /// identical to this default loop.
+    fn combine_pairs_up(&self, elems: &mut [E], pairs: &[(usize, usize)]) {
+        for &(j, k) in pairs {
+            elems[k] = self.combine(&elems[j], &elems[k]);
+        }
+    }
+
+    /// Down-sweep analogue of [`combine_pairs_up`](Self::combine_pairs_up):
+    /// per pair, `a[j] ← a[k]` and `a[k] ← a[k]_old ⊗ a[j]_old`. Same
+    /// disjointness precondition and bit-identity contract.
+    fn combine_pairs_down(&self, elems: &mut [E], pairs: &[(usize, usize)])
+    where
+        E: Clone,
+    {
+        for &(j, k) in pairs {
+            let t = elems[j].clone();
+            elems[j] = elems[k].clone();
+            elems[k] = self.combine(&elems[k], &t);
+        }
+    }
 }
 
 /// Elements whose storage can be overwritten in place from a same-shape
@@ -356,7 +382,7 @@ where
         let stride = 1usize << (d + 1);
         let half = 1usize << d;
         let starts: Vec<usize> = (0..t).step_by(stride).collect();
-        run_level(op, elems, &starts, half, stride, opts, UpSweep);
+        run_level(op, elems, &starts, half, stride, opts, false);
     }
 
     // Root ← identity (line 13), then down-sweep (lines 14-23) computes
@@ -366,7 +392,7 @@ where
         let stride = 1usize << (d + 1);
         let half = 1usize << d;
         let starts: Vec<usize> = (0..t).step_by(stride).collect();
-        run_level(op, elems, &starts, half, stride, opts, DownSweep);
+        run_level(op, elems, &starts, half, stride, opts, true);
     }
 
     // Final inclusive pass (lines 24-27): a[i] ← a[i] ⊗ b[i].
@@ -453,67 +479,54 @@ where
 // internals
 // ---------------------------------------------------------------------------
 
-#[derive(Clone, Copy)]
-struct UpSweep;
-#[derive(Clone, Copy)]
-struct DownSweep;
-
-trait SweepKind: Copy + Send + Sync {
-    fn apply<E: Clone, Op: AssocOp<E>>(self, op: &Op, a: &mut [E], j: usize, k: usize);
-}
-
-impl SweepKind for UpSweep {
-    #[inline]
-    fn apply<E: Clone, Op: AssocOp<E>>(self, op: &Op, a: &mut [E], j: usize, k: usize) {
-        a[k] = op.combine(&a[j], &a[k]);
-    }
-}
-
-impl SweepKind for DownSweep {
-    #[inline]
-    fn apply<E: Clone, Op: AssocOp<E>>(self, op: &Op, a: &mut [E], j: usize, k: usize) {
-        let t = a[j].clone();
-        a[j] = a[k].clone();
-        a[k] = op.combine(&a[k], &t);
-    }
-}
-
-fn run_level<E, Op, K>(
+/// One Blelloch tree level: gather the in-range `(j, k)` node pairs and
+/// hand them to the operator's pair hooks ([`AssocOp::combine_pairs_up`]
+/// / [`AssocOp::combine_pairs_down`]) — serially, or chunked across
+/// threads. Routing whole levels through the pair hooks is what lets
+/// the matrix operators combine an entire level in one batched SoA
+/// kernel pass instead of one matmul per node.
+fn run_level<E, Op>(
     op: &Op,
     elems: &mut [E],
     starts: &[usize],
     half: usize,
     stride: usize,
     opts: ScanOptions,
-    kind: K,
+    down: bool,
 ) where
     E: Clone + Send + Sync,
     Op: AssocOp<E>,
-    K: SweepKind,
 {
     let t = elems.len();
-    let work = |i: usize, a: &mut [E]| {
-        let j = i + half - 1;
-        let k = i + stride - 1;
-        if j < t && k < t {
-            kind.apply(op, a, j, k);
+    let pairs: Vec<(usize, usize)> = starts
+        .iter()
+        .filter_map(|&i| {
+            let j = i + half - 1;
+            let k = i + stride - 1;
+            (j < t && k < t).then_some((j, k))
+        })
+        .collect();
+    if pairs.is_empty() {
+        return;
+    }
+    let apply = |a: &mut [E], ps: &[(usize, usize)]| {
+        if down {
+            op.combine_pairs_down(a, ps);
+        } else {
+            op.combine_pairs_up(a, ps);
         }
     };
-    if starts.len() < opts.min_parallel_work || opts.threads <= 1 {
-        for &i in starts {
-            work(i, elems);
-        }
+    if pairs.len() < opts.min_parallel_work || opts.threads <= 1 {
+        apply(elems, &pairs);
     } else {
-        // Disjoint (j, k) pairs per level: chunk the starts across
-        // threads; each start touches only indices within [i, i+stride).
+        // Disjoint (j, k) pairs per level: chunk the pairs across
+        // threads; each pair touches only its own two indices.
         let base = crate::exec::SharedSliceMut::new(elems);
-        parallel_for_chunks(starts.len(), opts.threads, |_, lo, hi| {
-            // SAFETY: every start's (j, k) indices are unique to that
-            // start at a given level, so chunks never alias.
+        parallel_for_chunks(pairs.len(), opts.threads, |_, lo, hi| {
+            // SAFETY: every pair's (j, k) indices are unique to that
+            // pair at a given level, so chunks never alias.
             let a = unsafe { base.full_mut() };
-            for &i in &starts[lo..hi] {
-                work(i, a);
-            }
+            apply(a, &pairs[lo..hi]);
         });
     }
 }
@@ -757,6 +770,76 @@ mod tests {
             f.combine(&"a".to_string(), &"b".to_string()),
             "ba".to_string()
         );
+    }
+
+    #[test]
+    fn blelloch_kernels_on_vs_off_bitwise_matrix_elements() {
+        // The Blelloch sweeps route whole levels through the batched
+        // pair hooks when kernels are on; with kernels off every pair
+        // takes the per-pair generic path. Same schedule, so the
+        // results must agree bit for bit — across non-power-of-two
+        // lengths (short tail levels, pairs.len() == 1) and both
+        // serial and threaded execution.
+        use crate::elements::{MpElement, MpOp, SpElement, SpOp};
+        use crate::linalg::kernels::{set_kernels_enabled, toggle_guard};
+        use crate::linalg::Mat;
+        use crate::proptestx::assert_bits_eq;
+        let _guard = toggle_guard();
+        let mut runner = Runner::new("scan-kernels-on-off");
+        for t in [3usize, 5, 6, 7, 9, 12, 17, 33, 100, 257] {
+            runner.run(2, |r| {
+                for d in [2usize, 3, 4] {
+                    let sp_op = SpOp { d };
+                    let elems: Vec<SpElement> = (0..t)
+                        .map(|_| {
+                            let m = Mat::from_vec(
+                                d,
+                                d,
+                                (0..d * d).map(|_| r.uniform(0.01, 1.0)).collect(),
+                            );
+                            SpElement::from_mat(m)
+                        })
+                        .collect();
+                    let mp_op = MpOp { d };
+                    let melems: Vec<MpElement> = (0..t)
+                        .map(|_| MpElement {
+                            mat: Mat::from_vec(
+                                d,
+                                d,
+                                (0..d * d).map(|_| r.uniform(-8.0, 0.0)).collect(),
+                            ),
+                        })
+                        .collect();
+                    for opts in [
+                        ScanOptions::serial(),
+                        ScanOptions {
+                            threads: 4,
+                            min_parallel_work: 2,
+                            ..ScanOptions::default()
+                        },
+                    ] {
+                        set_kernels_enabled(true);
+                        let mut on = elems.clone();
+                        blelloch_scan(&sp_op, &mut on, opts);
+                        let mut mon = melems.clone();
+                        blelloch_scan(&mp_op, &mut mon, opts);
+                        set_kernels_enabled(false);
+                        let mut off = elems.clone();
+                        blelloch_scan(&sp_op, &mut off, opts);
+                        let mut moff = melems.clone();
+                        blelloch_scan(&mp_op, &mut moff, opts);
+                        for (g, w) in on.iter().zip(&off) {
+                            assert_bits_eq("sp scan", g.mat.data(), w.mat.data());
+                            assert_eq!(g.log_scale.to_bits(), w.log_scale.to_bits());
+                        }
+                        for (g, w) in mon.iter().zip(&moff) {
+                            assert_bits_eq("mp scan", g.mat.data(), w.mat.data());
+                        }
+                    }
+                }
+            });
+        }
+        set_kernels_enabled(true);
     }
 
     #[test]

@@ -16,11 +16,33 @@
 ///   * `mul` distributes over `add`
 ///   * `zero()` annihilates: `mul(zero(), x) = zero()`
 pub trait Semiring: Copy + Send + Sync + 'static {
+    /// Short stable name (used in test seeds, bench rows, docs).
     const NAME: &'static str;
+    /// Additive identity (annihilates under `mul`).
     fn zero() -> f64;
+    /// Multiplicative identity.
     fn one() -> f64;
+    /// Semiring addition.
     fn add(a: f64, b: f64) -> f64;
+    /// Semiring multiplication.
     fn mul(a: f64, b: f64) -> f64;
+
+    /// Shape-specialized square-matmul hook — the stable-Rust dispatch
+    /// seam for the kernel tier (no `specialization` feature needed).
+    ///
+    /// `a`, `b`, `out` are row-major d×d buffers. Return `true` after
+    /// writing `out = a ⋆ b`, or `false` (leaving `out` untouched) to
+    /// make [`linalg::matmul_into`](crate::linalg::matmul_into) fall
+    /// back to the generic kernel. Implementations must be bit-identical
+    /// to [`linalg::matmul_into_generic`](crate::linalg::matmul_into_generic)
+    /// — the kernel differential harness enforces this for the two
+    /// overriding semirings ([`Prob`], [`MaxPlus`]); every other
+    /// semiring keeps this default and always takes the generic path.
+    #[inline]
+    fn specialized_matmul(d: usize, a: &[f64], b: &[f64], out: &mut [f64]) -> bool {
+        let _ = (d, a, b, out);
+        false
+    }
 }
 
 /// Ordinary probability semiring (ℝ₊, +, ×).
@@ -44,6 +66,10 @@ impl Semiring for Prob {
     #[inline]
     fn mul(a: f64, b: f64) -> f64 {
         a * b
+    }
+    #[inline]
+    fn specialized_matmul(d: usize, a: &[f64], b: &[f64], out: &mut [f64]) -> bool {
+        crate::linalg::kernels::dispatch::<Prob>(d, a, b, out)
     }
 }
 
@@ -93,6 +119,10 @@ impl Semiring for MaxPlus {
     #[inline]
     fn mul(a: f64, b: f64) -> f64 {
         a + b
+    }
+    #[inline]
+    fn specialized_matmul(d: usize, a: &[f64], b: &[f64], out: &mut [f64]) -> bool {
+        crate::linalg::kernels::dispatch::<MaxPlus>(d, a, b, out)
     }
 }
 
