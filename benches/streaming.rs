@@ -29,20 +29,29 @@
 //! with coordinator event recording on vs off — recording is one
 //! bounded-channel send per append, so the p50 must stay within 5% of
 //! the timeline-off baseline (the observability tier's overhead claim).
+//! A **tracing overhead** section makes the same claim for request
+//! spans: a loopback wire decode with span emission on (server
+//! timeline configured, every request trace-stamped) vs off, p50
+//! within 5%; both rows land in the `"tracing"` section of
+//! `BENCH_net.json`.
 //!
 //! `HMM_SCAN_BENCH_SMOKE=1` shrinks the grid and time budget to a CI
 //! smoke run (a few seconds total).
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use hmm_scan::benchx::{bench, black_box, fmt_duration, format_table, BenchConfig};
 use hmm_scan::coordinator::{
-    Coordinator, CoordinatorConfig, StreamReply, StreamRequest,
+    Algo, Coordinator, CoordinatorConfig, DecodeRequest, StreamReply,
+    StreamRequest,
 };
 use hmm_scan::elements::serde::to_decimal_json;
 use hmm_scan::engine::{Algorithm, Engine, SessionOptions};
 use hmm_scan::hmm::{gilbert_elliott, sample, GeParams};
+use hmm_scan::jsonx::Json;
+use hmm_scan::net::{NetClient, NetServer, NetServerConfig};
 use hmm_scan::obs::Timeline;
 use hmm_scan::rng::Xoshiro256StarStar;
 use hmm_scan::scan::ScanOptions;
@@ -257,6 +266,65 @@ fn timeline_append_p50(with_timeline: bool, smoke: bool) -> Duration {
         tl.flush();
     }
     drop(coord);
+    lat.sort_unstable();
+    let p50 = pct(&lat, 0.50);
+    let _ = std::fs::remove_dir_all(&dir);
+    p50
+}
+
+/// Median loopback wire-decode latency with request tracing on or off.
+/// The client stamps a trace context on every request either way (wire
+/// v4 is additive); a server without a timeline drops it on the floor,
+/// so the delta is span emission itself — the begin/end records the
+/// execute stage adds to the decode hot path.
+fn traced_decode_p50(with_tracing: bool, smoke: bool) -> Duration {
+    let hmm = gilbert_elliott(GeParams::default());
+    let dir = std::env::temp_dir().join(format!(
+        "hmm-scan-bench-tr{}-{}",
+        with_tracing as u8,
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let timeline = if with_tracing {
+        Some(Timeline::open(&dir).expect("bench timeline"))
+    } else {
+        None
+    };
+    let coord = Arc::new(
+        Coordinator::new(CoordinatorConfig {
+            timeline: timeline.clone(),
+            ..CoordinatorConfig::native_only()
+        })
+        .expect("bench coordinator"),
+    );
+    coord.register_model("ge", hmm.clone());
+    let server = NetServer::start(
+        Arc::clone(&coord),
+        "127.0.0.1:0",
+        NetServerConfig {
+            timeline: timeline.clone(),
+            ..NetServerConfig::default()
+        },
+    )
+    .expect("bench server");
+    let addr = server.local_addr().to_string();
+    let mut client = NetClient::connect(&addr).expect("bench client");
+    let mut rng = Xoshiro256StarStar::seed_from_u64(19);
+    let t = 256;
+    let rounds = if smoke { 60 } else { 1500 };
+    let mut lat = Vec::with_capacity(rounds);
+    for i in 0..rounds {
+        let ys = sample(&hmm, t, &mut rng).observations;
+        let req = DecodeRequest::new(i as u64, "ge", ys, Algo::Smooth);
+        let t0 = Instant::now();
+        client.decode(&req).expect("decode");
+        lat.push(t0.elapsed());
+    }
+    drop(client);
+    server.shutdown(Duration::from_secs(10));
+    if let Some(tl) = &timeline {
+        tl.flush();
+    }
     lat.sort_unstable();
     let p50 = pct(&lat, 0.50);
     let _ = std::fs::remove_dir_all(&dir);
@@ -516,5 +584,36 @@ fn main() {
         overhead < 0.05 || smoke,
         "timeline recording added {:.1}% to append p50 (want < 5%)",
         overhead * 100.0
+    );
+
+    // ---- tracing overhead: request spans on the wire decode path ------
+    let tr_off = traced_decode_p50(false, smoke);
+    let tr_on = traced_decode_p50(true, smoke);
+    let tr_overhead =
+        tr_on.as_secs_f64() / tr_off.as_secs_f64().max(1e-9) - 1.0;
+    println!("\ntracing overhead (loopback wire decode, spans on vs off):");
+    println!("  tracing=off   decode p50 {:>9}", fmt_duration(tr_off));
+    println!(
+        "  tracing=on    decode p50 {:>9}   ({:+.1}%)",
+        fmt_duration(tr_on),
+        tr_overhead * 100.0
+    );
+    let mut tr_rows: Vec<Json> = Vec::new();
+    for (on, p50) in [(false, tr_off), (true, tr_on)] {
+        let mut row = BTreeMap::new();
+        row.insert("tracing".to_string(), Json::Num(on as u8 as f64));
+        row.insert("p50_us".to_string(), Json::Num(p50.as_micros() as f64));
+        tr_rows.push(Json::Obj(row));
+    }
+    hmm_scan::benchx::merge_bench_json(
+        std::path::Path::new("BENCH_net.json"),
+        "tracing",
+        tr_rows,
+    )
+    .expect("write BENCH_net.json");
+    assert!(
+        tr_overhead < 0.05 || smoke,
+        "span emission added {:.1}% to decode p50 (want < 5%)",
+        tr_overhead * 100.0
     );
 }

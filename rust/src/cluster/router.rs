@@ -47,6 +47,19 @@
 //! before any traffic cuts over, then **release** A's copy. A failed
 //! verification releases B and leaves the route on A — the session
 //! never has two serving homes.
+//!
+//! ## Request tracing
+//!
+//! The router participates in the wire-propagated trace context
+//! (protocol v4): a routed decode's pool-checkout wait is attributed as
+//! a `checkout` span under the fronting server's ambient `execute`
+//! span, and the worker-bound `NetClient`s stamp that ambient context
+//! onto every outgoing frame — so a worker's own `admission` / `queue`
+//! / `execute` spans land in *its* timeline as children of the router's
+//! execute span, and `hmm-scan trace --merge` joins the two logs into
+//! one cross-process span tree. A live migration originates its own
+//! trace (`migrate` root span) so the export → import → verify →
+//! cutover hops on both workers fold into one causal view.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
@@ -60,6 +73,7 @@ use crate::coordinator::{
 };
 use crate::error::{Error, Result};
 use crate::net::{NetClient, WireService};
+use crate::obs::span::StageSpan;
 use crate::obs::{Timeline, TimelineEvent};
 
 use super::placement::{ranked, slot_of};
@@ -272,12 +286,17 @@ impl ClusterRouter {
                 })
                 .expect("spawn cluster prober")
         };
+        let metrics = Arc::new(Metrics::new());
+        if let Some(tl) = &config.timeline {
+            // The router's scrape reports its own timeline's health.
+            metrics.attach_timeline(Arc::clone(tl));
+        }
         Ok(ClusterRouter {
             workers,
             sessions: Mutex::new(BTreeMap::new()),
             next_session: AtomicU64::new(0),
             rr: AtomicUsize::new(0),
-            metrics: Arc::new(Metrics::new()),
+            metrics,
             config,
             stop,
             prober: Some(prober),
@@ -395,52 +414,61 @@ impl ClusterRouter {
         }
         let src = Arc::clone(&self.workers[*home]);
         let dst = Arc::clone(&self.workers[ti]);
-        self.record(TimelineEvent::MigrateBegin {
-            session,
-            from: src.addr.clone(),
-            to: dst.addr.clone(),
+        // The whole handoff is one traced root span: the stream clients
+        // stamp its context onto every export/import/verify/release hop,
+        // so both workers' spans fold under it in a merged timeline.
+        let span =
+            StageSpan::begin_root(self.config.timeline.as_ref(), "migrate");
+        let out = span.enter(|| {
+            self.record(TimelineEvent::MigrateBegin {
+                session,
+                from: src.addr.clone(),
+                to: dst.addr.clone(),
+            });
+            // Compact-on-A: one self-contained checkpoint + meta.
+            let (meta, snapshot, len_a) =
+                self.on_worker_stream(&src, |c| c.export(session))?;
+            let model = meta.model.clone();
+            // Restore-on-B.
+            let len_b = self
+                .on_worker_stream(&dst, |c| c.import(session, meta, snapshot))?;
+            // Verify before cutover: B's own Stat must report exactly the
+            // state A exported — length and model — or traffic stays on A.
+            let verified = len_b == len_a && {
+                let reply = self.on_worker_stream(&dst, |c| c.stat(session))?;
+                matches!(
+                    &reply,
+                    StreamReply::Stats { len, model: m, .. }
+                        if *len == len_a && *m == model
+                )
+            };
+            if !verified {
+                let _ = self.on_worker_stream(&dst, |c| c.release(session));
+                return Err(Error::coordinator(format!(
+                    "migration of session {session} to {target} failed \
+                     verification; route unchanged"
+                )));
+            }
+            self.record(TimelineEvent::MigrateVerify {
+                session,
+                to: dst.addr.clone(),
+            });
+            // Cut over, then release A's copy (best effort — if A is dying
+            // anyway its copy is unreachable and harmless: the router's id
+            // space never re-issues the id).
+            let from = src.addr.clone();
+            *home = ti;
+            self.metrics.on_session_migrated();
+            self.record(TimelineEvent::MigrateCutover {
+                session,
+                from,
+                to: dst.addr.clone(),
+            });
+            let _ = self.on_worker_stream(&src, |c| c.release(session));
+            Ok(())
         });
-        // Compact-on-A: one self-contained checkpoint + meta.
-        let (meta, snapshot, len_a) =
-            self.on_worker_stream(&src, |c| c.export(session))?;
-        let model = meta.model.clone();
-        // Restore-on-B.
-        let len_b = self
-            .on_worker_stream(&dst, |c| c.import(session, meta, snapshot))?;
-        // Verify before cutover: B's own Stat must report exactly the
-        // state A exported — length and model — or traffic stays on A.
-        let verified = len_b == len_a && {
-            let reply = self.on_worker_stream(&dst, |c| c.stat(session))?;
-            matches!(
-                &reply,
-                StreamReply::Stats { len, model: m, .. }
-                    if *len == len_a && *m == model
-            )
-        };
-        if !verified {
-            let _ = self.on_worker_stream(&dst, |c| c.release(session));
-            return Err(Error::coordinator(format!(
-                "migration of session {session} to {target} failed \
-                 verification; route unchanged"
-            )));
-        }
-        self.record(TimelineEvent::MigrateVerify {
-            session,
-            to: dst.addr.clone(),
-        });
-        // Cut over, then release A's copy (best effort — if A is dying
-        // anyway its copy is unreachable and harmless: the router's id
-        // space never re-issues the id).
-        let from = src.addr.clone();
-        *home = ti;
-        self.metrics.on_session_migrated();
-        self.record(TimelineEvent::MigrateCutover {
-            session,
-            from,
-            to: dst.addr.clone(),
-        });
-        let _ = self.on_worker_stream(&src, |c| c.release(session));
-        Ok(())
+        span.finish_with(false, format!("session={session}"));
+        out
     }
 
     /// Place a new session: allocate a router id, rank the Up workers
@@ -625,7 +653,13 @@ impl ClusterRouter {
         w: &Worker,
         req: DecodeRequest,
     ) -> Result<DecodeResponse> {
-        let mut client = self.checkout(w)?;
+        // The pool-checkout wait is its own stage under the fronting
+        // server's ambient execute span (inert when untraced).
+        let co =
+            StageSpan::begin(self.config.timeline.as_ref(), "checkout");
+        let checked = self.checkout(w);
+        co.finish_with(false, w.addr.clone());
+        let mut client = checked?;
         let t0 = Instant::now();
         let out = client.decode(&req);
         self.metrics.on_worker_call(&w.addr, t0.elapsed());
@@ -1328,6 +1362,177 @@ mod tests {
         assert!(front.shutdown(Duration::from_secs(5)));
         server_a.shutdown(Duration::from_secs(5));
         server_b.shutdown(Duration::from_secs(5));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The tracing acceptance bar end to end: a routed decode and a
+    /// live migration each produce — across the router's and both
+    /// workers' timelines — one merged span tree whose parent/child
+    /// links cross process boundaries (the router's execute span
+    /// parents the worker's spans), with stage latencies summing
+    /// within the wall-clock envelope.
+    #[test]
+    fn merged_timelines_link_spans_across_processes() {
+        use crate::obs::{merge_records, read_events, trace_views, Timeline};
+
+        fn traced_worker(
+            dir: std::path::PathBuf,
+        ) -> (Arc<Timeline>, NetServer, String) {
+            let tl = Timeline::open(dir).unwrap();
+            let c = Coordinator::new(CoordinatorConfig::native_only()).unwrap();
+            c.register_model("ge", gilbert_elliott(GeParams::default()));
+            let server = NetServer::start(
+                Arc::new(c),
+                "127.0.0.1:0",
+                NetServerConfig {
+                    exec_threads: 2,
+                    read_timeout: Duration::from_millis(50),
+                    timeline: Some(Arc::clone(&tl)),
+                    ..NetServerConfig::default()
+                },
+            )
+            .unwrap();
+            let addr = server.local_addr().to_string();
+            (tl, server, addr)
+        }
+
+        let dir = crate::store::testutil::tempdir("cluster-trace");
+        let (wa_tl, server_a, addr_a) = traced_worker(dir.join("wa"));
+        let (wb_tl, server_b, addr_b) = traced_worker(dir.join("wb"));
+        let rt_tl = Timeline::open(dir.join("rt")).unwrap();
+        let mut cfg = ClusterConfig::new(vec![addr_a.clone(), addr_b.clone()]);
+        cfg.probe_interval = Duration::from_secs(300);
+        cfg.timeline = Some(Arc::clone(&rt_tl));
+        let router = Arc::new(ClusterRouter::new(cfg).unwrap());
+        let front = NetServer::start(
+            Arc::clone(&router),
+            "127.0.0.1:0",
+            NetServerConfig {
+                timeline: Some(Arc::clone(&rt_tl)),
+                ..NetServerConfig::default()
+            },
+        )
+        .unwrap();
+        let mut client =
+            NetClient::connect(front.local_addr().to_string()).unwrap();
+
+        let t0 = Instant::now();
+        client
+            .decode(&DecodeRequest::new(1, "ge", vec![0, 1, 1, 0], Algo::Smooth))
+            .unwrap();
+        let envelope_us = t0.elapsed().as_micros() as u64;
+
+        // A routed session whose live migration crosses both workers.
+        let sid = client.open("ge", SessionOptions::default(), 0).unwrap();
+        client.append(sid, &[0, 1, 1]).unwrap();
+        let here = router.session_home(sid).unwrap();
+        let there =
+            if here == addr_a { addr_b.clone() } else { addr_a.clone() };
+        router.migrate_session(sid, &there).unwrap();
+        client.append(sid, &[1, 0]).unwrap();
+        client.close(sid).unwrap();
+
+        drop(client);
+        assert!(front.shutdown(Duration::from_secs(5)));
+        server_a.shutdown(Duration::from_secs(5));
+        server_b.shutdown(Duration::from_secs(5));
+        rt_tl.flush();
+        wa_tl.flush();
+        wb_tl.flush();
+
+        let sources = vec![
+            ("router".to_string(), read_events(rt_tl.dir()).unwrap()),
+            ("worker_a".to_string(), read_events(wa_tl.dir()).unwrap()),
+            ("worker_b".to_string(), read_events(wb_tl.dir()).unwrap()),
+        ];
+        let merged = merge_records(&sources);
+        let views = trace_views(&merged);
+
+        // The routed decode: exactly one trace carries a checkout span.
+        let decode = views
+            .iter()
+            .filter(|v| v.spans.iter().any(|s| s.stage == "checkout"))
+            .collect::<Vec<_>>();
+        assert_eq!(decode.len(), 1, "exactly one decode went through");
+        let decode = decode[0];
+        assert!(!decode.torn, "every decode span must have closed");
+        let rt_exec = decode
+            .spans
+            .iter()
+            .find(|s| s.source == "router" && s.stage == "execute")
+            .expect("router execute span");
+        let worker_spans: Vec<_> = decode
+            .spans
+            .iter()
+            .filter(|s| s.source.starts_with("worker"))
+            .collect();
+        assert!(
+            !worker_spans.is_empty(),
+            "the decode tree must cross into a worker process"
+        );
+        for s in &worker_spans {
+            assert_eq!(
+                s.parent, rt_exec.span,
+                "worker {} span must be a child of the router execute span",
+                s.stage
+            );
+        }
+        let worker_stages: std::collections::BTreeSet<&str> =
+            worker_spans.iter().map(|s| s.stage.as_str()).collect();
+        assert!(worker_stages.contains("execute"));
+        // Stage attribution stays inside the causal envelope: the
+        // router-side stages sum within the client's wall clock, and
+        // the worker-side stages nest inside the router execute span.
+        let rt_sum: u64 = decode
+            .spans
+            .iter()
+            .filter(|s| s.source == "router" && s.parent == 0)
+            .map(|s| s.us.unwrap())
+            .sum();
+        assert!(
+            rt_sum <= envelope_us,
+            "router stages ({rt_sum}us) exceed the wall clock \
+             ({envelope_us}us)"
+        );
+        let worker_sum: u64 =
+            worker_spans.iter().map(|s| s.us.unwrap()).sum();
+        assert!(
+            worker_sum <= rt_exec.us.unwrap(),
+            "worker stages ({worker_sum}us) exceed the router execute \
+             span ({}us)",
+            rt_exec.us.unwrap()
+        );
+
+        // The migration: a router-originated root span whose children
+        // (the export/import/verify/release hops) span both workers.
+        let migrate = views
+            .iter()
+            .find(|v| v.spans.iter().any(|s| s.stage == "migrate"))
+            .expect("the migration trace");
+        assert!(!migrate.torn);
+        let root = migrate
+            .spans
+            .iter()
+            .find(|s| s.stage == "migrate")
+            .unwrap();
+        assert_eq!(root.source, "router");
+        assert!(root.detail.contains(&format!("session={sid}")));
+        let hops: Vec<_> = migrate
+            .spans
+            .iter()
+            .filter(|s| s.parent == root.span && s.stage == "execute")
+            .collect();
+        let hop_verbs: std::collections::BTreeSet<&str> =
+            hops.iter().map(|s| s.detail.as_str()).collect();
+        assert!(hop_verbs.contains("export"), "hops: {hop_verbs:?}");
+        assert!(hop_verbs.contains("import"), "hops: {hop_verbs:?}");
+        let hop_sources: std::collections::BTreeSet<&str> =
+            hops.iter().map(|s| s.source.as_str()).collect();
+        assert_eq!(
+            hop_sources.len(),
+            2,
+            "the migration must touch both workers: {hop_sources:?}"
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -2,8 +2,10 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+use crate::obs::Timeline;
 
 /// Cap on retained latency samples: percentiles are computed over the
 /// most recent window (ring overwrite), so a long-lived server's memory
@@ -29,10 +31,118 @@ impl SampleWindow {
     }
 }
 
+/// Upper bounds (µs) of the cumulative wire-latency histogram: the
+/// distinct integer roundings of √2ᵏ — two buckets per octave — from
+/// 1µs to 2³²µs (~71 minutes). A sample lands in the first bucket whose
+/// bound is ≥ the sample (bounds are inclusive); anything past the last
+/// bound lands in a separate overflow slot.
+const HIST_BOUNDS: [u64; 64] = [
+    1, 2, 3, 4, 6, 8, 11, 16, 23, 32, 45, 64, 91, 128, 181, 256, 362, 512,
+    724, 1024, 1448, 2048, 2896, 4096, 5793, 8192, 11_585, 16_384, 23_170,
+    32_768, 46_341, 65_536, 92_682, 131_072, 185_364, 262_144, 370_728,
+    524_288, 741_455, 1_048_576, 1_482_910, 2_097_152, 2_965_821, 4_194_304,
+    5_931_642, 8_388_608, 11_863_283, 16_777_216, 23_726_566, 33_554_432,
+    47_453_133, 67_108_864, 94_906_266, 134_217_728, 189_812_531,
+    268_435_456, 379_625_062, 536_870_912, 759_250_125, 1_073_741_824,
+    1_518_500_250, 2_147_483_648, 3_037_000_499, 4_294_967_296,
+];
+
+/// Fixed verb slots for the per-verb wire histograms, ascending (the
+/// scrape renders them in this order). Covers every verb the net layer
+/// times today; a verb not in the table shares the trailing `stream`
+/// slot rather than being dropped.
+const WIRE_VERBS: [&str; 12] = [
+    "append", "close", "decode", "export", "import", "open", "open_at",
+    "ping", "release", "scrape", "stat", "stream",
+];
+
+/// Cumulative log-bucketed latency histogram: one counter per
+/// [`HIST_BOUNDS`] bound plus an overflow slot, and an exact running
+/// maximum. Recording is lock-free (one relaxed increment plus a
+/// relaxed `fetch_max`) and the store is O(1) regardless of volume, so
+/// unlike [`SampleWindow`] it never forgets an early outlier —
+/// percentiles are instead quantized up to the bucket's bound (at most
+/// a √2 overestimate).
+#[derive(Debug)]
+struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BOUNDS.len() + 1],
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    // Manual: `[T; 65]` has no derived `Default` (std stops at 32).
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    /// Record one latency sample, µs.
+    fn record(&self, us: u64) {
+        let idx = HIST_BOUNDS.partition_point(|&b| b < us);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Total samples recorded (sum over every bucket).
+    fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Nearest-rank percentile over loaded bucket `counts` (64 bounds +
+    /// overflow): the upper bound of the bucket holding the sample at
+    /// rank `floor((n-1)·p)+1` — the same rank the old sample-window
+    /// `pct` picked — or the exact maximum when that rank falls in the
+    /// overflow bucket.
+    fn percentile(counts: &[u64], max_us: u64, p: f64) -> u64 {
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((total - 1) as f64 * p).floor() as u64 + 1;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return HIST_BOUNDS.get(i).copied().unwrap_or(max_us);
+            }
+        }
+        max_us
+    }
+
+    /// Snapshot this histogram into the per-verb stats view.
+    fn stats(&self, verb: &str) -> WireVerbStats {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let max_us = self.max_us.load(Ordering::Relaxed);
+        let mut cum = 0u64;
+        let mut buckets = Vec::new();
+        for (i, &c) in counts[..HIST_BOUNDS.len()].iter().enumerate() {
+            cum += c;
+            if c > 0 {
+                buckets.push((HIST_BOUNDS[i], cum));
+            }
+        }
+        WireVerbStats {
+            verb: verb.to_string(),
+            count: counts.iter().sum(),
+            p50_us: Self::percentile(&counts, max_us, 0.50),
+            p99_us: Self::percentile(&counts, max_us, 0.99),
+            max_us,
+            buckets,
+        }
+    }
+}
+
 /// Log-scaled latency histogram (microseconds, ~2 buckets per decade)
 /// plus counters. All methods are thread-safe; snapshots are consistent
-/// enough for reporting (counters are monotone; percentiles cover the
-/// most recent [`MAX_LATENCY_SAMPLES`] samples).
+/// enough for reporting (counters are monotone; decode/append/restore
+/// percentiles cover the most recent [`MAX_LATENCY_SAMPLES`] samples,
+/// while the per-verb wire percentiles come from cumulative
+/// [`LatencyHistogram`]s and cover the process lifetime).
 ///
 /// The `sessions_* / append* / suffix_*` family instruments the
 /// streaming path: per-append latency and the width of the forward
@@ -70,9 +180,13 @@ pub struct Metrics {
     conns_closed: AtomicU64,
     conns_refused: AtomicU64,
     wire_inflight: AtomicU64,
-    /// Per-verb wire serving latency (decode / open / append / stat /
-    /// close): request count plus a bounded sample window each.
-    wire_verbs: Mutex<BTreeMap<&'static str, (u64, SampleWindow)>>,
+    /// Per-verb wire serving latency: one lock-free cumulative
+    /// histogram per [`WIRE_VERBS`] slot (decode / open / append / stat
+    /// / close / ...), index-aligned with that table.
+    wire_verbs: [LatencyHistogram; WIRE_VERBS.len()],
+    /// Event timeline whose health gauges snapshots surface (attached
+    /// by the owning coordinator or router when one is configured).
+    timeline: Mutex<Option<Arc<Timeline>>>,
     sessions_placed: AtomicU64,
     sessions_migrated: AtomicU64,
     decode_failovers: AtomicU64,
@@ -84,20 +198,28 @@ pub struct Metrics {
     worker_links: Mutex<BTreeMap<String, (u64, SampleWindow)>>,
 }
 
-/// Per-verb wire latency percentiles over the retained sample window
-/// (see [`MetricsSnapshot::wire_verbs`]).
+/// Per-verb wire latency derived from the cumulative log-bucketed
+/// histogram (see [`MetricsSnapshot::wire_verbs`]). Percentiles are
+/// quantized up to the holding bucket's bound — at most a √2
+/// overestimate — and cover every request ever served, not a recent
+/// window; the maximum is exact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireVerbStats {
-    /// Verb name ("decode", "open", "append", "stat", "close").
+    /// Verb name ("decode", "open", "append", "stat", "close", ...).
     pub verb: String,
     /// Requests of this verb served over the wire.
     pub count: u64,
-    /// Median wire serving latency over the window, µs.
+    /// Median wire serving latency, µs (bucket upper bound).
     pub p50_us: u64,
-    /// 99th-percentile wire serving latency over the window, µs.
+    /// 99th-percentile wire serving latency, µs (bucket upper bound).
     pub p99_us: u64,
-    /// Maximum wire serving latency over the window, µs.
+    /// Maximum wire serving latency, µs (exact).
     pub max_us: u64,
+    /// Cumulative histogram: `(upper bound µs, samples ≤ bound)`,
+    /// ascending, bounds whose own bucket is empty omitted. Samples
+    /// past the last bound show up only in `count` (the scrape's
+    /// `le_inf` line).
+    pub buckets: Vec<(u64, u64)>,
 }
 
 /// Per-worker router→worker wire latency percentiles over the retained
@@ -214,6 +336,15 @@ pub struct MetricsSnapshot {
     /// Requests shed by the per-connection in-flight quota (a subset of
     /// `rejects_sent`).
     pub quota_sheds: u64,
+    /// Sequence number of the last durably written timeline event (0
+    /// when no timeline is attached).
+    pub timeline_seq: u64,
+    /// Timeline events dropped because the bounded emit channel was
+    /// full — the overload signal for the observability pipeline
+    /// itself, previously visible only on replay.
+    pub timeline_dropped: u64,
+    /// Timeline segment files on disk (0 when no timeline is attached).
+    pub timeline_segments: u64,
     /// Per-worker router→worker wire latency, ascending by address.
     pub worker_links: Vec<WorkerLinkStats>,
     /// Process-wide linear-algebra kernel dispatch counters (specialized
@@ -261,8 +392,10 @@ impl MetricsSnapshot {
     /// value (integers for counters/gauges/percentiles, `{:.3}` floats
     /// for the occupancy ratios). Dynamic families embed their member
     /// in the key — `suffix_width_le_<bound>`, `wire_verb_<verb>_<stat>`,
-    /// `worker_<address>_<stat>` (addresses sanitized to the key
-    /// alphabet) — so the output stays line-oriented and
+    /// `wire_verb_<verb>_us_bucket_le_<bound>` (cumulative histogram
+    /// lines, `le_inf` carrying the total), `worker_<address>_<stat>`
+    /// (addresses sanitized to the key alphabet) — so the output stays
+    /// line-oriented and
     /// `grep`/`awk`-parseable. Keys are append-only across releases:
     /// scrapers may rely on a present key keeping its meaning. The
     /// format is specified in `docs/OBSERVABILITY.md`.
@@ -313,6 +446,9 @@ impl MetricsSnapshot {
         kv("rejects_sent", self.rejects_sent);
         kv("deadline_sheds", self.deadline_sheds);
         kv("quota_sheds", self.quota_sheds);
+        kv("timeline_seq", self.timeline_seq);
+        kv("timeline_dropped", self.timeline_dropped);
+        kv("timeline_segments", self.timeline_segments);
         kv("kernel_spec_d2", self.kernels.spec_d2);
         kv("kernel_spec_d4", self.kernels.spec_d4);
         kv("kernel_spec_d8", self.kernels.spec_d8);
@@ -337,6 +473,14 @@ impl MetricsSnapshot {
             let _ = writeln!(out, "wire_verb_{verb}_p50_us {}", v.p50_us);
             let _ = writeln!(out, "wire_verb_{verb}_p99_us {}", v.p99_us);
             let _ = writeln!(out, "wire_verb_{verb}_max_us {}", v.max_us);
+            for (bound, cum) in &v.buckets {
+                let _ = writeln!(
+                    out,
+                    "wire_verb_{verb}_us_bucket_le_{bound} {cum}"
+                );
+            }
+            let _ =
+                writeln!(out, "wire_verb_{verb}_us_bucket_le_inf {}", v.count);
         }
         for w in &self.worker_links {
             let worker = sanitize_key(&w.worker);
@@ -492,7 +636,9 @@ impl Metrics {
     }
 
     /// Record one wire request answered: `verb` serving latency from
-    /// frame decoded to response queued.
+    /// frame decoded to response queued, added lock-free to that verb's
+    /// cumulative histogram (verbs outside [`WIRE_VERBS`] share the
+    /// `stream` slot).
     pub fn on_wire_done(&self, verb: &'static str, latency: Duration) {
         // Guard against unpaired calls: the gauge must never wrap.
         let _ = self.wire_inflight.fetch_update(
@@ -500,10 +646,19 @@ impl Metrics {
             Ordering::Relaxed,
             |v| v.checked_sub(1),
         );
-        let mut verbs = self.wire_verbs.lock().unwrap();
-        let entry = verbs.entry(verb).or_insert_with(Default::default);
-        entry.0 += 1;
-        entry.1.push(latency.as_micros().min(u128::from(u64::MAX)) as u64);
+        let idx = WIRE_VERBS
+            .binary_search(&verb)
+            .unwrap_or(WIRE_VERBS.len() - 1);
+        self.wire_verbs[idx]
+            .record(latency.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Attach the event timeline whose health gauges (`timeline_seq`,
+    /// `timeline_dropped`, `timeline_segments`) snapshots should
+    /// surface — silent event drops become a scrapeable counter
+    /// instead of a post-hoc replay surprise.
+    pub fn attach_timeline(&self, timeline: Arc<Timeline>) {
+        *self.timeline.lock().unwrap() = Some(timeline);
     }
 
     /// Record one session placed on a worker by the cluster router.
@@ -576,23 +731,19 @@ impl Metrics {
             }
         };
         let hist = self.suffix_widths.lock().unwrap().clone();
-        let wire_verbs: Vec<WireVerbStats> = self
-            .wire_verbs
-            .lock()
-            .unwrap()
+        // Only verbs that have actually served a request appear, so a
+        // pure decode server doesn't scrape eleven all-zero families.
+        let wire_verbs: Vec<WireVerbStats> = WIRE_VERBS
             .iter()
-            .map(|(verb, (count, window))| {
-                let mut lat = window.samples.clone();
-                lat.sort_unstable();
-                WireVerbStats {
-                    verb: verb.to_string(),
-                    count: *count,
-                    p50_us: pct(&lat, 0.50),
-                    p99_us: pct(&lat, 0.99),
-                    max_us: lat.last().copied().unwrap_or(0),
-                }
-            })
+            .zip(self.wire_verbs.iter())
+            .filter(|(_, h)| h.count() > 0)
+            .map(|(verb, h)| h.stats(verb))
             .collect();
+        let (timeline_seq, timeline_dropped, timeline_segments) =
+            match self.timeline.lock().unwrap().as_ref() {
+                Some(tl) => (tl.last_seq(), tl.dropped(), tl.segments()),
+                None => (0, 0, 0),
+            };
         let worker_links: Vec<WorkerLinkStats> = self
             .worker_links
             .lock()
@@ -660,6 +811,9 @@ impl Metrics {
             rejects_sent: self.rejects_sent.load(Ordering::Relaxed),
             deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
             quota_sheds: self.quota_sheds.load(Ordering::Relaxed),
+            timeline_seq,
+            timeline_dropped,
+            timeline_segments,
             worker_links,
             kernels: crate::linalg::kernels::kernel_stats(),
         }
@@ -792,14 +946,96 @@ mod tests {
         assert_eq!(s.wire_verbs.len(), 2);
         let append = s.wire_verbs.iter().find(|v| v.verb == "append").unwrap();
         assert_eq!(append.count, 4);
-        assert_eq!(append.p50_us, 20);
+        // Samples 10/20/30/40 land in buckets ≤11/23/32/45; percentiles
+        // report the holding bucket's upper bound, the max is exact.
+        assert_eq!(append.p50_us, 23);
+        assert_eq!(append.p99_us, 32);
         assert_eq!(append.max_us, 40);
+        assert_eq!(append.buckets, vec![(11, 1), (23, 2), (32, 3), (45, 4)]);
         let decode = s.wire_verbs.iter().find(|v| v.verb == "decode").unwrap();
         assert_eq!((decode.count, decode.max_us), (1, 120));
+        assert_eq!(decode.p50_us, 128, "one sample: its bucket's bound");
         // Unpaired done calls clamp at zero instead of wrapping.
         m.on_wire_done("decode", Duration::ZERO);
         m.on_wire_done("decode", Duration::ZERO);
         assert_eq!(m.snapshot().wire_inflight, 0);
+    }
+
+    #[test]
+    fn latency_histogram_buckets_and_percentiles() {
+        // The percentile walk and partition_point both rely on the
+        // bounds table being strictly ascending.
+        assert!(HIST_BOUNDS.windows(2).all(|w| w[0] < w[1]));
+        let h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.stats("x").p50_us, 0, "empty histogram reads zero");
+        h.record(23);
+        assert_eq!(h.stats("x").buckets, vec![(23, 1)], "bounds inclusive");
+        let h = LatencyHistogram::default();
+        h.record(0);
+        h.record(1);
+        h.record(5_000_000_000); // past the last bound → overflow slot
+        h.record(6_000_000_000);
+        let s = h.stats("x");
+        assert_eq!(s.count, 4);
+        assert_eq!(s.buckets, vec![(1, 2)], "overflow never gets a bound");
+        assert_eq!(s.p50_us, 1);
+        assert_eq!(s.p99_us, 6_000_000_000, "overflow reports the exact max");
+        assert_eq!(s.max_us, 6_000_000_000);
+    }
+
+    #[test]
+    fn unknown_wire_verbs_share_the_stream_slot() {
+        let m = Metrics::new();
+        m.on_wire_start();
+        m.on_wire_done("somenewverb", Duration::from_micros(7));
+        let s = m.snapshot();
+        assert_eq!(s.wire_verbs.len(), 1);
+        let v = s.wire_verbs.iter().find(|v| v.verb == "stream").unwrap();
+        assert_eq!((v.count, v.p50_us, v.max_us), (1, 8, 7));
+    }
+
+    #[test]
+    fn timeline_gauges_surface_and_move_after_forced_drops() {
+        use crate::obs::{Timeline, TimelineEvent};
+        let dir = crate::store::testutil::tempdir("metrics-tl");
+        let tl = Timeline::open(&dir).unwrap();
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.timeline_seq, s.timeline_dropped, s.timeline_segments),
+            (0, 0, 0),
+            "no timeline attached: gauges stay zero"
+        );
+        m.attach_timeline(Arc::clone(&tl));
+        tl.record(TimelineEvent::ConnRefuse);
+        tl.flush();
+        let s = m.snapshot();
+        assert_eq!((s.timeline_seq, s.timeline_dropped), (1, 0));
+        assert_eq!(s.timeline_segments, 1);
+        // Stall the writer and overrun the bounded channel: the drop
+        // gauge must move and land on the scrape verbatim.
+        let release = tl.stall();
+        for _ in 0..5000 {
+            tl.record(TimelineEvent::ConnRefuse);
+        }
+        drop(release);
+        tl.flush();
+        let s = m.snapshot();
+        assert!(s.timeline_dropped > 0, "channel never filled");
+        assert!(s.timeline_seq > 1, "surviving records advanced the seq");
+        let text = s.render_text();
+        for (key, want) in [
+            ("timeline_seq", s.timeline_seq),
+            ("timeline_dropped", s.timeline_dropped),
+            ("timeline_segments", s.timeline_segments),
+        ] {
+            assert!(
+                text.lines().any(|l| l == format!("{key} {want}")),
+                "scrape missing {key} {want}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -952,6 +1188,14 @@ mod tests {
         assert_eq!(get("wire_inflight"), "0");
         assert_eq!(get("wire_verb_decode_count"), "1");
         assert_eq!(get("wire_verb_decode_max_us"), "25");
+        // Cumulative histogram lines: 25µs is ≤ the 32µs bound, and the
+        // le_inf tail always equals the verb count.
+        assert_eq!(get("wire_verb_decode_us_bucket_le_32"), "1");
+        assert_eq!(get("wire_verb_decode_us_bucket_le_inf"), "1");
+        // Timeline gauges render even with no timeline attached.
+        assert_eq!(get("timeline_seq"), "0");
+        assert_eq!(get("timeline_dropped"), "0");
+        assert_eq!(get("timeline_segments"), "0");
         assert_eq!(get("worker_127_0_0_1_9001_count"), "1");
         assert_eq!(get("worker_127_0_0_1_9001_max_us"), "30");
         assert_eq!(get("suffix_width_le_4"), "1");

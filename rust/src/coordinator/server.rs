@@ -17,6 +17,7 @@ use crate::engine::{
 use crate::error::{Error, Result};
 use crate::hmm::Hmm;
 use crate::kalman::{KalmanEngine, Lgssm};
+use crate::obs::span::StageSpan;
 use crate::obs::{Timeline, TimelineEvent};
 use crate::runtime::{ArtifactExec, Manifest, Registry, Value};
 use crate::scan::ScanOptions;
@@ -742,6 +743,11 @@ impl Coordinator {
             _ => None,
         };
         let metrics = Arc::new(Metrics::new());
+        if let Some(tl) = &config.timeline {
+            // Surface the timeline's own health (seq / drops / segment
+            // count) on this coordinator's scrape.
+            metrics.attach_timeline(Arc::clone(tl));
+        }
         let store: Arc<dyn SessionStore> = match &config.session_store {
             Some(dir) => {
                 let mut disk = DiskStore::open(dir.clone())?
@@ -750,6 +756,20 @@ impl Coordinator {
                 disk.set_sync_observer(move |files, records| {
                     m.on_sync_batch(files, records)
                 });
+                if let Some(tl) = &config.timeline {
+                    // Attribute each append's blocked-on-fsync time (the
+                    // group-commit wait) to the ambient request span —
+                    // the observer runs on the appending thread, where
+                    // that context lives.
+                    let tl = Arc::clone(tl);
+                    disk.set_wait_observer(move |elapsed| {
+                        crate::obs::span::annotate(
+                            Some(&tl),
+                            "sync-wait",
+                            elapsed,
+                        )
+                    });
+                }
                 Arc::new(disk)
             }
             None => Arc::new(MemStore::new()),
@@ -1292,7 +1312,18 @@ impl Coordinator {
                     // chunk would duplicate hot sessions' observations
                     // in RAM.
                     if !ys.is_empty() && self.store.durable() {
-                        self.store.log_append(session, &ys)?;
+                        // Attributed as its own stage under the ambient
+                        // request span (inert when untraced): the durable
+                        // log write, including any group-commit fsync it
+                        // waits out (the wait itself is annotated
+                        // separately by the store's wait observer).
+                        let sp = StageSpan::begin(
+                            self.registry.timeline.as_ref(),
+                            "store-append",
+                        );
+                        let logged = self.store.log_append(session, &ys);
+                        sp.finish();
+                        logged?;
                     }
                     s.push(&ys)?;
                     self.registry.recharge(&entry, s.len());
@@ -2633,6 +2664,65 @@ mod tests {
             "closed session must replay away"
         );
         assert_eq!(timeline.dropped(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Durable appends executed under an ambient request span emit a
+    /// `store-append` span and a `sync-wait` annotation, both parented
+    /// to the caller's span — fsync latency is attributed to the
+    /// request that paid it, not lost inside the store.
+    #[test]
+    fn durable_appends_emit_store_spans_under_ambient_trace() {
+        use crate::obs::span;
+        use crate::obs::{merge_records, read_events, trace_views};
+
+        let dir = crate::store::testutil::tempdir("coord-store-span");
+        let tl_dir = dir.join("timeline");
+        let timeline = Timeline::open(&tl_dir).unwrap();
+        let c = Coordinator::new(CoordinatorConfig {
+            session_store: Some(dir.join("store")),
+            timeline: Some(Arc::clone(&timeline)),
+            ..CoordinatorConfig::native_only()
+        })
+        .unwrap();
+        c.register_model("ge", gilbert_elliott(GeParams::default()));
+        let StreamReply::Opened { session } =
+            c.stream(StreamRequest::open(1, "ge", 0)).unwrap().reply
+        else {
+            panic!()
+        };
+
+        // Simulate the serving path: the net server would make the
+        // execute span ambient before calling into the coordinator.
+        let trace = span::fresh_id();
+        let exec = span::fresh_id();
+        span::with_span(trace, exec, || {
+            c.stream(StreamRequest::append(2, session, vec![0, 1, 1]))
+                .unwrap();
+        });
+        c.stream(StreamRequest::close(3, session)).unwrap();
+
+        timeline.flush();
+        let records = read_events(&tl_dir).unwrap();
+        let merged = merge_records(&[("coord".to_string(), records)]);
+        let views = trace_views(&merged);
+        let view = views
+            .iter()
+            .find(|v| v.trace == trace)
+            .expect("traced append produced no trace view");
+        assert!(!view.torn, "store spans left the trace torn");
+        let stages: Vec<&str> =
+            view.spans.iter().map(|s| s.stage.as_str()).collect();
+        assert!(stages.contains(&"store-append"), "stages: {stages:?}");
+        assert!(stages.contains(&"sync-wait"), "stages: {stages:?}");
+        for s in &view.spans {
+            assert_eq!(
+                s.parent, exec,
+                "stage {} must parent the ambient span",
+                s.stage
+            );
+            assert!(s.us.is_some(), "stage {} never closed", s.stage);
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

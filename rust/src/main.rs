@@ -11,6 +11,8 @@
 //!   stat       scrape a remote server's metrics as `key value` text
 //!   replay     fold an event timeline back into the registry view it
 //!              implies (docs/OBSERVABILITY.md)
+//!   trace      merge N process timelines into causally ordered
+//!              per-request span trees with stage latency attribution
 //!   cluster-demo  three-worker loopback cluster end to end: placement,
 //!              failover-by-drain, live migration, bit-identity checks
 //!   figures    regenerate the paper's figures/tables into results/
@@ -79,6 +81,7 @@ fn cli() -> Cli {
                 opt("max-inflight", "pipelined requests per connection", "32"),
                 opt("inflight-quota", "per-connection decode quota: shed instead of block past it (0 = off)", "0"),
                 opt("timeline", "event-timeline directory ('' = off)", ""),
+                opt("slow-ms", "flag request spans slower than this many ms (0 = off)", "0"),
                 opt("config", "JSON config file path", ""),
                 flag("native", "serve natively (no artifacts)"),
             ],
@@ -93,6 +96,7 @@ fn cli() -> Cli {
                 opt("t", "sequence length per request", "512"),
                 opt("conns", "concurrent client connections", "4"),
                 opt("pipeline", "requests in flight per connection", "8"),
+                opt("deadline-ms", "per-request latency budget stamped on the wire (0 = none)", "0"),
                 opt("seed", "workload RNG seed", "3405691582"),
                 opt("config", "JSON config file path", ""),
             ],
@@ -109,6 +113,7 @@ fn cli() -> Cli {
                 opt("max-inflight", "pipelined requests per client connection", "32"),
                 opt("pool", "decode connections per worker", "4"),
                 opt("timeline", "event-timeline directory ('' = off)", ""),
+                opt("slow-ms", "flag request spans slower than this many ms (0 = off)", "0"),
             ],
             vec![],
         )
@@ -124,6 +129,16 @@ fn cli() -> Cli {
             vec![
                 opt("timeline", "timeline directory to fold", ""),
                 opt("until", "stop after this sequence number (0 = all)", "0"),
+            ],
+            vec![],
+        )
+        .command(
+            "trace",
+            "merge process timelines into per-request span trees",
+            vec![
+                opt("merge", "comma-separated timeline directories to fold (router,worker,...)", ""),
+                opt("until", "stop each source after this sequence number (0 = all)", "0"),
+                flag("slow-only", "print only traces flagged slow (serve/route --slow-ms)"),
             ],
             vec![],
         )
@@ -190,6 +205,7 @@ fn run(args: &[String]) -> Result<()> {
         "route" => cmd_route(&parsed),
         "stat" => cmd_stat(&parsed),
         "replay" => cmd_replay(&parsed),
+        "trace" => cmd_trace(&parsed),
         "cluster-demo" => cmd_cluster_demo(&parsed),
         "figures" => cmd_figures(&parsed),
         "simulate" => cmd_simulate(&parsed),
@@ -297,6 +313,7 @@ fn cmd_serve(p: &hmm_scan::cli::Parsed) -> Result<()> {
             max_inflight_per_conn: p.get_usize("max-inflight")?,
             inflight_quota: p.get_usize("inflight-quota")?,
             timeline: timeline.clone(),
+            slow_ms: p.get_usize("slow-ms")? as u64,
             ..NetServerConfig::default()
         };
         let server =
@@ -405,12 +422,17 @@ fn cmd_bench_net(p: &hmm_scan::cli::Parsed) -> Result<()> {
     let t = p.get_usize("t")?;
     let conns = p.get_usize("conns")?.max(1);
     let pipeline = p.get_usize("pipeline")?.max(1);
+    let deadline_ms = match p.get_usize("deadline-ms")? as u64 {
+        0 => None,
+        ms => Some(ms),
+    };
     let seed = p.get_usize("seed")? as u64;
 
     let hmm = gilbert_elliott(config.ge);
     let local = Coordinator::new(CoordinatorConfig::native_only())?;
     local.register_model("ge", hmm.clone());
     let mut client = NetClient::connect(&addr)?;
+    client.set_deadline_ms(deadline_ms);
     client.ping()?;
     println!("connected to {addr}");
 
@@ -502,6 +524,7 @@ fn cmd_bench_net(p: &hmm_scan::cli::Parsed) -> Result<()> {
             let hmm = hmm.clone();
             joins.push(scope.spawn(move || -> Result<Vec<Duration>> {
                 let mut client = NetClient::connect(&addr)?;
+                client.set_deadline_ms(deadline_ms);
                 let mut rng =
                     Xoshiro256StarStar::seed_from_u64(seed ^ (c as u64 + 1));
                 let reqs: Vec<DecodeRequest> = (0..requests)
@@ -574,6 +597,7 @@ fn cmd_route(p: &hmm_scan::cli::Parsed) -> Result<()> {
         max_connections: p.get_usize("max-conns")?,
         max_inflight_per_conn: p.get_usize("max-inflight")?,
         timeline: timeline.clone(),
+        slow_ms: p.get_usize("slow-ms")? as u64,
         ..NetServerConfig::default()
     };
     let listen = p.get("listen").unwrap_or("127.0.0.1:0");
@@ -687,6 +711,120 @@ fn cmd_replay(p: &hmm_scan::cli::Parsed) -> Result<()> {
         state.rejects, state.drains, state.migrations, state.recovered
     );
     Ok(())
+}
+
+/// `trace`: fold N process timelines (a router's plus its workers')
+/// into one causally ordered view keyed by trace id, and print each
+/// request's span tree with per-stage latency. Parent links cross
+/// process boundaries — a worker's `execute` span nests under the
+/// router span that dispatched it. `--slow-only` keeps just the traces
+/// whose spans crossed the serving side's `--slow-ms` threshold; torn
+/// traces (a `span-begin` with no end — a crashed or killed process
+/// mid-request) are flagged rather than hidden.
+fn cmd_trace(p: &hmm_scan::cli::Parsed) -> Result<()> {
+    let dirs: Vec<String> = match p.get("merge") {
+        Some(list) if !list.is_empty() => list
+            .split(',')
+            .map(|d| d.trim().to_string())
+            .filter(|d| !d.is_empty())
+            .collect(),
+        _ => return Err(Error::usage("trace requires --merge DIR,DIR,...")),
+    };
+    let until = p.get_usize("until")? as u64;
+    let slow_only = p.flag("slow-only");
+    // Label each source with its directory name when unambiguous (span
+    // trees read `[rt]`, `[worker_a]`), the full path otherwise. Labels
+    // must stay distinct: the merge dedups replayed records by
+    // (source, seq).
+    let names: Vec<String> = dirs
+        .iter()
+        .map(|d| {
+            std::path::Path::new(d)
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| d.clone())
+        })
+        .collect();
+    let unique = names
+        .iter()
+        .collect::<std::collections::BTreeSet<_>>()
+        .len()
+        == names.len();
+    let mut inputs = Vec::new();
+    for (dir, name) in dirs.iter().zip(names) {
+        let mut records = hmm_scan::obs::read_events(dir)?;
+        if until > 0 {
+            records.retain(|r| r.seq <= until);
+        }
+        let label = if unique { name } else { dir.clone() };
+        inputs.push((label, records));
+    }
+    let merged = hmm_scan::obs::merge_records(&inputs);
+    let views = hmm_scan::obs::trace_views(&merged);
+    let (slow, torn) = (
+        views.iter().filter(|v| v.slow).count(),
+        views.iter().filter(|v| v.torn).count(),
+    );
+    let mut shown = 0usize;
+    for v in &views {
+        if slow_only && !v.slow {
+            continue;
+        }
+        shown += 1;
+        let mut line = format!("trace {:016x}", v.trace);
+        if v.slow {
+            line.push_str("  SLOW");
+        }
+        if v.torn {
+            line.push_str("  TORN");
+        }
+        println!("{line}");
+        // Roots: parent 0, or a parent whose own span record is missing
+        // (its process' timeline wasn't merged in) — still printed, at
+        // the top level, so partial merges degrade readably.
+        let ids: std::collections::BTreeSet<u64> =
+            v.spans.iter().map(|s| s.span).collect();
+        for (i, s) in v.spans.iter().enumerate() {
+            if s.parent == 0 || !ids.contains(&s.parent) {
+                print_span_tree(v, i, 1);
+            }
+        }
+    }
+    // The exact line CI's cluster tracing job parses for the counts.
+    println!(
+        "{} traces across {} timelines ({} slow, {} torn, {} shown)",
+        views.len(),
+        dirs.len(),
+        slow,
+        torn,
+        shown
+    );
+    Ok(())
+}
+
+/// Print one span and, recursively, its children (indented two spaces
+/// per hop — process boundaries show up as a `[source]` change).
+fn print_span_tree(view: &hmm_scan::obs::TraceView, idx: usize, depth: usize) {
+    let s = &view.spans[idx];
+    let us = s
+        .us
+        .map_or_else(|| "never closed".to_string(), |us| format!("{us}µs"));
+    let detail = if s.detail.is_empty() {
+        String::new()
+    } else {
+        format!("  ({})", s.detail)
+    };
+    let slow = if s.slow { "  SLOW" } else { "" };
+    println!(
+        "{:indent$}[{}] {} {us}{detail}{slow}",
+        "",
+        s.source,
+        s.stage,
+        indent = depth * 2
+    );
+    for child in view.children_of(s.span) {
+        print_span_tree(view, child, depth + 1);
+    }
 }
 
 /// `cluster-demo`: the whole distributed tier on loopback, verified.
@@ -967,6 +1105,7 @@ mod tests {
         assert!(run(&argv("route")).is_err(), "--workers is required");
         assert!(run(&argv("stat")).is_err(), "--connect is required");
         assert!(run(&argv("replay")).is_err(), "--timeline is required");
+        assert!(run(&argv("trace")).is_err(), "--merge is required");
     }
 
     #[test]
@@ -998,6 +1137,48 @@ mod tests {
         assert!(run(&argv(&format!(
             "replay --timeline {}",
             missing.display()
+        )))
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_command_smoke() {
+        use hmm_scan::obs::span::StageSpan;
+        use hmm_scan::obs::Timeline;
+        let dir = std::env::temp_dir()
+            .join(format!("hmm-scan-trace-cmd-{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let rt = dir.join("rt");
+        let wk = dir.join("wk");
+        {
+            let rt_tl = Timeline::open(&rt).unwrap();
+            let wk_tl = Timeline::open(&wk).unwrap();
+            // A cross-process pair: the worker's span parents the
+            // router's, as the real dispatch path produces.
+            let root = StageSpan::begin_root(Some(&rt_tl), "execute");
+            let child = StageSpan::begin_under(
+                Some(&wk_tl),
+                root.trace(),
+                root.id(),
+                "execute",
+            );
+            child.finish();
+            root.finish();
+            // A torn trace: a begin that never closes (killed process).
+            let open = StageSpan::begin_root(Some(&wk_tl), "queue");
+            drop(open);
+            rt_tl.flush();
+            wk_tl.flush();
+        }
+        let cmd = format!("trace --merge {},{}", rt.display(), wk.display());
+        run(&argv(&cmd)).unwrap();
+        run(&argv(&format!("{cmd} --slow-only"))).unwrap();
+        run(&argv(&format!("{cmd} --until 1"))).unwrap();
+        // A missing directory is a typed error, not a panic.
+        assert!(run(&argv(&format!(
+            "trace --merge {}",
+            dir.join("nope").display()
         )))
         .is_err());
         std::fs::remove_dir_all(&dir).ok();

@@ -32,6 +32,15 @@
 //! start a request within the budget sheds it with a retryable
 //! [`Error::Busy`] instead of serving an answer the caller has stopped
 //! waiting for.
+//!
+//! v4 addition: every outgoing decode / stream / pipelined request is
+//! stamped with a `trace` context. When the calling thread already
+//! holds an ambient span (the cluster router fanning a request out
+//! under its own execute span), that context is *propagated* — which is
+//! what links a worker's spans under the router's in the merged cluster
+//! timeline; otherwise the client *originates* a fresh trace id with
+//! parent 0. Internal traffic (ping, reconnect re-`Stat`s) stays
+//! unstamped.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -108,12 +117,25 @@ impl NetClient {
         self.deadline_ms = deadline_ms;
     }
 
-    /// Stamp the configured deadline onto an outgoing request payload.
+    /// Stamp the configured deadline and the trace context onto an
+    /// outgoing request payload. The trace is the ambient span when the
+    /// calling thread has one (propagation — the router's fan-out path)
+    /// and a freshly originated root otherwise.
     fn stamp(&self, payload: Json) -> Json {
-        match self.deadline_ms {
+        let payload = match self.deadline_ms {
             Some(ms) => wire::with_deadline_ms(payload, ms),
             None => payload,
-        }
+        };
+        let (trace, span) = crate::obs::span::current();
+        let ctx = if trace != 0 {
+            wire::TraceContext { trace_id: trace, parent_span: span }
+        } else {
+            wire::TraceContext {
+                trace_id: crate::obs::span::fresh_id(),
+                parent_span: 0,
+            }
+        };
+        wire::with_trace(payload, ctx)
     }
 
     /// Sessions this client has opened and not yet closed, with their

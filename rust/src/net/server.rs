@@ -51,6 +51,21 @@
 //!   has stopped waiting for — and `inflight_quota` converts the
 //!   per-connection backpressure gate into a load-shedding quota. See
 //!   docs/OBSERVABILITY.md.
+//! * **Request tracing (v4).** A request frame may carry a wire `trace`
+//!   context (`{trace_id, parent_span}`). When a timeline is configured
+//!   the server attributes the request's latency to stages under that
+//!   context — `admission` (arrival → in-flight slot), `queue` (work
+//!   pool dispatch → job start) and `execute` (the service call, with
+//!   kernel-dispatch counter deltas in the detail) — as
+//!   `span-begin`/`span-end` pairs, and makes the execute span the
+//!   ambient context so downstream layers (router pool checkout, store
+//!   append, group-commit sync wait) and any [`NetClient`] hop made on
+//!   this thread nest under it, linking spans across processes. A
+//!   request that outlives the `slow_ms` budget is flagged on its
+//!   execute span so `hmm-scan trace --merge --slow-only` can surface
+//!   outliers. Untraced (v1..=v3) requests emit nothing.
+//!
+//! [`NetClient`]: crate::net::NetClient
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -67,6 +82,7 @@ use crate::coordinator::{
 use crate::error::{Error, Result};
 use crate::exec::ThreadPool;
 use crate::jsonx::Json;
+use crate::obs::span::{self, StageSpan};
 use crate::obs::{Timeline, TimelineEvent};
 
 use super::wire::{self, Frame, FrameKind};
@@ -148,6 +164,12 @@ pub struct NetServerConfig {
     /// request sheds are recorded to. `None` (the default) disables
     /// emission entirely; recording is non-blocking either way.
     pub timeline: Option<Arc<Timeline>>,
+    /// Slow-request capture threshold: a traced request whose total
+    /// residence (frame arrival → service call returned) reaches this
+    /// many milliseconds has its `execute` span flagged slow, so the
+    /// merged-timeline tool can print only the outliers. `0` (the
+    /// default) disables the flag.
+    pub slow_ms: u64,
 }
 
 impl Default for NetServerConfig {
@@ -161,6 +183,7 @@ impl Default for NetServerConfig {
             max_frame_payload: wire::DEFAULT_MAX_PAYLOAD,
             inflight_quota: 0,
             timeline: None,
+            slow_ms: 0,
         }
     }
 }
@@ -585,6 +608,19 @@ fn serve_connection(
                     }
                 };
                 let deadline = wire::deadline_ms_from_json(&frame.payload);
+                let ctx = wire::trace_from_json(&frame.payload)
+                    .unwrap_or(wire::TraceContext {
+                        trace_id: 0,
+                        parent_span: 0,
+                    });
+                // Admission: the wait for an in-flight slot (inert for
+                // untraced requests and without a timeline).
+                let admission = StageSpan::begin_under(
+                    cfg.timeline.as_ref(),
+                    ctx.trace_id,
+                    ctx.parent_span,
+                    "admission",
+                );
                 // Take an in-flight slot *before* spawning: at the cap
                 // this blocks the reader (the backpressure) — unless an
                 // overload quota is set, in which case the request is
@@ -593,6 +629,7 @@ fn serve_connection(
                     cfg.max_inflight_per_conn,
                     cfg.inflight_quota,
                 ) {
+                    admission.finish_with(false, "quota-shed".to_string());
                     shared.service.metrics().on_quota_shed();
                     shared.service.metrics().on_reject();
                     let msg = "server overloaded: in-flight quota reached";
@@ -608,6 +645,7 @@ fn serve_connection(
                 // A deadline that lapsed while the reader was blocked on
                 // the slot: shed before touching the wire gauge.
                 if deadline_expired(arrival, deadline) {
+                    admission.finish_with(false, "deadline-shed".to_string());
                     inflight.release();
                     shared.service.metrics().on_deadline_shed();
                     shared.service.metrics().on_reject();
@@ -621,35 +659,51 @@ fn serve_connection(
                     ));
                     continue;
                 }
+                admission.finish();
                 shared.service.metrics().on_wire_start();
                 let job_shared = Arc::clone(shared);
                 let job_tx = tx.clone();
                 let job_inflight = Arc::clone(&inflight);
+                let slow_ms = cfg.slow_ms;
+                let queued = Instant::now();
                 work.submit(move || {
                     let t0 = Instant::now();
-                    // Re-check the budget: the job may have queued
-                    // behind other decodes in the work pool.
-                    let outcome = if deadline_expired(arrival, deadline) {
-                        job_shared.service.metrics().on_deadline_shed();
-                        Err(Error::busy(
-                            0,
-                            "deadline_ms exceeded before execution",
-                        ))
-                    } else {
-                        job_shared.service.decode(req).map(|resp| {
-                            (
-                                FrameKind::DecodeResponse,
-                                wire::decode_response_to_json(&resp),
-                            )
-                        })
-                    };
-                    let (kind, payload) = response_parts(&job_shared, outcome);
-                    job_shared
-                        .service
-                        .metrics()
-                        .on_wire_done("decode", t0.elapsed());
-                    let _ = job_tx.send((frame.id, kind, payload));
-                    job_inflight.release();
+                    let tl = job_shared.config.timeline.clone();
+                    span::with_span(ctx.trace_id, ctx.parent_span, || {
+                        span::annotate(tl.as_ref(), "queue", queued.elapsed());
+                        // Re-check the budget: the job may have queued
+                        // behind other decodes in the work pool.
+                        let outcome = if deadline_expired(arrival, deadline) {
+                            job_shared.service.metrics().on_deadline_shed();
+                            Err(Error::busy(
+                                0,
+                                "deadline_ms exceeded before execution",
+                            ))
+                        } else {
+                            let exec = StageSpan::begin(tl.as_ref(), "execute");
+                            let k0 = crate::linalg::kernels::kernel_stats();
+                            let out =
+                                exec.enter(|| job_shared.service.decode(req));
+                            exec.finish_with(
+                                is_slow(arrival, slow_ms),
+                                kernel_delta(&k0),
+                            );
+                            out.map(|resp| {
+                                (
+                                    FrameKind::DecodeResponse,
+                                    wire::decode_response_to_json(&resp),
+                                )
+                            })
+                        };
+                        let (kind, payload) =
+                            response_parts(&job_shared, outcome);
+                        job_shared
+                            .service
+                            .metrics()
+                            .on_wire_done("decode", t0.elapsed());
+                        let _ = job_tx.send((frame.id, kind, payload));
+                        job_inflight.release();
+                    });
                 });
             }
             FrameKind::StreamRequest => {
@@ -660,6 +714,11 @@ fn serve_connection(
                 let t0 = Instant::now();
                 shared.service.metrics().on_wire_start();
                 let deadline = wire::deadline_ms_from_json(&frame.payload);
+                let ctx = wire::trace_from_json(&frame.payload)
+                    .unwrap_or(wire::TraceContext {
+                        trace_id: 0,
+                        parent_span: 0,
+                    });
                 let (verb_name, outcome) = if deadline_expired(arrival, deadline)
                 {
                     shared.service.metrics().on_deadline_shed();
@@ -676,7 +735,20 @@ fn serve_connection(
                         &frame.payload,
                     ) {
                         Ok(req) => {
-                            (stream_verb_name(&req), shared.service.stream(req))
+                            let verb = stream_verb_name(&req);
+                            let exec = StageSpan::begin_under(
+                                cfg.timeline.as_ref(),
+                                ctx.trace_id,
+                                ctx.parent_span,
+                                "execute",
+                            );
+                            let out =
+                                exec.enter(|| shared.service.stream(req));
+                            exec.finish_with(
+                                is_slow(arrival, cfg.slow_ms),
+                                verb.to_string(),
+                            );
+                            (verb, out)
                         }
                         Err(e) => ("stream", Err(e)),
                     }
@@ -732,6 +804,40 @@ fn deadline_expired(arrival: Instant, deadline_ms: Option<u64>) -> bool {
         Some(ms) => arrival.elapsed() >= Duration::from_millis(ms),
         None => false,
     }
+}
+
+/// Whether a request's total residence has reached the slow-request
+/// capture threshold (`0` disables the flag).
+fn is_slow(arrival: Instant, slow_ms: u64) -> bool {
+    slow_ms > 0 && arrival.elapsed() >= Duration::from_millis(slow_ms)
+}
+
+/// Render the kernel-dispatch counters that advanced during an execute
+/// span as a compact `kernel_<k>=<delta>` list (empty when nothing
+/// moved). The counters are process-wide, so concurrent decodes may
+/// attribute each other's hits — the annotation is a profile hint, not
+/// an exact ledger.
+fn kernel_delta(before: &crate::linalg::kernels::KernelStatsSnapshot) -> String {
+    let after = crate::linalg::kernels::kernel_stats();
+    let mut out = String::new();
+    for (key, b, a) in [
+        ("spec_d2", before.spec_d2, after.spec_d2),
+        ("spec_d4", before.spec_d4, after.spec_d4),
+        ("spec_d8", before.spec_d8, after.spec_d8),
+        ("spec_d16", before.spec_d16, after.spec_d16),
+        ("generic", before.generic, after.generic),
+        ("batched_calls", before.batched_calls, after.batched_calls),
+        ("batched_lanes", before.batched_lanes, after.batched_lanes),
+    ] {
+        let delta = a.saturating_sub(b);
+        if delta > 0 {
+            if !out.is_empty() {
+                out.push(' ');
+            }
+            out.push_str(&format!("kernel_{key}={delta}"));
+        }
+    }
+    out
 }
 
 /// Map a verb outcome to response frame parts: success passes through;
@@ -1360,6 +1466,123 @@ mod tests {
         assert!(state.open_conns.is_empty());
         assert_eq!(timeline.dropped(), 0);
         drop(server);
+        drop(timeline);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The tracing tentpole, server half: a v4 client decode produces
+    /// `admission`/`queue`/`execute` spans on one trace (rooted at the
+    /// client's wire context), stream verbs produce verb-annotated
+    /// execute spans, and every span closes — replay sees no torn
+    /// traces.
+    #[test]
+    fn traced_requests_emit_stage_spans() {
+        let dir = tempdir("net-spans");
+        let timeline = crate::obs::Timeline::open(&dir).unwrap();
+        let coord = native_coord();
+        let server = NetServer::start(
+            Arc::clone(&coord),
+            "127.0.0.1:0",
+            NetServerConfig {
+                timeline: Some(Arc::clone(&timeline)),
+                ..test_config()
+            },
+        )
+        .unwrap();
+        let mut client =
+            NetClient::connect(server.local_addr().to_string()).unwrap();
+        client
+            .decode(&DecodeRequest::new(1, "ge", vec![0, 1, 1, 0], Algo::Smooth))
+            .unwrap();
+        let sid = client.open("ge", SessionOptions::default(), 0).unwrap();
+        client.append(sid, &[0, 1]).unwrap();
+        client.close(sid).unwrap();
+        drop(client);
+        server.shutdown(Duration::from_secs(5));
+        timeline.flush();
+
+        let records = crate::obs::read_events(&dir).unwrap();
+        let state = crate::obs::replay_records(&records, None);
+        assert!(state.spans_begun >= 6, "begun only {}", state.spans_begun);
+        assert_eq!(state.spans_begun, state.spans_closed);
+        assert!(state.open_spans.is_empty());
+        assert!(state.torn_traces().is_empty());
+
+        // The decode's three stages share one trace, rooted at the
+        // client's origination (parent 0), and none is flagged slow.
+        let mut decode_trace = 0;
+        let mut stages = Vec::new();
+        for r in &records {
+            if let TimelineEvent::SpanBegin { trace, parent, stage, .. } =
+                &r.event
+            {
+                if stage == "admission" {
+                    decode_trace = *trace;
+                    assert_eq!(*parent, 0, "client must originate the trace");
+                }
+                if *trace == decode_trace && decode_trace != 0 {
+                    stages.push(stage.clone());
+                }
+            }
+        }
+        assert_eq!(stages, ["admission", "queue", "execute"]);
+        let mut stream_verbs = Vec::new();
+        for r in &records {
+            if let TimelineEvent::SpanEnd { trace, stage, slow, detail, .. } =
+                &r.event
+            {
+                assert!(!slow, "slow_ms=0 must never flag a span");
+                if stage == "execute" && *trace != decode_trace {
+                    stream_verbs.push(detail.clone());
+                }
+            }
+        }
+        assert_eq!(stream_verbs, ["open", "append", "close"]);
+        drop(timeline);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `slow_ms`: a decode held past the threshold is flagged on its
+    /// execute span (the slow-request capture knob).
+    #[test]
+    fn slow_requests_are_flagged_on_the_execute_span() {
+        let dir = tempdir("net-slow");
+        let timeline = crate::obs::Timeline::open(&dir).unwrap();
+        let coord = native_coord();
+        let service = GatedService::new(Arc::clone(&coord));
+        let server = NetServer::start(
+            Arc::clone(&service),
+            "127.0.0.1:0",
+            NetServerConfig {
+                timeline: Some(Arc::clone(&timeline)),
+                slow_ms: 1,
+                ..test_config()
+            },
+        )
+        .unwrap();
+        let mut client =
+            NetClient::connect(server.local_addr().to_string()).unwrap();
+        client
+            .send_decode(&DecodeRequest::new(1, "ge", vec![0, 1], Algo::Smooth))
+            .unwrap();
+        client.flush().unwrap();
+        thread::sleep(Duration::from_millis(30));
+        service.release();
+        let (_, resp) = client.recv_decode().unwrap();
+        resp.unwrap();
+        drop(client);
+        server.shutdown(Duration::from_secs(5));
+        timeline.flush();
+
+        let records = crate::obs::read_events(&dir).unwrap();
+        let flagged = records.iter().any(|r| {
+            matches!(
+                &r.event,
+                TimelineEvent::SpanEnd { stage, slow: true, .. }
+                    if stage == "execute"
+            )
+        });
+        assert!(flagged, "a 30ms decode over a 1ms budget must flag slow");
         drop(timeline);
         std::fs::remove_dir_all(&dir).ok();
     }

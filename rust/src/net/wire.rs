@@ -7,7 +7,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic "HMWP"
-//! 4       1     protocol version (3; readers accept 1..=3)
+//! 4       1     protocol version (4; readers accept 1..=4)
 //! 5       1     frame kind (see [`FrameKind`])
 //! 6       2     reserved (zero)
 //! 8       8     request id, u64 little-endian (echoed in the response)
@@ -45,10 +45,12 @@ use crate::store::SessionMeta;
 /// Current wire-protocol revision; readers reject frames stamped with a
 /// newer version (and accept every older one — v2 added the
 /// [`FrameKind::Reject`] frame and the cluster-router stream verbs; v3
-/// adds the metrics scrape pair [`FrameKind::ScrapeRequest`] /
+/// added the metrics scrape pair [`FrameKind::ScrapeRequest`] /
 /// [`FrameKind::ScrapeResponse`] and the optional per-request
-/// `deadline_ms` payload field, without changing any older encoding).
-pub const WIRE_VERSION: u8 = 3;
+/// `deadline_ms` payload field; v4 adds the optional per-request
+/// `trace` payload field ([`TraceContext`]) — all additive, no older
+/// encoding changed).
+pub const WIRE_VERSION: u8 = 4;
 
 /// Frame magic: the first four bytes of every frame.
 pub const MAGIC: [u8; 4] = *b"HMWP";
@@ -899,6 +901,64 @@ pub fn with_deadline_ms(payload: Json, deadline_ms: u64) -> Json {
     }
 }
 
+// ===========================================================================
+// Payload serde — request tracing (v4)
+// ===========================================================================
+
+/// The wire-propagated trace context (v4): which end-to-end request a
+/// frame belongs to and which remote span caused it. `NetClient`
+/// originates ids; the cluster router forwards its own execute span as
+/// `parent_span` when it fans a request out to a worker, which is what
+/// stitches the three processes' timelines into one span tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceContext {
+    /// Trace id shared by every span of the request (fnv64, non-zero).
+    pub trace_id: u64,
+    /// Span id of the caller's active span (0 = this request is the
+    /// trace root).
+    pub parent_span: u64,
+}
+
+/// Read the optional `trace` payload field (v4 tracing). Ids are
+/// 16-hex-digit strings (a JSON number is an f64 — 53 integer bits —
+/// so numeric ids would silently corrupt). Absent or malformed means
+/// untraced; like `deadline_ms`, the field rides next to the request
+/// object's own keys, so v1..v3 readers simply ignore it.
+pub fn trace_from_json(v: &Json) -> Option<TraceContext> {
+    let t = v.get("trace");
+    let hex = |key: &str| {
+        t.get(key)
+            .as_str()
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+    };
+    let trace_id = hex("trace_id")?;
+    if trace_id == 0 {
+        return None;
+    }
+    Some(TraceContext { trace_id, parent_span: hex("parent_span")? })
+}
+
+/// Stamp a [`TraceContext`] onto a request payload (client side).
+/// Non-object payloads (ping) are returned unchanged.
+pub fn with_trace(payload: Json, ctx: TraceContext) -> Json {
+    match payload {
+        Json::Obj(mut obj) => {
+            let mut t = BTreeMap::new();
+            t.insert(
+                "trace_id".to_string(),
+                Json::Str(format!("{:016x}", ctx.trace_id)),
+            );
+            t.insert(
+                "parent_span".to_string(),
+                Json::Str(format!("{:016x}", ctx.parent_span)),
+            );
+            obj.insert("trace".to_string(), Json::Obj(t));
+            Json::Obj(obj)
+        }
+        other => other,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1405,6 +1465,50 @@ mod tests {
         let sreq = StreamRequest::stat(4, 77);
         let stamped = with_deadline_ms(stream_request_to_json(&sreq), 10);
         assert_eq!(deadline_ms_from_json(&stamped), Some(10));
+        let back = stream_request_from_json(4, &stamped).unwrap();
+        assert!(matches!(back.verb, StreamVerb::Stat { session: 77 }));
+    }
+
+    #[test]
+    fn trace_field_is_additive_and_optional() {
+        let req = DecodeRequest::new(3, "ge", vec![1, 0, 1], Algo::Smooth);
+        let bare = decode_request_to_json(&req);
+        assert_eq!(trace_from_json(&bare), None);
+        // Ids beyond f64's 53 integer bits survive the hex encoding.
+        let ctx = TraceContext {
+            trace_id: (1u64 << 53) + 7,
+            parent_span: u64::MAX,
+        };
+        let stamped = with_trace(bare.clone(), ctx);
+        assert_eq!(trace_from_json(&stamped), Some(ctx));
+        // The extra key is invisible to the request parser, and it
+        // composes with the v3 deadline field.
+        let both = with_deadline_ms(stamped, 250);
+        assert_eq!(trace_from_json(&both), Some(ctx));
+        assert_eq!(deadline_ms_from_json(&both), Some(250));
+        let back = decode_request_from_json(3, &both).unwrap();
+        assert_eq!(back.ys, req.ys);
+        // A root request carries parent_span 0; trace_id 0 means
+        // untraced even if a buggy writer encodes it.
+        let root = TraceContext { trace_id: 9, parent_span: 0 };
+        assert_eq!(
+            trace_from_json(&with_trace(bare.clone(), root)),
+            Some(root)
+        );
+        let zero = TraceContext { trace_id: 0, parent_span: 4 };
+        assert_eq!(trace_from_json(&with_trace(bare.clone(), zero)), None);
+        // Malformed ids (numbers, bad hex) read as untraced.
+        let bad = Json::parse(
+            r#"{"trace": {"trace_id": 12, "parent_span": "00"}}"#,
+        )
+        .unwrap();
+        assert_eq!(trace_from_json(&bad), None);
+        // Non-object payloads pass through untouched.
+        assert_eq!(with_trace(Json::Null, ctx), Json::Null);
+        // Stream requests carry it the same way.
+        let sreq = StreamRequest::stat(4, 77);
+        let stamped = with_trace(stream_request_to_json(&sreq), ctx);
+        assert_eq!(trace_from_json(&stamped), Some(ctx));
         let back = stream_request_from_json(4, &stamped).unwrap();
         assert!(matches!(back.verb, StreamVerb::Stat { session: 77 }));
     }

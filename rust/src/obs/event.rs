@@ -22,6 +22,10 @@ use crate::jsonx::Json;
 /// `migrate-cutover`, plus its own `close`/`reject`/`drain`). Replay
 /// folds any mix — a server and its fronting network layer share one
 /// timeline.
+///
+/// Every traced process additionally emits the request-tracing pair
+/// (`span-begin`, `span-end`); `obs::replay::merge_records` joins them
+/// across processes by trace id (`docs/OBSERVABILITY.md` §Tracing).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TimelineEvent {
     /// A session was opened (or imported) and is resident.
@@ -130,6 +134,39 @@ pub enum TimelineEvent {
         /// Destination worker address (the new home).
         to: String,
     },
+    /// A traced request stage started on this process.
+    ///
+    /// Trace/span ids are fnv64 values; they are encoded as 16-hex-digit
+    /// strings on the wire and in the timeline because the compact-JSON
+    /// number type is an f64 (53 bits of integer precision).
+    SpanBegin {
+        /// Trace id shared by every span of one end-to-end request.
+        trace: u64,
+        /// This span's id (unique within the trace).
+        span: u64,
+        /// Parent span id (0 for a trace root).
+        parent: u64,
+        /// Stage label (`admission`, `queue`, `execute`, `checkout`,
+        /// `store-append`, `sync-wait`, `migrate`).
+        stage: String,
+    },
+    /// A traced request stage finished.
+    SpanEnd {
+        /// Trace id shared by every span of one end-to-end request.
+        trace: u64,
+        /// The span id opened by the matching [`SpanBegin`](Self::SpanBegin).
+        span: u64,
+        /// Stage label (mirrors the begin record for self-contained reads).
+        stage: String,
+        /// Stage latency in microseconds.
+        us: u64,
+        /// Whether the owning request exceeded the `--slow-ms` threshold
+        /// (encoded only when true — additive-field rules).
+        slow: bool,
+        /// Optional stage annotation, e.g. kernel counter deltas for an
+        /// `execute` span (encoded only when non-empty).
+        detail: String,
+    },
 }
 
 impl TimelineEvent {
@@ -152,6 +189,8 @@ impl TimelineEvent {
             TimelineEvent::MigrateBegin { .. } => "migrate-begin",
             TimelineEvent::MigrateVerify { .. } => "migrate-verify",
             TimelineEvent::MigrateCutover { .. } => "migrate-cutover",
+            TimelineEvent::SpanBegin { .. } => "span-begin",
+            TimelineEvent::SpanEnd { .. } => "span-end",
         }
     }
 
@@ -162,6 +201,9 @@ impl TimelineEvent {
         obj.insert("ev".to_string(), Json::Str(self.kind().to_string()));
         let mut num = |obj: &mut BTreeMap<String, Json>, k: &str, v: u64| {
             obj.insert(k.to_string(), Json::Num(v as f64));
+        };
+        let hex = |obj: &mut BTreeMap<String, Json>, k: &str, v: u64| {
+            obj.insert(k.to_string(), Json::Str(format!("{v:016x}")));
         };
         match self {
             TimelineEvent::SessionOpen { session, model, len }
@@ -213,6 +255,27 @@ impl TimelineEvent {
                 obj.insert("from".to_string(), Json::Str(from.clone()));
                 obj.insert("to".to_string(), Json::Str(to.clone()));
             }
+            TimelineEvent::SpanBegin { trace, span, parent, stage } => {
+                hex(&mut obj, "tr", *trace);
+                hex(&mut obj, "sp", *span);
+                hex(&mut obj, "ps", *parent);
+                obj.insert("stage".to_string(), Json::Str(stage.clone()));
+            }
+            TimelineEvent::SpanEnd { trace, span, stage, us, slow, detail } => {
+                hex(&mut obj, "tr", *trace);
+                hex(&mut obj, "sp", *span);
+                obj.insert("stage".to_string(), Json::Str(stage.clone()));
+                num(&mut obj, "us", *us);
+                if *slow {
+                    obj.insert("slow".to_string(), Json::Bool(true));
+                }
+                if !detail.is_empty() {
+                    obj.insert(
+                        "detail".to_string(),
+                        Json::Str(detail.clone()),
+                    );
+                }
+            }
         }
         Json::Obj(obj)
     }
@@ -234,6 +297,14 @@ impl TimelineEvent {
             v.get(key)
                 .as_str()
                 .map(str::to_string)
+                .ok_or_else(|| {
+                    Error::invalid_request(format!("timeline record: '{key}'"))
+                })
+        };
+        let hex = |key: &str| -> Result<u64> {
+            v.get(key)
+                .as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
                 .ok_or_else(|| {
                     Error::invalid_request(format!("timeline record: '{key}'"))
                 })
@@ -287,6 +358,26 @@ impl TimelineEvent {
                 from: text("from")?,
                 to: text("to")?,
             },
+            "span-begin" => TimelineEvent::SpanBegin {
+                trace: hex("tr")?,
+                span: hex("sp")?,
+                parent: hex("ps")?,
+                stage: text("stage")?,
+            },
+            "span-end" => TimelineEvent::SpanEnd {
+                trace: hex("tr")?,
+                span: hex("sp")?,
+                stage: text("stage")?,
+                us: num("us")?,
+                // Optional fields (additive-field rules): absent means
+                // false / empty, so old writers' records still parse.
+                slow: v.get("slow").as_bool().unwrap_or(false),
+                detail: v
+                    .get("detail")
+                    .as_str()
+                    .unwrap_or("")
+                    .to_string(),
+            },
             other => {
                 return Err(Error::invalid_request(format!(
                     "timeline record: unknown event kind '{other}'"
@@ -334,6 +425,28 @@ mod tests {
                 from: "a:1".into(),
                 to: "b:2".into(),
             },
+            TimelineEvent::SpanBegin {
+                trace: u64::MAX,
+                span: 0xdead_beef_0042_0001,
+                parent: 0,
+                stage: "execute".into(),
+            },
+            TimelineEvent::SpanEnd {
+                trace: u64::MAX,
+                span: 0xdead_beef_0042_0001,
+                stage: "execute".into(),
+                us: 1234,
+                slow: true,
+                detail: "spec_d4=12".into(),
+            },
+            TimelineEvent::SpanEnd {
+                trace: 1,
+                span: 2,
+                stage: "queue".into(),
+                us: 0,
+                slow: false,
+                detail: String::new(),
+            },
         ]
     }
 
@@ -359,5 +472,43 @@ mod tests {
         assert!(TimelineEvent::from_json(&missing).is_err());
         let bad_type = Json::parse(r#"{"ev":"append","session":"x"}"#).unwrap();
         assert!(TimelineEvent::from_json(&bad_type).is_err());
+        // Span ids must be 16-hex strings, not JSON numbers.
+        let bad_id =
+            Json::parse(r#"{"ev":"span-begin","tr":7,"sp":"1","ps":"0","stage":"queue"}"#)
+                .unwrap();
+        assert!(TimelineEvent::from_json(&bad_id).is_err());
+    }
+
+    #[test]
+    fn span_ids_survive_full_u64_range_and_options_default() {
+        // f64 holds only 53 integer bits; the hex-string encoding must
+        // round-trip ids that a JSON number would silently corrupt.
+        let ev = TimelineEvent::SpanBegin {
+            trace: (1u64 << 53) + 1,
+            span: u64::MAX - 1,
+            parent: 3,
+            stage: "admission".into(),
+        };
+        let back =
+            TimelineEvent::from_json(&Json::parse(&ev.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back, ev);
+
+        // A span-end without `slow`/`detail` (old writer) parses with
+        // the defaults, and a fast/plain span never encodes them.
+        let plain = TimelineEvent::SpanEnd {
+            trace: 1,
+            span: 2,
+            stage: "queue".into(),
+            us: 55,
+            slow: false,
+            detail: String::new(),
+        };
+        let text = plain.to_json().to_string_compact();
+        assert!(!text.contains("slow") && !text.contains("detail"), "{text}");
+        assert_eq!(
+            TimelineEvent::from_json(&Json::parse(&text).unwrap()).unwrap(),
+            plain
+        );
     }
 }

@@ -243,10 +243,13 @@ pub fn read_events(dir: impl AsRef<Path>) -> Result<Vec<TimelineRecord>> {
 }
 
 /// What the writer thread receives: an event stamped with its emit-time
-/// coarse timestamp, or a flush barrier.
+/// coarse timestamp, or a flush barrier. Tests can additionally park
+/// the writer (`Stall`) to force the bounded channel to fill.
 enum TlMsg {
     Event(TimelineEvent, u64),
     Flush(mpsc::Sender<()>),
+    #[cfg(test)]
+    Stall(mpsc::Receiver<()>),
 }
 
 /// Handle to a live timeline: cheap, non-blocking [`record`] from any
@@ -397,6 +400,13 @@ impl Timeline {
                     let mut sort = |msg: TlMsg| match msg {
                         TlMsg::Event(ev, ts) => batch.push((ev, ts)),
                         TlMsg::Flush(done) => flushes.push(done),
+                        #[cfg(test)]
+                        TlMsg::Stall(hold) => {
+                            // Park until the test releases (or drops)
+                            // the sender — upstream records now pile
+                            // into the bounded channel.
+                            let _ = hold.recv();
+                        }
                     };
                     sort(first);
                     while let Ok(msg) = rx.try_recv() {
@@ -469,9 +479,37 @@ impl Timeline {
         self.dropped.load(Ordering::Relaxed)
     }
 
+    /// Segment files currently present in the timeline directory
+    /// (scrape gauge; one `read_dir` per call, never on the emit path).
+    pub fn segments(&self) -> u64 {
+        list_segments(&self.dir).map(|v| v.len() as u64).unwrap_or(0)
+    }
+
     /// The timeline directory this handle writes to.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Test hook: park the writer thread until the returned sender is
+    /// signalled or dropped, so records pile into the bounded channel
+    /// and the drop counter can be driven deterministically.
+    #[cfg(test)]
+    pub(crate) fn stall(&self) -> mpsc::Sender<()> {
+        let (hold_tx, hold_rx) = mpsc::channel();
+        let tx = self.tx.as_ref().expect("timeline channel live until drop");
+        let _ = tx.send(TlMsg::Stall(hold_rx));
+        hold_tx
+    }
+}
+
+// Manual: the writer handle and channel ends aren't printable state.
+impl std::fmt::Debug for Timeline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Timeline")
+            .field("dir", &self.dir)
+            .field("last_seq", &self.last_seq())
+            .field("dropped", &self.dropped())
+            .finish_non_exhaustive()
     }
 }
 
@@ -665,6 +703,27 @@ mod tests {
         std::fs::write(dir.join(segment_name(0)), &bad).unwrap();
         let records = read_events(&dir).unwrap();
         assert_eq!(records.len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stalled_writer_counts_drops_and_recovers() {
+        let dir = crate::store::testutil::tempdir("obs-stall");
+        let tl = Timeline::open(&dir).unwrap();
+        assert_eq!(tl.segments(), 0);
+        let release = tl.stall();
+        // With the writer parked, at most CHANNEL_DEPTH records queue;
+        // the rest must be dropped (counted), never blocking us here.
+        for _ in 0..(CHANNEL_DEPTH * 3) {
+            tl.record(TimelineEvent::ConnRefuse);
+        }
+        assert!(tl.dropped() > 0, "channel never filled");
+        drop(release);
+        tl.flush();
+        let written = read_events(&dir).unwrap().len();
+        assert_eq!(written as u64 + tl.dropped(), (CHANNEL_DEPTH * 3) as u64);
+        assert_eq!(tl.last_seq(), written as u64);
+        assert_eq!(tl.segments(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

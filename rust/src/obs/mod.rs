@@ -22,12 +22,21 @@
 //!   log mirroring `docs/STORE_FORMAT.md`) and the prefix-valid
 //!   [`read_events`] reader.
 //! * [`replay`] — the pure [`replay`](replay::replay) fold producing
-//!   [`ReplayState`].
+//!   [`ReplayState`], plus the cluster merge ([`merge_records`],
+//!   [`trace_views`]) that joins N process timelines into causally
+//!   ordered per-request span trees.
+//! * [`span`] — request tracing: ambient `(trace, span)` context and
+//!   the [`StageSpan`](span::StageSpan) guard emitting the
+//!   `span-begin`/`span-end` record pair.
 
 pub mod event;
 pub mod log;
 pub mod replay;
+pub mod span;
 
 pub use event::TimelineEvent;
 pub use log::{read_events, Timeline, TimelineRecord};
-pub use replay::{replay as replay_records, ReplayState, SessionView};
+pub use replay::{
+    merge_records, replay as replay_records, trace_views, MergedRecord,
+    ReplayState, SessionView, SpanView, TraceView,
+};

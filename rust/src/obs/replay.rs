@@ -51,6 +51,14 @@ pub struct ReplayState {
     pub migrations: u64,
     /// Sessions re-registered by crash recovery.
     pub recovered: u64,
+    /// Trace spans begun but not yet ended, keyed `(trace, span)` →
+    /// stage label. Non-empty at end of log means torn traces (crash,
+    /// SIGKILL, or a dropped `span-end` record).
+    pub open_spans: BTreeMap<(u64, u64), String>,
+    /// `span-begin` records folded in.
+    pub spans_begun: u64,
+    /// `span-end` records folded in.
+    pub spans_closed: u64,
     /// Records folded in.
     pub events: u64,
     /// Sequence number of the last folded record (0 if none).
@@ -66,6 +74,13 @@ impl ReplayState {
     /// Sessions currently resident in RAM.
     pub fn resident_sessions(&self) -> usize {
         self.sessions.values().filter(|s| s.resident).count()
+    }
+
+    /// Trace ids with at least one span still open — the replay-level
+    /// torn-trace invariant: every `span-begin` is eventually closed by
+    /// a `span-end`, or the trace is flagged here.
+    pub fn torn_traces(&self) -> BTreeSet<u64> {
+        self.open_spans.keys().map(|(trace, _)| *trace).collect()
     }
 
     fn session(&mut self, id: u64) -> &mut SessionView {
@@ -139,6 +154,14 @@ impl ReplayState {
                 self.placements.insert(*session, to.clone());
                 self.migrations += 1;
             }
+            TimelineEvent::SpanBegin { trace, span, stage, .. } => {
+                self.open_spans.insert((*trace, *span), stage.clone());
+                self.spans_begun += 1;
+            }
+            TimelineEvent::SpanEnd { trace, span, .. } => {
+                self.open_spans.remove(&(*trace, *span));
+                self.spans_closed += 1;
+            }
         }
     }
 }
@@ -159,6 +182,172 @@ pub fn replay(records: &[TimelineRecord], until: Option<u64>) -> ReplayState {
         state.last_seq = record.seq;
     }
     state
+}
+
+/// One record of a merged cluster timeline, tagged with the name of the
+/// timeline (process) it came from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MergedRecord {
+    /// Source timeline name (the merge tool uses the directory path).
+    pub source: String,
+    /// The record itself (its `seq` is per-source, not global).
+    pub record: TimelineRecord,
+}
+
+/// Fold N timelines' records into one causally-ordered view.
+///
+/// The order is a pure function of the record *multiset* — sorted by
+/// `(ts_ms, source, seq)` — so any shuffling or partitioning of the
+/// inputs (segments read in any grouping, sources listed in any order)
+/// yields the identical merged sequence. Within one source the sort key
+/// degenerates to `seq`, so per-process causal order is preserved
+/// exactly; across sources the coarse wall clock is the best available
+/// order (spans are additionally linked by ids, which do not depend on
+/// the merge order at all). Duplicate records (the same `(source,
+/// seq)` appearing in two input slices) collapse to one.
+pub fn merge_records(sources: &[(String, Vec<TimelineRecord>)]) -> Vec<MergedRecord> {
+    let mut out: Vec<MergedRecord> = Vec::new();
+    for (source, records) in sources {
+        out.extend(records.iter().map(|record| MergedRecord {
+            source: source.clone(),
+            record: record.clone(),
+        }));
+    }
+    out.sort_by(|a, b| {
+        (a.record.ts_ms, &a.source, a.record.seq).cmp(&(
+            b.record.ts_ms,
+            &b.source,
+            b.record.seq,
+        ))
+    });
+    out.dedup_by(|a, b| a.source == b.source && a.record.seq == b.record.seq);
+    out
+}
+
+/// One stage span as seen by the merge tool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanView {
+    /// Which timeline (process) emitted the span.
+    pub source: String,
+    /// Span id.
+    pub span: u64,
+    /// Parent span id (0 = trace root; the parent may live in another
+    /// process' timeline — that is the point).
+    pub parent: u64,
+    /// Stage label.
+    pub stage: String,
+    /// Stage latency in µs; `None` while unclosed (torn).
+    pub us: Option<u64>,
+    /// Slow-request flag from the `span-end` record.
+    pub slow: bool,
+    /// Stage annotation (e.g. kernel counter deltas).
+    pub detail: String,
+}
+
+/// All spans of one trace across every merged timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceView {
+    /// Trace id.
+    pub trace: u64,
+    /// Spans in merged order (begin order).
+    pub spans: Vec<SpanView>,
+    /// True when any span never closed (crash / dropped record).
+    pub torn: bool,
+    /// True when any span carries the slow-request flag.
+    pub slow: bool,
+}
+
+impl TraceView {
+    /// Indices of `spans` whose parent is `parent` (0 for roots),
+    /// preserving begin order — the tree-printer's child iterator.
+    pub fn children_of(&self, parent: u64) -> Vec<usize> {
+        self.spans
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.parent == parent && s.span != parent)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+/// Group a merged timeline's span records into per-trace views, ordered
+/// by each trace's first appearance. Deterministic for a deterministic
+/// input order (use [`merge_records`]).
+pub fn trace_views(merged: &[MergedRecord]) -> Vec<TraceView> {
+    let mut out: Vec<TraceView> = Vec::new();
+    let mut by_trace: BTreeMap<u64, usize> = BTreeMap::new();
+    for mr in merged {
+        match &mr.record.event {
+            TimelineEvent::SpanBegin { trace, span, parent, stage } => {
+                let idx = *by_trace.entry(*trace).or_insert_with(|| {
+                    out.push(TraceView {
+                        trace: *trace,
+                        spans: Vec::new(),
+                        torn: false,
+                        slow: false,
+                    });
+                    out.len() - 1
+                });
+                out[idx].spans.push(SpanView {
+                    source: mr.source.clone(),
+                    span: *span,
+                    parent: *parent,
+                    stage: stage.clone(),
+                    us: None,
+                    slow: false,
+                    detail: String::new(),
+                });
+            }
+            TimelineEvent::SpanEnd { trace, span, stage, us, slow, detail } => {
+                let idx = *by_trace.entry(*trace).or_insert_with(|| {
+                    out.push(TraceView {
+                        trace: *trace,
+                        spans: Vec::new(),
+                        torn: false,
+                        slow: false,
+                    });
+                    out.len() - 1
+                });
+                let view = &mut out[idx];
+                match view
+                    .spans
+                    .iter_mut()
+                    .find(|s| s.span == *span && s.us.is_none())
+                {
+                    Some(s) => {
+                        s.us = Some(*us);
+                        s.slow = *slow;
+                        s.detail = detail.clone();
+                    }
+                    None => {
+                        // End without a begin: the begin record was
+                        // dropped or its segment lost — keep the
+                        // latency but flag the trace torn.
+                        view.torn = true;
+                        view.spans.push(SpanView {
+                            source: mr.source.clone(),
+                            span: *span,
+                            parent: 0,
+                            stage: stage.clone(),
+                            us: Some(*us),
+                            slow: *slow,
+                            detail: detail.clone(),
+                        });
+                    }
+                }
+                if *slow {
+                    view.slow = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    for view in &mut out {
+        if view.spans.iter().any(|s| s.us.is_none()) {
+            view.torn = true;
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -272,6 +461,93 @@ mod tests {
         assert!(replay(&all, None).placements.is_empty());
     }
 
+    fn span_begin(trace: u64, span: u64, parent: u64, stage: &str) -> TimelineEvent {
+        TimelineEvent::SpanBegin {
+            trace,
+            span,
+            parent,
+            stage: stage.to_string(),
+        }
+    }
+
+    fn span_end(trace: u64, span: u64, stage: &str, us: u64) -> TimelineEvent {
+        TimelineEvent::SpanEnd {
+            trace,
+            span,
+            stage: stage.to_string(),
+            us,
+            slow: false,
+            detail: String::new(),
+        }
+    }
+
+    #[test]
+    fn spans_fold_and_torn_traces_surface() {
+        let records = vec![
+            rec(1, span_begin(7, 1, 0, "execute")),
+            rec(2, span_begin(7, 2, 1, "checkout")),
+            rec(3, span_end(7, 2, "checkout", 40)),
+            rec(4, span_begin(9, 5, 0, "execute")),
+            rec(5, span_end(7, 1, "execute", 90)),
+        ];
+        // Mid-log: both roots open.
+        let mid = replay(&records, Some(2));
+        assert_eq!(mid.spans_begun, 2);
+        assert_eq!(mid.spans_closed, 0);
+        assert_eq!(mid.open_spans[&(7, 1)], "execute");
+        assert_eq!(mid.torn_traces().into_iter().collect::<Vec<_>>(), vec![7]);
+        // Full log: trace 7 closed cleanly, trace 9 is torn.
+        let done = replay(&records, None);
+        assert_eq!((done.spans_begun, done.spans_closed), (4, 2));
+        assert_eq!(done.torn_traces().into_iter().collect::<Vec<_>>(), vec![9]);
+    }
+
+    #[test]
+    fn until_folds_correctly_across_a_migration_span() {
+        // A migration wrapped in its router-originated `migrate` span:
+        // time travel into the middle sees the span open and the route
+        // still on the source; past the end, everything is closed over.
+        let records = vec![
+            rec(1, TimelineEvent::Place { session: 5, worker: "a:1".into() }),
+            rec(2, span_begin(0xabc, 3, 0, "migrate")),
+            rec(
+                3,
+                TimelineEvent::MigrateBegin {
+                    session: 5,
+                    from: "a:1".into(),
+                    to: "b:2".into(),
+                },
+            ),
+            rec(
+                4,
+                TimelineEvent::MigrateVerify { session: 5, to: "b:2".into() },
+            ),
+            rec(
+                5,
+                TimelineEvent::MigrateCutover {
+                    session: 5,
+                    from: "a:1".into(),
+                    to: "b:2".into(),
+                },
+            ),
+            rec(6, span_end(0xabc, 3, "migrate", 1500)),
+        ];
+        for until in 2..=4 {
+            let mid = replay(&records, Some(until));
+            assert_eq!(mid.placements[&5], "a:1", "until {until}");
+            assert_eq!(mid.migrations, 0);
+            assert!(mid.torn_traces().contains(&0xabc));
+        }
+        let cutover = replay(&records, Some(5));
+        assert_eq!(cutover.placements[&5], "b:2");
+        assert_eq!(cutover.migrations, 1);
+        assert!(cutover.torn_traces().contains(&0xabc), "span still open");
+        let done = replay(&records, None);
+        assert_eq!(done.placements[&5], "b:2");
+        assert!(done.torn_traces().is_empty());
+        assert_eq!((done.spans_begun, done.spans_closed), (1, 1));
+    }
+
     #[test]
     fn recover_registers_evicted_sessions() {
         let records = vec![
@@ -290,5 +566,139 @@ mod tests {
         assert!(!state.sessions[&3].resident);
         let state = replay(&records, None);
         assert!(state.sessions[&3].resident);
+    }
+
+    fn trec(seq: u64, ts_ms: u64, event: TimelineEvent) -> TimelineRecord {
+        TimelineRecord { seq, ts_ms, event }
+    }
+
+    /// Three small process timelines with overlapping timestamps and a
+    /// cross-process trace (router span parents worker spans).
+    fn cluster_sources() -> Vec<(String, Vec<TimelineRecord>)> {
+        let router = vec![
+            trec(1, 100, TimelineEvent::ConnOpen { conn: 1 }),
+            trec(2, 100, span_begin(0x77, 0x10, 0, "execute")),
+            trec(3, 105, span_begin(0x77, 0x11, 0x10, "checkout")),
+            trec(4, 106, span_end(0x77, 0x11, "checkout", 900)),
+            trec(5, 140, span_end(0x77, 0x10, "execute", 40_000)),
+        ];
+        let worker_a = vec![
+            trec(1, 107, span_begin(0x77, 0x20, 0x10, "admission")),
+            trec(2, 107, span_end(0x77, 0x20, "admission", 30)),
+            trec(3, 108, span_begin(0x77, 0x21, 0x10, "execute")),
+            trec(4, 130, span_end(0x77, 0x21, "execute", 22_000)),
+        ];
+        let worker_b = vec![
+            trec(1, 100, TimelineEvent::SessionOpen {
+                session: 4,
+                model: "ge".into(),
+                len: 0,
+            }),
+            trec(2, 120, span_begin(0x99, 0x30, 0, "execute")),
+        ];
+        vec![
+            ("router".to_string(), router),
+            ("worker_a".to_string(), worker_a),
+            ("worker_b".to_string(), worker_b),
+        ]
+    }
+
+    #[test]
+    fn merge_is_deterministic_under_shuffling_and_partitioning() {
+        let sources = cluster_sources();
+        let canonical = merge_records(&sources);
+        // Sanity: per-source order is preserved in the merge.
+        for (name, records) in &sources {
+            let seqs: Vec<u64> = canonical
+                .iter()
+                .filter(|m| &m.source == name)
+                .map(|m| m.record.seq)
+                .collect();
+            assert_eq!(
+                seqs,
+                records.iter().map(|r| r.seq).collect::<Vec<_>>()
+            );
+        }
+        let mut runner = crate::proptestx::Runner::new("obs-merge-determinism");
+        runner.run(64, |rng| {
+            // Split every source into random contiguous partitions,
+            // then shuffle the full partition list — simulating
+            // segments read in arbitrary groupings and orders.
+            let mut parts: Vec<(String, Vec<TimelineRecord>)> = Vec::new();
+            for (name, records) in &sources {
+                let mut rest = records.clone();
+                while !rest.is_empty() {
+                    let take =
+                        (rng.next_u64() as usize % rest.len()) + 1;
+                    let tail = rest.split_off(take.min(rest.len()));
+                    parts.push((name.clone(), rest));
+                    rest = tail;
+                }
+            }
+            for i in (1..parts.len()).rev() {
+                let j = rng.next_u64() as usize % (i + 1);
+                parts.swap(i, j);
+            }
+            assert_eq!(merge_records(&parts), canonical);
+        });
+    }
+
+    #[test]
+    fn trace_views_link_spans_across_processes() {
+        let merged = merge_records(&cluster_sources());
+        let views = trace_views(&merged);
+        assert_eq!(views.len(), 2);
+
+        let t77 = &views[0];
+        assert_eq!(t77.trace, 0x77);
+        assert!(!t77.torn);
+        assert!(!t77.slow);
+        assert_eq!(t77.spans.len(), 4);
+        // The router's execute span is the root; its children include
+        // the checkout span (same process) and both worker spans
+        // (cross-process parent links).
+        let roots = t77.children_of(0);
+        assert_eq!(roots.len(), 1);
+        let root = &t77.spans[roots[0]];
+        assert_eq!((root.span, root.stage.as_str()), (0x10, "execute"));
+        assert_eq!(root.source, "router");
+        assert_eq!(root.us, Some(40_000));
+        let kids = t77.children_of(0x10);
+        let kid_sources: Vec<&str> =
+            kids.iter().map(|&i| t77.spans[i].source.as_str()).collect();
+        assert_eq!(kid_sources, vec!["router", "worker_a", "worker_a"]);
+
+        // Trace 0x99 never closed (worker_b was killed): torn.
+        let t99 = &views[1];
+        assert_eq!(t99.trace, 0x99);
+        assert!(t99.torn);
+        assert_eq!(t99.spans[0].us, None);
+    }
+
+    #[test]
+    fn trace_views_flag_slow_and_orphan_ends() {
+        let merged = vec![
+            MergedRecord {
+                source: "w".into(),
+                record: trec(
+                    1,
+                    10,
+                    TimelineEvent::SpanEnd {
+                        trace: 5,
+                        span: 9,
+                        stage: "execute".into(),
+                        us: 70,
+                        slow: true,
+                        detail: "spec_d4=2".into(),
+                    },
+                ),
+            },
+        ];
+        let views = trace_views(&merged);
+        assert_eq!(views.len(), 1);
+        assert!(views[0].torn, "end without begin is torn");
+        assert!(views[0].slow);
+        assert_eq!(views[0].spans[0].us, Some(70));
+        assert_eq!(views[0].spans[0].detail, "spec_d4=2");
     }
 }

@@ -1,0 +1,349 @@
+//! Request-scoped tracing spans: ambient trace context plus the
+//! [`StageSpan`] guard that times one stage and emits the
+//! `span-begin` / `span-end` [`TimelineEvent`] pair.
+//!
+//! ## Design
+//!
+//! Trace context travels two ways:
+//!
+//! * **Across processes** it rides the wire — `net::wire` carries an
+//!   additive `trace` field (`{trace_id, parent_span}`, protocol v4)
+//!   that `NetClient` stamps and `NetServer` reads.
+//! * **Within a process** it is *ambient*: a thread-local
+//!   `(trace_id, span_id)` pair set by [`with_span`] around the
+//!   request's execute path. Downstream layers (cluster router pool
+//!   checkout, store append, group-commit sync wait) read the ambient
+//!   context with [`current`] instead of threading ids through every
+//!   call signature — the `WireService` trait stays untouched.
+//!
+//! Ids are fnv64 values derived from a per-process seed plus a
+//! process-wide counter; id `0` is reserved as "no trace" / "no
+//! parent", so an untraced call path emits nothing. Emission goes
+//! through the same bounded non-blocking [`Timeline`] channel as every
+//! other event — a span can be dropped under load but can never block
+//! the hot path.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::obs::{Timeline, TimelineEvent};
+use crate::rng::{fnv1a_64, FNV1A_OFFSET};
+
+thread_local! {
+    /// Ambient `(trace_id, span_id)` for the request this thread is
+    /// currently executing; `(0, 0)` when untraced.
+    static CURRENT: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+}
+
+/// Process-wide counter mixed into every generated id.
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Lazily-derived per-process seed (pid + boot time) so two processes
+/// started in the same nanosecond still draw disjoint id streams.
+static PROCESS_SEED: AtomicU64 = AtomicU64::new(0);
+
+fn process_seed() -> u64 {
+    let seed = PROCESS_SEED.load(Ordering::Relaxed);
+    if seed != 0 {
+        return seed;
+    }
+    let pid = std::process::id() as u64;
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0x9e37_79b9_7f4a_7c15);
+    let mixed = fnv1a_64(FNV1A_OFFSET, &pid.to_le_bytes());
+    let seed = fnv1a_64(mixed, &nanos.to_le_bytes()).max(1);
+    // First writer wins; losers re-read so every thread agrees.
+    let _ = PROCESS_SEED.compare_exchange(
+        0,
+        seed,
+        Ordering::Relaxed,
+        Ordering::Relaxed,
+    );
+    PROCESS_SEED.load(Ordering::Relaxed)
+}
+
+/// A fresh non-zero trace/span id: fnv64 over (process seed, counter).
+pub fn fresh_id() -> u64 {
+    let n = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    fnv1a_64(process_seed(), &n.to_le_bytes()).max(1)
+}
+
+/// The ambient `(trace_id, span_id)`; `(0, 0)` when untraced.
+pub fn current() -> (u64, u64) {
+    CURRENT.with(|c| c.get())
+}
+
+/// Run `f` with `(trace, span)` as the ambient context, restoring the
+/// previous context afterwards (panic-safe via a drop guard).
+pub fn with_span<T>(trace: u64, span: u64, f: impl FnOnce() -> T) -> T {
+    struct Restore((u64, u64));
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            CURRENT.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(CURRENT.with(|c| c.replace((trace, span))));
+    f()
+}
+
+/// An open stage span: created by one of the `begin*` constructors,
+/// closed by [`finish`](StageSpan::finish) (which emits the `span-end`
+/// record and returns the elapsed microseconds).
+///
+/// Every constructor tolerates a missing timeline or an untraced
+/// context by producing an inert span — callers never branch.
+#[derive(Debug)]
+pub struct StageSpan {
+    timeline: Option<Arc<Timeline>>,
+    trace: u64,
+    id: u64,
+    stage: &'static str,
+    t0: Instant,
+}
+
+impl StageSpan {
+    /// Open a span under the ambient context (parent = ambient span).
+    /// Inert when there is no ambient trace or no timeline.
+    pub fn begin(timeline: Option<&Arc<Timeline>>, stage: &'static str) -> StageSpan {
+        let (trace, parent) = current();
+        StageSpan::begin_under(timeline, trace, parent, stage)
+    }
+
+    /// Open a span under an explicit `(trace, parent)` — the network
+    /// server uses this with the wire-propagated context before any
+    /// ambient context exists on the handler thread.
+    pub fn begin_under(
+        timeline: Option<&Arc<Timeline>>,
+        trace: u64,
+        parent: u64,
+        stage: &'static str,
+    ) -> StageSpan {
+        let timeline = match timeline {
+            Some(tl) if trace != 0 => Some(Arc::clone(tl)),
+            _ => None,
+        };
+        let id = if timeline.is_some() { fresh_id() } else { 0 };
+        if let Some(tl) = &timeline {
+            tl.record(TimelineEvent::SpanBegin {
+                trace,
+                span: id,
+                parent,
+                stage: stage.to_string(),
+            });
+        }
+        StageSpan { timeline, trace, id, stage, t0: Instant::now() }
+    }
+
+    /// Open a span under the ambient context if one exists, otherwise
+    /// originate a fresh trace rooted at this span — used by flows the
+    /// router starts itself (administrative drains, live migration).
+    pub fn begin_root(
+        timeline: Option<&Arc<Timeline>>,
+        stage: &'static str,
+    ) -> StageSpan {
+        let (trace, parent) = current();
+        let trace = if trace != 0 { trace } else { fresh_id() };
+        StageSpan::begin_under(timeline, trace, parent, stage)
+    }
+
+    /// This span's id (0 when inert).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The trace id this span belongs to (0 when inert).
+    pub fn trace(&self) -> u64 {
+        self.trace
+    }
+
+    /// Run `f` with this span as the ambient context, so nested
+    /// [`begin`](StageSpan::begin) calls become its children.
+    pub fn enter<T>(&self, f: impl FnOnce() -> T) -> T {
+        with_span(self.trace, self.id, f)
+    }
+
+    /// Close the span: emit `span-end` and return the elapsed µs.
+    pub fn finish(self) -> u64 {
+        self.finish_with(false, String::new())
+    }
+
+    /// Close the span with a slow-request flag and a detail annotation
+    /// (e.g. kernel counter deltas on an `execute` span).
+    pub fn finish_with(self, slow: bool, detail: String) -> u64 {
+        let us = self.t0.elapsed().as_micros() as u64;
+        if let Some(tl) = &self.timeline {
+            tl.record(TimelineEvent::SpanEnd {
+                trace: self.trace,
+                span: self.id,
+                stage: self.stage.to_string(),
+                us,
+                slow,
+                detail,
+            });
+        }
+        us
+    }
+}
+
+/// Emit a closed `span-begin`/`span-end` pair for a stage measured
+/// out-of-band (the group-commit sync wait is timed inside the store,
+/// which has no span to hold open). Parent is the ambient span; inert
+/// when untraced.
+pub fn annotate(
+    timeline: Option<&Arc<Timeline>>,
+    stage: &'static str,
+    elapsed: Duration,
+) {
+    let (trace, parent) = current();
+    let (Some(tl), true) = (timeline, trace != 0) else {
+        return;
+    };
+    let id = fresh_id();
+    tl.record(TimelineEvent::SpanBegin {
+        trace,
+        span: id,
+        parent,
+        stage: stage.to_string(),
+    });
+    tl.record(TimelineEvent::SpanEnd {
+        trace,
+        span: id,
+        stage: stage.to_string(),
+        us: elapsed.as_micros() as u64,
+        slow: false,
+        detail: String::new(),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::read_events;
+    use crate::store::testutil::tempdir;
+
+    #[test]
+    fn ids_are_unique_and_nonzero() {
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..10_000 {
+            let id = fresh_id();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "duplicate id {id:#x}");
+        }
+    }
+
+    #[test]
+    fn ambient_context_nests_and_restores() {
+        assert_eq!(current(), (0, 0));
+        with_span(7, 1, || {
+            assert_eq!(current(), (7, 1));
+            with_span(7, 2, || assert_eq!(current(), (7, 2)));
+            assert_eq!(current(), (7, 1));
+        });
+        assert_eq!(current(), (0, 0));
+    }
+
+    #[test]
+    fn ambient_context_restores_across_panics() {
+        let caught = std::panic::catch_unwind(|| {
+            with_span(9, 3, || panic!("boom"));
+        });
+        assert!(caught.is_err());
+        assert_eq!(current(), (0, 0));
+    }
+
+    #[test]
+    fn spans_emit_paired_records_with_parent_links() {
+        let dir = tempdir("span_pairs");
+        let tl = Arc::new(Timeline::open(&dir).unwrap());
+        let root = StageSpan::begin_under(Some(&tl), 42, 0, "execute");
+        let (child_id, root_id) = root.enter(|| {
+            let child = StageSpan::begin(Some(&tl), "checkout");
+            let id = child.id();
+            child.finish();
+            (id, current().1)
+        });
+        assert_eq!(root_id, root.id());
+        let root_id = root.id();
+        root.finish_with(true, "spec_d4=3".into());
+        tl.flush();
+
+        let records = read_events(&dir).unwrap();
+        let events: Vec<_> = records.into_iter().map(|r| r.event).collect();
+        assert_eq!(events.len(), 4);
+        match &events[0] {
+            TimelineEvent::SpanBegin { trace, span, parent, stage } => {
+                assert_eq!((*trace, *span, *parent), (42, root_id, 0));
+                assert_eq!(stage, "execute");
+            }
+            other => panic!("expected root span-begin, got {other:?}"),
+        }
+        match &events[1] {
+            TimelineEvent::SpanBegin { trace, span, parent, stage } => {
+                assert_eq!((*trace, *span, *parent), (42, child_id, root_id));
+                assert_eq!(stage, "checkout");
+            }
+            other => panic!("expected child span-begin, got {other:?}"),
+        }
+        match &events[3] {
+            TimelineEvent::SpanEnd { span, slow, detail, .. } => {
+                assert_eq!(*span, root_id);
+                assert!(*slow);
+                assert_eq!(detail, "spec_d4=3");
+            }
+            other => panic!("expected root span-end, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn untraced_and_timeline_less_spans_are_inert() {
+        let dir = tempdir("span_inert");
+        let tl = Arc::new(Timeline::open(&dir).unwrap());
+        // No ambient trace: nothing recorded even with a timeline.
+        assert_eq!(current(), (0, 0));
+        let s = StageSpan::begin(Some(&tl), "queue");
+        assert_eq!(s.id(), 0);
+        s.finish();
+        annotate(Some(&tl), "sync-wait", Duration::from_micros(5));
+        // Traced but no timeline: still inert, still safe.
+        with_span(5, 1, || {
+            let s = StageSpan::begin(None, "queue");
+            assert_eq!(s.id(), 0);
+            s.finish();
+        });
+        tl.flush();
+        assert_eq!(read_events(&dir).unwrap().len(), 0);
+        assert_eq!(tl.last_seq(), 0);
+    }
+
+    #[test]
+    fn annotate_emits_a_closed_pair_under_the_ambient_span() {
+        let dir = tempdir("span_annotate");
+        let tl = Arc::new(Timeline::open(&dir).unwrap());
+        with_span(11, 99, || {
+            annotate(Some(&tl), "sync-wait", Duration::from_micros(250));
+        });
+        tl.flush();
+        let events: Vec<_> = read_events(&dir)
+            .unwrap()
+            .into_iter()
+            .map(|r| r.event)
+            .collect();
+        assert_eq!(events.len(), 2);
+        let TimelineEvent::SpanBegin { trace, span, parent, stage } = &events[0]
+        else {
+            panic!("expected span-begin, got {:?}", events[0]);
+        };
+        assert_eq!((*trace, *parent), (11, 99));
+        assert_eq!(stage, "sync-wait");
+        let TimelineEvent::SpanEnd { span: end_span, us, .. } = &events[1]
+        else {
+            panic!("expected span-end, got {:?}", events[1]);
+        };
+        assert_eq!(end_span, span);
+        assert_eq!(*us, 250);
+    }
+}

@@ -96,7 +96,7 @@ use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::jsonx::Json;
@@ -352,6 +352,11 @@ pub struct DiskStore {
     /// Per-sync-batch hook `(files synced, records acked)` — the
     /// coordinator wires its metrics in here.
     sync_observer: Option<Box<dyn Fn(usize, usize) + Send + Sync>>,
+    /// Per-append hook with the time the appender spent blocked on its
+    /// covering fsync (inline or group-commit rendezvous). Invoked on
+    /// the appending thread, so the coordinator's tracing hook can
+    /// attribute the wait to the ambient request span.
+    wait_observer: Option<Box<dyn Fn(Duration) + Send + Sync>>,
 }
 
 impl DiskStore {
@@ -414,6 +419,7 @@ impl DiskStore {
             bytes_read: AtomicU64::new(0),
             log_versions: Mutex::new(BTreeMap::new()),
             sync_observer: None,
+            wait_observer: None,
         })
     }
 
@@ -433,6 +439,18 @@ impl DiskStore {
         observer: impl Fn(usize, usize) + Send + Sync + 'static,
     ) {
         self.sync_observer = Some(Box::new(observer));
+    }
+
+    /// Install a per-append sync-wait observer; call before sharing the
+    /// store. It receives, on the appending thread, the time each
+    /// [`log_append`](SessionStore::log_append) spent blocked on the
+    /// fsync covering its record — the coordinator uses this to
+    /// attribute group-commit waits to request trace spans.
+    pub fn set_wait_observer(
+        &mut self,
+        observer: impl Fn(Duration) + Send + Sync + 'static,
+    ) {
+        self.wait_observer = Some(Box::new(observer));
     }
 
     /// The store's root directory.
@@ -506,6 +524,14 @@ impl DiskStore {
         self.synced_appends.fetch_add(records as u64, Ordering::Relaxed);
         if let Some(observer) = &self.sync_observer {
             observer(files, records);
+        }
+    }
+
+    /// Report one append's sync wait to the wait observer (no-op
+    /// without one).
+    fn note_wait(&self, elapsed: Duration) {
+        if let Some(observer) = &self.wait_observer {
+            observer(elapsed);
         }
     }
 
@@ -611,10 +637,12 @@ impl DiskStore {
         if self.window.is_zero() {
             // Inline fsync: the pre-group-commit behavior, still under
             // the id lock.
+            let t0 = Instant::now();
             if let Err(e) = file.sync_all() {
                 let _ = file.set_len(len_before);
                 return Err(Error::Io(e));
             }
+            self.note_wait(t0.elapsed());
             self.note_sync(1, 1);
             self.appends_logged.fetch_add(1, Ordering::Relaxed);
             return Ok(());
@@ -623,6 +651,7 @@ impl DiskStore {
         // the deadline window would serialize 1/LOCK_SHARDS of the
         // fleet behind one sleeping appender.
         drop(guard);
+        let t0 = Instant::now();
         if let Err(e) = self.group_sync(id, Arc::clone(&file)) {
             // Best-effort rollback, only while our frame is still the
             // log tail (a concurrent same-id writer may have appended
@@ -635,6 +664,7 @@ impl DiskStore {
             }
             return Err(e);
         }
+        self.note_wait(t0.elapsed());
         self.appends_logged.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
